@@ -1,0 +1,20 @@
+//! Reproduce the paper's Table-3 ablation from the library API (the same
+//! driver is available as `dymoe experiment table3`).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example ablation_study
+//! ```
+
+use dymoe::experiments::{self, ExpOptions};
+
+fn main() -> anyhow::Result<()> {
+    let opts = ExpOptions {
+        requests: 5,
+        models: vec!["mixtral-mini".into()],
+        ..Default::default()
+    };
+    let text = experiments::run("table3", &opts)?;
+    println!("{text}");
+    println!("(also saved under results/table3.txt / results/table3.json)");
+    Ok(())
+}

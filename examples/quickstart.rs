@@ -1,0 +1,63 @@
+//! Quickstart: load a model's AOT artifacts, serve one request with the
+//! DyMoE policy on a simulated 16 GB edge device, print the result.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use dymoe::config::{LowMode, PolicyConfig, SystemConfig};
+use dymoe::coordinator::engine::Engine;
+use dymoe::coordinator::strategy::DyMoEStrategy;
+use dymoe::model::assets::ModelAssets;
+use dymoe::workload::tokens;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the build-time artifacts (HLO text + quantized weight store).
+    let assets = Arc::new(ModelAssets::load("artifacts", "mixtral-mini")?);
+    println!(
+        "loaded {} ({} layers x {} experts, top-{})",
+        assets.manifest.model.name,
+        assets.manifest.model.n_layers,
+        assets.manifest.model.n_experts,
+        assets.manifest.model.top_k,
+    );
+
+    // 2. A simulated 16 GB edge device (paper-scale cost model).
+    let sys = SystemConfig::edge_preset("mixtral-mini", 16)?;
+
+    // 3. The DyMoE policy: importance-aware 4/0 dynamic quantization with
+    //    depth-aware scheduling and look-ahead prefetching.
+    let policy = PolicyConfig {
+        retention: 0.75,
+        low_mode: LowMode::Skip,
+        ..Default::default()
+    };
+    let mut engine = Engine::new(&assets, sys, Box::new(DyMoEStrategy::new(policy)))?;
+
+    // 4. Serve one request: a periodic pattern the model was trained on.
+    let mut prompt = vec![tokens::BOS, tokens::TAG_REPEAT];
+    for i in 0..24 {
+        prompt.push(tokens::LETTER0 + (i % 3));
+    }
+    let out = engine.run(&prompt, 8)?;
+
+    println!("prompt tokens : {:?}", &prompt);
+    println!("output tokens : {:?}", out.tokens);
+    println!("TTFT          : {:.4} s (virtual, paper-scale)", out.ttft);
+    println!("TPOT          : {:.4} s", out.tpot());
+    println!(
+        "cache         : {:.1}% hit rate, {} promotions, {} conservative reuses",
+        engine.cache.stats.hit_rate() * 100.0,
+        engine.cache.stats.promotions,
+        engine.cache.stats.conservative_reuses,
+    );
+    println!(
+        "prefetch      : {} issued / {} useful; skipped experts: {}",
+        engine.prefetch_stats.issued,
+        engine.prefetch_stats.useful,
+        engine.stats.skipped_experts,
+    );
+    Ok(())
+}

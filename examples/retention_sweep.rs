@@ -1,0 +1,86 @@
+//! The paper's "tunable knob" story (§6.3): sweep the retention ratio r
+//! and report the latency/accuracy trade-off — users trade a marginal
+//! amount of accuracy for significant latency reduction at peak load.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example retention_sweep -- [model]
+//! ```
+
+use std::sync::Arc;
+
+use dymoe::config::{LowMode, PolicyConfig, SystemConfig, GB};
+use dymoe::coordinator::engine::{Engine, EngineOptions};
+use dymoe::coordinator::strategy::DyMoEStrategy;
+use dymoe::eval::{evaluate_suite, mean_token_acc};
+use dymoe::model::assets::ModelAssets;
+use dymoe::model::executor::Executor;
+use dymoe::util::table::Table;
+use dymoe::workload::{load_suites, TraceGen};
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "mixtral-mini".into());
+    let assets = Arc::new(ModelAssets::load("artifacts", &model)?);
+    let exec = std::rc::Rc::new(Executor::new(assets.clone())?);
+    let suites = load_suites("artifacts")?;
+    let items = 12;
+    let requests = 4;
+
+    let mut t = Table::new(
+        &format!("retention sweep on {model} (DyMoE 4/0 @ 16 GB)"),
+        &["r", "mean token-acc", "TTFT (s)", "TPOT (s)"],
+    );
+    for r in [0.5, 0.625, 0.75, 0.875, 1.0] {
+        let policy = PolicyConfig {
+            retention: r,
+            low_mode: LowMode::Skip,
+            ..Default::default()
+        };
+        // accuracy at ample VRAM
+        let mut sys_acc = SystemConfig::edge_preset(&model, 24)?;
+        sys_acc.hardware.vram_bytes = 4096 * GB;
+        let mut acc_engine = Engine::with_executor(
+            &assets,
+            sys_acc,
+            Box::new(DyMoEStrategy::new(policy.clone())),
+            EngineOptions {
+                collect_logits: true,
+                strict_precision: true,
+                ..Default::default()
+            },
+            exec.clone(),
+        )?;
+        let mut scores = Vec::new();
+        for suite in &suites {
+            let (s, _) = evaluate_suite(&mut acc_engine, suite, items, None)?;
+            scores.push(s);
+        }
+        let acc = mean_token_acc(&scores);
+
+        // latency at the edge preset
+        let sys = SystemConfig::edge_preset(&model, 16)?;
+        let mut lat_engine = Engine::with_executor(
+            &assets,
+            sys,
+            Box::new(DyMoEStrategy::new(policy)),
+            EngineOptions::default(),
+            exec.clone(),
+        )?;
+        let m = lat_engine.model().clone();
+        let mut gen = TraceGen::new(9, m.max_seq.min(80), 12);
+        let (mut ttft, mut tpot) = (0.0, 0.0);
+        for _ in 0..requests {
+            let req = gen.next_request();
+            let o = lat_engine.run(&req.prompt, req.max_new)?;
+            ttft += o.ttft / requests as f64;
+            tpot += o.tpot() / requests as f64;
+        }
+        t.row(vec![
+            format!("{r:.3}"),
+            format!("{acc:.4}"),
+            format!("{ttft:.4}"),
+            format!("{tpot:.4}"),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

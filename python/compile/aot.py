@@ -1,0 +1,209 @@
+"""AOT export: lower every serving piece to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compiler_ir(...).serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per model this writes into ``artifacts/<model>/``:
+
+* ``<artifact>.hlo.txt``  — one module per (function, shape-bucket, precision)
+* ``weights.bin``         — flat weight store (see quant.py)
+* ``params.npz``          — trained f32 params (cache for re-exports)
+* ``manifest.json``       — config + artifact I/O specs + weight sections
+
+plus the shared ``artifacts/eval/suites.json`` eval benchmark and a
+``artifacts/.stamp`` sentinel for the Makefile.
+
+Usage: ``python -m compile.aot [--models mixtral-mini,qwen-mini,tiny]
+[--out-dir ../artifacts] [--retrain]``
+"""
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np  # noqa: F401
+from jax._src.lib import xla_client as xc
+
+from . import corpus, model, quant, train
+from .configs import CONFIGS, EXPERT_BUCKETS, QUANT_BITS, ModelConfig
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+_DT = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32",
+       jnp.uint32.dtype: "u32"}
+
+
+def _spec(name, shape, dtype=jnp.float32):
+    return (name, jax.ShapeDtypeStruct(tuple(shape), dtype))
+
+
+def artifact_defs(cfg: ModelConfig) -> dict:
+    """name -> (fn, [(arg_name, ShapeDtypeStruct), ...])"""
+    d, f, M = cfg.d_model, cfg.d_ffn, cfg.n_experts
+    H, hd = cfg.n_heads, cfg.head_dim
+    V, S, C, G = cfg.vocab, cfg.max_seq, cfg.max_cache, cfg.group_size
+
+    defs = {}
+    for t in (S, 1):
+        defs[f"embed_t{t}"] = (
+            model.embed,
+            [_spec("tokens", [t], jnp.int32), _spec("emb", [V, d])])
+        defs[f"gate_probe_t{t}"] = (
+            functools.partial(model.gate_probe, cfg=cfg),
+            [_spec("h", [t, d]), _spec("ln2", [d]), _spec("wg", [d, M])])
+        defs[f"finalize_t{t}"] = (
+            functools.partial(model.finalize, cfg=cfg),
+            [_spec("h", [t, d]), _spec("ln_f", [d]), _spec("emb", [V, d])])
+
+    attn_w = [_spec("ln1", [d]), _spec("wq", [d, d]), _spec("wk", [d, d]),
+              _spec("wv", [d, d]), _spec("wo", [d, d]), _spec("ln2", [d]),
+              _spec("wg", [d, M])]
+    defs["attn_prefill"] = (
+        functools.partial(model.attn_prefill, cfg=cfg),
+        [_spec("h", [S, d]), _spec("seq_len", [1], jnp.int32)] + attn_w)
+    defs["attn_decode"] = (
+        functools.partial(model.attn_decode, cfg=cfg),
+        [_spec("h", [1, d]), _spec("k_cache", [C, H, hd]),
+         _spec("v_cache", [C, H, hd]), _spec("pos", [1], jnp.int32)] + attn_w)
+    # Fused attention + next-layer gate probe (one exec instead of two).
+    probe_w = [_spec("ln2n", [d]), _spec("wgn", [d, M])]
+    defs["attn_prefill_probe"] = (
+        functools.partial(model.attn_prefill_probe, cfg=cfg),
+        [_spec("h", [S, d]), _spec("seq_len", [1], jnp.int32)]
+        + attn_w + probe_w)
+    defs["attn_decode_probe"] = (
+        functools.partial(model.attn_decode_probe, cfg=cfg),
+        [_spec("h", [1, d]), _spec("k_cache", [C, H, hd]),
+         _spec("v_cache", [C, H, hd]), _spec("pos", [1], jnp.int32)]
+        + attn_w + probe_w)
+
+    for t in EXPERT_BUCKETS:
+        if t > S:
+            continue
+        defs[f"expert_bf16_t{t}"] = (
+            model.expert_ffn_dense,
+            [_spec("x", [t, d]), _spec("w1", [d, f]), _spec("w3", [d, f]),
+             _spec("w2", [f, d])])
+        for prec, bits in QUANT_BITS.items():
+            vpw = 32 // bits
+            defs[f"expert_{prec}_t{t}"] = (
+                functools.partial(model.expert_ffn_quant, bits=bits,
+                                  group_size=G),
+                [_spec("x", [t, d]),
+                 _spec("w1q", [d // vpw, f], jnp.uint32),
+                 _spec("w1s", [d // G, f]),
+                 _spec("w3q", [d // vpw, f], jnp.uint32),
+                 _spec("w3s", [d // G, f]),
+                 _spec("w2q", [f // vpw, d], jnp.uint32),
+                 _spec("w2s", [f // G, d])])
+    return defs
+
+
+def lower_artifact(fn, specs):
+    lowered = jax.jit(fn).lower(*[s for _, s in specs])
+    text = to_hlo_text(lowered)
+    out_specs = jax.eval_shape(fn, *[s for _, s in specs])
+    if not isinstance(out_specs, (tuple, list)):
+        out_specs = (out_specs,)
+    return text, out_specs
+
+
+def export_model(cfg: ModelConfig, out_dir: str, retrain: bool,
+                 verbose: bool = True) -> None:
+    mdir = os.path.join(out_dir, cfg.name)
+    os.makedirs(mdir, exist_ok=True)
+
+    params_path = os.path.join(mdir, "params.npz")
+    if os.path.exists(params_path) and not retrain:
+        params = train.load_params(params_path, cfg)
+        if verbose:
+            print(f"[aot] {cfg.name}: loaded cached params", flush=True)
+    else:
+        params, history = train.train(cfg, verbose=verbose)
+        train.save_params(params_path, params)
+        with open(os.path.join(mdir, "train_loss.json"), "w") as fh:
+            json.dump(history, fh)
+
+    writer = quant.build_weight_store(cfg, params)
+    writer.write(os.path.join(mdir, "weights.bin"))
+
+    manifest = {
+        "model": cfg.to_dict(),
+        "expert_buckets": [t for t in EXPERT_BUCKETS if t <= cfg.max_seq],
+        "weights_file": "weights.bin",
+        "expert_bytes": quant.expert_logical_bytes(cfg),
+        "sections": writer.sections,
+        "artifacts": {},
+    }
+    t0 = time.time()
+    for name, (fn, specs) in artifact_defs(cfg).items():
+        text, out_specs = lower_artifact(fn, specs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(mdir, fname), "w") as fh:
+            fh.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": [{"name": n, "dtype": _DT[s.dtype], "shape": list(s.shape)}
+                       for n, s in specs],
+            "outputs": [{"dtype": _DT[s.dtype], "shape": list(s.shape)}
+                        for s in out_specs],
+        }
+    with open(os.path.join(mdir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+
+    # Golden end-to-end numerics: a fixed prompt's full-forward logits at
+    # the last position, checked by the Rust integration tests against the
+    # engine's BF16 serving path.
+    rng = np.random.default_rng(123)
+    prompt = [1] + list(rng.integers(2, cfg.vocab, size=min(11, cfg.max_seq - 1)))
+    logits = model.forward_full(
+        params, jnp.asarray(prompt, jnp.int32), cfg)
+    golden = {
+        "prompt": [int(t) for t in prompt],
+        "last_logits": [float(x) for x in np.asarray(logits)[-1]],
+    }
+    with open(os.path.join(mdir, "golden.json"), "w") as fh:
+        json.dump(golden, fh)
+    if verbose:
+        n = len(manifest["artifacts"])
+        print(f"[aot] {cfg.name}: {n} artifacts lowered in "
+              f"{time.time()-t0:.1f}s", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", default="mixtral-mini,qwen-mini,tiny")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--retrain", action="store_true")
+    ap.add_argument("--out", default=None, help="stamp file (Makefile)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name in args.models.split(","):
+        export_model(CONFIGS[name.strip()], args.out_dir, args.retrain)
+
+    eval_dir = os.path.join(args.out_dir, "eval")
+    os.makedirs(eval_dir, exist_ok=True)
+    suites = corpus.build_suites(seed=7, n_items=60, max_prompt=80)
+    corpus.dump_suites(os.path.join(eval_dir, "suites.json"), suites)
+
+    stamp = args.out or os.path.join(args.out_dir, ".stamp")
+    with open(stamp, "w") as fh:
+        fh.write(f"built {time.time()}\n")
+    print(f"[aot] done -> {args.out_dir}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Model hyper-parameter presets for the DyMoE reproduction.
+
+Two mini-MoE transformers mirror the paper's two evaluation models in
+*architecture shape* (see DESIGN.md §2):
+
+* ``mixtral-mini`` — coarse-grained / low-sparsity (few big experts, top-2),
+  standing in for Mixtral-8x7B.
+* ``qwen-mini``    — fine-grained / high-sparsity (many small experts,
+  top-4 of 32 => 12.5% activation), standing in for Qwen3-30B-A3B.
+
+``tiny`` is a fast config used only by the test-suite.
+
+All dimensions are chosen so that every weight matrix is divisible by the
+quantization group size (32) and by the densest packing factor (16 values
+per u32 word at 2 bits).
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ffn: int          # per-expert hidden width
+    n_experts: int
+    top_k: int
+    vocab: int
+    max_seq: int        # prefill bucket / maximum prompt length
+    max_cache: int      # decode KV-cache capacity
+    group_size: int = 32  # quantization group size along the input dim
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def expert_params(self) -> int:
+        """Parameters in one expert (w1, w3: d->ffn and w2: ffn->d)."""
+        return 3 * self.d_model * self.d_ffn
+
+    def validate(self) -> None:
+        assert self.d_model % self.n_heads == 0
+        for dim in (self.d_model, self.d_ffn):
+            assert dim % self.group_size == 0, (self.name, dim)
+            assert dim % 16 == 0, "must be divisible by the 2-bit pack factor"
+        assert self.top_k <= self.n_experts
+        assert self.max_cache >= self.max_seq
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["head_dim"] = self.head_dim
+        return d
+
+
+MIXTRAL_MINI = ModelConfig(
+    name="mixtral-mini",
+    n_layers=8,
+    d_model=256,
+    n_heads=8,
+    d_ffn=512,
+    n_experts=8,
+    top_k=2,
+    vocab=64,
+    max_seq=96,
+    max_cache=160,
+)
+
+QWEN_MINI = ModelConfig(
+    name="qwen-mini",
+    n_layers=10,
+    d_model=192,
+    n_heads=6,
+    d_ffn=96,
+    n_experts=32,
+    top_k=4,
+    vocab=64,
+    max_seq=96,
+    max_cache=160,
+)
+
+TINY = ModelConfig(
+    name="tiny",
+    n_layers=2,
+    d_model=32,
+    n_heads=2,
+    d_ffn=64,
+    n_experts=4,
+    top_k=2,
+    vocab=64,
+    max_seq=16,
+    max_cache=32,
+)
+
+CONFIGS = {c.name: c for c in (MIXTRAL_MINI, QWEN_MINI, TINY)}
+
+# Token-count buckets for the per-expert FFN artifacts.  L3 pads each
+# expert's token batch up to the smallest bucket that fits.
+EXPERT_BUCKETS = (1, 4, 16, 96)
+
+# Precisions exported as separate artifacts / weight blobs.
+PRECISIONS = ("bf16", "int8", "int4", "int2")
+QUANT_BITS = {"int8": 8, "int4": 4, "int2": 2}
+
+for _c in CONFIGS.values():
+    _c.validate()

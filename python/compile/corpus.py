@@ -1,0 +1,209 @@
+"""Synthetic structured corpus: a mixture of pattern languages.
+
+Stands in for the paper's natural-language corpora (DESIGN.md §2).  Each
+sequence starts with a *domain tag* token and is drawn from one of several
+pattern languages; this drives (a) real expert specialisation during the
+build-time training run (so gate distributions are skewed, §3.1 of the
+paper), and (b) heavy-hitter token structure (tags / delimiters attract
+attention mass).
+
+Token space (vocab = 64)::
+
+    0          PAD
+    1          BOS
+    2..9       domain tags (one per domain, some reserved)
+    10         delimiter '|'
+    11..20     digits 0-9
+    21..26     brackets ( ) [ ] { }
+    27..63     letter pool
+
+Deterministic *eval suites* with known answers stand in for the paper's
+MMLU / CMMLU / GSM8K benchmarks:
+
+* ``suite_copy``  (MMLU stand-in)  — repeat a segment after '|';
+* ``suite_arith`` (GSM8K stand-in) — continue a (+step mod 10) digit chain;
+* ``suite_sort``  (CMMLU stand-in) — emit the sorted version of a segment.
+
+Greedy exact-match on the answer tokens is the "accuracy" metric.
+"""
+
+import json
+from dataclasses import dataclass
+
+import numpy as np
+
+PAD, BOS, DELIM = 0, 1, 10
+TAG_COPY, TAG_ARITH, TAG_SORT, TAG_REPEAT, TAG_MARKOV_A, TAG_MARKOV_B, \
+    TAG_SUCC = 2, 3, 4, 5, 6, 7, 8
+DIGIT0 = 11          # digits are tokens 11..20
+LETTER0, LETTER1 = 27, 63
+# Smaller ring for the repeat/succ tasks keeps them in the learnable band
+# for a build-time training budget of a few hundred steps.
+RING0, RING_N = 27, 16
+VOCAB = 64
+
+DOMAINS = ("copy", "arith", "sort", "repeat", "succ", "markov_a", "markov_b")
+
+
+def _letters(rng: np.random.Generator, n: int) -> np.ndarray:
+    return rng.integers(LETTER0, LETTER1 + 1, size=n)
+
+
+def _seq_copy(rng, total: int) -> np.ndarray:
+    seg = _letters(rng, max(2, total // 2 - 1))
+    body = np.concatenate([[TAG_COPY], seg, [DELIM], seg])
+    return body[:total]
+
+
+def _seq_arith(rng, total: int) -> np.ndarray:
+    start = int(rng.integers(0, 10))
+    step = int(rng.integers(1, 4))
+    digits = [(start + i * step) % 10 + DIGIT0 for i in range(total - 1)]
+    return np.asarray([TAG_ARITH] + digits)[:total]
+
+
+def _seq_sort(rng, total: int) -> np.ndarray:
+    seg = _letters(rng, max(2, total // 2 - 1))
+    body = np.concatenate([[TAG_SORT], seg, [DELIM], np.sort(seg)])
+    return body[:total]
+
+
+def _seq_repeat(rng, total: int) -> np.ndarray:
+    """A short motif repeated: 'abcabcabc...'."""
+    period = int(rng.integers(1, 5))
+    motif = rng.integers(RING0, RING0 + RING_N, size=period)
+    body = [TAG_REPEAT] + [int(motif[i % period]) for i in range(total - 1)]
+    return np.asarray(body)[:total]
+
+
+def _seq_succ(rng, total: int) -> np.ndarray:
+    """Letter-successor chain over a 16-symbol ring (like arith, letters)."""
+    start = int(rng.integers(0, RING_N))
+    step = int(rng.integers(1, 4))
+    body = [TAG_SUCC] + [RING0 + (start + i * step) % RING_N
+                         for i in range(total - 1)]
+    return np.asarray(body)[:total]
+
+
+_MARKOV_CACHE: dict = {}
+
+
+def _markov_matrix(tag: int) -> np.ndarray:
+    """A fixed, sparse-ish stochastic matrix over the letter pool per tag."""
+    if tag not in _MARKOV_CACHE:
+        n = LETTER1 - LETTER0 + 1
+        rng = np.random.default_rng(1000 + tag)
+        m = rng.dirichlet(np.full(n, 0.05), size=n)
+        _MARKOV_CACHE[tag] = m
+    return _MARKOV_CACHE[tag]
+
+
+def _seq_markov(rng, total: int, tag: int) -> np.ndarray:
+    m = _markov_matrix(tag)
+    n = m.shape[0]
+    out = [tag]
+    s = int(rng.integers(0, n))
+    for _ in range(total - 1):
+        out.append(LETTER0 + s)
+        s = int(rng.choice(n, p=m[s]))
+    return np.asarray(out[:total])
+
+
+_GEN = {
+    "copy": _seq_copy,
+    "arith": _seq_arith,
+    "sort": _seq_sort,
+    "repeat": _seq_repeat,
+    "succ": _seq_succ,
+    "markov_a": lambda rng, t: _seq_markov(rng, t, TAG_MARKOV_A),
+    "markov_b": lambda rng, t: _seq_markov(rng, t, TAG_MARKOV_B),
+}
+
+
+def sample_sequence(rng: np.random.Generator, length: int) -> np.ndarray:
+    """One training sequence: BOS + tagged pattern body, exactly ``length``."""
+    dom = DOMAINS[int(rng.integers(0, len(DOMAINS)))]
+    body = _GEN[dom](rng, length - 1)
+    seq = np.concatenate([[BOS], body])
+    if len(seq) < length:
+        seq = np.concatenate([seq, np.full(length - len(seq), PAD)])
+    return seq[:length].astype(np.int32)
+
+
+def batches(seed: int, batch: int, length: int):
+    """Infinite iterator of ``i32[batch, length]`` training batches."""
+    rng = np.random.default_rng(seed)
+    while True:
+        yield np.stack([sample_sequence(rng, length) for _ in range(batch)])
+
+
+# ---------------------------------------------------------------------------
+# Eval suites
+# ---------------------------------------------------------------------------
+
+@dataclass
+class EvalItem:
+    prompt: list          # i32 tokens, starts with BOS
+    answer: list          # i32 tokens to be produced greedily
+
+
+def _make_item_copy(rng, seg_len: int, ans_len: int) -> EvalItem:
+    seg = _letters(rng, seg_len).tolist()
+    keep = seg_len - ans_len
+    prompt = [BOS, TAG_COPY] + seg + [DELIM] + seg[:keep]
+    return EvalItem(prompt=prompt, answer=seg[keep:])
+
+
+def _make_item_arith(rng, pre_len: int, ans_len: int) -> EvalItem:
+    start = int(rng.integers(0, 10))
+    step = int(rng.integers(1, 4))
+    digits = [(start + i * step) % 10 + DIGIT0 for i in range(pre_len + ans_len)]
+    return EvalItem(prompt=[BOS, TAG_ARITH] + digits[:pre_len],
+                    answer=digits[pre_len:])
+
+
+def _make_item_repeat(rng, pre_len: int, ans_len: int) -> EvalItem:
+    period = int(rng.integers(1, 5))
+    motif = rng.integers(RING0, RING0 + RING_N, size=period)
+    total = pre_len + ans_len
+    body = [int(motif[i % period]) for i in range(total)]
+    return EvalItem(prompt=[BOS, TAG_REPEAT] + body[:pre_len],
+                    answer=body[pre_len:])
+
+
+def _make_item_succ(rng, pre_len: int, ans_len: int) -> EvalItem:
+    start = int(rng.integers(0, RING_N))
+    step = int(rng.integers(1, 4))
+    chain = [RING0 + (start + i * step) % RING_N
+             for i in range(pre_len + ans_len)]
+    return EvalItem(prompt=[BOS, TAG_SUCC] + chain[:pre_len],
+                    answer=chain[pre_len:])
+
+
+def build_suites(seed: int, n_items: int, max_prompt: int) -> dict:
+    """Three deterministic eval suites keyed by name.
+
+    Difficulty spans the learnable band of the build-time training run:
+    ``suite_repeat`` (easy periodic structure; MMLU stand-in),
+    ``suite_succ`` (letter-successor ring; CMMLU stand-in),
+    ``suite_arith`` (digit chains; GSM8K stand-in).
+    """
+    rng = np.random.default_rng(seed)
+    suites = {"suite_repeat": [], "suite_arith": [], "suite_succ": []}
+    for _ in range(n_items):
+        ans = int(rng.integers(2, 5))
+        pre = int(rng.integers(10, min(40, max_prompt - 6)))
+        suites["suite_repeat"].append(_make_item_repeat(rng, pre, ans))
+        suites["suite_arith"].append(
+            _make_item_arith(rng, int(rng.integers(8, 24)), ans))
+        suites["suite_succ"].append(_make_item_succ(rng, pre, ans))
+    return suites
+
+
+def dump_suites(path: str, suites: dict) -> None:
+    payload = {
+        name: [{"prompt": it.prompt, "answer": it.answer} for it in items]
+        for name, items in suites.items()
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f)

@@ -1,0 +1,143 @@
+"""L1 Pallas kernels: causal attention for prefill and decode.
+
+Besides the attention output, the prefill kernel emits the paper's Eq.-1
+token-importance signal: the mean attention weight each key position
+receives, averaged over heads and valid query rows.  L3 uses it to rank
+heavy-hitter tokens for the prefill-phase expert-importance estimator.
+
+The decode kernel attends a single query over a fixed-capacity KV cache
+(rows ``< pos`` valid) plus the current token's fresh K/V, avoiding an
+in-kernel dynamic cache update: L3 owns the cache and writes row ``pos``
+itself from the returned ``k_new``/``v_new``.
+
+TPU mapping: at mini scale the whole ``[H, T, T]`` score tensor fits in
+VMEM (8*96*96*4 B = 288 KiB) so the kernel is single-block; at paper scale
+this would become a flash-attention grid over KV tiles — the Eq.-1 score
+accumulates per KV tile exactly like the softmax denominator, so the
+importance signal survives the tiling.  Kernels run ``interpret=True``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rope_vals(x, positions, theta):
+    """RoPE on loaded values: ``x[T, H, hd]`` with ``positions[T]``."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    angles = positions[:, None].astype(jnp.float32) * freqs[None, :]
+    cos = jnp.cos(angles)[:, None, :]
+    sin = jnp.sin(angles)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _prefill_kernel(h_ref, sl_ref, ln_ref, wq_ref, wk_ref, wv_ref, wo_ref,
+                    out_ref, score_ref, k_ref, v_ref, *,
+                    n_heads: int, theta: float, eps: float):
+    h = h_ref[...]
+    T, d = h.shape
+    hd = d // n_heads
+    seq_len = sl_ref[0]
+
+    var = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+    x = h * jax.lax.rsqrt(var + eps) * ln_ref[...]
+    pos = jnp.arange(T, dtype=jnp.int32)
+    q = _rope_vals((x @ wq_ref[...]).reshape(T, n_heads, hd), pos, theta)
+    k = _rope_vals((x @ wk_ref[...]).reshape(T, n_heads, hd), pos, theta)
+    v = (x @ wv_ref[...]).reshape(T, n_heads, hd)
+
+    logits = jnp.einsum("qhd,khd->hqk", q, k) / jnp.sqrt(float(hd))
+    causal = pos[None, :] <= pos[:, None]
+    valid = pos < seq_len
+    mask = causal[None] & valid[None, None, :] & valid[None, :, None]
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(mask, probs, 0.0)
+
+    out = jnp.einsum("hqk,khd->qhd", probs, v).reshape(T, d) @ wo_ref[...]
+    out_ref[...] = jnp.where(valid[:, None], out, 0.0)
+
+    n_valid = jnp.maximum(seq_len, 1).astype(jnp.float32)
+    score_ref[...] = jnp.sum(probs, axis=(0, 1)) / (n_heads * n_valid)
+    k_ref[...] = k
+    v_ref[...] = v
+
+
+def _decode_kernel(h_ref, kc_ref, vc_ref, pos_ref, ln_ref, wq_ref, wk_ref,
+                   wv_ref, wo_ref, out_ref, kn_ref, vn_ref, *,
+                   n_heads: int, theta: float, eps: float):
+    h = h_ref[...]                       # [1, d]
+    d = h.shape[-1]
+    hd = d // n_heads
+    pos = pos_ref[0]
+    S = kc_ref.shape[0]
+
+    var = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+    x = h * jax.lax.rsqrt(var + eps) * ln_ref[...]
+    p = jnp.full((1,), pos, dtype=jnp.int32)
+    q = _rope_vals((x @ wq_ref[...]).reshape(1, n_heads, hd), p, theta)[0]
+    k_new = _rope_vals((x @ wk_ref[...]).reshape(1, n_heads, hd), p, theta)[0]
+    v_new = (x @ wv_ref[...]).reshape(n_heads, hd)
+
+    scale = 1.0 / jnp.sqrt(float(hd))
+    hist = jnp.einsum("hd,khd->hk", q, kc_ref[...]) * scale     # [H, S]
+    self_logit = jnp.sum(q * k_new, axis=-1, keepdims=True) * scale  # [H, 1]
+    valid = jnp.arange(S, dtype=jnp.int32) < pos
+    hist = jnp.where(valid[None, :], hist, -1e30)
+    logits = jnp.concatenate([hist, self_logit], axis=-1)       # [H, S+1]
+    probs = jax.nn.softmax(logits, axis=-1)
+    ctx = (jnp.einsum("hk,khd->hd", probs[:, :S], vc_ref[...])
+           + probs[:, S:] * v_new)
+    out_ref[...] = ctx.reshape(1, d) @ wo_ref[...]
+    kn_ref[...] = k_new
+    vn_ref[...] = v_new
+
+
+@functools.partial(jax.jit, static_argnames=("n_heads", "theta", "eps"))
+def attention_prefill(h, seq_len, ln, wq, wk, wv, wo, *, n_heads: int,
+                      theta: float = 10000.0, eps: float = 1e-5):
+    """Causal prefill attention.
+
+    ``h[T, d]``, ``seq_len: i32[1]`` true prompt length (rest is padding).
+    Returns ``(attn_out[T, d], token_scores[T], k[T, H, hd], v[T, H, hd])``.
+    """
+    T, d = h.shape
+    hd = d // n_heads
+    return pl.pallas_call(
+        functools.partial(_prefill_kernel, n_heads=n_heads, theta=theta,
+                          eps=eps),
+        out_shape=(
+            jax.ShapeDtypeStruct((T, d), jnp.float32),
+            jax.ShapeDtypeStruct((T,), jnp.float32),
+            jax.ShapeDtypeStruct((T, n_heads, hd), jnp.float32),
+            jax.ShapeDtypeStruct((T, n_heads, hd), jnp.float32),
+        ),
+        interpret=True,
+    )(h, seq_len.astype(jnp.int32), ln, wq, wk, wv, wo)
+
+
+@functools.partial(jax.jit, static_argnames=("n_heads", "theta", "eps"))
+def attention_decode(h, k_cache, v_cache, pos, ln, wq, wk, wv, wo, *,
+                     n_heads: int, theta: float = 10000.0, eps: float = 1e-5):
+    """Single-token decode attention over a KV cache.
+
+    ``h[1, d]``, caches ``[S, H, hd]``, ``pos: i32[1]``.  Returns
+    ``(attn_out[1, d], k_new[H, hd], v_new[H, hd])``.
+    """
+    d = h.shape[-1]
+    hd = d // n_heads
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, n_heads=n_heads, theta=theta,
+                          eps=eps),
+        out_shape=(
+            jax.ShapeDtypeStruct((1, d), jnp.float32),
+            jax.ShapeDtypeStruct((n_heads, hd), jnp.float32),
+            jax.ShapeDtypeStruct((n_heads, hd), jnp.float32),
+        ),
+        interpret=True,
+    )(h, k_cache, v_cache, pos.astype(jnp.int32), ln, wq, wk, wv, wo)

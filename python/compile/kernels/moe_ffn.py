@@ -1,0 +1,133 @@
+"""L1 Pallas kernel: the expert-FFN hot-spot (dense and group-quantized).
+
+This is the paper's compute core: one expert's SwiGLU FFN applied to the
+tokens routed to it, with the weights arriving either dense (bf16 tier) or
+as packed u32 words + group scales (int8/int4/int2 tiers).  Dequantization
+happens *inside* the kernel so the HLO input — and therefore the simulated
+host->device transfer in L3 — is the packed representation.
+
+TPU mapping (DESIGN.md §3):
+
+* grid is 1-D over FFN column tiles: each step stages ``x`` (resident),
+  a ``[d, BF]`` column slice of w1/w3 and the matching ``[BF, d]`` row
+  slice of w2 from HBM into VMEM via BlockSpec;
+* the unpack (shift/mask, 32/bits static steps) runs on the VPU, the two
+  ``[T,d]x[d,BF]`` matmuls and the ``[T,BF]x[BF,d]`` matmul hit the MXU;
+* the output ref accumulates across grid steps (revisited block), which is
+  the standard Pallas reduction idiom — no barrier between column tiles.
+
+VMEM budget at mixtral-mini scale (d=256, BF=256, T=96, int4):
+x 96*256*4 = 96 KiB, w1q+w3q 2*(32*256*4) = 64 KiB, w2q 32*256*4 = 32 KiB,
+scales ~3*8*256*4 = 24 KiB, activations 2*96*256*4 = 192 KiB, out 96 KiB
+=> ~0.5 MiB, comfortably inside the ~16 MiB VMEM of a TPU core; the same
+shapes at paper scale (d=4096, ffn=14336, BF=512) stay under 13 MiB.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .quantize import dequant_values
+
+
+def _silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def _ffn_dense_kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref):
+    j = pl.program_id(0)
+    x = x_ref[...]
+    a = _silu(x @ w1_ref[...]) * (x @ w3_ref[...])
+    partial = a @ w2_ref[...]
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(j > 0)
+    def _acc():
+        o_ref[...] += partial
+
+
+def _ffn_quant_kernel(x_ref, w1q_ref, w1s_ref, w3q_ref, w3s_ref,
+                      w2q_ref, w2s_ref, o_ref, *, bits: int, group_size: int):
+    j = pl.program_id(0)
+    x = x_ref[...]
+    w1 = dequant_values(w1q_ref[...], w1s_ref[...], bits, group_size)
+    w3 = dequant_values(w3q_ref[...], w3s_ref[...], bits, group_size)
+    a = _silu(x @ w1) * (x @ w3)
+    w2 = dequant_values(w2q_ref[...], w2s_ref[...], bits, group_size)
+    partial = a @ w2
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(j > 0)
+    def _acc():
+        o_ref[...] += partial
+
+
+def _ffn_tile(d_ffn: int) -> int:
+    """FFN column-tile width; one tile if the expert is narrow."""
+    return min(d_ffn, 256)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def expert_ffn_dense(x, w1, w3, w2):
+    """Dense SwiGLU expert FFN: ``x[T,d] -> y[T,d]`` (bf16 tier)."""
+    T, d = x.shape
+    ffn = w1.shape[1]
+    bf = _ffn_tile(ffn)
+    grid = (ffn // bf,)
+    return pl.pallas_call(
+        _ffn_dense_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((T, d), lambda j: (0, 0)),
+            pl.BlockSpec((d, bf), lambda j: (0, j)),
+            pl.BlockSpec((d, bf), lambda j: (0, j)),
+            pl.BlockSpec((bf, d), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((T, d), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, d), jnp.float32),
+        interpret=True,
+    )(x, w1, w3, w2)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size"))
+def expert_ffn_quant(x, w1q, w1s, w3q, w3s, w2q, w2s, *, bits: int,
+                     group_size: int):
+    """Group-quantized SwiGLU expert FFN.
+
+    ``x[T, d]``; ``w1q/w3q: u32[d*bits/32, ffn]`` with scales
+    ``f32[d/G, ffn]``; ``w2q: u32[ffn*bits/32, d]`` with scales
+    ``f32[ffn/G, d]``.  Returns ``y[T, d]`` f32.
+    """
+    T, d = x.shape
+    ffn = w1q.shape[1]
+    vpw = 32 // bits
+    bf = _ffn_tile(ffn)
+    assert bf % vpw == 0 and bf % group_size == 0, (bf, vpw, group_size)
+    grid = (ffn // bf,)
+    dq = d // vpw          # packed rows of w1/w3
+    dg = d // group_size   # scale rows of w1/w3
+    return pl.pallas_call(
+        functools.partial(_ffn_quant_kernel, bits=bits,
+                          group_size=group_size),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((T, d), lambda j: (0, 0)),
+            pl.BlockSpec((dq, bf), lambda j: (0, j)),
+            pl.BlockSpec((dg, bf), lambda j: (0, j)),
+            pl.BlockSpec((dq, bf), lambda j: (0, j)),
+            pl.BlockSpec((dg, bf), lambda j: (0, j)),
+            pl.BlockSpec((bf // vpw, d), lambda j: (j, 0)),
+            pl.BlockSpec((bf // group_size, d), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((T, d), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, d), jnp.float32),
+        interpret=True,
+    )(x, w1q, w1s, w3q, w3s, w2q, w2s)

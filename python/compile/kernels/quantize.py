@@ -1,0 +1,95 @@
+"""L1 Pallas kernels: group-wise quantization pack / unpack.
+
+TPU mapping (DESIGN.md §3): quantization is a VPU-only job — reshape to
+``(groups, group_size, N)`` sublanes, max-reduce for scales, then shift/or
+into u32 lanes.  Packing 8x int4 / 16x int2 per u32 lane is exactly what
+makes the HBM->VMEM (and in the paper's system, host->device) transfer
+volume proportional to bits-per-weight.
+
+All kernels run ``interpret=True`` (see /opt/xla-example/README.md): real
+TPU lowering emits Mosaic custom-calls the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _quantize_kernel(w_ref, words_ref, scales_ref, *, bits: int,
+                     group_size: int):
+    w = w_ref[...]
+    K, N = w.shape
+    lo, hi = ref.quant_range(bits)
+    g = w.reshape(K // group_size, group_size, N)
+    scales = jnp.maximum(jnp.max(jnp.abs(g), axis=1) / hi, 1e-10)
+    q = jnp.clip(jnp.round(g / scales[:, None, :]), lo, hi).astype(jnp.int32)
+    q = q.reshape(K, N)
+    scales_ref[...] = scales.astype(jnp.float32)
+
+    vpw = 32 // bits
+    offset = 1 << (bits - 1)
+    biased = (q + offset).astype(jnp.uint32).reshape(K // vpw, vpw, N)
+    word = jnp.zeros((K // vpw, N), dtype=jnp.uint32)
+    for j in range(vpw):
+        word = word | (biased[:, j, :] << jnp.uint32(bits * j))
+    words_ref[...] = word
+
+
+def _dequantize_kernel(words_ref, scales_ref, w_ref, *, bits: int,
+                       group_size: int):
+    w_ref[...] = dequant_values(words_ref[...], scales_ref[...], bits,
+                                group_size)
+
+
+def dequant_values(words: jnp.ndarray, scales: jnp.ndarray, bits: int,
+                   group_size: int) -> jnp.ndarray:
+    """Unpack + rescale on *loaded values* — shared by the FFN kernels.
+
+    This is the in-kernel dequant path: a static ``32/bits``-step shift/mask
+    loop on the VPU producing the f32 tile the MXU consumes.
+    """
+    vpw = 32 // bits
+    mask = jnp.uint32((1 << bits) - 1)
+    offset = 1 << (bits - 1)
+    R, N = words.shape
+    parts = [
+        ((words >> jnp.uint32(bits * j)) & mask).astype(jnp.int32) - offset
+        for j in range(vpw)
+    ]
+    q = jnp.stack(parts, axis=1).reshape(R * vpw, N).astype(jnp.float32)
+    K = R * vpw
+    g = q.reshape(K // group_size, group_size, N)
+    return (g * scales[:, None, :]).reshape(K, N)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size"))
+def quantize(w: jnp.ndarray, bits: int, group_size: int):
+    """Pallas group-wise quantize: ``w[K, N]`` -> ``(u32[K*bits/32, N], f32[K/G, N])``."""
+    K, N = w.shape
+    vpw = 32 // bits
+    return pl.pallas_call(
+        functools.partial(_quantize_kernel, bits=bits, group_size=group_size),
+        out_shape=(
+            jax.ShapeDtypeStruct((K // vpw, N), jnp.uint32),
+            jax.ShapeDtypeStruct((K // group_size, N), jnp.float32),
+        ),
+        interpret=True,
+    )(w)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size"))
+def dequantize(words: jnp.ndarray, scales: jnp.ndarray, bits: int,
+               group_size: int):
+    """Pallas unpack+rescale: inverse storage transform of :func:`quantize`."""
+    R, N = words.shape
+    K = R * (32 // bits)
+    return pl.pallas_call(
+        functools.partial(_dequantize_kernel, bits=bits,
+                          group_size=group_size),
+        out_shape=jax.ShapeDtypeStruct((K, N), jnp.float32),
+        interpret=True,
+    )(words, scales)

@@ -1,0 +1,211 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the CORE correctness signal: pytest (+hypothesis) asserts that
+each Pallas kernel under ``interpret=True`` matches these references to
+tight tolerances, and the Rust quantizer round-trips against the same
+packing scheme (see ``rust/src/quant``).
+
+All math is float32.  The quantization scheme is group-wise symmetric
+round-to-nearest ("GPTQ storage format without Hessian compensation",
+DESIGN.md §2): along the *input* (contraction) dimension of each weight
+matrix, groups of ``group_size`` rows share one f32 scale per output
+column.  Quantized values are stored *biased* (q + 2^(bits-1), i.e. in
+[0, 2^bits - 1]) and packed little-endian into u32 words, ``32 // bits``
+values per word.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Quantization (reference)
+# ---------------------------------------------------------------------------
+
+def quant_range(bits: int) -> tuple[int, int]:
+    """Symmetric signed range for a given bit-width, e.g. 4 -> (-8, 7)."""
+    half = 1 << (bits - 1)
+    return -half, half - 1
+
+
+def quantize_groupwise(w: jnp.ndarray, bits: int, group_size: int):
+    """Quantize ``w[K, N]`` along K in groups of ``group_size``.
+
+    Returns ``(q, scales)`` with ``q`` int32 *unbiased* values in the
+    symmetric range and ``scales`` f32 of shape ``[K // group_size, N]``.
+    """
+    K, N = w.shape
+    assert K % group_size == 0, (K, group_size)
+    lo, hi = quant_range(bits)
+    g = w.reshape(K // group_size, group_size, N)
+    max_abs = jnp.max(jnp.abs(g), axis=1)                      # [K/G, N]
+    scales = jnp.maximum(max_abs / hi, 1e-10)
+    q = jnp.clip(jnp.round(g / scales[:, None, :]), lo, hi)
+    return q.reshape(K, N).astype(jnp.int32), scales.astype(jnp.float32)
+
+
+def dequantize_groupwise(q: jnp.ndarray, scales: jnp.ndarray, group_size: int):
+    """Inverse of :func:`quantize_groupwise` (up to rounding error)."""
+    K, N = q.shape
+    g = q.reshape(K // group_size, group_size, N).astype(jnp.float32)
+    return (g * scales[:, None, :]).reshape(K, N)
+
+
+def pack_words(q: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pack unbiased int values ``q[K, N]`` into u32 words ``[K*bits/32, N]``.
+
+    Values are biased by ``2^(bits-1)`` then packed little-endian along K:
+    element ``k = r*vpw + j`` occupies bits ``[bits*j, bits*(j+1))`` of
+    word ``r`` (``vpw = 32 // bits``).
+    """
+    vpw = 32 // bits
+    K, N = q.shape
+    assert K % vpw == 0, (K, vpw)
+    offset = 1 << (bits - 1)
+    biased = (q + offset).astype(jnp.uint32)
+    grouped = biased.reshape(K // vpw, vpw, N)
+    word = jnp.zeros((K // vpw, N), dtype=jnp.uint32)
+    for j in range(vpw):
+        word = word | (grouped[:, j, :] << jnp.uint32(bits * j))
+    return word
+
+
+def unpack_words(words: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_words`: u32 ``[R, N]`` -> unbiased int32 ``[R*vpw, N]``."""
+    vpw = 32 // bits
+    mask = jnp.uint32((1 << bits) - 1)
+    offset = 1 << (bits - 1)
+    R, N = words.shape
+    parts = [
+        ((words >> jnp.uint32(bits * j)) & mask).astype(jnp.int32) - offset
+        for j in range(vpw)
+    ]
+    return jnp.stack(parts, axis=1).reshape(R * vpw, N)
+
+
+def quantize_packed(w: jnp.ndarray, bits: int, group_size: int):
+    """Full pipeline: f32 weights -> (packed u32 words, f32 scales)."""
+    q, s = quantize_groupwise(w, bits, group_size)
+    return pack_words(q, bits), s
+
+
+def dequantize_packed(words: jnp.ndarray, scales: jnp.ndarray, bits: int,
+                      group_size: int) -> jnp.ndarray:
+    q = unpack_words(words, bits)
+    return dequantize_groupwise(q, scales, group_size)
+
+
+# ---------------------------------------------------------------------------
+# Core ops (reference)
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0):
+    """Rotary embedding over ``x[T, H, hd]`` with integer ``positions[T]``."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    angles = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [T, half]
+    cos = jnp.cos(angles)[:, None, :]   # [T, 1, half]
+    sin = jnp.sin(angles)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def silu(x: jnp.ndarray) -> jnp.ndarray:
+    return x * jax.nn.sigmoid(x)
+
+
+def expert_ffn(x: jnp.ndarray, w1: jnp.ndarray, w3: jnp.ndarray,
+               w2: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU expert: ``(silu(x@w1) * (x@w3)) @ w2`` over ``x[T, d]``."""
+    return (silu(x @ w1) * (x @ w3)) @ w2
+
+
+def expert_ffn_quant(x, w1q, w1s, w3q, w3s, w2q, w2s, bits: int,
+                     group_size: int):
+    """Quantized expert: dequantize packed weights then run the SwiGLU FFN."""
+    w1 = dequantize_packed(w1q, w1s, bits, group_size)
+    w3 = dequantize_packed(w3q, w3s, bits, group_size)
+    w2 = dequantize_packed(w2q, w2s, bits, group_size)
+    return expert_ffn(x, w1, w3, w2)
+
+
+def gate_probs(x: jnp.ndarray, wg: jnp.ndarray) -> jnp.ndarray:
+    """Router: softmax gate over experts.  ``x[T, d] @ wg[d, M]``."""
+    return jax.nn.softmax(x @ wg, axis=-1)
+
+
+def attention_prefill(h, seq_len, ln1, wq, wk, wv, wo,
+                      n_heads: int, rope_theta: float = 10000.0,
+                      rms_eps: float = 1e-5):
+    """Causal self-attention over a (padded) prompt.
+
+    Returns ``(attn_out[T, d], token_scores[T], k[T, H, hd], v[T, H, hd])``
+    where ``token_scores`` is the Eq.-1 importance signal: the mean
+    attention weight each *key* position receives, averaged over heads and
+    valid query positions.  Positions >= seq_len are masked out.
+    """
+    T, d = h.shape
+    hd = d // n_heads
+    x = rms_norm(h, ln1, rms_eps)
+    pos = jnp.arange(T)
+    q = rope((x @ wq).reshape(T, n_heads, hd), pos, rope_theta)
+    k = rope((x @ wk).reshape(T, n_heads, hd), pos, rope_theta)
+    v = (x @ wv).reshape(T, n_heads, hd)
+
+    logits = jnp.einsum("qhd,khd->hqk", q, k) / jnp.sqrt(float(hd))
+    causal = pos[None, :] <= pos[:, None]                    # [q, k]
+    valid = pos < seq_len
+    mask = causal[None] & valid[None, None, :] & valid[None, :, None]
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(mask, probs, 0.0)
+
+    out = jnp.einsum("hqk,khd->qhd", probs, v).reshape(T, d) @ wo
+    out = jnp.where(valid[:, None], out, 0.0)
+
+    # Eq. 1: s_i = mean over heads (and valid queries) of attention received.
+    n_valid = jnp.maximum(seq_len, 1).astype(jnp.float32)
+    scores = jnp.sum(probs, axis=(0, 1)) / (n_heads * n_valid)
+    return out, scores, k, v
+
+
+def attention_decode(h, k_cache, v_cache, pos, ln1, wq, wk, wv, wo,
+                     n_heads: int, rope_theta: float = 10000.0,
+                     rms_eps: float = 1e-5):
+    """Single-token attention over a KV cache.
+
+    ``h[1, d]``, caches ``[S, H, hd]``; ``pos`` is the index of the current
+    token (cache rows ``< pos`` are valid history).  Returns
+    ``(attn_out[1, d], k_new[H, hd], v_new[H, hd])``; the caller writes
+    ``k_new/v_new`` into row ``pos``.
+    """
+    S = k_cache.shape[0]
+    d = h.shape[-1]
+    hd = d // n_heads
+    x = rms_norm(h, ln1, rms_eps)
+    p = jnp.asarray(pos, dtype=jnp.int32).reshape(1)
+    q = rope((x @ wq).reshape(1, n_heads, hd), p, rope_theta)[0]   # [H, hd]
+    k_new = rope((x @ wk).reshape(1, n_heads, hd), p, rope_theta)[0]
+    v_new = (x @ wv).reshape(n_heads, hd)
+
+    keys = jax.lax.dynamic_update_index_in_dim(k_cache, k_new, p[0], 0)
+    vals = jax.lax.dynamic_update_index_in_dim(v_cache, v_new, p[0], 0)
+    logits = jnp.einsum("hd,khd->hk", q, keys) / jnp.sqrt(float(hd))
+    valid = jnp.arange(S) <= p[0]
+    logits = jnp.where(valid[None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = (jnp.einsum("hk,khd->hd", probs, vals).reshape(1, d)) @ wo
+    return out, k_new, v_new
+
+
+def np_rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed)

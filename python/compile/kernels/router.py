@@ -1,0 +1,38 @@
+"""L1 Pallas kernel: the MoE gate (router).
+
+Computes softmax gate probabilities ``softmax(rmsnorm(h) @ Wg)`` for a
+block of tokens.  The same kernel doubles as the paper's Eq.-6 look-ahead
+predictor: feeding layer-l hidden states through layer-(l+1)'s gate weight
+approximates the next layer's routing distribution (the ``gate_probe``
+artifact in aot.py).
+
+Top-k selection and renormalization are done by the L3 coordinator (M is
+at most a few dozen; sorting on the host is cheaper than a TPU sort and
+the indices drive host-side cache/transfer decisions anyway).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gate_kernel(x_ref, ln_ref, wg_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    xn = x * jax.lax.rsqrt(var + eps) * ln_ref[...]
+    logits = xn @ wg_ref[...]
+    o_ref[...] = jax.nn.softmax(logits, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def gate(x, ln, wg, *, eps: float = 1e-5):
+    """Gate probabilities: ``x[T, d], ln[d], wg[d, M] -> probs[T, M]``."""
+    T, d = x.shape
+    M = wg.shape[1]
+    return pl.pallas_call(
+        functools.partial(_gate_kernel, eps=eps),
+        out_shape=jax.ShapeDtypeStruct((T, M), jnp.float32),
+        interpret=True,
+    )(x, ln, wg)

@@ -1,0 +1,256 @@
+"""L2 JAX model: the mini-MoE transformer, composed from the L1 kernels.
+
+Two families of entry points:
+
+* **Serving pieces** (exported to HLO by ``aot.py``, driven step-by-step by
+  the Rust coordinator, which owns routing, expert dispatch and the KV
+  cache — that's the whole point of an offloading system):
+
+  - ``embed``           tokens -> hidden states
+  - ``attn_prefill``    one layer's attention + gate for a padded prompt
+  - ``attn_decode``     one layer's attention + gate for a single token
+  - ``gate_probe``      Eq.-6 look-ahead gate predictor for layer l+1
+  - ``expert_ffn_*``    one expert applied to a token bucket (see kernels)
+  - ``finalize``        final norm + tied unembedding -> logits
+
+* **Full-model reference** (``forward_full``) used for training
+  (``train.py``) and as the end-to-end numerics oracle in tests.  It uses
+  the *same* reference math (``kernels.ref``) the Pallas kernels are tested
+  against, so Rust-driven serving and Python training agree.
+
+Parameter pytree layout (all f32)::
+
+    params = {
+      "emb":  [V, d],
+      "ln_f": [d],
+      "layers": [  # one dict per layer
+        { "ln1": [d], "wq|wk|wv|wo": [d, d],
+          "ln2": [d], "wg": [d, M],
+          "w1": [M, d, ffn], "w3": [M, d, ffn], "w2": [M, ffn, d] }
+      ]
+    }
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .kernels import attention as attn_k
+from .kernels import moe_ffn as ffn_k
+from .kernels import ref
+from .kernels import router as router_k
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+
+    def mat(*shape, scale=None):
+        scale = scale if scale is not None else 1.0 / np.sqrt(shape[-2])
+        return jnp.asarray(
+            rng.normal(0.0, scale, size=shape).astype(np.float32))
+
+    d, f, M = cfg.d_model, cfg.d_ffn, cfg.n_experts
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append({
+            "ln1": jnp.ones((d,), jnp.float32),
+            "wq": mat(d, d), "wk": mat(d, d), "wv": mat(d, d), "wo": mat(d, d),
+            "ln2": jnp.ones((d,), jnp.float32),
+            "wg": mat(d, M, scale=0.02),
+            "w1": mat(M, d, f), "w3": mat(M, d, f),
+            "w2": mat(M, f, d, scale=1.0 / np.sqrt(f)),
+        })
+    return {
+        "emb": mat(cfg.vocab, d, scale=0.02),
+        "ln_f": jnp.ones((d,), jnp.float32),
+        "layers": layers,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Serving pieces (each is lowered to one HLO artifact per shape variant)
+# ---------------------------------------------------------------------------
+
+def embed(tokens, emb):
+    """``tokens: i32[T], emb: f32[V, d] -> h: f32[T, d]``."""
+    return jnp.take(emb, tokens, axis=0)
+
+
+def attn_prefill(h, seq_len, ln1, wq, wk, wv, wo, ln2, wg, *, cfg: ModelConfig):
+    """One layer's attention half for a padded prompt.
+
+    Returns ``(h_resid[T,d], moe_in[T,d], gate_probs[T,M], token_scores[T],
+    k[T,H,hd], v[T,H,hd])``.  The Rust side routes ``moe_in`` rows through
+    experts and accumulates weighted expert outputs onto ``h_resid``.
+    """
+    out, scores, k, v = attn_k.attention_prefill(
+        h, seq_len, ln1, wq, wk, wv, wo,
+        n_heads=cfg.n_heads, theta=cfg.rope_theta, eps=cfg.rms_eps)
+    h_resid = h + out
+    moe_in = ref.rms_norm(h_resid, ln2, cfg.rms_eps)
+    probs = router_k.gate(h_resid, ln2, wg, eps=cfg.rms_eps)
+    return h_resid, moe_in, probs, scores, k, v
+
+
+def attn_decode(h, k_cache, v_cache, pos, ln1, wq, wk, wv, wo, ln2, wg, *,
+                cfg: ModelConfig):
+    """One layer's attention half for a single decode token.
+
+    Returns ``(h_resid[1,d], moe_in[1,d], gate_probs[1,M],
+    k_new[H,hd], v_new[H,hd])``.
+    """
+    out, k_new, v_new = attn_k.attention_decode(
+        h, k_cache, v_cache, pos, ln1, wq, wk, wv, wo,
+        n_heads=cfg.n_heads, theta=cfg.rope_theta, eps=cfg.rms_eps)
+    h_resid = h + out
+    moe_in = ref.rms_norm(h_resid, ln2, cfg.rms_eps)
+    probs = router_k.gate(h_resid, ln2, wg, eps=cfg.rms_eps)
+    return h_resid, moe_in, probs, k_new, v_new
+
+
+def gate_probe(h_resid, ln2_next, wg_next, *, cfg: ModelConfig):
+    """Eq. 6: approximate layer-(l+1) gate probabilities from layer-l state."""
+    return router_k.gate(h_resid, ln2_next, wg_next, eps=cfg.rms_eps)
+
+
+def attn_prefill_probe(h, seq_len, ln1, wq, wk, wv, wo, ln2, wg, ln2n, wgn,
+                       *, cfg: ModelConfig):
+    """Fused prefill attention + Eq.-6 look-ahead probe for layer l+1.
+
+    One artifact execution instead of two (perf pass, EXPERIMENTS.md
+    §Perf): the probe's matmul fuses into the same XLA program.  Extra
+    inputs are the *next* layer's ``ln2``/``wg``.
+    """
+    h_resid, moe_in, probs, scores, k, v = attn_prefill(
+        h, seq_len, ln1, wq, wk, wv, wo, ln2, wg, cfg=cfg)
+    probe = router_k.gate(h_resid, ln2n, wgn, eps=cfg.rms_eps)
+    return h_resid, moe_in, probs, scores, k, v, probe
+
+
+def attn_decode_probe(h, k_cache, v_cache, pos, ln1, wq, wk, wv, wo, ln2, wg,
+                      ln2n, wgn, *, cfg: ModelConfig):
+    """Fused decode attention + Eq.-6 look-ahead probe for layer l+1."""
+    h_resid, moe_in, probs, k_new, v_new = attn_decode(
+        h, k_cache, v_cache, pos, ln1, wq, wk, wv, wo, ln2, wg, cfg=cfg)
+    probe = router_k.gate(h_resid, ln2n, wgn, eps=cfg.rms_eps)
+    return h_resid, moe_in, probs, k_new, v_new, probe
+
+
+def expert_ffn_dense(x, w1, w3, w2):
+    """bf16-tier expert FFN over a token bucket (see kernels.moe_ffn)."""
+    return ffn_k.expert_ffn_dense(x, w1, w3, w2)
+
+
+def expert_ffn_quant(x, w1q, w1s, w3q, w3s, w2q, w2s, *, bits, group_size):
+    """Quantized-tier expert FFN over a token bucket (see kernels.moe_ffn)."""
+    return ffn_k.expert_ffn_quant(x, w1q, w1s, w3q, w3s, w2q, w2s,
+                                  bits=bits, group_size=group_size)
+
+
+def finalize(h, ln_f, emb, *, cfg: ModelConfig):
+    """Final RMSNorm + tied unembedding: ``h[T, d] -> logits[T, V]``."""
+    return ref.rms_norm(h, ln_f, cfg.rms_eps) @ emb.T
+
+
+# ---------------------------------------------------------------------------
+# Full-model reference (training + end-to-end oracle)
+# ---------------------------------------------------------------------------
+
+def topk_mask(probs: jnp.ndarray, k: int):
+    """Top-k routing weights, renormalized over the selected experts.
+
+    ``probs[..., M] -> weights[..., M]`` with exactly k non-zeros per row.
+    Ties broken by expert index (matches the Rust coordinator: stable sort
+    descending by probability, ascending by index).
+    """
+    top_vals, _ = jax.lax.top_k(probs, k)
+    thresh = top_vals[..., -1:]
+    mask = probs >= thresh
+    # Guard degenerate ties producing > k selections: keep the first k.
+    csum = jnp.cumsum(mask.astype(jnp.int32), axis=-1)
+    mask = mask & (csum <= k)
+    w = probs * mask
+    return w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+
+
+def moe_block(x: jnp.ndarray, layer: dict, cfg: ModelConfig):
+    """Dense-compute MoE block (all experts evaluated, top-k mixed).
+
+    Used for training / reference only: serving evaluates just the routed
+    experts through the per-expert artifacts.  Returns ``(y, probs)``.
+    """
+    probs = ref.gate_probs(x, layer["wg"])            # [T, M]
+    w = topk_mask(probs, cfg.top_k)                   # [T, M]
+    h1 = jnp.einsum("td,mdf->tmf", x, layer["w1"])
+    h3 = jnp.einsum("td,mdf->tmf", x, layer["w3"])
+    acts = ref.silu(h1) * h3
+    outs = jnp.einsum("tmf,mfd->tmd", acts, layer["w2"])
+    return jnp.einsum("tm,tmd->td", w, outs), probs
+
+
+def forward_full(params: dict, tokens: jnp.ndarray, cfg: ModelConfig,
+                 collect_hidden: bool = False):
+    """Full forward pass over ``tokens[T]`` -> ``logits[T, V]``.
+
+    With ``collect_hidden=True`` also returns the per-layer residual
+    streams (used by the Fig.-6 inter-layer-similarity experiment and the
+    look-ahead-predictor accuracy test).
+    """
+    T = tokens.shape[0]
+    h = embed(tokens, params["emb"])
+    hiddens = []
+    for layer in params["layers"]:
+        out, _, k, v = ref.attention_prefill(
+            h, jnp.int32(T), layer["ln1"], layer["wq"], layer["wk"],
+            layer["wv"], layer["wo"], n_heads=cfg.n_heads,
+            rope_theta=cfg.rope_theta, rms_eps=cfg.rms_eps)
+        h = h + out
+        moe_in = ref.rms_norm(h, layer["ln2"], cfg.rms_eps)
+        y, _ = moe_block(moe_in, layer, cfg)
+        h = h + y
+        if collect_hidden:
+            hiddens.append(h)
+    logits = finalize(h, params["ln_f"], params["emb"], cfg=cfg)
+    if collect_hidden:
+        return logits, hiddens
+    return logits
+
+
+def loss_fn(params: dict, batch: jnp.ndarray, cfg: ModelConfig,
+            aux_weight: float = 0.01):
+    """Next-token cross-entropy + router load-balancing auxiliary loss.
+
+    ``batch: i32[B, T]``.  The aux loss is the standard Switch-style
+    balance term: M * sum_e(fraction_e * prob_e).
+    """
+    def one(tokens):
+        T = tokens.shape[0]
+        h = embed(tokens, params["emb"])
+        aux = 0.0
+        for layer in params["layers"]:
+            out, _, _, _ = ref.attention_prefill(
+                h, jnp.int32(T), layer["ln1"], layer["wq"], layer["wk"],
+                layer["wv"], layer["wo"], n_heads=cfg.n_heads,
+                rope_theta=cfg.rope_theta, rms_eps=cfg.rms_eps)
+            h2 = h + out
+            moe_in = ref.rms_norm(h2, layer["ln2"], cfg.rms_eps)
+            y, probs = moe_block(moe_in, layer, cfg)
+            w = topk_mask(probs, cfg.top_k)
+            frac = jnp.mean((w > 0).astype(jnp.float32), axis=0)   # [M]
+            mean_p = jnp.mean(probs, axis=0)
+            aux = aux + cfg.n_experts * jnp.sum(frac * mean_p)
+            h = h2 + y
+        logits = finalize(h, params["ln_f"], params["emb"], cfg=cfg)
+        logp = jax.nn.log_softmax(logits[:-1], axis=-1)
+        nll = -jnp.take_along_axis(logp, tokens[1:, None], axis=-1).mean()
+        return nll, aux / cfg.n_layers
+
+    nll, aux = jax.vmap(one)(batch)
+    return jnp.mean(nll) + aux_weight * jnp.mean(aux), jnp.mean(nll)

@@ -1,0 +1,90 @@
+"""Weight-store builder: quantize trained experts, write ``weights.bin``.
+
+The Rust runtime never sees a Python object: it streams *sections* of one
+flat binary file (the simulated SSD / host-memory tier) described by the
+manifest.  Expert weights exist in four precision tiers:
+
+* ``bf16``  — full-precision tier (stored f32 on disk for CPU numerics;
+  accounted 2 bytes/param for I/O, like the paper's BF16 tier);
+* ``int8 / int4 / int2`` — group-wise RTN (kernels/ref.py scheme): packed
+  u32 words + f32 group scales.  The *packed* bytes are what cross the
+  simulated PCIe bus, so I/O volume scales with bits-per-weight exactly as
+  in the paper.
+"""
+
+import numpy as np
+
+from .configs import ModelConfig, QUANT_BITS
+from .kernels import ref
+
+
+def _np(a) -> np.ndarray:
+    return np.ascontiguousarray(np.asarray(a))
+
+
+class SectionWriter:
+    """Accumulates named arrays into one flat little-endian blob."""
+
+    def __init__(self):
+        self.sections: dict[str, dict] = {}
+        self.chunks: list[bytes] = []
+        self.offset = 0
+
+    def add(self, name: str, arr: np.ndarray) -> None:
+        assert name not in self.sections, name
+        dt = {"float32": "f32", "uint32": "u32", "int32": "i32"}[str(arr.dtype)]
+        raw = _np(arr).tobytes()
+        self.sections[name] = {
+            "dtype": dt,
+            "shape": list(arr.shape),
+            "offset": self.offset,
+            "nbytes": len(raw),
+        }
+        self.chunks.append(raw)
+        self.offset += len(raw)
+
+    def write(self, path: str) -> None:
+        with open(path, "wb") as f:
+            for c in self.chunks:
+                f.write(c)
+
+
+def quantize_matrix(w: np.ndarray, bits: int, group_size: int):
+    """Group-RTN pack via the reference scheme; returns (words u32, scales f32)."""
+    words, scales = ref.quantize_packed(np.asarray(w, np.float32), bits,
+                                        group_size)
+    return _np(words).astype(np.uint32), _np(scales).astype(np.float32)
+
+
+def expert_logical_bytes(cfg: ModelConfig) -> dict:
+    """Transfer bytes per expert per precision tier (the I/O-volume model)."""
+    d, f, G = cfg.d_model, cfg.d_ffn, cfg.group_size
+    n_params = 3 * d * f
+    out = {"bf16": 2 * n_params}
+    for prec, bits in QUANT_BITS.items():
+        packed = n_params * bits // 8
+        scales = ((d // G) * f * 2 + (f // G) * d) * 4
+        out[prec] = packed + scales
+    return out
+
+
+def build_weight_store(cfg: ModelConfig, params: dict) -> SectionWriter:
+    """Write every tier of every tensor into a SectionWriter."""
+    w = SectionWriter()
+    w.add("emb", _np(params["emb"]))
+    w.add("ln_f", _np(params["ln_f"]))
+    for l, layer in enumerate(params["layers"]):
+        p = f"L{l}"
+        for key in ("ln1", "wq", "wk", "wv", "wo", "ln2", "wg"):
+            w.add(f"{p}.{key}", _np(layer[key]))
+        for e in range(cfg.n_experts):
+            for mat in ("w1", "w3", "w2"):
+                full = _np(layer[mat][e])        # [K, N]
+                base = f"{p}.E{e}.{mat}"
+                w.add(f"{base}.bf16", full)
+                for prec, bits in QUANT_BITS.items():
+                    words, scales = quantize_matrix(full, bits,
+                                                    cfg.group_size)
+                    w.add(f"{base}.{prec}.q", words)
+                    w.add(f"{base}.{prec}.s", scales)
+    return w

@@ -1,0 +1,92 @@
+"""AOT export path: artifact definitions, lowering, manifest integrity."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, configs, model, quant, train
+
+
+def test_artifact_defs_cover_all_pieces():
+    defs = aot.artifact_defs(configs.TINY)
+    names = set(defs)
+    for required in ("attn_prefill", "attn_decode", "embed_t1",
+                     "finalize_t1", "gate_probe_t1"):
+        assert required in names
+    for prec in ("bf16", "int8", "int4", "int2"):
+        assert f"expert_{prec}_t1" in names
+        assert f"expert_{prec}_t4" in names
+
+
+def test_lower_one_artifact_produces_hlo_text():
+    defs = aot.artifact_defs(configs.TINY)
+    fn, specs = defs["expert_int4_t1"]
+    text, out_specs = aot.lower_artifact(fn, specs)
+    assert "HloModule" in text
+    assert len(out_specs) == 1
+    assert tuple(out_specs[0].shape) == (1, configs.TINY.d_model)
+
+
+def test_export_tiny_manifest(tmp_path):
+    cfg = configs.TINY
+    aot.export_model(cfg, str(tmp_path), retrain=False, verbose=False)
+    mdir = tmp_path / cfg.name
+    manifest = json.loads((mdir / "manifest.json").read_text())
+    assert manifest["model"]["name"] == cfg.name
+    # every artifact file exists and is HLO text
+    for name, meta in manifest["artifacts"].items():
+        path = mdir / meta["file"]
+        assert path.exists(), name
+        assert path.read_text().startswith("HloModule")
+    # sections are contiguous and sized consistently with dtype*shape
+    secs = sorted(manifest["sections"].values(), key=lambda s: s["offset"])
+    expect_off = 0
+    for s in secs:
+        assert s["offset"] == expect_off
+        n_elems = int(np.prod(s["shape"]))
+        assert s["nbytes"] == n_elems * 4
+        expect_off += s["nbytes"]
+    assert (mdir / "weights.bin").stat().st_size == expect_off
+
+
+def test_weight_store_roundtrip(tmp_path):
+    """Sections written by quant.py must deserialize back to the params."""
+    cfg = configs.TINY
+    params = model.init_params(cfg, seed=0)
+    writer = quant.build_weight_store(cfg, params)
+    path = tmp_path / "w.bin"
+    writer.write(str(path))
+    blob = path.read_bytes()
+
+    sec = writer.sections["L0.wq"]
+    arr = np.frombuffer(
+        blob[sec["offset"]:sec["offset"] + sec["nbytes"]],
+        dtype=np.float32).reshape(sec["shape"])
+    np.testing.assert_array_equal(arr, np.asarray(params["layers"][0]["wq"]))
+
+    sec = writer.sections["L1.E2.w2.int4.q"]
+    arr = np.frombuffer(
+        blob[sec["offset"]:sec["offset"] + sec["nbytes"]],
+        dtype=np.uint32).reshape(sec["shape"])
+    from compile.kernels import ref
+    words, _ = ref.quantize_packed(params["layers"][1]["w2"][2], 4,
+                                   cfg.group_size)
+    np.testing.assert_array_equal(arr, np.asarray(words))
+
+
+def test_expert_logical_bytes_ordering():
+    b = quant.expert_logical_bytes(configs.MIXTRAL_MINI)
+    assert b["bf16"] > b["int8"] > b["int4"] > b["int2"]
+    n = configs.MIXTRAL_MINI.expert_params
+    assert b["bf16"] == 2 * n
+    assert b["int8"] > n  # packed + scales overhead
+
+
+def test_train_smoke_reduces_loss():
+    params, history = train.train(configs.TINY, steps=25, batch=4,
+                                  length=16, verbose=False)
+    assert history[-1] < history[0]

@@ -1,0 +1,151 @@
+"""Attention Pallas kernels vs reference; Eq.-1 importance-score properties."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import configs, model
+from compile.kernels import attention as attn_k
+from compile.kernels import ref
+
+CFG = configs.TINY
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, seed=1)
+
+
+def _layer_args(params, i=0):
+    l = params["layers"][i]
+    return l["ln1"], l["wq"], l["wk"], l["wv"], l["wo"]
+
+
+@pytest.mark.parametrize("seq_len", (1, 5, CFG.max_seq))
+def test_prefill_matches_ref(params, seq_len):
+    rng = np.random.default_rng(seq_len)
+    h = jnp.asarray(
+        rng.normal(0, 1, (CFG.max_seq, CFG.d_model)).astype(np.float32))
+    args = _layer_args(params)
+    out, sc, k, v = attn_k.attention_prefill(
+        h, jnp.asarray([seq_len], jnp.int32), *args,
+        n_heads=CFG.n_heads, theta=CFG.rope_theta, eps=CFG.rms_eps)
+    outr, scr, kr, vr = ref.attention_prefill(
+        h, seq_len, *args, CFG.n_heads, CFG.rope_theta, CFG.rms_eps)
+    np.testing.assert_allclose(out, outr, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(sc, scr, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(k, kr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(v, vr, rtol=1e-5, atol=1e-6)
+
+
+def test_prefill_scores_sum_to_one(params):
+    """Eq. 1 scores are a distribution over valid tokens (sum == 1)."""
+    rng = np.random.default_rng(0)
+    h = jnp.asarray(
+        rng.normal(0, 1, (CFG.max_seq, CFG.d_model)).astype(np.float32))
+    for seq_len in (2, 7, CFG.max_seq):
+        _, sc, _, _ = attn_k.attention_prefill(
+            h, jnp.asarray([seq_len], jnp.int32), *_layer_args(params),
+            n_heads=CFG.n_heads, theta=CFG.rope_theta, eps=CFG.rms_eps)
+        assert abs(float(jnp.sum(sc)) - 1.0) < 1e-4
+        np.testing.assert_allclose(np.asarray(sc[seq_len:]), 0.0, atol=1e-6)
+
+
+def test_prefill_padding_invariance(params):
+    """Garbage in padding rows must not affect valid outputs."""
+    rng = np.random.default_rng(5)
+    seq_len = 6
+    h1 = rng.normal(0, 1, (CFG.max_seq, CFG.d_model)).astype(np.float32)
+    h2 = h1.copy()
+    h2[seq_len:] = rng.normal(0, 100, h2[seq_len:].shape)
+    args = _layer_args(params)
+    o1, s1, _, _ = attn_k.attention_prefill(
+        jnp.asarray(h1), jnp.asarray([seq_len], jnp.int32), *args,
+        n_heads=CFG.n_heads, theta=CFG.rope_theta, eps=CFG.rms_eps)
+    o2, s2, _, _ = attn_k.attention_prefill(
+        jnp.asarray(h2), jnp.asarray([seq_len], jnp.int32), *args,
+        n_heads=CFG.n_heads, theta=CFG.rope_theta, eps=CFG.rms_eps)
+    np.testing.assert_allclose(o1[:seq_len], o2[:seq_len], rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(s1[:seq_len], s2[:seq_len], rtol=1e-5,
+                               atol=1e-7)
+
+
+@pytest.mark.parametrize("pos", (0, 3, CFG.max_cache - 1))
+def test_decode_matches_ref(params, pos):
+    rng = np.random.default_rng(pos)
+    S = CFG.max_cache
+    kc = jnp.asarray(rng.normal(
+        0, 1, (S, CFG.n_heads, CFG.head_dim)).astype(np.float32))
+    vc = jnp.asarray(rng.normal(
+        0, 1, (S, CFG.n_heads, CFG.head_dim)).astype(np.float32))
+    h = jnp.asarray(rng.normal(0, 1, (1, CFG.d_model)).astype(np.float32))
+    args = _layer_args(params)
+    o, kn, vn = attn_k.attention_decode(
+        h, kc, vc, jnp.asarray([pos], jnp.int32), *args,
+        n_heads=CFG.n_heads, theta=CFG.rope_theta, eps=CFG.rms_eps)
+    orf, knr, vnr = ref.attention_decode(
+        h, kc, vc, pos, *args, CFG.n_heads, CFG.rope_theta, CFG.rms_eps)
+    np.testing.assert_allclose(o, orf, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(kn, knr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(vn, vnr, rtol=1e-5, atol=1e-6)
+
+
+def test_decode_ignores_future_cache(params):
+    """Cache rows >= pos must not influence the output."""
+    rng = np.random.default_rng(9)
+    S, pos = CFG.max_cache, 4
+    kc = rng.normal(0, 1, (S, CFG.n_heads, CFG.head_dim)).astype(np.float32)
+    vc = rng.normal(0, 1, (S, CFG.n_heads, CFG.head_dim)).astype(np.float32)
+    kc2, vc2 = kc.copy(), vc.copy()
+    kc2[pos:] = 99.0
+    vc2[pos:] = -99.0
+    h = jnp.asarray(rng.normal(0, 1, (1, CFG.d_model)).astype(np.float32))
+    args = _layer_args(params)
+    o1, _, _ = attn_k.attention_decode(
+        h, jnp.asarray(kc), jnp.asarray(vc), jnp.asarray([pos], jnp.int32),
+        *args, n_heads=CFG.n_heads, theta=CFG.rope_theta, eps=CFG.rms_eps)
+    o2, _, _ = attn_k.attention_decode(
+        h, jnp.asarray(kc2), jnp.asarray(vc2), jnp.asarray([pos], jnp.int32),
+        *args, n_heads=CFG.n_heads, theta=CFG.rope_theta, eps=CFG.rms_eps)
+    np.testing.assert_allclose(o1, o2, rtol=1e-5, atol=1e-6)
+
+
+def test_decode_consistent_with_prefill(params):
+    """Decoding token t over a cache built from prefill == prefill row t."""
+    rng = np.random.default_rng(13)
+    T = 8
+    h = jnp.asarray(rng.normal(0, 1, (T, CFG.d_model)).astype(np.float32))
+    args = _layer_args(params)
+    # reference prefill over first T tokens
+    out_ref, _, k_ref, v_ref = ref.attention_prefill(
+        h, T, *args, CFG.n_heads, CFG.rope_theta, CFG.rms_eps)
+    # decode the last token against cache rows 0..T-2
+    S = CFG.max_cache
+    kc = jnp.zeros((S, CFG.n_heads, CFG.head_dim), jnp.float32)
+    vc = jnp.zeros_like(kc)
+    kc = kc.at[:T - 1].set(k_ref[:T - 1])
+    vc = vc.at[:T - 1].set(v_ref[:T - 1])
+    o, kn, vn = attn_k.attention_decode(
+        h[T - 1:T], kc, vc, jnp.asarray([T - 1], jnp.int32), *args,
+        n_heads=CFG.n_heads, theta=CFG.rope_theta, eps=CFG.rms_eps)
+    np.testing.assert_allclose(o[0], out_ref[T - 1], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(kn, k_ref[T - 1], rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seq_len=st.integers(1, CFG.max_seq), seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_prefill(seq_len, seed):
+    params = model.init_params(CFG, seed=1)
+    rng = np.random.default_rng(seed)
+    h = jnp.asarray(
+        rng.normal(0, 1, (CFG.max_seq, CFG.d_model)).astype(np.float32))
+    args = _layer_args(params)
+    out, sc, _, _ = attn_k.attention_prefill(
+        h, jnp.asarray([seq_len], jnp.int32), *args,
+        n_heads=CFG.n_heads, theta=CFG.rope_theta, eps=CFG.rms_eps)
+    outr, scr, _, _ = ref.attention_prefill(
+        h, seq_len, *args, CFG.n_heads, CFG.rope_theta, CFG.rms_eps)
+    np.testing.assert_allclose(out, outr, rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(sc, scr, rtol=2e-4, atol=1e-6)

@@ -1,0 +1,149 @@
+"""L2 model equivalence: the serving decomposition (what Rust drives,
+artifact by artifact) must equal the monolithic reference forward pass.
+
+This is the contract the Rust coordinator relies on: if these pass, any
+numerics bug on the Rust side is in Rust, not in the artifacts.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, corpus, model  # noqa: F401
+from compile.kernels import ref
+
+CFG = configs.TINY
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, seed=2)
+
+
+def serve_prefill(params, tokens, precision="bf16"):
+    """Emulate the Rust prefill loop with the artifact functions (bf16)."""
+    T = len(tokens)
+    S = CFG.max_seq
+    padded = jnp.asarray(
+        np.pad(tokens, (0, S - T)), jnp.int32)
+    h = model.embed(padded, params["emb"])
+    caches = []
+    for layer in params["layers"]:
+        h_resid, moe_in, probs, scores, k, v = model.attn_prefill(
+            h, jnp.asarray([T], jnp.int32), layer["ln1"], layer["wq"],
+            layer["wk"], layer["wv"], layer["wo"], layer["ln2"], layer["wg"],
+            cfg=CFG)
+        # Rust-side routing: top-k per token, renormalized; dispatch to
+        # experts; weighted accumulate.
+        w = np.asarray(model.topk_mask(probs, CFG.top_k))
+        y = np.zeros((S, CFG.d_model), np.float32)
+        for e in range(CFG.n_experts):
+            rows = np.flatnonzero(w[:T, e] > 0)
+            if len(rows) == 0:
+                continue
+            x_e = np.asarray(moe_in)[rows]
+            out_e = np.asarray(model.expert_ffn_dense(
+                jnp.asarray(x_e), layer["w1"][e], layer["w3"][e],
+                layer["w2"][e]))
+            y[rows] += w[rows, e][:, None] * out_e
+        h = h_resid + jnp.asarray(y)
+        caches.append((np.asarray(k)[:T], np.asarray(v)[:T]))
+    logits = model.finalize(h, params["ln_f"], params["emb"], cfg=CFG)
+    return np.asarray(logits)[:T], caches
+
+
+def test_serving_prefill_equals_forward_full(params):
+    rng = np.random.default_rng(0)
+    tokens = rng.integers(0, CFG.vocab, size=9).astype(np.int32)
+    logits_serve, _ = serve_prefill(params, tokens)
+    logits_full = np.asarray(
+        model.forward_full(params, jnp.asarray(tokens), CFG))
+    np.testing.assert_allclose(logits_serve, logits_full, rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_serving_decode_equals_forward_full(params):
+    """Prefill T tokens then decode one more; logits for position T must
+    match a full forward over T+1 tokens."""
+    rng = np.random.default_rng(1)
+    T = 7
+    tokens = rng.integers(0, CFG.vocab, size=T + 1).astype(np.int32)
+    _, caches = serve_prefill(params, tokens[:T])
+
+    # decode step for token T
+    C = CFG.max_cache
+    h = model.embed(jnp.asarray(tokens[T:T + 1], jnp.int32), params["emb"])
+    for li, layer in enumerate(params["layers"]):
+        kc = np.zeros((C, CFG.n_heads, CFG.head_dim), np.float32)
+        vc = np.zeros_like(kc)
+        kc[:T], vc[:T] = caches[li]
+        h_resid, moe_in, probs, k_new, v_new = model.attn_decode(
+            h, jnp.asarray(kc), jnp.asarray(vc),
+            jnp.asarray([T], jnp.int32), layer["ln1"], layer["wq"],
+            layer["wk"], layer["wv"], layer["wo"], layer["ln2"], layer["wg"],
+            cfg=CFG)
+        w = np.asarray(model.topk_mask(probs, CFG.top_k))[0]
+        y = np.zeros((1, CFG.d_model), np.float32)
+        for e in np.flatnonzero(w > 0):
+            out_e = np.asarray(model.expert_ffn_dense(
+                moe_in, layer["w1"][e], layer["w3"][e], layer["w2"][e]))
+            y += w[e] * out_e
+        h = h_resid + jnp.asarray(y)
+    logits_dec = np.asarray(
+        model.finalize(h, params["ln_f"], params["emb"], cfg=CFG))[0]
+
+    logits_full = np.asarray(
+        model.forward_full(params, jnp.asarray(tokens), CFG))[T]
+    np.testing.assert_allclose(logits_dec, logits_full, rtol=3e-4, atol=3e-4)
+
+
+def test_gate_probe_predicts_next_layer(params):
+    """Eq. 6: layer-l hidden through layer-(l+1)'s gate approximates the
+    true layer-(l+1) routing better than chance (top-k overlap)."""
+    rng = np.random.default_rng(3)
+    tokens = jnp.asarray(rng.integers(0, CFG.vocab, size=12), jnp.int32)
+    _, hiddens = model.forward_full(params, tokens, CFG, collect_hidden=True)
+    hits, total = 0, 0
+    for l in range(CFG.n_layers - 1):
+        nxt = params["layers"][l + 1]
+        pred = np.asarray(model.gate_probe(
+            hiddens[l], nxt["ln2"], nxt["wg"], cfg=CFG))
+        # true gate input: residual stream right before layer l+1's MoE —
+        # approximated here by the post-layer-(l) hidden + attention of
+        # layer l+1.  We check rank correlation of top-1 instead of exact.
+        out, _, _, _ = ref.attention_prefill(
+            hiddens[l], jnp.int32(12), nxt["ln1"], nxt["wq"], nxt["wk"],
+            nxt["wv"], nxt["wo"], CFG.n_heads, CFG.rope_theta, CFG.rms_eps)
+        h2 = hiddens[l] + out
+        true = np.asarray(ref.gate_probs(
+            ref.rms_norm(h2, nxt["ln2"], CFG.rms_eps), nxt["wg"]))
+        hits += (pred.argmax(-1) == true.argmax(-1)).sum()
+        total += pred.shape[0]
+    assert hits / total > 1.5 / CFG.n_experts  # well above chance
+
+
+def test_eval_suite_items_are_consistent():
+    suites = corpus.build_suites(seed=7, n_items=10, max_prompt=40)
+    for name, items in suites.items():
+        assert len(items) == 10
+        for it in items:
+            # fits the serving models' prompt bucket + decode budget
+            assert len(it.prompt) <= configs.MIXTRAL_MINI.max_seq
+            assert len(it.prompt) + len(it.answer) <= configs.MIXTRAL_MINI.max_cache
+            assert it.prompt[0] == corpus.BOS
+            assert all(0 <= t < corpus.VOCAB for t in it.prompt + it.answer)
+    # repeat-suite answers really continue the periodic motif
+    it = suites["suite_repeat"][0]
+    body = it.prompt[2:] + it.answer
+    # find the period: smallest p with body[i] == body[i % p]
+    period = next(
+        p for p in range(1, 5)
+        if all(body[i] == body[i % p] for i in range(len(body)))
+    )
+    assert period >= 1
+    # succ-suite answers continue the ring chain
+    it = suites["suite_succ"][0]
+    chain = it.prompt[2:] + it.answer
+    step = (chain[1] - chain[0]) % corpus.RING_N
+    for a, b in zip(chain, chain[1:]):
+        assert (b - a) % corpus.RING_N == step % corpus.RING_N

@@ -1,0 +1,125 @@
+"""Quantization kernels vs reference: pack/unpack, round-trip error bounds.
+
+Hypothesis sweeps shapes, bit-widths and group sizes; the Rust quantizer
+(rust/src/quant) is tested against the same golden vectors emitted by
+``test_golden_vectors`` below (kept in sync by construction: both sides
+implement the scheme documented in kernels/ref.py).
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import quantize as qk
+
+BITS = (8, 4, 2)
+
+
+def rand_w(rng, K, N, scale=0.5):
+    return jnp.asarray(rng.normal(0, scale, (K, N)).astype(np.float32))
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("group", (32, 64))
+def test_pack_unpack_roundtrip_exact(bits, group):
+    rng = np.random.default_rng(bits * 100 + group)
+    q = jnp.asarray(
+        rng.integers(*ref.quant_range(bits), endpoint=True, size=(64, 48)),
+        dtype=jnp.int32)
+    words = ref.pack_words(q, bits)
+    assert words.dtype == jnp.uint32
+    assert words.shape == (64 * bits // 32, 48)
+    back = ref.unpack_words(words, bits)
+    assert jnp.array_equal(back, q)
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_kernel_matches_ref(bits):
+    rng = np.random.default_rng(bits)
+    w = rand_w(rng, 64, 96)
+    words_k, scales_k = qk.quantize(w, bits, 32)
+    words_r, scales_r = ref.quantize_packed(w, bits, 32)
+    assert jnp.array_equal(words_k, words_r)
+    np.testing.assert_allclose(scales_k, scales_r, rtol=1e-6)
+    deq_k = qk.dequantize(words_k, scales_k, bits, 32)
+    deq_r = ref.dequantize_packed(words_r, scales_r, bits, 32)
+    np.testing.assert_allclose(deq_k, deq_r, rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("bits,bound_steps", [(8, 127), (4, 7), (2, 1)])
+def test_roundtrip_error_bound(bits, bound_steps):
+    """|w - dq(q(w))| <= scale/2 per element, scale = group_max/half_range."""
+    rng = np.random.default_rng(7)
+    w = rand_w(rng, 128, 64)
+    q, s = ref.quantize_groupwise(w, bits, 32)
+    deq = ref.dequantize_groupwise(q, s, 32)
+    err = np.abs(np.asarray(deq - w))
+    s_full = np.repeat(np.asarray(s), 32, axis=0)
+    assert np.all(err <= 0.5 * s_full + 1e-7)
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_monotone_error_in_bits(bits):
+    """Fewer bits => strictly more (or equal) round-trip error."""
+    rng = np.random.default_rng(11)
+    w = rand_w(rng, 64, 64)
+    errs = {}
+    for b in BITS:
+        _, s = ref.quantize_groupwise(w, b, 32)
+        deq = ref.dequantize_groupwise(*ref.quantize_groupwise(w, b, 32), 32)
+        errs[b] = float(jnp.mean(jnp.abs(deq - w)))
+    assert errs[2] > errs[4] > errs[8]
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bits=st.sampled_from(BITS),
+    kg=st.integers(1, 4),     # K = kg * 32
+    n=st.integers(1, 6),      # N = 16 * n
+    scale=st.floats(1e-3, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_roundtrip(bits, kg, n, scale, seed):
+    rng = np.random.default_rng(seed)
+    K, N = 32 * kg, 16 * n
+    w = rand_w(rng, K, N, scale)
+    words, s = ref.quantize_packed(w, bits, 32)
+    assert words.shape == (K * bits // 32, N)
+    assert s.shape == (K // 32, N)
+    deq = ref.dequantize_packed(words, s, bits, 32)
+    # error bounded by half a quantization step everywhere
+    s_full = np.repeat(np.asarray(s), 32, axis=0)
+    assert np.all(np.abs(np.asarray(deq - w)) <= 0.5 * s_full + 1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(bits=st.sampled_from(BITS), seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_kernel_vs_ref(bits, seed):
+    rng = np.random.default_rng(seed)
+    w = rand_w(rng, 64, 32)
+    wk, sk = qk.quantize(w, bits, 32)
+    wr, sr = ref.quantize_packed(w, bits, 32)
+    assert jnp.array_equal(wk, wr)
+    np.testing.assert_allclose(sk, sr, rtol=1e-6)
+
+
+def test_golden_vectors(tmp_path):
+    """Emit golden pack vectors; the Rust side hard-codes the same case."""
+    w = jnp.asarray(np.arange(-16, 16, dtype=np.float32).reshape(32, 1) / 8.0)
+    words, scales = ref.quantize_packed(w, 4, 32)
+    out = {
+        "w_first": float(w[0, 0]),
+        "words": np.asarray(words).astype(np.int64).ravel().tolist(),
+        "scales": np.asarray(scales).ravel().tolist(),
+    }
+    # scale = max|w|/7; q[0] = round(-2.0/scale) clipped to [-8, 7]
+    s = float(scales[0, 0])
+    assert abs(s - 2.0 / 7.0) < 1e-6
+    q0 = ref.unpack_words(words, 4)[0, 0]
+    assert int(q0) == -7  # round(-2.0 / (2/7)) = -7
+    (tmp_path / "golden.json").write_text(json.dumps(out))

@@ -1,0 +1,57 @@
+"""Router/gate kernel vs reference; top-k mask semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import configs, model
+from compile.kernels import ref
+from compile.kernels import router as router_k
+
+CFG = configs.TINY
+
+
+def test_gate_matches_ref():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (5, CFG.d_model)).astype(np.float32))
+    ln = jnp.asarray(rng.normal(1, 0.1, (CFG.d_model,)).astype(np.float32))
+    wg = jnp.asarray(
+        rng.normal(0, 0.1, (CFG.d_model, CFG.n_experts)).astype(np.float32))
+    probs = router_k.gate(x, ln, wg, eps=CFG.rms_eps)
+    expected = ref.gate_probs(ref.rms_norm(x, ln, CFG.rms_eps), wg)
+    np.testing.assert_allclose(probs, expected, rtol=1e-5, atol=1e-6)
+
+
+def test_gate_rows_are_distributions():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(0, 3, (9, CFG.d_model)).astype(np.float32))
+    ln = jnp.ones((CFG.d_model,), jnp.float32)
+    wg = jnp.asarray(
+        rng.normal(0, 0.5, (CFG.d_model, CFG.n_experts)).astype(np.float32))
+    probs = np.asarray(router_k.gate(x, ln, wg, eps=CFG.rms_eps))
+    assert np.all(probs >= 0)
+    np.testing.assert_allclose(probs.sum(axis=-1), 1.0, rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(1, 4), seed=st.integers(0, 2**31 - 1))
+def test_topk_mask_properties(k, seed):
+    rng = np.random.default_rng(seed)
+    probs = jnp.asarray(rng.dirichlet(np.ones(8), size=6).astype(np.float32))
+    w = np.asarray(model.topk_mask(probs, k))
+    # exactly k non-zeros per row, normalized, and they are the k largest
+    assert np.all((w > 0).sum(axis=-1) == k)
+    np.testing.assert_allclose(w.sum(axis=-1), 1.0, rtol=1e-5)
+    for row_w, row_p in zip(w, np.asarray(probs)):
+        chosen = set(np.flatnonzero(row_w > 0))
+        top = set(np.argsort(-row_p, kind="stable")[:k])
+        assert chosen == top
+
+
+def test_topk_mask_renormalizes_selected():
+    probs = jnp.asarray([[0.5, 0.3, 0.1, 0.1]], jnp.float32)
+    w = np.asarray(model.topk_mask(probs, 2))[0]
+    np.testing.assert_allclose(w[0], 0.5 / 0.8, rtol=1e-5)
+    np.testing.assert_allclose(w[1], 0.3 / 0.8, rtol=1e-5)
+    assert w[2] == 0 and w[3] == 0

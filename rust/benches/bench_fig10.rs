@@ -1,0 +1,83 @@
+//! End-to-end bench regenerating the Fig.-10 comparison: per-system
+//! request latency (virtual TTFT/TPOT at paper scale) plus the host-side
+//! wall cost of the coordinator+numerics per request.
+//!
+//! Skips politely if `make artifacts` has not been run.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use dymoe::baselines::{AccelerateStatic, Fiddler, MixtralOffloading, MoeInfinity};
+use dymoe::config::{LowMode, PolicyConfig, SystemConfig};
+use dymoe::coordinator::engine::Engine;
+use dymoe::coordinator::strategy::{DyMoEStrategy, Strategy};
+use dymoe::model::assets::ModelAssets;
+use dymoe::quant::Precision;
+use dymoe::workload::TraceGen;
+
+fn systems(m: &dymoe::model::manifest::MiniModel) -> Vec<(&'static str, Box<dyn Strategy>)> {
+    vec![
+        (
+            "DyMoE(4/0)",
+            Box::new(DyMoEStrategy::new(PolicyConfig {
+                retention: 0.75,
+                low_mode: LowMode::Skip,
+                ..Default::default()
+            })),
+        ),
+        (
+            "DyMoE(4/2)",
+            Box::new(DyMoEStrategy::new(PolicyConfig {
+                retention: 0.75,
+                low_mode: LowMode::Int2,
+                ..Default::default()
+            })),
+        ),
+        ("Accelerate(int4)", Box::new(AccelerateStatic::new(Precision::Int4))),
+        (
+            "MixtralOffloading(int4)",
+            Box::new(MixtralOffloading::new(Precision::Int4, m.top_k)),
+        ),
+        (
+            "MoE-Infinity(int4)",
+            Box::new(MoeInfinity::new(Precision::Int4, m.n_layers, m.n_experts, m.top_k)),
+        ),
+        ("Fiddler(bf16)", Box::new(Fiddler)),
+    ]
+}
+
+fn main() -> anyhow::Result<()> {
+    let Ok(assets) = ModelAssets::load("artifacts", "mixtral-mini") else {
+        eprintln!("artifacts missing; run `make artifacts` first");
+        return Ok(());
+    };
+    let assets = Arc::new(assets);
+    let m = assets.manifest.model.clone();
+    println!("### bench: fig10 end-to-end (mixtral-mini, 16 GB, 4 requests/system)");
+    println!(
+        "{:<26} {:>12} {:>12} {:>14} {:>12}",
+        "system", "TTFT (s)", "TPOT (s)", "wall/req (s)", "XLA execs"
+    );
+    println!("{}", "-".repeat(80));
+    for (name, strat) in systems(&m) {
+        let sys = SystemConfig::edge_preset("mixtral-mini", 16)?;
+        let mut e = Engine::new(&assets, sys, strat)?;
+        let mut gen = TraceGen::new(11, 80, 12);
+        let n = 4;
+        let wall = Instant::now();
+        let execs0 = e.exec.runtime.exec_count();
+        let (mut ttft, mut tpot) = (0.0, 0.0);
+        for _ in 0..n {
+            let r = gen.next_request();
+            let o = e.run(&r.prompt, r.max_new)?;
+            ttft += o.ttft / n as f64;
+            tpot += o.tpot() / n as f64;
+        }
+        let wall_per = wall.elapsed().as_secs_f64() / n as f64;
+        let execs = (e.exec.runtime.exec_count() - execs0) / n as u64;
+        println!(
+            "{name:<26} {ttft:>12.4} {tpot:>12.4} {wall_per:>14.3} {execs:>12}"
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Bench over the accuracy path that regenerates Fig. 3's arms: eval
+//! items/second through the serving engine for each pruning strategy and
+//! precision tier — this exercises the quantized expert artifacts (L1
+//! Pallas kernels) end to end on the `tiny` model.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use dymoe::baselines::Uniform;
+use dymoe::config::{LowMode, PolicyConfig, SystemConfig, GB};
+use dymoe::coordinator::engine::{Engine, EngineOptions};
+use dymoe::coordinator::scheduler::Selection;
+use dymoe::coordinator::strategy::{DyMoEStrategy, Strategy};
+use dymoe::eval::evaluate_suite;
+use dymoe::model::assets::ModelAssets;
+use dymoe::quant::Precision;
+use dymoe::workload::load_suites;
+
+fn arms() -> Vec<(&'static str, Box<dyn Strategy>)> {
+    let prune = |sel: Selection, depth: bool| -> Box<dyn Strategy> {
+        let mut policy = PolicyConfig {
+            retention: 0.75,
+            low_mode: LowMode::Skip,
+            high: Precision::Bf16,
+            depth_aware: depth,
+            ..Default::default()
+        };
+        policy.prefetch_enabled = false;
+        let mut s = DyMoEStrategy::new(policy);
+        s.selection = sel;
+        Box::new(s)
+    };
+    vec![
+        ("uniform bf16", Box::new(Uniform::new(Precision::Bf16))),
+        ("uniform int4", Box::new(Uniform::new(Precision::Int4))),
+        ("uniform int2", Box::new(Uniform::new(Precision::Int2))),
+        ("prune random/equal", prune(Selection::Random, false)),
+        ("prune token/depth", prune(Selection::Importance, true)),
+    ]
+}
+
+fn main() -> anyhow::Result<()> {
+    let Ok(assets) = ModelAssets::load("artifacts", "mixtral-mini") else {
+        eprintln!("artifacts missing; run `make artifacts` first");
+        return Ok(());
+    };
+    let assets = Arc::new(assets);
+    let Ok(suites) = load_suites("artifacts") else {
+        eprintln!("eval suites missing");
+        return Ok(());
+    };
+    println!("### bench: fig3 accuracy-path throughput (mixtral-mini, 4 items/suite)");
+    println!(
+        "{:<22} {:>14} {:>14} {:>12}",
+        "arm", "items/s", "ms/item", "token-acc"
+    );
+    println!("{}", "-".repeat(66));
+    for (name, strat) in arms() {
+        let mut sys = SystemConfig::edge_preset("mixtral-mini", 24)?;
+        sys.hardware.vram_bytes = 4096 * GB;
+        let mut e = Engine::with_options(
+            &assets,
+            sys,
+            strat,
+            EngineOptions { collect_logits: true, strict_precision: true, ..Default::default() },
+        )?;
+        let wall = Instant::now();
+        let mut items = 0usize;
+        let mut acc_sum = 0.0;
+        for suite in &suites {
+            let (score, _) = evaluate_suite(&mut e, suite, 4, None)?;
+            items += score.items;
+            acc_sum += score.token_acc;
+        }
+        let secs = wall.elapsed().as_secs_f64();
+        println!(
+            "{name:<22} {:>14.2} {:>14.2} {:>12.4}",
+            items as f64 / secs,
+            1e3 * secs / items as f64,
+            acc_sum / suites.len() as f64
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,108 @@
+//! Hot-path micro-benchmarks for the L3 coordinator (in-tree harness —
+//! criterion is not vendored in this offline build; see util::bench).
+//!
+//! These are the operations on the per-token critical path: routing,
+//! importance scoring, precision scheduling, cache operations, prefetch
+//! prediction, and the virtual-timeline bookkeeping.  Targets
+//! (EXPERIMENTS.md §Perf): every policy decision well under 5 us so L3
+//! never bottlenecks the simulated device.
+
+use dymoe::coordinator::cache::MixedPrecisionCache;
+use dymoe::coordinator::scheduler::{assign_precisions, layer_budget, Allocation, Selection};
+use dymoe::coordinator::{importance, prefetcher, top_k_route};
+use dymoe::memory::timeline::Channel;
+use dymoe::model::assets::ExpertKey;
+use dymoe::quant::{pack_words, quantize_groupwise, unpack_words, Precision};
+use dymoe::util::bench::{bench, header};
+use dymoe::util::rng::Rng;
+
+fn main() {
+    header("coordinator hot paths");
+    let mut rng = Rng::new(7);
+
+    // Routing: top-2 of 8 (Mixtral-shape) and top-8 of 128 (Qwen-shape).
+    let probs8: Vec<f32> = (0..8).map(|_| rng.f64() as f32).collect();
+    let probs128: Vec<f32> = (0..128).map(|_| rng.f64() as f32).collect();
+    println!("{}", bench("top_k_route 8->2", 60, || {
+        std::hint::black_box(top_k_route(&probs8, 2));
+    }).report());
+    println!("{}", bench("top_k_route 128->8", 60, || {
+        std::hint::black_box(top_k_route(&probs128, 8));
+    }).report());
+
+    // Decode importance + scheduling (per layer per token).
+    println!("{}", bench("decode importance + assign (M=8)", 60, || {
+        let imp = importance::decode_importance(&probs8);
+        let b = layer_budget(Allocation::DepthCosine, 4, 32, 0.75, 8);
+        std::hint::black_box(assign_precisions(
+            &imp, b, Selection::Importance, Precision::Int4, Precision::Int2,
+            &mut rng,
+        ));
+    }).report());
+
+    // Prefill importance over a full prompt.
+    let scores: Vec<f32> = (0..96).map(|_| rng.f64() as f32).collect();
+    let routes: Vec<Vec<(usize, f32)>> = (0..96)
+        .map(|_| {
+            let p: Vec<f32> = (0..8).map(|_| rng.f64() as f32).collect();
+            top_k_route(&p, 2)
+        })
+        .collect();
+    println!("{}", bench("prefill importance (96 tok, M=8)", 60, || {
+        std::hint::black_box(importance::prefill_importance(&scores, &routes, 8, 0.2));
+    }).report());
+
+    // Prefetch predictions.
+    let probe: Vec<f32> = (0..96 * 8).map(|_| rng.f64() as f32).collect();
+    println!("{}", bench("predict_decode (M=8, t=2)", 60, || {
+        std::hint::black_box(prefetcher::predict_decode(&probe[..8], 2));
+    }).report());
+    println!("{}", bench("predict_prefill (96 tok, M=8)", 60, || {
+        std::hint::black_box(prefetcher::predict_prefill(&probe, 96, 8, 2, 6));
+    }).report());
+
+    // Cache operations at a realistic working set (64 experts).
+    let mut cache = MixedPrecisionCache::new(64 * 90_000_000);
+    for l in 0..8 {
+        for e in 0..8 {
+            cache.insert(ExpertKey::new(l, e), Precision::Int4, 88_000_000, 0.0);
+        }
+    }
+    let mut i = 0usize;
+    println!("{}", bench("cache lookup (hit)", 60, || {
+        i = (i + 1) % 64;
+        std::hint::black_box(cache.lookup(ExpertKey::new(i / 8, i % 8), Precision::Int4));
+    }).report());
+    let mut j = 0usize;
+    println!("{}", bench("cache insert + evict", 60, || {
+        j += 1;
+        std::hint::black_box(cache.insert(
+            ExpertKey::new(j % 8, j % 8),
+            Precision::Int4,
+            88_000_000,
+            0.0,
+        ));
+    }).report());
+
+    // Timeline scheduling.
+    let mut ch = Channel::default();
+    let mut t = 0.0_f64;
+    println!("{}", bench("channel schedule", 60, || {
+        t += 1e-4;
+        std::hint::black_box(ch.schedule(t, 5e-5));
+    }).report());
+
+    // Quantization (runtime re-quantization path; d=256 x ffn=512 slab).
+    let w: Vec<f32> = (0..256 * 512).map(|_| rng.normal() as f32 * 0.3).collect();
+    println!("{}", bench("quantize_groupwise 256x512 int4", 200, || {
+        std::hint::black_box(quantize_groupwise(&w, 256, 512, 4, 32));
+    }).report());
+    let (q, _s) = quantize_groupwise(&w, 256, 512, 4, 32);
+    println!("{}", bench("pack_words 256x512 int4", 200, || {
+        std::hint::black_box(pack_words(&q, 256, 512, 4));
+    }).report());
+    let words = pack_words(&q, 256, 512, 4);
+    println!("{}", bench("unpack_words 256x512 int4", 200, || {
+        std::hint::black_box(unpack_words(&words, 32, 512, 4));
+    }).report());
+}

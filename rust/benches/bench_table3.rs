@@ -1,0 +1,87 @@
+//! End-to-end bench regenerating the Table-3 ablation arms (16 GB) with
+//! host-side wall cost per arm.  Skips politely without artifacts.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use dymoe::baselines::{LoadOnDemand, Uniform};
+use dymoe::config::{LowMode, PolicyConfig, SystemConfig};
+use dymoe::coordinator::engine::Engine;
+use dymoe::coordinator::strategy::{DyMoEStrategy, Strategy};
+use dymoe::model::assets::ModelAssets;
+use dymoe::quant::Precision;
+use dymoe::workload::TraceGen;
+
+fn arms() -> Vec<(&'static str, Box<dyn Strategy>)> {
+    vec![
+        ("1 LoadOnDemand", Box::new(LoadOnDemand::new(Precision::Int4))),
+        ("2 +Cache", Box::new(Uniform::new(Precision::Int4))),
+        (
+            "3 +Prefetch",
+            Box::new(DyMoEStrategy::new(PolicyConfig {
+                retention: 1.0,
+                dyquant_enabled: false,
+                ..Default::default()
+            })),
+        ),
+        (
+            "4 +Dyquant(4/2) no-pref",
+            Box::new(DyMoEStrategy::new(PolicyConfig {
+                retention: 0.75,
+                low_mode: LowMode::Int2,
+                prefetch_enabled: false,
+                ..Default::default()
+            })),
+        ),
+        (
+            "5 full (4/2)",
+            Box::new(DyMoEStrategy::new(PolicyConfig {
+                retention: 0.75,
+                low_mode: LowMode::Int2,
+                ..Default::default()
+            })),
+        ),
+        (
+            "6 full (4/0)",
+            Box::new(DyMoEStrategy::new(PolicyConfig {
+                retention: 0.75,
+                low_mode: LowMode::Skip,
+                ..Default::default()
+            })),
+        ),
+    ]
+}
+
+fn main() -> anyhow::Result<()> {
+    let Ok(assets) = ModelAssets::load("artifacts", "mixtral-mini") else {
+        eprintln!("artifacts missing; run `make artifacts` first");
+        return Ok(());
+    };
+    let assets = Arc::new(assets);
+    println!("### bench: table3 ablation (mixtral-mini @ 16 GB, 4 requests/arm)");
+    println!(
+        "{:<26} {:>12} {:>12} {:>12} {:>14}",
+        "configuration", "TTFT (s)", "TPOT (s)", "hit rate", "wall/req (s)"
+    );
+    println!("{}", "-".repeat(80));
+    for (name, strat) in arms() {
+        let sys = SystemConfig::edge_preset("mixtral-mini", 16)?;
+        let mut e = Engine::new(&assets, sys, strat)?;
+        let mut gen = TraceGen::new(11, 80, 12);
+        let n = 4;
+        let wall = Instant::now();
+        let (mut ttft, mut tpot) = (0.0, 0.0);
+        for _ in 0..n {
+            let r = gen.next_request();
+            let o = e.run(&r.prompt, r.max_new)?;
+            ttft += o.ttft / n as f64;
+            tpot += o.tpot() / n as f64;
+        }
+        println!(
+            "{name:<26} {ttft:>12.4} {tpot:>12.4} {:>12.3} {:>14.3}",
+            e.cache.stats.hit_rate(),
+            wall.elapsed().as_secs_f64() / n as f64
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,273 @@
+//! System configuration: hardware model, paper-scale model dims, policy
+//! knobs, and the 12/16/24 GB edge presets from the paper's evaluation.
+//!
+//! Latency methodology (DESIGN.md §6): numerics always run on the real
+//! mini-model via XLA/PJRT, while *time* is virtual — computed from this
+//! hardware model applied at **paper scale** (Mixtral-8x7B / Qwen3-30B-A3B
+//! dimensions), so TTFT/TPOT magnitudes are comparable to the paper's.
+//! The mini model has fewer layers/experts than the paper models, so the
+//! expert-cache budget is scaled by the grid ratio and per-layer times by
+//! the layer ratio (`layer_scale`).
+
+use crate::quant::Precision;
+use anyhow::{bail, Result};
+
+/// Paper-scale model dimensions used by the cost model.
+#[derive(Debug, Clone)]
+pub struct PaperModel {
+    pub name: &'static str,
+    pub d_model: usize,
+    pub d_ffn: usize,
+    pub n_layers: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub n_heads: usize,
+    /// Non-expert (attention/embed/router) bytes kept resident in VRAM.
+    pub non_expert_bytes: u64,
+}
+
+impl PaperModel {
+    /// Mixtral-8x7B: coarse-grained, 32 layers x 8 experts, top-2.
+    pub fn mixtral_8x7b() -> Self {
+        PaperModel {
+            name: "Mixtral-8x7B",
+            d_model: 4096,
+            d_ffn: 14336,
+            n_layers: 32,
+            n_experts: 8,
+            top_k: 2,
+            n_heads: 32,
+            non_expert_bytes: 3_200_000_000, // ~1.6B params bf16
+        }
+    }
+
+    /// Qwen3-30B-A3B: fine-grained, 48 layers x 128 experts, top-8.
+    pub fn qwen3_30b() -> Self {
+        PaperModel {
+            name: "Qwen3-30B-A3B",
+            d_model: 2048,
+            d_ffn: 768,
+            n_layers: 48,
+            n_experts: 128,
+            top_k: 8,
+            n_heads: 32,
+            non_expert_bytes: 3_000_000_000,
+        }
+    }
+
+    pub fn for_mini(mini_name: &str) -> Result<Self> {
+        Ok(match mini_name {
+            "mixtral-mini" | "tiny" => Self::mixtral_8x7b(),
+            "qwen-mini" => Self::qwen3_30b(),
+            _ => bail!("no paper-scale mapping for model {mini_name:?}"),
+        })
+    }
+
+    /// Parameters in one expert.
+    pub fn expert_params(&self) -> u64 {
+        (3 * self.d_model * self.d_ffn) as u64
+    }
+}
+
+/// Edge-device hardware model (RTX-3090-class GPU over PCIe Gen3 x16, as
+/// in the paper's testbed, with a software-limited VRAM cap).
+#[derive(Debug, Clone)]
+pub struct HardwareConfig {
+    pub vram_bytes: u64,
+    /// Effective host->device bandwidth (PCIe Gen3 x16 ~ 12.8 GB/s).
+    pub pcie_gbps: f64,
+    /// Per-transfer fixed latency (driver + DMA setup).
+    pub pcie_latency_s: f64,
+    /// SSD->host bandwidth for SSD-resident experts.
+    pub nvme_gbps: f64,
+    pub nvme_latency_s: f64,
+    /// Effective GPU compute throughput (bf16 FMA, achievable not peak).
+    pub gpu_tflops: f64,
+    /// GPU memory bandwidth (weights streamed from VRAM during compute).
+    pub hbm_gbps: f64,
+    /// Effective CPU compute throughput (Fiddler-style host execution).
+    pub cpu_gflops: f64,
+    /// Fixed kernel-launch / dispatch overhead per GPU op.
+    pub kernel_overhead_s: f64,
+}
+
+impl Default for HardwareConfig {
+    fn default() -> Self {
+        HardwareConfig {
+            vram_bytes: 24 * GB,
+            pcie_gbps: 12.8e9,
+            pcie_latency_s: 30e-6,
+            nvme_gbps: 3.2e9,
+            nvme_latency_s: 80e-6,
+            gpu_tflops: 35.0e12,
+            hbm_gbps: 936.0e9,
+            cpu_gflops: 150.0e9,
+            kernel_overhead_s: 8e-6,
+        }
+    }
+}
+
+pub const GB: u64 = 1_000_000_000;
+
+/// Where sub-critical experts land under DyMoE's dynamic quantization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LowMode {
+    /// "4/2": sub-critical experts run at Int2.
+    Int2,
+    /// "4/0": sub-critical experts are skipped entirely.
+    Skip,
+}
+
+impl LowMode {
+    pub fn precision(self) -> Precision {
+        match self {
+            LowMode::Int2 => Precision::Int2,
+            LowMode::Skip => Precision::Skip,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            LowMode::Int2 => "4/2",
+            LowMode::Skip => "4/0",
+        }
+    }
+}
+
+/// DyMoE policy knobs (paper §4).
+#[derive(Debug, Clone)]
+pub struct PolicyConfig {
+    /// Average expert retention ratio `lambda <= r <= 1` (Eq. 4); the
+    /// paper's default for the end-to-end runs is 0.75.
+    pub retention: f64,
+    /// High-precision tier for critical experts.
+    pub high: Precision,
+    /// Low tier for sub-critical experts (4/2 vs 4/0).
+    pub low_mode: LowMode,
+    /// Enable the mixed-precision LRU expert cache (§4.4.2).
+    pub cache_enabled: bool,
+    /// Enable the look-ahead prefetcher (§4.4.1).
+    pub prefetch_enabled: bool,
+    /// Enable dynamic quantization (importance-based tiering, §4.2-4.3).
+    /// When disabled every expert is fetched at `high`.
+    pub dyquant_enabled: bool,
+    /// Depth-aware scheduling (Eq. 4).  When disabled the retention ratio
+    /// is uniform across layers ("Equal" in Fig. 3).
+    pub depth_aware: bool,
+    /// How many predicted experts to prefetch per layer in decode.
+    /// 0 = auto (the model's top_k, which measures best: deeper prefetch
+    /// pollutes the cache with mispredictions).
+    pub prefetch_depth: usize,
+    /// Fraction of prompt tokens treated as heavy-hitters (Eq. 2 top-k).
+    pub heavy_hitter_frac: f64,
+    /// Experts are SSD-resident (vs host-RAM-resident).
+    pub ssd_resident: bool,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> Self {
+        PolicyConfig {
+            retention: 0.75,
+            high: Precision::Int4,
+            low_mode: LowMode::Skip,
+            cache_enabled: true,
+            prefetch_enabled: true,
+            dyquant_enabled: true,
+            depth_aware: true,
+            prefetch_depth: 0,
+            heavy_hitter_frac: 0.2,
+            ssd_resident: false,
+        }
+    }
+}
+
+impl PolicyConfig {
+    /// The floor `lambda` of the cosine schedule given the target average
+    /// retention (integrating Eq. 4 over layers gives mean = (1+lambda)/2).
+    pub fn lambda(&self) -> f64 {
+        (2.0 * self.retention - 1.0).clamp(0.0, 1.0)
+    }
+}
+
+/// Full system configuration for one engine instantiation.
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    pub hardware: HardwareConfig,
+    pub policy: PolicyConfig,
+    pub paper: PaperModel,
+    pub seed: u64,
+}
+
+impl SystemConfig {
+    /// The paper's three edge presets, scaled per DESIGN.md §6.
+    pub fn edge_preset(mini_name: &str, vram_gb: u64) -> Result<SystemConfig> {
+        let paper = PaperModel::for_mini(mini_name)?;
+        let mut hw = HardwareConfig::default();
+        hw.vram_bytes = vram_gb * GB;
+        Ok(SystemConfig { hardware: hw, policy: PolicyConfig::default(), paper, seed: 0 })
+    }
+
+    /// Expert-cache VRAM budget for a mini model with the given grid,
+    /// scaled by the mini/paper expert-grid ratio so the same *fraction*
+    /// of experts fits as on the paper's hardware.
+    pub fn expert_cache_bytes(&self, mini_layers: usize, mini_experts: usize) -> u64 {
+        let avail = self
+            .hardware
+            .vram_bytes
+            .saturating_sub(self.paper.non_expert_bytes);
+        let grid_ratio = (mini_layers * mini_experts) as f64
+            / (self.paper.n_layers * self.paper.n_experts) as f64;
+        (avail as f64 * grid_ratio) as u64
+    }
+
+    /// Per-layer time multiplier: the mini model has fewer layers than the
+    /// paper model; scaling per-layer durations keeps end-to-end TTFT/TPOT
+    /// magnitudes comparable to the paper's tables.
+    pub fn layer_scale(&self, mini_layers: usize) -> f64 {
+        self.paper.n_layers as f64 / mini_layers as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        let c = SystemConfig::edge_preset("mixtral-mini", 16).unwrap();
+        assert_eq!(c.hardware.vram_bytes, 16 * GB);
+        assert_eq!(c.paper.name, "Mixtral-8x7B");
+        let q = SystemConfig::edge_preset("qwen-mini", 12).unwrap();
+        assert_eq!(q.paper.n_experts, 128);
+        assert!(SystemConfig::edge_preset("nope", 12).is_err());
+    }
+
+    #[test]
+    fn cache_budget_scales_with_grid() {
+        let c = SystemConfig::edge_preset("mixtral-mini", 24).unwrap();
+        // mini grid 8x8=64 vs paper 32x8=256 -> ratio 0.25
+        let b = c.expert_cache_bytes(8, 8);
+        let avail = 24 * GB - c.paper.non_expert_bytes;
+        assert_eq!(b, (avail as f64 * 0.25) as u64);
+        // budget shrinks with VRAM
+        let c12 = SystemConfig::edge_preset("mixtral-mini", 12).unwrap();
+        assert!(c12.expert_cache_bytes(8, 8) < b);
+    }
+
+    #[test]
+    fn lambda_matches_mean_retention() {
+        let mut p = PolicyConfig::default();
+        p.retention = 0.75;
+        assert!((p.lambda() - 0.5).abs() < 1e-9);
+        p.retention = 1.0;
+        assert!((p.lambda() - 1.0).abs() < 1e-9);
+        p.retention = 0.5;
+        assert!((p.lambda() - 0.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn layer_scale_ratio() {
+        let c = SystemConfig::edge_preset("mixtral-mini", 16).unwrap();
+        assert!((c.layer_scale(8) - 4.0).abs() < 1e-9);
+    }
+}

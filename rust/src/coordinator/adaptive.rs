@@ -1,0 +1,126 @@
+//! Load-adaptive retention control — the paper's §6.3 deployment story
+//! ("users can dynamically adjust the retention ratio to trade a marginal
+//! amount of accuracy for significant latency reduction during peak
+//! loads, or increase r to prioritize quality") made operational.
+//!
+//! A small proportional controller maps an observed load signal (queue
+//! depth, or measured TPOT vs an SLO) to a retention ratio in
+//! `[r_min, r_max]`; the serving loop applies it between requests.
+
+use crate::config::PolicyConfig;
+
+/// Proportional controller for the retention ratio.
+#[derive(Debug, Clone)]
+pub struct RetentionController {
+    /// Quality-first retention under no load.
+    pub r_max: f64,
+    /// Latency-first floor under peak load.
+    pub r_min: f64,
+    /// Queue depth at which retention reaches the floor.
+    pub saturation_depth: usize,
+    /// Optional TPOT service-level objective (seconds); when measured
+    /// TPOT exceeds it, retention backs off proportionally.
+    pub tpot_slo: Option<f64>,
+    /// Exponential smoothing for the measured TPOT signal.
+    ema_tpot: f64,
+    alpha: f64,
+}
+
+impl RetentionController {
+    pub fn new(r_min: f64, r_max: f64, saturation_depth: usize) -> Self {
+        assert!(r_min <= r_max && r_min >= 0.0 && r_max <= 1.0);
+        RetentionController {
+            r_max,
+            r_min,
+            saturation_depth: saturation_depth.max(1),
+            tpot_slo: None,
+            ema_tpot: 0.0,
+            alpha: 0.3,
+        }
+    }
+
+    pub fn with_tpot_slo(mut self, slo: f64) -> Self {
+        self.tpot_slo = Some(slo);
+        self
+    }
+
+    /// Record a completed request's TPOT.
+    pub fn observe_tpot(&mut self, tpot: f64) {
+        self.ema_tpot = if self.ema_tpot == 0.0 {
+            tpot
+        } else {
+            self.alpha * tpot + (1.0 - self.alpha) * self.ema_tpot
+        };
+    }
+
+    /// Retention ratio for the next request given the current queue depth.
+    pub fn retention(&self, queue_depth: usize) -> f64 {
+        // queue pressure: linear from r_max at empty to r_min at saturation
+        let q = (queue_depth as f64 / self.saturation_depth as f64).min(1.0);
+        let mut r = self.r_max - q * (self.r_max - self.r_min);
+        // SLO pressure: if smoothed TPOT exceeds the objective, back off
+        // proportionally to the violation (up to the floor).
+        if let (Some(slo), true) = (self.tpot_slo, self.ema_tpot > 0.0) {
+            if self.ema_tpot > slo {
+                let viol = ((self.ema_tpot / slo) - 1.0).min(1.0);
+                r -= viol * (r - self.r_min);
+            }
+        }
+        r.clamp(self.r_min, self.r_max)
+    }
+
+    /// Apply the controller to a policy for the next request.
+    pub fn apply(&self, policy: &mut PolicyConfig, queue_depth: usize) {
+        policy.retention = self.retention(queue_depth);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_uses_quality_retention() {
+        let c = RetentionController::new(0.5, 0.9, 8);
+        assert!((c.retention(0) - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn saturation_hits_floor() {
+        let c = RetentionController::new(0.5, 0.9, 8);
+        assert!((c.retention(8) - 0.5).abs() < 1e-12);
+        assert!((c.retention(100) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn retention_monotone_in_queue_depth() {
+        let c = RetentionController::new(0.6, 1.0, 10);
+        let mut prev = f64::INFINITY;
+        for q in 0..15 {
+            let r = c.retention(q);
+            assert!(r <= prev + 1e-12);
+            assert!((0.6..=1.0).contains(&r));
+            prev = r;
+        }
+    }
+
+    #[test]
+    fn slo_violation_backs_off() {
+        let mut c = RetentionController::new(0.5, 0.9, 8).with_tpot_slo(0.05);
+        c.observe_tpot(0.10); // 2x over SLO
+        assert!(c.retention(0) < 0.9);
+        assert!(c.retention(0) >= 0.5);
+        // healthy TPOT restores quality-first retention
+        let mut h = RetentionController::new(0.5, 0.9, 8).with_tpot_slo(0.05);
+        h.observe_tpot(0.01);
+        assert!((h.retention(0) - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn apply_updates_policy() {
+        let c = RetentionController::new(0.5, 1.0, 4);
+        let mut p = PolicyConfig::default();
+        c.apply(&mut p, 2);
+        assert!((p.retention - 0.75).abs() < 1e-12);
+    }
+}

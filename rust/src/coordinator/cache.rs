@@ -1,0 +1,455 @@
+//! Mixed-precision expert cache (paper §4.4.2): an LRU over expert slots
+//! extended with three precision rules:
+//!
+//! 1. **No duplication** — one precision per expert, ever.
+//! 2. **Precision promotion** — a high-precision request over a cached
+//!    low-precision entry is a miss; the high copy replaces the low one.
+//! 3. **Conservative reuse** — a low-precision request over a cached
+//!    high-precision entry is served from the high copy (no I/O, no
+//!    accuracy loss).
+//!
+//! Entries carry a `ready_at` virtual time (transfer completion) so the
+//! engine can overlap prefetched loads with compute; an entry may be hit
+//! before its bytes "arrive", in which case the dependent compute simply
+//! waits until `ready_at` on the timeline.
+
+use std::collections::HashMap;
+
+use crate::memory::VramBudget;
+use crate::model::assets::ExpertKey;
+use crate::quant::Precision;
+
+#[derive(Debug, Clone)]
+struct Entry {
+    prec: Precision,
+    bytes: u64,
+    ready_at: f64,
+    last_use: u64,
+    /// Entries belonging to the layer currently executing are pinned so a
+    /// burst of prefetch inserts cannot evict weights mid-use.
+    pinned: bool,
+    /// Segment level for the scan-resistant (SLRU) mode: 0 = probation
+    /// (fresh inserts), 1 = protected (re-referenced).  Victims are chosen
+    /// by (segment asc, last_use asc), so a one-shot layer scan (prefill)
+    /// churns probation while the re-referenced working set survives.
+    /// Always 0 in plain-LRU mode.
+    segment: u32,
+}
+
+/// Result of a cache lookup.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Lookup {
+    /// Served from cache at `prec` (>= requested), usable at `ready_at`.
+    Hit { prec: Precision, ready_at: f64 },
+    /// Not cached (or cached below the requested precision).
+    Miss {
+        /// Promotion miss: a lower-precision copy exists and must be
+        /// replaced (rule 2).
+        promotes: bool,
+    },
+}
+
+/// Cache statistics (reported by every experiment).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub promotions: u64,
+    pub conservative_reuses: u64,
+    pub evictions: u64,
+    pub inserted_bytes: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// The mixed-precision LRU expert cache.
+pub struct MixedPrecisionCache {
+    budget: VramBudget,
+    map: HashMap<ExpertKey, Entry>,
+    tick: u64,
+    /// Scan-resistant (segmented-LRU) mode: hits promote entries into a
+    /// protected segment capped at [`PROTECTED_FRACTION`] of capacity.
+    scan_resistant: bool,
+    protected_bytes: u64,
+    pub stats: CacheStats,
+}
+
+/// Fraction of capacity the protected SLRU segment may occupy.
+pub const PROTECTED_FRACTION: f64 = 0.8;
+
+impl MixedPrecisionCache {
+    pub fn new(capacity_bytes: u64) -> Self {
+        MixedPrecisionCache {
+            budget: VramBudget::new(capacity_bytes),
+            map: HashMap::new(),
+            tick: 0,
+            scan_resistant: false,
+            protected_bytes: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Enable/disable segmented-LRU scan resistance (DyMoE's cache mode;
+    /// the baselines use the plain LRU of their published systems).
+    pub fn set_scan_resistant(&mut self, on: bool) {
+        self.scan_resistant = on;
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.budget.capacity()
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.budget.used()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn contains(&self, key: ExpertKey) -> Option<Precision> {
+        self.map.get(&key).map(|e| e.prec)
+    }
+
+    fn bump(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// Probe without counting stats or touching LRU order (prefetcher use).
+    pub fn peek(&self, key: ExpertKey, wanted: Precision) -> bool {
+        self.map
+            .get(&key)
+            .map(|e| e.prec.satisfies(wanted))
+            .unwrap_or(false)
+    }
+
+    /// Look up `key` for a request at `wanted` precision, applying the
+    /// three rules.  Hits refresh LRU order (and in scan-resistant mode
+    /// promote the entry into the protected segment).
+    pub fn lookup(&mut self, key: ExpertKey, wanted: Precision) -> Lookup {
+        let tick = self.bump();
+        match self.map.get_mut(&key) {
+            Some(e) if e.prec.satisfies(wanted) => {
+                e.last_use = tick;
+                self.stats.hits += 1;
+                if e.prec > wanted {
+                    self.stats.conservative_reuses += 1; // rule 3
+                }
+                let result = Lookup::Hit { prec: e.prec, ready_at: e.ready_at };
+                if self.scan_resistant {
+                    self.promote(key);
+                }
+                result
+            }
+            Some(_) => {
+                self.stats.misses += 1;
+                self.stats.promotions += 1; // rule 2
+                Lookup::Miss { promotes: true }
+            }
+            None => {
+                self.stats.misses += 1;
+                Lookup::Miss { promotes: false }
+            }
+        }
+    }
+
+    /// Promote a hit entry into the protected segment, demoting the
+    /// protected LRU while the segment exceeds its budget.
+    fn promote(&mut self, key: ExpertKey) {
+        let cap = (self.budget.capacity() as f64 * PROTECTED_FRACTION) as u64;
+        let Some(e) = self.map.get_mut(&key) else { return };
+        if e.segment == 1 || e.bytes > cap {
+            return;
+        }
+        e.segment = 1;
+        self.protected_bytes += e.bytes;
+        while self.protected_bytes > cap {
+            let victim = self
+                .map
+                .iter()
+                .filter(|(k, e)| e.segment == 1 && **k != key)
+                .min_by_key(|(k, e)| (e.last_use, k.layer, k.expert))
+                .map(|(k, _)| *k);
+            match victim {
+                Some(v) => {
+                    let e = self.map.get_mut(&v).unwrap();
+                    e.segment = 0;
+                    self.protected_bytes -= e.bytes;
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Tighten an entry's availability time (late-prefetch upgraded to a
+    /// demand fetch that completes earlier).
+    pub fn update_ready(&mut self, key: ExpertKey, ready_at: f64) {
+        if let Some(e) = self.map.get_mut(&key) {
+            e.ready_at = e.ready_at.min(ready_at);
+        }
+    }
+
+    /// Pin / unpin an expert (current layer's working set or permanent
+    /// warm residency).
+    pub fn set_pinned(&mut self, key: ExpertKey, pinned: bool) {
+        if let Some(e) = self.map.get_mut(&key) {
+            e.pinned = pinned;
+        }
+    }
+
+    pub fn is_pinned(&self, key: ExpertKey) -> bool {
+        self.map.get(&key).map(|e| e.pinned).unwrap_or(false)
+    }
+
+    pub fn unpin_all(&mut self) {
+        for e in self.map.values_mut() {
+            e.pinned = false;
+        }
+    }
+
+    /// Insert (or replace — rule 1/2) `key` at `prec`.  Evicts LRU entries
+    /// until the new entry fits.  Returns the evicted keys; returns `None`
+    /// if the entry cannot fit at all (it is then used transiently without
+    /// caching, like a streaming buffer).
+    pub fn insert(
+        &mut self,
+        key: ExpertKey,
+        prec: Precision,
+        bytes: u64,
+        ready_at: f64,
+    ) -> Option<Vec<ExpertKey>> {
+        let tick = self.bump();
+        // Rule 1: no duplication — at most one copy per expert; an
+        // existing copy that already satisfies the new precision stays.
+        if let Some(e) = self.map.get(&key) {
+            if e.prec.satisfies(prec) {
+                return Some(vec![]);
+            }
+        }
+        // Feasibility first: `None` must leave the cache unchanged (the
+        // caller streams transiently).  Reclaimable = the replaced copy +
+        // every unpinned entry.
+        let replaced = self.map.get(&key).map(|e| e.bytes).unwrap_or(0);
+        let reclaimable: u64 = self
+            .map
+            .iter()
+            .filter(|(k, e)| !e.pinned && **k != key)
+            .map(|(_, e)| e.bytes)
+            .sum();
+        if bytes > self.budget.free() + replaced + reclaimable {
+            return None;
+        }
+        if replaced > 0 {
+            self.remove_entry(key); // rule 1 / promotion replacement
+            self.stats.evictions += 1;
+        }
+        let mut evicted = Vec::new();
+        while !self.budget.fits(bytes) {
+            let victim = self.lru_victim().expect("feasible by construction");
+            self.remove_entry(victim);
+            self.stats.evictions += 1;
+            evicted.push(victim);
+        }
+        self.budget.alloc(bytes).expect("fits by construction");
+        self.stats.inserted_bytes += bytes;
+        // Fresh inserts land in the probation segment (0).
+        self.map.insert(
+            key,
+            Entry { prec, bytes, ready_at, last_use: tick, pinned: false, segment: 0 },
+        );
+        Some(evicted)
+    }
+
+    fn remove_entry(&mut self, key: ExpertKey) {
+        if let Some(e) = self.map.remove(&key) {
+            self.budget.release(e.bytes);
+            if e.segment == 1 {
+                self.protected_bytes -= e.bytes;
+            }
+        }
+    }
+
+    fn lru_victim(&self) -> Option<ExpertKey> {
+        self.map
+            .iter()
+            .filter(|(_, e)| !e.pinned)
+            .min_by_key(|(k, e)| (e.segment, e.last_use, k.layer, k.expert))
+            .map(|(k, _)| *k)
+    }
+
+    /// All cached keys (diagnostics).
+    pub fn keys(&self) -> Vec<ExpertKey> {
+        self.map.keys().copied().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k(l: usize, e: usize) -> ExpertKey {
+        ExpertKey::new(l, e)
+    }
+
+    #[test]
+    fn basic_hit_miss() {
+        let mut c = MixedPrecisionCache::new(100);
+        assert_eq!(c.lookup(k(0, 0), Precision::Int4), Lookup::Miss { promotes: false });
+        c.insert(k(0, 0), Precision::Int4, 40, 1.0).unwrap();
+        match c.lookup(k(0, 0), Precision::Int4) {
+            Lookup::Hit { prec, ready_at } => {
+                assert_eq!(prec, Precision::Int4);
+                assert_eq!(ready_at, 1.0);
+            }
+            _ => panic!("expected hit"),
+        }
+        assert_eq!(c.stats.hits, 1);
+        assert_eq!(c.stats.misses, 1);
+    }
+
+    #[test]
+    fn rule_conservative_reuse() {
+        let mut c = MixedPrecisionCache::new(100);
+        c.insert(k(0, 0), Precision::Int8, 40, 0.0).unwrap();
+        match c.lookup(k(0, 0), Precision::Int2) {
+            Lookup::Hit { prec, .. } => assert_eq!(prec, Precision::Int8),
+            _ => panic!("high-prec entry must serve low-prec request"),
+        }
+        assert_eq!(c.stats.conservative_reuses, 1);
+    }
+
+    #[test]
+    fn rule_promotion_is_miss_and_replaces() {
+        let mut c = MixedPrecisionCache::new(100);
+        c.insert(k(0, 0), Precision::Int2, 10, 0.0).unwrap();
+        assert_eq!(
+            c.lookup(k(0, 0), Precision::Int4),
+            Lookup::Miss { promotes: true }
+        );
+        c.insert(k(0, 0), Precision::Int4, 40, 2.0).unwrap();
+        assert_eq!(c.contains(k(0, 0)), Some(Precision::Int4));
+        assert_eq!(c.len(), 1); // rule 1: no duplication
+        assert_eq!(c.used_bytes(), 40);
+    }
+
+    #[test]
+    fn insert_keeps_higher_existing() {
+        let mut c = MixedPrecisionCache::new(100);
+        c.insert(k(0, 0), Precision::Int8, 50, 0.0).unwrap();
+        // inserting a lower precision must NOT downgrade the entry
+        c.insert(k(0, 0), Precision::Int2, 10, 1.0).unwrap();
+        assert_eq!(c.contains(k(0, 0)), Some(Precision::Int8));
+        assert_eq!(c.used_bytes(), 50);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut c = MixedPrecisionCache::new(100);
+        c.insert(k(0, 0), Precision::Int4, 40, 0.0).unwrap();
+        c.insert(k(0, 1), Precision::Int4, 40, 0.0).unwrap();
+        let _ = c.lookup(k(0, 0), Precision::Int4); // refresh 0
+        let ev = c.insert(k(0, 2), Precision::Int4, 40, 0.0).unwrap();
+        assert_eq!(ev, vec![k(0, 1)]); // least recently used
+        assert!(c.contains(k(0, 0)).is_some());
+    }
+
+    #[test]
+    fn pinned_entries_survive() {
+        let mut c = MixedPrecisionCache::new(80);
+        c.insert(k(0, 0), Precision::Int4, 40, 0.0).unwrap();
+        c.insert(k(0, 1), Precision::Int4, 40, 0.0).unwrap();
+        c.set_pinned(k(0, 0), true);
+        c.set_pinned(k(0, 1), true);
+        // nothing evictable -> transient use
+        assert!(c.insert(k(0, 2), Precision::Int4, 40, 0.0).is_none());
+        c.unpin_all();
+        assert!(c.insert(k(0, 2), Precision::Int4, 40, 0.0).is_some());
+    }
+
+    #[test]
+    fn oversized_entry_is_transient() {
+        let mut c = MixedPrecisionCache::new(30);
+        assert!(c.insert(k(0, 0), Precision::Bf16, 50, 0.0).is_none());
+        assert_eq!(c.len(), 0);
+    }
+}
+
+#[cfg(test)]
+mod slru_tests {
+    use super::*;
+
+    fn k(l: usize, e: usize) -> ExpertKey {
+        ExpertKey::new(l, e)
+    }
+
+    #[test]
+    fn scan_does_not_evict_protected_working_set() {
+        let mut c = MixedPrecisionCache::new(100);
+        c.set_scan_resistant(true);
+        // hot set: 2 entries, re-referenced -> protected
+        c.insert(k(0, 0), Precision::Int4, 40, 0.0).unwrap();
+        c.insert(k(0, 1), Precision::Int4, 40, 0.0).unwrap();
+        let _ = c.lookup(k(0, 0), Precision::Int4);
+        let _ = c.lookup(k(0, 1), Precision::Int4);
+        // one-shot scan of 10 other experts churns probation only
+        for e in 2..12 {
+            c.insert(k(1, e), Precision::Int4, 20, 0.0).unwrap();
+        }
+        assert!(c.contains(k(0, 0)).is_some(), "protected entry scanned out");
+        assert!(c.contains(k(0, 1)).is_some(), "protected entry scanned out");
+    }
+
+    #[test]
+    fn plain_lru_is_scanned_out() {
+        let mut c = MixedPrecisionCache::new(100);
+        c.insert(k(0, 0), Precision::Int4, 40, 0.0).unwrap();
+        let _ = c.lookup(k(0, 0), Precision::Int4);
+        for e in 2..12 {
+            c.insert(k(1, e), Precision::Int4, 20, 0.0).unwrap();
+        }
+        assert!(c.contains(k(0, 0)).is_none(), "plain LRU must scan out");
+    }
+
+    #[test]
+    fn protected_segment_bounded() {
+        let mut c = MixedPrecisionCache::new(100);
+        c.set_scan_resistant(true);
+        // promote more than PROTECTED_FRACTION worth: oldest demote back
+        for e in 0..5 {
+            c.insert(k(0, e), Precision::Int4, 20, 0.0).unwrap();
+            let _ = c.lookup(k(0, e), Precision::Int4);
+        }
+        assert!(c.protected_bytes <= 80);
+        // a fresh scan can still evict the demoted entries
+        let ev = c.insert(k(1, 0), Precision::Int4, 20, 0.0).unwrap();
+        assert!(!ev.is_empty());
+    }
+
+    #[test]
+    fn failed_insert_leaves_cache_unchanged() {
+        let mut c = MixedPrecisionCache::new(60);
+        c.insert(k(0, 0), Precision::Int2, 20, 0.0).unwrap();
+        c.set_pinned(k(0, 0), true);
+        c.insert(k(0, 1), Precision::Int2, 20, 0.0).unwrap();
+        c.set_pinned(k(0, 1), true);
+        // promotion replace that cannot fit: everything pinned
+        assert!(c.insert(k(0, 0), Precision::Bf16, 55, 0.0).is_none());
+        // the old copy must still be there
+        assert_eq!(c.contains(k(0, 0)), Some(Precision::Int2));
+        assert_eq!(c.len(), 2);
+    }
+}

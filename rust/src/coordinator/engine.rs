@@ -1,0 +1,685 @@
+//! The serving engine: drives the model artifact-by-artifact with real
+//! numerics while co-simulating time on the virtual timeline
+//! (DESIGN.md §6).  One engine = one model + one policy + one simulated
+//! edge device; requests run back-to-back (batch size 1, as in the
+//! paper's latency-sensitive edge scenario).
+//!
+//! Per layer the engine:
+//! 1. runs the attention half (artifact) and charges its roofline cost;
+//! 2. routes tokens top-k from the gate probabilities;
+//! 3. asks the [`Strategy`] for a [`LayerPlan`] (precision per expert);
+//! 4. resolves each routed expert's weights through the mixed-precision
+//!    cache — hits use the cached copy (conservative reuse may upgrade
+//!    fidelity), misses issue PCIe (and optionally NVMe) transfers;
+//! 5. executes experts in weight-arrival order on the GPU channel (or the
+//!    CPU channel for Fiddler-style fallback), accumulating the weighted,
+//!    renormalized expert mixture onto the residual stream;
+//! 6. runs the Eq.-6 gate probe and lets the strategy prefetch for the
+//!    next layer, overlapping transfers with subsequent compute.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::config::SystemConfig;
+use crate::costmodel::CostModel;
+use crate::memory::Timeline;
+use crate::model::assets::{ExpertKey, ModelAssets};
+use crate::model::executor::Executor;
+use crate::model::kv::KvCache;
+use crate::model::sampler;
+use crate::quant::Precision;
+
+use super::cache::{Lookup, MixedPrecisionCache};
+use super::prefetcher::PrefetchStats;
+use super::strategy::{LayerCtx, PrefetchCtx, Strategy};
+use super::{top_k_route, Phase, Route};
+
+/// Engine construction options.
+#[derive(Debug, Clone, Default)]
+pub struct EngineOptions {
+    /// Record timeline events (Fig.-1 pipeline visualisation).
+    pub record_timeline: bool,
+    /// Keep per-step logits in the output (needed by eval).
+    pub collect_logits: bool,
+    /// Keep per-layer prefill hidden states (Fig. 6).
+    pub collect_hidden: bool,
+    /// Execute experts at the *planned* precision even when the cache
+    /// holds a higher-fidelity copy (disables the accuracy side of the
+    /// conservative-reuse rule).  Accuracy experiments set this so that
+    /// e.g. a 4/2 policy really executes Int2 for sub-critical experts —
+    /// with ample VRAM the warm fill would otherwise serve everything
+    /// from high-precision copies and the tables would be degenerate.
+    pub strict_precision: bool,
+}
+
+/// Result of serving one request.
+#[derive(Debug, Clone)]
+pub struct RequestOutput {
+    /// Generated (or teacher-forced) tokens.
+    pub tokens: Vec<i32>,
+    /// Time to first token (s, virtual).
+    pub ttft: f64,
+    /// Completion time of every emitted token, relative to request start.
+    pub token_times: Vec<f64>,
+    /// Logits at every emitted position (when `collect_logits`).
+    pub logits_per_step: Vec<Vec<f32>>,
+    /// Per-layer prefill hidden states (when `collect_hidden`).
+    pub prefill_hidden: Vec<Vec<f32>>,
+    /// Virtual request start time.
+    pub start: f64,
+}
+
+impl RequestOutput {
+    /// Mean time per output token after the first (s); falls back to TTFT
+    /// when only one token was produced.
+    pub fn tpot(&self) -> f64 {
+        if self.token_times.len() <= 1 {
+            return self.ttft;
+        }
+        let last = *self.token_times.last().unwrap();
+        (last - self.token_times[0]) / (self.token_times.len() - 1) as f64
+    }
+}
+
+/// Aggregated engine counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineStats {
+    pub requests: u64,
+    pub transferred_bytes: u64,
+    pub expert_execs: u64,
+    pub skipped_experts: u64,
+    pub cpu_execs: u64,
+}
+
+struct ExpertExec {
+    key: ExpertKey,
+    /// Precision actually executed (cache may upgrade it).
+    exec_prec: Precision,
+    ready_at: f64,
+    on_cpu: bool,
+    token_idx: Vec<usize>,
+    weights: Vec<f32>,
+}
+
+/// The serving engine (one model, one policy, one simulated device).
+pub struct Engine {
+    pub exec: std::rc::Rc<Executor>,
+    pub assets: Arc<ModelAssets>,
+    pub sys: SystemConfig,
+    pub cost: CostModel,
+    pub timeline: Timeline,
+    pub cache: MixedPrecisionCache,
+    pub strategy: Box<dyn Strategy>,
+    pub opts: EngineOptions,
+    pub stats: EngineStats,
+    pub prefetch_stats: PrefetchStats,
+    /// Experts prefetched for the upcoming layer (usefulness accounting).
+    prefetched_for: HashMap<usize, Vec<usize>>,
+    /// Warm-residency keys pinned during prefill (phase-adaptive pinning:
+    /// the scan-resistant prefix matters for the prefill layer sweep; the
+    /// decode phase needs the slack for dynamic locality).
+    warm_pinned: Vec<ExpertKey>,
+}
+
+impl Engine {
+    pub fn new(
+        assets: &Arc<ModelAssets>,
+        sys: SystemConfig,
+        strategy: Box<dyn Strategy>,
+    ) -> Result<Engine> {
+        Engine::with_options(assets, sys, strategy, EngineOptions::default())
+    }
+
+    pub fn with_options(
+        assets: &Arc<ModelAssets>,
+        sys: SystemConfig,
+        strategy: Box<dyn Strategy>,
+        opts: EngineOptions,
+    ) -> Result<Engine> {
+        let exec = std::rc::Rc::new(Executor::new(assets.clone())?);
+        Engine::with_executor(assets, sys, strategy, opts, exec)
+    }
+
+    /// Build an engine over a shared executor (experiment sweeps reuse the
+    /// compiled artifacts and weight literals across configurations).
+    pub fn with_executor(
+        assets: &Arc<ModelAssets>,
+        sys: SystemConfig,
+        strategy: Box<dyn Strategy>,
+        opts: EngineOptions,
+        exec: std::rc::Rc<Executor>,
+    ) -> Result<Engine> {
+        let m = &assets.manifest.model;
+        let cost = CostModel::new(
+            sys.hardware.clone(),
+            sys.paper.clone(),
+            sys.layer_scale(m.n_layers),
+        );
+        let capacity = if strategy.uses_cache() {
+            sys.expert_cache_bytes(m.n_layers, m.n_experts)
+        } else {
+            0
+        };
+        let mut cache = MixedPrecisionCache::new(capacity);
+        cache.set_scan_resistant(strategy.scan_resistant_cache());
+        // Warm residency: model load happens before serving; not billed.
+        // An optional pinned fraction of the warm set survives eviction.
+        let mut warm_pinned = Vec::new();
+        if strategy.uses_cache() {
+            let pin_budget =
+                (capacity as f64 * strategy.pinned_fraction()) as u64;
+            for (key, prec) in strategy.warm_residency(m.n_layers, m.n_experts) {
+                let bytes = cost.expert_weight_bytes(prec) as u64;
+                if cache.used_bytes() + bytes > cache.capacity() {
+                    break;
+                }
+                let pin = cache.used_bytes() + bytes <= pin_budget;
+                cache.insert(key, prec, bytes, 0.0);
+                if pin {
+                    cache.set_pinned(key, true);
+                    warm_pinned.push(key);
+                }
+            }
+            // warm fill is not demand traffic
+            cache.stats = Default::default();
+        }
+        Ok(Engine {
+            exec,
+            assets: assets.clone(),
+            sys,
+            cost,
+            timeline: Timeline::new(opts.record_timeline),
+            cache,
+            strategy,
+            opts,
+            stats: EngineStats::default(),
+            prefetch_stats: PrefetchStats::default(),
+            prefetched_for: HashMap::new(),
+            warm_pinned,
+        })
+    }
+
+    pub fn model(&self) -> &crate::model::manifest::MiniModel {
+        &self.assets.manifest.model
+    }
+
+    /// Serve one request, sampling greedily.
+    pub fn run(&mut self, prompt: &[i32], max_new: usize) -> Result<RequestOutput> {
+        self.run_forced(prompt, max_new, None)
+    }
+
+    /// Serve one request; when `forced` is given, teacher-force those
+    /// tokens instead of sampling (eval: `logits_per_step[i]` then scores
+    /// `forced[i]`).
+    pub fn run_forced(
+        &mut self,
+        prompt: &[i32],
+        max_new: usize,
+        forced: Option<&[i32]>,
+    ) -> Result<RequestOutput> {
+        let m = self.model().clone();
+        ensure!(!prompt.is_empty(), "empty prompt");
+        ensure!(
+            prompt.len() <= m.max_seq,
+            "prompt length {} exceeds bucket {}",
+            prompt.len(),
+            m.max_seq
+        );
+        let n_new = forced.map(|f| f.len()).unwrap_or(max_new);
+        ensure!(
+            prompt.len() + n_new <= m.max_cache,
+            "prompt + generation exceeds KV capacity"
+        );
+        self.strategy.begin_request(Phase::Prefill);
+        // Phase-adaptive pinning: re-pin whatever of the warm resident set
+        // survived the previous decode phase (evicted entries re-stream on
+        // demand and re-enter the cache unpinned).
+        for key in self.warm_pinned.clone() {
+            self.cache.set_pinned(key, true);
+        }
+        self.prefetched_for.clear();
+        self.stats.requests += 1;
+
+        let start = self.timeline.gpu.free_at;
+        let mut kv = KvCache::new(m.n_layers, m.max_cache, m.n_heads, m.head_dim);
+        let mut out = RequestOutput {
+            tokens: Vec::new(),
+            ttft: 0.0,
+            token_times: Vec::new(),
+            logits_per_step: Vec::new(),
+            prefill_hidden: Vec::new(),
+            start,
+        };
+
+        // ---- Prefill ----
+        let seq_len = prompt.len();
+        let mut padded = prompt.to_vec();
+        padded.resize(m.max_seq, 0);
+        let mut h = self.exec.embed_seq(&padded)?;
+        let mut layer_ready = start;
+        for layer in 0..m.n_layers {
+            layer_ready = self
+                .layer_prefill(layer, &mut h, seq_len, &mut kv, layer_ready)
+                .with_context(|| format!("prefill layer {layer}"))?;
+            if self.opts.collect_hidden {
+                out.prefill_hidden.push(h.clone());
+            }
+        }
+        // First-token logits from the last valid position.
+        let d = m.d_model;
+        let h_last = &h[(seq_len - 1) * d..seq_len * d];
+        let logits = self.exec.finalize_one(h_last)?;
+        let t_first = self.timeline.gpu_compute(
+            self.timeline.gpu.free_at,
+            layer_ready,
+            self.cost.head(1, 1.0),
+            "finalize",
+        );
+        out.ttft = t_first - start;
+        out.token_times.push(out.ttft);
+        let first = forced
+            .and_then(|f| f.first().copied())
+            .unwrap_or_else(|| sampler::greedy(&logits) as i32);
+        out.tokens.push(first);
+        if self.opts.collect_logits {
+            out.logits_per_step.push(logits);
+        }
+
+        // ---- Decode ----
+        self.strategy.begin_request(Phase::Decode);
+        // Release the prefill pins: decode's working set is small and
+        // dynamic, so the whole cache becomes LRU slack.
+        for key in self.warm_pinned.clone() {
+            self.cache.set_pinned(key, false);
+        }
+        let mut token = first;
+        for step in 1..n_new {
+            let pos = seq_len + step - 1;
+            let mut hd = self.exec.embed_one(token)?;
+            let mut ready = self.timeline.gpu.free_at;
+            for layer in 0..m.n_layers {
+                ready = self
+                    .layer_decode(layer, &mut hd, &mut kv, pos, ready)
+                    .with_context(|| format!("decode layer {layer} step {step}"))?;
+            }
+            let logits = self.exec.finalize_one(&hd)?;
+            let t_tok = self.timeline.gpu_compute(
+                self.timeline.gpu.free_at,
+                ready,
+                self.cost.head(1, 1.0),
+                "finalize",
+            );
+            out.token_times.push(t_tok - start);
+            token = forced
+                .map(|f| f[step])
+                .unwrap_or_else(|| sampler::greedy(&logits) as i32);
+            out.tokens.push(token);
+            if self.opts.collect_logits {
+                out.logits_per_step.push(logits);
+            }
+        }
+        Ok(out)
+    }
+
+    // -----------------------------------------------------------------
+    // Layer execution
+    // -----------------------------------------------------------------
+
+    fn layer_prefill(
+        &mut self,
+        layer: usize,
+        h: &mut Vec<f32>,
+        seq_len: usize,
+        kv: &mut KvCache,
+        deps: f64,
+    ) -> Result<f64> {
+        let m = self.model().clone();
+        // Fused attention + Eq.-6 probe when the policy prefetches: one
+        // PJRT execution, and the prefetch is issued *before* this layer's
+        // expert compute so transfers overlap it (paper §4.4.1).
+        let want_probe = self.strategy.wants_probe() && layer + 1 < m.n_layers;
+        let (po, probe) = if want_probe {
+            let (po, probe) = self.exec.attn_prefill_probe(layer, layer + 1, h, seq_len)?;
+            (po, Some(probe))
+        } else {
+            (self.exec.attn_prefill(layer, h, seq_len)?, None)
+        };
+        let mut attn_cost = self.cost.attn_prefill(seq_len);
+        if want_probe {
+            attn_cost += self.cost.gate(seq_len);
+        }
+        let t_attn = self.timeline.gpu_compute(
+            self.timeline.gpu.free_at,
+            deps,
+            attn_cost,
+            &format!("attn_p L{layer}"),
+        );
+        kv.write_prefix(layer, seq_len, &po.k, &po.v)?;
+
+        if let Some(probe) = &probe {
+            self.issue_prefetch(layer + 1, probe, Phase::Prefill, seq_len);
+        }
+
+        // Route every valid token.
+        let routes: Vec<Route> = (0..seq_len)
+            .map(|t| {
+                top_k_route(
+                    &po.gate_probs[t * m.n_experts..(t + 1) * m.n_experts],
+                    m.top_k,
+                )
+            })
+            .collect();
+
+        let plan = self.strategy.plan(&LayerCtx {
+            layer,
+            n_layers: m.n_layers,
+            n_experts: m.n_experts,
+            top_k: m.top_k,
+            phase: Phase::Prefill,
+            routes: &routes,
+            gate_probs: &po.gate_probs,
+            token_scores: Some(&po.token_scores),
+        });
+
+        self.execute_experts(
+            layer,
+            &routes,
+            &plan,
+            &po.moe_in,
+            &po.h_resid,
+            h,
+            seq_len,
+            t_attn,
+        )
+    }
+
+    fn layer_decode(
+        &mut self,
+        layer: usize,
+        h: &mut Vec<f32>,
+        kv: &mut KvCache,
+        pos: usize,
+        deps: f64,
+    ) -> Result<f64> {
+        let m = self.model().clone();
+        let want_probe = self.strategy.wants_probe() && layer + 1 < m.n_layers;
+        let (dout, probe) = if want_probe {
+            let (dout, probe) = self.exec.attn_decode_probe(layer, layer + 1, h, kv, pos)?;
+            (dout, Some(probe))
+        } else {
+            (self.exec.attn_decode(layer, h, kv, pos)?, None)
+        };
+        let mut attn_cost = self.cost.attn_decode(pos);
+        if want_probe {
+            attn_cost += self.cost.gate(1);
+        }
+        let t_attn = self.timeline.gpu_compute(
+            self.timeline.gpu.free_at,
+            deps,
+            attn_cost,
+            &format!("attn_d L{layer}"),
+        );
+        kv.write_row(layer, pos, &dout.k_new, &dout.v_new)?;
+
+        // Prefetch before this layer's expert compute (maximum overlap).
+        if let Some(probe) = &probe {
+            self.issue_prefetch(layer + 1, probe, Phase::Decode, 1);
+        }
+
+        let routes = vec![top_k_route(&dout.gate_probs, m.top_k)];
+        let plan = self.strategy.plan(&LayerCtx {
+            layer,
+            n_layers: m.n_layers,
+            n_experts: m.n_experts,
+            top_k: m.top_k,
+            phase: Phase::Decode,
+            routes: &routes,
+            gate_probs: &dout.gate_probs,
+            token_scores: None,
+        });
+
+        self.execute_experts(
+            layer,
+            &routes,
+            &plan,
+            &dout.moe_in,
+            &dout.h_resid,
+            h,
+            1,
+            t_attn,
+        )
+    }
+
+    /// Resolve weights, schedule, and numerically execute all routed
+    /// experts of one layer; writes `h = h_resid + mixture` for the valid
+    /// tokens.  Returns the virtual completion time of the layer.
+    #[allow(clippy::too_many_arguments)]
+    fn execute_experts(
+        &mut self,
+        layer: usize,
+        routes: &[Route],
+        plan: &super::strategy::LayerPlan,
+        moe_in: &[f32],
+        h_resid: &[f32],
+        h: &mut Vec<f32>,
+        seq_len: usize,
+        t_attn: f64,
+    ) -> Result<f64> {
+        let m = self.model().clone();
+        let d = m.d_model;
+
+        // Prefetch usefulness accounting for this layer.
+        if let Some(pref) = self.prefetched_for.remove(&layer) {
+            let routed: std::collections::HashSet<usize> =
+                routes.iter().flat_map(|r| r.iter().map(|&(e, _)| e)).collect();
+            for e in pref {
+                if routed.contains(&e) {
+                    self.prefetch_stats.useful += 1;
+                } else {
+                    self.prefetch_stats.wasted += 1;
+                }
+            }
+        }
+
+        // Group routed tokens per expert.
+        let mut groups: HashMap<usize, (Vec<usize>, Vec<f32>)> = HashMap::new();
+        for (t, route) in routes.iter().enumerate() {
+            for &(e, w) in route {
+                let g = groups.entry(e).or_default();
+                g.0.push(t);
+                g.1.push(w);
+            }
+        }
+
+        let mut execs: Vec<ExpertExec> = Vec::with_capacity(groups.len());
+        let mut pinned: Vec<ExpertKey> = Vec::new();
+        for (e, (token_idx, weights)) in groups {
+            let wanted = plan.precision[e];
+            if wanted == Precision::Skip {
+                self.stats.skipped_experts += 1;
+                continue;
+            }
+            let key = ExpertKey::new(layer, e);
+            let (exec_prec, ready_at, on_cpu) =
+                self.resolve_weights(key, wanted, plan.cpu_fallback[e], t_attn);
+            if self.strategy.uses_cache() && !self.cache.is_pinned(key) {
+                // pin for the duration of this layer (permanently-pinned
+                // warm residents are left untouched)
+                self.cache.set_pinned(key, true);
+                pinned.push(key);
+            }
+            execs.push(ExpertExec { key, exec_prec, ready_at, on_cpu, token_idx, weights });
+        }
+        // Execute in weight-arrival order (hits first, streams as they land).
+        execs.sort_by(|a, b| a.ready_at.partial_cmp(&b.ready_at).unwrap());
+
+        let mut mix = vec![0f32; seq_len * d];
+        let mut wsum = vec![0f32; seq_len];
+        let mut layer_end = t_attn;
+        for ex in &execs {
+            let rows: Vec<&[f32]> = ex
+                .token_idx
+                .iter()
+                .map(|&t| &moe_in[t * d..(t + 1) * d])
+                .collect();
+            let outs = self.exec.expert_ffn(ex.key, ex.exec_prec, &rows)?;
+            let t_end = if ex.on_cpu {
+                self.stats.cpu_execs += 1;
+                self.timeline.cpu_compute(
+                    t_attn,
+                    ex.ready_at,
+                    self.cost.expert_cpu(ex.token_idx.len(), ex.exec_prec),
+                    &format!("cpu {}", ex.key),
+                )
+            } else {
+                self.timeline.gpu_compute(
+                    self.timeline.gpu.free_at,
+                    ex.ready_at.max(t_attn),
+                    self.cost.expert_gpu(ex.token_idx.len(), ex.exec_prec),
+                    &format!("ffn {}", ex.key),
+                )
+            };
+            self.stats.expert_execs += 1;
+            layer_end = layer_end.max(t_end);
+            for ((&t, &w), y) in ex.token_idx.iter().zip(&ex.weights).zip(&outs) {
+                let dst = &mut mix[t * d..(t + 1) * d];
+                for (a, b) in dst.iter_mut().zip(y) {
+                    *a += w * b;
+                }
+                wsum[t] += w;
+            }
+        }
+        for key in pinned {
+            self.cache.set_pinned(key, false);
+        }
+
+        // h = h_resid + renormalized mixture (paper 4/0 drops sub-critical
+        // experts; renormalizing over the executed subset keeps the
+        // residual scale stable).
+        h.copy_from_slice(h_resid);
+        for t in 0..seq_len {
+            if wsum[t] > 1e-9 {
+                let inv = 1.0 / wsum[t];
+                let dst = &mut h[t * d..(t + 1) * d];
+                for (a, b) in dst.iter_mut().zip(&mix[t * d..(t + 1) * d]) {
+                    *a += inv * b;
+                }
+            }
+        }
+        Ok(layer_end)
+    }
+
+    /// Resolve one expert's weights through the cache / transfer path.
+    /// Returns `(execution precision, ready time, on_cpu)`.
+    fn resolve_weights(
+        &mut self,
+        key: ExpertKey,
+        wanted: Precision,
+        cpu_fallback: bool,
+        now: f64,
+    ) -> (Precision, f64, bool) {
+        if !self.strategy.uses_cache() {
+            let arrival = self.transfer(key, wanted, now, false);
+            return (wanted, arrival, false);
+        }
+        match self.cache.lookup(key, wanted) {
+            Lookup::Hit { prec, ready_at } => {
+                let exec_prec = if self.opts.strict_precision { wanted } else { prec };
+                // Late prefetch: if the in-flight background copy would
+                // arrive later than a fresh demand fetch, upgrade it to
+                // demand priority (re-issue on the demand lane).
+                if ready_at > now {
+                    let fresh = now + self.cost.pcie_transfer(self.cost.expert_weight_bytes(prec));
+                    if ready_at > fresh {
+                        let arrival = self.transfer(key, prec, now, false);
+                        self.cache.update_ready(key, arrival);
+                        return (exec_prec, arrival.min(ready_at), false);
+                    }
+                }
+                (exec_prec, ready_at, false)
+            }
+            Lookup::Miss { .. } => {
+                if cpu_fallback {
+                    // Fiddler: compute on host from full-precision weights.
+                    return (Precision::Bf16, now, true);
+                }
+                let arrival = self.transfer(key, wanted, now, false);
+                if self.strategy.inserts_on_miss() {
+                    let bytes = self.cost.expert_weight_bytes(wanted) as u64;
+                    self.cache.insert(key, wanted, bytes, arrival);
+                }
+                (wanted, arrival, false)
+            }
+        }
+    }
+
+    /// Issue the (virtual) host->device transfer chain for one expert.
+    /// Prefetch transfers ride the background (low-priority) PCIe lane so
+    /// mispredictions never delay demand fetches.
+    fn transfer(&mut self, key: ExpertKey, p: Precision, issue: f64, background: bool) -> f64 {
+        let bytes = self.cost.expert_weight_bytes(p);
+        self.stats.transferred_bytes += bytes as u64;
+        let label = format!("xfer {key} {}", p.tag());
+        let host_ready = if self.sys.policy.ssd_resident {
+            self.timeline
+                .nvme_stage(issue, self.cost.nvme_transfer(bytes), &label)
+        } else {
+            issue
+        };
+        let dur = self.cost.pcie_transfer(bytes);
+        if background {
+            self.timeline.pcie_prefetch(host_ready, dur, &label)
+        } else {
+            self.timeline.pcie_transfer(host_ready, dur, &label)
+        }
+    }
+
+    /// Let the strategy prefetch experts for `next_layer`.
+    fn issue_prefetch(&mut self, next_layer: usize, probe: &[f32], phase: Phase, seq_len: usize) {
+        let m = self.model().clone();
+        let picks = self.strategy.prefetch(&PrefetchCtx {
+            next_layer,
+            n_layers: m.n_layers,
+            n_experts: m.n_experts,
+            top_k: m.top_k,
+            phase,
+            seq_len,
+            probe_probs: probe,
+        });
+        let now = self.timeline.gpu.free_at;
+        let mut landed = Vec::new();
+        for (e, prec) in picks {
+            let key = ExpertKey::new(next_layer, e);
+            if self.cache.peek(key, prec) {
+                continue; // already resident at sufficient fidelity
+            }
+            // Bound the background backlog: a prefetch that could not even
+            // start before one more transfer-time has passed will be too
+            // late to help and only burns bandwidth.
+            let dur = self.cost.pcie_transfer(self.cost.expert_weight_bytes(prec));
+            let queue_head = self.timeline.pcie.bg_free_at.max(self.timeline.pcie.free_at);
+            if queue_head > now + dur {
+                break; // picks are priority-ordered; later ones are worse
+            }
+            let arrival = self.transfer(key, prec, now, true);
+            if self.strategy.inserts_on_miss() {
+                let bytes = self.cost.expert_weight_bytes(prec) as u64;
+                self.cache.insert(key, prec, bytes, arrival);
+            }
+            self.prefetch_stats.issued += 1;
+            landed.push(e);
+        }
+        if !landed.is_empty() {
+            self.prefetched_for.entry(next_layer).or_default().extend(landed);
+        }
+    }
+
+    /// Reset cumulative statistics (keeps cache contents / clock).
+    pub fn reset_stats(&mut self) {
+        self.stats = EngineStats::default();
+        self.prefetch_stats = PrefetchStats::default();
+        self.cache.stats = Default::default();
+    }
+}

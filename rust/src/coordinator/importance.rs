@@ -1,0 +1,130 @@
+//! Phase-adaptive expert importance estimation (paper §4.2).
+//!
+//! * Prefill (Eq. 1–2): token importance comes from attention mass
+//!   (computed in-kernel, see `python/compile/kernels/attention.py`); an
+//!   expert's importance is its **heavy-hitter token load** — how many of
+//!   the top-k most-attended tokens route to it.
+//! * Decode (Eq. 3): the gate score itself is the importance.
+
+use super::Route;
+
+/// Indices of the `k` highest-scoring tokens (stable: ties by index).
+pub fn heavy_hitters(token_scores: &[f32], seq_len: usize, k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..seq_len.min(token_scores.len())).collect();
+    idx.sort_by(|&a, &b| {
+        token_scores[b]
+            .partial_cmp(&token_scores[a])
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+/// Eq. 2: importance of each expert as its heavy-hitter token load.
+///
+/// `routes[t]` is token `t`'s routed expert set; `token_scores` the Eq.-1
+/// attention scores; `hh_frac` the fraction of tokens treated as
+/// heavy-hitters.  A small total-load tiebreaker (and an even smaller gate
+/// -mass one) keeps the ordering deterministic and sensible when several
+/// experts serve the same number of critical tokens.
+pub fn prefill_importance(
+    token_scores: &[f32],
+    routes: &[Route],
+    n_experts: usize,
+    hh_frac: f64,
+) -> Vec<f64> {
+    let seq_len = routes.len();
+    let k = ((seq_len as f64 * hh_frac).ceil() as usize).clamp(1, seq_len.max(1));
+    let heavy = heavy_hitters(token_scores, seq_len, k);
+    let mut is_heavy = vec![false; seq_len];
+    for &t in &heavy {
+        is_heavy[t] = true;
+    }
+    let mut imp = vec![0f64; n_experts];
+    let mut load = vec![0f64; n_experts];
+    let mut gate_mass = vec![0f64; n_experts];
+    for (t, route) in routes.iter().enumerate() {
+        for &(e, w) in route {
+            if is_heavy[t] {
+                imp[e] += 1.0;
+            }
+            load[e] += 1.0;
+            gate_mass[e] += w as f64;
+        }
+    }
+    let max_load = seq_len.max(1) as f64;
+    for e in 0..n_experts {
+        imp[e] += load[e] / (max_load * 1e3) + gate_mass[e] / (max_load * 1e6);
+    }
+    imp
+}
+
+/// Eq. 3: decode importance is the gate probability vector itself.
+pub fn decode_importance(gate_probs: &[f32]) -> Vec<f64> {
+    gate_probs.iter().map(|&g| g as f64).collect()
+}
+
+/// Rank expert indices by importance, descending (stable by index).
+pub fn rank_desc(importance: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..importance.len()).collect();
+    idx.sort_by(|&a, &b| {
+        importance[b]
+            .partial_cmp(&importance[a])
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heavy_hitters_are_top_scored() {
+        let scores = [0.1f32, 0.5, 0.2, 0.9, 0.0];
+        assert_eq!(heavy_hitters(&scores, 5, 2), vec![3, 1]);
+        // seq_len masks the tail
+        assert_eq!(heavy_hitters(&scores, 3, 2), vec![1, 2]);
+    }
+
+    #[test]
+    fn prefill_importance_counts_heavy_loads() {
+        // 4 tokens, scores make tokens 0 and 1 heavy (hh_frac 0.5)
+        let scores = [0.9f32, 0.8, 0.1, 0.1];
+        let routes: Vec<Route> = vec![
+            vec![(0, 1.0)],          // heavy -> e0
+            vec![(0, 0.6), (1, 0.4)], // heavy -> e0, e1
+            vec![(2, 1.0)],          // light -> e2
+            vec![(2, 1.0)],          // light -> e2
+        ];
+        let imp = prefill_importance(&scores, &routes, 4, 0.5);
+        // e0 has 2 heavy tokens, e1 has 1, e2 none (only load tiebreak), e3 zero
+        assert!(imp[0] > imp[1] && imp[1] > imp[2] && imp[2] > imp[3]);
+        assert!(imp[0] >= 2.0 && imp[1] >= 1.0 && imp[2] < 1.0);
+    }
+
+    #[test]
+    fn tiebreak_prefers_higher_total_load() {
+        let scores = [0.9f32, 0.1, 0.1];
+        let routes: Vec<Route> = vec![
+            vec![(0, 0.5), (1, 0.5)], // heavy hits both e0, e1
+            vec![(0, 1.0)],           // extra light load on e0
+            vec![(2, 1.0)],
+        ];
+        let imp = prefill_importance(&scores, &routes, 3, 0.34);
+        assert!(imp[0] > imp[1]);
+    }
+
+    #[test]
+    fn decode_importance_is_gate() {
+        let imp = decode_importance(&[0.1, 0.7, 0.2]);
+        assert_eq!(rank_desc(&imp), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn rank_desc_stable() {
+        assert_eq!(rank_desc(&[0.5, 0.5, 0.9]), vec![2, 0, 1]);
+    }
+}

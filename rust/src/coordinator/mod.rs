@@ -1,0 +1,61 @@
+//! The DyMoE coordinator — the paper's system contribution (§4).
+//!
+//! * [`importance`]  — phase-adaptive expert importance (Eq. 1–3)
+//! * [`scheduler`]   — depth-aware precision scheduling (Eq. 4–5)
+//! * [`cache`]       — mixed-precision LRU cache management (§4.4.2)
+//! * [`prefetcher`]  — look-ahead prefetching (Eq. 6–8)
+//! * [`strategy`]    — the pluggable serving-policy trait + DyMoE itself
+//! * [`engine`]      — the serving engine: co-simulated numerics + time
+
+pub mod adaptive;
+pub mod cache;
+pub mod engine;
+pub mod importance;
+pub mod prefetcher;
+pub mod scheduler;
+pub mod strategy;
+
+/// Inference phase; DyMoE's estimator and prefetcher are phase-adaptive.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Prefill,
+    Decode,
+}
+
+/// One token's routed experts: `(expert index, renormalized gate weight)`.
+pub type Route = Vec<(usize, f32)>;
+
+/// Stable top-k routing from a row of gate probabilities: descending by
+/// probability, ties broken by ascending expert index (matches
+/// `python/compile/model.topk_mask`), renormalized over the selected set.
+pub fn top_k_route(probs: &[f32], k: usize) -> Route {
+    let mut idx: Vec<usize> = (0..probs.len()).collect();
+    idx.sort_by(|&a, &b| {
+        probs[b].partial_cmp(&probs[a]).unwrap().then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    let total: f32 = idx.iter().map(|&e| probs[e]).sum();
+    let denom = total.max(1e-9);
+    idx.into_iter().map(|e| (e, probs[e] / denom)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_k_route_selects_and_renormalizes() {
+        let r = top_k_route(&[0.5, 0.3, 0.1, 0.1], 2);
+        assert_eq!(r[0].0, 0);
+        assert_eq!(r[1].0, 1);
+        assert!((r[0].1 - 0.5 / 0.8).abs() < 1e-6);
+        assert!((r.iter().map(|(_, w)| w).sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn top_k_route_tie_breaks_by_index() {
+        let r = top_k_route(&[0.25, 0.25, 0.25, 0.25], 2);
+        assert_eq!(r[0].0, 0);
+        assert_eq!(r[1].0, 1);
+    }
+}

@@ -1,0 +1,107 @@
+//! Look-ahead prefetching (paper §4.4.1, Eq. 6–8).
+//!
+//! The Eq.-6 gate approximation itself runs as the `gate_probe` HLO
+//! artifact (layer-(l+1) router applied to the layer-l hidden state);
+//! this module turns the predicted probabilities into prefetch decisions:
+//!
+//! * **Decode (Eq. 8)** — directly prefetch the top-t predicted experts.
+//! * **Prefill (Eq. 7)** — aggregate each token's predicted top-k into
+//!   per-expert activation frequencies and prefetch the top-t by count.
+//!
+//! Statistics track prediction usefulness (a prefetched expert that is
+//! routed in the next layer counts as useful).
+
+use super::importance::rank_desc;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PrefetchStats {
+    pub issued: u64,
+    pub useful: u64,
+    pub wasted: u64,
+}
+
+impl PrefetchStats {
+    pub fn accuracy(&self) -> f64 {
+        if self.issued == 0 {
+            0.0
+        } else {
+            self.useful as f64 / self.issued as f64
+        }
+    }
+}
+
+/// Eq. 8: decode-phase prediction — top-t experts of the probe.
+pub fn predict_decode(probe_probs: &[f32], t: usize) -> Vec<usize> {
+    let imp: Vec<f64> = probe_probs.iter().map(|&p| p as f64).collect();
+    rank_desc(&imp).into_iter().take(t).collect()
+}
+
+/// Eq. 7: prefill-phase prediction — per-expert activation frequency
+/// `c_e = sum_i 1[e in top-k of token i]`, then top-t by frequency.
+///
+/// `probe_probs` is row-major `[seq_len, n_experts]`.
+pub fn predict_prefill(
+    probe_probs: &[f32],
+    seq_len: usize,
+    n_experts: usize,
+    top_k: usize,
+    t: usize,
+) -> Vec<usize> {
+    let mut counts = vec![0f64; n_experts];
+    for token in 0..seq_len {
+        let row = &probe_probs[token * n_experts..(token + 1) * n_experts];
+        let route = super::top_k_route(row, top_k);
+        for (e, w) in route {
+            counts[e] += 1.0 + (w as f64) * 1e-6; // tiny gate-mass tiebreak
+        }
+    }
+    rank_desc(&counts)
+        .into_iter()
+        .take(t)
+        .filter(|&e| counts[e] > 0.0)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_prediction_ranks_probs() {
+        assert_eq!(predict_decode(&[0.1, 0.6, 0.3], 2), vec![1, 2]);
+        assert_eq!(predict_decode(&[0.1, 0.6, 0.3], 5), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn prefill_prediction_counts_frequencies() {
+        // 3 tokens, 4 experts, top-2 each
+        #[rustfmt::skip]
+        let probs = vec![
+            0.5, 0.4, 0.1, 0.0,   // -> e0, e1
+            0.6, 0.3, 0.1, 0.0,   // -> e0, e1
+            0.0, 0.1, 0.5, 0.4,   // -> e2, e3
+        ];
+        let p = predict_prefill(&probs, 3, 4, 2, 2);
+        assert_eq!(p, vec![0, 1]); // both hit twice; ties by index
+        let p3 = predict_prefill(&probs, 3, 4, 2, 4);
+        assert_eq!(p3.len(), 4);
+        assert!(p3[2] == 2 || p3[2] == 3);
+    }
+
+    #[test]
+    fn prefill_prediction_ignores_padding() {
+        let probs = vec![
+            1.0, 0.0, //
+            0.0, 1.0, // padding row, must be ignored with seq_len = 1
+        ];
+        let p = predict_prefill(&probs, 1, 2, 1, 2);
+        assert_eq!(p, vec![0]);
+    }
+
+    #[test]
+    fn stats_accuracy() {
+        let s = PrefetchStats { issued: 10, useful: 7, wasted: 3 };
+        assert!((s.accuracy() - 0.7).abs() < 1e-12);
+        assert_eq!(PrefetchStats::default().accuracy(), 0.0);
+    }
+}

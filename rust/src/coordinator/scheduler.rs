@@ -1,0 +1,170 @@
+//! Depth-aware precision scheduling (paper §4.3, Eq. 4–5) and the expert
+//! selection / allocation strategies compared in Fig. 3.
+
+use crate::quant::Precision;
+use crate::util::rng::Rng;
+
+use super::importance::rank_desc;
+
+/// Eq. 4: cosine retention schedule.  Stays near 1 in shallow layers and
+/// decays smoothly to `lambda` in the deepest layer.
+pub fn retention(layer: usize, n_layers: usize, lambda: f64) -> f64 {
+    if n_layers <= 1 {
+        return 1.0;
+    }
+    let x = layer as f64 / (n_layers - 1) as f64;
+    (1.0 - lambda) * ((std::f64::consts::PI * x).cos() + 1.0) / 2.0 + lambda
+}
+
+/// Eq. 5: number of critical experts at a layer.
+pub fn critical_count(layer: usize, n_layers: usize, lambda: f64, n_experts: usize) -> usize {
+    (retention(layer, n_layers, lambda) * n_experts as f64).ceil() as usize
+}
+
+/// How the per-layer retention budget is allocated (Fig. 3 comparison).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Allocation {
+    /// Eq. 4 cosine schedule ("Depth-based").
+    DepthCosine,
+    /// Uniform ratio across layers ("Equal").
+    Equal,
+}
+
+/// How critical experts are selected within a layer (Fig. 3 comparison).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Selection {
+    /// By importance score ("Token-based" in prefill).
+    Importance,
+    /// Uniformly at random (the "Random" baseline).
+    Random,
+}
+
+/// The per-layer critical-expert budget under an allocation scheme with a
+/// target *average* retention `r`.
+pub fn layer_budget(
+    alloc: Allocation,
+    layer: usize,
+    n_layers: usize,
+    r: f64,
+    n_experts: usize,
+) -> usize {
+    let t = match alloc {
+        Allocation::Equal => (r * n_experts as f64).ceil() as usize,
+        Allocation::DepthCosine => {
+            let lambda = (2.0 * r - 1.0).clamp(0.0, 1.0);
+            critical_count(layer, n_layers, lambda, n_experts)
+        }
+    };
+    t.clamp(1, n_experts)
+}
+
+/// Assign a precision to every expert of a layer: the top `budget` by
+/// importance (or a random subset) become Critical at `high`, the rest
+/// Sub-critical at `low` (Int2 for "4/2", Skip for "4/0").
+pub fn assign_precisions(
+    importance: &[f64],
+    budget: usize,
+    selection: Selection,
+    high: Precision,
+    low: Precision,
+    rng: &mut Rng,
+) -> Vec<Precision> {
+    let m = importance.len();
+    let chosen: Vec<usize> = match selection {
+        Selection::Importance => rank_desc(importance).into_iter().take(budget).collect(),
+        Selection::Random => rng.choose_k(m, budget),
+    };
+    let mut out = vec![low; m];
+    for e in chosen {
+        out[e] = high;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn retention_endpoints() {
+        // slow start: layer 0 keeps everything
+        assert!((retention(0, 8, 0.5) - 1.0).abs() < 1e-12);
+        // deepest layer hits the floor lambda
+        assert!((retention(7, 8, 0.5) - 0.5).abs() < 1e-12);
+        assert_eq!(retention(0, 1, 0.3), 1.0);
+    }
+
+    #[test]
+    fn retention_monotone_decreasing() {
+        prop::check("retention-monotone", 20, |rng| {
+            let n = rng.range(2, 40);
+            let lambda = rng.f64();
+            let mut prev = f64::INFINITY;
+            for l in 0..n {
+                let r = retention(l, n, lambda);
+                assert!(r <= prev + 1e-12, "not monotone at {l}");
+                assert!((lambda - 1e-12..=1.0 + 1e-12).contains(&r));
+                prev = r;
+            }
+        });
+    }
+
+    #[test]
+    fn mean_retention_matches_target() {
+        // integrating the cosine over layers gives (1 + lambda) / 2
+        let n = 64;
+        let lambda = 0.5;
+        let mean: f64 =
+            (0..n).map(|l| retention(l, n, lambda)).sum::<f64>() / n as f64;
+        assert!((mean - 0.75).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn critical_count_bounds() {
+        prop::check("critical-count", 20, |rng| {
+            let n = rng.range(2, 32);
+            let m = rng.range(1, 128);
+            let lambda = rng.f64();
+            for l in 0..n {
+                let t = critical_count(l, n, lambda, m);
+                assert!(t >= 1 && t <= m, "t={t} m={m}");
+            }
+        });
+        // layer 0 always retains all experts
+        assert_eq!(critical_count(0, 8, 0.25, 8), 8);
+    }
+
+    #[test]
+    fn equal_allocation_uniform() {
+        for l in 0..8 {
+            assert_eq!(layer_budget(Allocation::Equal, l, 8, 0.75, 8), 6);
+        }
+        // depth-based spends more at the top than the bottom
+        let top = layer_budget(Allocation::DepthCosine, 0, 8, 0.75, 8);
+        let bot = layer_budget(Allocation::DepthCosine, 7, 8, 0.75, 8);
+        assert!(top > bot);
+        assert_eq!(top, 8);
+    }
+
+    #[test]
+    fn assignment_counts_and_selection() {
+        let imp = vec![0.1, 0.9, 0.5, 0.2];
+        let mut rng = Rng::new(0);
+        let p = assign_precisions(
+            &imp, 2, Selection::Importance, Precision::Int4, Precision::Int2, &mut rng,
+        );
+        assert_eq!(p[1], Precision::Int4);
+        assert_eq!(p[2], Precision::Int4);
+        assert_eq!(p[0], Precision::Int2);
+        assert_eq!(
+            p.iter().filter(|&&x| x == Precision::Int4).count(),
+            2
+        );
+        // random selection still honors the budget
+        let pr = assign_precisions(
+            &imp, 3, Selection::Random, Precision::Int4, Precision::Skip, &mut rng,
+        );
+        assert_eq!(pr.iter().filter(|&&x| x == Precision::Int4).count(), 3);
+    }
+}

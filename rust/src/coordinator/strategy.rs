@@ -1,0 +1,430 @@
+//! The pluggable serving-policy interface consumed by the [`engine`], plus
+//! the DyMoE policy itself.  The offloading baselines in
+//! [`crate::baselines`] implement the same trait, so every system is
+//! measured on the identical substrate (same model, same cache/transfer
+//! machinery, same cost model) — only the *policy* differs.
+//!
+//! [`engine`]: super::engine
+
+use crate::config::PolicyConfig;
+use crate::model::assets::ExpertKey;
+use crate::quant::Precision;
+use crate::util::rng::Rng;
+
+use super::importance::{decode_importance, prefill_importance};
+use super::prefetcher::{predict_decode, predict_prefill};
+use super::scheduler::{assign_precisions, layer_budget, Allocation, Selection};
+use super::{Phase, Route};
+
+/// Everything a policy may inspect when planning one layer's experts.
+pub struct LayerCtx<'a> {
+    pub layer: usize,
+    pub n_layers: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub phase: Phase,
+    /// Per valid token: routed experts with renormalized gate weights.
+    pub routes: &'a [Route],
+    /// Gate probabilities: `[M]` in decode, row-major `[T, M]` in prefill.
+    pub gate_probs: &'a [f32],
+    /// Eq.-1 token-importance scores (prefill only).
+    pub token_scores: Option<&'a [f32]>,
+}
+
+/// The policy's verdict for one layer.
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    /// Execution precision per expert (`Skip` = drop the expert).
+    pub precision: Vec<Precision>,
+    /// If true and the expert is not VRAM-resident, execute it on the host
+    /// CPU instead of transferring (Fiddler-style co-execution).
+    pub cpu_fallback: Vec<bool>,
+}
+
+impl LayerPlan {
+    pub fn uniform(n_experts: usize, p: Precision) -> Self {
+        LayerPlan {
+            precision: vec![p; n_experts],
+            cpu_fallback: vec![false; n_experts],
+        }
+    }
+}
+
+/// Context for a look-ahead prefetch decision after layer `next_layer - 1`.
+pub struct PrefetchCtx<'a> {
+    pub next_layer: usize,
+    pub n_layers: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub phase: Phase,
+    pub seq_len: usize,
+    /// Eq.-6 approximate gate probabilities for `next_layer`
+    /// (`[M]` decode / `[T, M]` prefill).
+    pub probe_probs: &'a [f32],
+}
+
+/// A serving policy: precision planning + prefetching + residency.
+pub trait Strategy {
+    fn name(&self) -> String;
+
+    /// Plan the current layer's expert executions.
+    fn plan(&mut self, ctx: &LayerCtx) -> LayerPlan;
+
+    /// Whether the engine should run the Eq.-6 gate probe (costs one small
+    /// matmul per layer; pointless for non-prefetching baselines).
+    fn wants_probe(&self) -> bool {
+        false
+    }
+
+    /// Experts to prefetch for `ctx.next_layer`, with target precisions.
+    fn prefetch(&mut self, _ctx: &PrefetchCtx) -> Vec<(usize, Precision)> {
+        Vec::new()
+    }
+
+    /// Whether this policy uses the VRAM expert cache at all.
+    fn uses_cache(&self) -> bool {
+        true
+    }
+
+    /// Whether demand misses populate the cache (static-placement
+    /// baselines stream without caching).
+    fn inserts_on_miss(&self) -> bool {
+        true
+    }
+
+    /// Initial VRAM residency, highest priority first; the engine inserts
+    /// entries until the budget is full (model-load time, not billed).
+    fn warm_residency(&self, n_layers: usize, n_experts: usize) -> Vec<(ExpertKey, Precision)>;
+
+    /// Fraction of the warm residency that stays pinned (never evicted).
+    /// 0.0 = plain LRU.  (DyMoE uses depth-aware eviction priorities
+    /// instead — see [`Strategy::depth_priority`].)
+    fn pinned_fraction(&self) -> f64 {
+        0.0
+    }
+
+    /// Use the scan-resistant segmented LRU: fresh inserts are probation,
+    /// re-referenced entries are protected, so the prefill layer sweep (a
+    /// one-shot scan over every expert) cannot thrash the hot working set
+    /// while decode's re-referenced experts stay protected.  Plain LRU
+    /// when false (the baselines' published behaviour).
+    fn scan_resistant_cache(&self) -> bool {
+        false
+    }
+
+    /// Called at the start of every request (per-request policy state).
+    fn begin_request(&mut self, _phase_hint: Phase) {}
+
+    /// Update the retention ratio between requests (the §6.3 runtime
+    /// knob; see [`super::adaptive::RetentionController`]).  No-op for
+    /// policies without a retention concept.
+    fn set_retention(&mut self, _r: f64) {}
+}
+
+/// Layer-major warm fill at a uniform precision (shared by baselines).
+pub fn layer_major_residency(
+    n_layers: usize,
+    n_experts: usize,
+    p: Precision,
+) -> Vec<(ExpertKey, Precision)> {
+    (0..n_layers)
+        .flat_map(|l| (0..n_experts).map(move |e| (ExpertKey::new(l, e), p)))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// DyMoE
+// ---------------------------------------------------------------------------
+
+/// The paper's policy: phase-adaptive importance -> depth-aware cosine
+/// budgets -> mixed-precision tiers, with Eq.-6/7/8 look-ahead prefetch.
+pub struct DyMoEStrategy {
+    pub policy: PolicyConfig,
+    /// Fig.-3 knobs: how critical experts are picked and budgeted.
+    pub selection: Selection,
+    rng: Rng,
+}
+
+impl DyMoEStrategy {
+    pub fn new(policy: PolicyConfig) -> Self {
+        DyMoEStrategy { policy, selection: Selection::Importance, rng: Rng::new(0xD43) }
+    }
+
+    fn allocation(&self) -> Allocation {
+        if self.policy.depth_aware {
+            Allocation::DepthCosine
+        } else {
+            Allocation::Equal
+        }
+    }
+
+    fn budget(&self, layer: usize, n_layers: usize, n_experts: usize) -> usize {
+        layer_budget(
+            self.allocation(),
+            layer,
+            n_layers,
+            self.policy.retention,
+            n_experts,
+        )
+    }
+}
+
+impl Default for DyMoEStrategy {
+    fn default() -> Self {
+        DyMoEStrategy::new(PolicyConfig::default())
+    }
+}
+
+impl Strategy for DyMoEStrategy {
+    fn name(&self) -> String {
+        format!(
+            "DyMoE({}, r={})",
+            self.policy.low_mode.label(),
+            self.policy.retention
+        )
+    }
+
+    fn plan(&mut self, ctx: &LayerCtx) -> LayerPlan {
+        if !self.policy.dyquant_enabled {
+            return LayerPlan::uniform(ctx.n_experts, self.policy.high);
+        }
+        match ctx.phase {
+            // Prefill (Fig. 8): Eq.-2 heavy-hitter importance over all M
+            // experts, Eq.-5 budget t_l = ceil(r(l) * M).
+            Phase::Prefill => {
+                let importance = prefill_importance(
+                    ctx.token_scores.unwrap_or(&[]),
+                    ctx.routes,
+                    ctx.n_experts,
+                    self.policy.heavy_hitter_frac,
+                );
+                let budget = self.budget(ctx.layer, ctx.n_layers, ctx.n_experts);
+                let precision = assign_precisions(
+                    &importance,
+                    budget,
+                    self.selection,
+                    self.policy.high,
+                    self.policy.low_mode.precision(),
+                    &mut self.rng,
+                );
+                LayerPlan { precision, cpu_fallback: vec![false; ctx.n_experts] }
+            }
+            // Decode (Fig. 9): gate-guided selection among the *routed*
+            // experts — the retention ratio tiers the top-k set itself
+            // (top ceil(r(l) * k) routed experts are Critical); this is
+            // what makes 4/2 / 4/0 cut decode I/O and compute.
+            Phase::Decode => {
+                let importance = decode_importance(ctx.gate_probs);
+                let budget = self.budget(ctx.layer, ctx.n_layers, ctx.top_k);
+                let order = super::importance::rank_desc(&importance);
+                let mut precision =
+                    vec![self.policy.low_mode.precision(); ctx.n_experts];
+                for (rank, e) in order.into_iter().enumerate() {
+                    if rank < budget {
+                        precision[e] = self.policy.high;
+                    } else {
+                        break;
+                    }
+                }
+                if self.selection == Selection::Random {
+                    // Fig.-3 "Random" arm: pick the critical routed
+                    // experts uniformly instead of by gate score.
+                    precision = assign_precisions(
+                        &importance,
+                        budget,
+                        Selection::Random,
+                        self.policy.high,
+                        self.policy.low_mode.precision(),
+                        &mut self.rng,
+                    );
+                }
+                LayerPlan { precision, cpu_fallback: vec![false; ctx.n_experts] }
+            }
+        }
+    }
+
+    fn wants_probe(&self) -> bool {
+        self.policy.prefetch_enabled
+    }
+
+    fn prefetch(&mut self, ctx: &PrefetchCtx) -> Vec<(usize, Precision)> {
+        if !self.policy.prefetch_enabled {
+            return Vec::new();
+        }
+        // Critical budget at the next layer: over all M experts in
+        // prefill, over the routed top-k in decode (see `plan`).
+        let budget = match ctx.phase {
+            Phase::Prefill => self.budget(ctx.next_layer, ctx.n_layers, ctx.n_experts),
+            Phase::Decode => self.budget(ctx.next_layer, ctx.n_layers, ctx.top_k),
+        };
+        let depth = if self.policy.prefetch_depth == 0 {
+            ctx.top_k
+        } else {
+            self.policy.prefetch_depth
+        };
+        let predicted = match ctx.phase {
+            // Eq. 8: direct prefetch of the top-t predicted experts.
+            Phase::Decode => predict_decode(ctx.probe_probs, depth.min(ctx.n_experts)),
+            // Eq. 7: token-frequency prefetch across the whole prompt; the
+            // useful prefetch width is the next layer's critical budget.
+            Phase::Prefill => predict_prefill(
+                ctx.probe_probs,
+                ctx.seq_len,
+                ctx.n_experts,
+                ctx.top_k,
+                budget,
+            ),
+        };
+        // Predicted rank within the critical budget -> high tier;
+        // below it -> the low tier (never prefetch a Skip).
+        let low = self.policy.low_mode.precision();
+        predicted
+            .into_iter()
+            .enumerate()
+            .filter_map(|(rank, e)| {
+                let p = if !self.policy.dyquant_enabled || rank < budget {
+                    self.policy.high
+                } else {
+                    low
+                };
+                (p != Precision::Skip).then_some((e, p))
+            })
+            .collect()
+    }
+
+    /// Depth-aware warm fill: shallow layers first (they hold the largest
+    /// critical budgets under Eq. 4), experts at the high tier.
+    fn warm_residency(&self, n_layers: usize, n_experts: usize) -> Vec<(ExpertKey, Precision)> {
+        layer_major_residency(n_layers, n_experts, self.policy.high)
+    }
+
+    /// DyMoE's cache is scan-resistant (see trait docs): prefill's
+    /// one-shot expert sweep must not evict the re-referenced residents.
+    fn scan_resistant_cache(&self) -> bool {
+        true
+    }
+
+    fn set_retention(&mut self, r: f64) {
+        self.policy.retention = r.clamp(0.0, 1.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LowMode;
+
+    fn decode_ctx<'a>(gate: &'a [f32], routes: &'a [Route]) -> LayerCtx<'a> {
+        LayerCtx {
+            layer: 4,
+            n_layers: 8,
+            n_experts: gate.len(),
+            top_k: 2,
+            phase: Phase::Decode,
+            routes,
+            gate_probs: gate,
+            token_scores: None,
+        }
+    }
+
+    #[test]
+    fn dymoe_decode_plan_tiers_by_gate() {
+        let mut s = DyMoEStrategy::new(PolicyConfig {
+            retention: 0.5,
+            low_mode: LowMode::Int2,
+            ..Default::default()
+        });
+        let gate = [0.4f32, 0.3, 0.1, 0.05, 0.05, 0.04, 0.03, 0.03];
+        let routes = vec![vec![(0usize, 0.57f32), (1, 0.43)]];
+        let plan = s.plan(&decode_ctx(&gate, &routes));
+        // decode budgets tier the routed top-k (Fig. 9): layer 4 of 8,
+        // lambda 0 -> r(4) ~ 0.389 -> ceil(0.389 * k=2) = 1 critical
+        let hi = plan
+            .precision
+            .iter()
+            .filter(|&&p| p == Precision::Int4)
+            .count();
+        assert_eq!(hi, 1);
+        assert_eq!(plan.precision[0], Precision::Int4); // top gate score
+        assert_eq!(plan.precision[1], Precision::Int2); // 2nd routed -> low
+        assert_eq!(plan.precision[7], Precision::Int2);
+    }
+
+    #[test]
+    fn dymoe_shallow_layers_keep_everything() {
+        let mut s = DyMoEStrategy::default(); // r = 0.75
+        let gate = [0.2f32; 8];
+        let routes = vec![vec![(0usize, 1.0f32)]];
+        let mut ctx = decode_ctx(&gate, &routes);
+        ctx.layer = 0;
+        let plan = s.plan(&ctx);
+        // layer 0 keeps the full routed set critical: budget = top_k = 2;
+        // flat gate ties break by index.
+        assert_eq!(plan.precision[0], Precision::Int4);
+        assert_eq!(plan.precision[1], Precision::Int4);
+        let hi = plan
+            .precision
+            .iter()
+            .filter(|&&p| p == Precision::Int4)
+            .count();
+        assert_eq!(hi, ctx.top_k);
+    }
+
+    #[test]
+    fn dyquant_disabled_is_uniform() {
+        let mut s = DyMoEStrategy::new(PolicyConfig {
+            dyquant_enabled: false,
+            ..Default::default()
+        });
+        let gate = [0.9f32, 0.02, 0.02, 0.02, 0.01, 0.01, 0.01, 0.01];
+        let routes = vec![vec![(0usize, 1.0f32)]];
+        let plan = s.plan(&decode_ctx(&gate, &routes));
+        assert!(plan.precision.iter().all(|&p| p == Precision::Int4));
+    }
+
+    #[test]
+    fn prefetch_decode_tiers_by_rank() {
+        let mut s = DyMoEStrategy::new(PolicyConfig {
+            retention: 0.5,
+            prefetch_depth: 4,
+            low_mode: LowMode::Int2,
+            ..Default::default()
+        });
+        let probe = [0.4f32, 0.3, 0.15, 0.1, 0.02, 0.01, 0.01, 0.01];
+        let picks = s.prefetch(&PrefetchCtx {
+            next_layer: 7,
+            n_layers: 8,
+            n_experts: 8,
+            top_k: 2,
+            phase: Phase::Decode,
+            seq_len: 1,
+            probe_probs: &probe,
+        });
+        assert_eq!(picks.len(), 4);
+        // deepest layer budget at r=0.5 (lambda=0) -> 1 critical
+        assert_eq!(picks[0], (0, Precision::Int4));
+        assert_eq!(picks[1].1, Precision::Int2);
+    }
+
+    #[test]
+    fn prefetch_skip_mode_prefetches_only_critical() {
+        let mut s = DyMoEStrategy::new(PolicyConfig {
+            retention: 0.5,
+            prefetch_depth: 4,
+            low_mode: LowMode::Skip,
+            ..Default::default()
+        });
+        let probe = [0.4f32, 0.3, 0.15, 0.1, 0.02, 0.01, 0.01, 0.01];
+        let picks = s.prefetch(&PrefetchCtx {
+            next_layer: 7,
+            n_layers: 8,
+            n_experts: 8,
+            top_k: 2,
+            phase: Phase::Decode,
+            seq_len: 1,
+            probe_probs: &probe,
+        });
+        // sub-critical predictions would be Skip -> filtered out
+        assert_eq!(picks, vec![(0, Precision::Int4)]);
+    }
+}

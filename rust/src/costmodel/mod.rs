@@ -1,0 +1,196 @@
+//! GPU/CPU roofline cost model: virtual durations for every operation the
+//! engine schedules, computed at **paper scale** (DESIGN.md §6).
+//!
+//! Each op is `max(flops / throughput, bytes / bandwidth) + overhead` —
+//! the standard roofline.  Quantized execution pays a dequant factor on
+//! the compute term (shift/mask + rescale per weight), which is what makes
+//! Fiddler-style CPU dequantization compute-bound in the paper.
+
+use crate::config::{HardwareConfig, PaperModel};
+use crate::quant::Precision;
+
+/// Virtual durations (seconds) for engine-scheduled operations.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub hw: HardwareConfig,
+    pub paper: PaperModel,
+    /// Multiplier mapping one mini-model layer to paper layers.
+    pub layer_scale: f64,
+}
+
+/// Extra compute cost per weight for in-kernel dequantization on the GPU.
+fn gpu_dequant_factor(p: Precision) -> f64 {
+    match p {
+        Precision::Bf16 => 0.0,
+        Precision::Int8 => 0.15,
+        Precision::Int4 => 0.25,
+        Precision::Int2 => 0.40,
+        Precision::Skip => 0.0,
+    }
+}
+
+/// CPU dequantization is much more expensive relative to CPU FLOPs — the
+/// paper calls out exactly this as Fiddler's bottleneck.
+fn cpu_dequant_factor(p: Precision) -> f64 {
+    match p {
+        Precision::Bf16 => 0.0,
+        Precision::Int8 => 1.0,
+        Precision::Int4 => 1.8,
+        Precision::Int2 => 3.0,
+        Precision::Skip => 0.0,
+    }
+}
+
+impl CostModel {
+    pub fn new(hw: HardwareConfig, paper: PaperModel, layer_scale: f64) -> Self {
+        CostModel { hw, paper, layer_scale }
+    }
+
+    fn roofline(&self, flops: f64, bytes: f64) -> f64 {
+        let compute = flops / self.hw.gpu_tflops;
+        let memory = bytes / self.hw.hbm_gbps;
+        compute.max(memory) + self.hw.kernel_overhead_s
+    }
+
+    /// Weight bytes of one expert at a precision (paper scale).
+    pub fn expert_weight_bytes(&self, p: Precision) -> f64 {
+        crate::quant::expert_bytes(self.paper.d_model, self.paper.d_ffn, 128, p) as f64
+    }
+
+    /// One layer's attention during prefill over `tokens` tokens.
+    pub fn attn_prefill(&self, tokens: usize) -> f64 {
+        let d = self.paper.d_model as f64;
+        let t = tokens as f64;
+        // qkvo projections + score/context matmuls
+        let flops = 8.0 * d * d * t + 4.0 * d * t * t;
+        let bytes = 4.0 * d * d * 2.0; // weight reads, bf16
+        self.roofline(flops, bytes) * self.layer_scale
+    }
+
+    /// One layer's attention for a single decode token at position `pos`.
+    pub fn attn_decode(&self, pos: usize) -> f64 {
+        let d = self.paper.d_model as f64;
+        let flops = 8.0 * d * d + 4.0 * d * pos as f64;
+        let kv_bytes = 2.0 * pos as f64 * d * 2.0;
+        let bytes = 4.0 * d * d * 2.0 + kv_bytes;
+        self.roofline(flops, bytes) * self.layer_scale
+    }
+
+    /// One expert's FFN over `tokens` routed tokens at a precision, on GPU.
+    pub fn expert_gpu(&self, tokens: usize, p: Precision) -> f64 {
+        if p == Precision::Skip || tokens == 0 {
+            return 0.0;
+        }
+        let d = self.paper.d_model as f64;
+        let f = self.paper.d_ffn as f64;
+        let t = tokens as f64;
+        let weights = 3.0 * d * f;
+        let flops = 2.0 * weights * t * (1.0 + gpu_dequant_factor(p));
+        let bytes = self.expert_weight_bytes(p);
+        self.roofline(flops, bytes) * self.layer_scale
+    }
+
+    /// One expert's FFN over `tokens` tokens executed on the host CPU
+    /// (Fiddler-style co-execution).
+    pub fn expert_cpu(&self, tokens: usize, p: Precision) -> f64 {
+        if p == Precision::Skip || tokens == 0 {
+            return 0.0;
+        }
+        let d = self.paper.d_model as f64;
+        let f = self.paper.d_ffn as f64;
+        let weights = 3.0 * d * f;
+        let flops = 2.0 * weights * tokens as f64 * (1.0 + cpu_dequant_factor(p));
+        (flops / self.hw.cpu_gflops) * self.layer_scale
+    }
+
+    /// Router + top-k (tiny): one matmul over the gate.
+    pub fn gate(&self, tokens: usize) -> f64 {
+        let d = self.paper.d_model as f64;
+        let m = self.paper.n_experts as f64;
+        let flops = 2.0 * d * m * tokens as f64;
+        self.roofline(flops, d * m * 2.0) * self.layer_scale
+    }
+
+    /// Embedding + final norm + unembedding for `tokens` tokens.
+    pub fn head(&self, tokens: usize, vocab_scale: f64) -> f64 {
+        let d = self.paper.d_model as f64;
+        let v = 32000.0 * vocab_scale;
+        let flops = 2.0 * d * v * tokens as f64;
+        self.roofline(flops, d * v * 2.0)
+    }
+
+    /// Host->device transfer duration for `bytes` over PCIe.
+    pub fn pcie_transfer(&self, bytes: f64) -> f64 {
+        self.hw.pcie_latency_s + bytes / self.hw.pcie_gbps
+    }
+
+    /// SSD->host staging duration for `bytes` (when experts live on SSD).
+    pub fn nvme_transfer(&self, bytes: f64) -> f64 {
+        self.hw.nvme_latency_s + bytes / self.hw.nvme_gbps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PaperModel;
+
+    fn cm() -> CostModel {
+        CostModel::new(HardwareConfig::default(), PaperModel::mixtral_8x7b(), 4.0)
+    }
+
+    #[test]
+    fn transfer_times_match_bandwidth() {
+        let c = cm();
+        let b = c.expert_weight_bytes(Precision::Int4);
+        // ~88 MB int4 expert over 12.8 GB/s ~ 6.9 ms
+        let t = c.pcie_transfer(b);
+        assert!(t > 5e-3 && t < 10e-3, "t={t}");
+        // bf16 expert ~352 MB ~ 27 ms
+        let tb = c.pcie_transfer(c.expert_weight_bytes(Precision::Bf16));
+        assert!(tb > 20e-3 && tb < 35e-3, "tb={tb}");
+        assert!(c.nvme_transfer(b) > t);
+    }
+
+    #[test]
+    fn decode_expert_is_memory_bound() {
+        let c = cm();
+        // one token: flops tiny, weight read dominates
+        let t = c.expert_gpu(1, Precision::Bf16);
+        let expect = c.expert_weight_bytes(Precision::Bf16) / c.hw.hbm_gbps * 4.0;
+        assert!((t - expect - c.hw.kernel_overhead_s * 4.0).abs() / expect < 0.05);
+        // quantized read is cheaper
+        assert!(c.expert_gpu(1, Precision::Int2) < c.expert_gpu(1, Precision::Bf16));
+    }
+
+    #[test]
+    fn prefill_expert_is_compute_bound() {
+        let c = cm();
+        let t_bf16 = c.expert_gpu(128, Precision::Bf16);
+        let t_int4 = c.expert_gpu(128, Precision::Int4);
+        // with many tokens the dequant factor makes int4 *compute* slower
+        assert!(t_int4 > t_bf16);
+    }
+
+    #[test]
+    fn cpu_much_slower_than_gpu_for_batches() {
+        let c = cm();
+        assert!(
+            c.expert_cpu(128, Precision::Bf16) > 20.0 * c.expert_gpu(128, Precision::Bf16)
+        );
+    }
+
+    #[test]
+    fn skip_costs_nothing() {
+        let c = cm();
+        assert_eq!(c.expert_gpu(5, Precision::Skip), 0.0);
+        assert_eq!(c.expert_cpu(5, Precision::Skip), 0.0);
+    }
+
+    #[test]
+    fn durations_scale_with_layers() {
+        let c4 = cm();
+        let c1 = CostModel::new(HardwareConfig::default(), PaperModel::mixtral_8x7b(), 1.0);
+        assert!(c4.attn_decode(10) > 3.0 * c1.attn_decode(10));
+    }
+}

@@ -1,0 +1,101 @@
+//! Accuracy evaluation harness: runs eval suites through a serving engine
+//! with teacher forcing and scores exact-match accuracy, answer NLL, and
+//! top-1 agreement with a BF16 reference (DESIGN.md §2: these fidelity
+//! metrics stand in for the paper's MMLU/CMMLU/GSM8K numbers).
+
+use anyhow::Result;
+
+use crate::coordinator::engine::Engine;
+use crate::model::sampler;
+use crate::workload::EvalSuite;
+
+/// Accuracy metrics over one suite.
+#[derive(Debug, Clone, Default)]
+pub struct SuiteScore {
+    pub name: String,
+    /// Fraction of items whose entire answer is greedily exact.
+    pub exact_match: f64,
+    /// Fraction of answer tokens predicted correctly (greedy).
+    pub token_acc: f64,
+    /// Mean NLL of the ground-truth answer tokens.
+    pub answer_nll: f64,
+    /// Fraction of answer positions whose greedy prediction agrees with a
+    /// reference run (only when a reference is supplied).
+    pub ref_agreement: f64,
+    pub items: usize,
+}
+
+/// Evaluate `engine` on a suite with teacher forcing.
+///
+/// `reference`: optional per-item greedy predictions from a BF16 reference
+/// engine (`predictions` output of a previous [`evaluate_suite`] call).
+pub fn evaluate_suite(
+    engine: &mut Engine,
+    suite: &EvalSuite,
+    limit: usize,
+    reference: Option<&[Vec<i32>]>,
+) -> Result<(SuiteScore, Vec<Vec<i32>>)> {
+    let mut exact = 0usize;
+    let mut tok_hits = 0usize;
+    let mut tok_total = 0usize;
+    let mut nll_sum = 0f64;
+    let mut agree_hits = 0usize;
+    let mut agree_total = 0usize;
+    let mut predictions: Vec<Vec<i32>> = Vec::new();
+
+    let n = suite.items.len().min(limit);
+    for (i, item) in suite.items.iter().take(n).enumerate() {
+        let out = engine.run_forced(&item.prompt, item.answer.len(), Some(&item.answer))?;
+        debug_assert_eq!(out.logits_per_step.len(), item.answer.len());
+        let mut all_ok = true;
+        let mut preds = Vec::with_capacity(item.answer.len());
+        for (logits, &truth) in out.logits_per_step.iter().zip(&item.answer) {
+            let pred = sampler::greedy(logits) as i32;
+            preds.push(pred);
+            if pred == truth {
+                tok_hits += 1;
+            } else {
+                all_ok = false;
+            }
+            tok_total += 1;
+            nll_sum += sampler::nll(logits, truth as usize);
+        }
+        if all_ok {
+            exact += 1;
+        }
+        if let Some(refs) = reference {
+            for (p, r) in preds.iter().zip(&refs[i]) {
+                if p == r {
+                    agree_hits += 1;
+                }
+                agree_total += 1;
+            }
+        }
+        predictions.push(preds);
+    }
+
+    Ok((
+        SuiteScore {
+            name: suite.name.clone(),
+            exact_match: exact as f64 / n.max(1) as f64,
+            token_acc: tok_hits as f64 / tok_total.max(1) as f64,
+            answer_nll: nll_sum / tok_total.max(1) as f64,
+            ref_agreement: if agree_total > 0 {
+                agree_hits as f64 / agree_total as f64
+            } else {
+                f64::NAN
+            },
+            items: n,
+        },
+        predictions,
+    ))
+}
+
+/// Mean token accuracy across several suite scores (a single "benchmark
+/// accuracy" number for sweep plots like Fig. 3 / Fig. 11).
+pub fn mean_token_acc(scores: &[SuiteScore]) -> f64 {
+    if scores.is_empty() {
+        return 0.0;
+    }
+    scores.iter().map(|s| s.token_acc).sum::<f64>() / scores.len() as f64
+}

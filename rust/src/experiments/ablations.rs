@@ -1,0 +1,142 @@
+//! Design-choice ablations beyond the paper's Table 3 (DESIGN.md §9):
+//! scan-resistant vs plain LRU caching, prefetch depth, and SSD-resident
+//! experts — the knobs our reproduction had to pin down empirically.
+
+use anyhow::Result;
+
+use crate::config::{LowMode, PolicyConfig, SystemConfig};
+use crate::coordinator::engine::{Engine, EngineOptions};
+use crate::coordinator::strategy::{DyMoEStrategy, Strategy};
+use crate::util::json::{arr, num, obj, s};
+use crate::util::table::Table;
+
+use super::common::{dymoe_policy, measure_latency, ExpOptions, ModelCtx};
+
+/// Plain-LRU wrapper around DyMoE (disables only the SLRU cache mode).
+struct DyMoEPlainLru(DyMoEStrategy);
+
+impl Strategy for DyMoEPlainLru {
+    fn name(&self) -> String {
+        format!("{} [plain LRU]", self.0.name())
+    }
+    fn plan(&mut self, ctx: &crate::coordinator::strategy::LayerCtx) -> crate::coordinator::strategy::LayerPlan {
+        self.0.plan(ctx)
+    }
+    fn wants_probe(&self) -> bool {
+        self.0.wants_probe()
+    }
+    fn prefetch(&mut self, ctx: &crate::coordinator::strategy::PrefetchCtx) -> Vec<(usize, crate::quant::Precision)> {
+        self.0.prefetch(ctx)
+    }
+    fn warm_residency(&self, l: usize, e: usize) -> Vec<(crate::model::assets::ExpertKey, crate::quant::Precision)> {
+        self.0.warm_residency(l, e)
+    }
+    fn scan_resistant_cache(&self) -> bool {
+        false // the one difference
+    }
+    fn begin_request(&mut self, p: crate::coordinator::Phase) {
+        self.0.begin_request(p)
+    }
+}
+
+/// `dymoe experiment ablation2`: cache mode x prefetch depth x storage tier.
+pub fn ablation2(opts: &ExpOptions) -> Result<String> {
+    let model = &opts.models[0];
+    let ctx = ModelCtx::load(opts, model)?;
+    let vram = 16;
+    let mut out = String::new();
+    let mut payload = Vec::new();
+
+    // --- cache mode ---
+    let mut t = Table::new(
+        &format!("Ablation: scan-resistant (SLRU) vs plain LRU cache ({model} @ {vram} GB)"),
+        &["cache", "TTFT (s)", "TPOT (s)", "hit rate"],
+    );
+    for (name, slru) in [("SLRU (DyMoE)", true), ("plain LRU", false)] {
+        let policy = dymoe_policy(0.75, LowMode::Skip);
+        let strat: Box<dyn Strategy> = if slru {
+            Box::new(DyMoEStrategy::new(policy))
+        } else {
+            Box::new(DyMoEPlainLru(DyMoEStrategy::new(policy)))
+        };
+        let mut e = ctx.edge_engine(vram, strat)?;
+        let (ttft, tpot) = measure_latency(&mut e, opts.requests, 11)?;
+        t.row(vec![
+            name.into(),
+            format!("{ttft:.4}"),
+            format!("{tpot:.4}"),
+            format!("{:.3}", e.cache.stats.hit_rate()),
+        ]);
+        payload.push(obj(vec![
+            ("arm", s(name)),
+            ("ttft", num(ttft)),
+            ("tpot", num(tpot)),
+            ("hit_rate", num(e.cache.stats.hit_rate())),
+        ]));
+    }
+    out.push_str(&t.render());
+    out.push('\n');
+
+    // --- prefetch depth ---
+    let mut t = Table::new(
+        "Ablation: prefetch depth (0 = auto/top_k)",
+        &["depth", "TTFT (s)", "TPOT (s)", "prefetch acc"],
+    );
+    for depth in [0usize, 1, 2, 4, 8] {
+        let policy = PolicyConfig {
+            retention: 0.75,
+            low_mode: LowMode::Skip,
+            prefetch_depth: depth,
+            ..Default::default()
+        };
+        let mut e = ctx.edge_engine(vram, Box::new(DyMoEStrategy::new(policy)))?;
+        let (ttft, tpot) = measure_latency(&mut e, opts.requests, 11)?;
+        t.row(vec![
+            if depth == 0 { "auto".into() } else { format!("{depth}") },
+            format!("{ttft:.4}"),
+            format!("{tpot:.4}"),
+            format!("{:.3}", e.prefetch_stats.accuracy()),
+        ]);
+        payload.push(obj(vec![
+            ("arm", s(&format!("depth{depth}"))),
+            ("ttft", num(ttft)),
+            ("tpot", num(tpot)),
+        ]));
+    }
+    out.push_str(&t.render());
+    out.push('\n');
+
+    // --- storage tier: host-RAM vs SSD-resident experts ---
+    let mut t = Table::new(
+        "Ablation: expert storage tier (NVMe staging before PCIe)",
+        &["tier", "TTFT (s)", "TPOT (s)"],
+    );
+    for (name, ssd) in [("host RAM", false), ("SSD (NVMe)", true)] {
+        let mut sys = SystemConfig::edge_preset(model, vram)?;
+        sys.policy.ssd_resident = ssd;
+        let policy = PolicyConfig {
+            retention: 0.75,
+            low_mode: LowMode::Skip,
+            ssd_resident: ssd,
+            ..Default::default()
+        };
+        let mut e = Engine::with_executor(
+            &ctx.assets,
+            sys,
+            Box::new(DyMoEStrategy::new(policy)),
+            EngineOptions::default(),
+            ctx.exec.clone(),
+        )?;
+        let (ttft, tpot) = measure_latency(&mut e, opts.requests, 11)?;
+        t.row(vec![name.into(), format!("{ttft:.4}"), format!("{tpot:.4}")]);
+        payload.push(obj(vec![
+            ("arm", s(name)),
+            ("ttft", num(ttft)),
+            ("tpot", num(tpot)),
+        ]));
+    }
+    out.push_str(&t.render());
+
+    super::common::save(opts, "ablation2", &out, &arr(payload))?;
+    Ok(out)
+}

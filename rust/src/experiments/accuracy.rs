@@ -1,0 +1,254 @@
+//! Accuracy experiments: Table 1 (uniform quantization), Table 2 (DyMoE
+//! 4/0 vs 4/2 across retention ratios), Fig. 3 (pruning strategies),
+//! Fig. 5 (layer-wise Int2 sensitivity), Fig. 11 (accuracy vs r).
+//!
+//! Accuracy here is the fidelity-metric stand-in documented in DESIGN.md
+//! §2: exact-match / token accuracy on the deterministic pattern suites
+//! (MMLU/CMMLU/GSM8K proxies) plus agreement with the BF16 reference.
+
+use anyhow::Result;
+
+use crate::baselines::Uniform;
+use crate::config::LowMode;
+use crate::coordinator::scheduler::Selection;
+use crate::coordinator::strategy::{
+    layer_major_residency, DyMoEStrategy, LayerCtx, LayerPlan, Strategy,
+};
+use crate::eval::mean_token_acc;
+use crate::model::assets::ExpertKey;
+use crate::quant::Precision;
+use crate::util::json::{arr, num, obj, s};
+use crate::util::table::Table;
+use crate::workload::suite_role;
+
+use super::common::{dymoe_policy, ExpOptions, ModelCtx};
+
+/// Table 1: accuracy under uniform Int2 / Int4 / BF16.
+pub fn table1(opts: &ExpOptions) -> Result<String> {
+    let mut t = Table::new(
+        "Table 1: Accuracy under Uniform Quantization (token-acc / exact-match)",
+        &["Suite", "Model", "Int2", "Int4", "BF16"],
+    );
+    let mut payload = Vec::new();
+    for model in &opts.models {
+        let ctx = ModelCtx::load(opts, model)?;
+        let mut per_prec = Vec::new();
+        for prec in [Precision::Int2, Precision::Int4, Precision::Bf16] {
+            let mut engine = ctx.accuracy_engine(Box::new(Uniform::new(prec)))?;
+            per_prec.push(ctx.eval_all(&mut engine, opts.items, None)?);
+        }
+        for (si, suite) in ctx.suites.iter().enumerate() {
+            t.row(vec![
+                format!("{} ({})", suite.name, suite_role(&suite.name)),
+                model.clone(),
+                format!(
+                    "{:.4}/{:.2}",
+                    per_prec[0][si].token_acc, per_prec[0][si].exact_match
+                ),
+                format!(
+                    "{:.4}/{:.2}",
+                    per_prec[1][si].token_acc, per_prec[1][si].exact_match
+                ),
+                format!(
+                    "{:.4}/{:.2}",
+                    per_prec[2][si].token_acc, per_prec[2][si].exact_match
+                ),
+            ]);
+            payload.push(obj(vec![
+                ("suite", s(&suite.name)),
+                ("model", s(model)),
+                ("int2", num(per_prec[0][si].token_acc)),
+                ("int4", num(per_prec[1][si].token_acc)),
+                ("bf16", num(per_prec[2][si].token_acc)),
+            ]));
+        }
+    }
+    let text = t.render();
+    super::common::save(opts, "table1", &text, &arr(payload))?;
+    Ok(text)
+}
+
+/// Table 2: DyMoE accuracy at 4/0 and 4/2 across retention ratios.
+pub fn table2(opts: &ExpOptions) -> Result<String> {
+    let ratios = [0.75, 0.9, 1.0];
+    let mut t = Table::new(
+        "Table 2: DyMoE accuracy (token-acc), r = average retention",
+        &["Suite", "Model", "High/Low", "r=0.75", "r=0.9", "r=1.0"],
+    );
+    let mut payload = Vec::new();
+    for model in &opts.models {
+        let ctx = ModelCtx::load(opts, model)?;
+        for low in [LowMode::Skip, LowMode::Int2] {
+            let mut per_r = Vec::new();
+            for &r in &ratios {
+                let mut engine = ctx.accuracy_engine(Box::new(DyMoEStrategy::new(
+                    dymoe_policy(r, low),
+                )))?;
+                per_r.push(ctx.eval_all(&mut engine, opts.items, None)?);
+            }
+            for (si, suite) in ctx.suites.iter().enumerate() {
+                t.row(vec![
+                    format!("{} ({})", suite.name, suite_role(&suite.name)),
+                    model.clone(),
+                    low.label().to_string(),
+                    format!("{:.4}", per_r[0][si].token_acc),
+                    format!("{:.4}", per_r[1][si].token_acc),
+                    format!("{:.4}", per_r[2][si].token_acc),
+                ]);
+                payload.push(obj(vec![
+                    ("suite", s(&suite.name)),
+                    ("model", s(model)),
+                    ("mode", s(low.label())),
+                    ("r075", num(per_r[0][si].token_acc)),
+                    ("r090", num(per_r[1][si].token_acc)),
+                    ("r100", num(per_r[2][si].token_acc)),
+                ]));
+            }
+        }
+    }
+    let text = t.render();
+    super::common::save(opts, "table2", &text, &arr(payload))?;
+    Ok(text)
+}
+
+/// Fig. 3: expert-pruning strategies vs retention ratio (full-precision
+/// retained experts, pruned = skipped).  2x2 arms: {Random, Token-based}
+/// selection x {Equal, Depth-based} allocation.
+pub fn fig3(opts: &ExpOptions) -> Result<String> {
+    let model = &opts.models[0];
+    let ctx = ModelCtx::load(opts, model)?;
+    let ratios = [0.25, 0.5, 0.625, 0.75, 0.875, 1.0];
+    let arms: [(&str, Selection, bool); 4] = [
+        ("Random/Equal", Selection::Random, false),
+        ("Random/Depth", Selection::Random, true),
+        ("Token/Equal (Token-based)", Selection::Importance, false),
+        ("Token/Depth (Depth-based)", Selection::Importance, true),
+    ];
+    let mut t = Table::new(
+        &format!("Fig 3: pruning strategies on {model} (mean token-acc)"),
+        &["Strategy", "r=0.25", "r=0.5", "r=0.625", "r=0.75", "r=0.875", "r=1.0"],
+    );
+    let mut payload = Vec::new();
+    for (name, sel, depth) in arms {
+        let mut row = vec![name.to_string()];
+        let mut series = Vec::new();
+        for &r in &ratios {
+            let mut policy = dymoe_policy(r, LowMode::Skip);
+            policy.high = Precision::Bf16; // pure pruning, no quantization
+            policy.depth_aware = depth;
+            let mut strat = DyMoEStrategy::new(policy);
+            strat.selection = sel;
+            let mut engine = ctx.accuracy_engine(Box::new(strat))?;
+            let acc = mean_token_acc(&ctx.eval_all(&mut engine, opts.items, None)?);
+            row.push(format!("{acc:.4}"));
+            series.push(num(acc));
+        }
+        t.row(row);
+        payload.push(obj(vec![("strategy", s(name)), ("acc", arr(series))]));
+    }
+    let text = t.render();
+    super::common::save(opts, "fig3", &text, &arr(payload))?;
+    Ok(text)
+}
+
+/// Per-layer Int2 strategy for Fig. 5: every expert of one layer at Int2,
+/// everything else BF16.
+struct LayerInt2 {
+    target_layer: usize,
+}
+
+impl Strategy for LayerInt2 {
+    fn name(&self) -> String {
+        format!("LayerInt2(L{})", self.target_layer)
+    }
+
+    fn plan(&mut self, ctx: &LayerCtx) -> LayerPlan {
+        let p = if ctx.layer == self.target_layer {
+            Precision::Int2
+        } else {
+            Precision::Bf16
+        };
+        LayerPlan::uniform(ctx.n_experts, p)
+    }
+
+    fn warm_residency(&self, n_layers: usize, n_experts: usize) -> Vec<(ExpertKey, Precision)> {
+        layer_major_residency(n_layers, n_experts, Precision::Bf16)
+    }
+}
+
+/// Fig. 5: layer-wise sensitivity — quantize one layer to Int2 at a time.
+pub fn fig5(opts: &ExpOptions) -> Result<String> {
+    let mut out = String::new();
+    let mut payload = Vec::new();
+    for model in &opts.models {
+        let ctx = ModelCtx::load(opts, model)?;
+        let n_layers = ctx.assets.manifest.model.n_layers;
+        let mut t = Table::new(
+            &format!("Fig 5: layer-wise Int2 sensitivity on {model}"),
+            &["Layer", "mean token-acc", "mean answer NLL"],
+        );
+        // BF16 reference row
+        let mut engine = ctx.accuracy_engine(Box::new(Uniform::new(Precision::Bf16)))?;
+        let scores = ctx.eval_all(&mut engine, opts.items, None)?;
+        let base_acc = mean_token_acc(&scores);
+        let base_nll: f64 =
+            scores.iter().map(|x| x.answer_nll).sum::<f64>() / scores.len() as f64;
+        t.row(vec!["none".into(), format!("{base_acc:.4}"), format!("{base_nll:.4}")]);
+        let mut series = Vec::new();
+        for layer in 0..n_layers {
+            let mut engine =
+                ctx.accuracy_engine(Box::new(LayerInt2 { target_layer: layer }))?;
+            let scores = ctx.eval_all(&mut engine, opts.items, None)?;
+            let acc = mean_token_acc(&scores);
+            let nll: f64 =
+                scores.iter().map(|x| x.answer_nll).sum::<f64>() / scores.len() as f64;
+            t.row(vec![format!("{layer}"), format!("{acc:.4}"), format!("{nll:.4}")]);
+            series.push(obj(vec![("layer", num(layer as f64)), ("acc", num(acc)), ("nll", num(nll))]));
+        }
+        payload.push(obj(vec![
+            ("model", s(model)),
+            ("bf16_acc", num(base_acc)),
+            ("layers", arr(series)),
+        ]));
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    super::common::save(opts, "fig5", &out, &arr(payload))?;
+    Ok(out)
+}
+
+/// Fig. 11: accuracy vs retention ratio for 4/0 and 4/2.
+pub fn fig11(opts: &ExpOptions) -> Result<String> {
+    let ratios = [0.5, 0.625, 0.75, 0.875, 1.0];
+    let mut out = String::new();
+    let mut payload = Vec::new();
+    for model in &opts.models {
+        let ctx = ModelCtx::load(opts, model)?;
+        let mut t = Table::new(
+            &format!("Fig 11: accuracy vs retention ratio on {model} (mean token-acc)"),
+            &["Mode", "r=0.5", "r=0.625", "r=0.75", "r=0.875", "r=1.0"],
+        );
+        for low in [LowMode::Skip, LowMode::Int2] {
+            let mut row = vec![low.label().to_string()];
+            let mut series = Vec::new();
+            for &r in &ratios {
+                let mut engine = ctx.accuracy_engine(Box::new(DyMoEStrategy::new(
+                    dymoe_policy(r, low),
+                )))?;
+                let acc = mean_token_acc(&ctx.eval_all(&mut engine, opts.items, None)?);
+                row.push(format!("{acc:.4}"));
+                series.push(num(acc));
+            }
+            t.row(row);
+            payload.push(obj(vec![
+                ("model", s(model)),
+                ("mode", s(low.label())),
+                ("acc", arr(series)),
+            ]));
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    super::common::save(opts, "fig11", &out, &arr(payload))?;
+    Ok(out)
+}

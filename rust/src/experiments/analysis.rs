@@ -1,0 +1,228 @@
+//! Observation experiments: Fig. 4 (heavy-hitter vs general-token routing
+//! distributions) and Fig. 6 (adjacent-layer activation similarity +
+//! look-ahead predictability).
+
+use anyhow::Result;
+
+use crate::coordinator::{importance, top_k_route, Route};
+use crate::model::assets::ExpertKey;
+use crate::quant::Precision;
+use crate::util::json::{arr, num, obj, s};
+use crate::util::table::Table;
+use crate::workload::tokens;
+
+use super::common::{ExpOptions, ModelCtx};
+
+/// Everything observed at one layer during a BF16 prefill trace.
+pub struct LayerTrace {
+    pub routes: Vec<Route>,
+    pub token_scores: Vec<f32>,
+    pub gate_probs: Vec<f32>,
+    /// Post-layer residual stream `[T, d]` (valid tokens only).
+    pub hidden: Vec<f32>,
+}
+
+/// Replicate the engine's prefill numerics at BF16 (no timing) and record
+/// per-layer routing/scores/hiddens for the observation figures.
+pub fn trace_prefill(ctx: &ModelCtx, prompt: &[i32]) -> Result<Vec<LayerTrace>> {
+    let m = ctx.assets.manifest.model.clone();
+    let seq = prompt.len();
+    let mut padded = prompt.to_vec();
+    padded.resize(m.max_seq, 0);
+    let mut h = ctx.exec.embed_seq(&padded)?;
+    let d = m.d_model;
+    let mut out = Vec::new();
+    for layer in 0..m.n_layers {
+        let po = ctx.exec.attn_prefill(layer, &h, seq)?;
+        let routes: Vec<Route> = (0..seq)
+            .map(|t| top_k_route(&po.gate_probs[t * m.n_experts..(t + 1) * m.n_experts], m.top_k))
+            .collect();
+        // mix all routed experts at bf16
+        let mut mix = vec![0f32; m.max_seq * d];
+        for (t, route) in routes.iter().enumerate() {
+            for &(e, w) in route {
+                let rows = [&po.moe_in[t * d..(t + 1) * d]];
+                let y = ctx.exec.expert_ffn(ExpertKey::new(layer, e), Precision::Bf16, &rows)?;
+                for (a, b) in mix[t * d..(t + 1) * d].iter_mut().zip(&y[0]) {
+                    *a += w * b;
+                }
+            }
+        }
+        let mut next = po.h_resid.clone();
+        for (a, b) in next.iter_mut().zip(&mix) {
+            *a += b;
+        }
+        out.push(LayerTrace {
+            routes,
+            token_scores: po.token_scores[..seq].to_vec(),
+            gate_probs: po.gate_probs.clone(),
+            hidden: next[..seq * d].to_vec(),
+        });
+        h = next;
+    }
+    Ok(out)
+}
+
+/// Fig. 4: expert routing distributions of heavy-hitter vs general tokens
+/// for two contrasting inputs.
+pub fn fig4(opts: &ExpOptions) -> Result<String> {
+    let model = &opts.models[0];
+    let ctx = ModelCtx::load(opts, model)?;
+    let m = ctx.assets.manifest.model.clone();
+    let probe_layer = m.n_layers / 2;
+
+    // Two inputs from different pattern domains (shifting hotspots).
+    let mk_copy = {
+        let seg: Vec<i32> = (0..20).map(|i| tokens::LETTER0 + (i * 5) % 30).collect();
+        let mut p = vec![tokens::BOS, tokens::TAG_COPY];
+        p.extend(&seg);
+        p.push(tokens::DELIM);
+        p.extend(&seg[..10]);
+        p
+    };
+    let mk_arith = {
+        let mut p = vec![tokens::BOS, tokens::TAG_ARITH];
+        p.extend((0..30).map(|i| tokens::DIGIT0 + (3 + i * 2) % 10));
+        p
+    };
+
+    let mut out = String::new();
+    let mut payload = Vec::new();
+    for (name, prompt) in [("input-A (copy)", mk_copy), ("input-B (arith)", mk_arith)] {
+        let trace = trace_prefill(&ctx, &prompt)?;
+        let lt = &trace[probe_layer];
+        let seq = lt.routes.len();
+        let hh = importance::heavy_hitters(&lt.token_scores, seq, (seq / 5).max(1));
+        let is_hh: Vec<bool> = (0..seq).map(|t| hh.contains(&t)).collect();
+        let mut heavy_load = vec![0usize; m.n_experts];
+        let mut total_load = vec![0usize; m.n_experts];
+        for (t, route) in lt.routes.iter().enumerate() {
+            for &(e, _) in route {
+                total_load[e] += 1;
+                if is_hh[t] {
+                    heavy_load[e] += 1;
+                }
+            }
+        }
+        let mut t = Table::new(
+            &format!("Fig 4: {name}, layer {probe_layer} of {model}"),
+            &["Expert", "total-token load", "heavy-hitter load"],
+        );
+        for e in 0..m.n_experts {
+            t.row(vec![
+                format!("E{e}"),
+                format!("{}", total_load[e]),
+                format!("{}", heavy_load[e]),
+            ]);
+        }
+        // correlation between total load and heavy load (paper: high)
+        let corr = pearson(
+            &total_load.iter().map(|&x| x as f64).collect::<Vec<_>>(),
+            &heavy_load.iter().map(|&x| x as f64).collect::<Vec<_>>(),
+        );
+        out.push_str(&t.render());
+        out.push_str(&format!("load/heavy-hitter correlation: {corr:.3}\n\n"));
+        payload.push(obj(vec![
+            ("input", s(name)),
+            ("total", arr(total_load.iter().map(|&x| num(x as f64)).collect::<Vec<_>>())),
+            ("heavy", arr(heavy_load.iter().map(|&x| num(x as f64)).collect::<Vec<_>>())),
+            ("correlation", num(corr)),
+        ]));
+    }
+    super::common::save(opts, "fig4", &out, &arr(payload))?;
+    Ok(out)
+}
+
+fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len() as f64;
+    let ma = a.iter().sum::<f64>() / n;
+    let mb = b.iter().sum::<f64>() / n;
+    let cov: f64 = a.iter().zip(b).map(|(x, y)| (x - ma) * (y - mb)).sum();
+    let va: f64 = a.iter().map(|x| (x - ma).powi(2)).sum();
+    let vb: f64 = b.iter().map(|x| (x - mb).powi(2)).sum();
+    if va <= 0.0 || vb <= 0.0 {
+        return 0.0;
+    }
+    cov / (va.sqrt() * vb.sqrt())
+}
+
+/// Fig. 6: adjacent-layer hidden-state cosine similarity + Eq.-6 probe
+/// top-k prediction overlap.
+pub fn fig6(opts: &ExpOptions) -> Result<String> {
+    let mut out = String::new();
+    let mut payload = Vec::new();
+    for model in &opts.models {
+        let ctx = ModelCtx::load(opts, model)?;
+        let m = ctx.assets.manifest.model.clone();
+        let d = m.d_model;
+        // a few prompts from the trace generator
+        let mut gen = crate::workload::TraceGen::new(5, m.max_seq.min(64), 8);
+        let n_prompts = 4;
+        let mut cos_sum = vec![0f64; m.n_layers - 1];
+        let mut probe_hits = vec![0usize; m.n_layers - 1];
+        let mut probe_total = vec![0usize; m.n_layers - 1];
+        for _ in 0..n_prompts {
+            let r = gen.next_request();
+            let trace = trace_prefill(&ctx, &r.prompt)?;
+            let seq = trace[0].routes.len();
+            for l in 0..m.n_layers - 1 {
+                // mean token-wise cosine similarity h_l vs h_{l+1}
+                let mut c = 0f64;
+                for t in 0..seq {
+                    c += cosine(
+                        &trace[l].hidden[t * d..(t + 1) * d],
+                        &trace[l + 1].hidden[t * d..(t + 1) * d],
+                    );
+                }
+                cos_sum[l] += c / seq as f64 / n_prompts as f64;
+                // Eq.-6 predictability: probe(l+1) from h_l vs actual routes
+                let probe = ctx.exec.gate_probe(l + 1, &{
+                    let mut padded = trace[l].hidden.clone();
+                    padded.resize(m.max_seq * d, 0.0);
+                    padded
+                })?;
+                for t in 0..seq {
+                    let pred = top_k_route(&probe[t * m.n_experts..(t + 1) * m.n_experts], m.top_k);
+                    let actual: std::collections::HashSet<usize> =
+                        trace[l + 1].routes[t].iter().map(|&(e, _)| e).collect();
+                    probe_hits[l] += pred.iter().filter(|&&(e, _)| actual.contains(&e)).count();
+                    probe_total[l] += m.top_k;
+                }
+            }
+        }
+        let mut t = Table::new(
+            &format!("Fig 6: adjacent-layer similarity on {model}"),
+            &["Layer pair", "cosine sim", "probe top-k overlap"],
+        );
+        let mut series = Vec::new();
+        for l in 0..m.n_layers - 1 {
+            let overlap = probe_hits[l] as f64 / probe_total[l].max(1) as f64;
+            t.row(vec![
+                format!("{l}->{}", l + 1),
+                format!("{:.4}", cos_sum[l]),
+                format!("{overlap:.3}"),
+            ]);
+            series.push(obj(vec![
+                ("layer", num(l as f64)),
+                ("cos", num(cos_sum[l])),
+                ("overlap", num(overlap)),
+            ]));
+        }
+        payload.push(obj(vec![("model", s(model)), ("pairs", arr(series))]));
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    super::common::save(opts, "fig6", &out, &arr(payload))?;
+    Ok(out)
+}
+
+fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let dot: f64 = a.iter().zip(b).map(|(x, y)| (*x as f64) * (*y as f64)).sum();
+    let na: f64 = a.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+    let nb: f64 = b.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot / (na * nb)
+    }
+}

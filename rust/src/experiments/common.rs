@@ -1,0 +1,147 @@
+//! Shared machinery for the experiment drivers: engine factories over a
+//! shared executor, eval sweeps, latency traces, result persistence.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::{LowMode, PolicyConfig, SystemConfig, GB};
+use crate::coordinator::engine::{Engine, EngineOptions};
+use crate::coordinator::strategy::Strategy;
+use crate::eval::{evaluate_suite, SuiteScore};
+use crate::model::assets::ModelAssets;
+use crate::model::executor::Executor;
+use crate::workload::{load_suites, EvalSuite, TraceGen};
+
+/// Options shared by every experiment driver.
+#[derive(Debug, Clone)]
+pub struct ExpOptions {
+    pub artifacts: String,
+    pub out_dir: String,
+    /// Items per eval suite for accuracy sweeps.
+    pub items: usize,
+    /// Requests per latency measurement.
+    pub requests: usize,
+    pub models: Vec<String>,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions {
+            artifacts: "artifacts".into(),
+            out_dir: "results".into(),
+            items: 15,
+            requests: 5,
+            models: vec!["mixtral-mini".into(), "qwen-mini".into()],
+        }
+    }
+}
+
+/// A model loaded once and shared across engine configurations.
+pub struct ModelCtx {
+    pub assets: Arc<ModelAssets>,
+    pub exec: Rc<Executor>,
+    pub suites: Vec<EvalSuite>,
+}
+
+impl ModelCtx {
+    pub fn load(opts: &ExpOptions, model: &str) -> Result<ModelCtx> {
+        let assets = Arc::new(
+            ModelAssets::load(&opts.artifacts, model)
+                .with_context(|| format!("loading model {model}"))?,
+        );
+        let exec = Rc::new(Executor::new(assets.clone())?);
+        let suites = load_suites(&opts.artifacts)?;
+        Ok(ModelCtx { assets, exec, suites })
+    }
+
+    /// Engine with effectively unlimited VRAM (accuracy-only runs).
+    pub fn accuracy_engine(&self, strategy: Box<dyn Strategy>) -> Result<Engine> {
+        let mut sys = SystemConfig::edge_preset(&self.assets.manifest.model.name, 24)?;
+        sys.hardware.vram_bytes = 4096 * GB;
+        Engine::with_executor(
+            &self.assets,
+            sys,
+            strategy,
+            EngineOptions {
+                collect_logits: true,
+                strict_precision: true,
+                ..Default::default()
+            },
+            self.exec.clone(),
+        )
+    }
+
+    /// Engine with a real edge preset (latency runs).
+    pub fn edge_engine(&self, vram_gb: u64, strategy: Box<dyn Strategy>) -> Result<Engine> {
+        let sys = SystemConfig::edge_preset(&self.assets.manifest.model.name, vram_gb)?;
+        Engine::with_executor(
+            &self.assets,
+            sys,
+            strategy,
+            EngineOptions::default(),
+            self.exec.clone(),
+        )
+    }
+
+    /// Evaluate every suite on an engine; returns per-suite scores.
+    pub fn eval_all(
+        &self,
+        engine: &mut Engine,
+        items: usize,
+        reference: Option<&BTreeMap<String, Vec<Vec<i32>>>>,
+    ) -> Result<Vec<SuiteScore>> {
+        let mut out = Vec::new();
+        for suite in &self.suites {
+            let r = reference.and_then(|m| m.get(&suite.name)).map(|v| &v[..]);
+            let (score, _) = evaluate_suite(engine, suite, items, r)?;
+            out.push(score);
+        }
+        Ok(out)
+    }
+
+    /// BF16 reference predictions per suite (for agreement metrics).
+    pub fn reference_predictions(
+        &self,
+        items: usize,
+    ) -> Result<BTreeMap<String, Vec<Vec<i32>>>> {
+        let mut engine = self.accuracy_engine(Box::new(
+            crate::baselines::Uniform::new(crate::quant::Precision::Bf16),
+        ))?;
+        let mut map = BTreeMap::new();
+        for suite in &self.suites {
+            let (_, preds) = evaluate_suite(&mut engine, suite, items, None)?;
+            map.insert(suite.name.clone(), preds);
+        }
+        Ok(map)
+    }
+}
+
+/// Mean (TTFT, TPOT) over a deterministic ShareGPT-like trace.
+pub fn measure_latency(engine: &mut Engine, requests: usize, seed: u64) -> Result<(f64, f64)> {
+    let m = engine.model().clone();
+    let mut gen = TraceGen::new(seed, m.max_seq.min(80), (m.max_cache - m.max_seq).min(16));
+    let (mut ttft, mut tpot) = (0.0, 0.0);
+    for _ in 0..requests {
+        let r = gen.next_request();
+        let o = engine.run(&r.prompt, r.max_new)?;
+        ttft += o.ttft / requests as f64;
+        tpot += o.tpot() / requests as f64;
+    }
+    Ok((ttft, tpot))
+}
+
+/// DyMoE policy helper for the standard configurations.
+pub fn dymoe_policy(retention: f64, low: LowMode) -> PolicyConfig {
+    PolicyConfig { retention, low_mode: low, ..Default::default() }
+}
+
+/// Persist an experiment's rendered text + JSON payload.
+pub fn save(opts: &ExpOptions, id: &str, text: &str, json: &crate::util::json::Json) -> Result<()> {
+    std::fs::create_dir_all(&opts.out_dir)?;
+    std::fs::write(format!("{}/{id}.txt", opts.out_dir), text)?;
+    std::fs::write(format!("{}/{id}.json", opts.out_dir), json.to_string())?;
+    Ok(())
+}

@@ -1,0 +1,234 @@
+//! Latency experiments: Fig. 1 (pipeline timelines), Fig. 2 (memory
+//! demand), Fig. 10 (end-to-end vs baselines), Table 3 (ablation).
+
+use anyhow::Result;
+
+use crate::baselines::{
+    AccelerateStatic, Fiddler, LoadOnDemand, MixtralOffloading, MoeInfinity, Uniform,
+};
+use crate::config::{LowMode, PolicyConfig, SystemConfig, GB};
+use crate::coordinator::engine::EngineOptions;
+use crate::coordinator::strategy::{DyMoEStrategy, Strategy};
+use crate::quant::{expert_bytes, Precision};
+use crate::util::json::{arr, num, obj, s};
+use crate::util::table::Table;
+
+use super::common::{dymoe_policy, measure_latency, ExpOptions, ModelCtx};
+
+/// Fig. 2b: paper-scale memory demand vs edge VRAM budgets.
+pub fn fig2(opts: &ExpOptions) -> Result<String> {
+    let mut t = Table::new(
+        "Fig 2b: paper-scale memory demand (GB) vs edge VRAM",
+        &["Model", "BF16", "Int8", "Int4", "Int2", "fits 12/16/24 GB (int4)"],
+    );
+    let mut payload = Vec::new();
+    for model in &opts.models {
+        let paper = crate::config::PaperModel::for_mini(model)?;
+        let per_prec: Vec<f64> = [Precision::Bf16, Precision::Int8, Precision::Int4, Precision::Int2]
+            .iter()
+            .map(|&p| {
+                let experts = (paper.n_layers * paper.n_experts) as f64
+                    * expert_bytes(paper.d_model, paper.d_ffn, 128, p) as f64;
+                (experts + paper.non_expert_bytes as f64) / GB as f64
+            })
+            .collect();
+        let fits: Vec<String> = [12.0, 16.0, 24.0]
+            .iter()
+            .map(|&v| if per_prec[2] <= v { "yes" } else { "no" }.to_string())
+            .collect();
+        t.row(vec![
+            paper.name.to_string(),
+            format!("{:.1}", per_prec[0]),
+            format!("{:.1}", per_prec[1]),
+            format!("{:.1}", per_prec[2]),
+            format!("{:.1}", per_prec[3]),
+            fits.join("/"),
+        ]);
+        payload.push(obj(vec![
+            ("model", s(paper.name)),
+            ("bf16_gb", num(per_prec[0])),
+            ("int8_gb", num(per_prec[1])),
+            ("int4_gb", num(per_prec[2])),
+            ("int2_gb", num(per_prec[3])),
+        ]));
+    }
+    let text = t.render();
+    super::common::save(opts, "fig2", &text, &arr(payload))?;
+    Ok(text)
+}
+
+/// Fig. 1: qualitative pipeline comparison — ASCII timelines for
+/// load-on-demand, prefetching-only, and DyMoE on one decode-heavy request.
+pub fn fig1(opts: &ExpOptions) -> Result<String> {
+    let model = &opts.models[0];
+    let ctx = ModelCtx::load(opts, model)?;
+    let vram = 16;
+    let mut out = String::new();
+    let arms: Vec<(&str, Box<dyn Strategy>)> = vec![
+        ("(a) Load-on-Demand", Box::new(LoadOnDemand::new(Precision::Bf16))),
+        (
+            "(b) Cache + Prefetch (uniform precision)",
+            Box::new(DyMoEStrategy::new(PolicyConfig {
+                retention: 1.0,
+                dyquant_enabled: false,
+                ..Default::default()
+            })),
+        ),
+        (
+            "(c) DyMoE (dynamic mixed precision)",
+            Box::new(DyMoEStrategy::new(dymoe_policy(0.75, LowMode::Skip))),
+        ),
+    ];
+    let mut payload = Vec::new();
+    for (name, strat) in arms {
+        let sys = SystemConfig::edge_preset(model, vram)?;
+        let mut e = crate::coordinator::engine::Engine::with_executor(
+            &ctx.assets,
+            sys,
+            strat,
+            EngineOptions { record_timeline: true, ..Default::default() },
+            ctx.exec.clone(),
+        )?;
+        let prompt: Vec<i32> = (0..32).map(|i| 1 + (i * 7) % 60).collect();
+        let o = e.run(&prompt, 6)?;
+        out.push_str(&format!(
+            "{name}: TTFT={:.4}s TPOT={:.4}s\n{}\n",
+            o.ttft,
+            o.tpot(),
+            e.timeline.render_ascii(100)
+        ));
+        payload.push(obj(vec![
+            ("arm", s(name)),
+            ("ttft", num(o.ttft)),
+            ("tpot", num(o.tpot())),
+        ]));
+    }
+    super::common::save(opts, "fig1", &out, &arr(payload))?;
+    Ok(out)
+}
+
+fn fig10_systems(
+    m: &crate::model::manifest::MiniModel,
+) -> Vec<(&'static str, Box<dyn Strategy>)> {
+    vec![
+        (
+            "DyMoE(4/0)",
+            Box::new(DyMoEStrategy::new(dymoe_policy(0.75, LowMode::Skip))),
+        ),
+        (
+            "DyMoE(4/2)",
+            Box::new(DyMoEStrategy::new(dymoe_policy(0.75, LowMode::Int2))),
+        ),
+        ("Accelerate(int4)", Box::new(AccelerateStatic::new(Precision::Int4))),
+        (
+            "Mixtral-Offloading(int4)",
+            Box::new(MixtralOffloading::new(Precision::Int4, m.top_k)),
+        ),
+        (
+            "MoE-Infinity(int4)",
+            Box::new(MoeInfinity::new(Precision::Int4, m.n_layers, m.n_experts, m.top_k)),
+        ),
+        ("Fiddler(bf16)", Box::new(Fiddler)),
+    ]
+}
+
+/// Fig. 10: end-to-end TTFT / TPOT across models, VRAM budgets, systems.
+pub fn fig10(opts: &ExpOptions) -> Result<String> {
+    let mut out = String::new();
+    let mut payload = Vec::new();
+    for model in &opts.models {
+        let ctx = ModelCtx::load(opts, model)?;
+        let m = ctx.assets.manifest.model.clone();
+        for vram in [12u64, 16, 24] {
+            let mut t = Table::new(
+                &format!("Fig 10: {model} @ {vram} GB"),
+                &["System", "TTFT (s)", "TPOT (s)", "TTFT x", "TPOT x"],
+            );
+            let mut base = (0.0, 0.0);
+            for (i, (name, strat)) in fig10_systems(&m).into_iter().enumerate() {
+                let mut e = ctx.edge_engine(vram, strat)?;
+                let (ttft, tpot) = measure_latency(&mut e, opts.requests, 11)?;
+                if i == 0 {
+                    base = (ttft, tpot);
+                }
+                t.row(vec![
+                    name.to_string(),
+                    format!("{ttft:.4}"),
+                    format!("{tpot:.4}"),
+                    format!("{:.2}x", ttft / base.0),
+                    format!("{:.2}x", tpot / base.1),
+                ]);
+                payload.push(obj(vec![
+                    ("model", s(model)),
+                    ("vram_gb", num(vram as f64)),
+                    ("system", s(name)),
+                    ("ttft", num(ttft)),
+                    ("tpot", num(tpot)),
+                ]));
+            }
+            out.push_str(&t.render());
+            out.push('\n');
+        }
+    }
+    super::common::save(opts, "fig10", &out, &arr(payload))?;
+    Ok(out)
+}
+
+/// Table 3: incremental ablation at 16 and 24 GB on the coarse model.
+pub fn table3(opts: &ExpOptions) -> Result<String> {
+    let model = &opts.models[0];
+    let ctx = ModelCtx::load(opts, model)?;
+    let rows: Vec<(&str, fn() -> Box<dyn Strategy>)> = vec![
+        ("1. Load on Demand", || Box::new(LoadOnDemand::new(Precision::Int4))),
+        ("2. Cache", || Box::new(Uniform::new(Precision::Int4))),
+        ("3. Cache + Prefetch", || {
+            Box::new(DyMoEStrategy::new(PolicyConfig {
+                retention: 1.0,
+                dyquant_enabled: false,
+                prefetch_enabled: true,
+                ..Default::default()
+            }))
+        }),
+        ("4. Cache + Dyquant(4/2)", || {
+            Box::new(DyMoEStrategy::new(PolicyConfig {
+                retention: 0.75,
+                low_mode: LowMode::Int2,
+                prefetch_enabled: false,
+                ..Default::default()
+            }))
+        }),
+        ("5. Cache + Dyquant(4/2) + Prefetcher", || {
+            Box::new(DyMoEStrategy::new(dymoe_policy(0.75, LowMode::Int2)))
+        }),
+        ("6. Cache + Dyquant(4/0) + Prefetcher", || {
+            Box::new(DyMoEStrategy::new(dymoe_policy(0.75, LowMode::Skip)))
+        }),
+    ];
+    let mut t = Table::new(
+        &format!("Table 3: ablation on {model}"),
+        &["Configuration", "16GB TTFT", "16GB TPOT", "24GB TTFT", "24GB TPOT"],
+    );
+    let mut payload = Vec::new();
+    for (name, mk) in rows {
+        let mut cells = vec![name.to_string()];
+        let mut nums = Vec::new();
+        for vram in [16u64, 24] {
+            let mut e = ctx.edge_engine(vram, mk())?;
+            let (ttft, tpot) = measure_latency(&mut e, opts.requests, 11)?;
+            cells.push(format!("{ttft:.4}"));
+            cells.push(format!("{tpot:.4}"));
+            nums.push((vram, ttft, tpot));
+        }
+        t.row(cells);
+        payload.push(obj(vec![
+            ("config", s(name)),
+            ("ttft16", num(nums[0].1)),
+            ("tpot16", num(nums[0].2)),
+            ("ttft24", num(nums[1].1)),
+            ("tpot24", num(nums[1].2)),
+        ]));
+    }
+    let text = t.render();
+    super::common::save(opts, "table3", &text, &arr(payload))?;
+    Ok(text)
+}

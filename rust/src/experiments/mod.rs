@@ -1,0 +1,39 @@
+//! Experiment drivers — one per table/figure of the paper's evaluation
+//! (see DESIGN.md §5 for the experiment index).  Each driver regenerates
+//! its table/figure as aligned text (printed + saved to `results/<id>.txt`)
+//! plus a machine-readable `results/<id>.json`.
+
+pub mod ablations;
+pub mod accuracy;
+pub mod analysis;
+pub mod common;
+pub mod latency;
+
+use anyhow::{bail, Result};
+
+pub use common::ExpOptions;
+
+/// All experiment ids, in the order the paper presents them.
+pub const ALL: &[&str] = &[
+    "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig10", "fig11",
+    "table1", "table2", "table3", "ablation2",
+];
+
+/// Run one experiment by id; returns the rendered text.
+pub fn run(id: &str, opts: &ExpOptions) -> Result<String> {
+    Ok(match id {
+        "fig1" => latency::fig1(opts)?,
+        "fig2" => latency::fig2(opts)?,
+        "fig3" => accuracy::fig3(opts)?,
+        "fig4" => analysis::fig4(opts)?,
+        "fig5" => accuracy::fig5(opts)?,
+        "fig6" => analysis::fig6(opts)?,
+        "fig10" => latency::fig10(opts)?,
+        "fig11" => accuracy::fig11(opts)?,
+        "table1" => accuracy::table1(opts)?,
+        "table2" => accuracy::table2(opts)?,
+        "table3" => latency::table3(opts)?,
+        "ablation2" => ablations::ablation2(opts)?,
+        _ => bail!("unknown experiment {id:?}; known: {ALL:?}"),
+    })
+}

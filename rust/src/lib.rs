@@ -1,0 +1,37 @@
+//! # DyMoE — Dynamic Expert Orchestration with Mixed-Precision Quantization
+//!
+//! Reproduction of the DyMoE paper (see `DESIGN.md`): a three-layer
+//! Rust + JAX + Pallas serving stack for MoE inference on edge devices.
+//!
+//! * **L3 (this crate)** — the coordinator: phase-adaptive expert
+//!   importance estimation, depth-aware precision scheduling, the
+//!   mixed-precision LRU cache, the look-ahead prefetcher, plus the
+//!   offloading baselines the paper compares against, a memory-hierarchy /
+//!   virtual-time substrate, and the experiment drivers for every table
+//!   and figure in the paper.
+//! * **L2/L1 (python/, build-time only)** — the mini-MoE JAX model and its
+//!   Pallas kernels, AOT-lowered to HLO text artifacts executed here via
+//!   the PJRT CPU client ([`runtime`]).
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod eval;
+pub mod experiments;
+pub mod memory;
+pub mod metrics;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod util;
+pub mod workload;
+
+/// Convenient re-exports for examples and binaries.
+pub mod prelude {
+    pub use crate::config::{LowMode, PolicyConfig, SystemConfig, GB};
+    pub use crate::coordinator::engine::{Engine, RequestOutput};
+    pub use crate::coordinator::strategy::{DyMoEStrategy, Strategy};
+    pub use crate::model::assets::ModelAssets;
+    pub use crate::quant::Precision;
+}

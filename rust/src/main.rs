@@ -1,0 +1,277 @@
+//! `dymoe` — the L3 coordinator CLI.
+//!
+//! ```text
+//! dymoe info       --model mixtral-mini
+//! dymoe serve      --model mixtral-mini --vram 16 --requests 10 [--strategy dymoe-40]
+//! dymoe experiment <fig1|...|table3|all> [--items N] [--requests N] [--models a,b]
+//! dymoe timeline   --model mixtral-mini --vram 16
+//! ```
+//!
+//! (Arg parsing is hand-rolled: clap is not vendored in this offline
+//! build — see Cargo.toml.)
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use dymoe::baselines::{
+    AccelerateStatic, Fiddler, LoadOnDemand, MixtralOffloading, MoeInfinity, Uniform,
+};
+use dymoe::config::{LowMode, PolicyConfig, SystemConfig};
+use dymoe::coordinator::engine::{Engine, EngineOptions};
+use dymoe::coordinator::strategy::{DyMoEStrategy, Strategy};
+use dymoe::experiments::{self, ExpOptions};
+use dymoe::model::assets::ModelAssets;
+use dymoe::quant::Precision;
+use dymoe::util::table::{fmt_secs, Table};
+use dymoe::workload::TraceGen;
+
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+fn parse_args(argv: &[String]) -> Args {
+    let mut positional = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    Args { positional, flags }
+}
+
+impl Args {
+    fn get(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        self.flags
+            .get(name)
+            .map(|v| v.parse().map_err(|_| anyhow!("--{name} wants a number")))
+            .unwrap_or(Ok(default))
+    }
+}
+
+fn make_strategy(
+    name: &str,
+    m: &dymoe::model::manifest::MiniModel,
+    retention: f64,
+) -> Result<Box<dyn Strategy>> {
+    Ok(match name {
+        "dymoe-40" | "dymoe" => Box::new(DyMoEStrategy::new(PolicyConfig {
+            retention,
+            low_mode: LowMode::Skip,
+            ..Default::default()
+        })),
+        "dymoe-42" => Box::new(DyMoEStrategy::new(PolicyConfig {
+            retention,
+            low_mode: LowMode::Int2,
+            ..Default::default()
+        })),
+        "lod" => Box::new(LoadOnDemand::new(Precision::Int4)),
+        "uniform-int4" => Box::new(Uniform::new(Precision::Int4)),
+        "uniform-bf16" => Box::new(Uniform::new(Precision::Bf16)),
+        "accelerate" => Box::new(AccelerateStatic::new(Precision::Int4)),
+        "mixtral-offloading" => Box::new(MixtralOffloading::new(Precision::Int4, m.top_k)),
+        "moe-infinity" => {
+            Box::new(MoeInfinity::new(Precision::Int4, m.n_layers, m.n_experts, m.top_k))
+        }
+        "fiddler" => Box::new(Fiddler),
+        _ => bail!(
+            "unknown strategy {name:?}; try dymoe-40, dymoe-42, lod, uniform-int4, \
+             uniform-bf16, accelerate, mixtral-offloading, moe-infinity, fiddler"
+        ),
+    })
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let artifacts = args.get("artifacts", "artifacts");
+    let model = args.get("model", "mixtral-mini");
+    let assets = ModelAssets::load(&artifacts, &model)?;
+    let m = &assets.manifest.model;
+    println!("model        : {}", m.name);
+    println!("layers       : {}", m.n_layers);
+    println!("d_model/ffn  : {}/{}", m.d_model, m.d_ffn);
+    println!("experts      : {} (top-{})", m.n_experts, m.top_k);
+    println!("vocab/seq    : {}/{}", m.vocab, m.max_seq);
+    println!("artifacts    : {}", assets.manifest.artifacts.len());
+    println!("weight secs  : {}", assets.manifest.sections.len());
+    for p in Precision::ALL_STORED {
+        println!(
+            "expert bytes : {:>5} = {}",
+            p.tag(),
+            assets.manifest.expert_transfer_bytes(p)
+        );
+    }
+    let paper = dymoe::config::PaperModel::for_mini(&m.name)?;
+    println!("paper scale  : {} ({} layers x {} experts)", paper.name, paper.n_layers, paper.n_experts);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let artifacts = args.get("artifacts", "artifacts");
+    let model = args.get("model", "mixtral-mini");
+    let vram: u64 = args.get_usize("vram", 16)? as u64;
+    let requests = args.get_usize("requests", 10)?;
+    let retention: f64 = args
+        .get("retention", "0.75")
+        .parse()
+        .map_err(|_| anyhow!("--retention wants a float"))?;
+    let strat_name = args.get("strategy", "dymoe-40");
+    let seed = args.get_usize("seed", 11)? as u64;
+
+    let assets = Arc::new(ModelAssets::load(&artifacts, &model)?);
+    let m = assets.manifest.model.clone();
+    let strategy = make_strategy(&strat_name, &m, retention)?;
+    let sys = SystemConfig::edge_preset(&model, vram)?;
+    println!(
+        "serving {model} as {} @ {vram} GB VRAM (paper-scale {})",
+        strategy.name(),
+        sys.paper.name
+    );
+    let mut engine = Engine::new(&assets, sys, strategy)?;
+    let mut gen = TraceGen::new(seed, m.max_seq.min(80), (m.max_cache - m.max_seq).min(16));
+    let mut report = dymoe::metrics::LatencyReport::default();
+    for i in 0..requests {
+        let r = gen.next_request();
+        let out = engine.run(&r.prompt, r.max_new)?;
+        report.record(out.ttft, out.tpot());
+        println!(
+            "req {i:>3}: prompt={:>3} tokens out={:>3}  TTFT={}  TPOT={}",
+            r.prompt.len(),
+            out.tokens.len(),
+            fmt_secs(out.ttft),
+            fmt_secs(out.tpot()),
+        );
+    }
+    let mut t = Table::new(
+        "latency summary",
+        &["strategy", "TTFT mean", "TTFT p95", "TPOT mean", "TPOT p95"],
+    );
+    t.row(report.summary_row(&engine.strategy.name()));
+    println!("\n{}", t.render());
+    println!(
+        "cache: {} hits / {} misses (hit rate {:.2}), {} promotions, {} reuses, {} evictions",
+        engine.cache.stats.hits,
+        engine.cache.stats.misses,
+        engine.cache.stats.hit_rate(),
+        engine.cache.stats.promotions,
+        engine.cache.stats.conservative_reuses,
+        engine.cache.stats.evictions
+    );
+    println!(
+        "prefetch: {} issued, {} useful ({:.2} accuracy); transferred {:.2} GB; \
+         {} expert execs ({} skipped, {} on CPU)",
+        engine.prefetch_stats.issued,
+        engine.prefetch_stats.useful,
+        engine.prefetch_stats.accuracy(),
+        engine.stats.transferred_bytes as f64 / 1e9,
+        engine.stats.expert_execs,
+        engine.stats.skipped_experts,
+        engine.stats.cpu_execs,
+    );
+    Ok(())
+}
+
+fn cmd_timeline(args: &Args) -> Result<()> {
+    let artifacts = args.get("artifacts", "artifacts");
+    let model = args.get("model", "mixtral-mini");
+    let vram: u64 = args.get_usize("vram", 16)? as u64;
+    let strat_name = args.get("strategy", "dymoe-40");
+    let assets = Arc::new(ModelAssets::load(&artifacts, &model)?);
+    let m = assets.manifest.model.clone();
+    let strategy = make_strategy(&strat_name, &m, 0.75)?;
+    let sys = SystemConfig::edge_preset(&model, vram)?;
+    let mut engine = Engine::with_options(
+        &assets,
+        sys,
+        strategy,
+        EngineOptions { record_timeline: true, ..Default::default() },
+    )?;
+    let prompt: Vec<i32> = (0..32).map(|i| 1 + (i * 7) % 60).collect();
+    let out = engine.run(&prompt, 6)?;
+    println!(
+        "{} TTFT={} TPOT={}",
+        engine.strategy.name(),
+        fmt_secs(out.ttft),
+        fmt_secs(out.tpot())
+    );
+    println!("{}", engine.timeline.render_ascii(100));
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: dymoe experiment <id|all>"))?
+        .clone();
+    let mut opts = ExpOptions {
+        artifacts: args.get("artifacts", "artifacts"),
+        out_dir: args.get("out", "results"),
+        items: args.get_usize("items", 15)?,
+        requests: args.get_usize("requests", 5)?,
+        ..Default::default()
+    };
+    if let Some(models) = args.flags.get("models") {
+        opts.models = models.split(',').map(|s| s.trim().to_string()).collect();
+    }
+    let ids: Vec<&str> = if id == "all" {
+        experiments::ALL.to_vec()
+    } else {
+        vec![id.as_str()]
+    };
+    for id in ids {
+        let t0 = std::time::Instant::now();
+        let text = experiments::run(id, &opts).with_context(|| format!("experiment {id}"))?;
+        println!("{text}");
+        println!(
+            "[{id}] done in {:.1}s -> {}/{id}.txt\n",
+            t0.elapsed().as_secs_f64(),
+            opts.out_dir
+        );
+    }
+    Ok(())
+}
+
+fn usage() -> String {
+    "dymoe — DyMoE edge MoE serving (paper reproduction)\n\
+     \n\
+     commands:\n\
+     \x20 info        --model <name> [--artifacts DIR]\n\
+     \x20 serve       --model <name> [--vram GB] [--requests N] [--strategy S] [--retention R]\n\
+     \x20 timeline    --model <name> [--vram GB] [--strategy S]\n\
+     \x20 experiment  <fig1|fig2|fig3|fig4|fig5|fig6|fig10|fig11|table1|table2|table3|all>\n\
+     \x20             [--items N] [--requests N] [--models a,b] [--out DIR]\n"
+        .to_string()
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = parse_args(&argv);
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("info") => cmd_info(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("timeline") => cmd_timeline(&args),
+        Some("experiment") => cmd_experiment(&args),
+        _ => {
+            print!("{}", usage());
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Memory-hierarchy and time substrate: virtual clock, resource channels
+//! (GPU, CPU, PCIe, NVMe), and byte-accurate VRAM budgeting.
+//!
+//! The engine co-simulates: numerics run for real through XLA while every
+//! scheduled operation advances resource availability on this virtual
+//! timeline (DESIGN.md §6).  A transfer issued at `t` on a busy channel
+//! queues FIFO behind earlier transfers; compute waits for its inputs'
+//! arrival times.  This resource-availability formulation is equivalent
+//! to an event-queue DES for our pipeline topology and much cheaper.
+
+pub mod timeline;
+pub mod vram;
+
+pub use timeline::{Event, EventKind, Timeline};
+pub use vram::VramBudget;

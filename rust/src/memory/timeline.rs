@@ -1,0 +1,242 @@
+//! Virtual timeline: FIFO resource channels + event log.
+
+/// What an event occupied.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    GpuCompute,
+    CpuCompute,
+    PcieTransfer,
+    NvmeStage,
+    Marker,
+}
+
+impl EventKind {
+    pub fn tag(self) -> &'static str {
+        match self {
+            EventKind::GpuCompute => "gpu",
+            EventKind::CpuCompute => "cpu",
+            EventKind::PcieTransfer => "pcie",
+            EventKind::NvmeStage => "nvme",
+            EventKind::Marker => "mark",
+        }
+    }
+}
+
+/// One scheduled interval on a resource (for Fig.-1-style timelines).
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub kind: EventKind,
+    pub label: String,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// A serially-occupied resource: work issued at `t` starts at
+/// `max(t, free_at)` and occupies the resource for its duration.
+///
+/// The channel has two service classes: **demand** work (the default) and
+/// **background** work (prefetch).  Background work never delays demand
+/// work — it is modelled as running in otherwise-idle bandwidth (real
+/// systems chunk DMA transfers and preempt at chunk granularity; we
+/// approximate by letting demand scheduling ignore the background queue,
+/// while background transfers wait for both queues).
+#[derive(Debug, Clone, Default)]
+pub struct Channel {
+    pub free_at: f64,
+    /// Completion horizon of background (prefetch) work.
+    pub bg_free_at: f64,
+    pub busy_total: f64,
+}
+
+impl Channel {
+    /// Schedule `dur` seconds of demand work issued at `issue`; returns
+    /// (start, end).
+    pub fn schedule(&mut self, issue: f64, dur: f64) -> (f64, f64) {
+        debug_assert!(dur >= 0.0 && issue >= 0.0);
+        let start = issue.max(self.free_at);
+        let end = start + dur;
+        self.free_at = end;
+        self.busy_total += dur;
+        (start, end)
+    }
+
+    /// Schedule `dur` seconds of low-priority background work: it yields
+    /// to all demand work known at issue time and to earlier background
+    /// work, and never pushes `free_at` (demand is never delayed by it).
+    pub fn schedule_background(&mut self, issue: f64, dur: f64) -> (f64, f64) {
+        debug_assert!(dur >= 0.0 && issue >= 0.0);
+        let start = issue.max(self.free_at).max(self.bg_free_at);
+        let end = start + dur;
+        self.bg_free_at = end;
+        self.busy_total += dur;
+        (start, end)
+    }
+}
+
+/// The four resources of the edge pipeline plus an event log.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    pub gpu: Channel,
+    pub cpu: Channel,
+    pub pcie: Channel,
+    pub nvme: Channel,
+    pub events: Vec<Event>,
+    /// Record events (off by default: latency experiments schedule many
+    /// thousands of intervals).
+    pub record: bool,
+}
+
+impl Timeline {
+    pub fn new(record: bool) -> Self {
+        Timeline { record, ..Default::default() }
+    }
+
+    fn log(&mut self, kind: EventKind, label: &str, start: f64, end: f64) {
+        if self.record {
+            self.events.push(Event { kind, label: label.to_string(), start, end });
+        }
+    }
+
+    /// GPU compute that additionally depends on inputs ready at `deps`.
+    pub fn gpu_compute(&mut self, issue: f64, deps: f64, dur: f64, label: &str) -> f64 {
+        let (start, end) = self.gpu.schedule(issue.max(deps), dur);
+        self.log(EventKind::GpuCompute, label, start, end);
+        end
+    }
+
+    pub fn cpu_compute(&mut self, issue: f64, deps: f64, dur: f64, label: &str) -> f64 {
+        let (start, end) = self.cpu.schedule(issue.max(deps), dur);
+        self.log(EventKind::CpuCompute, label, start, end);
+        end
+    }
+
+    /// Host->device transfer; returns arrival time.
+    pub fn pcie_transfer(&mut self, issue: f64, dur: f64, label: &str) -> f64 {
+        let (start, end) = self.pcie.schedule(issue, dur);
+        self.log(EventKind::PcieTransfer, label, start, end);
+        end
+    }
+
+    /// Low-priority host->device prefetch transfer; never delays demand
+    /// transfers.  Returns arrival time.
+    pub fn pcie_prefetch(&mut self, issue: f64, dur: f64, label: &str) -> f64 {
+        let (start, end) = self.pcie.schedule_background(issue, dur);
+        self.log(EventKind::PcieTransfer, label, start, end);
+        end
+    }
+
+    /// SSD->host staging; returns availability-in-host time.
+    pub fn nvme_stage(&mut self, issue: f64, dur: f64, label: &str) -> f64 {
+        let (start, end) = self.nvme.schedule(issue, dur);
+        self.log(EventKind::NvmeStage, label, start, end);
+        end
+    }
+
+    pub fn marker(&mut self, t: f64, label: &str) {
+        self.log(EventKind::Marker, label, t, t);
+    }
+
+    /// Render the recorded events as an ASCII timeline (Fig. 1).
+    pub fn render_ascii(&self, width: usize) -> String {
+        if self.events.is_empty() {
+            return "<no events recorded>".to_string();
+        }
+        let t_max = self
+            .events
+            .iter()
+            .map(|e| e.end)
+            .fold(0.0_f64, f64::max)
+            .max(1e-9);
+        let mut out = String::new();
+        for kind in [
+            EventKind::GpuCompute,
+            EventKind::CpuCompute,
+            EventKind::PcieTransfer,
+            EventKind::NvmeStage,
+        ] {
+            let mut row = vec![b'.'; width];
+            for e in self.events.iter().filter(|e| e.kind == kind) {
+                let a = ((e.start / t_max) * width as f64) as usize;
+                let b = (((e.end / t_max) * width as f64).ceil() as usize).min(width);
+                for c in row.iter_mut().take(b).skip(a.min(width)) {
+                    *c = b'#';
+                }
+            }
+            out.push_str(&format!(
+                "{:<5} |{}|\n",
+                kind.tag(),
+                String::from_utf8(row).unwrap()
+            ));
+        }
+        out.push_str(&format!("scale: 0 .. {:.4} s\n", t_max));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn channel_fifo_no_time_travel() {
+        let mut c = Channel::default();
+        let (s1, e1) = c.schedule(0.0, 1.0);
+        let (s2, e2) = c.schedule(0.5, 1.0); // issued while busy -> queues
+        assert_eq!((s1, e1), (0.0, 1.0));
+        assert_eq!((s2, e2), (1.0, 2.0));
+        let (s3, _) = c.schedule(5.0, 0.5); // idle gap -> starts at issue
+        assert_eq!(s3, 5.0);
+    }
+
+    #[test]
+    fn busy_total_conserved() {
+        prop::check("channel-conservation", 30, |rng| {
+            let mut c = Channel::default();
+            let mut total = 0.0;
+            let mut last_end = 0.0_f64;
+            for _ in 0..50 {
+                let issue = rng.f64() * 10.0;
+                let dur = rng.f64();
+                let (s, e) = c.schedule(issue, dur);
+                assert!(s >= issue && (e - s - dur).abs() < 1e-12);
+                assert!(s >= last_end.min(s)); // starts never precede queue head
+                last_end = e;
+                total += dur;
+            }
+            assert!((c.busy_total - total).abs() < 1e-9);
+            assert!(c.free_at >= total - 1e-9); // can't finish faster than work
+        });
+    }
+
+    #[test]
+    fn compute_waits_for_deps() {
+        let mut tl = Timeline::new(true);
+        let arr = tl.pcie_transfer(0.0, 2.0, "w");
+        let end = tl.gpu_compute(0.5, arr, 1.0, "e");
+        assert_eq!(arr, 2.0);
+        assert_eq!(end, 3.0);
+        assert_eq!(tl.events.len(), 2);
+    }
+
+    #[test]
+    fn overlap_across_channels() {
+        // transfer and compute on different channels overlap
+        let mut tl = Timeline::new(false);
+        let t_end = tl.pcie_transfer(0.0, 1.0, "w1");
+        let c_end = tl.gpu_compute(0.0, 0.0, 1.0, "attn");
+        assert_eq!(t_end, 1.0);
+        assert_eq!(c_end, 1.0); // simultaneous, not serialized
+    }
+
+    #[test]
+    fn ascii_render_has_rows() {
+        let mut tl = Timeline::new(true);
+        tl.pcie_transfer(0.0, 1.0, "w");
+        tl.gpu_compute(1.0, 1.0, 1.0, "e");
+        let art = tl.render_ascii(40);
+        assert!(art.contains("gpu"));
+        assert!(art.contains("pcie"));
+        assert!(art.contains('#'));
+    }
+}

@@ -1,0 +1,87 @@
+//! Byte-accurate VRAM budget tracker used by the expert caches.
+
+use anyhow::{bail, Result};
+
+/// Tracks allocated vs available bytes; refuses over-allocation.
+#[derive(Debug, Clone)]
+pub struct VramBudget {
+    capacity: u64,
+    used: u64,
+}
+
+impl VramBudget {
+    pub fn new(capacity: u64) -> Self {
+        VramBudget { capacity, used: 0 }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn free(&self) -> u64 {
+        self.capacity - self.used
+    }
+
+    pub fn fits(&self, bytes: u64) -> bool {
+        bytes <= self.free()
+    }
+
+    pub fn alloc(&mut self, bytes: u64) -> Result<()> {
+        if !self.fits(bytes) {
+            bail!(
+                "VRAM over-allocation: want {bytes}, free {} of {}",
+                self.free(),
+                self.capacity
+            );
+        }
+        self.used += bytes;
+        Ok(())
+    }
+
+    pub fn release(&mut self, bytes: u64) {
+        debug_assert!(bytes <= self.used, "releasing more than allocated");
+        self.used = self.used.saturating_sub(bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn alloc_release_cycle() {
+        let mut v = VramBudget::new(100);
+        assert!(v.alloc(60).is_ok());
+        assert_eq!(v.free(), 40);
+        assert!(v.alloc(50).is_err());
+        v.release(60);
+        assert_eq!(v.used(), 0);
+        assert!(v.alloc(100).is_ok());
+    }
+
+    #[test]
+    fn never_exceeds_capacity() {
+        prop::check("vram-capacity", 40, |rng| {
+            let cap = rng.range(1, 1000) as u64;
+            let mut v = VramBudget::new(cap);
+            let mut live: Vec<u64> = Vec::new();
+            for _ in 0..100 {
+                if rng.f64() < 0.6 {
+                    let b = rng.range(0, 200) as u64;
+                    if v.alloc(b).is_ok() {
+                        live.push(b);
+                    }
+                } else if let Some(b) = live.pop() {
+                    v.release(b);
+                }
+                assert!(v.used() <= v.capacity());
+                assert_eq!(v.used(), live.iter().sum::<u64>());
+            }
+        });
+    }
+}

@@ -1,0 +1,105 @@
+//! Latency metrics: TTFT / TPOT recorders with percentile summaries.
+
+/// Collects one latency series and summarizes it.
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    samples: Vec<f64>,
+}
+
+impl Series {
+    pub fn push(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+/// TTFT/TPOT aggregate over a request trace.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyReport {
+    pub ttft: Series,
+    pub tpot: Series,
+}
+
+impl LatencyReport {
+    pub fn record(&mut self, ttft: f64, tpot: f64) {
+        self.ttft.push(ttft);
+        self.tpot.push(tpot);
+    }
+
+    pub fn summary_row(&self, name: &str) -> Vec<String> {
+        vec![
+            name.to_string(),
+            format!("{:.4}", self.ttft.mean()),
+            format!("{:.4}", self.ttft.percentile(95.0)),
+            format!("{:.4}", self.tpot.mean()),
+            format!("{:.4}", self.tpot.percentile(95.0)),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_stats() {
+        let mut s = Series::default();
+        for v in [3.0, 1.0, 2.0, 4.0, 5.0] {
+            s.push(v);
+        }
+        assert_eq!(s.mean(), 3.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 5.0);
+        assert_eq!(s.percentile(50.0), 3.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+    }
+
+    #[test]
+    fn empty_series_is_safe() {
+        let s = Series::default();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.percentile(99.0), 0.0);
+    }
+
+    #[test]
+    fn report_row_shape() {
+        let mut r = LatencyReport::default();
+        r.record(1.0, 0.1);
+        let row = r.summary_row("x");
+        assert_eq!(row.len(), 5);
+        assert_eq!(row[1], "1.0000");
+    }
+}

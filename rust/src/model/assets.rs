@@ -1,0 +1,119 @@
+//! Model assets: manifest + the flat weight store (`weights.bin`).
+//!
+//! The weight store is the simulated host-RAM / SSD tier: the engine
+//! "transfers" sections out of it into the (virtual) VRAM cache, and the
+//! executor builds XLA literals from them on demand.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use super::manifest::{Manifest, Section};
+use crate::quant::Precision;
+use crate::runtime::DType;
+
+/// Identifies one expert of one layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ExpertKey {
+    pub layer: u16,
+    pub expert: u16,
+}
+
+impl ExpertKey {
+    pub fn new(layer: usize, expert: usize) -> Self {
+        ExpertKey { layer: layer as u16, expert: expert as u16 }
+    }
+}
+
+impl std::fmt::Display for ExpertKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "L{}E{}", self.layer, self.expert)
+    }
+}
+
+/// Loaded model directory: manifest + weight blob.
+pub struct ModelAssets {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    blob: Arc<Vec<u8>>,
+}
+
+impl ModelAssets {
+    pub fn load(artifacts_dir: &str, model: &str) -> Result<ModelAssets> {
+        let dir = Path::new(artifacts_dir).join(model);
+        let manifest = Manifest::load(&dir)?;
+        let wpath = dir.join(&manifest.weights_file);
+        let blob = std::fs::read(&wpath)
+            .with_context(|| format!("reading weight store {wpath:?}"))?;
+        Ok(ModelAssets { dir, manifest, blob: Arc::new(blob) })
+    }
+
+    fn section(&self, name: &str) -> Result<&Section> {
+        self.manifest
+            .sections
+            .get(name)
+            .ok_or_else(|| anyhow!("missing weight section {name:?}"))
+    }
+
+    fn raw(&self, s: &Section) -> &[u8] {
+        &self.blob[s.offset..s.offset + s.nbytes]
+    }
+
+    /// Read a section as f32 (copies; sections are little-endian on disk).
+    pub fn f32_section(&self, name: &str) -> Result<(Vec<f32>, Vec<usize>)> {
+        let s = self.section(name)?;
+        ensure!(s.dtype == DType::F32, "section {name} is not f32");
+        let raw = self.raw(s);
+        let mut out = vec![0f32; raw.len() / 4];
+        for (i, chunk) in raw.chunks_exact(4).enumerate() {
+            out[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        Ok((out, s.shape.clone()))
+    }
+
+    /// Read a section as u32 (packed quantized words).
+    pub fn u32_section(&self, name: &str) -> Result<(Vec<u32>, Vec<usize>)> {
+        let s = self.section(name)?;
+        ensure!(s.dtype == DType::U32, "section {name} is not u32");
+        let raw = self.raw(s);
+        let mut out = vec![0u32; raw.len() / 4];
+        for (i, chunk) in raw.chunks_exact(4).enumerate() {
+            out[i] = u32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        Ok((out, s.shape.clone()))
+    }
+
+    /// Weight-section names for one expert at one precision, in the order
+    /// the expert artifacts expect them.
+    pub fn expert_section_names(&self, key: ExpertKey, p: Precision) -> Vec<String> {
+        let base = format!("L{}.E{}", key.layer, key.expert);
+        match p {
+            Precision::Bf16 => vec![
+                format!("{base}.w1.bf16"),
+                format!("{base}.w3.bf16"),
+                format!("{base}.w2.bf16"),
+            ],
+            Precision::Skip => vec![],
+            q => {
+                let t = q.tag();
+                vec![
+                    format!("{base}.w1.{t}.q"),
+                    format!("{base}.w1.{t}.s"),
+                    format!("{base}.w3.{t}.q"),
+                    format!("{base}.w3.{t}.s"),
+                    format!("{base}.w2.{t}.q"),
+                    format!("{base}.w2.{t}.s"),
+                ]
+            }
+        }
+    }
+
+    /// All expert keys of the model, layer-major.
+    pub fn expert_keys(&self) -> Vec<ExpertKey> {
+        let m = &self.manifest.model;
+        (0..m.n_layers)
+            .flat_map(|l| (0..m.n_experts).map(move |e| ExpertKey::new(l, e)))
+            .collect()
+    }
+}

@@ -1,0 +1,368 @@
+//! Typed model executor: drives the per-piece HLO artifacts (embed,
+//! attention halves, gate probe, expert FFNs, finalize) with weights from
+//! the asset store.  This is the only place that touches XLA literals /
+//! device buffers; the coordinator above it deals in plain `Vec<f32>`.
+//!
+//! Weights are staged to device buffers once and cached (per layer for
+//! the non-MoE weights, per (expert, precision) for expert weights); only
+//! dynamic inputs (hidden states, KV caches, token ids) are staged per
+//! call.  Besides saving the conversion cost, this avoids the
+//! literal-argument `execute` path whose C++ conversion leaks memory in
+//! xla_extension 0.5.1 (see `runtime::Runtime::to_buffer`).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use super::assets::{ExpertKey, ModelAssets};
+use super::kv::KvCache;
+use crate::quant::Precision;
+use crate::runtime::{lit_f32, lit_i32, lit_u32, Runtime};
+
+type Buf = crate::runtime::Staged;
+
+/// Cached per-layer non-MoE weight buffers, artifact argument order.
+struct LayerWeights {
+    ln1: Buf,
+    wq: Buf,
+    wk: Buf,
+    wv: Buf,
+    wo: Buf,
+    ln2: Buf,
+    wg: Buf,
+}
+
+/// Outputs of the prefill attention artifact for one layer.
+pub struct PrefillOut {
+    /// `[S, d]` residual stream after attention.
+    pub h_resid: Vec<f32>,
+    /// `[S, d]` normed MoE input.
+    pub moe_in: Vec<f32>,
+    /// `[S, M]` gate probabilities.
+    pub gate_probs: Vec<f32>,
+    /// `[S]` Eq.-1 token-importance scores.
+    pub token_scores: Vec<f32>,
+    /// `[S, H, hd]` keys / values for the KV cache.
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+/// Outputs of the decode attention artifact for one layer.
+pub struct DecodeOut {
+    /// `[d]` residual stream after attention.
+    pub h_resid: Vec<f32>,
+    /// `[d]` normed MoE input.
+    pub moe_in: Vec<f32>,
+    /// `[M]` gate probabilities.
+    pub gate_probs: Vec<f32>,
+    /// `[H, hd]` new KV rows for position `pos`.
+    pub k_new: Vec<f32>,
+    pub v_new: Vec<f32>,
+}
+
+/// The executor: artifacts + staged weight buffers + an expert cache.
+pub struct Executor {
+    pub runtime: Runtime,
+    pub assets: Arc<ModelAssets>,
+    layers: Vec<LayerWeights>,
+    emb: Buf,
+    ln_f: Buf,
+    expert_bufs: RefCell<HashMap<(ExpertKey, Precision), Rc<Vec<Buf>>>>,
+}
+
+impl Executor {
+    pub fn new(assets: Arc<ModelAssets>) -> Result<Executor> {
+        let runtime = Runtime::new(&assets.dir)?;
+        let m = &assets.manifest.model;
+        let mut layers = Vec::with_capacity(m.n_layers);
+        for l in 0..m.n_layers {
+            let buf = |suffix: &str| -> Result<Buf> {
+                let (data, shape) = assets.f32_section(&format!("L{l}.{suffix}"))?;
+                runtime.stage(lit_f32(&data, &shape)?)
+            };
+            layers.push(LayerWeights {
+                ln1: buf("ln1")?,
+                wq: buf("wq")?,
+                wk: buf("wk")?,
+                wv: buf("wv")?,
+                wo: buf("wo")?,
+                ln2: buf("ln2")?,
+                wg: buf("wg")?,
+            });
+        }
+        let (emb_d, emb_s) = assets.f32_section("emb")?;
+        let (lnf_d, lnf_s) = assets.f32_section("ln_f")?;
+        let emb = runtime.stage(lit_f32(&emb_d, &emb_s)?)?;
+        let ln_f = runtime.stage(lit_f32(&lnf_d, &lnf_s)?)?;
+        Ok(Executor {
+            runtime,
+            assets: assets.clone(),
+            layers,
+            emb,
+            ln_f,
+            expert_bufs: RefCell::new(HashMap::new()),
+        })
+    }
+
+    fn m(&self) -> &super::manifest::MiniModel {
+        &self.assets.manifest.model
+    }
+
+    fn stage_f32(&self, data: &[f32], dims: &[usize]) -> Result<Buf> {
+        self.runtime.stage(lit_f32(data, dims)?)
+    }
+
+    fn stage_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buf> {
+        self.runtime.stage(lit_i32(data, dims)?)
+    }
+
+    /// Embed a full (padded) prompt: `tokens.len() == max_seq`.
+    pub fn embed_seq(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let s = self.m().max_seq;
+        ensure!(tokens.len() == s, "embed_seq wants padded length {s}");
+        let t = self.stage_i32(tokens, &[s])?;
+        let out = self
+            .runtime
+            .exec_bufs_f32(&format!("embed_t{s}"), &[&t.buf, &self.emb.buf])?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Embed a single decode token.
+    pub fn embed_one(&self, token: i32) -> Result<Vec<f32>> {
+        let t = self.stage_i32(&[token], &[1])?;
+        let out = self.runtime.exec_bufs_f32("embed_t1", &[&t.buf, &self.emb.buf])?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    fn unpack_prefill(mut out: Vec<Vec<f32>>) -> Result<PrefillOut> {
+        ensure!(out.len() == 6, "prefill arity");
+        let v = out.pop().unwrap();
+        let k = out.pop().unwrap();
+        let token_scores = out.pop().unwrap();
+        let gate_probs = out.pop().unwrap();
+        let moe_in = out.pop().unwrap();
+        let h_resid = out.pop().unwrap();
+        Ok(PrefillOut { h_resid, moe_in, gate_probs, token_scores, k, v })
+    }
+
+    fn unpack_decode(mut out: Vec<Vec<f32>>) -> Result<DecodeOut> {
+        ensure!(out.len() == 5, "decode arity");
+        let v_new = out.pop().unwrap();
+        let k_new = out.pop().unwrap();
+        let gate_probs = out.pop().unwrap();
+        let moe_in = out.pop().unwrap();
+        let h_resid = out.pop().unwrap();
+        Ok(DecodeOut { h_resid, moe_in, gate_probs, k_new, v_new })
+    }
+
+    /// Prefill attention half for `layer` over padded hidden `h [S, d]`.
+    pub fn attn_prefill(&self, layer: usize, h: &[f32], seq_len: usize) -> Result<PrefillOut> {
+        let m = self.m();
+        let lw = &self.layers[layer];
+        let hb = self.stage_f32(h, &[m.max_seq, m.d_model])?;
+        let sl = self.stage_i32(&[seq_len as i32], &[1])?;
+        let out = self
+            .runtime
+            .exec_bufs_f32(
+                "attn_prefill",
+                &[&hb.buf, &sl.buf, &lw.ln1.buf, &lw.wq.buf, &lw.wk.buf, &lw.wv.buf, &lw.wo.buf, &lw.ln2.buf, &lw.wg.buf],
+            )
+            .with_context(|| format!("attn_prefill layer {layer}"))?;
+        Self::unpack_prefill(out)
+    }
+
+    /// Fused prefill attention + Eq.-6 probe for `next_layer` (one PJRT
+    /// execution instead of two — see EXPERIMENTS.md §Perf).
+    pub fn attn_prefill_probe(
+        &self,
+        layer: usize,
+        next_layer: usize,
+        h: &[f32],
+        seq_len: usize,
+    ) -> Result<(PrefillOut, Vec<f32>)> {
+        let m = self.m();
+        let lw = &self.layers[layer];
+        let nw = &self.layers[next_layer];
+        let hb = self.stage_f32(h, &[m.max_seq, m.d_model])?;
+        let sl = self.stage_i32(&[seq_len as i32], &[1])?;
+        let mut out = self
+            .runtime
+            .exec_bufs_f32(
+                "attn_prefill_probe",
+                &[
+                    &hb.buf, &sl.buf, &lw.ln1.buf, &lw.wq.buf, &lw.wk.buf, &lw.wv.buf, &lw.wo.buf, &lw.ln2.buf,
+                    &lw.wg.buf, &nw.ln2.buf, &nw.wg.buf,
+                ],
+            )
+            .with_context(|| format!("attn_prefill_probe layer {layer}"))?;
+        ensure!(out.len() == 7, "attn_prefill_probe arity");
+        let probe = out.pop().unwrap();
+        Ok((Self::unpack_prefill(out)?, probe))
+    }
+
+    /// Decode attention half for `layer` at position `pos`.
+    pub fn attn_decode(
+        &self,
+        layer: usize,
+        h: &[f32],
+        kv: &KvCache,
+        pos: usize,
+    ) -> Result<DecodeOut> {
+        let m = self.m();
+        let lw = &self.layers[layer];
+        let cache_dims = [m.max_cache, m.n_heads, m.head_dim];
+        let hb = self.stage_f32(h, &[1, m.d_model])?;
+        let kb = self.stage_f32(&kv.k[layer], &cache_dims)?;
+        let vb = self.stage_f32(&kv.v[layer], &cache_dims)?;
+        let pb = self.stage_i32(&[pos as i32], &[1])?;
+        let out = self
+            .runtime
+            .exec_bufs_f32(
+                "attn_decode",
+                &[&hb.buf, &kb.buf, &vb.buf, &pb.buf, &lw.ln1.buf, &lw.wq.buf, &lw.wk.buf, &lw.wv.buf, &lw.wo.buf, &lw.ln2.buf, &lw.wg.buf],
+            )
+            .with_context(|| format!("attn_decode layer {layer}"))?;
+        Self::unpack_decode(out)
+    }
+
+    /// Fused decode attention + Eq.-6 probe for `next_layer`.
+    pub fn attn_decode_probe(
+        &self,
+        layer: usize,
+        next_layer: usize,
+        h: &[f32],
+        kv: &KvCache,
+        pos: usize,
+    ) -> Result<(DecodeOut, Vec<f32>)> {
+        let m = self.m();
+        let lw = &self.layers[layer];
+        let nw = &self.layers[next_layer];
+        let cache_dims = [m.max_cache, m.n_heads, m.head_dim];
+        let hb = self.stage_f32(h, &[1, m.d_model])?;
+        let kb = self.stage_f32(&kv.k[layer], &cache_dims)?;
+        let vb = self.stage_f32(&kv.v[layer], &cache_dims)?;
+        let pb = self.stage_i32(&[pos as i32], &[1])?;
+        let mut out = self
+            .runtime
+            .exec_bufs_f32(
+                "attn_decode_probe",
+                &[
+                    &hb.buf, &kb.buf, &vb.buf, &pb.buf, &lw.ln1.buf, &lw.wq.buf, &lw.wk.buf, &lw.wv.buf, &lw.wo.buf,
+                    &lw.ln2.buf, &lw.wg.buf, &nw.ln2.buf, &nw.wg.buf,
+                ],
+            )
+            .with_context(|| format!("attn_decode_probe layer {layer}"))?;
+        ensure!(out.len() == 6, "attn_decode_probe arity");
+        let probe = out.pop().unwrap();
+        Ok((Self::unpack_decode(out)?, probe))
+    }
+
+    /// Eq.-6 look-ahead probe: layer-`next`'s gate over the current hidden.
+    /// `h` is `[d]` (decode) or `[S, d]` (prefill).
+    pub fn gate_probe(&self, next_layer: usize, h: &[f32]) -> Result<Vec<f32>> {
+        let m = self.m();
+        let t = h.len() / m.d_model;
+        ensure!(t == 1 || t == m.max_seq, "gate_probe shape");
+        let lw = &self.layers[next_layer];
+        let hb = self.stage_f32(h, &[t, m.d_model])?;
+        let out = self
+            .runtime
+            .exec_bufs_f32(&format!("gate_probe_t{t}"), &[&hb.buf, &lw.ln2.buf, &lw.wg.buf])?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Expert-weight buffers at a precision, staged once and cached.
+    fn expert_buffers(&self, key: ExpertKey, p: Precision) -> Result<Rc<Vec<Buf>>> {
+        if let Some(l) = self.expert_bufs.borrow().get(&(key, p)) {
+            return Ok(l.clone());
+        }
+        let names = self.assets.expert_section_names(key, p);
+        ensure!(!names.is_empty(), "no weights for Skip");
+        let mut bufs = Vec::with_capacity(names.len());
+        for name in &names {
+            let lit = if name.ends_with(".q") {
+                let (data, shape) = self.assets.u32_section(name)?;
+                lit_u32(&data, &shape)?
+            } else {
+                let (data, shape) = self.assets.f32_section(name)?;
+                lit_f32(&data, &shape)?
+            };
+            bufs.push(self.runtime.stage(lit)?);
+        }
+        let rc = Rc::new(bufs);
+        self.expert_bufs.borrow_mut().insert((key, p), rc.clone());
+        Ok(rc)
+    }
+
+    /// Run one expert over `rows` token vectors (each `[d]`) at `p`,
+    /// padding up to the smallest exported bucket.  Returns one `[d]`
+    /// output per input row.
+    pub fn expert_ffn(
+        &self,
+        key: ExpertKey,
+        p: Precision,
+        rows: &[&[f32]],
+    ) -> Result<Vec<Vec<f32>>> {
+        let m = self.m();
+        ensure!(p != Precision::Skip, "cannot execute a skipped expert");
+        ensure!(!rows.is_empty(), "expert_ffn with no tokens");
+        let bucket = self
+            .assets
+            .manifest
+            .bucket_for(rows.len())
+            .ok_or_else(|| anyhow!("no bucket >= {}", rows.len()))?;
+        let d = m.d_model;
+        let mut x = vec![0f32; bucket * d];
+        for (i, r) in rows.iter().enumerate() {
+            ensure!(r.len() == d, "expert input row dim");
+            x[i * d..(i + 1) * d].copy_from_slice(r);
+        }
+        let xb = self.stage_f32(&x, &[bucket, d])?;
+        let weights = self.expert_buffers(key, p)?;
+        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + weights.len());
+        inputs.push(&xb.buf);
+        for w in weights.iter() {
+            inputs.push(&w.buf);
+        }
+        let name = format!("expert_{}_t{bucket}", p.tag());
+        let out = self
+            .runtime
+            .exec_bufs_f32(&name, &inputs)
+            .with_context(|| format!("expert {key} {p:?} bucket {bucket}"))?;
+        let y = out.into_iter().next().unwrap();
+        Ok(rows
+            .iter()
+            .enumerate()
+            .map(|(i, _)| y[i * d..(i + 1) * d].to_vec())
+            .collect())
+    }
+
+    /// Final norm + unembedding for one `[d]` hidden -> `[vocab]` logits.
+    pub fn finalize_one(&self, h: &[f32]) -> Result<Vec<f32>> {
+        let m = self.m();
+        let hb = self.stage_f32(h, &[1, m.d_model])?;
+        let out = self
+            .runtime
+            .exec_bufs_f32("finalize_t1", &[&hb.buf, &self.ln_f.buf, &self.emb.buf])?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Finalize the whole padded sequence: `[S, d] -> [S, vocab]`.
+    pub fn finalize_seq(&self, h: &[f32]) -> Result<Vec<f32>> {
+        let m = self.m();
+        let hb = self.stage_f32(h, &[m.max_seq, m.d_model])?;
+        let out = self.runtime.exec_bufs_f32(
+            &format!("finalize_t{}", m.max_seq),
+            &[&hb.buf, &self.ln_f.buf, &self.emb.buf],
+        )?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Drop cached expert buffers (frees the simulated "GPU" copies).
+    pub fn clear_expert_literals(&self) {
+        self.expert_bufs.borrow_mut().clear();
+    }
+}

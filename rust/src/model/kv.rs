@@ -1,0 +1,78 @@
+//! Per-layer KV cache owned by the coordinator (the decode artifact reads
+//! the full fixed-capacity cache and returns the new row; L3 writes it).
+
+use anyhow::{ensure, Result};
+
+/// KV cache for every layer of one sequence.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    pub capacity: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    /// Per layer: `[capacity, n_heads, head_dim]` row-major.
+    pub k: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+    pub len: usize,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize, capacity: usize, n_heads: usize, head_dim: usize) -> Self {
+        let sz = capacity * n_heads * head_dim;
+        KvCache {
+            capacity,
+            n_heads,
+            head_dim,
+            k: vec![vec![0.0; sz]; n_layers],
+            v: vec![vec![0.0; sz]; n_layers],
+            len: 0,
+        }
+    }
+
+    pub fn row_elems(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    /// Write the K/V for position `pos` of `layer`.
+    pub fn write_row(&mut self, layer: usize, pos: usize, k_new: &[f32], v_new: &[f32]) -> Result<()> {
+        let re = self.row_elems();
+        ensure!(pos < self.capacity, "kv overflow: pos {pos} >= {}", self.capacity);
+        ensure!(k_new.len() == re && v_new.len() == re, "kv row size");
+        self.k[layer][pos * re..(pos + 1) * re].copy_from_slice(k_new);
+        self.v[layer][pos * re..(pos + 1) * re].copy_from_slice(v_new);
+        Ok(())
+    }
+
+    /// Bulk-write rows `0..t` of `layer` from prefill outputs `[t, H, hd]`.
+    pub fn write_prefix(&mut self, layer: usize, t: usize, k: &[f32], v: &[f32]) -> Result<()> {
+        let re = self.row_elems();
+        ensure!(t <= self.capacity, "kv overflow");
+        ensure!(k.len() >= t * re && v.len() >= t * re, "kv prefix size");
+        self.k[layer][..t * re].copy_from_slice(&k[..t * re]);
+        self.v[layer][..t * re].copy_from_slice(&v[..t * re]);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_and_capacity() {
+        let mut kv = KvCache::new(2, 4, 2, 3);
+        let row = vec![1.0f32; 6];
+        kv.write_row(1, 2, &row, &row).unwrap();
+        assert_eq!(kv.k[1][12..18], row[..]);
+        assert!(kv.write_row(0, 4, &row, &row).is_err());
+        assert!(kv.write_row(0, 0, &row[..5], &row).is_err());
+    }
+
+    #[test]
+    fn write_prefix_roundtrip() {
+        let mut kv = KvCache::new(1, 8, 2, 2);
+        let data: Vec<f32> = (0..3 * 4).map(|i| i as f32).collect();
+        kv.write_prefix(0, 3, &data, &data).unwrap();
+        assert_eq!(kv.k[0][..12], data[..]);
+        assert_eq!(kv.v[0][4..8], data[4..8]);
+    }
+}

@@ -1,0 +1,164 @@
+//! Artifact-manifest parsing (`artifacts/<model>/manifest.json`, written
+//! by `python/compile/aot.py`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::quant::Precision;
+use crate::runtime::DType;
+use crate::util::json::Json;
+
+/// Mini-model hyper-parameters (mirrors `python/compile/configs.py`).
+#[derive(Debug, Clone)]
+pub struct MiniModel {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ffn: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub max_cache: usize,
+    pub group_size: usize,
+}
+
+/// One tensor in an artifact signature.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+/// One HLO artifact's I/O signature.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// One named section of `weights.bin`.
+#[derive(Debug, Clone)]
+pub struct Section {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: MiniModel,
+    pub expert_buckets: Vec<usize>,
+    pub weights_file: String,
+    /// Logical transfer bytes per expert per precision tier (mini scale).
+    pub expert_bytes: BTreeMap<String, u64>,
+    pub sections: BTreeMap<String, Section>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn tensor_spec(v: &Json) -> Result<TensorSpec> {
+    Ok(TensorSpec {
+        name: v
+            .opt("name")
+            .map(|n| n.as_str().map(str::to_string))
+            .transpose()?
+            .unwrap_or_default(),
+        dtype: DType::from_tag(v.get("dtype")?.as_str()?)?,
+        shape: v.get("shape")?.as_usize_vec()?,
+    })
+}
+
+impl Manifest {
+    pub fn load(model_dir: &Path) -> Result<Manifest> {
+        let path = model_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        let v = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+
+        let m = v.get("model")?;
+        let model = MiniModel {
+            name: m.get("name")?.as_str()?.to_string(),
+            n_layers: m.get("n_layers")?.as_usize()?,
+            d_model: m.get("d_model")?.as_usize()?,
+            n_heads: m.get("n_heads")?.as_usize()?,
+            head_dim: m.get("head_dim")?.as_usize()?,
+            d_ffn: m.get("d_ffn")?.as_usize()?,
+            n_experts: m.get("n_experts")?.as_usize()?,
+            top_k: m.get("top_k")?.as_usize()?,
+            vocab: m.get("vocab")?.as_usize()?,
+            max_seq: m.get("max_seq")?.as_usize()?,
+            max_cache: m.get("max_cache")?.as_usize()?,
+            group_size: m.get("group_size")?.as_usize()?,
+        };
+
+        let mut sections = BTreeMap::new();
+        for (name, s) in v.get("sections")?.as_obj()? {
+            sections.insert(
+                name.clone(),
+                Section {
+                    dtype: DType::from_tag(s.get("dtype")?.as_str()?)?,
+                    shape: s.get("shape")?.as_usize_vec()?,
+                    offset: s.get("offset")?.as_usize()?,
+                    nbytes: s.get("nbytes")?.as_usize()?,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in v.get("artifacts")?.as_obj()? {
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file: a.get("file")?.as_str()?.to_string(),
+                    inputs: a
+                        .get("inputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(tensor_spec)
+                        .collect::<Result<_>>()?,
+                    outputs: a
+                        .get("outputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(tensor_spec)
+                        .collect::<Result<_>>()?,
+                },
+            );
+        }
+
+        let mut expert_bytes = BTreeMap::new();
+        for (k, val) in v.get("expert_bytes")?.as_obj()? {
+            expert_bytes.insert(k.clone(), val.as_f64()? as u64);
+        }
+
+        Ok(Manifest {
+            model,
+            expert_buckets: v.get("expert_buckets")?.as_usize_vec()?,
+            weights_file: v.get("weights_file")?.as_str()?.to_string(),
+            expert_bytes,
+            sections,
+            artifacts,
+        })
+    }
+
+    /// Logical (mini-scale) transfer bytes for one expert at a precision.
+    pub fn expert_transfer_bytes(&self, p: Precision) -> u64 {
+        if p == Precision::Skip {
+            return 0;
+        }
+        *self.expert_bytes.get(p.tag()).unwrap_or(&0)
+    }
+
+    /// Smallest exported token bucket >= `count`.
+    pub fn bucket_for(&self, count: usize) -> Option<usize> {
+        self.expert_buckets.iter().copied().find(|&b| b >= count)
+    }
+}

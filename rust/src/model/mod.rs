@@ -1,0 +1,8 @@
+//! Model-side substrates: manifest parsing, the weight store, the typed
+//! artifact executor, the KV cache, and sampling.
+
+pub mod assets;
+pub mod executor;
+pub mod kv;
+pub mod manifest;
+pub mod sampler;

@@ -1,0 +1,82 @@
+//! Token sampling over the finalize artifact's logits.
+
+use crate::util::rng::Rng;
+
+/// Greedy argmax (ties -> lowest token id, matching jnp.argmax).
+pub fn greedy(logits: &[f32]) -> usize {
+    let mut best = 0;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Temperature sampling (temperature 0 degenerates to greedy).
+pub fn sample(logits: &[f32], temperature: f32, rng: &mut Rng) -> usize {
+    if temperature <= 1e-6 {
+        return greedy(logits);
+    }
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f64> = logits
+        .iter()
+        .map(|&l| (((l - max) / temperature) as f64).exp())
+        .collect();
+    let total: f64 = exps.iter().sum();
+    let mut u = rng.f64() * total;
+    for (i, e) in exps.iter().enumerate() {
+        u -= e;
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    logits.len() - 1
+}
+
+/// Log-softmax NLL of `target` under `logits` (eval metric).
+pub fn nll(logits: &[f32], target: usize) -> f64 {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let lse = (logits.iter().map(|&l| ((l as f64) - max).exp()).sum::<f64>()).ln() + max;
+    lse - logits[target] as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max_first_tie() {
+        assert_eq!(greedy(&[0.1, 3.0, 3.0, -1.0]), 1);
+        assert_eq!(greedy(&[-5.0, -2.0]), 1);
+    }
+
+    #[test]
+    fn sample_zero_temp_is_greedy() {
+        let mut rng = Rng::new(0);
+        assert_eq!(sample(&[0.0, 9.0, 1.0], 0.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn sample_respects_distribution() {
+        let mut rng = Rng::new(1);
+        let logits = [0.0f32, 5.0, 0.0];
+        let hits = (0..200)
+            .filter(|_| sample(&logits, 1.0, &mut rng) == 1)
+            .count();
+        assert!(hits > 150, "hits={hits}");
+    }
+
+    #[test]
+    fn nll_matches_closed_form() {
+        // uniform logits -> nll = ln(n)
+        let l = [0.0f32; 8];
+        assert!((nll(&l, 3) - (8f64).ln()).abs() < 1e-9);
+        // confident correct -> near zero
+        let mut c = [0.0f32; 4];
+        c[2] = 50.0;
+        assert!(nll(&c, 2) < 1e-6);
+    }
+}

@@ -1,0 +1,288 @@
+//! Precision tiers and group-wise RTN quantization (Rust mirror of
+//! `python/compile/kernels/ref.py` — the two implementations are tested
+//! against each other via golden vectors and round-trip bounds).
+//!
+//! The coordinator mostly uses this module for *byte accounting* (I/O
+//! volume per precision drives every latency experiment) and for runtime
+//! re-quantization in tests; the serving hot path streams pre-packed blobs
+//! from the weight store.
+
+use anyhow::{bail, Result};
+
+/// Fidelity state of an expert, ordered from cheapest to most faithful.
+/// `Skip` is the paper's "0-bit" assignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Precision {
+    Skip,
+    Int2,
+    Int4,
+    Int8,
+    Bf16,
+}
+
+impl Precision {
+    pub const ALL_STORED: [Precision; 4] =
+        [Precision::Bf16, Precision::Int8, Precision::Int4, Precision::Int2];
+
+    pub fn bits(self) -> u32 {
+        match self {
+            Precision::Skip => 0,
+            Precision::Int2 => 2,
+            Precision::Int4 => 4,
+            Precision::Int8 => 8,
+            Precision::Bf16 => 16,
+        }
+    }
+
+    pub fn is_quantized(self) -> bool {
+        matches!(self, Precision::Int2 | Precision::Int4 | Precision::Int8)
+    }
+
+    /// Manifest / artifact name fragment ("bf16", "int4", ...).
+    pub fn tag(self) -> &'static str {
+        match self {
+            Precision::Skip => "skip",
+            Precision::Int2 => "int2",
+            Precision::Int4 => "int4",
+            Precision::Int8 => "int8",
+            Precision::Bf16 => "bf16",
+        }
+    }
+
+    pub fn from_tag(tag: &str) -> Result<Precision> {
+        Ok(match tag {
+            "skip" | "0" => Precision::Skip,
+            "int2" | "2" => Precision::Int2,
+            "int4" | "4" => Precision::Int4,
+            "int8" | "8" => Precision::Int8,
+            "bf16" | "16" => Precision::Bf16,
+            _ => bail!("unknown precision tag {tag:?}"),
+        })
+    }
+
+    /// `true` if `self` can serve a request for `wanted` without loss of
+    /// the *requested* fidelity (the cache's conservative-reuse rule).
+    pub fn satisfies(self, wanted: Precision) -> bool {
+        self >= wanted
+    }
+}
+
+/// Signed symmetric range for a bit width, e.g. 4 -> (-8, 7).
+pub fn quant_range(bits: u32) -> (i32, i32) {
+    let half = 1i32 << (bits - 1);
+    (-half, half - 1)
+}
+
+/// Group-wise symmetric RTN quantization of `w[K, N]` (row-major), groups
+/// of `group` rows sharing one scale per column.  Returns (q, scales) with
+/// q unbiased in the symmetric range, scales `[K/group, N]`.
+pub fn quantize_groupwise(
+    w: &[f32],
+    k: usize,
+    n: usize,
+    bits: u32,
+    group: usize,
+) -> (Vec<i32>, Vec<f32>) {
+    assert_eq!(w.len(), k * n);
+    assert_eq!(k % group, 0);
+    let (lo, hi) = quant_range(bits);
+    let n_groups = k / group;
+    let mut scales = vec![0f32; n_groups * n];
+    let mut q = vec![0i32; k * n];
+    for g in 0..n_groups {
+        for col in 0..n {
+            let mut max_abs = 0f32;
+            for r in 0..group {
+                max_abs = max_abs.max(w[(g * group + r) * n + col].abs());
+            }
+            let scale = (max_abs / hi as f32).max(1e-10);
+            scales[g * n + col] = scale;
+            for r in 0..group {
+                let idx = (g * group + r) * n + col;
+                let v = (w[idx] / scale).round() as i32;
+                q[idx] = v.clamp(lo, hi);
+            }
+        }
+    }
+    (q, scales)
+}
+
+/// Dequantize the output of [`quantize_groupwise`].
+pub fn dequantize_groupwise(
+    q: &[i32],
+    scales: &[f32],
+    k: usize,
+    n: usize,
+    group: usize,
+) -> Vec<f32> {
+    let mut w = vec![0f32; k * n];
+    for r in 0..k {
+        for col in 0..n {
+            w[r * n + col] = q[r * n + col] as f32 * scales[(r / group) * n + col];
+        }
+    }
+    w
+}
+
+/// Pack unbiased ints into u32 words, little-endian along K: element
+/// `k = r*vpw + j` occupies bits `[bits*j, bits*(j+1))` of word `r`.
+pub fn pack_words(q: &[i32], k: usize, n: usize, bits: u32) -> Vec<u32> {
+    let vpw = (32 / bits) as usize;
+    assert_eq!(k % vpw, 0);
+    let offset = 1u32 << (bits - 1);
+    let rows = k / vpw;
+    let mut words = vec![0u32; rows * n];
+    for r in 0..rows {
+        for j in 0..vpw {
+            for col in 0..n {
+                let biased = (q[(r * vpw + j) * n + col] + offset as i32) as u32;
+                words[r * n + col] |= biased << (bits as usize * j);
+            }
+        }
+    }
+    words
+}
+
+/// Inverse of [`pack_words`].
+pub fn unpack_words(words: &[u32], rows: usize, n: usize, bits: u32) -> Vec<i32> {
+    let vpw = (32 / bits) as usize;
+    let mask = (1u32 << bits) - 1;
+    let offset = (1u32 << (bits - 1)) as i32;
+    let mut q = vec![0i32; rows * vpw * n];
+    for r in 0..rows {
+        for j in 0..vpw {
+            for col in 0..n {
+                let raw = (words[r * n + col] >> (bits as usize * j)) & mask;
+                q[(r * vpw + j) * n + col] = raw as i32 - offset;
+            }
+        }
+    }
+    q
+}
+
+/// Byte accounting for one expert (3 matrices: d->ffn, d->ffn, ffn->d) at a
+/// given precision — the I/O-volume model every latency experiment uses.
+/// Matches `python/compile/quant.expert_logical_bytes`.
+pub fn expert_bytes(d: usize, ffn: usize, group: usize, prec: Precision) -> u64 {
+    let params = (3 * d * ffn) as u64;
+    match prec {
+        Precision::Skip => 0,
+        Precision::Bf16 => 2 * params,
+        p => {
+            let packed = params * p.bits() as u64 / 8;
+            let scales = ((d / group) * ffn * 2 + (ffn / group) * d) as u64 * 4;
+            packed + scales
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn precision_ordering() {
+        use Precision::*;
+        assert!(Bf16 > Int8 && Int8 > Int4 && Int4 > Int2 && Int2 > Skip);
+        assert!(Bf16.satisfies(Int4));
+        assert!(!Int2.satisfies(Int4));
+        assert!(Int4.satisfies(Int4));
+    }
+
+    #[test]
+    fn tags_roundtrip() {
+        for p in Precision::ALL_STORED {
+            assert_eq!(Precision::from_tag(p.tag()).unwrap(), p);
+        }
+        assert!(Precision::from_tag("int3").is_err());
+    }
+
+    #[test]
+    fn golden_vector_matches_python() {
+        // Mirrors python/tests/test_quantize.py::test_golden_vectors:
+        // w = arange(-16, 16) / 8 as a [32, 1] column, int4, group 32.
+        let w: Vec<f32> = (-16..16).map(|i| i as f32 / 8.0).collect();
+        let (q, s) = quantize_groupwise(&w, 32, 1, 4, 32);
+        assert!((s[0] - 2.0 / 7.0).abs() < 1e-6);
+        assert_eq!(q[0], -7); // round(-2.0 / (2/7)) = -7
+        let words = pack_words(&q, 32, 1, 4);
+        assert_eq!(words.len(), 4); // 32 values * 4 bits / 32-bit words
+        let back = unpack_words(&words, 4, 1, 4);
+        assert_eq!(back, q);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_all_bits() {
+        prop::check("pack-roundtrip", 40, |rng| {
+            let bits = [2u32, 4, 8][rng.below(3)];
+            let (lo, hi) = quant_range(bits);
+            let k = 32 * rng.range(1, 3);
+            let n = rng.range(1, 5);
+            let q: Vec<i32> = (0..k * n)
+                .map(|_| lo + rng.below((hi - lo + 1) as usize) as i32)
+                .collect();
+            let words = pack_words(&q, k, n, bits);
+            assert_eq!(words.len(), k * bits as usize / 32 * n);
+            assert_eq!(unpack_words(&words, k * bits as usize / 32, n, bits), q);
+        });
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        prop::check("rtn-error-bound", 25, |rng| {
+            let bits = [2u32, 4, 8][rng.below(3)];
+            let k = 64;
+            let n = rng.range(1, 4);
+            let w: Vec<f32> = (0..k * n)
+                .map(|_| (rng.f64() * 2.0 - 1.0) as f32)
+                .collect();
+            let (q, s) = quantize_groupwise(&w, k, n, bits, 32);
+            let back = dequantize_groupwise(&q, &s, k, n, 32);
+            for r in 0..k {
+                for c in 0..n {
+                    let err = (back[r * n + c] - w[r * n + c]).abs();
+                    let scale = s[(r / 32) * n + c];
+                    assert!(
+                        err <= 0.5 * scale + 1e-6,
+                        "err {err} scale {scale} bits {bits}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn error_monotone_in_bits() {
+        let mut rng = Rng::new(5);
+        let w: Vec<f32> = (0..64 * 4).map(|_| rng.normal() as f32 * 0.5).collect();
+        let mut errs = Vec::new();
+        for bits in [8u32, 4, 2] {
+            let (q, s) = quantize_groupwise(&w, 64, 4, bits, 32);
+            let back = dequantize_groupwise(&q, &s, 64, 4, 32);
+            let e: f32 = w
+                .iter()
+                .zip(&back)
+                .map(|(a, b)| (a - b).abs())
+                .sum::<f32>()
+                / w.len() as f32;
+            errs.push(e);
+        }
+        assert!(errs[0] < errs[1] && errs[1] < errs[2], "{errs:?}");
+    }
+
+    #[test]
+    fn expert_bytes_ordering_and_values() {
+        let d = 4096;
+        let ffn = 14336;
+        let params = (3 * d * ffn) as u64;
+        assert_eq!(expert_bytes(d, ffn, 32, Precision::Bf16), 2 * params);
+        assert_eq!(expert_bytes(d, ffn, 32, Precision::Skip), 0);
+        let b8 = expert_bytes(d, ffn, 32, Precision::Int8);
+        let b4 = expert_bytes(d, ffn, 32, Precision::Int4);
+        let b2 = expert_bytes(d, ffn, 32, Precision::Int2);
+        assert!(b8 > b4 && b4 > b2 && b2 > 0);
+        assert!(b8 > params); // packed + scale overhead
+    }
+}

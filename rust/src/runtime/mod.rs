@@ -1,0 +1,209 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
+//! client (adapting /opt/xla-example/load_hlo — HLO *text* is the
+//! interchange format; see python/compile/aot.py).
+//!
+//! Executables are compiled lazily on first use and cached for the life of
+//! the runtime; Python is never involved at this point.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+/// Typed tensor views for artifact I/O.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn from_tag(tag: &str) -> Result<DType> {
+        Ok(match tag {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "u32" => DType::U32,
+            _ => anyhow::bail!("unknown dtype tag {tag:?}"),
+        })
+    }
+}
+
+/// Build an f32 literal with the given dims.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {dims:?} != len {}", data.len());
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {dims:?} != len {}", data.len());
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+pub fn lit_u32(data: &[u32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {dims:?} != len {}", data.len());
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// A device buffer plus the host literal it was staged from (the copy is
+/// asynchronous; the literal must stay alive until the pipeline syncs).
+pub struct Staged {
+    pub buf: xla::PjRtBuffer,
+    _keepalive: xla::Literal,
+}
+
+/// Executes HLO-text artifacts on a shared PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    compiled: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    exec_count: RefCell<u64>,
+    exec_nanos: RefCell<u64>,
+}
+
+impl Runtime {
+    /// `dir` is the per-model artifact directory (contains `*.hlo.txt`).
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            compiled: RefCell::new(HashMap::new()),
+            exec_count: RefCell::new(0),
+            exec_nanos: RefCell::new(0),
+        })
+    }
+
+    /// Number of artifact executions so far (perf accounting).
+    pub fn exec_count(&self) -> u64 {
+        *self.exec_count.borrow()
+    }
+
+    /// Wall nanoseconds spent inside PJRT execute+fetch (perf accounting);
+    /// the remainder of request wall time is L3 logic + literal building.
+    pub fn exec_nanos(&self) -> u64 {
+        *self.exec_nanos.borrow()
+    }
+
+    fn compile(&self, name: &str) -> Result<()> {
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e}"))?;
+        self.compiled.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Ensure an artifact is compiled (for warm-up, excluded from timings).
+    pub fn warm(&self, name: &str) -> Result<()> {
+        if !self.compiled.borrow().contains_key(name) {
+            self.compile(name)?;
+        }
+        Ok(())
+    }
+
+    /// Stage a host literal as a device buffer.  Weight tensors are staged
+    /// once and cached by the executor; dynamic inputs are staged per call.
+    ///
+    /// NOTES on xla_extension 0.5.1 behaviour (EXPERIMENTS.md §Perf):
+    /// * the runtime deliberately avoids `PjRtLoadedExecutable::execute`
+    ///   (literal arguments): its C++ literal->buffer conversion leaks
+    ///   ~9 KB per call, which OOMs long experiment sweeps;
+    /// * `buffer_from_host_literal` copies **asynchronously** on a worker
+    ///   thread, so the source literal must outlive the copy — [`Staged`]
+    ///   keeps it alive alongside the buffer; synchronisation happens at
+    ///   the next output fetch (`to_literal_sync`), which transitively
+    ///   waits on all input copies.
+    pub fn stage(&self, lit: xla::Literal) -> Result<Staged> {
+        let devices = self.client.addressable_devices();
+        let buf = self
+            .client
+            .buffer_from_host_literal(Some(&devices[0]), &lit)
+            .map_err(|e| anyhow!("staging buffer: {e}"))?;
+        // Force the async host->device copy to complete while the source
+        // literal is provably alive: a buffer dropped before its pending
+        // copy runs (error paths, never-used weights on engine teardown)
+        // otherwise segfaults a worker thread.  One synchronising
+        // round-trip per staged tensor; weights pay it once at init.
+        let _ = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("synchronising staged buffer: {e}"))?;
+        Ok(Staged { buf, _keepalive: lit })
+    }
+
+    /// Execute artifact `name` over pre-staged device buffers; returns the
+    /// tuple elements (aot.py lowers everything with `return_tuple=True`).
+    pub fn exec_bufs(
+        &self,
+        name: &str,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        self.warm(name)?;
+        *self.exec_count.borrow_mut() += 1;
+        let t0 = std::time::Instant::now();
+        let map = self.compiled.borrow();
+        let exe = map.get(name).expect("warmed above");
+        let result = exe
+            .execute_b(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e}"))?;
+        let out = lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e}"));
+        *self.exec_nanos.borrow_mut() += t0.elapsed().as_nanos() as u64;
+        out
+    }
+
+    /// Execute with host literals (staged per call; literals are kept
+    /// alive until the output fetch synchronises the pipeline).
+    pub fn exec(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let staged = inputs
+            .iter()
+            .map(|l| self.stage(l.clone()))
+            .collect::<Result<Vec<_>>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = staged.iter().map(|s| &s.buf).collect();
+        self.exec_bufs(name, &refs)
+    }
+
+    /// Execute over buffers and convert every output to f32 (helper for
+    /// the common all-f32 artifacts).
+    pub fn exec_bufs_f32(
+        &self,
+        name: &str,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.exec_bufs(name, inputs)?
+            .iter()
+            .map(to_f32)
+            .collect::<Result<Vec<_>>>()
+            .with_context(|| format!("outputs of {name}"))
+    }
+
+    /// Execute with host literals and convert every output to f32.
+    pub fn exec_f32(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        self.exec(name, inputs)?
+            .iter()
+            .map(to_f32)
+            .collect::<Result<Vec<_>>>()
+            .with_context(|| format!("outputs of {name}"))
+    }
+}

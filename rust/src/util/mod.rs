@@ -1,0 +1,8 @@
+//! Zero-dependency utility substrates for the offline build: JSON, PRNG,
+//! table formatting, micro-bench harness, property-test driver.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod table;

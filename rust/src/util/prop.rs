@@ -1,0 +1,54 @@
+//! Tiny property-testing driver (proptest is not vendored offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure over `cases` seeded
+//! random inputs; on failure it reports the failing case seed so the case
+//! can be replayed deterministically with `replay(seed, f)`.
+
+use super::rng::Rng;
+
+/// Run `f` against `cases` seeded RNGs; panics with the failing seed.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: usize, mut f: F) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case as u64;
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng)
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property {name:?} failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case.
+pub fn replay<F: FnOnce(&mut Rng)>(seed: u64, f: F) {
+    let mut rng = Rng::new(seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        check("add-commutes", 50, |rng| {
+            let a = rng.below(1000) as i64;
+            let b = rng.below(1000) as i64;
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always-fails")]
+    fn reports_failing_seed() {
+        check("always-fails", 3, |_rng| {
+            panic!("always-fails");
+        });
+    }
+}

@@ -1,0 +1,229 @@
+//! Workloads: the ShareGPT-like latency trace generator and the eval-suite
+//! loader (`artifacts/eval/suites.json`, written by the build).
+//!
+//! For latency experiments only the *length distribution* matters at batch
+//! size 1; we fit log-normals to published ShareGPT statistics (median
+//! prompt ~50 tokens, long tail; outputs a bit longer), clipped to the
+//! mini models' sequence budget.  Prompt *content* is sampled from the
+//! same pattern corpus the models were trained on so that routing
+//! behaviour (and hence cache/prefetch dynamics) is realistic rather than
+//! uniform.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Token-space constants mirrored from `python/compile/corpus.py`.
+pub mod tokens {
+    pub const PAD: i32 = 0;
+    pub const BOS: i32 = 1;
+    pub const DELIM: i32 = 10;
+    pub const TAG_COPY: i32 = 2;
+    pub const TAG_ARITH: i32 = 3;
+    pub const TAG_SORT: i32 = 4;
+    pub const TAG_REPEAT: i32 = 5;
+    pub const TAG_MARKOV_A: i32 = 6;
+    pub const TAG_MARKOV_B: i32 = 7;
+    pub const TAG_SUCC: i32 = 8;
+    pub const DIGIT0: i32 = 11;
+    pub const LETTER0: i32 = 27;
+    pub const LETTER1: i32 = 63;
+    /// Ring used by the repeat/succ tasks (see python corpus.py).
+    pub const RING_N: i32 = 16;
+    pub const VOCAB: usize = 64;
+}
+
+/// One serving request of the latency trace.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+}
+
+/// ShareGPT-like trace generator (seeded, deterministic).
+pub struct TraceGen {
+    rng: Rng,
+    pub max_prompt: usize,
+    pub max_new: usize,
+}
+
+impl TraceGen {
+    pub fn new(seed: u64, max_prompt: usize, max_new: usize) -> Self {
+        TraceGen { rng: Rng::new(seed), max_prompt, max_new }
+    }
+
+    fn pattern_body(&mut self, len: usize) -> Vec<i32> {
+        use tokens::*;
+        let dom = self.rng.below(6);
+        let mut out = Vec::with_capacity(len);
+        match dom {
+            0 => {
+                // copy: TAG seg | seg
+                out.push(TAG_COPY);
+                let seg: Vec<i32> = (0..len / 2)
+                    .map(|_| self.rng.range(LETTER0 as usize, LETTER1 as usize) as i32)
+                    .collect();
+                out.extend(&seg);
+                out.push(DELIM);
+                out.extend(&seg);
+            }
+            1 => {
+                // arith chain
+                out.push(TAG_ARITH);
+                let start = self.rng.below(10);
+                let step = self.rng.range(1, 3);
+                for i in 0..len {
+                    out.push(((start + i * step) % 10) as i32 + DIGIT0);
+                }
+            }
+            2 => {
+                // sort: TAG seg | sorted(seg)
+                out.push(TAG_SORT);
+                let mut seg: Vec<i32> = (0..len / 2)
+                    .map(|_| self.rng.range(LETTER0 as usize, LETTER1 as usize) as i32)
+                    .collect();
+                out.extend(&seg);
+                out.push(DELIM);
+                seg.sort_unstable();
+                out.extend(&seg);
+            }
+            3 => {
+                // periodic repeat over the small ring
+                out.push(TAG_REPEAT);
+                let period = self.rng.range(1, 4);
+                let motif: Vec<i32> = (0..period)
+                    .map(|_| LETTER0 + self.rng.below(RING_N as usize) as i32)
+                    .collect();
+                for i in 0..len {
+                    out.push(motif[i % period]);
+                }
+            }
+            4 => {
+                // letter-successor chain
+                out.push(TAG_SUCC);
+                let start = self.rng.below(RING_N as usize) as i32;
+                let step = self.rng.range(1, 3) as i32;
+                for i in 0..len {
+                    out.push(LETTER0 + (start + i as i32 * step).rem_euclid(RING_N));
+                }
+            }
+            _ => {
+                // markov-ish letters
+                out.push(TAG_MARKOV_A);
+                for _ in 0..len {
+                    out.push(self.rng.range(LETTER0 as usize, LETTER1 as usize) as i32);
+                }
+            }
+        }
+        out.truncate(len);
+        out
+    }
+
+    /// Next request: log-normal prompt/output lengths, pattern content.
+    pub fn next_request(&mut self) -> Request {
+        // ln-space fits: prompts median ~ 40 tokens, outputs ~ 16 (scaled
+        // to the mini models' 96-token budget).
+        let plen = (self.rng.lognormal(3.6, 0.5) as usize).clamp(8, self.max_prompt);
+        let olen = (self.rng.lognormal(2.4, 0.6) as usize).clamp(4, self.max_new);
+        let mut prompt = vec![tokens::BOS];
+        prompt.extend(self.pattern_body(plen - 1));
+        Request { prompt, max_new: olen }
+    }
+
+    /// A deterministic trace of `n` requests.
+    pub fn trace(&mut self, n: usize) -> Vec<Request> {
+        (0..n).map(|_| self.next_request()).collect()
+    }
+}
+
+/// One eval item: teacher-forced answer with known ground truth.
+#[derive(Debug, Clone)]
+pub struct EvalItem {
+    pub prompt: Vec<i32>,
+    pub answer: Vec<i32>,
+}
+
+/// A named benchmark suite (stand-ins for MMLU / CMMLU / GSM8K).
+#[derive(Debug, Clone)]
+pub struct EvalSuite {
+    pub name: String,
+    pub items: Vec<EvalItem>,
+}
+
+/// Load `artifacts/eval/suites.json`.
+pub fn load_suites(artifacts_dir: &str) -> Result<Vec<EvalSuite>> {
+    let path = Path::new(artifacts_dir).join("eval/suites.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {path:?}"))?;
+    let v = Json::parse(&text)?;
+    let mut suites = Vec::new();
+    for (name, arr) in v.as_obj()? {
+        let items = arr
+            .as_arr()?
+            .iter()
+            .map(|it| {
+                Ok(EvalItem {
+                    prompt: it
+                        .get("prompt")?
+                        .as_usize_vec()?
+                        .into_iter()
+                        .map(|t| t as i32)
+                        .collect(),
+                    answer: it
+                        .get("answer")?
+                        .as_usize_vec()?
+                        .into_iter()
+                        .map(|t| t as i32)
+                        .collect(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        suites.push(EvalSuite { name: name.clone(), items });
+    }
+    suites.sort_by(|a, b| a.name.cmp(&b.name));
+    Ok(suites)
+}
+
+/// The paper's benchmark naming: map suites to their stand-in roles.
+pub fn suite_role(name: &str) -> &'static str {
+    match name {
+        "suite_repeat" => "MMLU-proxy",
+        "suite_succ" => "CMMLU-proxy",
+        "suite_arith" => "GSM8K-proxy",
+        _ => "unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_and_bounded() {
+        let mut g1 = TraceGen::new(7, 96, 32);
+        let mut g2 = TraceGen::new(7, 96, 32);
+        let t1 = g1.trace(20);
+        let t2 = g2.trace(20);
+        for (a, b) in t1.iter().zip(&t2) {
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.max_new, b.max_new);
+            assert!(a.prompt.len() <= 96 && a.prompt.len() >= 8);
+            assert!(a.max_new <= 32 && a.max_new >= 4);
+            assert_eq!(a.prompt[0], tokens::BOS);
+            assert!(a.prompt.iter().all(|&t| (t as usize) < tokens::VOCAB));
+        }
+    }
+
+    #[test]
+    fn lengths_have_spread() {
+        let mut g = TraceGen::new(3, 96, 32);
+        let t = g.trace(100);
+        let lens: Vec<usize> = t.iter().map(|r| r.prompt.len()).collect();
+        let min = *lens.iter().min().unwrap();
+        let max = *lens.iter().max().unwrap();
+        assert!(max > min + 10, "degenerate length distribution");
+    }
+}

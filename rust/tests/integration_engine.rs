@@ -1,0 +1,352 @@
+//! Integration: the full serving engine over the real `tiny` artifacts —
+//! golden numerics vs the Python reference, timeline sanity, cache and
+//! prefetch behaviour, forced decoding for eval.
+
+use std::sync::Arc;
+
+use dymoe::config::{LowMode, PolicyConfig, SystemConfig, GB};
+use dymoe::coordinator::engine::{Engine, EngineOptions};
+use dymoe::coordinator::strategy::DyMoEStrategy;
+use dymoe::baselines::Uniform;
+use dymoe::model::assets::ModelAssets;
+use dymoe::model::sampler;
+use dymoe::quant::Precision;
+use dymoe::util::json::Json;
+
+fn assets() -> Option<Arc<ModelAssets>> {
+    match ModelAssets::load("artifacts", "tiny") {
+        Ok(a) => Some(Arc::new(a)),
+        Err(_) => {
+            eprintln!("artifacts/tiny missing; run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn big_vram_sys() -> SystemConfig {
+    // plenty of VRAM: everything fits, accuracy-only runs
+    let mut sys = SystemConfig::edge_preset("tiny", 24).unwrap();
+    sys.hardware.vram_bytes = 1024 * GB;
+    sys
+}
+
+fn bf16_engine(a: &Arc<ModelAssets>, opts: EngineOptions) -> Engine {
+    Engine::with_options(
+        a,
+        big_vram_sys(),
+        Box::new(Uniform::new(Precision::Bf16)),
+        opts,
+    )
+    .unwrap()
+}
+
+#[test]
+fn golden_numerics_match_python_reference() {
+    let Some(a) = assets() else { return };
+    let text = std::fs::read_to_string(a.dir.join("golden.json")).unwrap();
+    let g = Json::parse(&text).unwrap();
+    let prompt: Vec<i32> = g
+        .get("prompt")
+        .unwrap()
+        .as_usize_vec()
+        .unwrap()
+        .into_iter()
+        .map(|t| t as i32)
+        .collect();
+    let expected: Vec<f64> = g
+        .get("last_logits")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect();
+
+    let mut engine = bf16_engine(
+        &a,
+        EngineOptions { collect_logits: true, ..Default::default() },
+    );
+    let out = engine.run(&prompt, 1).unwrap();
+    let got = &out.logits_per_step[0];
+    assert_eq!(got.len(), expected.len());
+    let max_err = got
+        .iter()
+        .zip(&expected)
+        .map(|(a, b)| (*a as f64 - b).abs())
+        .fold(0.0, f64::max);
+    // bf16 serving path == python full forward (both f32 math)
+    assert!(max_err < 2e-3, "serving path diverges from python: {max_err}");
+}
+
+#[test]
+fn generation_is_deterministic_and_timed() {
+    let Some(a) = assets() else { return };
+    let mut e1 = bf16_engine(&a, EngineOptions::default());
+    let mut e2 = bf16_engine(&a, EngineOptions::default());
+    let prompt = [1i32, 5, 9, 13];
+    let o1 = e1.run(&prompt, 6).unwrap();
+    let o2 = e2.run(&prompt, 6).unwrap();
+    assert_eq!(o1.tokens, o2.tokens);
+    assert_eq!(o1.tokens.len(), 6);
+    assert!(o1.ttft > 0.0);
+    assert_eq!(o1.token_times.len(), 6);
+    // token times strictly increase
+    for w in o1.token_times.windows(2) {
+        assert!(w[1] > w[0], "non-monotone token times");
+    }
+    assert!(o1.tpot() > 0.0 && o1.tpot() < o1.ttft);
+}
+
+#[test]
+fn forced_decoding_returns_logits_per_answer_token() {
+    let Some(a) = assets() else { return };
+    let mut e = bf16_engine(
+        &a,
+        EngineOptions { collect_logits: true, ..Default::default() },
+    );
+    let prompt = [1i32, 2, 30, 31];
+    let answer = [30i32, 31, 32];
+    let out = e.run_forced(&prompt, 0, Some(&answer)).unwrap();
+    assert_eq!(out.tokens, answer.to_vec());
+    assert_eq!(out.logits_per_step.len(), 3);
+    for l in &out.logits_per_step {
+        assert_eq!(l.len(), e.model().vocab);
+        assert!(sampler::nll(l, 30).is_finite());
+    }
+}
+
+#[test]
+fn teacher_forcing_matches_incremental_prefill() {
+    // decode logits for position T must match a fresh prefill of T+1 tokens
+    let Some(a) = assets() else { return };
+    let mut e = bf16_engine(
+        &a,
+        EngineOptions { collect_logits: true, ..Default::default() },
+    );
+    let full = [1i32, 4, 30, 41, 52, 33];
+    let t = 4;
+    let out = e
+        .run_forced(&full[..t], 0, Some(&[full[t], full[t + 1]]))
+        .unwrap();
+    // out.logits_per_step[1] predicts full[t+1] given prefix full[..t+1]
+    let out2 = e.run_forced(&full[..t + 1], 1, None).unwrap();
+    let l1 = &out.logits_per_step[1];
+    let l2 = &out2.logits_per_step[0];
+    let max_err = l1
+        .iter()
+        .zip(l2)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 2e-3, "decode/prefill divergence {max_err}");
+}
+
+#[test]
+fn constrained_vram_causes_misses_and_transfers() {
+    let Some(a) = assets() else { return };
+    let mut sys = SystemConfig::edge_preset("tiny", 24).unwrap();
+    // squeeze: room for only ~4 bf16 experts' worth of paper-scale bytes
+    sys.hardware.vram_bytes = sys.paper.non_expert_bytes
+        + 4 * 32 * 2 * sys.paper.expert_params(); // 4 experts * grid scale 1/32
+    let mut e = Engine::new(
+        &a,
+        sys,
+        Box::new(Uniform::new(Precision::Bf16)),
+    )
+    .unwrap();
+    let prompt = [1i32, 5, 9, 13, 17, 21];
+    let out = e.run(&prompt, 4).unwrap();
+    assert!(out.ttft > 0.0);
+    assert!(e.cache.stats.misses > 0, "expected cache misses");
+    assert!(e.stats.transferred_bytes > 0);
+    // a second identical request still serves some hits from the warmed
+    // cache (LRU cycling under a too-small cache can shift the phase, so
+    // we don't require monotone improvement, just a working cache)
+    e.cache.stats = Default::default();
+    let _ = e.run(&prompt, 4).unwrap();
+    assert!(e.cache.stats.hits > 0, "warmed cache served no hits");
+}
+
+#[test]
+fn dymoe_skip_mode_executes_fewer_experts() {
+    let Some(a) = assets() else { return };
+    let sys = big_vram_sys();
+    let policy = PolicyConfig {
+        retention: 0.5,
+        low_mode: LowMode::Skip,
+        ..Default::default()
+    };
+    let mut dymoe = Engine::new(&a, sys.clone(), Box::new(DyMoEStrategy::new(policy))).unwrap();
+    let mut base = Engine::new(&a, sys, Box::new(Uniform::new(Precision::Int4)))
+        .unwrap();
+    let prompt = [1i32, 3, 12, 14, 16];
+    let _ = dymoe.run(&prompt, 5).unwrap();
+    let _ = base.run(&prompt, 5).unwrap();
+    assert!(dymoe.stats.skipped_experts > 0, "4/0 must skip sub-criticals");
+    assert!(
+        dymoe.stats.expert_execs < base.stats.expert_execs,
+        "dymoe {} vs base {}",
+        dymoe.stats.expert_execs,
+        base.stats.expert_execs
+    );
+}
+
+#[test]
+fn dymoe_full_retention_equals_uniform_int4() {
+    // r = 1.0 classifies every expert Critical -> DyMoE degenerates to
+    // uniform Int4; outputs must match the Uniform(Int4) strategy exactly.
+    let Some(a) = assets() else { return };
+    let policy = PolicyConfig {
+        retention: 1.0,
+        low_mode: LowMode::Int2,
+        ..Default::default()
+    };
+    let opts = EngineOptions { collect_logits: true, ..Default::default() };
+    let mut dy = Engine::with_options(
+        &a,
+        big_vram_sys(),
+        Box::new(DyMoEStrategy::new(policy)),
+        opts.clone(),
+    )
+    .unwrap();
+    let mut u4 = Engine::with_options(
+        &a,
+        big_vram_sys(),
+        Box::new(Uniform::new(Precision::Int4)),
+        opts,
+    )
+    .unwrap();
+    let prompt = [1i32, 2, 30, 35, 40];
+    let od = dy.run(&prompt, 3).unwrap();
+    let ou = u4.run(&prompt, 3).unwrap();
+    assert_eq!(od.tokens, ou.tokens);
+    for (a, b) in od.logits_per_step.iter().zip(&ou.logits_per_step) {
+        let max_err = a
+            .iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0f32, f32::max);
+        assert!(max_err < 1e-4, "r=1.0 DyMoE != uniform int4: {max_err}");
+    }
+}
+
+#[test]
+fn prefetching_overlaps_io_with_compute() {
+    let Some(a) = assets() else { return };
+    let mut sys = SystemConfig::edge_preset("tiny", 24).unwrap();
+    // tight VRAM: only ~4 of the 8 int4 experts fit (grid ratio 8/256)
+    let int4 = dymoe::quant::expert_bytes(
+        sys.paper.d_model,
+        sys.paper.d_ffn,
+        128,
+        Precision::Int4,
+    );
+    // 6 of 8 int4 expert slots: misses exist but prefetch has slack
+    sys.hardware.vram_bytes = sys.paper.non_expert_bytes + 32 * 6 * int4;
+    let mk = |prefetch: bool| {
+        let policy = PolicyConfig {
+            retention: 1.0,
+            prefetch_enabled: prefetch,
+            dyquant_enabled: false,
+            // depth must respect the cache size: the tiny model has 4
+            // experts/layer and ~4 cache slots, so prefetch top_k = 2
+            prefetch_depth: 2,
+            ..Default::default()
+        };
+        Engine::new(
+            &a,
+            sys.clone(),
+            Box::new(DyMoEStrategy::new(policy)),
+        )
+        .unwrap()
+    };
+    let mut with = mk(true);
+    let mut without = mk(false);
+    let prompt: Vec<i32> = (0..12).map(|i| 1 + (i * 3) % 60).collect();
+    let ow = with.run(&prompt, 8).unwrap();
+    let oo = without.run(&prompt, 8).unwrap();
+    // Mechanism checks on the tiny model (the latency *win* is asserted on
+    // mixtral-mini in integration_baselines — the tiny model's routing is
+    // too noisy for reliable look-ahead predictions):
+    assert!(with.prefetch_stats.issued > 0, "prefetcher idle");
+    assert!(with.prefetch_stats.useful > 0, "no prefetch ever used");
+    assert!(without.prefetch_stats.issued == 0);
+    // prefetch keeps the hit rate in the same band (the tiny model's
+    // pre-MoE probe predictions are noisy; the trained-model win is
+    // asserted in integration_baselines::prefetch_wins_on_trained_model)
+    assert!(
+        with.cache.stats.hit_rate() >= without.cache.stats.hit_rate() - 0.15,
+        "prefetch collapsed hit rate: {} vs {}",
+        with.cache.stats.hit_rate(),
+        without.cache.stats.hit_rate()
+    );
+    // and stays within sane bounds on latency even under mispredictions
+    assert!(
+        ow.tpot() <= oo.tpot() * 2.0,
+        "prefetch catastrophically slow: {} vs {}",
+        ow.tpot(),
+        oo.tpot()
+    );
+}
+
+#[test]
+fn timeline_events_recorded_when_requested() {
+    let Some(a) = assets() else { return };
+    let mut sys = big_vram_sys();
+    sys.hardware.vram_bytes = sys.paper.non_expert_bytes + GB;
+    let mut e = Engine::with_options(
+        &a,
+        sys,
+        Box::new(Uniform::new(Precision::Int4)),
+        EngineOptions { record_timeline: true, ..Default::default() },
+    )
+    .unwrap();
+    let _ = e.run(&[1, 5, 9], 3).unwrap();
+    assert!(!e.timeline.events.is_empty());
+    let art = e.timeline.render_ascii(60);
+    assert!(art.contains("gpu"));
+    // compute and transfer events both present under tight VRAM
+    use dymoe::memory::EventKind;
+    assert!(e.timeline.events.iter().any(|ev| ev.kind == EventKind::GpuCompute));
+    assert!(e
+        .timeline
+        .events
+        .iter()
+        .any(|ev| ev.kind == EventKind::PcieTransfer));
+}
+
+#[test]
+fn strict_precision_changes_numerics_not_tokens_necessarily() {
+    // With ample VRAM the warm fill holds Int4 copies; a 4/2 policy's
+    // Int2 requests are served by conservative reuse unless
+    // strict_precision forces the planned tier.  The two modes must
+    // produce different logits (Int2 vs Int4 execution) for a policy that
+    // actually assigns Int2.
+    let Some(a) = assets() else { return };
+    let policy = PolicyConfig {
+        retention: 0.5,
+        low_mode: LowMode::Int2,
+        ..Default::default()
+    };
+    let mk = |strict: bool| {
+        Engine::with_options(
+            &a,
+            big_vram_sys(),
+            Box::new(DyMoEStrategy::new(policy.clone())),
+            EngineOptions {
+                collect_logits: true,
+                strict_precision: strict,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    };
+    let prompt = [1i32, 5, 30, 35, 40, 45, 50];
+    let o_strict = mk(true).run(&prompt, 4).unwrap();
+    let o_reuse = mk(false).run(&prompt, 4).unwrap();
+    let diff: f32 = o_strict.logits_per_step[0]
+        .iter()
+        .zip(&o_reuse.logits_per_step[0])
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    assert!(diff > 1e-6, "strict precision had no effect: {diff}");
+}

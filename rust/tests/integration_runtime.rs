@@ -1,0 +1,155 @@
+//! Integration: PJRT runtime + executor over the real `tiny` artifacts.
+//!
+//! Requires `make artifacts` (skipped politely when missing so `cargo
+//! test` can run pre-build, but CI always builds artifacts first).
+
+use std::sync::Arc;
+
+use dymoe::model::assets::{ExpertKey, ModelAssets};
+use dymoe::model::executor::Executor;
+use dymoe::model::kv::KvCache;
+use dymoe::quant::Precision;
+use dymoe::util::json::Json;
+
+fn assets() -> Option<Arc<ModelAssets>> {
+    match ModelAssets::load("artifacts", "tiny") {
+        Ok(a) => Some(Arc::new(a)),
+        Err(_) => {
+            eprintln!("artifacts/tiny missing; run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_parses_and_is_consistent() {
+    let Some(a) = assets() else { return };
+    let m = &a.manifest;
+    assert_eq!(m.model.name, "tiny");
+    assert!(m.artifacts.contains_key("attn_prefill"));
+    assert!(m.artifacts.contains_key("expert_int4_t1"));
+    // sections cover every expert at every precision
+    for key in a.expert_keys() {
+        for p in Precision::ALL_STORED {
+            for name in a.expert_section_names(key, p) {
+                assert!(m.sections.contains_key(&name), "missing {name}");
+            }
+        }
+    }
+    // transfer byte ordering
+    assert!(
+        m.expert_transfer_bytes(Precision::Bf16)
+            > m.expert_transfer_bytes(Precision::Int8)
+    );
+    assert_eq!(m.expert_transfer_bytes(Precision::Skip), 0);
+}
+
+#[test]
+fn sections_deserialize_with_expected_shapes() {
+    let Some(a) = assets() else { return };
+    let m = &a.manifest.model;
+    let (emb, shape) = a.f32_section("emb").unwrap();
+    assert_eq!(shape, vec![m.vocab, m.d_model]);
+    assert_eq!(emb.len(), m.vocab * m.d_model);
+    let (words, wshape) = a.u32_section("L0.E0.w1.int4.q").unwrap();
+    assert_eq!(wshape, vec![m.d_model * 4 / 32, m.d_ffn]);
+    assert!(!words.is_empty());
+}
+
+#[test]
+fn executor_runs_every_artifact_shape() {
+    let Some(a) = assets() else { return };
+    let m = a.manifest.model.clone();
+    let ex = Executor::new(a.clone()).unwrap();
+
+    // embed both shapes
+    let toks = vec![1i32; m.max_seq];
+    let h = ex.embed_seq(&toks).unwrap();
+    assert_eq!(h.len(), m.max_seq * m.d_model);
+    let h1 = ex.embed_one(2).unwrap();
+    assert_eq!(h1.len(), m.d_model);
+
+    // prefill attention: outputs well-formed
+    let po = ex.attn_prefill(0, &h, 5).unwrap();
+    assert_eq!(po.gate_probs.len(), m.max_seq * m.n_experts);
+    assert_eq!(po.token_scores.len(), m.max_seq);
+    let score_sum: f32 = po.token_scores.iter().sum();
+    assert!((score_sum - 1.0).abs() < 1e-3, "Eq.1 scores sum {score_sum}");
+    for t in 0..5 {
+        let row = &po.gate_probs[t * m.n_experts..(t + 1) * m.n_experts];
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-3, "gate row {t} sums to {s}");
+    }
+
+    // decode attention over a KV cache built from the prefill K/V
+    let mut kv = KvCache::new(m.n_layers, m.max_cache, m.n_heads, m.head_dim);
+    kv.write_prefix(0, 5, &po.k, &po.v).unwrap();
+    let d0 = ex.attn_decode(0, &h1, &kv, 5).unwrap();
+    assert_eq!(d0.gate_probs.len(), m.n_experts);
+    assert_eq!(d0.k_new.len(), m.n_heads * m.head_dim);
+
+    // gate probe both shapes
+    assert_eq!(ex.gate_probe(1, &h1).unwrap().len(), m.n_experts);
+    assert_eq!(
+        ex.gate_probe(1, &po.h_resid).unwrap().len(),
+        m.max_seq * m.n_experts
+    );
+
+    // every expert precision + bucket
+    let key = ExpertKey::new(0, 1);
+    let row = vec![0.1f32; m.d_model];
+    for p in Precision::ALL_STORED {
+        let y = ex.expert_ffn(key, p, &[&row]).unwrap();
+        assert_eq!(y.len(), 1);
+        assert_eq!(y[0].len(), m.d_model);
+        assert!(y[0].iter().all(|v| v.is_finite()));
+    }
+    // multi-token bucket with padding
+    let rows = vec![&row[..], &row[..], &row[..]];
+    let y3 = ex.expert_ffn(key, Precision::Int4, &rows).unwrap();
+    assert_eq!(y3.len(), 3);
+    // identical rows must produce identical outputs
+    assert_eq!(y3[0], y3[1]);
+
+    // finalize both shapes
+    assert_eq!(ex.finalize_one(&h1).unwrap().len(), m.vocab);
+    assert_eq!(
+        ex.finalize_seq(&po.h_resid).unwrap().len(),
+        m.max_seq * m.vocab
+    );
+}
+
+#[test]
+fn quant_precision_ordering_in_expert_outputs() {
+    // int8 expert output closer to bf16 than int4, which beats int2
+    let Some(a) = assets() else { return };
+    let m = a.manifest.model.clone();
+    let ex = Executor::new(a.clone()).unwrap();
+    let key = ExpertKey::new(1, 0);
+    let row: Vec<f32> = (0..m.d_model).map(|i| ((i as f32) * 0.37).sin()).collect();
+    let y16 = ex.expert_ffn(key, Precision::Bf16, &[&row]).unwrap();
+    let mut errs = Vec::new();
+    for p in [Precision::Int8, Precision::Int4, Precision::Int2] {
+        let y = ex.expert_ffn(key, p, &[&row]).unwrap();
+        let err: f32 = y[0]
+            .iter()
+            .zip(&y16[0])
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f32>()
+            / y[0].len() as f32;
+        errs.push(err);
+    }
+    assert!(errs[0] < errs[1] && errs[1] < errs[2], "errs {errs:?}");
+}
+
+#[test]
+fn golden_numerics_available() {
+    // golden.json exists and parses; the engine test consumes it.
+    let Some(a) = assets() else { return };
+    let text = std::fs::read_to_string(a.dir.join("golden.json")).unwrap();
+    let g = Json::parse(&text).unwrap();
+    let prompt = g.get("prompt").unwrap().as_usize_vec().unwrap();
+    let logits = g.get("last_logits").unwrap().as_arr().unwrap();
+    assert!(!prompt.is_empty());
+    assert_eq!(logits.len(), a.manifest.model.vocab);
+}

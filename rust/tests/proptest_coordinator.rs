@@ -1,0 +1,253 @@
+//! Property tests over the coordinator invariants (routing, scheduling,
+//! caching, timeline) using the in-tree property-test driver
+//! (`dymoe::util::prop`; proptest itself is not vendored offline).
+
+use dymoe::coordinator::cache::{Lookup, MixedPrecisionCache};
+use dymoe::coordinator::scheduler::{
+    assign_precisions, layer_budget, retention, Allocation, Selection,
+};
+use dymoe::coordinator::{importance, prefetcher, top_k_route};
+use dymoe::memory::timeline::Channel;
+use dymoe::model::assets::ExpertKey;
+use dymoe::quant::Precision;
+use dymoe::util::prop::check;
+
+fn rand_probs(rng: &mut dymoe::util::rng::Rng, m: usize) -> Vec<f32> {
+    let raw: Vec<f64> = (0..m).map(|_| rng.f64() + 1e-6).collect();
+    let total: f64 = raw.iter().sum();
+    raw.into_iter().map(|x| (x / total) as f32).collect()
+}
+
+#[test]
+fn prop_routing_invariants() {
+    check("routing", 200, |rng| {
+        let m = rng.range(2, 64);
+        let k = rng.range(1, m.min(8));
+        let probs = rand_probs(rng, m);
+        let route = top_k_route(&probs, k);
+        // exactly k distinct experts
+        assert_eq!(route.len(), k);
+        let mut seen: Vec<usize> = route.iter().map(|&(e, _)| e).collect();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), k);
+        // weights positive, normalized
+        let total: f32 = route.iter().map(|&(_, w)| w).sum();
+        assert!((total - 1.0).abs() < 1e-4);
+        assert!(route.iter().all(|&(_, w)| w > 0.0));
+        // selected experts dominate every unselected one
+        let min_sel = route
+            .iter()
+            .map(|&(e, _)| probs[e])
+            .fold(f32::INFINITY, f32::min);
+        let chosen: std::collections::HashSet<usize> =
+            route.iter().map(|&(e, _)| e).collect();
+        for (e, &p) in probs.iter().enumerate() {
+            if !chosen.contains(&e) {
+                assert!(p <= min_sel + 1e-7);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_scheduler_budget_exactness() {
+    check("scheduler-budget", 200, |rng| {
+        let n_layers = rng.range(1, 48);
+        let m = rng.range(1, 128);
+        let r = rng.f64();
+        let layer = rng.below(n_layers);
+        for alloc in [Allocation::DepthCosine, Allocation::Equal] {
+            let b = layer_budget(alloc, layer, n_layers, r, m);
+            assert!((1..=m).contains(&b), "budget {b} outside [1, {m}]");
+        }
+        // budgets are monotone in depth for the cosine schedule
+        let mut prev = usize::MAX;
+        for l in 0..n_layers {
+            let b = layer_budget(Allocation::DepthCosine, l, n_layers, r, m);
+            assert!(b <= prev);
+            prev = b;
+        }
+        // assignment honors the budget exactly
+        let imp: Vec<f64> = (0..m).map(|_| rng.f64()).collect();
+        let budget = rng.range(1, m);
+        for sel in [Selection::Importance, Selection::Random] {
+            let p = assign_precisions(
+                &imp,
+                budget,
+                sel,
+                Precision::Int4,
+                Precision::Int2,
+                rng,
+            );
+            let hi = p.iter().filter(|&&x| x == Precision::Int4).count();
+            assert_eq!(hi, budget);
+            assert_eq!(p.len(), m);
+        }
+        // importance selection picks a superset-dominating set
+        let p = assign_precisions(
+            &imp,
+            budget,
+            Selection::Importance,
+            Precision::Int4,
+            Precision::Skip,
+            rng,
+        );
+        let min_hi = imp
+            .iter()
+            .zip(&p)
+            .filter(|(_, &x)| x == Precision::Int4)
+            .map(|(i, _)| *i)
+            .fold(f64::INFINITY, f64::min);
+        for (i, x) in imp.iter().zip(&p) {
+            if *x != Precision::Int4 {
+                assert!(*i <= min_hi + 1e-12);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_retention_bounds_and_monotonicity() {
+    check("retention", 300, |rng| {
+        let n = rng.range(2, 64);
+        let lambda = rng.f64();
+        let mut prev = f64::INFINITY;
+        for l in 0..n {
+            let r = retention(l, n, lambda);
+            assert!(r <= prev + 1e-12);
+            assert!(r >= lambda - 1e-12 && r <= 1.0 + 1e-12);
+            prev = r;
+        }
+    });
+}
+
+#[test]
+fn prop_cache_invariants_under_random_workload() {
+    check("cache-invariants", 100, |rng| {
+        let capacity = rng.range(100, 2000) as u64;
+        let mut cache = MixedPrecisionCache::new(capacity);
+        let precs = [Precision::Bf16, Precision::Int8, Precision::Int4, Precision::Int2];
+        let mut model: std::collections::HashMap<ExpertKey, Precision> =
+            std::collections::HashMap::new();
+        for _ in 0..300 {
+            let key = ExpertKey::new(rng.below(4), rng.below(8));
+            let p = precs[rng.below(4)];
+            match rng.below(3) {
+                0 => {
+                    // lookup consistency vs shadow model
+                    let got = cache.lookup(key, p);
+                    match (model.get(&key), got) {
+                        (Some(&mp), Lookup::Hit { prec, .. }) => {
+                            assert!(mp.satisfies(p));
+                            assert_eq!(prec, mp);
+                        }
+                        (Some(&mp), Lookup::Miss { promotes }) => {
+                            assert!(!mp.satisfies(p));
+                            assert!(promotes);
+                        }
+                        (None, Lookup::Miss { promotes }) => assert!(!promotes),
+                        (None, Lookup::Hit { .. }) => panic!("phantom hit"),
+                    }
+                }
+                1 => {
+                    let bytes = rng.range(10, 400) as u64;
+                    if let Some(evicted) = cache.insert(key, p, bytes, 0.0) {
+                        for ev in evicted {
+                            model.remove(&ev);
+                        }
+                        // no-duplication: entry now at >= p
+                        let now = cache.contains(key).unwrap();
+                        assert!(now.satisfies(p));
+                        if let Some(&old) = model.get(&key) {
+                            assert_eq!(now, old.max(p));
+                        } else {
+                            assert_eq!(now, p);
+                        }
+                        model.insert(key, now);
+                    }
+                }
+                _ => {
+                    cache.unpin_all();
+                }
+            }
+            assert!(cache.used_bytes() <= capacity, "capacity violated");
+            assert_eq!(cache.len(), model.len(), "shadow divergence");
+        }
+    });
+}
+
+#[test]
+fn prop_timeline_channels_never_time_travel() {
+    check("timeline", 200, |rng| {
+        let mut ch = Channel::default();
+        let mut last_demand_end = 0.0_f64;
+        let mut clock = 0.0_f64;
+        for _ in 0..100 {
+            clock += rng.f64() * 0.01;
+            let dur = rng.f64() * 0.02;
+            if rng.f64() < 0.5 {
+                let (s, e) = ch.schedule(clock, dur);
+                assert!(s >= clock && s >= last_demand_end - 1e-12);
+                assert!((e - s - dur).abs() < 1e-12);
+                last_demand_end = e;
+            } else {
+                let (s, e) = ch.schedule_background(clock, dur);
+                assert!(s >= clock);
+                assert!(e >= s);
+                // background never moves the demand horizon
+                assert!(ch.free_at == last_demand_end.max(0.0));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_importance_heavy_hitter_counts() {
+    check("importance", 150, |rng| {
+        let m = rng.range(2, 16);
+        let seq = rng.range(1, 40);
+        let k_route = rng.range(1, m.min(4));
+        let scores: Vec<f32> = (0..seq).map(|_| rng.f64() as f32).collect();
+        let routes: Vec<Vec<(usize, f32)>> = (0..seq)
+            .map(|_| {
+                let probs = rand_probs(rng, m);
+                top_k_route(&probs, k_route)
+            })
+            .collect();
+        let frac = rng.f64();
+        let imp = importance::prefill_importance(&scores, &routes, m, frac);
+        assert_eq!(imp.len(), m);
+        assert!(imp.iter().all(|&x| x >= 0.0));
+        // total integer part equals heavy-hitter token-route count
+        let k = ((seq as f64 * frac).ceil() as usize).clamp(1, seq);
+        let heavy = importance::heavy_hitters(&scores, seq, k);
+        let expected: usize = heavy.iter().map(|&t| routes[t].len()).sum();
+        let total_int: f64 = imp.iter().map(|x| x.floor()).sum();
+        assert!(
+            (total_int - expected as f64).abs() < 1.0 + m as f64 * 0.01,
+            "count mismatch: {total_int} vs {expected}"
+        );
+    });
+}
+
+#[test]
+fn prop_prefетch_predictions_are_valid_experts() {
+    check("prefetch", 150, |rng| {
+        let m = rng.range(2, 32);
+        let t = rng.range(1, m);
+        let probs = rand_probs(rng, m);
+        let picks = prefetcher::predict_decode(&probs, t);
+        assert_eq!(picks.len(), t);
+        let mut sorted = picks.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), t, "duplicate predictions");
+        // prefill counts respect seq_len
+        let seq = rng.range(1, 12);
+        let all: Vec<f32> = (0..seq).flat_map(|_| rand_probs(rng, m)).collect();
+        let picks = prefetcher::predict_prefill(&all, seq, m, 2.min(m), t);
+        assert!(picks.len() <= t);
+        assert!(picks.iter().all(|&e| e < m));
+    });
+}
