@@ -1,0 +1,71 @@
+//! Fleet-serving bench: sweep open-loop Poisson arrival rate against the
+//! fleet's tail latency (p99 TTFT measured from arrival, queueing
+//! included), goodput, and SLO attainment, for each scheduling policy.
+//! This is the classic serving-paper "rate vs p99" curve, produced on the
+//! co-simulated virtual timeline (deterministic under the fixed seed).
+//!
+//! Skips politely if `make artifacts` has not been run.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use dymoe::config::{PolicyConfig, ServingConfig, SystemConfig};
+use dymoe::coordinator::engine::Engine;
+use dymoe::coordinator::strategy::DyMoEStrategy;
+use dymoe::model::assets::ModelAssets;
+use dymoe::serving::arrival::{ArrivalGen, ArrivalProcess};
+use dymoe::serving::policy::PolicyKind;
+use dymoe::serving::{run_fleet, FleetConfig};
+use dymoe::workload::TraceGen;
+
+fn main() -> anyhow::Result<()> {
+    let Ok(assets) = ModelAssets::load("artifacts", "mixtral-mini") else {
+        eprintln!("artifacts missing; run `make artifacts` first");
+        return Ok(());
+    };
+    let assets = Arc::new(assets);
+    let m = assets.manifest.model.clone();
+    let requests = 16;
+    let rates = [0.05, 0.1, 0.2, 0.4, 0.8];
+    println!(
+        "### bench: fleet serving (mixtral-mini, 16 GB, {requests} requests/point, \
+         Poisson arrivals)"
+    );
+    println!(
+        "{:<8} {:<6} {:>12} {:>12} {:>12} {:>12} {:>8} {:>12}",
+        "rate", "sched", "TTFT p50", "TTFT p99", "queue mean", "goodput r/s", "SLO %", "wall (s)"
+    );
+    println!("{}", "-".repeat(92));
+    for &rate in &rates {
+        for policy in PolicyKind::ALL {
+            let sys = SystemConfig::edge_preset("mixtral-mini", 16)?;
+            let strat = Box::new(DyMoEStrategy::new(PolicyConfig::default()));
+            let mut engine = Engine::new(&assets, sys, strat)?;
+            let mut content =
+                TraceGen::new(11, m.max_seq.min(80), (m.max_cache - m.max_seq).min(12));
+            let trace = ArrivalGen::generate(
+                0x5EED,
+                ArrivalProcess::Poisson { rate },
+                &mut content,
+                requests,
+            )?;
+            let cfg = FleetConfig {
+                serving: ServingConfig { max_sessions: 8, ..Default::default() },
+                policy,
+            };
+            let wall = Instant::now();
+            let outcome = run_fleet(&mut engine, trace, &cfg)?;
+            println!(
+                "{rate:<8} {:<6} {:>12.4} {:>12.4} {:>12.4} {:>12.3} {:>7.0}% {:>12.2}",
+                policy.name(),
+                outcome.metrics.ttft.percentile(50.0),
+                outcome.metrics.ttft.percentile(99.0),
+                outcome.metrics.queue_delay.mean(),
+                outcome.metrics.goodput_rps(),
+                outcome.metrics.slo_attainment() * 100.0,
+                wall.elapsed().as_secs_f64(),
+            );
+        }
+    }
+    Ok(())
+}

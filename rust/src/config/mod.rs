@@ -189,6 +189,28 @@ impl PolicyConfig {
     }
 }
 
+/// Fleet-serving knobs consumed by [`crate::serving`]: admission limits
+/// and the latency SLOs that define goodput / attainment.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Maximum in-flight (admitted) sessions; later arrivals wait in the
+    /// admission queue.
+    pub max_sessions: usize,
+    /// Time-to-first-token SLO, measured from *arrival* (queue delay
+    /// included), in virtual seconds.
+    pub ttft_slo_s: f64,
+    /// Per-output-token SLO in virtual seconds.
+    pub tpot_slo_s: f64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        // Edge-interactive targets at paper scale: first token within a
+        // few seconds even after queueing, decode around 2 tok/s.
+        ServingConfig { max_sessions: 8, ttft_slo_s: 5.0, tpot_slo_s: 0.5 }
+    }
+}
+
 /// Full system configuration for one engine instantiation.
 #[derive(Debug, Clone)]
 pub struct SystemConfig {

@@ -1,8 +1,18 @@
 //! The serving engine: drives the model artifact-by-artifact with real
 //! numerics while co-simulating time on the virtual timeline
 //! (DESIGN.md §6).  One engine = one model + one policy + one simulated
-//! edge device; requests run back-to-back (batch size 1, as in the
-//! paper's latency-sensitive edge scenario).
+//! edge device.
+//!
+//! Requests are served through a **step-wise session API** —
+//! [`Engine::begin_session`] / [`Engine::prefill_session`] /
+//! [`Engine::decode_session`] — so a scheduler can interleave prefill
+//! and decode steps of many in-flight sessions on the one device (the
+//! multi-session serving layer in [`crate::serving`] does exactly that;
+//! sessions then contend for the shared mixed-precision cache and PCIe
+//! channel).  [`Engine::run`] / [`Engine::run_forced`] are the classic
+//! run-to-completion path, implemented on top of the same steps, so
+//! back-to-back serving (batch size 1, the paper's latency-sensitive
+//! edge scenario) behaves exactly as before.
 //!
 //! Per layer the engine:
 //! 1. runs the attention half (artifact) and charges its roofline cost;
@@ -121,6 +131,70 @@ pub struct Engine {
     /// the scan-resistant prefix matters for the prefill layer sweep; the
     /// decode phase needs the slack for dynamic locality).
     warm_pinned: Vec<ExpertKey>,
+    /// Which `(session, phase)` the strategy / pinning state is currently
+    /// configured for.  Phase transitions (and session switches under
+    /// interleaving) re-run the per-phase setup exactly once.
+    phase_ctx: Option<(u64, Phase)>,
+    next_session_id: u64,
+}
+
+/// One in-flight request's engine-side state: its private [`KvCache`],
+/// sampling cursor, and timing.  This is the unit the multi-session
+/// serving layer interleaves; everything else (mixed-precision cache,
+/// PCIe/NVMe channels, GPU) is shared across sessions.
+pub struct EngineSession {
+    id: u64,
+    prompt: Vec<i32>,
+    forced: Option<Vec<i32>>,
+    /// Total tokens to emit (first token included), >= 1.
+    n_new: usize,
+    kv: KvCache,
+    /// Last emitted token (decode input).
+    token: i32,
+    emitted: usize,
+    /// Virtual arrival time; service never starts earlier.
+    pub arrival: f64,
+    pub out: RequestOutput,
+}
+
+impl EngineSession {
+    /// Engine-assigned session id (unique per engine).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn prompt_len(&self) -> usize {
+        self.prompt.len()
+    }
+
+    /// Tokens emitted so far.
+    pub fn emitted(&self) -> usize {
+        self.emitted
+    }
+
+    /// Total tokens this session will emit.
+    pub fn target_tokens(&self) -> usize {
+        self.n_new
+    }
+
+    /// Prefill has run (first token exists).
+    pub fn prefilled(&self) -> bool {
+        self.emitted > 0
+    }
+
+    /// Bytes held by this session's private KV cache.
+    pub fn kv_bytes(&self) -> u64 {
+        self.kv.bytes()
+    }
+
+    pub fn done(&self) -> bool {
+        self.emitted >= self.n_new
+    }
+
+    /// Consume the session, yielding its request output.
+    pub fn into_output(self) -> RequestOutput {
+        self.out
+    }
 }
 
 impl Engine {
@@ -198,6 +272,8 @@ impl Engine {
             prefetch_stats: PrefetchStats::default(),
             prefetched_for: HashMap::new(),
             warm_pinned,
+            phase_ctx: None,
+            next_session_id: 0,
         })
     }
 
@@ -205,20 +281,88 @@ impl Engine {
         &self.assets.manifest.model
     }
 
+    /// Current virtual time (the device's compute-availability horizon).
+    pub fn clock(&self) -> f64 {
+        self.timeline.gpu.free_at
+    }
+
     /// Serve one request, sampling greedily.
     pub fn run(&mut self, prompt: &[i32], max_new: usize) -> Result<RequestOutput> {
         self.run_forced(prompt, max_new, None)
     }
 
-    /// Serve one request; when `forced` is given, teacher-force those
-    /// tokens instead of sampling (eval: `logits_per_step[i]` then scores
-    /// `forced[i]`).
+    /// Serve one request to completion; when `forced` is given,
+    /// teacher-force those tokens instead of sampling (eval:
+    /// `logits_per_step[i]` then scores `forced[i]`).  Implemented on the
+    /// step-wise session API, so it is numerically and temporally
+    /// identical to a single-session fleet.
     pub fn run_forced(
         &mut self,
         prompt: &[i32],
         max_new: usize,
         forced: Option<&[i32]>,
     ) -> Result<RequestOutput> {
+        let arrival = self.timeline.gpu.free_at;
+        let mut s = self.begin_session(prompt, max_new, forced, arrival)?;
+        self.prefill_session(&mut s)?;
+        while !s.done() {
+            self.decode_session(&mut s)?;
+        }
+        Ok(s.into_output())
+    }
+
+    // -----------------------------------------------------------------
+    // Step-wise session API (multi-session serving entry points)
+    // -----------------------------------------------------------------
+
+    /// Reconfigure the per-phase strategy / pinning state when the
+    /// `(session, phase)` context changes.  For a single run-to-completion
+    /// request this fires exactly twice (prefill, then decode), matching
+    /// the classic path; under interleaving every session switch re-enters
+    /// the phase so policies always see the phase they are planning for.
+    fn enter_phase(&mut self, session: u64, phase: Phase) {
+        if self.phase_ctx == Some((session, phase)) {
+            return;
+        }
+        self.phase_ctx = Some((session, phase));
+        self.strategy.begin_request(phase);
+        // Look-ahead state never survives a context switch: a prefetch
+        // issued for another session's next layer says nothing about this
+        // one.  (Within one session the map is empty at phase boundaries —
+        // predictions are consumed by the very next layer — so this only
+        // bites, and only as `wasted`, under interleaving.)
+        for (_, pref) in self.prefetched_for.drain() {
+            self.prefetch_stats.wasted += pref.len() as u64;
+        }
+        match phase {
+            // Phase-adaptive pinning: re-pin whatever of the warm resident
+            // set survived earlier decode phases (evicted entries re-stream
+            // on demand and re-enter the cache unpinned).
+            Phase::Prefill => {
+                for key in self.warm_pinned.clone() {
+                    self.cache.set_pinned(key, true);
+                }
+            }
+            // Release the prefill pins: decode's working set is small and
+            // dynamic, so the whole cache becomes LRU slack.
+            Phase::Decode => {
+                for key in self.warm_pinned.clone() {
+                    self.cache.set_pinned(key, false);
+                }
+            }
+        }
+    }
+
+    /// Open a session: validate the request and allocate its KV cache.
+    /// Nothing is scheduled until [`Engine::prefill_session`]; `arrival`
+    /// is the virtual time before which service may not start.
+    pub fn begin_session(
+        &mut self,
+        prompt: &[i32],
+        max_new: usize,
+        forced: Option<&[i32]>,
+        arrival: f64,
+    ) -> Result<EngineSession> {
         let m = self.model().clone();
         ensure!(!prompt.is_empty(), "empty prompt");
         ensure!(
@@ -232,39 +376,51 @@ impl Engine {
             prompt.len() + n_new <= m.max_cache,
             "prompt + generation exceeds KV capacity"
         );
-        self.strategy.begin_request(Phase::Prefill);
-        // Phase-adaptive pinning: re-pin whatever of the warm resident set
-        // survived the previous decode phase (evicted entries re-stream on
-        // demand and re-enter the cache unpinned).
-        for key in self.warm_pinned.clone() {
-            self.cache.set_pinned(key, true);
-        }
-        self.prefetched_for.clear();
+        let id = self.next_session_id;
+        self.next_session_id += 1;
+        Ok(EngineSession {
+            id,
+            prompt: prompt.to_vec(),
+            forced: forced.map(|f| f.to_vec()),
+            n_new: n_new.max(1),
+            kv: KvCache::new(m.n_layers, m.max_cache, m.n_heads, m.head_dim),
+            token: 0,
+            emitted: 0,
+            arrival,
+            out: RequestOutput {
+                tokens: Vec::new(),
+                ttft: 0.0,
+                token_times: Vec::new(),
+                logits_per_step: Vec::new(),
+                prefill_hidden: Vec::new(),
+                start: 0.0,
+            },
+        })
+    }
+
+    /// Run the session's whole prefill (all layers) and emit its first
+    /// token.  One prefill is one scheduling step: splitting it would not
+    /// overlap anything on this single-device pipeline, while keeping it
+    /// atomic preserves the intra-request prefetch chain.
+    pub fn prefill_session(&mut self, s: &mut EngineSession) -> Result<()> {
+        ensure!(!s.prefilled(), "session {} already prefilled", s.id);
+        let m = self.model().clone();
+        self.enter_phase(s.id, Phase::Prefill);
         self.stats.requests += 1;
 
-        let start = self.timeline.gpu.free_at;
-        let mut kv = KvCache::new(m.n_layers, m.max_cache, m.n_heads, m.head_dim);
-        let mut out = RequestOutput {
-            tokens: Vec::new(),
-            ttft: 0.0,
-            token_times: Vec::new(),
-            logits_per_step: Vec::new(),
-            prefill_hidden: Vec::new(),
-            start,
-        };
-
-        // ---- Prefill ----
-        let seq_len = prompt.len();
-        let mut padded = prompt.to_vec();
+        let start = self.timeline.gpu.free_at.max(s.arrival);
+        s.out.start = start;
+        let seq_len = s.prompt.len();
+        let mut padded = s.prompt.clone();
         padded.resize(m.max_seq, 0);
         let mut h = self.exec.embed_seq(&padded)?;
         let mut layer_ready = start;
         for layer in 0..m.n_layers {
             layer_ready = self
-                .layer_prefill(layer, &mut h, seq_len, &mut kv, layer_ready)
+                .layer_prefill(layer, &mut h, seq_len, &mut s.kv, layer_ready)
                 .with_context(|| format!("prefill layer {layer}"))?;
             if self.opts.collect_hidden {
-                out.prefill_hidden.push(h.clone());
+                s.out.prefill_hidden.push(h.clone());
             }
         }
         // First-token logits from the last valid position.
@@ -277,50 +433,60 @@ impl Engine {
             self.cost.head(1, 1.0),
             "finalize",
         );
-        out.ttft = t_first - start;
-        out.token_times.push(out.ttft);
-        let first = forced
+        s.out.ttft = t_first - start;
+        s.out.token_times.push(s.out.ttft);
+        let first = s
+            .forced
+            .as_ref()
             .and_then(|f| f.first().copied())
             .unwrap_or_else(|| sampler::greedy(&logits) as i32);
-        out.tokens.push(first);
+        s.out.tokens.push(first);
         if self.opts.collect_logits {
-            out.logits_per_step.push(logits);
+            s.out.logits_per_step.push(logits);
         }
+        s.token = first;
+        s.emitted = 1;
+        Ok(())
+    }
 
-        // ---- Decode ----
-        self.strategy.begin_request(Phase::Decode);
-        // Release the prefill pins: decode's working set is small and
-        // dynamic, so the whole cache becomes LRU slack.
-        for key in self.warm_pinned.clone() {
-            self.cache.set_pinned(key, false);
+    /// Decode one token for the session (all layers).  Returns `true`
+    /// when the session has emitted its last token.
+    pub fn decode_session(&mut self, s: &mut EngineSession) -> Result<bool> {
+        ensure!(s.prefilled(), "decode before prefill (session {})", s.id);
+        if s.done() {
+            return Ok(true);
         }
-        let mut token = first;
-        for step in 1..n_new {
-            let pos = seq_len + step - 1;
-            let mut hd = self.exec.embed_one(token)?;
-            let mut ready = self.timeline.gpu.free_at;
-            for layer in 0..m.n_layers {
-                ready = self
-                    .layer_decode(layer, &mut hd, &mut kv, pos, ready)
-                    .with_context(|| format!("decode layer {layer} step {step}"))?;
-            }
-            let logits = self.exec.finalize_one(&hd)?;
-            let t_tok = self.timeline.gpu_compute(
-                self.timeline.gpu.free_at,
-                ready,
-                self.cost.head(1, 1.0),
-                "finalize",
-            );
-            out.token_times.push(t_tok - start);
-            token = forced
-                .map(|f| f[step])
-                .unwrap_or_else(|| sampler::greedy(&logits) as i32);
-            out.tokens.push(token);
-            if self.opts.collect_logits {
-                out.logits_per_step.push(logits);
-            }
+        let m = self.model().clone();
+        self.enter_phase(s.id, Phase::Decode);
+        let step = s.emitted;
+        let pos = s.prompt.len() + step - 1;
+        let mut hd = self.exec.embed_one(s.token)?;
+        let mut ready = self.timeline.gpu.free_at;
+        for layer in 0..m.n_layers {
+            ready = self
+                .layer_decode(layer, &mut hd, &mut s.kv, pos, ready)
+                .with_context(|| format!("decode layer {layer} step {step}"))?;
         }
-        Ok(out)
+        let logits = self.exec.finalize_one(&hd)?;
+        let t_tok = self.timeline.gpu_compute(
+            self.timeline.gpu.free_at,
+            ready,
+            self.cost.head(1, 1.0),
+            "finalize",
+        );
+        s.out.token_times.push(t_tok - s.out.start);
+        let token = s
+            .forced
+            .as_ref()
+            .map(|f| f[step])
+            .unwrap_or_else(|| sampler::greedy(&logits) as i32);
+        s.out.tokens.push(token);
+        if self.opts.collect_logits {
+            s.out.logits_per_step.push(logits);
+        }
+        s.token = token;
+        s.emitted += 1;
+        Ok(s.done())
     }
 
     // -----------------------------------------------------------------

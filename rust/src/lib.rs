@@ -7,8 +7,10 @@
 //!   importance estimation, depth-aware precision scheduling, the
 //!   mixed-precision LRU cache, the look-ahead prefetcher, plus the
 //!   offloading baselines the paper compares against, a memory-hierarchy /
-//!   virtual-time substrate, and the experiment drivers for every table
-//!   and figure in the paper.
+//!   virtual-time substrate, the multi-session serving layer ([`serving`]:
+//!   open-loop arrival traffic, continuous session scheduling, fleet SLO
+//!   metrics), and the experiment drivers for every table and figure in
+//!   the paper.
 //! * **L2/L1 (python/, build-time only)** — the mini-MoE JAX model and its
 //!   Pallas kernels, AOT-lowered to HLO text artifacts executed here via
 //!   the PJRT CPU client ([`runtime`]).
@@ -24,14 +26,18 @@ pub mod metrics;
 pub mod model;
 pub mod quant;
 pub mod runtime;
+pub mod serving;
 pub mod util;
 pub mod workload;
 
 /// Convenient re-exports for examples and binaries.
 pub mod prelude {
-    pub use crate::config::{LowMode, PolicyConfig, SystemConfig, GB};
-    pub use crate::coordinator::engine::{Engine, RequestOutput};
+    pub use crate::config::{LowMode, PolicyConfig, ServingConfig, SystemConfig, GB};
+    pub use crate::coordinator::engine::{Engine, EngineSession, RequestOutput};
     pub use crate::coordinator::strategy::{DyMoEStrategy, Strategy};
     pub use crate::model::assets::ModelAssets;
     pub use crate::quant::Precision;
+    pub use crate::serving::arrival::{ArrivalGen, ArrivalProcess, TimedRequest};
+    pub use crate::serving::policy::PolicyKind;
+    pub use crate::serving::{run_fleet, FleetConfig, FleetOutcome};
 }

@@ -1,10 +1,12 @@
 //! `dymoe` — the L3 coordinator CLI.
 //!
 //! ```text
-//! dymoe info       --model mixtral-mini
-//! dymoe serve      --model mixtral-mini --vram 16 --requests 10 [--strategy dymoe-40]
-//! dymoe experiment <fig1|...|table3|all> [--items N] [--requests N] [--models a,b]
-//! dymoe timeline   --model mixtral-mini --vram 16
+//! dymoe info        --model mixtral-mini
+//! dymoe serve       --model mixtral-mini --vram 16 --requests 10 [--strategy dymoe-40]
+//! dymoe serve-fleet --model mixtral-mini --vram 16 --requests 24 --rate 0.25 \
+//!                   [--arrival poisson|bursty|ramp] [--sessions 8] [--sched fifo|rr|slo]
+//! dymoe experiment  <fig1|...|table3|all> [--items N] [--requests N] [--models a,b]
+//! dymoe timeline    --model mixtral-mini --vram 16
 //! ```
 //!
 //! (Arg parsing is hand-rolled: clap is not vendored in this offline
@@ -21,9 +23,13 @@ use dymoe::baselines::{
 use dymoe::config::{LowMode, PolicyConfig, SystemConfig};
 use dymoe::coordinator::engine::{Engine, EngineOptions};
 use dymoe::coordinator::strategy::{DyMoEStrategy, Strategy};
+use dymoe::config::ServingConfig;
 use dymoe::experiments::{self, ExpOptions};
 use dymoe::model::assets::ModelAssets;
 use dymoe::quant::Precision;
+use dymoe::serving::arrival::{ArrivalGen, ArrivalProcess};
+use dymoe::serving::policy::PolicyKind;
+use dymoe::serving::{run_fleet, FleetConfig};
 use dymoe::util::table::{fmt_secs, Table};
 use dymoe::workload::TraceGen;
 
@@ -188,6 +194,110 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `serve-fleet`: open-loop multi-session serving with fleet SLO metrics.
+fn cmd_serve_fleet(args: &Args) -> Result<()> {
+    let artifacts = args.get("artifacts", "artifacts");
+    let model = args.get("model", "mixtral-mini");
+    let vram: u64 = args.get_usize("vram", 16)? as u64;
+    let requests = args.get_usize("requests", 24)?;
+    let retention: f64 = args
+        .get("retention", "0.75")
+        .parse()
+        .map_err(|_| anyhow!("--retention wants a float"))?;
+    let strat_name = args.get("strategy", "dymoe-40");
+    let seed = args.get_usize("seed", 11)? as u64;
+    let rate: f64 = args
+        .get("rate", "0.25")
+        .parse()
+        .map_err(|_| anyhow!("--rate wants a float (requests / virtual second)"))?;
+    let process = ArrivalProcess::from_cli(&args.get("arrival", "poisson"), rate)?;
+    let policy = PolicyKind::parse(&args.get("sched", "slo"))?;
+    let serving = ServingConfig {
+        max_sessions: args.get_usize("sessions", 8)?,
+        ttft_slo_s: args
+            .get("ttft-slo", "5.0")
+            .parse()
+            .map_err(|_| anyhow!("--ttft-slo wants seconds"))?,
+        tpot_slo_s: args
+            .get("tpot-slo", "0.5")
+            .parse()
+            .map_err(|_| anyhow!("--tpot-slo wants seconds"))?,
+    };
+
+    let assets = Arc::new(ModelAssets::load(&artifacts, &model)?);
+    let m = assets.manifest.model.clone();
+    let strategy = make_strategy(&strat_name, &m, retention)?;
+    let sys = SystemConfig::edge_preset(&model, vram)?;
+    println!(
+        "fleet-serving {model} as {} @ {vram} GB VRAM: {} arrivals ({process:?}), \
+         <= {} sessions, {} scheduling, SLO ttft {:.2}s / tpot {:.3}s",
+        strategy.name(),
+        requests,
+        serving.max_sessions,
+        policy.name(),
+        serving.ttft_slo_s,
+        serving.tpot_slo_s,
+    );
+    let mut engine = Engine::new(&assets, sys, strategy)?;
+    let mut content = TraceGen::new(seed, m.max_seq.min(80), (m.max_cache - m.max_seq).min(16));
+    // Independent seeded streams for timing vs content (see serving::arrival).
+    let trace = ArrivalGen::generate(seed ^ 0x5EED_CAFE, process, &mut content, requests)?;
+    let cfg = FleetConfig { serving, policy };
+    let outcome = run_fleet(&mut engine, trace, &cfg)?;
+
+    for r in &outcome.per_request {
+        println!(
+            "req {:>3}: arrived {:>8} queued {:>8}  TTFT={:>8}  TPOT={:>8}  tokens={:>3}  {}",
+            r.id,
+            fmt_secs(r.arrival),
+            fmt_secs(r.queue_delay),
+            fmt_secs(r.ttft),
+            fmt_secs(r.tpot),
+            r.tokens,
+            if r.ttft_ok && r.tpot_ok { "ok" } else { "SLO-miss" },
+        );
+    }
+    println!();
+    println!("{}", outcome.metrics.render(policy.name()));
+    println!(
+        "fleet: {} completed, peak concurrency {}, {} scheduler steps, makespan {}",
+        outcome.metrics.completed,
+        outcome.peak_concurrency,
+        outcome.steps,
+        fmt_secs(outcome.metrics.makespan()),
+    );
+    let span = outcome.metrics.makespan();
+    println!(
+        "resources: gpu {:.0}% / pcie {:.0}% / cpu {:.0}% busy over the run; \
+         peak session KV {:.1} MB",
+        engine.timeline.gpu.utilization(span) * 100.0,
+        engine.timeline.pcie.utilization(span) * 100.0,
+        engine.timeline.cpu.utilization(span) * 100.0,
+        outcome.peak_kv_bytes as f64 / 1e6,
+    );
+    println!(
+        "cache: {} hits / {} misses (hit rate {:.2}), {} promotions, {} reuses, {} evictions",
+        engine.cache.stats.hits,
+        engine.cache.stats.misses,
+        engine.cache.stats.hit_rate(),
+        engine.cache.stats.promotions,
+        engine.cache.stats.conservative_reuses,
+        engine.cache.stats.evictions
+    );
+    println!(
+        "prefetch: {} issued, {} useful ({:.2} accuracy); transferred {:.2} GB; \
+         {} expert execs ({} skipped, {} on CPU)",
+        engine.prefetch_stats.issued,
+        engine.prefetch_stats.useful,
+        engine.prefetch_stats.accuracy(),
+        engine.stats.transferred_bytes as f64 / 1e9,
+        engine.stats.expert_execs,
+        engine.stats.skipped_experts,
+        engine.stats.cpu_execs,
+    );
+    Ok(())
+}
+
 fn cmd_timeline(args: &Args) -> Result<()> {
     let artifacts = args.get("artifacts", "artifacts");
     let model = args.get("model", "mixtral-mini");
@@ -255,6 +365,9 @@ fn usage() -> String {
      commands:\n\
      \x20 info        --model <name> [--artifacts DIR]\n\
      \x20 serve       --model <name> [--vram GB] [--requests N] [--strategy S] [--retention R]\n\
+     \x20 serve-fleet --model <name> [--vram GB] [--requests N] [--rate R/S]\n\
+     \x20             [--arrival poisson|bursty|ramp] [--sessions N] [--sched fifo|rr|slo]\n\
+     \x20             [--ttft-slo S] [--tpot-slo S] [--strategy S] [--seed N]\n\
      \x20 timeline    --model <name> [--vram GB] [--strategy S]\n\
      \x20 experiment  <fig1|fig2|fig3|fig4|fig5|fig6|fig10|fig11|table1|table2|table3|all>\n\
      \x20             [--items N] [--requests N] [--models a,b] [--out DIR]\n"
@@ -267,6 +380,7 @@ fn main() -> Result<()> {
     match args.positional.first().map(|s| s.as_str()) {
         Some("info") => cmd_info(&args),
         Some("serve") => cmd_serve(&args),
+        Some("serve-fleet") => cmd_serve_fleet(&args),
         Some("timeline") => cmd_timeline(&args),
         Some("experiment") => cmd_experiment(&args),
         _ => {

@@ -71,6 +71,16 @@ impl Channel {
         self.busy_total += dur;
         (start, end)
     }
+
+    /// Fraction of `span` seconds this channel spent busy (clamped to 1;
+    /// 0 for an empty span).  Fleet serving reports per-resource
+    /// utilization over a run's makespan with this.
+    pub fn utilization(&self, span: f64) -> f64 {
+        if span <= 0.0 {
+            return 0.0;
+        }
+        (self.busy_total / span).min(1.0)
+    }
 }
 
 /// The four resources of the edge pipeline plus an event log.
@@ -207,6 +217,17 @@ mod tests {
             assert!((c.busy_total - total).abs() < 1e-9);
             assert!(c.free_at >= total - 1e-9); // can't finish faster than work
         });
+    }
+
+    #[test]
+    fn utilization_is_clamped_fraction() {
+        let mut c = Channel::default();
+        c.schedule(0.0, 2.0);
+        c.schedule(5.0, 1.0);
+        assert!((c.utilization(6.0) - 0.5).abs() < 1e-12);
+        assert_eq!(c.utilization(1.0), 1.0); // clamped
+        assert_eq!(c.utilization(0.0), 0.0);
+        assert_eq!(Channel::default().utilization(10.0), 0.0);
     }
 
     #[test]

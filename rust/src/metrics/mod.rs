@@ -1,14 +1,47 @@
-//! Latency metrics: TTFT / TPOT recorders with percentile summaries.
+//! Latency metrics: TTFT / TPOT recorders with percentile summaries, plus
+//! the fleet-level aggregates (queue delay, goodput, SLO attainment) used
+//! by the multi-session serving layer ([`crate::serving`]).
 
 /// Collects one latency series and summarizes it.
+///
+/// Samples are kept in insertion order; a sorted mirror is (re)built
+/// lazily on the first order-statistic query after a push and then
+/// cached, so N pushes and Q percentile queries cost O(N log N) total
+/// instead of the clone-and-sort on *every* call the original
+/// implementation did, which dominated experiment post-processing for
+/// large traces.
+///
+/// Explicit edge behavior:
+/// * **empty** series: `mean`/`percentile` return `0.0`, `min` returns
+///   `+inf`, `max` returns `0.0` (unchanged from the original);
+/// * **single sample**: every percentile returns that sample;
+/// * **NaN** samples are rejected at `push` (debug assert; silently
+///   dropped in release), so the sorted order is total and `percentile`
+///   can never observe a NaN-poisoned ordering.
 #[derive(Debug, Clone, Default)]
 pub struct Series {
     samples: Vec<f64>,
+    /// Sorted cache; valid iff its length matches `samples` (samples are
+    /// append-only, so length is a complete staleness check).
+    sorted: std::cell::RefCell<Vec<f64>>,
 }
 
 impl Series {
     pub fn push(&mut self, v: f64) {
+        debug_assert!(!v.is_nan(), "NaN sample pushed into Series");
+        if v.is_nan() {
+            return;
+        }
         self.samples.push(v);
+    }
+
+    fn sorted_samples(&self) -> std::cell::Ref<'_, Vec<f64>> {
+        if self.sorted.borrow().len() != self.samples.len() {
+            let mut s = self.samples.clone();
+            s.sort_unstable_by(|a, b| a.total_cmp(b));
+            *self.sorted.borrow_mut() = s;
+        }
+        self.sorted.borrow()
     }
 
     pub fn len(&self) -> usize {
@@ -19,6 +52,11 @@ impl Series {
         self.samples.is_empty()
     }
 
+    /// Samples in insertion order.
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
     pub fn mean(&self) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
@@ -26,22 +64,23 @@ impl Series {
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
 
+    /// Nearest-rank percentile over `p` in `[0, 100]` (clamped).
     pub fn percentile(&self, p: f64) -> f64 {
-        if self.samples.is_empty() {
+        let sorted = self.sorted_samples();
+        if sorted.is_empty() {
             return 0.0;
         }
-        let mut s = self.samples.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
-        s[idx.min(s.len() - 1)]
+        let p = p.clamp(0.0, 100.0);
+        let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+        sorted[idx.min(sorted.len() - 1)]
     }
 
     pub fn min(&self) -> f64 {
-        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+        self.sorted_samples().first().copied().unwrap_or(f64::INFINITY)
     }
 
     pub fn max(&self) -> f64 {
-        self.samples.iter().cloned().fold(0.0, f64::max)
+        self.sorted_samples().last().copied().unwrap_or(0.0)
     }
 }
 
@@ -85,6 +124,8 @@ mod tests {
         assert_eq!(s.percentile(50.0), 3.0);
         assert_eq!(s.min(), 1.0);
         assert_eq!(s.max(), 5.0);
+        // insertion order preserved for the raw view
+        assert_eq!(s.samples(), &[3.0, 1.0, 2.0, 4.0, 5.0]);
     }
 
     #[test]
@@ -92,6 +133,32 @@ mod tests {
         let s = Series::default();
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.percentile(99.0), 0.0);
+        assert_eq!(s.min(), f64::INFINITY);
+        assert_eq!(s.max(), 0.0);
+    }
+
+    #[test]
+    fn single_sample_dominates_every_percentile() {
+        let mut s = Series::default();
+        s.push(2.5);
+        for p in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(s.percentile(p), 2.5);
+        }
+    }
+
+    #[test]
+    fn percentile_is_clamped_and_sorted_cache_consistent() {
+        let mut s = Series::default();
+        for v in [9.0, 7.0, 8.0, 1.0] {
+            s.push(v);
+        }
+        assert_eq!(s.percentile(-5.0), 1.0);
+        assert_eq!(s.percentile(250.0), 9.0);
+        // interleave pushes and queries: the cache must stay coherent
+        s.push(0.5);
+        assert_eq!(s.percentile(0.0), 0.5);
+        assert_eq!(s.min(), 0.5);
+        assert_eq!(s.max(), 9.0);
     }
 
     #[test]

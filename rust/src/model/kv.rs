@@ -32,6 +32,13 @@ impl KvCache {
         self.n_heads * self.head_dim
     }
 
+    /// Bytes this cache holds (K and V planes, f32).  The multi-session
+    /// serving layer sums this over in-flight sessions to report KV
+    /// memory pressure under concurrency.
+    pub fn bytes(&self) -> u64 {
+        (2 * self.k.len() * self.capacity * self.row_elems() * 4) as u64
+    }
+
     /// Write the K/V for position `pos` of `layer`.
     pub fn write_row(&mut self, layer: usize, pos: usize, k_new: &[f32], v_new: &[f32]) -> Result<()> {
         let re = self.row_elems();
@@ -56,6 +63,13 @@ impl KvCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn bytes_accounting() {
+        let kv = KvCache::new(2, 4, 2, 3);
+        // 2 planes * 2 layers * 4 rows * 6 elems * 4 bytes
+        assert_eq!(kv.bytes(), 2 * 2 * 4 * 6 * 4);
+    }
 
     #[test]
     fn write_and_capacity() {

@@ -1,0 +1,280 @@
+//! Open-loop arrival traffic: seeded, deterministic request arrival
+//! processes layered on the ShareGPT-like [`TraceGen`] content generator.
+//!
+//! Arrivals are *open-loop*: the schedule is fixed up front and does not
+//! react to server backpressure, so overload actually builds queues (the
+//! property closed-loop "send next after previous returns" drivers hide).
+//! Three processes cover the classic serving-paper shapes:
+//!
+//! * [`ArrivalProcess::Poisson`] — memoryless steady traffic at `rate`;
+//! * [`ArrivalProcess::Bursty`] — an on/off modulated Poisson process
+//!   (rate alternates between a burst rate and a base rate each period),
+//!   the diurnal-with-spikes shape;
+//! * [`ArrivalProcess::Ramp`] — rate climbs linearly from `start_rate`
+//!   to `end_rate` over `ramp_secs`, then holds (load-sweep / flash
+//!   crowd onset).
+//!
+//! Non-homogeneous processes are sampled exactly by Lewis–Shedler
+//! thinning: candidate gaps are drawn from a homogeneous process at the
+//! peak rate and accepted with probability `rate(t) / peak`, which keeps
+//! the draw deterministic under a fixed seed with no numeric integration.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::rng::Rng;
+use crate::workload::{Request, TraceGen};
+
+/// One request with its open-loop arrival time (virtual seconds).
+#[derive(Debug, Clone)]
+pub struct TimedRequest {
+    /// Fleet-wide request id (index in the trace).
+    pub id: usize,
+    pub arrival: f64,
+    pub request: Request,
+}
+
+/// The arrival process shape (rates in requests / virtual second).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    Poisson { rate: f64 },
+    Bursty { base_rate: f64, burst_rate: f64, period: f64, burst_frac: f64 },
+    Ramp { start_rate: f64, end_rate: f64, ramp_secs: f64 },
+}
+
+impl ArrivalProcess {
+    /// Instantaneous rate at virtual time `t`.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate } => rate,
+            ArrivalProcess::Bursty { base_rate, burst_rate, period, burst_frac } => {
+                let phase = (t / period).fract();
+                if phase < burst_frac {
+                    burst_rate
+                } else {
+                    base_rate
+                }
+            }
+            ArrivalProcess::Ramp { start_rate, end_rate, ramp_secs } => {
+                if t >= ramp_secs {
+                    end_rate
+                } else {
+                    start_rate + (end_rate - start_rate) * (t / ramp_secs)
+                }
+            }
+        }
+    }
+
+    /// The peak rate (thinning envelope).
+    fn peak_rate(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate } => rate,
+            ArrivalProcess::Bursty { base_rate, burst_rate, .. } => base_rate.max(burst_rate),
+            ArrivalProcess::Ramp { start_rate, end_rate, .. } => start_rate.max(end_rate),
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        ensure!(self.peak_rate() > 0.0, "arrival process needs a positive rate");
+        match *self {
+            ArrivalProcess::Poisson { rate } => {
+                ensure!(rate > 0.0, "poisson rate must be > 0");
+            }
+            ArrivalProcess::Bursty { base_rate, burst_rate, period, burst_frac } => {
+                ensure!(base_rate >= 0.0 && burst_rate >= 0.0, "bursty rates must be >= 0");
+                ensure!(period > 0.0, "bursty period must be > 0");
+                ensure!(
+                    (0.0..=1.0).contains(&burst_frac),
+                    "burst_frac must be in [0, 1]"
+                );
+                // The thinning sampler hangs if the rate is 0 over the
+                // whole recurring cycle (accept probability stays 0).
+                let mean = burst_frac * burst_rate + (1.0 - burst_frac) * base_rate;
+                ensure!(mean > 0.0, "bursty process has zero average rate");
+            }
+            ArrivalProcess::Ramp { start_rate, end_rate, ramp_secs } => {
+                ensure!(start_rate >= 0.0, "ramp rates must be >= 0");
+                ensure!(ramp_secs > 0.0, "ramp_secs must be > 0");
+                // rate_at(t) == end_rate forever after the ramp, so a zero
+                // end rate would hang the sampler once the ramp completes.
+                ensure!(end_rate > 0.0, "ramp end_rate must be > 0");
+            }
+        }
+        Ok(())
+    }
+
+    /// CLI shorthand: a process named `poisson` / `bursty` / `ramp`
+    /// parameterized by one mean rate (bursty splits it 4:1 around the
+    /// mean over a 30 s period; ramp climbs from 0.2x to 2x over 60 s —
+    /// both keep the long-run average near `rate`).
+    pub fn from_cli(kind: &str, rate: f64) -> Result<ArrivalProcess> {
+        ensure!(rate > 0.0, "--rate must be > 0");
+        let p = match kind {
+            "poisson" => ArrivalProcess::Poisson { rate },
+            "bursty" => ArrivalProcess::Bursty {
+                base_rate: rate * 0.25,
+                burst_rate: rate * 4.0,
+                period: 30.0,
+                burst_frac: 0.2,
+            },
+            "ramp" => ArrivalProcess::Ramp {
+                start_rate: rate * 0.2,
+                end_rate: rate * 2.0,
+                ramp_secs: 60.0,
+            },
+            _ => bail!("unknown arrival process {kind:?}; try poisson, bursty, ramp"),
+        };
+        p.validate()?;
+        Ok(p)
+    }
+}
+
+/// Seeded arrival-time generator (thinning sampler).
+pub struct ArrivalGen {
+    rng: Rng,
+    process: ArrivalProcess,
+    t: f64,
+}
+
+impl ArrivalGen {
+    pub fn new(seed: u64, process: ArrivalProcess) -> Result<ArrivalGen> {
+        process.validate()?;
+        Ok(ArrivalGen { rng: Rng::new(seed), process, t: 0.0 })
+    }
+
+    /// Next arrival time (strictly increasing).
+    pub fn next_arrival(&mut self) -> f64 {
+        let peak = self.process.peak_rate();
+        loop {
+            self.t += self.rng.exponential(peak);
+            let accept = self.process.rate_at(self.t) / peak;
+            if self.rng.f64() < accept {
+                return self.t;
+            }
+        }
+    }
+
+    /// A full deterministic trace: `n` arrivals paired with `TraceGen`
+    /// content.  Arrival times and request content come from independent
+    /// seeded streams, so changing the process never perturbs the
+    /// prompts (and vice versa).
+    pub fn generate(
+        seed: u64,
+        process: ArrivalProcess,
+        content: &mut TraceGen,
+        n: usize,
+    ) -> Result<Vec<TimedRequest>> {
+        let mut gen = ArrivalGen::new(seed, process)?;
+        Ok((0..n)
+            .map(|id| TimedRequest {
+                id,
+                arrival: gen.next_arrival(),
+                request: content.next_request(),
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arrivals(seed: u64, p: ArrivalProcess, n: usize) -> Vec<f64> {
+        let mut g = ArrivalGen::new(seed, p).unwrap();
+        (0..n).map(|_| g.next_arrival()).collect()
+    }
+
+    #[test]
+    fn poisson_is_deterministic_and_increasing() {
+        let p = ArrivalProcess::Poisson { rate: 2.0 };
+        let a = arrivals(9, p, 200);
+        let b = arrivals(9, p, 200);
+        assert_eq!(a, b);
+        for w in a.windows(2) {
+            assert!(w[1] > w[0], "non-increasing arrivals");
+        }
+        let c = arrivals(10, p, 200);
+        assert_ne!(a, c, "seed must matter");
+    }
+
+    #[test]
+    fn poisson_mean_rate_is_close() {
+        let rate = 4.0;
+        let a = arrivals(3, ArrivalProcess::Poisson { rate }, 2000);
+        let measured = a.len() as f64 / a.last().unwrap();
+        assert!(
+            (measured - rate).abs() / rate < 0.1,
+            "poisson rate {measured} vs {rate}"
+        );
+    }
+
+    #[test]
+    fn bursty_clusters_in_the_on_window() {
+        let p = ArrivalProcess::Bursty {
+            base_rate: 0.2,
+            burst_rate: 8.0,
+            period: 10.0,
+            burst_frac: 0.2,
+        };
+        let a = arrivals(7, p, 1000);
+        let in_burst = a
+            .iter()
+            .filter(|&&t| (t / 10.0).fract() < 0.2)
+            .count() as f64;
+        // expected share: 8.0*0.2 / (8.0*0.2 + 0.2*0.8) ~ 0.91
+        assert!(in_burst / a.len() as f64 > 0.7, "bursts not bursty");
+    }
+
+    #[test]
+    fn ramp_rate_grows() {
+        let p = ArrivalProcess::Ramp { start_rate: 0.5, end_rate: 5.0, ramp_secs: 100.0 };
+        assert!(p.rate_at(0.0) < p.rate_at(50.0));
+        assert!(p.rate_at(50.0) < p.rate_at(100.0));
+        assert_eq!(p.rate_at(100.0), p.rate_at(500.0));
+        let a = arrivals(5, p, 800);
+        // gaps shrink as the rate climbs: compare first vs last quartile
+        let q = a.len() / 4;
+        let head = a[q] - a[0];
+        let tail = a[a.len() - 1] - a[a.len() - 1 - q];
+        assert!(tail < head, "ramp did not accelerate: head {head} tail {tail}");
+    }
+
+    #[test]
+    fn content_and_timing_streams_are_independent() {
+        let mut tg1 = TraceGen::new(11, 80, 16);
+        let mut tg2 = TraceGen::new(11, 80, 16);
+        let t1 = ArrivalGen::generate(1, ArrivalProcess::Poisson { rate: 1.0 }, &mut tg1, 20)
+            .unwrap();
+        let t2 = ArrivalGen::generate(2, ArrivalProcess::Poisson { rate: 1.0 }, &mut tg2, 20)
+            .unwrap();
+        for (a, b) in t1.iter().zip(&t2) {
+            assert_eq!(a.request.prompt, b.request.prompt, "content must not depend on timing seed");
+        }
+        assert_ne!(
+            t1.iter().map(|r| r.arrival).collect::<Vec<_>>(),
+            t2.iter().map(|r| r.arrival).collect::<Vec<_>>(),
+        );
+        assert!(ArrivalProcess::from_cli("nope", 1.0).is_err());
+    }
+
+    #[test]
+    fn degenerate_zero_rate_processes_are_rejected() {
+        // would hang the thinning sampler: rate 0 over the whole cycle
+        let off_only = ArrivalProcess::Bursty {
+            base_rate: 0.0,
+            burst_rate: 1.0,
+            period: 10.0,
+            burst_frac: 0.0,
+        };
+        assert!(ArrivalGen::new(1, off_only).is_err());
+        let burst_only_zero = ArrivalProcess::Bursty {
+            base_rate: 1.0,
+            burst_rate: 0.0,
+            period: 10.0,
+            burst_frac: 1.0,
+        };
+        assert!(ArrivalGen::new(1, burst_only_zero).is_err());
+        // rate 0 forever after the ramp completes
+        let dies_out = ArrivalProcess::Ramp { start_rate: 1.0, end_rate: 0.0, ramp_secs: 5.0 };
+        assert!(ArrivalGen::new(1, dies_out).is_err());
+    }
+}

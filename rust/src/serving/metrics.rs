@@ -1,0 +1,213 @@
+//! Fleet-level SLO metrics: per-session TTFT/TPOT distributions (queue
+//! delay included), goodput, and SLO attainment over one serving run.
+
+use crate::coordinator::engine::RequestOutput;
+use crate::metrics::Series;
+use crate::util::table::{fmt_secs, Table};
+
+/// The latency SLOs a request must meet to count toward goodput.
+#[derive(Debug, Clone, Copy)]
+pub struct SloTargets {
+    /// TTFT budget measured from arrival (queueing included), seconds.
+    pub ttft_s: f64,
+    /// Mean per-output-token budget, seconds.
+    pub tpot_s: f64,
+}
+
+/// One completed request, fleet view (all times in virtual seconds).
+#[derive(Debug, Clone)]
+pub struct CompletedRequest {
+    pub id: usize,
+    pub arrival: f64,
+    /// Prefill start - arrival.
+    pub queue_delay: f64,
+    /// First token - arrival (queue delay + service TTFT).
+    pub ttft: f64,
+    pub tpot: f64,
+    /// Absolute completion time of the last token.
+    pub finished_at: f64,
+    pub tokens: usize,
+    pub ttft_ok: bool,
+    pub tpot_ok: bool,
+}
+
+/// Aggregates over one fleet run.
+#[derive(Debug, Clone, Default)]
+pub struct FleetMetrics {
+    /// Arrival-relative TTFT (what a user of the fleet experiences).
+    pub ttft: Series,
+    pub tpot: Series,
+    pub queue_delay: Series,
+    /// Arrival-to-last-token latency.
+    pub e2e: Series,
+    pub completed: usize,
+    pub ttft_ok: usize,
+    pub tpot_ok: usize,
+    pub slo_ok: usize,
+    pub tokens_total: usize,
+    pub first_arrival: f64,
+    pub last_completion: f64,
+}
+
+impl FleetMetrics {
+    /// Fold one finished session in; returns its fleet-view record.
+    pub fn record(
+        &mut self,
+        id: usize,
+        arrival: f64,
+        out: &RequestOutput,
+        slo: SloTargets,
+    ) -> CompletedRequest {
+        let queue_delay = out.start - arrival;
+        let ttft = queue_delay + out.ttft;
+        let tpot = out.tpot();
+        let finished_at = out.start + out.token_times.last().copied().unwrap_or(out.ttft);
+        let ttft_ok = ttft <= slo.ttft_s;
+        let tpot_ok = tpot <= slo.tpot_s;
+
+        if self.completed == 0 || arrival < self.first_arrival {
+            self.first_arrival = arrival;
+        }
+        self.last_completion = self.last_completion.max(finished_at);
+        self.ttft.push(ttft);
+        self.tpot.push(tpot);
+        self.queue_delay.push(queue_delay);
+        self.e2e.push(finished_at - arrival);
+        self.completed += 1;
+        self.ttft_ok += ttft_ok as usize;
+        self.tpot_ok += tpot_ok as usize;
+        self.slo_ok += (ttft_ok && tpot_ok) as usize;
+        self.tokens_total += out.tokens.len();
+
+        CompletedRequest {
+            id,
+            arrival,
+            queue_delay,
+            ttft,
+            tpot,
+            finished_at,
+            tokens: out.tokens.len(),
+            ttft_ok,
+            tpot_ok,
+        }
+    }
+
+    /// Wall span of the run (first arrival to last completion).
+    pub fn makespan(&self) -> f64 {
+        (self.last_completion - self.first_arrival).max(0.0)
+    }
+
+    /// Requests per second that met *both* SLOs.
+    pub fn goodput_rps(&self) -> f64 {
+        let span = self.makespan();
+        if span <= 0.0 {
+            return 0.0;
+        }
+        self.slo_ok as f64 / span
+    }
+
+    /// Emitted tokens per second, SLO-blind.
+    pub fn throughput_tps(&self) -> f64 {
+        let span = self.makespan();
+        if span <= 0.0 {
+            return 0.0;
+        }
+        self.tokens_total as f64 / span
+    }
+
+    /// Fraction of completed requests that met both SLOs.
+    pub fn slo_attainment(&self) -> f64 {
+        if self.completed == 0 {
+            return 0.0;
+        }
+        self.slo_ok as f64 / self.completed as f64
+    }
+
+    /// One row for the fleet summary table (pairs with
+    /// [`FleetMetrics::TABLE_HEADER`]).
+    pub fn summary_row(&self, label: &str) -> Vec<String> {
+        vec![
+            label.to_string(),
+            fmt_secs(self.ttft.percentile(50.0)),
+            fmt_secs(self.ttft.percentile(95.0)),
+            fmt_secs(self.ttft.percentile(99.0)),
+            fmt_secs(self.tpot.percentile(50.0)),
+            fmt_secs(self.tpot.percentile(99.0)),
+            fmt_secs(self.queue_delay.mean()),
+            format!("{:.3}", self.goodput_rps()),
+            format!("{:.1}", self.throughput_tps()),
+            format!("{:.0}%", self.slo_attainment() * 100.0),
+        ]
+    }
+
+    // NB: the 'static is required — eliding it in an associated const
+    // trips the `elided_lifetimes_in_associated_constant` lint.
+    pub const TABLE_HEADER: [&'static str; 10] = [
+        "policy",
+        "TTFT p50",
+        "TTFT p95",
+        "TTFT p99",
+        "TPOT p50",
+        "TPOT p99",
+        "queue mean",
+        "goodput r/s",
+        "tok/s",
+        "SLO att",
+    ];
+
+    /// Render a one-run summary table.
+    pub fn render(&self, label: &str) -> String {
+        let mut t = Table::new("fleet latency summary", &Self::TABLE_HEADER);
+        t.row(self.summary_row(label));
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn out(start: f64, ttft: f64, token_times: Vec<f64>) -> RequestOutput {
+        RequestOutput {
+            tokens: vec![0; token_times.len()],
+            ttft,
+            token_times,
+            logits_per_step: Vec::new(),
+            prefill_hidden: Vec::new(),
+            start,
+        }
+    }
+
+    #[test]
+    fn record_accounts_queueing_and_slos() {
+        let mut m = FleetMetrics::default();
+        let slo = SloTargets { ttft_s: 2.0, tpot_s: 0.5 };
+        // arrived at 1.0, served at 1.5, first token 0.8 later -> ttft 1.3
+        let r = m.record(0, 1.0, &out(1.5, 0.8, vec![0.8, 1.2, 1.6]), slo);
+        assert!((r.queue_delay - 0.5).abs() < 1e-12);
+        assert!((r.ttft - 1.3).abs() < 1e-12);
+        assert!((r.tpot - 0.4).abs() < 1e-12);
+        assert!(r.ttft_ok && r.tpot_ok);
+        assert!((r.finished_at - 3.1).abs() < 1e-12);
+        // a second request that blows the TTFT SLO
+        let r2 = m.record(1, 1.2, &out(4.0, 0.9, vec![0.9]), slo);
+        assert!(!r2.ttft_ok);
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.slo_ok, 1);
+        assert!((m.slo_attainment() - 0.5).abs() < 1e-12);
+        assert_eq!(m.tokens_total, 4);
+        // makespan: first arrival 1.0 -> last completion 4.9
+        assert!((m.makespan() - 3.9).abs() < 1e-12);
+        assert!(m.goodput_rps() > 0.0 && m.throughput_tps() > 0.0);
+    }
+
+    #[test]
+    fn empty_metrics_are_safe() {
+        let m = FleetMetrics::default();
+        assert_eq!(m.makespan(), 0.0);
+        assert_eq!(m.goodput_rps(), 0.0);
+        assert_eq!(m.throughput_tps(), 0.0);
+        assert_eq!(m.slo_attainment(), 0.0);
+        assert_eq!(m.summary_row("x").len(), FleetMetrics::TABLE_HEADER.len());
+    }
+}

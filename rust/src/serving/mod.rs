@@ -1,0 +1,223 @@
+//! Multi-session serving: open-loop arrival traffic, an admission queue
+//! with a continuous session scheduler, and fleet-level SLO metrics.
+//!
+//! The seed engine served requests back-to-back (batch size 1); this
+//! layer turns it into a *server*.  Requests arrive on an open-loop
+//! schedule ([`arrival`]), wait in an admission queue, and once admitted
+//! become in-flight sessions whose prefill and decode steps a
+//! [`policy::SchedPolicy`] interleaves on the shared engine — one
+//! device, one mixed-precision expert cache, one PCIe channel, many
+//! sessions contending for all three.  Cross-session dynamics the
+//! single-stream path could never show fall out naturally: one session's
+//! demand fetches and prefetches warm (or thrash) the expert cache for
+//! everyone else, and queue delay becomes part of user-visible TTFT.
+//!
+//! Everything runs on the engine's virtual timeline, so a fleet run is
+//! deterministic under a fixed seed and directly comparable across
+//! scheduling policies ([`policy::PolicyKind`]).  [`metrics`] aggregates
+//! per-session TTFT/TPOT (arrival-relative), queue delay, goodput, and
+//! SLO attainment.  The `serve-fleet` CLI subcommand and
+//! `benches/bench_serving.rs` drive this module.
+
+pub mod arrival;
+pub mod metrics;
+pub mod policy;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ServingConfig;
+use crate::coordinator::engine::{Engine, EngineSession};
+use crate::workload::Request;
+
+use self::arrival::TimedRequest;
+use self::metrics::{CompletedRequest, FleetMetrics, SloTargets};
+use self::policy::{Action, ActiveInfo, PolicyKind, QueuedInfo, SchedView};
+
+/// Configuration of one fleet run.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    pub serving: ServingConfig,
+    pub policy: PolicyKind,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig { serving: ServingConfig::default(), policy: PolicyKind::SloAware }
+    }
+}
+
+impl FleetConfig {
+    fn slo(&self) -> SloTargets {
+        SloTargets { ttft_s: self.serving.ttft_slo_s, tpot_s: self.serving.tpot_slo_s }
+    }
+}
+
+/// Result of one fleet run.
+#[derive(Debug, Clone)]
+pub struct FleetOutcome {
+    pub metrics: FleetMetrics,
+    /// Completed requests in completion order.
+    pub per_request: Vec<CompletedRequest>,
+    /// High-water mark of concurrently in-flight sessions.
+    pub peak_concurrency: usize,
+    /// High-water mark of KV-cache bytes held by in-flight sessions
+    /// (memory pressure of concurrency).
+    pub peak_kv_bytes: u64,
+    /// Total scheduler steps taken (prefills + decodes).
+    pub steps: usize,
+}
+
+struct Queued {
+    id: usize,
+    arrival: f64,
+    deadline: f64,
+    request: Request,
+}
+
+struct Active {
+    id: usize,
+    arrival: f64,
+    sess: EngineSession,
+    last_token_at: f64,
+}
+
+/// Serve an open-loop trace on `engine` to completion.
+///
+/// The loop is a virtual-time co-simulation: each iteration admits every
+/// request that has arrived by the engine clock, asks the policy for the
+/// next step (admit-and-prefill, or decode one token), and executes it
+/// on the engine — which advances the clock.  When the system goes idle
+/// it fast-forwards to the next arrival.  With one session in flight
+/// this reduces exactly to the classic back-to-back `serve` path.
+pub fn run_fleet(
+    engine: &mut Engine,
+    trace: Vec<TimedRequest>,
+    cfg: &FleetConfig,
+) -> Result<FleetOutcome> {
+    let slo = cfg.slo();
+    let max_sessions = cfg.serving.max_sessions.max(1);
+    let mut pending: std::collections::VecDeque<TimedRequest> = {
+        let mut t = trace;
+        t.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
+        t.into()
+    };
+    let mut queued: Vec<Queued> = Vec::new();
+    let mut active: Vec<Active> = Vec::new();
+    let enqueue = |r: TimedRequest| Queued {
+        id: r.id,
+        arrival: r.arrival,
+        deadline: r.arrival + slo.ttft_s,
+        request: r.request,
+    };
+    let mut policy = cfg.policy.build();
+    let mut out = FleetOutcome {
+        metrics: FleetMetrics::default(),
+        per_request: Vec::new(),
+        peak_concurrency: 0,
+        peak_kv_bytes: 0,
+        steps: 0,
+    };
+
+    loop {
+        let now = engine.clock();
+        // Open-loop admission: everything that has arrived joins the queue.
+        while pending.front().is_some_and(|r| r.arrival <= now) {
+            queued.push(enqueue(pending.pop_front().unwrap()));
+        }
+        if queued.is_empty() && active.is_empty() {
+            // Idle: fast-forward to the next arrival (or finish).
+            match pending.pop_front() {
+                Some(r) => {
+                    queued.push(enqueue(r));
+                    continue;
+                }
+                None => break,
+            }
+        }
+
+        let queued_info: Vec<QueuedInfo> = queued
+            .iter()
+            .map(|q| QueuedInfo { id: q.id, arrival: q.arrival, deadline: q.deadline })
+            .collect();
+        let active_info: Vec<ActiveInfo> = active
+            .iter()
+            .map(|a| ActiveInfo {
+                id: a.id,
+                arrival: a.arrival,
+                emitted: a.sess.emitted(),
+                target: a.sess.target_tokens(),
+                last_token_at: a.last_token_at,
+            })
+            .collect();
+        let free_slots = max_sessions.saturating_sub(active.len());
+        let view = SchedView {
+            now,
+            queued: &queued_info,
+            active: &active_info,
+            free_slots,
+        };
+        let mut action = policy.next_action(&view);
+        if action == Action::Idle {
+            // Work-conserving fallback so a policy bug can never wedge
+            // the loop: admit if possible, else decode something.
+            action = if free_slots > 0 && !queued.is_empty() {
+                Action::Admit(queued[0].id)
+            } else if let Some(a) = active.first() {
+                Action::Decode(a.id)
+            } else {
+                // queue non-empty but no slots and nothing active cannot
+                // happen (max_sessions >= 1); guard anyway
+                bail!("scheduler idle with {} queued sessions", queued.len());
+            };
+        }
+
+        match action {
+            Action::Admit(id) => {
+                let Some(pos) = queued.iter().position(|q| q.id == id) else {
+                    bail!("policy admitted unknown session {id}");
+                };
+                if active.len() >= max_sessions {
+                    bail!("policy admitted session {id} with no free slot");
+                }
+                let q = queued.swap_remove(pos);
+                let mut sess = engine
+                    .begin_session(&q.request.prompt, q.request.max_new, None, q.arrival)
+                    .with_context(|| format!("admitting session {id}"))?;
+                engine
+                    .prefill_session(&mut sess)
+                    .with_context(|| format!("prefill session {id}"))?;
+                out.steps += 1;
+                out.peak_concurrency = out.peak_concurrency.max(active.len() + 1);
+                let kv_in_flight: u64 =
+                    active.iter().map(|a| a.sess.kv_bytes()).sum::<u64>() + sess.kv_bytes();
+                out.peak_kv_bytes = out.peak_kv_bytes.max(kv_in_flight);
+                let last_token_at = sess.out.start + sess.out.ttft;
+                if sess.done() {
+                    let done = out.metrics.record(q.id, q.arrival, &sess.out, slo);
+                    out.per_request.push(done);
+                } else {
+                    active.push(Active { id: q.id, arrival: q.arrival, sess, last_token_at });
+                }
+            }
+            Action::Decode(id) => {
+                let Some(pos) = active.iter().position(|a| a.id == id) else {
+                    bail!("policy decoded unknown session {id}");
+                };
+                let a = &mut active[pos];
+                let done = engine
+                    .decode_session(&mut a.sess)
+                    .with_context(|| format!("decode session {id}"))?;
+                out.steps += 1;
+                a.last_token_at =
+                    a.sess.out.start + a.sess.out.token_times.last().copied().unwrap_or(0.0);
+                if done {
+                    let a = active.swap_remove(pos);
+                    let done = out.metrics.record(a.id, a.arrival, &a.sess.out, slo);
+                    out.per_request.push(done);
+                }
+            }
+            Action::Idle => unreachable!("idle resolved above"),
+        }
+    }
+    Ok(out)
+}

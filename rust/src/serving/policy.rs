@@ -1,0 +1,273 @@
+//! Pluggable continuous-scheduling policies: given a snapshot of the
+//! admission queue and the in-flight sessions, pick the engine's next
+//! step (admit-and-prefill one queued request, or decode one token of an
+//! active session).
+//!
+//! All three policies are work-conserving; they differ in *ordering*:
+//!
+//! * [`PolicyKind::Fifo`] — strict arrival order, run-to-completion: the
+//!   oldest unfinished session monopolizes the device.  This is the
+//!   head-of-line-blocking baseline and degenerates to the classic
+//!   back-to-back `serve` path.
+//! * [`PolicyKind::RoundRobin`] — continuous batching with decode
+//!   fairness: free slots admit the oldest queued request first (prefill
+//!   prioritized, which bounds TTFT), decode steps rotate round-robin so
+//!   no session's TPOT starves.
+//! * [`PolicyKind::SloAware`] — TTFT-SLO earliest-deadline-first: free
+//!   slots admit the queued request whose TTFT deadline expires soonest,
+//!   and decode picks the session that has waited longest since its last
+//!   token (least-recently-served), spreading TPOT jitter under load.
+
+use anyhow::{bail, Result};
+
+/// A queued (arrived, not yet admitted) request.
+#[derive(Debug, Clone, Copy)]
+pub struct QueuedInfo {
+    pub id: usize,
+    pub arrival: f64,
+    /// Absolute TTFT deadline: `arrival + ttft_slo`.
+    pub deadline: f64,
+}
+
+/// An admitted, still-decoding session.
+#[derive(Debug, Clone, Copy)]
+pub struct ActiveInfo {
+    pub id: usize,
+    pub arrival: f64,
+    /// Tokens emitted so far (>= 1 once prefilled).
+    pub emitted: usize,
+    /// Total tokens the session will emit.
+    pub target: usize,
+    /// Absolute virtual time of the last emitted token.
+    pub last_token_at: f64,
+}
+
+/// Scheduler snapshot handed to a policy.
+#[derive(Debug)]
+pub struct SchedView<'a> {
+    pub now: f64,
+    pub queued: &'a [QueuedInfo],
+    pub active: &'a [ActiveInfo],
+    /// Admission slots still free (`max_sessions - active.len()`).
+    pub free_slots: usize,
+}
+
+/// The policy's pick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// Admit the queued request with this id and run its prefill.
+    Admit(usize),
+    /// Decode one token of the active session with this id.
+    Decode(usize),
+    /// Nothing runnable (queue empty or slots full, nothing active).
+    Idle,
+}
+
+/// A continuous-scheduling policy (may keep state, e.g. a rotation
+/// cursor).
+pub trait SchedPolicy {
+    fn name(&self) -> &'static str;
+    fn next_action(&mut self, view: &SchedView) -> Action;
+}
+
+/// Policy selector (config / CLI surface).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    Fifo,
+    RoundRobin,
+    SloAware,
+}
+
+impl PolicyKind {
+    pub fn parse(name: &str) -> Result<PolicyKind> {
+        Ok(match name {
+            "fifo" => PolicyKind::Fifo,
+            "rr" | "round-robin" => PolicyKind::RoundRobin,
+            "slo" | "slo-aware" => PolicyKind::SloAware,
+            _ => bail!("unknown scheduling policy {name:?}; try fifo, rr, slo"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::Fifo => "fifo",
+            PolicyKind::RoundRobin => "rr",
+            PolicyKind::SloAware => "slo",
+        }
+    }
+
+    pub fn build(self) -> Box<dyn SchedPolicy> {
+        match self {
+            PolicyKind::Fifo => Box::new(Fifo),
+            PolicyKind::RoundRobin => Box::new(RoundRobin { cursor: None }),
+            PolicyKind::SloAware => Box::new(SloAware),
+        }
+    }
+
+    pub const ALL: [PolicyKind; 3] =
+        [PolicyKind::Fifo, PolicyKind::RoundRobin, PolicyKind::SloAware];
+}
+
+fn oldest_queued(queued: &[QueuedInfo]) -> Option<usize> {
+    queued
+        .iter()
+        .min_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)))
+        .map(|q| q.id)
+}
+
+/// Strict arrival order, one session at a time.
+struct Fifo;
+
+impl SchedPolicy for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn next_action(&mut self, view: &SchedView) -> Action {
+        // Finish the oldest active session before touching the queue.
+        if let Some(a) = view
+            .active
+            .iter()
+            .min_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)))
+        {
+            return Action::Decode(a.id);
+        }
+        match (view.free_slots > 0).then(|| oldest_queued(view.queued)).flatten() {
+            Some(id) => Action::Admit(id),
+            None => Action::Idle,
+        }
+    }
+}
+
+/// FIFO admission (prefill prioritized), round-robin decode.
+struct RoundRobin {
+    /// Last session id decoded (`None` before the first decode).
+    cursor: Option<usize>,
+}
+
+impl SchedPolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "rr"
+    }
+
+    fn next_action(&mut self, view: &SchedView) -> Action {
+        if view.free_slots > 0 {
+            if let Some(id) = oldest_queued(view.queued) {
+                return Action::Admit(id);
+            }
+        }
+        if view.active.is_empty() {
+            return Action::Idle;
+        }
+        // Rotate by id order so the cursor is stable as sessions retire.
+        let mut ids: Vec<usize> = view.active.iter().map(|a| a.id).collect();
+        ids.sort_unstable();
+        let pick = ids
+            .iter()
+            .copied()
+            .find(|&id| Some(id) > self.cursor)
+            .unwrap_or(ids[0]);
+        self.cursor = Some(pick);
+        Action::Decode(pick)
+    }
+}
+
+/// EDF admission on the TTFT deadline, least-recently-served decode.
+struct SloAware;
+
+impl SchedPolicy for SloAware {
+    fn name(&self) -> &'static str {
+        "slo"
+    }
+
+    fn next_action(&mut self, view: &SchedView) -> Action {
+        if view.free_slots > 0 {
+            if let Some(q) = view
+                .queued
+                .iter()
+                .min_by(|a, b| a.deadline.total_cmp(&b.deadline).then(a.id.cmp(&b.id)))
+            {
+                return Action::Admit(q.id);
+            }
+        }
+        match view
+            .active
+            .iter()
+            .min_by(|a, b| a.last_token_at.total_cmp(&b.last_token_at).then(a.id.cmp(&b.id)))
+        {
+            Some(a) => Action::Decode(a.id),
+            None => Action::Idle,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(id: usize, arrival: f64, deadline: f64) -> QueuedInfo {
+        QueuedInfo { id, arrival, deadline }
+    }
+
+    fn a(id: usize, arrival: f64, last_token_at: f64) -> ActiveInfo {
+        ActiveInfo { id, arrival, emitted: 1, target: 8, last_token_at }
+    }
+
+    #[test]
+    fn fifo_runs_oldest_to_completion() {
+        let mut p = PolicyKind::Fifo.build();
+        let queued = [q(3, 0.5, 5.5), q(4, 0.1, 5.1)];
+        let active = [a(1, 0.0, 2.0), a(2, 0.05, 1.0)];
+        // active work first, oldest arrival wins
+        let view = SchedView { now: 2.0, queued: &queued, active: &active, free_slots: 2 };
+        assert_eq!(p.next_action(&view), Action::Decode(1));
+        // queue drains in arrival order once nothing is active
+        let view = SchedView { now: 2.0, queued: &queued, active: &[], free_slots: 4 };
+        assert_eq!(p.next_action(&view), Action::Admit(4));
+        // no slots -> idle
+        let view = SchedView { now: 2.0, queued: &queued, active: &[], free_slots: 0 };
+        assert_eq!(p.next_action(&view), Action::Idle);
+    }
+
+    #[test]
+    fn round_robin_rotates_decodes_and_prefers_prefill() {
+        let mut p = PolicyKind::RoundRobin.build();
+        let active = [a(1, 0.0, 1.0), a(2, 0.1, 1.1), a(5, 0.2, 0.9)];
+        let view = |queued: &'static [QueuedInfo], free| SchedView {
+            now: 2.0,
+            queued,
+            active: &active,
+            free_slots: free,
+        };
+        // with a free slot and a queued request, prefill wins
+        static QUEUE: [QueuedInfo; 1] =
+            [QueuedInfo { id: 9, arrival: 1.9, deadline: 6.9 }];
+        assert_eq!(p.next_action(&view(&QUEUE, 1)), Action::Admit(9));
+        // decode rotation cycles 1 -> 2 -> 5 -> 1 ...
+        assert_eq!(p.next_action(&view(&[], 0)), Action::Decode(1));
+        assert_eq!(p.next_action(&view(&[], 0)), Action::Decode(2));
+        assert_eq!(p.next_action(&view(&[], 0)), Action::Decode(5));
+        assert_eq!(p.next_action(&view(&[], 0)), Action::Decode(1));
+    }
+
+    #[test]
+    fn slo_aware_admits_earliest_deadline_and_serves_most_starved() {
+        let mut p = PolicyKind::SloAware.build();
+        let queued = [q(7, 1.0, 3.0), q(8, 0.5, 4.5)];
+        let active = [a(1, 0.0, 2.5), a(2, 0.1, 1.5)];
+        // id 7 arrived later but its deadline is tighter
+        let view = SchedView { now: 2.0, queued: &queued, active: &active, free_slots: 1 };
+        assert_eq!(p.next_action(&view), Action::Admit(7));
+        // no slots: decode the session longest since last token
+        let view = SchedView { now: 2.0, queued: &queued, active: &active, free_slots: 0 };
+        assert_eq!(p.next_action(&view), Action::Decode(2));
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        for kind in PolicyKind::ALL {
+            assert_eq!(PolicyKind::parse(kind.name()).unwrap(), kind);
+        }
+        assert!(PolicyKind::parse("lifo").is_err());
+    }
+}

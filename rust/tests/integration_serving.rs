@@ -1,0 +1,252 @@
+//! Integration: the multi-session serving subsystem.
+//!
+//! The arrival-trace and policy tests run everywhere; the engine-level
+//! tests (interleaving equivalence, end-to-end fleet runs) need the real
+//! `tiny` artifacts and skip politely when they are missing (run
+//! `make artifacts`), matching the other integration suites.
+
+use std::sync::Arc;
+
+use dymoe::baselines::Uniform;
+use dymoe::config::{ServingConfig, SystemConfig, GB};
+use dymoe::coordinator::engine::{Engine, EngineOptions};
+use dymoe::model::assets::ModelAssets;
+use dymoe::quant::Precision;
+use dymoe::serving::arrival::{ArrivalGen, ArrivalProcess};
+use dymoe::serving::policy::PolicyKind;
+use dymoe::serving::{run_fleet, FleetConfig};
+use dymoe::workload::TraceGen;
+
+fn assets() -> Option<Arc<ModelAssets>> {
+    match ModelAssets::load("artifacts", "tiny") {
+        Ok(a) => Some(Arc::new(a)),
+        Err(_) => {
+            eprintln!("artifacts/tiny missing; run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn big_vram_sys() -> SystemConfig {
+    let mut sys = SystemConfig::edge_preset("tiny", 24).unwrap();
+    sys.hardware.vram_bytes = 1024 * GB;
+    sys
+}
+
+fn bf16_engine(a: &Arc<ModelAssets>) -> Engine {
+    Engine::with_options(
+        a,
+        big_vram_sys(),
+        Box::new(Uniform::new(Precision::Bf16)),
+        EngineOptions { collect_logits: true, ..Default::default() },
+    )
+    .unwrap()
+}
+
+// ---------------------------------------------------------------------
+// Arrival traces (no artifacts needed)
+// ---------------------------------------------------------------------
+
+#[test]
+fn arrival_trace_is_deterministic_under_fixed_seed() {
+    let mk = || {
+        let mut content = TraceGen::new(7, 80, 16);
+        ArrivalGen::generate(13, ArrivalProcess::Poisson { rate: 0.5 }, &mut content, 32)
+            .unwrap()
+    };
+    let t1 = mk();
+    let t2 = mk();
+    assert_eq!(t1.len(), 32);
+    for (a, b) in t1.iter().zip(&t2) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.arrival, b.arrival);
+        assert_eq!(a.request.prompt, b.request.prompt);
+        assert_eq!(a.request.max_new, b.request.max_new);
+    }
+    // ids are the trace order and arrivals strictly increase
+    for (i, w) in t1.windows(2).enumerate() {
+        assert_eq!(w[0].id, i);
+        assert!(w[1].arrival > w[0].arrival);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Engine-level interleaving (artifacts-gated)
+// ---------------------------------------------------------------------
+
+/// Two sessions decoded in alternation must produce exactly the tokens
+/// and logits of the same requests run back-to-back: per-session KV is
+/// private, and with ample VRAM at uniform precision the shared cache
+/// cannot change any execution precision.
+#[test]
+fn interleaved_sessions_match_back_to_back_numerics() {
+    let Some(a) = assets() else { return };
+    let p1: Vec<i32> = vec![1, 5, 9, 13, 17];
+    let p2: Vec<i32> = vec![1, 30, 41, 52, 33, 44];
+
+    let mut serial = bf16_engine(&a);
+    let o1 = serial.run(&p1, 6).unwrap();
+    let o2 = serial.run(&p2, 5).unwrap();
+
+    let mut fleet = bf16_engine(&a);
+    let mut s1 = fleet.begin_session(&p1, 6, None, 0.0).unwrap();
+    let mut s2 = fleet.begin_session(&p2, 5, None, 0.0).unwrap();
+    fleet.prefill_session(&mut s1).unwrap();
+    fleet.prefill_session(&mut s2).unwrap();
+    // strict alternation until both finish
+    loop {
+        let d1 = if s1.done() { true } else { fleet.decode_session(&mut s1).unwrap() };
+        let d2 = if s2.done() { true } else { fleet.decode_session(&mut s2).unwrap() };
+        if d1 && d2 {
+            break;
+        }
+    }
+    let i1 = s1.into_output();
+    let i2 = s2.into_output();
+
+    assert_eq!(o1.tokens, i1.tokens, "session 1 tokens diverged under interleaving");
+    assert_eq!(o2.tokens, i2.tokens, "session 2 tokens diverged under interleaving");
+    for (serial_logits, fleet_logits) in [(&o1, &i1), (&o2, &i2)] {
+        for (x, y) in serial_logits
+            .logits_per_step
+            .iter()
+            .zip(&fleet_logits.logits_per_step)
+        {
+            let max_err = x
+                .iter()
+                .zip(y)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0f32, f32::max);
+            assert!(max_err < 1e-5, "interleaving changed numerics: {max_err}");
+        }
+    }
+}
+
+/// run() is implemented on the session API; a manual single-session
+/// drive must reproduce it exactly, timing included.
+#[test]
+fn single_session_steps_match_run_exactly() {
+    let Some(a) = assets() else { return };
+    let prompt = [1i32, 4, 8, 12];
+
+    let mut e1 = bf16_engine(&a);
+    let o = e1.run(&prompt, 5).unwrap();
+
+    let mut e2 = bf16_engine(&a);
+    let arrival = e2.clock();
+    let mut s = e2.begin_session(&prompt, 5, None, arrival).unwrap();
+    e2.prefill_session(&mut s).unwrap();
+    while !s.done() {
+        e2.decode_session(&mut s).unwrap();
+    }
+    let m = s.into_output();
+    assert_eq!(o.tokens, m.tokens);
+    assert_eq!(o.ttft, m.ttft);
+    assert_eq!(o.token_times, m.token_times);
+}
+
+// ---------------------------------------------------------------------
+// Fleet runs (artifacts-gated)
+// ---------------------------------------------------------------------
+
+fn fleet_cfg(policy: PolicyKind, max_sessions: usize) -> FleetConfig {
+    FleetConfig {
+        serving: ServingConfig { max_sessions, ttft_slo_s: 1e6, tpot_slo_s: 1e6 },
+        policy,
+    }
+}
+
+fn tiny_trace(a: &Arc<ModelAssets>, n: usize, rate: f64) -> Vec<dymoe::serving::arrival::TimedRequest> {
+    let m = &a.manifest.model;
+    let mut content = TraceGen::new(7, m.max_seq.min(16), (m.max_cache - m.max_seq).min(6));
+    ArrivalGen::generate(21, ArrivalProcess::Poisson { rate }, &mut content, n).unwrap()
+}
+
+#[test]
+fn fleet_completes_all_requests_and_interleaves() {
+    let Some(a) = assets() else { return };
+    for policy in PolicyKind::ALL {
+        let mut engine = bf16_engine(&a);
+        // arrivals far faster than service: the queue must build and the
+        // rr/slo policies must actually interleave sessions
+        let trace = tiny_trace(&a, 8, 50.0);
+        let outcome = run_fleet(&mut engine, trace, &fleet_cfg(policy, 4)).unwrap();
+        assert_eq!(outcome.metrics.completed, 8, "{} lost requests", policy.name());
+        assert_eq!(outcome.per_request.len(), 8);
+        assert!(outcome.metrics.makespan() > 0.0);
+        assert!(outcome.metrics.throughput_tps() > 0.0);
+        // every in-flight session pays for its private KV cache
+        assert!(
+            outcome.peak_kv_bytes >= outcome.peak_concurrency as u64,
+            "KV accounting missing"
+        );
+        // every request's fleet TTFT covers its queue delay
+        for r in &outcome.per_request {
+            assert!(r.ttft >= r.queue_delay - 1e-12);
+            assert!(r.tokens >= 1);
+            assert!(r.finished_at >= r.arrival);
+        }
+        match policy {
+            PolicyKind::Fifo => {
+                assert_eq!(outcome.peak_concurrency, 1, "fifo must not interleave");
+                // fifo completes in arrival order
+                for w in outcome.per_request.windows(2) {
+                    assert!(w[0].arrival <= w[1].arrival);
+                }
+            }
+            PolicyKind::RoundRobin | PolicyKind::SloAware => {
+                assert!(
+                    outcome.peak_concurrency >= 2,
+                    "{} never interleaved (peak {})",
+                    policy.name(),
+                    outcome.peak_concurrency
+                );
+                assert!(outcome.peak_concurrency <= 4, "admission limit violated");
+            }
+        }
+    }
+}
+
+/// At a vanishing arrival rate every session runs alone, so the fleet
+/// path must match the classic back-to-back `serve` numbers per request.
+#[test]
+fn fleet_at_rate_zero_matches_serial_serving() {
+    let Some(a) = assets() else { return };
+    // arrivals 10,000 s apart: every session is guaranteed to run alone
+    let trace: Vec<_> = tiny_trace(&a, 3, 1.0)
+        .into_iter()
+        .enumerate()
+        .map(|(i, mut t)| {
+            t.arrival = (i + 1) as f64 * 10_000.0;
+            t
+        })
+        .collect();
+    let requests: Vec<_> = trace.iter().map(|t| t.request.clone()).collect();
+
+    let mut fleet_engine = bf16_engine(&a);
+    let outcome = run_fleet(
+        &mut fleet_engine,
+        trace,
+        &fleet_cfg(PolicyKind::SloAware, 4),
+    )
+    .unwrap();
+
+    let mut serial = bf16_engine(&a);
+    for (r, done) in requests.iter().zip(&outcome.per_request) {
+        let o = serial.run(&r.prompt, r.max_new).unwrap();
+        assert!((done.queue_delay).abs() < 1e-9, "queueing at rate ~ 0");
+        assert!(
+            (o.ttft - done.ttft).abs() < 1e-9,
+            "fleet TTFT {} vs serial {}",
+            done.ttft,
+            o.ttft
+        );
+        assert!(
+            (o.tpot() - done.tpot).abs() < 1e-9,
+            "fleet TPOT {} vs serial {}",
+            done.tpot,
+            o.tpot()
+        );
+    }
+    assert_eq!(outcome.peak_concurrency, 1);
+}

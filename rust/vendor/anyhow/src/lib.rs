@@ -1,0 +1,227 @@
+//! Offline stand-in for the `anyhow` crate, API-compatible with the
+//! subset this repository uses:
+//!
+//! * [`Error`] — a message plus an optional context chain; convertible
+//!   from any `std::error::Error` (so `?` works on std / vendored-crate
+//!   errors inside functions returning [`Result`]).
+//! * [`Result<T>`] with the `E = Error` default.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] macros.
+//! * The [`Context`] extension trait (`.context(..)` /
+//!   `.with_context(|| ..)`) on `Result` and `Option`.
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error`: that keeps the blanket `From<E: std::error::Error>`
+//! conversion coherent.
+
+use std::fmt::{self, Debug, Display};
+
+/// An error message with an optional chain of underlying causes
+/// (outermost context first, original error last).
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from anything printable.
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error { msg: message.to_string(), cause: None }
+    }
+
+    /// Wrap `self` in one more layer of context.
+    fn wrap(self, context: String) -> Error {
+        Error { msg: context, cause: Some(Box::new(self)) }
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if self.cause.is_some() {
+            f.write_str("\n\nCaused by:")?;
+        }
+        let mut cause = self.cause.as_deref();
+        while let Some(c) = cause {
+            write!(f, "\n    {}", c.msg)?;
+            cause = c.cause.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg, cause: None }
+    }
+}
+
+/// `Result` with this crate's [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Conversion into [`Error`] for the [`Context`] impls.  Mirrors the real
+/// crate's private `ext::StdError` trait: one blanket impl for real
+/// errors, one concrete impl for [`Error`] itself (coherent because
+/// `Error` does not implement `std::error::Error`).
+pub trait IntoError {
+    fn into_error(self) -> Error;
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+    fn into_error(self) -> Error {
+        Error::from(self)
+    }
+}
+
+impl IntoError for Error {
+    fn into_error(self) -> Error {
+        self
+    }
+}
+
+/// Attach context to failures: `Result<T, E>` for any convertible `E`
+/// (including [`Error`]), and `Option<T>` (where `None` becomes an error
+/// carrying the context message).
+pub trait Context<T> {
+    fn context<C: Display>(self, context: C) -> Result<T>;
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: IntoError> Context<T> for std::result::Result<T, E> {
+    fn context<C: Display>(self, context: C) -> Result<T> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into_error().wrap(context.to_string())),
+        }
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into_error().wrap(f().to_string())),
+        }
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Display>(self, context: C) -> Result<T> {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(context)),
+        }
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(f())),
+        }
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any printable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)+))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($t:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($t)+);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let base: Result<(), std::io::Error> = Err(io_err());
+        let e = base.context("reading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+        assert!(dbg.contains("gone"), "{dbg}");
+    }
+
+    #[test]
+    fn context_on_anyhow_result_and_option() {
+        let r: Result<u32> = Err(anyhow!("inner {}", 7));
+        let e = r.with_context(|| "outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+        assert!(format!("{e:?}").contains("inner 7"));
+        let n: Option<u32> = None;
+        assert_eq!(n.context("missing").unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn macros_format_and_bail() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(f(12).unwrap_err().to_string(), "x too big: 12");
+        assert_eq!(f(3).unwrap_err().to_string(), "three is right out");
+        fn g(ok: bool) -> Result<()> {
+            ensure!(ok);
+            Ok(())
+        }
+        assert!(g(false).unwrap_err().to_string().contains("condition failed"));
+    }
+}

@@ -1,0 +1,236 @@
+//! Offline stub of the `xla` (xla_extension / PJRT) bindings used by
+//! `dymoe::runtime`.
+//!
+//! Host-side [`Literal`] construction and conversion work for real (the
+//! data is kept in a typed byte buffer), so everything up to the PJRT
+//! boundary behaves normally.  Anything that would need the native XLA
+//! runtime — creating a [`PjRtClient`], compiling an HLO module,
+//! staging device buffers, executing — returns a clear
+//! "runtime unavailable" [`Error`].
+//!
+//! `dymoe` fails fast with that error when an engine is constructed, and
+//! its artifact-dependent tests/benches skip politely, so `cargo build`
+//! and `cargo test` work on machines without the PJRT CPU plugin.  Point
+//! the `xla` path dependency in `../../Cargo.toml` at the real bindings
+//! to run actual numerics.
+
+use std::fmt;
+
+/// Error type mirroring the real bindings' (Display + std::error::Error).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: the XLA/PJRT runtime is not available in this offline build \
+         (stub crate rust/vendor/xla; point the `xla` path dependency at the \
+         real bindings to execute artifacts)"
+    ))
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+    impl Sealed for u32 {}
+}
+
+/// Element types a [`Literal`] can hold (the subset dymoe uses).
+pub trait NativeType: Copy + sealed::Sealed {
+    const TAG: &'static str;
+    fn to_bytes(self) -> [u8; 4];
+    fn from_bytes(b: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TAG: &'static str = "f32";
+    fn to_bytes(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+    fn from_bytes(b: [u8; 4]) -> Self {
+        f32::from_le_bytes(b)
+    }
+}
+
+impl NativeType for i32 {
+    const TAG: &'static str = "i32";
+    fn to_bytes(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+    fn from_bytes(b: [u8; 4]) -> Self {
+        i32::from_le_bytes(b)
+    }
+}
+
+impl NativeType for u32 {
+    const TAG: &'static str = "u32";
+    fn to_bytes(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+    fn from_bytes(b: [u8; 4]) -> Self {
+        u32::from_le_bytes(b)
+    }
+}
+
+/// A host tensor: typed byte buffer + dims.  Fully functional.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    tag: &'static str,
+    bytes: Vec<u8>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            bytes.extend_from_slice(&v.to_bytes());
+        }
+        Literal { tag: T::TAG, bytes, dims: vec![data.len() as i64] }
+    }
+
+    fn element_count(&self) -> i64 {
+        (self.bytes.len() / 4) as i64
+    }
+
+    /// Reinterpret the literal with new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n != self.element_count() {
+            return Err(Error(format!(
+                "reshape to {dims:?} ({n} elements) from {} elements",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { tag: self.tag, bytes: self.bytes.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy out as a host vector of `T`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.tag != T::TAG {
+            return Err(Error(format!("to_vec::<{}> on a {} literal", T::TAG, self.tag)));
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| T::from_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Decompose a tuple literal.  Tuples only come out of executions,
+    /// which the stub cannot perform.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    /// The literal's dims (unused by dymoe, kept for API parity).
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// An addressable PJRT device (opaque).
+#[derive(Debug)]
+pub struct PjRtDevice(());
+
+/// A device buffer (opaque; never constructible through the stub).
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// The PJRT client.  [`PjRtClient::cpu`] fails in the stub, so no method
+/// past construction is ever reachable.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn addressable_devices(&self) -> Vec<PjRtDevice> {
+        Vec::new()
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<&PjRtDevice>,
+        _lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("PjRtClient::buffer_from_host_literal"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module proto (opaque).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation built from a module proto (opaque).
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// A compiled executable (opaque; never constructible through the stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _inputs: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.dims(), &[4]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn runtime_paths_error_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let msg = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(msg.contains("offline"), "{msg}");
+    }
+}
