@@ -1,11 +1,19 @@
 //! Fleet-serving bench: sweep open-loop Poisson arrival rate against the
 //! fleet's tail latency (p99 TTFT measured from arrival, queueing
-//! included), goodput, and SLO attainment, for each scheduling policy.
-//! This is the classic serving-paper "rate vs p99" curve, produced on the
+//! included), mean TPOT, goodput, SLO attainment, and cross-session
+//! expert-reuse — for each scheduling policy, serial interleaved decode
+//! (`max_decode_batch = 1`) versus cross-session batched decode.  This
+//! is the classic serving-paper "rate vs p99" curve, produced on the
 //! co-simulated virtual timeline (deterministic under the fixed seed).
+//!
+//! `--json` runs a small fixed smoke configuration instead and writes
+//! `BENCH_serving.json` (p50/p99 TTFT/TPOT, expert dedup ratio per
+//! decode-batch setting) so CI can track the perf trajectory in a
+//! machine-readable form.
 //!
 //! Skips politely if `make artifacts` has not been run.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -15,56 +23,145 @@ use dymoe::coordinator::strategy::DyMoEStrategy;
 use dymoe::model::assets::ModelAssets;
 use dymoe::serving::arrival::{ArrivalGen, ArrivalProcess};
 use dymoe::serving::policy::PolicyKind;
-use dymoe::serving::{run_fleet, FleetConfig};
+use dymoe::serving::{run_fleet, FleetConfig, FleetOutcome};
+use dymoe::util::json::Json;
 use dymoe::workload::TraceGen;
 
+const OUT_PATH: &str = "BENCH_serving.json";
+
+/// One deterministic fleet run (fresh engine, fixed seeds).
+fn run_point(
+    assets: &Arc<ModelAssets>,
+    rate: f64,
+    policy: PolicyKind,
+    max_decode_batch: usize,
+    requests: usize,
+) -> anyhow::Result<FleetOutcome> {
+    let m = assets.manifest.model.clone();
+    let sys = SystemConfig::edge_preset("mixtral-mini", 16)?;
+    let strat = Box::new(DyMoEStrategy::new(PolicyConfig::default()));
+    let mut engine = Engine::new(assets, sys, strat)?;
+    let mut content =
+        TraceGen::new(11, m.max_seq.min(80), (m.max_cache - m.max_seq).min(12));
+    let trace = ArrivalGen::generate(
+        0x5EED,
+        ArrivalProcess::Poisson { rate },
+        &mut content,
+        requests,
+    )?;
+    let cfg = FleetConfig {
+        serving: ServingConfig { max_sessions: 8, max_decode_batch, ..Default::default() },
+        policy,
+    };
+    run_fleet(&mut engine, trace, &cfg)
+}
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+/// The `--json` smoke mode: one rate, the SLO-aware policy, serial vs
+/// batched decode — small enough for CI, rich enough to track.
+fn smoke_json(assets: &Arc<ModelAssets>) -> anyhow::Result<Json> {
+    let requests = 12;
+    let rate = 0.4;
+    let mut points = Vec::new();
+    for &batch in &[1usize, 8] {
+        let o = run_point(assets, rate, PolicyKind::SloAware, batch, requests)?;
+        let mut p = BTreeMap::new();
+        p.insert("max_decode_batch".to_string(), num(batch as f64));
+        p.insert("ttft_p50_s".to_string(), num(o.metrics.ttft.percentile(50.0)));
+        p.insert("ttft_p99_s".to_string(), num(o.metrics.ttft.percentile(99.0)));
+        p.insert("tpot_p50_s".to_string(), num(o.metrics.tpot.percentile(50.0)));
+        p.insert("tpot_p99_s".to_string(), num(o.metrics.tpot.percentile(99.0)));
+        p.insert("tpot_mean_s".to_string(), num(o.metrics.tpot.mean()));
+        p.insert("goodput_rps".to_string(), num(o.metrics.goodput_rps()));
+        p.insert("throughput_tps".to_string(), num(o.metrics.throughput_tps()));
+        p.insert("mean_decode_batch".to_string(), num(o.dedup.mean_batch()));
+        p.insert(
+            "expert_dedup_ratio".to_string(),
+            num(o.dedup.expert_reuse_ratio()),
+        );
+        p.insert(
+            "dedup_saved_fetches".to_string(),
+            num(o.dedup.saved_fetches() as f64),
+        );
+        points.push(Json::Obj(p));
+    }
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("serving".to_string()));
+    root.insert("model".to_string(), Json::Str("mixtral-mini".to_string()));
+    root.insert("policy".to_string(), Json::Str("slo".to_string()));
+    root.insert("requests_per_point".to_string(), num(requests as f64));
+    root.insert("rate_rps".to_string(), num(rate));
+    root.insert("skipped".to_string(), Json::Bool(false));
+    root.insert("points".to_string(), Json::Arr(points));
+    Ok(Json::Obj(root))
+}
+
 fn main() -> anyhow::Result<()> {
+    let json_mode = std::env::args().any(|a| a == "--json");
     let Ok(assets) = ModelAssets::load("artifacts", "mixtral-mini") else {
         eprintln!("artifacts missing; run `make artifacts` first");
+        if json_mode {
+            // Record the skip machine-readably rather than failing CI.
+            let mut root = BTreeMap::new();
+            root.insert("bench".to_string(), Json::Str("serving".to_string()));
+            root.insert("skipped".to_string(), Json::Bool(true));
+            std::fs::write(OUT_PATH, Json::Obj(root).to_string())?;
+            println!("wrote {OUT_PATH} (skipped: no artifacts)");
+        }
         return Ok(());
     };
     let assets = Arc::new(assets);
-    let m = assets.manifest.model.clone();
+
+    if json_mode {
+        let j = smoke_json(&assets)?;
+        std::fs::write(OUT_PATH, j.to_string())?;
+        println!("{}", j.to_string());
+        println!("wrote {OUT_PATH}");
+        return Ok(());
+    }
+
     let requests = 16;
     let rates = [0.05, 0.1, 0.2, 0.4, 0.8];
+    let batches = [1usize, 8];
     println!(
         "### bench: fleet serving (mixtral-mini, 16 GB, {requests} requests/point, \
-         Poisson arrivals)"
+         Poisson arrivals; decode batch 1 = serial interleaved)"
     );
     println!(
-        "{:<8} {:<6} {:>12} {:>12} {:>12} {:>12} {:>8} {:>12}",
-        "rate", "sched", "TTFT p50", "TTFT p99", "queue mean", "goodput r/s", "SLO %", "wall (s)"
+        "{:<8} {:<6} {:>6} {:>12} {:>12} {:>12} {:>12} {:>8} {:>8} {:>10}",
+        "rate",
+        "sched",
+        "batch",
+        "TTFT p50",
+        "TTFT p99",
+        "TPOT mean",
+        "goodput r/s",
+        "SLO %",
+        "reuse",
+        "wall (s)"
     );
-    println!("{}", "-".repeat(92));
+    println!("{}", "-".repeat(102));
     for &rate in &rates {
         for policy in PolicyKind::ALL {
-            let sys = SystemConfig::edge_preset("mixtral-mini", 16)?;
-            let strat = Box::new(DyMoEStrategy::new(PolicyConfig::default()));
-            let mut engine = Engine::new(&assets, sys, strat)?;
-            let mut content =
-                TraceGen::new(11, m.max_seq.min(80), (m.max_cache - m.max_seq).min(12));
-            let trace = ArrivalGen::generate(
-                0x5EED,
-                ArrivalProcess::Poisson { rate },
-                &mut content,
-                requests,
-            )?;
-            let cfg = FleetConfig {
-                serving: ServingConfig { max_sessions: 8, ..Default::default() },
-                policy,
-            };
-            let wall = Instant::now();
-            let outcome = run_fleet(&mut engine, trace, &cfg)?;
-            println!(
-                "{rate:<8} {:<6} {:>12.4} {:>12.4} {:>12.4} {:>12.3} {:>7.0}% {:>12.2}",
-                policy.name(),
-                outcome.metrics.ttft.percentile(50.0),
-                outcome.metrics.ttft.percentile(99.0),
-                outcome.metrics.queue_delay.mean(),
-                outcome.metrics.goodput_rps(),
-                outcome.metrics.slo_attainment() * 100.0,
-                wall.elapsed().as_secs_f64(),
-            );
+            for &batch in &batches {
+                let wall = Instant::now();
+                let outcome = run_point(&assets, rate, policy, batch, requests)?;
+                println!(
+                    "{rate:<8} {:<6} {batch:>6} {:>12.4} {:>12.4} {:>12.4} {:>12.3} \
+                     {:>7.0}% {:>7.2}x {:>10.2}",
+                    policy.name(),
+                    outcome.metrics.ttft.percentile(50.0),
+                    outcome.metrics.ttft.percentile(99.0),
+                    outcome.metrics.tpot.mean(),
+                    outcome.metrics.goodput_rps(),
+                    outcome.metrics.slo_attainment() * 100.0,
+                    outcome.dedup.expert_reuse_ratio(),
+                    wall.elapsed().as_secs_f64(),
+                );
+            }
         }
     }
     Ok(())

@@ -201,13 +201,24 @@ pub struct ServingConfig {
     pub ttft_slo_s: f64,
     /// Per-output-token SLO in virtual seconds.
     pub tpot_slo_s: f64,
+    /// Largest cross-session decode batch the fleet scheduler may form
+    /// per virtual tick (sessions decoding together share expert
+    /// fetches).  1 = serial interleaved decode, the pre-batching
+    /// behaviour; the `serve-fleet` CLI defaults to batching up to
+    /// `max_sessions`.
+    pub max_decode_batch: usize,
 }
 
 impl Default for ServingConfig {
     fn default() -> Self {
         // Edge-interactive targets at paper scale: first token within a
         // few seconds even after queueing, decode around 2 tok/s.
-        ServingConfig { max_sessions: 8, ttft_slo_s: 5.0, tpot_slo_s: 0.5 }
+        ServingConfig {
+            max_sessions: 8,
+            ttft_slo_s: 5.0,
+            tpot_slo_s: 0.5,
+            max_decode_batch: 1,
+        }
     }
 }
 

@@ -5,12 +5,19 @@
 //!
 //! Requests are served through a **step-wise session API** —
 //! [`Engine::begin_session`] / [`Engine::prefill_session`] /
-//! [`Engine::decode_session`] — so a scheduler can interleave prefill
-//! and decode steps of many in-flight sessions on the one device (the
-//! multi-session serving layer in [`crate::serving`] does exactly that;
-//! sessions then contend for the shared mixed-precision cache and PCIe
-//! channel).  [`Engine::run`] / [`Engine::run_forced`] are the classic
-//! run-to-completion path, implemented on top of the same steps, so
+//! [`Engine::decode_batch`] — so a scheduler can interleave prefill
+//! steps and *batched* decode steps of many in-flight sessions on the
+//! one device (the multi-session serving layer in [`crate::serving`]
+//! does exactly that; sessions then contend for the shared
+//! mixed-precision cache and PCIe channel).  A decode batch runs one
+//! fused step per layer: routing is computed per token, the union of
+//! routed experts is materialized **once** (cache hit, prefetch, or
+//! load at the precision chosen by batch-aggregated importance), and
+//! the cost model charges a batched roofline — one weight-fetch term
+//! per expert plus per-token compute — instead of per-session costs.
+//! [`Engine::decode_session`] is a decode batch of one, and
+//! [`Engine::run`] / [`Engine::run_forced`] are the classic
+//! run-to-completion path implemented on top of the same steps, so
 //! back-to-back serving (batch size 1, the paper's latency-sensitive
 //! edge scenario) behaves exactly as before.
 //!
@@ -42,9 +49,9 @@ use crate::model::sampler;
 use crate::quant::Precision;
 
 use super::cache::{Lookup, MixedPrecisionCache};
-use super::prefetcher::PrefetchStats;
+use super::prefetcher::{self, PrefetchStats};
 use super::strategy::{LayerCtx, PrefetchCtx, Strategy};
-use super::{top_k_route, Phase, Route};
+use super::{importance, top_k_route, Phase, Route};
 
 /// Engine construction options.
 #[derive(Debug, Clone, Default)]
@@ -101,6 +108,18 @@ pub struct EngineStats {
     pub expert_execs: u64,
     pub skipped_experts: u64,
     pub cpu_execs: u64,
+    /// Decode steps taken through [`Engine::decode_batch`] (a serial
+    /// decode is a batch of one).
+    pub decode_batches: u64,
+    /// Tokens emitted by those decode steps.
+    pub decode_batch_tokens: u64,
+    /// Routed `(token, expert)` pairs across all decode-batch layers.
+    pub routed_pairs: u64,
+    /// Distinct experts materialized for those pairs (one per layer per
+    /// step, however many tokens share it) — the denominator of the
+    /// cross-session dedup win.  Ratio/savings views over these counters
+    /// live in [`crate::serving::metrics::DedupStats`].
+    pub unique_expert_loads: u64,
 }
 
 struct ExpertExec {
@@ -449,44 +468,91 @@ impl Engine {
         Ok(())
     }
 
-    /// Decode one token for the session (all layers).  Returns `true`
-    /// when the session has emitted its last token.
+    /// Decode one token for the session (all layers).  A decode batch of
+    /// one — see [`Engine::decode_batch`].  Returns `true` when the
+    /// session has emitted its last token.
     pub fn decode_session(&mut self, s: &mut EngineSession) -> Result<bool> {
         ensure!(s.prefilled(), "decode before prefill (session {})", s.id);
         if s.done() {
             return Ok(true);
         }
+        let dones = self.decode_batch(&mut [s])?;
+        Ok(dones[0])
+    }
+
+    /// Decode one token for **every** session in the batch as a single
+    /// fused step.  Per layer, each session runs its own attention over
+    /// its private KV cache (charged as one batched roofline: attention
+    /// weight read and kernel overhead amortized across the batch),
+    /// routing is computed per token, and the union of routed experts is
+    /// materialized once — concurrent sessions that route to the same
+    /// expert share its fetch/dequantization instead of each paying it,
+    /// with precision and prefetch decisions driven by batch-aggregated
+    /// gate mass.  A batch of one is step-for-step identical (numerics,
+    /// virtual timing, stats) to the classic single-session decode.
+    ///
+    /// Returns, per session, whether it has now emitted its last token.
+    pub fn decode_batch(&mut self, sessions: &mut [&mut EngineSession]) -> Result<Vec<bool>> {
+        let b = sessions.len();
+        ensure!(b > 0, "empty decode batch");
         let m = self.model().clone();
-        self.enter_phase(s.id, Phase::Decode);
-        let step = s.emitted;
-        let pos = s.prompt.len() + step - 1;
-        let mut hd = self.exec.embed_one(s.token)?;
+        ensure!(
+            b <= m.max_seq,
+            "decode batch {b} exceeds the largest expert token bucket {}",
+            m.max_seq
+        );
+        let mut seen = std::collections::HashSet::with_capacity(b);
+        for s in sessions.iter() {
+            ensure!(s.prefilled(), "decode before prefill (session {})", s.id);
+            ensure!(!s.done(), "session {} already finished", s.id);
+            ensure!(seen.insert(s.id), "duplicate session {} in decode batch", s.id);
+        }
+        // Key the phase context on the smallest session id: a stable
+        // batch keeps its intra-step look-ahead chain even as the
+        // scheduling lead rotates, and a batch of one reduces to the
+        // session's own id (the classic path).
+        let lead = sessions.iter().map(|s| s.id).min().unwrap();
+        self.enter_phase(lead, Phase::Decode);
+        self.stats.decode_batches += 1;
+        self.stats.decode_batch_tokens += b as u64;
+
+        let d = m.d_model;
+        let mut h = vec![0f32; b * d];
+        for (i, s) in sessions.iter().enumerate() {
+            let hd = self.exec.embed_one(s.token)?;
+            h[i * d..(i + 1) * d].copy_from_slice(&hd);
+        }
         let mut ready = self.timeline.gpu.free_at;
         for layer in 0..m.n_layers {
             ready = self
-                .layer_decode(layer, &mut hd, &mut s.kv, pos, ready)
-                .with_context(|| format!("decode layer {layer} step {step}"))?;
+                .layer_decode_batch(layer, &mut h, sessions, ready)
+                .with_context(|| format!("decode layer {layer} (batch of {b})"))?;
         }
-        let logits = self.exec.finalize_one(&hd)?;
         let t_tok = self.timeline.gpu_compute(
             self.timeline.gpu.free_at,
             ready,
-            self.cost.head(1, 1.0),
+            self.cost.head(b, 1.0),
             "finalize",
         );
-        s.out.token_times.push(t_tok - s.out.start);
-        let token = s
-            .forced
-            .as_ref()
-            .map(|f| f[step])
-            .unwrap_or_else(|| sampler::greedy(&logits) as i32);
-        s.out.tokens.push(token);
-        if self.opts.collect_logits {
-            s.out.logits_per_step.push(logits);
+        let mut dones = Vec::with_capacity(b);
+        for (i, s) in sessions.iter_mut().enumerate() {
+            let logits = self.exec.finalize_one(&h[i * d..(i + 1) * d])?;
+            let step = s.emitted;
+            s.out.token_times.push(t_tok - s.out.start);
+            let token = s
+                .forced
+                .as_ref()
+                .map(|f| f[step])
+                .unwrap_or_else(|| sampler::greedy(&logits) as i32);
+            s.out.tokens.push(token);
+            if self.opts.collect_logits {
+                s.out.logits_per_step.push(logits);
+            }
+            s.token = token;
+            s.emitted += 1;
+            dones.push(s.done());
         }
-        s.token = token;
-        s.emitted += 1;
-        Ok(s.done())
+        Ok(dones)
     }
 
     // -----------------------------------------------------------------
@@ -561,25 +627,51 @@ impl Engine {
         )
     }
 
-    fn layer_decode(
+    /// One layer of a batched decode step: per-session attention over
+    /// private KV caches (one fused roofline charge), batch-aggregated
+    /// probe prefetch, per-token routing, and one shared expert-union
+    /// execution.  For a batch of one this is exactly the classic
+    /// single-session decode layer.
+    fn layer_decode_batch(
         &mut self,
         layer: usize,
         h: &mut Vec<f32>,
-        kv: &mut KvCache,
-        pos: usize,
+        sessions: &mut [&mut EngineSession],
         deps: f64,
     ) -> Result<f64> {
         let m = self.model().clone();
+        let b = sessions.len();
+        let d = m.d_model;
         let want_probe = self.strategy.wants_probe() && layer + 1 < m.n_layers;
-        let (dout, probe) = if want_probe {
-            let (dout, probe) = self.exec.attn_decode_probe(layer, layer + 1, h, kv, pos)?;
-            (dout, Some(probe))
-        } else {
-            (self.exec.attn_decode(layer, h, kv, pos)?, None)
-        };
-        let mut attn_cost = self.cost.attn_decode(pos);
+
+        let mut moe_in = vec![0f32; b * d];
+        let mut h_resid = vec![0f32; b * d];
+        let mut gate_rows = vec![0f32; b * m.n_experts];
+        let mut probe_rows =
+            if want_probe { vec![0f32; b * m.n_experts] } else { Vec::new() };
+        let mut positions = Vec::with_capacity(b);
+        for (i, s) in sessions.iter_mut().enumerate() {
+            let pos = s.prompt.len() + s.emitted - 1;
+            positions.push(pos);
+            let hi = &h[i * d..(i + 1) * d];
+            let dout = if want_probe {
+                let (dout, probe) =
+                    self.exec.attn_decode_probe(layer, layer + 1, hi, &s.kv, pos)?;
+                probe_rows[i * m.n_experts..(i + 1) * m.n_experts]
+                    .copy_from_slice(&probe);
+                dout
+            } else {
+                self.exec.attn_decode(layer, hi, &s.kv, pos)?
+            };
+            s.kv.write_row(layer, pos, &dout.k_new, &dout.v_new)?;
+            moe_in[i * d..(i + 1) * d].copy_from_slice(&dout.moe_in);
+            h_resid[i * d..(i + 1) * d].copy_from_slice(&dout.h_resid);
+            gate_rows[i * m.n_experts..(i + 1) * m.n_experts]
+                .copy_from_slice(&dout.gate_probs);
+        }
+        let mut attn_cost = self.cost.attn_decode_batch(&positions);
         if want_probe {
-            attn_cost += self.cost.gate(1);
+            attn_cost += self.cost.gate(b);
         }
         let t_attn = self.timeline.gpu_compute(
             self.timeline.gpu.free_at,
@@ -587,14 +679,29 @@ impl Engine {
             attn_cost,
             &format!("attn_d L{layer}"),
         );
-        kv.write_row(layer, pos, &dout.k_new, &dout.v_new)?;
 
-        // Prefetch before this layer's expert compute (maximum overlap).
-        if let Some(probe) = &probe {
-            self.issue_prefetch(layer + 1, probe, Phase::Decode, 1);
+        // Prefetch before this layer's expert compute (maximum overlap);
+        // one decision for the whole batch from the aggregated probe.
+        if want_probe {
+            let probe = prefetcher::aggregate_decode_probes(&probe_rows, b, m.n_experts);
+            self.issue_prefetch(layer + 1, &probe, Phase::Decode, b);
         }
 
-        let routes = vec![top_k_route(&dout.gate_probs, m.top_k)];
+        let routes: Vec<Route> = gate_rows
+            .chunks_exact(m.n_experts)
+            .map(|row| top_k_route(row, m.top_k))
+            .collect();
+        // Dedup accounting: however many sessions route to an expert, it
+        // is materialized once for the whole batch.
+        let pairs: usize = routes.iter().map(|r| r.len()).sum();
+        let union: std::collections::HashSet<usize> =
+            routes.iter().flat_map(|r| r.iter().map(|&(e, _)| e)).collect();
+        self.stats.routed_pairs += pairs as u64;
+        self.stats.unique_expert_loads += union.len() as u64;
+
+        // Precision planning sees the batch-aggregated gate mass (for a
+        // batch of one this is the token's own gate vector, bitwise).
+        let agg = importance::batch_gate_mass(&gate_rows, b, m.n_experts);
         let plan = self.strategy.plan(&LayerCtx {
             layer,
             n_layers: m.n_layers,
@@ -602,20 +709,11 @@ impl Engine {
             top_k: m.top_k,
             phase: Phase::Decode,
             routes: &routes,
-            gate_probs: &dout.gate_probs,
+            gate_probs: &agg,
             token_scores: None,
         });
 
-        self.execute_experts(
-            layer,
-            &routes,
-            &plan,
-            &dout.moe_in,
-            &dout.h_resid,
-            h,
-            1,
-            t_attn,
-        )
+        self.execute_experts(layer, &routes, &plan, &moe_in, &h_resid, h, b, t_attn)
     }
 
     /// Resolve weights, schedule, and numerically execute all routed
@@ -842,10 +940,22 @@ impl Engine {
         }
     }
 
+    /// Prefetches issued but not yet resolved into useful/wasted
+    /// (predictions for a layer that has not executed yet).  Zero at
+    /// every step boundary; `prefetch_stats.issued == useful + wasted +
+    /// prefetched_in_flight()` always.
+    pub fn prefetched_in_flight(&self) -> u64 {
+        self.prefetched_for.values().map(|v| v.len() as u64).sum()
+    }
+
     /// Reset cumulative statistics (keeps cache contents / clock).
     pub fn reset_stats(&mut self) {
         self.stats = EngineStats::default();
         self.prefetch_stats = PrefetchStats::default();
+        // In-flight look-ahead state resets with the counters: a stale
+        // entry consumed after the reset would credit useful/wasted with
+        // no matching `issued`, breaking the PrefetchStats invariant.
+        self.prefetched_for.clear();
         self.cache.stats = Default::default();
     }
 }

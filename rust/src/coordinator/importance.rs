@@ -65,6 +65,31 @@ pub fn decode_importance(gate_probs: &[f32]) -> Vec<f64> {
     gate_probs.iter().map(|&g| g as f64).collect()
 }
 
+/// Batch-aggregated gate mass for a cross-session decode step: the mean
+/// of `batch` row-major `[batch, n_experts]` gate rows, one value per
+/// expert.  The result is itself a probability distribution (rows sum to
+/// one), so strategies consume it exactly like a single token's gate
+/// vector — experts carrying the most gate mass *across the whole batch*
+/// rank as most important.  For `batch == 1` this is bitwise identical
+/// to the input row (`0.0 + x == x`, `x / 1.0 == x`), which is what
+/// makes a decode batch of one indistinguishable from the classic
+/// single-session decode path.
+pub fn batch_gate_mass(gate_probs: &[f32], batch: usize, n_experts: usize) -> Vec<f32> {
+    assert_eq!(gate_probs.len(), batch * n_experts, "gate batch shape");
+    assert!(batch > 0, "empty gate batch");
+    let mut mass = vec![0f32; n_experts];
+    for row in 0..batch {
+        for (e, m) in mass.iter_mut().enumerate() {
+            *m += gate_probs[row * n_experts + e];
+        }
+    }
+    let inv = 1.0 / batch as f32;
+    for m in &mut mass {
+        *m *= inv;
+    }
+    mass
+}
+
 /// Rank expert indices by importance, descending (stable by index).
 pub fn rank_desc(importance: &[f64]) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..importance.len()).collect();
@@ -126,5 +151,29 @@ mod tests {
     #[test]
     fn rank_desc_stable() {
         assert_eq!(rank_desc(&[0.5, 0.5, 0.9]), vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn batch_gate_mass_of_one_row_is_identity() {
+        let row = [0.125f32, 0.5, 0.25, 0.125];
+        let agg = batch_gate_mass(&row, 1, 4);
+        // bitwise identity: a decode batch of one must plan exactly like
+        // the single-session path
+        assert_eq!(agg, row.to_vec());
+    }
+
+    #[test]
+    fn batch_gate_mass_averages_rows() {
+        #[rustfmt::skip]
+        let rows = [
+            1.0f32, 0.0, 0.0,
+            0.0,    0.5, 0.5,
+        ];
+        let agg = batch_gate_mass(&rows, 2, 3);
+        assert!((agg[0] - 0.5).abs() < 1e-7);
+        assert!((agg[1] - 0.25).abs() < 1e-7);
+        assert!((agg[2] - 0.25).abs() < 1e-7);
+        // still a distribution
+        assert!((agg.iter().sum::<f32>() - 1.0).abs() < 1e-6);
     }
 }

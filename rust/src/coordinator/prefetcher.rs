@@ -21,6 +21,8 @@ pub struct PrefetchStats {
 }
 
 impl PrefetchStats {
+    /// Hit rate of the look-ahead predictor.  Well-defined (0.0, not NaN)
+    /// when nothing was issued.
     pub fn accuracy(&self) -> f64 {
         if self.issued == 0 {
             0.0
@@ -28,12 +30,36 @@ impl PrefetchStats {
             self.useful as f64 / self.issued as f64
         }
     }
+
+    /// Prefetches issued but not yet resolved into useful/wasted.  The
+    /// engine invariant is `issued == useful + wasted + in_flight` at all
+    /// times, with `in_flight == 0` at every step boundary (every
+    /// prediction targets a layer that executes within the same step).
+    /// Saturating so a broken accounting state reads as 0 rather than
+    /// wrapping; use [`PrefetchStats::balanced`] to detect that state.
+    pub fn in_flight(&self) -> u64 {
+        self.issued.saturating_sub(self.useful + self.wasted)
+    }
+
+    /// The accounting invariant: resolved prefetches never exceed issued
+    /// ones.
+    pub fn balanced(&self) -> bool {
+        self.useful + self.wasted <= self.issued
+    }
 }
 
 /// Eq. 8: decode-phase prediction — top-t experts of the probe.
 pub fn predict_decode(probe_probs: &[f32], t: usize) -> Vec<usize> {
     let imp: Vec<f64> = probe_probs.iter().map(|&p| p as f64).collect();
     rank_desc(&imp).into_iter().take(t).collect()
+}
+
+/// Batched Eq. 8: aggregate `batch` per-session decode probes (row-major
+/// `[batch, n_experts]`) into one per-expert probe by mean gate mass, so
+/// one prefetch decision serves the whole decode batch.  Identity for a
+/// batch of one (see [`super::importance::batch_gate_mass`]).
+pub fn aggregate_decode_probes(probe_probs: &[f32], batch: usize, n_experts: usize) -> Vec<f32> {
+    super::importance::batch_gate_mass(probe_probs, batch, n_experts)
 }
 
 /// Eq. 7: prefill-phase prediction — per-expert activation frequency
@@ -103,5 +129,39 @@ mod tests {
         let s = PrefetchStats { issued: 10, useful: 7, wasted: 3 };
         assert!((s.accuracy() - 0.7).abs() < 1e-12);
         assert_eq!(PrefetchStats::default().accuracy(), 0.0);
+    }
+
+    #[test]
+    fn stats_balance_and_in_flight() {
+        let settled = PrefetchStats { issued: 10, useful: 7, wasted: 3 };
+        assert!(settled.balanced());
+        assert_eq!(settled.in_flight(), 0);
+        let pending = PrefetchStats { issued: 5, useful: 2, wasted: 1 };
+        assert!(pending.balanced());
+        assert_eq!(pending.in_flight(), 2);
+        let broken = PrefetchStats { issued: 2, useful: 2, wasted: 1 };
+        assert!(!broken.balanced());
+        // zero issued: accuracy stays defined, nothing in flight
+        let zero = PrefetchStats::default();
+        assert!(zero.balanced());
+        assert_eq!(zero.in_flight(), 0);
+        assert!(zero.accuracy().is_finite());
+    }
+
+    #[test]
+    fn decode_probe_aggregation_matches_mean() {
+        #[rustfmt::skip]
+        let probes = [
+            0.7f32, 0.2, 0.1,
+            0.1,    0.8, 0.1,
+        ];
+        let agg = aggregate_decode_probes(&probes, 2, 3);
+        assert!((agg[0] - 0.4).abs() < 1e-7);
+        assert!((agg[1] - 0.5).abs() < 1e-7);
+        // a batch of one is the probe itself
+        let one = aggregate_decode_probes(&probes[..3], 1, 3);
+        assert_eq!(one, probes[..3].to_vec());
+        // aggregated prediction ranks by combined mass
+        assert_eq!(predict_decode(&agg, 2), vec![1, 0]);
     }
 }

@@ -25,7 +25,12 @@ pub struct LayerCtx<'a> {
     pub phase: Phase,
     /// Per valid token: routed experts with renormalized gate weights.
     pub routes: &'a [Route],
-    /// Gate probabilities: `[M]` in decode, row-major `[T, M]` in prefill.
+    /// Gate probabilities: `[M]` in decode, row-major `[T, M]` in
+    /// prefill.  For a *batched* decode step (several sessions decoding
+    /// together, `routes.len() > 1`) this is the batch-aggregated gate
+    /// mass — the per-expert mean over the batch's gate rows, itself a
+    /// distribution — so importance concentrates fidelity on the experts
+    /// carrying the most gate mass across the whole batch.
     pub gate_probs: &'a [f32],
     /// Eq.-1 token-importance scores (prefill only).
     pub token_scores: Option<&'a [f32]>,

@@ -76,6 +76,24 @@ impl CostModel {
         self.roofline(flops, bytes) * self.layer_scale
     }
 
+    /// One layer's attention for a cross-session decode batch, one token
+    /// per session at its own KV position.  The batched roofline charges
+    /// the attention weight read and the kernel overhead **once** for the
+    /// whole batch (that is the batching win) while flops and per-session
+    /// KV reads sum over the tokens.  For a single position this equals
+    /// [`CostModel::attn_decode`] exactly.
+    pub fn attn_decode_batch(&self, positions: &[usize]) -> f64 {
+        let d = self.paper.d_model as f64;
+        let mut flops = 0.0;
+        let mut kv_bytes = 0.0;
+        for &pos in positions {
+            flops += 8.0 * d * d + 4.0 * d * pos as f64;
+            kv_bytes += 2.0 * pos as f64 * d * 2.0;
+        }
+        let bytes = 4.0 * d * d * 2.0 + kv_bytes;
+        self.roofline(flops, bytes) * self.layer_scale
+    }
+
     /// One expert's FFN over `tokens` routed tokens at a precision, on GPU.
     pub fn expert_gpu(&self, tokens: usize, p: Precision) -> f64 {
         if p == Precision::Skip || tokens == 0 {
@@ -185,6 +203,37 @@ mod tests {
         let c = cm();
         assert_eq!(c.expert_gpu(5, Precision::Skip), 0.0);
         assert_eq!(c.expert_cpu(5, Precision::Skip), 0.0);
+    }
+
+    #[test]
+    fn batched_decode_attention_amortizes_weight_reads() {
+        let c = cm();
+        // a batch of one is exactly the serial op
+        for pos in [1usize, 17, 300] {
+            assert_eq!(c.attn_decode_batch(&[pos]), c.attn_decode(pos));
+        }
+        // batching never beats free: more tokens cost more...
+        let batch = [10usize, 20, 30, 40];
+        let t_batch = c.attn_decode_batch(&batch);
+        assert!(t_batch > c.attn_decode(40));
+        // ...but one fused step beats four serial steps (single weight
+        // read + single kernel overhead)
+        let t_serial: f64 = batch.iter().map(|&p| c.attn_decode(p)).sum();
+        assert!(
+            t_batch < t_serial,
+            "batched {t_batch} not cheaper than serial {t_serial}"
+        );
+    }
+
+    #[test]
+    fn batched_expert_ffn_amortizes_weight_fetch() {
+        let c = cm();
+        // the expert roofline is already batched: n tokens through one
+        // expert cost far less than n separate single-token executions
+        let one = c.expert_gpu(1, Precision::Int4);
+        let four = c.expert_gpu(4, Precision::Int4);
+        assert!(four < 4.0 * one);
+        assert!(four >= one);
     }
 
     #[test]

@@ -4,7 +4,8 @@
 //! dymoe info        --model mixtral-mini
 //! dymoe serve       --model mixtral-mini --vram 16 --requests 10 [--strategy dymoe-40]
 //! dymoe serve-fleet --model mixtral-mini --vram 16 --requests 24 --rate 0.25 \
-//!                   [--arrival poisson|bursty|ramp] [--sessions 8] [--sched fifo|rr|slo]
+//!                   [--arrival poisson|bursty|ramp] [--sessions 8] [--sched fifo|rr|slo] \
+//!                   [--max-decode-batch 8]
 //! dymoe experiment  <fig1|...|table3|all> [--items N] [--requests N] [--models a,b]
 //! dymoe timeline    --model mixtral-mini --vram 16
 //! ```
@@ -212,8 +213,9 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
         .map_err(|_| anyhow!("--rate wants a float (requests / virtual second)"))?;
     let process = ArrivalProcess::from_cli(&args.get("arrival", "poisson"), rate)?;
     let policy = PolicyKind::parse(&args.get("sched", "slo"))?;
+    let max_sessions = args.get_usize("sessions", 8)?;
     let serving = ServingConfig {
-        max_sessions: args.get_usize("sessions", 8)?,
+        max_sessions,
         ttft_slo_s: args
             .get("ttft-slo", "5.0")
             .parse()
@@ -222,6 +224,9 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
             .get("tpot-slo", "0.5")
             .parse()
             .map_err(|_| anyhow!("--tpot-slo wants seconds"))?,
+        // Cross-session batched decode: default to batching as wide as
+        // the admission limit; 1 restores serial interleaved decode.
+        max_decode_batch: args.get_usize("max-decode-batch", max_sessions.max(1))?,
     };
 
     let assets = Arc::new(ModelAssets::load(&artifacts, &model)?);
@@ -230,10 +235,11 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
     let sys = SystemConfig::edge_preset(&model, vram)?;
     println!(
         "fleet-serving {model} as {} @ {vram} GB VRAM: {} arrivals ({process:?}), \
-         <= {} sessions, {} scheduling, SLO ttft {:.2}s / tpot {:.3}s",
+         <= {} sessions, decode batch <= {}, {} scheduling, SLO ttft {:.2}s / tpot {:.3}s",
         strategy.name(),
         requests,
         serving.max_sessions,
+        serving.max_decode_batch.max(1),
         policy.name(),
         serving.ttft_slo_s,
         serving.tpot_slo_s,
@@ -265,6 +271,15 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
         outcome.peak_concurrency,
         outcome.steps,
         fmt_secs(outcome.metrics.makespan()),
+    );
+    println!(
+        "batched decode: {} steps ({} tokens, mean batch {:.2}); expert reuse {:.2}x \
+         ({} shared fetches saved vs serial)",
+        outcome.dedup.decode_batches,
+        outcome.dedup.decode_batch_tokens,
+        outcome.dedup.mean_batch(),
+        outcome.dedup.expert_reuse_ratio(),
+        outcome.dedup.saved_fetches(),
     );
     let span = outcome.metrics.makespan();
     println!(
@@ -367,6 +382,7 @@ fn usage() -> String {
      \x20 serve       --model <name> [--vram GB] [--requests N] [--strategy S] [--retention R]\n\
      \x20 serve-fleet --model <name> [--vram GB] [--requests N] [--rate R/S]\n\
      \x20             [--arrival poisson|bursty|ramp] [--sessions N] [--sched fifo|rr|slo]\n\
+     \x20             [--max-decode-batch N (1 = serial decode; default: --sessions)]\n\
      \x20             [--ttft-slo S] [--tpot-slo S] [--strategy S] [--seed N]\n\
      \x20 timeline    --model <name> [--vram GB] [--strategy S]\n\
      \x20 experiment  <fig1|fig2|fig3|fig4|fig5|fig6|fig10|fig11|table1|table2|table3|all>\n\

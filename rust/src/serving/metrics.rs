@@ -1,7 +1,8 @@
 //! Fleet-level SLO metrics: per-session TTFT/TPOT distributions (queue
-//! delay included), goodput, and SLO attainment over one serving run.
+//! delay included), goodput, SLO attainment, and cross-session
+//! decode-batch dedup telemetry over one serving run.
 
-use crate::coordinator::engine::RequestOutput;
+use crate::coordinator::engine::{EngineStats, RequestOutput};
 use crate::metrics::Series;
 use crate::util::table::{fmt_secs, Table};
 
@@ -29,6 +30,58 @@ pub struct CompletedRequest {
     pub tokens: usize,
     pub ttft_ok: bool,
     pub tpot_ok: bool,
+}
+
+/// Cross-session decode-batch dedup telemetry for one fleet run: how
+/// many tokens each expert materialization served once concurrent
+/// sessions decode together (the I/O-amplification win batching buys).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DedupStats {
+    /// Fused decode steps taken (a serial decode is a batch of one).
+    pub decode_batches: u64,
+    /// Tokens emitted by those steps.
+    pub decode_batch_tokens: u64,
+    /// Routed `(token, expert)` pairs across all decode layers.
+    pub routed_pairs: u64,
+    /// Distinct experts materialized for those pairs.
+    pub unique_expert_loads: u64,
+}
+
+impl DedupStats {
+    /// Engine-counter delta over one run (`after - before`).
+    pub fn from_delta(before: &EngineStats, after: &EngineStats) -> DedupStats {
+        DedupStats {
+            decode_batches: after.decode_batches - before.decode_batches,
+            decode_batch_tokens: after.decode_batch_tokens - before.decode_batch_tokens,
+            routed_pairs: after.routed_pairs - before.routed_pairs,
+            unique_expert_loads: after.unique_expert_loads - before.unique_expert_loads,
+        }
+    }
+
+    /// Mean decode-batch size over the run (0 when nothing decoded).
+    pub fn mean_batch(&self) -> f64 {
+        if self.decode_batches == 0 {
+            0.0
+        } else {
+            self.decode_batch_tokens as f64 / self.decode_batches as f64
+        }
+    }
+
+    /// Routed tokens served per expert materialization: 1.0 when every
+    /// expert load serves one token, higher when sessions share fetches.
+    /// 0 when nothing decoded.
+    pub fn expert_reuse_ratio(&self) -> f64 {
+        if self.unique_expert_loads == 0 {
+            0.0
+        } else {
+            self.routed_pairs as f64 / self.unique_expert_loads as f64
+        }
+    }
+
+    /// Expert fetch/exec operations avoided versus fully serial decode.
+    pub fn saved_fetches(&self) -> u64 {
+        self.routed_pairs - self.unique_expert_loads
+    }
 }
 
 /// Aggregates over one fleet run.
@@ -209,5 +262,35 @@ mod tests {
         assert_eq!(m.throughput_tps(), 0.0);
         assert_eq!(m.slo_attainment(), 0.0);
         assert_eq!(m.summary_row("x").len(), FleetMetrics::TABLE_HEADER.len());
+    }
+
+    #[test]
+    fn dedup_stats_ratios_and_deltas() {
+        // empty run: every ratio stays defined
+        let zero = DedupStats::default();
+        assert_eq!(zero.mean_batch(), 0.0);
+        assert_eq!(zero.expert_reuse_ratio(), 0.0);
+        assert_eq!(zero.saved_fetches(), 0);
+
+        let before = EngineStats {
+            decode_batches: 2,
+            decode_batch_tokens: 2,
+            routed_pairs: 4,
+            unique_expert_loads: 4,
+            ..Default::default()
+        };
+        let after = EngineStats {
+            decode_batches: 6,
+            decode_batch_tokens: 18,
+            routed_pairs: 36,
+            unique_expert_loads: 12,
+            ..Default::default()
+        };
+        let d = DedupStats::from_delta(&before, &after);
+        assert_eq!(d.decode_batches, 4);
+        assert_eq!(d.decode_batch_tokens, 16);
+        assert!((d.mean_batch() - 4.0).abs() < 1e-12);
+        assert!((d.expert_reuse_ratio() - 4.0).abs() < 1e-12);
+        assert_eq!(d.saved_fetches(), 24);
     }
 }

@@ -12,6 +12,16 @@
 //! demand fetches and prefetches warm (or thrash) the expert cache for
 //! everyone else, and queue delay becomes part of user-visible TTFT.
 //!
+//! Decode steps batch across sessions: each virtual tick the scheduler
+//! asks the policy for a decode batch of up to
+//! [`crate::config::ServingConfig::max_decode_batch`] ready sessions and
+//! runs them through [`Engine::decode_batch`] as one fused step — the
+//! union of routed experts is materialized once per layer, so concurrent
+//! sessions that route to the same expert share its fetch instead of
+//! each paying it (`max_decode_batch = 1` is the serial interleaved
+//! path, step-for-step).  [`metrics::DedupStats`] reports the resulting
+//! expert-reuse / dedup savings per run.
+//!
 //! Everything runs on the engine's virtual timeline, so a fleet run is
 //! deterministic under a fixed seed and directly comparable across
 //! scheduling policies ([`policy::PolicyKind`]).  [`metrics`] aggregates
@@ -30,7 +40,7 @@ use crate::coordinator::engine::{Engine, EngineSession};
 use crate::workload::Request;
 
 use self::arrival::TimedRequest;
-use self::metrics::{CompletedRequest, FleetMetrics, SloTargets};
+use self::metrics::{CompletedRequest, DedupStats, FleetMetrics, SloTargets};
 use self::policy::{Action, ActiveInfo, PolicyKind, QueuedInfo, SchedView};
 
 /// Configuration of one fleet run.
@@ -63,8 +73,11 @@ pub struct FleetOutcome {
     /// High-water mark of KV-cache bytes held by in-flight sessions
     /// (memory pressure of concurrency).
     pub peak_kv_bytes: u64,
-    /// Total scheduler steps taken (prefills + decodes).
+    /// Total scheduler steps taken (prefills + decode steps; a decode
+    /// batch counts once however many sessions it advances).
     pub steps: usize,
+    /// Cross-session decode-batch dedup telemetry for this run.
+    pub dedup: DedupStats,
 }
 
 struct Queued {
@@ -109,6 +122,12 @@ pub fn run_fleet(
         deadline: r.arrival + slo.ttft_s,
         request: r.request,
     };
+    // Clamp the batch width to the model's largest expert token bucket:
+    // the engine cannot fuse more decode tokens than one expert call can
+    // carry, and `--sessions` above that limit should still serve (the
+    // surplus sessions just decode in the next tick's batch).
+    let max_decode_batch = cfg.serving.max_decode_batch.clamp(1, engine.model().max_seq);
+    let stats_before = engine.stats;
     let mut policy = cfg.policy.build();
     let mut out = FleetOutcome {
         metrics: FleetMetrics::default(),
@@ -116,6 +135,7 @@ pub fn run_fleet(
         peak_concurrency: 0,
         peak_kv_bytes: 0,
         steps: 0,
+        dedup: DedupStats::default(),
     };
 
     loop {
@@ -200,24 +220,65 @@ pub fn run_fleet(
                 }
             }
             Action::Decode(id) => {
-                let Some(pos) = active.iter().position(|a| a.id == id) else {
-                    bail!("policy decoded unknown session {id}");
+                // Batch formation: the policy extends its pick into a
+                // decode batch of ready sessions (knob: max_decode_batch;
+                // 1 keeps the serial interleaved path, step for step).
+                let batch_ids = if max_decode_batch > 1 && active.len() > 1 {
+                    policy.decode_batch(&view, id, max_decode_batch)
+                } else {
+                    vec![id]
                 };
-                let a = &mut active[pos];
-                let done = engine
-                    .decode_session(&mut a.sess)
-                    .with_context(|| format!("decode session {id}"))?;
-                out.steps += 1;
-                a.last_token_at =
-                    a.sess.out.start + a.sess.out.token_times.last().copied().unwrap_or(0.0);
-                if done {
-                    let a = active.swap_remove(pos);
-                    let done = out.metrics.record(a.id, a.arrival, &a.sess.out, slo);
-                    out.per_request.push(done);
+                if batch_ids.len() <= 1 {
+                    let lone = batch_ids.first().copied().unwrap_or(id);
+                    let Some(pos) = active.iter().position(|a| a.id == lone) else {
+                        bail!("policy decoded unknown session {lone}");
+                    };
+                    let a = &mut active[pos];
+                    let done = engine
+                        .decode_session(&mut a.sess)
+                        .with_context(|| format!("decode session {lone}"))?;
+                    out.steps += 1;
+                    a.last_token_at = a.sess.out.start
+                        + a.sess.out.token_times.last().copied().unwrap_or(0.0);
+                    if done {
+                        let a = active.swap_remove(pos);
+                        let rec = out.metrics.record(a.id, a.arrival, &a.sess.out, slo);
+                        out.per_request.push(rec);
+                    }
+                } else {
+                    if !batch_ids.contains(&id) {
+                        bail!("policy dropped its own pick {id} from the decode batch");
+                    }
+                    let mut batch: Vec<Active> = Vec::with_capacity(batch_ids.len());
+                    for bid in &batch_ids {
+                        let Some(pos) = active.iter().position(|a| a.id == *bid) else {
+                            bail!("policy batched unknown or duplicate session {bid}");
+                        };
+                        batch.push(active.swap_remove(pos));
+                    }
+                    let dones = {
+                        let mut refs: Vec<&mut EngineSession> =
+                            batch.iter_mut().map(|a| &mut a.sess).collect();
+                        engine
+                            .decode_batch(&mut refs)
+                            .with_context(|| format!("decode batch {batch_ids:?}"))?
+                    };
+                    out.steps += 1;
+                    for (mut a, done) in batch.into_iter().zip(dones) {
+                        a.last_token_at = a.sess.out.start
+                            + a.sess.out.token_times.last().copied().unwrap_or(0.0);
+                        if done {
+                            let rec = out.metrics.record(a.id, a.arrival, &a.sess.out, slo);
+                            out.per_request.push(rec);
+                        } else {
+                            active.push(a);
+                        }
+                    }
                 }
             }
             Action::Idle => unreachable!("idle resolved above"),
         }
     }
+    out.dedup = DedupStats::from_delta(&stats_before, &engine.stats);
     Ok(out)
 }

@@ -68,6 +68,32 @@ pub enum Action {
 pub trait SchedPolicy {
     fn name(&self) -> &'static str;
     fn next_action(&mut self, view: &SchedView) -> Action;
+
+    /// Form this tick's cross-session decode batch around the session
+    /// the policy just picked with [`SchedPolicy::next_action`].
+    /// Returns distinct active-session ids, `lead` first, at most `max`
+    /// of them; every id must be active.  The default fills the batch
+    /// with the remaining active sessions least-recently-served first
+    /// (ties by id), which matches the SLO-aware decode order; policies
+    /// with their own decode ordering (e.g. round-robin) override it.
+    fn decode_batch(&mut self, view: &SchedView, lead: usize, max: usize) -> Vec<usize> {
+        let mut ids = vec![lead];
+        if max <= 1 {
+            return ids;
+        }
+        let mut rest: Vec<&ActiveInfo> =
+            view.active.iter().filter(|a| a.id != lead).collect();
+        rest.sort_by(|a, b| {
+            a.last_token_at.total_cmp(&b.last_token_at).then(a.id.cmp(&b.id))
+        });
+        for a in rest {
+            if ids.len() >= max {
+                break;
+            }
+            ids.push(a.id);
+        }
+        ids
+    }
 }
 
 /// Policy selector (config / CLI surface).
@@ -170,6 +196,23 @@ impl SchedPolicy for RoundRobin {
         self.cursor = Some(pick);
         Action::Decode(pick)
     }
+
+    /// Round-robin batches continue the rotation: the lead plus the next
+    /// active ids in id order (wrapping), and the cursor advances to the
+    /// last batched session so the next tick picks up after the batch.
+    fn decode_batch(&mut self, view: &SchedView, lead: usize, max: usize) -> Vec<usize> {
+        let mut ids: Vec<usize> = view.active.iter().map(|a| a.id).collect();
+        ids.sort_unstable();
+        let start = ids.iter().position(|&id| id == lead).unwrap_or(0);
+        let picked: Vec<usize> = (0..ids.len())
+            .map(|off| ids[(start + off) % ids.len()])
+            .take(max.max(1))
+            .collect();
+        if let Some(&last) = picked.last() {
+            self.cursor = Some(last);
+        }
+        picked
+    }
 }
 
 /// EDF admission on the TTFT deadline, least-recently-served decode.
@@ -261,6 +304,31 @@ mod tests {
         // no slots: decode the session longest since last token
         let view = SchedView { now: 2.0, queued: &queued, active: &active, free_slots: 0 };
         assert_eq!(p.next_action(&view), Action::Decode(2));
+    }
+
+    #[test]
+    fn default_batch_fills_least_recently_served() {
+        let mut p = PolicyKind::SloAware.build();
+        let active = [a(1, 0.0, 2.5), a(2, 0.1, 1.5), a(3, 0.2, 3.5), a(4, 0.3, 1.0)];
+        let view = SchedView { now: 4.0, queued: &[], active: &active, free_slots: 0 };
+        // lead stays first; the rest join oldest-token first
+        assert_eq!(p.decode_batch(&view, 2, 3), vec![2, 4, 1]);
+        // max 1 is the serial path
+        assert_eq!(p.decode_batch(&view, 2, 1), vec![2]);
+        // max beyond the active set batches everyone
+        assert_eq!(p.decode_batch(&view, 2, 10), vec![2, 4, 1, 3]);
+    }
+
+    #[test]
+    fn round_robin_batch_continues_rotation() {
+        let mut p = PolicyKind::RoundRobin.build();
+        let active = [a(1, 0.0, 1.0), a(2, 0.1, 1.1), a(5, 0.2, 0.9)];
+        let view = SchedView { now: 2.0, queued: &[], active: &active, free_slots: 0 };
+        // batch wraps in id order from the lead...
+        assert_eq!(p.decode_batch(&view, 2, 2), vec![2, 5]);
+        // ...and the cursor advanced past the whole batch: next pick
+        // wraps to 1
+        assert_eq!(p.next_action(&view), Action::Decode(1));
     }
 
     #[test]

@@ -288,6 +288,120 @@ fn prefetching_overlaps_io_with_compute() {
     );
 }
 
+/// PrefetchStats invariant regression: after every engine step
+/// `issued == useful + wasted` (no look-ahead state leaks across step
+/// boundaries), `accuracy()` stays well-defined at zero issued, and
+/// `reset_stats` clears the in-flight bookkeeping together with the
+/// counters (a stale entry consumed after a reset would otherwise credit
+/// useful/wasted with no matching `issued`).
+#[test]
+fn prefetch_accounting_balances_after_every_step() {
+    let Some(a) = assets() else { return };
+    let mut sys = SystemConfig::edge_preset("tiny", 24).unwrap();
+    let int4 = dymoe::quant::expert_bytes(
+        sys.paper.d_model,
+        sys.paper.d_ffn,
+        128,
+        Precision::Int4,
+    );
+    // tight VRAM so prefetches actually issue (see
+    // prefetching_overlaps_io_with_compute for the sizing)
+    sys.hardware.vram_bytes = sys.paper.non_expert_bytes + 32 * 6 * int4;
+    let policy = PolicyConfig {
+        retention: 1.0,
+        prefetch_enabled: true,
+        dyquant_enabled: false,
+        prefetch_depth: 2,
+        ..Default::default()
+    };
+    let mut e = Engine::new(&a, sys, Box::new(DyMoEStrategy::new(policy))).unwrap();
+
+    // zero issued: accuracy defined, nothing in flight
+    assert_eq!(e.prefetch_stats.accuracy(), 0.0);
+    assert!(e.prefetch_stats.accuracy().is_finite());
+    assert_eq!(e.prefetched_in_flight(), 0);
+
+    let check = |e: &Engine, at: &str| {
+        let ps = e.prefetch_stats;
+        assert!(ps.balanced(), "{at}: useful+wasted exceeds issued: {ps:?}");
+        assert_eq!(
+            ps.useful + ps.wasted + e.prefetched_in_flight(),
+            ps.issued,
+            "{at}: prefetch accounting out of balance: {ps:?}"
+        );
+        assert_eq!(
+            e.prefetched_in_flight(),
+            0,
+            "{at}: look-ahead state leaked across a step boundary"
+        );
+    };
+
+    let prompt: Vec<i32> = (0..12).map(|i| 1 + (i * 3) % 60).collect();
+    let arrival = e.clock();
+    let mut s = e.begin_session(&prompt, 6, None, arrival).unwrap();
+    e.prefill_session(&mut s).unwrap();
+    check(&e, "after prefill");
+    let mut step = 0;
+    while !s.done() {
+        e.decode_session(&mut s).unwrap();
+        step += 1;
+        check(&e, &format!("after decode step {step}"));
+    }
+    assert!(e.prefetch_stats.issued > 0, "prefetcher idle; test is vacuous");
+
+    // reset clears the in-flight bookkeeping with the counters
+    e.reset_stats();
+    assert_eq!(e.prefetch_stats.issued, 0);
+    assert_eq!(e.prefetched_in_flight(), 0);
+    assert_eq!(e.prefetch_stats.accuracy(), 0.0);
+
+    // and the invariant survives another full request after the reset
+    let out = e.run(&prompt, 4).unwrap();
+    assert_eq!(out.tokens.len(), 4);
+    check(&e, "after post-reset run");
+}
+
+/// The same invariant under cross-session batched decode: one aggregated
+/// prefetch decision per layer serves the whole batch and is consumed
+/// within the step.
+#[test]
+fn prefetch_accounting_balances_under_batched_decode() {
+    let Some(a) = assets() else { return };
+    let mut sys = SystemConfig::edge_preset("tiny", 24).unwrap();
+    let int4 = dymoe::quant::expert_bytes(
+        sys.paper.d_model,
+        sys.paper.d_ffn,
+        128,
+        Precision::Int4,
+    );
+    sys.hardware.vram_bytes = sys.paper.non_expert_bytes + 32 * 6 * int4;
+    let policy = PolicyConfig {
+        retention: 1.0,
+        prefetch_enabled: true,
+        dyquant_enabled: false,
+        prefetch_depth: 2,
+        ..Default::default()
+    };
+    let mut e = Engine::new(&a, sys, Box::new(DyMoEStrategy::new(policy))).unwrap();
+    let p1: Vec<i32> = (0..10).map(|i| 1 + (i * 3) % 60).collect();
+    let p2: Vec<i32> = (0..8).map(|i| 1 + (i * 7) % 60).collect();
+    let mut s1 = e.begin_session(&p1, 5, None, 0.0).unwrap();
+    let mut s2 = e.begin_session(&p2, 5, None, 0.0).unwrap();
+    e.prefill_session(&mut s1).unwrap();
+    e.prefill_session(&mut s2).unwrap();
+    loop {
+        let dones = e.decode_batch(&mut [&mut s1, &mut s2]).unwrap();
+        let ps = e.prefetch_stats;
+        assert!(ps.balanced(), "batched step unbalanced: {ps:?}");
+        assert_eq!(ps.useful + ps.wasted + e.prefetched_in_flight(), ps.issued);
+        assert_eq!(e.prefetched_in_flight(), 0);
+        if dones.iter().all(|&d| d) {
+            break;
+        }
+    }
+    assert!(e.prefetch_stats.issued > 0, "prefetcher idle under batching");
+}
+
 #[test]
 fn timeline_events_recorded_when_requested() {
     let Some(a) = assets() else { return };

@@ -150,8 +150,21 @@ fn single_session_steps_match_run_exactly() {
 // ---------------------------------------------------------------------
 
 fn fleet_cfg(policy: PolicyKind, max_sessions: usize) -> FleetConfig {
+    fleet_cfg_batched(policy, max_sessions, 1)
+}
+
+fn fleet_cfg_batched(
+    policy: PolicyKind,
+    max_sessions: usize,
+    max_decode_batch: usize,
+) -> FleetConfig {
     FleetConfig {
-        serving: ServingConfig { max_sessions, ttft_slo_s: 1e6, tpot_slo_s: 1e6 },
+        serving: ServingConfig {
+            max_sessions,
+            ttft_slo_s: 1e6,
+            tpot_slo_s: 1e6,
+            max_decode_batch,
+        },
         policy,
     }
 }
@@ -205,6 +218,242 @@ fn fleet_completes_all_requests_and_interleaves() {
             }
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// Cross-session batched decode (artifacts-gated)
+// ---------------------------------------------------------------------
+
+/// One fused decode step over two sessions must emit exactly the tokens
+/// (and logits) each session produces when served back-to-back: KV is
+/// private per session, expert outputs are row-independent, and with
+/// ample VRAM at uniform precision the shared fetch cannot change any
+/// execution precision.  Also pins down the dedup accounting.
+#[test]
+fn decode_batch_of_two_matches_serial_numerics() {
+    let Some(a) = assets() else { return };
+    let p1: Vec<i32> = vec![1, 5, 9, 13, 17];
+    let p2: Vec<i32> = vec![1, 30, 41, 52, 33, 44];
+    let new_tokens = 6;
+
+    let mut serial = bf16_engine(&a);
+    let o1 = serial.run(&p1, new_tokens).unwrap();
+    let o2 = serial.run(&p2, new_tokens).unwrap();
+
+    let mut fleet = bf16_engine(&a);
+    let mut s1 = fleet.begin_session(&p1, new_tokens, None, 0.0).unwrap();
+    let mut s2 = fleet.begin_session(&p2, new_tokens, None, 0.0).unwrap();
+    fleet.prefill_session(&mut s1).unwrap();
+    fleet.prefill_session(&mut s2).unwrap();
+    // equal token budgets: both sessions finish on the same fused step
+    loop {
+        let dones = fleet.decode_batch(&mut [&mut s1, &mut s2]).unwrap();
+        assert_eq!(dones.len(), 2);
+        if dones.iter().all(|&d| d) {
+            break;
+        }
+    }
+    // every fused step decoded both sessions
+    assert_eq!(fleet.stats.decode_batches as usize, new_tokens - 1);
+    assert_eq!(fleet.stats.decode_batch_tokens as usize, 2 * (new_tokens - 1));
+    assert!(fleet.stats.routed_pairs >= fleet.stats.unique_expert_loads);
+    let dedup = dymoe::serving::metrics::DedupStats::from_delta(
+        &dymoe::coordinator::engine::EngineStats::default(),
+        &fleet.stats,
+    );
+    assert!((dedup.mean_batch() - 2.0).abs() < 1e-12, "mean batch {}", dedup.mean_batch());
+    assert!(dedup.expert_reuse_ratio() >= 1.0);
+
+    let b1 = s1.into_output();
+    let b2 = s2.into_output();
+    assert_eq!(o1.tokens, b1.tokens, "session 1 tokens diverged under batching");
+    assert_eq!(o2.tokens, b2.tokens, "session 2 tokens diverged under batching");
+    for (serial_out, batch_out) in [(&o1, &b1), (&o2, &b2)] {
+        assert_eq!(serial_out.logits_per_step.len(), batch_out.logits_per_step.len());
+        for (x, y) in serial_out.logits_per_step.iter().zip(&batch_out.logits_per_step) {
+            let max_err = x
+                .iter()
+                .zip(y)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0f32, f32::max);
+            assert!(max_err < 1e-5, "batching changed numerics: {max_err}");
+        }
+    }
+}
+
+/// `run_fleet` with `--max-decode-batch 1` must reproduce the pre-batching
+/// serial interleaved scheduler step for step: an inline replica of that
+/// loop (round-robin decode, prefill-prioritized admission, one
+/// `decode_session` per tick) serves as the reference, and every
+/// completed request must match on TTFT/TPOT/completion time *exactly*
+/// (same engine ops in the same order on the same virtual timeline).
+#[test]
+fn fleet_batch_one_matches_interleaved_reference_loop() {
+    let Some(a) = assets() else { return };
+    let n = 8;
+    let max_sessions = 3;
+    // all requests arrive at t = 0 so admission order is the id order
+    let trace: Vec<dymoe::serving::arrival::TimedRequest> = tiny_trace(&a, n, 50.0)
+        .into_iter()
+        .map(|mut t| {
+            t.arrival = 0.0;
+            t
+        })
+        .collect();
+    let requests: Vec<_> = trace.iter().map(|t| t.request.clone()).collect();
+
+    let mut fleet_engine = bf16_engine(&a);
+    let outcome = run_fleet(
+        &mut fleet_engine,
+        trace,
+        &fleet_cfg_batched(PolicyKind::RoundRobin, max_sessions, 1),
+    )
+    .unwrap();
+    assert_eq!(outcome.metrics.completed, n);
+    // batch 1 is the serial path: every decode step advances one token
+    assert_eq!(outcome.dedup.mean_batch(), 1.0);
+
+    // -- inline PR-1 reference loop ----------------------------------
+    struct InFlight {
+        id: usize,
+        sess: dymoe::coordinator::engine::EngineSession,
+    }
+    let mut reference = bf16_engine(&a);
+    let mut queued: std::collections::VecDeque<(usize, dymoe::workload::Request)> =
+        requests.into_iter().enumerate().collect();
+    let mut active: Vec<InFlight> = Vec::new();
+    let mut cursor: Option<usize> = None;
+    let mut recs: Vec<(usize, dymoe::coordinator::engine::RequestOutput)> = Vec::new();
+    while !queued.is_empty() || !active.is_empty() {
+        // prefill-prioritized admission, oldest first
+        if active.len() < max_sessions && !queued.is_empty() {
+            let (id, r) = queued.pop_front().unwrap();
+            let mut sess = reference.begin_session(&r.prompt, r.max_new, None, 0.0).unwrap();
+            reference.prefill_session(&mut sess).unwrap();
+            if sess.done() {
+                recs.push((id, sess.into_output()));
+            } else {
+                active.push(InFlight { id, sess });
+            }
+            continue;
+        }
+        // round-robin decode over active ids
+        let mut ids: Vec<usize> = active.iter().map(|x| x.id).collect();
+        ids.sort_unstable();
+        let pick = ids.iter().copied().find(|&i| Some(i) > cursor).unwrap_or(ids[0]);
+        cursor = Some(pick);
+        let pos = active.iter().position(|x| x.id == pick).unwrap();
+        let done = reference.decode_session(&mut active[pos].sess).unwrap();
+        if done {
+            let x = active.swap_remove(pos);
+            recs.push((x.id, x.sess.into_output()));
+        }
+    }
+
+    assert_eq!(recs.len(), outcome.per_request.len());
+    for ((ref_id, ref_out), got) in recs.iter().zip(&outcome.per_request) {
+        assert_eq!(*ref_id, got.id, "completion order diverged");
+        assert_eq!(ref_out.tokens.len(), got.tokens);
+        // exact equality: identical engine ops on identical timelines
+        assert_eq!(ref_out.start + ref_out.ttft, got.ttft, "TTFT diverged (id {ref_id})");
+        assert_eq!(ref_out.tpot(), got.tpot, "TPOT diverged (id {ref_id})");
+        let ref_finish = ref_out.start + ref_out.token_times.last().copied().unwrap();
+        assert_eq!(ref_finish, got.finished_at, "completion time diverged (id {ref_id})");
+    }
+}
+
+/// A batched fleet whose sessions never overlap must match the classic
+/// back-to-back `run()` numbers per request: with one active session the
+/// decode batch is a batch of one.
+#[test]
+fn fleet_batched_single_active_session_matches_serial_run() {
+    let Some(a) = assets() else { return };
+    // arrivals 10,000 s apart: every session is guaranteed to run alone
+    let trace: Vec<_> = tiny_trace(&a, 3, 1.0)
+        .into_iter()
+        .enumerate()
+        .map(|(i, mut t)| {
+            t.arrival = (i + 1) as f64 * 10_000.0;
+            t
+        })
+        .collect();
+    let requests: Vec<_> = trace.iter().map(|t| t.request.clone()).collect();
+
+    let mut fleet_engine = bf16_engine(&a);
+    let outcome = run_fleet(
+        &mut fleet_engine,
+        trace,
+        &fleet_cfg_batched(PolicyKind::SloAware, 4, 8),
+    )
+    .unwrap();
+    assert_eq!(outcome.peak_concurrency, 1);
+
+    let mut serial = bf16_engine(&a);
+    for (r, done) in requests.iter().zip(&outcome.per_request) {
+        let o = serial.run(&r.prompt, r.max_new).unwrap();
+        assert!(done.queue_delay.abs() < 1e-9, "queueing with disjoint sessions");
+        assert!((o.ttft - done.ttft).abs() < 1e-9, "batched-knob fleet TTFT diverged");
+        assert!((o.tpot() - done.tpot).abs() < 1e-9, "batched-knob fleet TPOT diverged");
+    }
+}
+
+/// The point of the tentpole: under concurrency, batched decode shares
+/// expert fetches across sessions (reuse ratio above the serial path's
+/// 1.0) and lowers mean TPOT, while completing the same work.
+#[test]
+fn fleet_batched_decode_shares_expert_fetches_and_lowers_tpot() {
+    let Some(a) = assets() else { return };
+    let n = 8;
+    let mk_trace = || tiny_trace(&a, n, 50.0); // dense: queue must build
+
+    let mut serial_engine = bf16_engine(&a);
+    let serial = run_fleet(
+        &mut serial_engine,
+        mk_trace(),
+        &fleet_cfg_batched(PolicyKind::SloAware, 4, 1),
+    )
+    .unwrap();
+    let mut batched_engine = bf16_engine(&a);
+    let batched = run_fleet(
+        &mut batched_engine,
+        mk_trace(),
+        &fleet_cfg_batched(PolicyKind::SloAware, 4, 4),
+    )
+    .unwrap();
+
+    assert_eq!(serial.metrics.completed, n);
+    assert_eq!(batched.metrics.completed, n);
+    // same work per session either way (uniform precision, ample VRAM)
+    let count_by_id = |o: &dymoe::serving::FleetOutcome| {
+        let mut v: Vec<(usize, usize)> = o.per_request.iter().map(|r| (r.id, r.tokens)).collect();
+        v.sort_unstable();
+        v
+    };
+    assert_eq!(count_by_id(&serial), count_by_id(&batched));
+
+    // serial decode: every expert load serves exactly one token
+    assert!((serial.dedup.expert_reuse_ratio() - 1.0).abs() < 1e-12);
+    assert_eq!(serial.dedup.mean_batch(), 1.0);
+    // batched decode: fused steps actually formed, fetches actually shared
+    assert!(
+        batched.dedup.mean_batch() > 1.2,
+        "no decode batches formed (mean {})",
+        batched.dedup.mean_batch()
+    );
+    assert!(
+        batched.dedup.expert_reuse_ratio() > serial.dedup.expert_reuse_ratio() + 0.05,
+        "no cross-session expert sharing: {} vs {}",
+        batched.dedup.expert_reuse_ratio(),
+        serial.dedup.expert_reuse_ratio()
+    );
+    assert!(batched.dedup.saved_fetches() > 0);
+    // and the shared fetches buy latency: mean TPOT drops
+    assert!(
+        batched.metrics.tpot.mean() < serial.metrics.tpot.mean(),
+        "batched TPOT {} not below serial {}",
+        batched.metrics.tpot.mean(),
+        serial.metrics.tpot.mean()
+    );
 }
 
 /// At a vanishing arrival rate every session runs alone, so the fleet

@@ -231,6 +231,256 @@ fn prop_importance_heavy_hitter_counts() {
     });
 }
 
+/// Quantization round-trip: for every stored precision and several group
+/// sizes, group-wise RTN keeps each weight within half a quantization
+/// step of the original (the documented per-precision bound), values sit
+/// in the signed symmetric range, and the packed representation is
+/// bit-lossless.
+#[test]
+fn prop_quant_roundtrip_bound_all_stored_precisions() {
+    use dymoe::quant::{
+        dequantize_groupwise, pack_words, quant_range, quantize_groupwise, unpack_words,
+    };
+    check("quant-roundtrip-stored", 80, |rng| {
+        let prec = Precision::ALL_STORED[rng.below(Precision::ALL_STORED.len())];
+        let bits = prec.bits();
+        let vpw = (32 / bits) as usize;
+        // group sizes are multiples of 16, so every group also packs into
+        // whole u32 words (vpw in {2, 4, 8, 16} divides 16)
+        let group = [16usize, 32, 64][rng.below(3)];
+        let k = group * rng.range(1, 4);
+        let n = rng.range(1, 4);
+        let amp = 0.1 + rng.f64() * 4.0;
+        let w: Vec<f32> = (0..k * n)
+            .map(|_| ((rng.f64() * 2.0 - 1.0) * amp) as f32)
+            .collect();
+
+        let (q, s) = quantize_groupwise(&w, k, n, bits, group);
+        let (lo, hi) = quant_range(bits);
+        assert!(q.iter().all(|&v| (lo..=hi).contains(&v)), "{prec:?} out of range");
+
+        // documented bound: |w - deq(q)| <= scale / 2 per group/column
+        let back = dequantize_groupwise(&q, &s, k, n, group);
+        for r in 0..k {
+            for c in 0..n {
+                let err = (back[r * n + c] - w[r * n + c]).abs();
+                let scale = s[(r / group) * n + c];
+                assert!(
+                    err <= 0.5 * scale + 1e-5,
+                    "{prec:?} group {group}: err {err} > scale/2 {scale}"
+                );
+            }
+        }
+
+        // pack/unpack is lossless
+        let words = pack_words(&q, k, n, bits);
+        assert_eq!(words.len(), k / vpw * n);
+        assert_eq!(unpack_words(&words, k / vpw, n, bits), q, "{prec:?} pack loss");
+    });
+}
+
+/// Scheduler liveness and accounting, engine-free: drive every policy
+/// (with random decode-batch limits) over random seeded arrival traces
+/// through a model of the `run_fleet` loop with synthetic service times.
+/// Every admitted session must complete within a bounded number of
+/// ticks (no starvation), every action must be legal, and the resulting
+/// fleet goodput can never exceed the offered load.
+#[test]
+fn prop_scheduler_no_starvation_and_goodput_bounded() {
+    use dymoe::coordinator::engine::RequestOutput;
+    use dymoe::serving::metrics::{FleetMetrics, SloTargets};
+    use dymoe::serving::policy::{Action, ActiveInfo, PolicyKind, QueuedInfo, SchedView};
+
+    struct Sim {
+        id: usize,
+        arrival: f64,
+        start: f64,
+        ttft: f64,
+        target: usize,
+        token_times: Vec<f64>,
+        last_token_at: f64,
+    }
+
+    check("fleet-scheduler", 60, |rng| {
+        let n = rng.range(1, 20);
+        let policy_kind = PolicyKind::ALL[rng.below(PolicyKind::ALL.len())];
+        let max_sessions = rng.range(1, 6);
+        let max_batch = rng.range(1, 6);
+        let slo = SloTargets { ttft_s: 0.2 + rng.f64(), tpot_s: 0.02 + rng.f64() * 0.2 };
+
+        // random open-loop trace (strictly increasing arrivals)
+        let mut t = 0.0;
+        let trace: Vec<(usize, f64, usize)> = (0..n)
+            .map(|id| {
+                t += rng.exponential(0.5 + rng.f64() * 4.0);
+                (id, t, rng.range(1, 8))
+            })
+            .collect();
+        let total_tokens: usize = trace.iter().map(|&(_, _, tok)| tok).sum();
+
+        let mut policy = policy_kind.build();
+        let mut metrics = FleetMetrics::default();
+        let mut next_pending = 0usize;
+        let mut queued: Vec<(usize, f64, f64, usize)> = Vec::new(); // id, arrival, deadline, target
+        let mut active: Vec<Sim> = Vec::new();
+        let mut clock = 0.0f64;
+        let mut ticks = 0usize;
+        let tick_budget = 4 * (n + total_tokens) + 64;
+
+        loop {
+            ticks += 1;
+            assert!(
+                ticks <= tick_budget,
+                "{} starved: {} of {n} done after {ticks} ticks",
+                policy_kind.name(),
+                metrics.completed
+            );
+            while next_pending < n && trace[next_pending].1 <= clock {
+                let (id, arr, tok) = trace[next_pending];
+                queued.push((id, arr, arr + slo.ttft_s, tok));
+                next_pending += 1;
+            }
+            if queued.is_empty() && active.is_empty() {
+                if next_pending < n {
+                    let (id, arr, tok) = trace[next_pending];
+                    queued.push((id, arr, arr + slo.ttft_s, tok));
+                    next_pending += 1;
+                    clock = clock.max(arr);
+                    continue;
+                }
+                break;
+            }
+
+            let queued_info: Vec<QueuedInfo> = queued
+                .iter()
+                .map(|&(id, arrival, deadline, _)| QueuedInfo { id, arrival, deadline })
+                .collect();
+            let active_info: Vec<ActiveInfo> = active
+                .iter()
+                .map(|s| ActiveInfo {
+                    id: s.id,
+                    arrival: s.arrival,
+                    emitted: s.token_times.len(),
+                    target: s.target,
+                    last_token_at: s.last_token_at,
+                })
+                .collect();
+            let free_slots = max_sessions.saturating_sub(active.len());
+            let view = SchedView {
+                now: clock,
+                queued: &queued_info,
+                active: &active_info,
+                free_slots,
+            };
+            let mut action = policy.next_action(&view);
+            if action == Action::Idle {
+                // the run_fleet work-conserving fallback
+                action = if free_slots > 0 && !queued.is_empty() {
+                    Action::Admit(queued[0].0)
+                } else if let Some(s) = active.first() {
+                    Action::Decode(s.id)
+                } else {
+                    panic!("policy idle with {} queued and no slots", queued.len());
+                };
+            }
+            match action {
+                Action::Admit(id) => {
+                    assert!(free_slots > 0, "{} admitted with no free slot", policy_kind.name());
+                    let pos = queued
+                        .iter()
+                        .position(|q| q.0 == id)
+                        .unwrap_or_else(|| panic!("admitted unknown session {id}"));
+                    let (id, arrival, _, target) = queued.swap_remove(pos);
+                    let start = clock.max(arrival);
+                    let svc = 0.05 + rng.f64() * 0.1; // synthetic prefill
+                    clock = start + svc;
+                    let sim = Sim {
+                        id,
+                        arrival,
+                        start,
+                        ttft: clock - start,
+                        target,
+                        token_times: vec![clock - start],
+                        last_token_at: clock,
+                    };
+                    if sim.target <= 1 {
+                        finish(&mut metrics, &sim, slo);
+                    } else {
+                        active.push(sim);
+                    }
+                }
+                Action::Decode(id) => {
+                    let batch_ids = if max_batch > 1 && active.len() > 1 {
+                        policy.decode_batch(&view, id, max_batch)
+                    } else {
+                        vec![id]
+                    };
+                    assert!(!batch_ids.is_empty(), "empty decode batch");
+                    assert!(batch_ids.len() <= max_batch.max(1), "batch over limit");
+                    assert!(batch_ids.contains(&id), "policy dropped its own pick");
+                    let mut seen = std::collections::HashSet::new();
+                    for bid in &batch_ids {
+                        assert!(seen.insert(*bid), "duplicate {bid} in batch");
+                        assert!(
+                            active.iter().any(|s| s.id == *bid),
+                            "batched inactive session {bid}"
+                        );
+                    }
+                    // synthetic fused step: sublinear in batch size
+                    clock += 0.01 + 0.004 * batch_ids.len() as f64;
+                    let mut finished: Vec<usize> = Vec::new();
+                    for s in active.iter_mut().filter(|s| batch_ids.contains(&s.id)) {
+                        s.token_times.push(clock - s.start);
+                        s.last_token_at = clock;
+                        if s.token_times.len() >= s.target {
+                            finished.push(s.id);
+                        }
+                    }
+                    for fid in finished {
+                        let pos = active.iter().position(|s| s.id == fid).unwrap();
+                        let s = active.swap_remove(pos);
+                        finish(&mut metrics, &s, slo);
+                    }
+                }
+                Action::Idle => unreachable!(),
+            }
+        }
+
+        // liveness: every admitted session completed, with all its tokens
+        assert_eq!(metrics.completed, n, "{} lost sessions", policy_kind.name());
+        assert_eq!(metrics.tokens_total, total_tokens, "token accounting");
+        // goodput can never exceed offered load
+        if n >= 2 {
+            let span = trace[n - 1].1 - trace[0].1;
+            if span > 0.0 {
+                let offered = n as f64 / span;
+                assert!(
+                    metrics.goodput_rps() <= offered + 1e-9,
+                    "{}: goodput {} above offered {offered}",
+                    policy_kind.name(),
+                    metrics.goodput_rps()
+                );
+            }
+        }
+    });
+
+    fn finish(
+        metrics: &mut dymoe::serving::metrics::FleetMetrics,
+        s: &Sim,
+        slo: dymoe::serving::metrics::SloTargets,
+    ) {
+        let out = RequestOutput {
+            tokens: vec![0; s.token_times.len()],
+            ttft: s.ttft,
+            token_times: s.token_times.clone(),
+            logits_per_step: Vec::new(),
+            prefill_hidden: Vec::new(),
+            start: s.start,
+        };
+        metrics.record(s.id, s.arrival, &out, slo);
+    }
+}
+
 #[test]
 fn prop_prefетch_predictions_are_valid_experts() {
     check("prefetch", 150, |rng| {
