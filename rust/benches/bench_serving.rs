@@ -2,14 +2,17 @@
 //! fleet's tail latency (p99 TTFT measured from arrival, queueing
 //! included), mean TPOT, goodput, SLO attainment, and cross-session
 //! expert-reuse — for each scheduling policy, serial interleaved decode
-//! (`max_decode_batch = 1`) versus cross-session batched decode.  This
+//! (`max_decode_batch = 1`) versus cross-session batched decode, and
+//! monolithic prefill (`chunk_tokens = 0`) versus chunked prefill.  This
 //! is the classic serving-paper "rate vs p99" curve, produced on the
 //! co-simulated virtual timeline (deterministic under the fixed seed).
 //!
 //! `--json` runs a small fixed smoke configuration instead and writes
 //! `BENCH_serving.json` (p50/p99 TTFT/TPOT, expert dedup ratio per
-//! decode-batch setting) so CI can track the perf trajectory in a
-//! machine-readable form.
+//! decode-batch setting, plus a chunked-vs-monolithic long-prompt
+//! head-of-line sweep: p99 TPOT, worst inter-token stall, chunk and
+//! mixed-tick counts per `chunk_tokens` setting) so CI can track the
+//! perf trajectory in a machine-readable form.
 //!
 //! Skips politely if `make artifacts` has not been run.
 
@@ -21,11 +24,11 @@ use dymoe::config::{PolicyConfig, ServingConfig, SystemConfig};
 use dymoe::coordinator::engine::Engine;
 use dymoe::coordinator::strategy::DyMoEStrategy;
 use dymoe::model::assets::ModelAssets;
-use dymoe::serving::arrival::{ArrivalGen, ArrivalProcess};
+use dymoe::serving::arrival::{ArrivalGen, ArrivalProcess, TimedRequest};
 use dymoe::serving::policy::PolicyKind;
 use dymoe::serving::{run_fleet, FleetConfig, FleetOutcome};
 use dymoe::util::json::Json;
-use dymoe::workload::TraceGen;
+use dymoe::workload::{Request, TraceGen};
 
 const OUT_PATH: &str = "BENCH_serving.json";
 
@@ -35,6 +38,7 @@ fn run_point(
     rate: f64,
     policy: PolicyKind,
     max_decode_batch: usize,
+    chunk_tokens: usize,
     requests: usize,
 ) -> anyhow::Result<FleetOutcome> {
     let m = assets.manifest.model.clone();
@@ -50,8 +54,57 @@ fn run_point(
         requests,
     )?;
     let cfg = FleetConfig {
-        serving: ServingConfig { max_sessions: 8, max_decode_batch, ..Default::default() },
+        serving: ServingConfig {
+            max_sessions: 8,
+            max_decode_batch,
+            chunk_tokens,
+            ..Default::default()
+        },
         policy,
+    };
+    run_fleet(&mut engine, trace, &cfg)
+}
+
+/// The head-of-line scenario: short-prompt decoders plus one long
+/// prompt (the whole `max_seq` bucket), all arriving at t = 0, run
+/// chunked vs monolithic on fresh engines.
+fn run_hol_point(
+    assets: &Arc<ModelAssets>,
+    chunk_tokens: usize,
+) -> anyhow::Result<FleetOutcome> {
+    let m = assets.manifest.model.clone();
+    let sys = SystemConfig::edge_preset("mixtral-mini", 16)?;
+    let strat = Box::new(DyMoEStrategy::new(PolicyConfig::default()));
+    let mut engine = Engine::new(assets, sys, strat)?;
+    let n_short = 4usize;
+    let short_new = (m.max_cache - m.max_seq).clamp(1, 8);
+    let long_new = (m.max_cache - m.max_seq).clamp(1, 2);
+    let mut trace: Vec<TimedRequest> = (0..n_short)
+        .map(|i| TimedRequest {
+            id: i,
+            arrival: 0.0,
+            request: Request {
+                prompt: vec![1, 10 + (3 * i as i32) % 40],
+                max_new: short_new,
+            },
+        })
+        .collect();
+    trace.push(TimedRequest {
+        id: n_short,
+        arrival: 0.0,
+        request: Request {
+            prompt: (0..m.max_seq).map(|i| 1 + (i as i32 * 7) % 60).collect(),
+            max_new: long_new,
+        },
+    });
+    let cfg = FleetConfig {
+        serving: ServingConfig {
+            max_sessions: n_short + 1,
+            max_decode_batch: n_short,
+            chunk_tokens,
+            ..Default::default()
+        },
+        policy: PolicyKind::SloAware,
     };
     run_fleet(&mut engine, trace, &cfg)
 }
@@ -67,7 +120,7 @@ fn smoke_json(assets: &Arc<ModelAssets>) -> anyhow::Result<Json> {
     let rate = 0.4;
     let mut points = Vec::new();
     for &batch in &[1usize, 8] {
-        let o = run_point(assets, rate, PolicyKind::SloAware, batch, requests)?;
+        let o = run_point(assets, rate, PolicyKind::SloAware, batch, 0, requests)?;
         let mut p = BTreeMap::new();
         p.insert("max_decode_batch".to_string(), num(batch as f64));
         p.insert("ttft_p50_s".to_string(), num(o.metrics.ttft.percentile(50.0)));
@@ -88,6 +141,31 @@ fn smoke_json(assets: &Arc<ModelAssets>) -> anyhow::Result<Json> {
         );
         points.push(Json::Obj(p));
     }
+    // Chunked-vs-monolithic long-prompt sweep (the head-of-line
+    // scenario): 0 = monolithic prefill, then two chunk budgets.
+    let mut hol_points = Vec::new();
+    for &chunk in &[0usize, 4, 8] {
+        let o = run_hol_point(assets, chunk)?;
+        let mut p = BTreeMap::new();
+        p.insert("chunk_tokens".to_string(), num(chunk as f64));
+        p.insert("ttft_p99_s".to_string(), num(o.metrics.ttft.percentile(99.0)));
+        p.insert("tpot_p99_s".to_string(), num(o.metrics.tpot.percentile(99.0)));
+        p.insert("tpot_mean_s".to_string(), num(o.metrics.tpot.mean()));
+        p.insert("stall_max_s".to_string(), num(o.metrics.stall.max()));
+        p.insert("stall_p99_s".to_string(), num(o.metrics.stall.percentile(99.0)));
+        p.insert(
+            "queue_delay_mean_s".to_string(),
+            num(o.metrics.queue_delay.mean()),
+        );
+        p.insert(
+            "prefill_time_mean_s".to_string(),
+            num(o.metrics.prefill_time.mean()),
+        );
+        p.insert("prefill_chunks".to_string(), num(o.phase.prefill_chunks as f64));
+        p.insert("mean_chunk_tokens".to_string(), num(o.phase.mean_chunk()));
+        p.insert("mixed_ticks".to_string(), num(o.phase.mixed_steps as f64));
+        hol_points.push(Json::Obj(p));
+    }
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("serving".to_string()));
     root.insert("model".to_string(), Json::Str("mixtral-mini".to_string()));
@@ -96,6 +174,7 @@ fn smoke_json(assets: &Arc<ModelAssets>) -> anyhow::Result<Json> {
     root.insert("rate_rps".to_string(), num(rate));
     root.insert("skipped".to_string(), Json::Bool(false));
     root.insert("points".to_string(), Json::Arr(points));
+    root.insert("hol_long_prompt_sweep".to_string(), Json::Arr(hol_points));
     Ok(Json::Obj(root))
 }
 
@@ -126,43 +205,70 @@ fn main() -> anyhow::Result<()> {
     let requests = 16;
     let rates = [0.05, 0.1, 0.2, 0.4, 0.8];
     let batches = [1usize, 8];
+    let chunks = [0usize, 8];
     println!(
         "### bench: fleet serving (mixtral-mini, 16 GB, {requests} requests/point, \
-         Poisson arrivals; decode batch 1 = serial interleaved)"
+         Poisson arrivals; decode batch 1 = serial interleaved, chunk 0 = \
+         monolithic prefill)"
     );
     println!(
-        "{:<8} {:<6} {:>6} {:>12} {:>12} {:>12} {:>12} {:>8} {:>8} {:>10}",
+        "{:<8} {:<6} {:>6} {:>6} {:>12} {:>12} {:>12} {:>12} {:>12} {:>8} {:>8} {:>10}",
         "rate",
         "sched",
         "batch",
+        "chunk",
         "TTFT p50",
         "TTFT p99",
         "TPOT mean",
+        "stall max",
         "goodput r/s",
         "SLO %",
         "reuse",
         "wall (s)"
     );
-    println!("{}", "-".repeat(102));
+    println!("{}", "-".repeat(129));
     for &rate in &rates {
         for policy in PolicyKind::ALL {
             for &batch in &batches {
-                let wall = Instant::now();
-                let outcome = run_point(&assets, rate, policy, batch, requests)?;
-                println!(
-                    "{rate:<8} {:<6} {batch:>6} {:>12.4} {:>12.4} {:>12.4} {:>12.3} \
-                     {:>7.0}% {:>7.2}x {:>10.2}",
-                    policy.name(),
-                    outcome.metrics.ttft.percentile(50.0),
-                    outcome.metrics.ttft.percentile(99.0),
-                    outcome.metrics.tpot.mean(),
-                    outcome.metrics.goodput_rps(),
-                    outcome.metrics.slo_attainment() * 100.0,
-                    outcome.dedup.expert_reuse_ratio(),
-                    wall.elapsed().as_secs_f64(),
-                );
+                for &chunk in &chunks {
+                    let wall = Instant::now();
+                    let outcome = run_point(&assets, rate, policy, batch, chunk, requests)?;
+                    println!(
+                        "{rate:<8} {:<6} {batch:>6} {chunk:>6} {:>12.4} {:>12.4} {:>12.4} \
+                         {:>12.4} {:>12.3} {:>7.0}% {:>7.2}x {:>10.2}",
+                        policy.name(),
+                        outcome.metrics.ttft.percentile(50.0),
+                        outcome.metrics.ttft.percentile(99.0),
+                        outcome.metrics.tpot.mean(),
+                        outcome.metrics.stall.max(),
+                        outcome.metrics.goodput_rps(),
+                        outcome.metrics.slo_attainment() * 100.0,
+                        outcome.dedup.expert_reuse_ratio(),
+                        wall.elapsed().as_secs_f64(),
+                    );
+                }
             }
         }
+    }
+    println!();
+    println!(
+        "### head-of-line long-prompt sweep (slo policy, 4 short decoders + 1 \
+         max_seq prompt at t=0)"
+    );
+    println!(
+        "{:<8} {:>12} {:>12} {:>12} {:>8} {:>8}",
+        "chunk", "TPOT p99", "stall max", "TTFT p99", "chunks", "mixed"
+    );
+    for &chunk in &[0usize, 2, 4, 8] {
+        let o = run_hol_point(&assets, chunk)?;
+        println!(
+            "{chunk:<8} {:>12.4} {:>12.4} {:>12.4} {:>8} {:>8}",
+            o.metrics.tpot.percentile(99.0),
+            o.metrics.stall.max(),
+            o.metrics.ttft.percentile(99.0),
+            o.phase.prefill_chunks,
+            o.phase.mixed_steps,
+        );
     }
     Ok(())
 }

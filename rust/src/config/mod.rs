@@ -207,6 +207,16 @@ pub struct ServingConfig {
     /// behaviour; the `serve-fleet` CLI defaults to batching up to
     /// `max_sessions`.
     pub max_decode_batch: usize,
+    /// Per-tick prefill token budget for **chunked prefill**.  0 (the
+    /// default) keeps monolithic prefill: each admitted session's whole
+    /// prompt runs as one scheduling step, reproducing the pre-chunking
+    /// fleet path step for step.  With a positive budget the scheduler
+    /// runs token-budget continuous batching: every virtual tick fuses
+    /// up to `chunk_tokens` prompt tokens of one prefilling session
+    /// with up to `max_decode_batch` decode tokens in a single
+    /// per-layer engine pass, bounding how long a long prompt can stall
+    /// concurrent decoders (head-of-line blocking).
+    pub chunk_tokens: usize,
 }
 
 impl Default for ServingConfig {
@@ -218,6 +228,7 @@ impl Default for ServingConfig {
             ttft_slo_s: 5.0,
             tpot_slo_s: 0.5,
             max_decode_batch: 1,
+            chunk_tokens: 0,
         }
     }
 }

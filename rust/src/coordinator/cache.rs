@@ -19,15 +19,42 @@ use crate::memory::VramBudget;
 use crate::model::assets::ExpertKey;
 use crate::quant::Precision;
 
+/// Who is holding a pin on a cache entry.  With chunked prefill the
+/// engine fuses prefill chunks and decode tokens into one tick, so the
+/// two pin lifetimes genuinely interleave: warm-residency pins span
+/// whole phases while layer pins last exactly one fused layer.  Keeping
+/// the classes separate means releasing one can never drop the other —
+/// the bug a single boolean pin had under mixed ticks (a layer unpin at
+/// the end of `execute_experts` would silently clear a warm-residency
+/// pin taken by the prefill phase, and `unpin_all` nuked both).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PinClass {
+    /// Phase-scoped warm-residency pin (scan-resistant prefix held
+    /// across the prefill layer sweep).
+    Warm,
+    /// Layer-scoped working-set pin (the experts executing right now).
+    Layer,
+}
+
+impl PinClass {
+    fn bit(self) -> u8 {
+        match self {
+            PinClass::Warm => 1,
+            PinClass::Layer => 2,
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 struct Entry {
     prec: Precision,
     bytes: u64,
     ready_at: f64,
     last_use: u64,
-    /// Entries belonging to the layer currently executing are pinned so a
-    /// burst of prefetch inserts cannot evict weights mid-use.
-    pinned: bool,
+    /// Bitmask of [`PinClass`] holders; a non-zero mask blocks eviction
+    /// (layer pins keep the executing working set resident, warm pins
+    /// keep the scan-resistant prefix through prefill phases).
+    pins: u8,
     /// Segment level for the scan-resistant (SLRU) mode: 0 = probation
     /// (fresh inserts), 1 = protected (re-referenced).  Victims are chosen
     /// by (segment asc, last_use asc), so a one-shot layer scan (prefill)
@@ -203,21 +230,38 @@ impl MixedPrecisionCache {
         }
     }
 
-    /// Pin / unpin an expert (current layer's working set or permanent
-    /// warm residency).
-    pub fn set_pinned(&mut self, key: ExpertKey, pinned: bool) {
+    /// Pin / unpin an expert for one [`PinClass`].  Classes are
+    /// independent: releasing a layer pin never drops a warm pin on the
+    /// same entry (and vice versa), which is what keeps pin lifetimes
+    /// correct when prefill chunks and decode tokens share one tick.
+    pub fn set_pinned(&mut self, key: ExpertKey, class: PinClass, pinned: bool) {
         if let Some(e) = self.map.get_mut(&key) {
-            e.pinned = pinned;
+            if pinned {
+                e.pins |= class.bit();
+            } else {
+                e.pins &= !class.bit();
+            }
         }
     }
 
+    /// Pinned by *any* class (eviction-blocking view).
     pub fn is_pinned(&self, key: ExpertKey) -> bool {
-        self.map.get(&key).map(|e| e.pinned).unwrap_or(false)
+        self.map.get(&key).map(|e| e.pins != 0).unwrap_or(false)
     }
 
-    pub fn unpin_all(&mut self) {
+    /// Pinned by this specific class.
+    pub fn is_pinned_class(&self, key: ExpertKey, class: PinClass) -> bool {
+        self.map
+            .get(&key)
+            .map(|e| e.pins & class.bit() != 0)
+            .unwrap_or(false)
+    }
+
+    /// Release every pin of one class, leaving the other class's pins
+    /// (and hence their eviction protection) untouched.
+    pub fn unpin_all(&mut self, class: PinClass) {
         for e in self.map.values_mut() {
-            e.pinned = false;
+            e.pins &= !class.bit();
         }
     }
 
@@ -247,7 +291,7 @@ impl MixedPrecisionCache {
         let reclaimable: u64 = self
             .map
             .iter()
-            .filter(|(k, e)| !e.pinned && **k != key)
+            .filter(|(k, e)| e.pins == 0 && **k != key)
             .map(|(_, e)| e.bytes)
             .sum();
         if bytes > self.budget.free() + replaced + reclaimable {
@@ -269,7 +313,7 @@ impl MixedPrecisionCache {
         // Fresh inserts land in the probation segment (0).
         self.map.insert(
             key,
-            Entry { prec, bytes, ready_at, last_use: tick, pinned: false, segment: 0 },
+            Entry { prec, bytes, ready_at, last_use: tick, pins: 0, segment: 0 },
         );
         Some(evicted)
     }
@@ -286,7 +330,7 @@ impl MixedPrecisionCache {
     fn lru_victim(&self) -> Option<ExpertKey> {
         self.map
             .iter()
-            .filter(|(_, e)| !e.pinned)
+            .filter(|(_, e)| e.pins == 0)
             .min_by_key(|(k, e)| (e.segment, e.last_use, k.layer, k.expert))
             .map(|(k, _)| *k)
     }
@@ -372,12 +416,46 @@ mod tests {
         let mut c = MixedPrecisionCache::new(80);
         c.insert(k(0, 0), Precision::Int4, 40, 0.0).unwrap();
         c.insert(k(0, 1), Precision::Int4, 40, 0.0).unwrap();
-        c.set_pinned(k(0, 0), true);
-        c.set_pinned(k(0, 1), true);
+        c.set_pinned(k(0, 0), PinClass::Layer, true);
+        c.set_pinned(k(0, 1), PinClass::Layer, true);
         // nothing evictable -> transient use
         assert!(c.insert(k(0, 2), Precision::Int4, 40, 0.0).is_none());
-        c.unpin_all();
+        c.unpin_all(PinClass::Layer);
         assert!(c.insert(k(0, 2), Precision::Int4, 40, 0.0).is_some());
+    }
+
+    /// Pin lifetime across mixed (fused prefill-chunk + decode) ticks:
+    /// the layer-scoped pin taken while an expert executes must not
+    /// drop the warm-residency pin the prefill phase holds on the same
+    /// entry, and releasing one class must leave the other's eviction
+    /// protection intact.
+    #[test]
+    fn pin_classes_are_independent_across_mixed_ticks() {
+        let mut c = MixedPrecisionCache::new(80);
+        c.insert(k(0, 0), Precision::Int4, 40, 0.0).unwrap();
+        c.insert(k(0, 1), Precision::Int4, 40, 0.0).unwrap();
+        // prefill phase pins the warm resident ...
+        c.set_pinned(k(0, 0), PinClass::Warm, true);
+        // ... and a fused layer transiently pins the same expert while
+        // decode tokens route to it.
+        c.set_pinned(k(0, 0), PinClass::Layer, true);
+        assert!(c.is_pinned_class(k(0, 0), PinClass::Warm));
+        assert!(c.is_pinned_class(k(0, 0), PinClass::Layer));
+        // layer release at the end of the fused layer: the warm pin from
+        // the other phase survives and the entry still cannot be evicted.
+        c.set_pinned(k(0, 0), PinClass::Layer, false);
+        assert!(c.is_pinned_class(k(0, 0), PinClass::Warm));
+        assert!(c.is_pinned(k(0, 0)));
+        let ev = c.insert(k(1, 0), Precision::Int4, 40, 0.0).unwrap();
+        assert_eq!(ev, vec![k(0, 1)], "warm pin must deflect eviction");
+        // unpin_all of the layer class must not leak into warm pins ...
+        c.unpin_all(PinClass::Layer);
+        assert!(c.is_pinned_class(k(0, 0), PinClass::Warm));
+        // ... and releasing the warm phase finally frees the entry.
+        c.unpin_all(PinClass::Warm);
+        assert!(!c.is_pinned(k(0, 0)));
+        let ev = c.insert(k(1, 1), Precision::Int4, 40, 0.0).unwrap();
+        assert!(!ev.is_empty());
     }
 
     #[test]
@@ -443,9 +521,9 @@ mod slru_tests {
     fn failed_insert_leaves_cache_unchanged() {
         let mut c = MixedPrecisionCache::new(60);
         c.insert(k(0, 0), Precision::Int2, 20, 0.0).unwrap();
-        c.set_pinned(k(0, 0), true);
+        c.set_pinned(k(0, 0), PinClass::Warm, true);
         c.insert(k(0, 1), Precision::Int2, 20, 0.0).unwrap();
-        c.set_pinned(k(0, 1), true);
+        c.set_pinned(k(0, 1), PinClass::Layer, true);
         // promotion replace that cannot fit: everything pinned
         assert!(c.insert(k(0, 0), Precision::Bf16, 55, 0.0).is_none());
         // the old copy must still be there

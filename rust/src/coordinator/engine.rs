@@ -9,13 +9,25 @@
 //! steps and *batched* decode steps of many in-flight sessions on the
 //! one device (the multi-session serving layer in [`crate::serving`]
 //! does exactly that; sessions then contend for the shared
-//! mixed-precision cache and PCIe channel).  A decode batch runs one
-//! fused step per layer: routing is computed per token, the union of
+//! mixed-precision cache and PCIe channel).
+//!
+//! The unit of scheduling is the fused **mixed step**
+//! ([`Engine::mixed_step`]): one tick may carry a resumable *prefill
+//! chunk* of one session ([`Engine::prefill_chunk`]; cursor plus a
+//! per-layer hidden-state carry live on [`EngineSession`]) **and** a
+//! cross-session decode batch, executed as one pass per layer.
+//! Routing is computed per token across both phases, the union of
 //! routed experts is materialized **once** (cache hit, prefetch, or
-//! load at the precision chosen by batch-aggregated importance), and
-//! the cost model charges a batched roofline — one weight-fetch term
-//! per expert plus per-token compute — instead of per-session costs.
-//! [`Engine::decode_session`] is a decode batch of one, and
+//! load at the precision chosen by gate mass aggregated across chunk
+//! *and* decode tokens — [`importance::mixed_gate_mass`]), the cost
+//! model charges a single batched roofline per layer
+//! ([`crate::costmodel::CostModel::attn_mixed`]: one attention weight
+//! read plus per-token compute and KV reads), and Eq.-6 look-ahead
+//! probes are issued from the chunk boundary and the decode batch.
+//! The phase-pure paths are exact degenerations: a decode batch is a
+//! mixed step with no chunk ([`Engine::decode_session`] is a decode
+//! batch of one), a chunk spanning the whole prompt reproduces the
+//! monolithic [`Engine::prefill_session`] numerics, and
 //! [`Engine::run`] / [`Engine::run_forced`] are the classic
 //! run-to-completion path implemented on top of the same steps, so
 //! back-to-back serving (batch size 1, the paper's latency-sensitive
@@ -48,7 +60,7 @@ use crate::model::kv::KvCache;
 use crate::model::sampler;
 use crate::quant::Precision;
 
-use super::cache::{Lookup, MixedPrecisionCache};
+use super::cache::{Lookup, MixedPrecisionCache, PinClass};
 use super::prefetcher::{self, PrefetchStats};
 use super::strategy::{LayerCtx, PrefetchCtx, Strategy};
 use super::{importance, top_k_route, Phase, Route};
@@ -100,6 +112,19 @@ impl RequestOutput {
     }
 }
 
+/// Outcome of one fused [`Engine::mixed_step`].
+#[derive(Debug, Clone)]
+pub struct MixedReport {
+    /// Prompt tokens the prefill chunk advanced this tick (0 when the
+    /// step carried no prefill part).
+    pub chunk: usize,
+    /// The prefill session finished its prompt and emitted its first
+    /// token this tick.
+    pub prefill_done: bool,
+    /// Per decode session (input order): has it emitted its last token?
+    pub dones: Vec<bool>,
+}
+
 /// Aggregated engine counters.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct EngineStats {
@@ -120,6 +145,15 @@ pub struct EngineStats {
     /// cross-session dedup win.  Ratio/savings views over these counters
     /// live in [`crate::serving::metrics::DedupStats`].
     pub unique_expert_loads: u64,
+    /// Prefill chunks executed through [`Engine::mixed_step`] (the
+    /// monolithic [`Engine::prefill_session`] path does not count).
+    pub prefill_chunks: u64,
+    /// Prompt tokens those chunks advanced (sums to the prompt length
+    /// per chunk-prefilled session — token conservation).
+    pub prefill_chunk_tokens: u64,
+    /// Mixed steps that fused a prefill chunk with a decode batch in
+    /// one per-layer pass.
+    pub mixed_steps: u64,
 }
 
 struct ExpertExec {
@@ -171,6 +205,16 @@ pub struct EngineSession {
     /// Last emitted token (decode input).
     token: i32,
     emitted: usize,
+    /// Chunked-prefill cursor: prompt tokens whose layer sweep has run.
+    /// Stays 0 on the monolithic [`Engine::prefill_session`] path.
+    cursor: usize,
+    /// Per-layer hidden-state carry for resumable chunked prefill:
+    /// `carry[l]` holds the layer-`l` *input* hidden states over the
+    /// padded `[max_seq, d]` buffer (`carry[0]` = token embeddings,
+    /// `carry[n_layers]` = final hidden states), valid for positions
+    /// `0..cursor`.  Allocated on the first chunk and dropped the
+    /// moment prefill completes.
+    carry: Vec<Vec<f32>>,
     /// Virtual arrival time; service never starts earlier.
     pub arrival: f64,
     pub out: RequestOutput,
@@ -201,9 +245,34 @@ impl EngineSession {
         self.emitted > 0
     }
 
+    /// Prompt tokens already processed by chunked prefill (0 before the
+    /// first chunk and on the monolithic path).
+    pub fn prefill_cursor(&self) -> usize {
+        self.cursor
+    }
+
+    /// Prompt tokens still to prefill; 0 once the first token exists.
+    /// Strictly decreases with every chunk the scheduler grants this
+    /// session (the no-starvation property the token-budget scheduler
+    /// tests pin down).
+    pub fn prefill_remaining(&self) -> usize {
+        if self.prefilled() {
+            0
+        } else {
+            self.prompt.len() - self.cursor
+        }
+    }
+
     /// Bytes held by this session's private KV cache.
     pub fn kv_bytes(&self) -> u64 {
         self.kv.bytes()
+    }
+
+    /// Read-only view of the session's private KV cache (diagnostics;
+    /// the chunked-prefill equivalence suite compares cache contents
+    /// against the monolithic path through this).
+    pub fn kv(&self) -> &KvCache {
+        &self.kv
     }
 
     pub fn done(&self) -> bool {
@@ -271,7 +340,7 @@ impl Engine {
                 let pin = cache.used_bytes() + bytes <= pin_budget;
                 cache.insert(key, prec, bytes, 0.0);
                 if pin {
-                    cache.set_pinned(key, true);
+                    cache.set_pinned(key, PinClass::Warm, true);
                     warm_pinned.push(key);
                 }
             }
@@ -356,17 +425,21 @@ impl Engine {
         match phase {
             // Phase-adaptive pinning: re-pin whatever of the warm resident
             // set survived earlier decode phases (evicted entries re-stream
-            // on demand and re-enter the cache unpinned).
+            // on demand and re-enter the cache unpinned).  Warm pins are a
+            // distinct [`PinClass`] so a fused layer's transient working-set
+            // pin can come and go on the same entry without dropping them —
+            // mixed ticks interleave both lifetimes on one cache.
             Phase::Prefill => {
                 for key in self.warm_pinned.clone() {
-                    self.cache.set_pinned(key, true);
+                    self.cache.set_pinned(key, PinClass::Warm, true);
                 }
             }
             // Release the prefill pins: decode's working set is small and
-            // dynamic, so the whole cache becomes LRU slack.
+            // dynamic, so the whole cache becomes LRU slack.  Only the warm
+            // class is released — in-flight layer pins are untouched.
             Phase::Decode => {
                 for key in self.warm_pinned.clone() {
-                    self.cache.set_pinned(key, false);
+                    self.cache.set_pinned(key, PinClass::Warm, false);
                 }
             }
         }
@@ -405,6 +478,8 @@ impl Engine {
             kv: KvCache::new(m.n_layers, m.max_cache, m.n_heads, m.head_dim),
             token: 0,
             emitted: 0,
+            cursor: 0,
+            carry: Vec::new(),
             arrival,
             out: RequestOutput {
                 tokens: Vec::new(),
@@ -418,11 +493,25 @@ impl Engine {
     }
 
     /// Run the session's whole prefill (all layers) and emit its first
-    /// token.  One prefill is one scheduling step: splitting it would not
-    /// overlap anything on this single-device pipeline, while keeping it
-    /// atomic preserves the intra-request prefetch chain.
+    /// token as **one monolithic scheduling step** — the head-of-line
+    /// path a long prompt makes every other session wait behind.  This
+    /// is the `--chunk-tokens 0` behaviour and is kept verbatim so the
+    /// monolithic fleet path stays step-for-step identical; the
+    /// resumable alternative is [`Engine::prefill_chunk`], which
+    /// reproduces these numerics for any chunk size under
+    /// precision-invariant strategies (asserted with uniform Bf16 in
+    /// `tests/integration_chunked_prefill.rs`; under DyMoE's dynamic
+    /// quantization a partial chunk legitimately plans heavy hitters
+    /// over its own tokens, a deliberate scheduling trade-off rather
+    /// than an equivalence) while letting decode steps of other
+    /// sessions fuse between chunks.
     pub fn prefill_session(&mut self, s: &mut EngineSession) -> Result<()> {
         ensure!(!s.prefilled(), "session {} already prefilled", s.id);
+        ensure!(
+            s.cursor == 0,
+            "session {} has a chunked prefill in progress",
+            s.id
+        );
         let m = self.model().clone();
         self.enter_phase(s.id, Phase::Prefill);
         self.stats.requests += 1;
@@ -491,52 +580,221 @@ impl Engine {
     /// gate mass.  A batch of one is step-for-step identical (numerics,
     /// virtual timing, stats) to the classic single-session decode.
     ///
+    /// Implemented as a [`Engine::mixed_step`] with no prefill chunk —
+    /// the phase-pure degeneration is exact (same float operations on
+    /// the same virtual timeline).
+    ///
     /// Returns, per session, whether it has now emitted its last token.
     pub fn decode_batch(&mut self, sessions: &mut [&mut EngineSession]) -> Result<Vec<bool>> {
-        let b = sessions.len();
-        ensure!(b > 0, "empty decode batch");
+        Ok(self.mixed_step(None, sessions)?.dones)
+    }
+
+    /// Advance one session's **resumable chunked prefill** by up to
+    /// `max_tokens` prompt tokens (a [`Engine::mixed_step`] with no
+    /// decode batch).  The cursor strictly advances on every call; when
+    /// the chunk reaches the end of the prompt the first token is
+    /// emitted, exactly as [`Engine::prefill_session`] would have.
+    /// Returns `true` once prefill is complete.
+    pub fn prefill_chunk(&mut self, s: &mut EngineSession, max_tokens: usize) -> Result<bool> {
+        Ok(self.mixed_step(Some((s, max_tokens)), &mut [])?.prefill_done)
+    }
+
+    /// One fused **mixed step**: up to one prefill chunk plus a decode
+    /// batch, executed as a single pass per layer (the unit the
+    /// token-budget continuous scheduler in [`crate::serving`] issues
+    /// every virtual tick).  Per layer:
+    ///
+    /// 1. the chunk's attention runs over its causal window (earlier
+    ///    positions come from the per-layer hidden carry; new K/V rows
+    ///    extend the session's cache) and each decode session attends
+    ///    over its private KV cache — all charged as **one** batched
+    ///    roofline ([`crate::costmodel::CostModel::attn_mixed`]);
+    /// 2. Eq.-6 look-ahead probes are issued from the chunk boundary
+    ///    (prefill prediction over the chunk's rows) and from the
+    ///    aggregated decode probe;
+    /// 3. routing is computed per token across both phases and the
+    ///    union of routed experts is materialized **once**, at
+    ///    precisions chosen from gate mass aggregated over chunk and
+    ///    decode tokens ([`importance::mixed_gate_mass`]).
+    ///
+    /// Phase-pure steps degenerate exactly: no chunk reproduces the
+    /// classic batched decode step for step, and a chunk covering the
+    /// whole prompt with no decode batch reproduces the monolithic
+    /// prefill numerics and virtual costs.  Partial chunks reproduce
+    /// the monolithic numerics under precision-invariant strategies;
+    /// DyMoE's dynamic quantization plans each chunk's heavy hitters
+    /// over that chunk's tokens — a different (chunk-local) operating
+    /// point by design.
+    ///
+    /// Host-side note: the co-simulated numerics re-run the fixed-shape
+    /// prefill artifact over the whole `0..end` prefix each chunk (the
+    /// AOT artifact set has no chunk-query attention kernel), so real
+    /// wall-clock prefill work scales with the number of chunks even
+    /// though [`crate::costmodel::CostModel::attn_mixed`] correctly
+    /// charges chunk-only *virtual* cost.  A chunk-query attention
+    /// artifact over the cached K/V rows would remove that recompute.
+    pub fn mixed_step(
+        &mut self,
+        prefill: Option<(&mut EngineSession, usize)>,
+        decode: &mut [&mut EngineSession],
+    ) -> Result<MixedReport> {
         let m = self.model().clone();
-        ensure!(
-            b <= m.max_seq,
-            "decode batch {b} exceeds the largest expert token bucket {}",
-            m.max_seq
-        );
-        let mut seen = std::collections::HashSet::with_capacity(b);
-        for s in sessions.iter() {
+        let d = m.d_model;
+        let b = decode.len();
+
+        let mut seen = std::collections::HashSet::with_capacity(b + 1);
+        for s in decode.iter() {
             ensure!(s.prefilled(), "decode before prefill (session {})", s.id);
             ensure!(!s.done(), "session {} already finished", s.id);
             ensure!(seen.insert(s.id), "duplicate session {} in decode batch", s.id);
         }
-        // Key the phase context on the smallest session id: a stable
-        // batch keeps its intra-step look-ahead chain even as the
-        // scheduling lead rotates, and a batch of one reduces to the
-        // session's own id (the classic path).
-        let lead = sessions.iter().map(|s| s.id).min().unwrap();
-        self.enter_phase(lead, Phase::Decode);
-        self.stats.decode_batches += 1;
-        self.stats.decode_batch_tokens += b as u64;
-
-        let d = m.d_model;
-        let mut h = vec![0f32; b * d];
-        for (i, s) in sessions.iter().enumerate() {
-            let hd = self.exec.embed_one(s.token)?;
-            h[i * d..(i + 1) * d].copy_from_slice(&hd);
-        }
-        let mut ready = self.timeline.gpu.free_at;
-        for layer in 0..m.n_layers {
-            ready = self
-                .layer_decode_batch(layer, &mut h, sessions, ready)
-                .with_context(|| format!("decode layer {layer} (batch of {b})"))?;
-        }
-        let t_tok = self.timeline.gpu_compute(
-            self.timeline.gpu.free_at,
-            ready,
-            self.cost.head(b, 1.0),
-            "finalize",
+        let mut pre = match prefill {
+            Some((s, max_tokens)) => {
+                ensure!(!s.prefilled(), "session {} already prefilled", s.id);
+                ensure!(
+                    seen.insert(s.id),
+                    "prefill session {} also in the decode batch",
+                    s.id
+                );
+                ensure!(max_tokens > 0, "empty prefill chunk budget");
+                Some((s, max_tokens))
+            }
+            None => {
+                ensure!(b > 0, "empty mixed step");
+                None
+            }
+        };
+        let chunk = pre
+            .as_ref()
+            .map(|(s, max_tokens)| (*max_tokens).min(s.prompt.len() - s.cursor))
+            .unwrap_or(0);
+        ensure!(
+            chunk + b <= m.max_seq,
+            "mixed step of {chunk} chunk + {b} decode tokens exceeds the \
+             largest expert token bucket {}",
+            m.max_seq
         );
+
+        // Phase context: a tick carrying a chunk runs under the prefill
+        // context (the warm scan-resistant prefix stays pinned while any
+        // prompt sweep is in flight, even with decode tokens fused in);
+        // a pure decode tick keys on the smallest session id so a stable
+        // batch keeps its look-ahead chain as the scheduling lead
+        // rotates, and a batch of one reduces to the classic path.
+        match &pre {
+            Some((s, _)) => self.enter_phase(s.id, Phase::Prefill),
+            None => {
+                let lead = decode.iter().map(|s| s.id).min().unwrap();
+                self.enter_phase(lead, Phase::Decode);
+            }
+        }
+        if b > 0 {
+            self.stats.decode_batches += 1;
+            self.stats.decode_batch_tokens += b as u64;
+        }
+        if chunk > 0 {
+            self.stats.prefill_chunks += 1;
+            self.stats.prefill_chunk_tokens += chunk as u64;
+            if b > 0 {
+                self.stats.mixed_steps += 1;
+            }
+        }
+
+        // First chunk: open the request, allocate the per-layer carry,
+        // and embed the padded prompt once (`carry[0]` = layer-0 input).
+        let mut deps = self.timeline.gpu.free_at;
+        if let Some((s, _)) = pre.as_mut() {
+            if s.cursor == 0 {
+                self.stats.requests += 1;
+                s.out.start = self.timeline.gpu.free_at.max(s.arrival);
+                let mut padded = s.prompt.clone();
+                padded.resize(m.max_seq, 0);
+                let emb = self.exec.embed_seq(&padded)?;
+                s.carry = vec![vec![0f32; m.max_seq * d]; m.n_layers + 1];
+                s.carry[0].copy_from_slice(&emb);
+            }
+            deps = deps.max(s.arrival);
+        }
+
+        // Chunk hidden stream (layer-0 input rows of this chunk) and the
+        // decode batch's embedded tokens.
+        let mut h_chunk = pre
+            .as_ref()
+            .map(|(s, _)| s.carry[0][s.cursor * d..(s.cursor + chunk) * d].to_vec())
+            .unwrap_or_default();
+        let mut h_dec = vec![0f32; b * d];
+        for (i, s) in decode.iter().enumerate() {
+            let hd = self.exec.embed_one(s.token)?;
+            h_dec[i * d..(i + 1) * d].copy_from_slice(&hd);
+        }
+
+        let mut ready = deps;
+        for layer in 0..m.n_layers {
+            // (explicit match, not Option::map: the chunk hidden buffer's
+            // reborrow must not be captured by a closure)
+            #[allow(clippy::manual_map)]
+            let pf = match pre.as_mut() {
+                Some((s, _)) => Some((&mut **s, &mut h_chunk)),
+                None => None,
+            };
+            ready = self
+                .layer_mixed(layer, pf, chunk, decode, &mut h_dec, ready)
+                .with_context(|| {
+                    format!("mixed layer {layer} (chunk {chunk} + batch {b})")
+                })?;
+        }
+
+        // Advance the cursor; a chunk reaching the end of the prompt
+        // emits the first token in this very tick.
+        let mut completes = false;
+        if let Some((s, _)) = pre.as_mut() {
+            let end = s.cursor + chunk;
+            s.carry[m.n_layers][s.cursor * d..end * d].copy_from_slice(&h_chunk);
+            s.cursor = end;
+            completes = end == s.prompt.len();
+        }
+        let fin_tokens = b + completes as usize;
+        let t_tok = if fin_tokens > 0 {
+            self.timeline.gpu_compute(
+                self.timeline.gpu.free_at,
+                ready,
+                self.cost.head(fin_tokens, 1.0),
+                "finalize",
+            )
+        } else {
+            ready
+        };
+
+        if completes {
+            let (s, _) = pre.as_mut().unwrap();
+            let seq_len = s.prompt.len();
+            let h_last = &s.carry[m.n_layers][(seq_len - 1) * d..seq_len * d];
+            let logits = self.exec.finalize_one(h_last)?;
+            s.out.ttft = t_tok - s.out.start;
+            s.out.token_times.push(s.out.ttft);
+            let first = s
+                .forced
+                .as_ref()
+                .and_then(|f| f.first().copied())
+                .unwrap_or_else(|| sampler::greedy(&logits) as i32);
+            s.out.tokens.push(first);
+            if self.opts.collect_logits {
+                s.out.logits_per_step.push(logits);
+            }
+            if self.opts.collect_hidden {
+                // `prefill_hidden[l]` = output of layer `l` = input of
+                // layer `l + 1` (valid for the prompt's positions).
+                let outputs = s.carry[1..].iter().cloned();
+                s.out.prefill_hidden.extend(outputs);
+            }
+            s.token = first;
+            s.emitted = 1;
+            s.carry = Vec::new(); // prefill is over; free the carry
+        }
+
         let mut dones = Vec::with_capacity(b);
-        for (i, s) in sessions.iter_mut().enumerate() {
-            let logits = self.exec.finalize_one(&h[i * d..(i + 1) * d])?;
+        for (i, s) in decode.iter_mut().enumerate() {
+            let logits = self.exec.finalize_one(&h_dec[i * d..(i + 1) * d])?;
             let step = s.emitted;
             s.out.token_times.push(t_tok - s.out.start);
             let token = s
@@ -552,7 +810,7 @@ impl Engine {
             s.emitted += 1;
             dones.push(s.done());
         }
-        Ok(dones)
+        Ok(MixedReport { chunk, prefill_done: completes, dones })
     }
 
     // -----------------------------------------------------------------
@@ -627,93 +885,186 @@ impl Engine {
         )
     }
 
-    /// One layer of a batched decode step: per-session attention over
-    /// private KV caches (one fused roofline charge), batch-aggregated
-    /// probe prefetch, per-token routing, and one shared expert-union
-    /// execution.  For a batch of one this is exactly the classic
-    /// single-session decode layer.
-    fn layer_decode_batch(
+    /// One layer of a fused mixed step: the prefill chunk's attention
+    /// over its causal window (hidden carry supplies earlier positions),
+    /// per-decode-session attention over private KV caches, **one**
+    /// batched roofline charge, probe prefetch from the chunk boundary
+    /// and the aggregated decode probe, per-token routing across both
+    /// phases, and one shared expert-union execution.  With no chunk
+    /// this is exactly the classic batched-decode layer; with no decode
+    /// batch and a chunk covering the whole prompt it is exactly the
+    /// monolithic prefill layer.
+    #[allow(clippy::too_many_arguments)]
+    fn layer_mixed(
         &mut self,
         layer: usize,
-        h: &mut Vec<f32>,
-        sessions: &mut [&mut EngineSession],
+        mut prefill: Option<(&mut EngineSession, &mut Vec<f32>)>,
+        chunk: usize,
+        decode: &mut [&mut EngineSession],
+        h_dec: &mut Vec<f32>,
         deps: f64,
     ) -> Result<f64> {
         let m = self.model().clone();
-        let b = sessions.len();
+        let b = decode.len();
         let d = m.d_model;
         let want_probe = self.strategy.wants_probe() && layer + 1 < m.n_layers;
 
-        let mut moe_in = vec![0f32; b * d];
-        let mut h_resid = vec![0f32; b * d];
-        let mut gate_rows = vec![0f32; b * m.n_experts];
-        let mut probe_rows =
+        // ---- prefill chunk: attention over the chunk's causal window --
+        let mut chunk_moe = Vec::new();
+        let mut chunk_resid = Vec::new();
+        let mut chunk_gate = Vec::new();
+        let mut chunk_scores = Vec::new();
+        let mut chunk_probe = Vec::new();
+        let mut prefix_end = 0;
+        if let Some((s, h_chunk)) = prefill.as_mut() {
+            let cursor = s.cursor;
+            let end = cursor + chunk;
+            prefix_end = end;
+            // The chunk rows join the layer's input carry; rows before
+            // `cursor` are already there from earlier chunks, rows past
+            // `end` are zero (the artifact masks beyond `end`).
+            s.carry[layer][cursor * d..end * d].copy_from_slice(&h_chunk[..]);
+            let (po, probe) = if want_probe {
+                let (po, probe) =
+                    self.exec.attn_prefill_probe(layer, layer + 1, &s.carry[layer], end)?;
+                (po, Some(probe))
+            } else {
+                (self.exec.attn_prefill(layer, &s.carry[layer], end)?, None)
+            };
+            s.kv.write_prefix(layer, end, &po.k, &po.v)?;
+            chunk_moe = po.moe_in[cursor * d..end * d].to_vec();
+            chunk_resid = po.h_resid[cursor * d..end * d].to_vec();
+            chunk_gate = po.gate_probs[cursor * m.n_experts..end * m.n_experts].to_vec();
+            chunk_scores = po.token_scores[cursor..end].to_vec();
+            if let Some(pr) = &probe {
+                chunk_probe = prefetcher::chunk_probe_rows(pr, cursor, end, m.n_experts);
+            }
+        }
+
+        // ---- decode batch: per-session attention over private KV ------
+        let mut moe_dec = vec![0f32; b * d];
+        let mut resid_dec = vec![0f32; b * d];
+        let mut gate_dec = vec![0f32; b * m.n_experts];
+        let mut probe_dec =
             if want_probe { vec![0f32; b * m.n_experts] } else { Vec::new() };
         let mut positions = Vec::with_capacity(b);
-        for (i, s) in sessions.iter_mut().enumerate() {
+        for (i, s) in decode.iter_mut().enumerate() {
             let pos = s.prompt.len() + s.emitted - 1;
             positions.push(pos);
-            let hi = &h[i * d..(i + 1) * d];
+            let hi = &h_dec[i * d..(i + 1) * d];
             let dout = if want_probe {
                 let (dout, probe) =
                     self.exec.attn_decode_probe(layer, layer + 1, hi, &s.kv, pos)?;
-                probe_rows[i * m.n_experts..(i + 1) * m.n_experts]
+                probe_dec[i * m.n_experts..(i + 1) * m.n_experts]
                     .copy_from_slice(&probe);
                 dout
             } else {
                 self.exec.attn_decode(layer, hi, &s.kv, pos)?
             };
             s.kv.write_row(layer, pos, &dout.k_new, &dout.v_new)?;
-            moe_in[i * d..(i + 1) * d].copy_from_slice(&dout.moe_in);
-            h_resid[i * d..(i + 1) * d].copy_from_slice(&dout.h_resid);
-            gate_rows[i * m.n_experts..(i + 1) * m.n_experts]
+            moe_dec[i * d..(i + 1) * d].copy_from_slice(&dout.moe_in);
+            resid_dec[i * d..(i + 1) * d].copy_from_slice(&dout.h_resid);
+            gate_dec[i * m.n_experts..(i + 1) * m.n_experts]
                 .copy_from_slice(&dout.gate_probs);
         }
-        let mut attn_cost = self.cost.attn_decode_batch(&positions);
-        if want_probe {
-            attn_cost += self.cost.gate(b);
-        }
-        let t_attn = self.timeline.gpu_compute(
-            self.timeline.gpu.free_at,
-            deps,
-            attn_cost,
-            &format!("attn_d L{layer}"),
-        );
 
-        // Prefetch before this layer's expert compute (maximum overlap);
-        // one decision for the whole batch from the aggregated probe.
+        // One fused roofline for the whole step's attention; the gate
+        // probes (one per phase present) ride on top.
+        let mut attn_cost = self.cost.attn_mixed(chunk, prefix_end, &positions);
         if want_probe {
-            let probe = prefetcher::aggregate_decode_probes(&probe_rows, b, m.n_experts);
+            if chunk > 0 {
+                attn_cost += self.cost.gate(chunk);
+            }
+            if b > 0 {
+                attn_cost += self.cost.gate(b);
+            }
+        }
+        let label = if chunk > 0 && b > 0 {
+            format!("attn_m L{layer}")
+        } else if chunk > 0 {
+            format!("attn_p L{layer}")
+        } else {
+            format!("attn_d L{layer}")
+        };
+        let t_attn =
+            self.timeline.gpu_compute(self.timeline.gpu.free_at, deps, attn_cost, &label);
+
+        // Prefetch before this layer's expert compute (maximum overlap):
+        // Eq.-7 frequency prediction from the chunk boundary, Eq.-8 from
+        // the batch-aggregated decode probe.
+        if want_probe && chunk > 0 {
+            self.issue_prefetch(layer + 1, &chunk_probe, Phase::Prefill, chunk);
+        }
+        if want_probe && b > 0 {
+            let probe = prefetcher::aggregate_decode_probes(&probe_dec, b, m.n_experts);
             self.issue_prefetch(layer + 1, &probe, Phase::Decode, b);
         }
 
-        let routes: Vec<Route> = gate_rows
+        // Per-token routing across both phases (chunk rows first).
+        let mut routes: Vec<Route> = chunk_gate
             .chunks_exact(m.n_experts)
             .map(|row| top_k_route(row, m.top_k))
             .collect();
-        // Dedup accounting: however many sessions route to an expert, it
-        // is materialized once for the whole batch.
-        let pairs: usize = routes.iter().map(|r| r.len()).sum();
-        let union: std::collections::HashSet<usize> =
-            routes.iter().flat_map(|r| r.iter().map(|&(e, _)| e)).collect();
-        self.stats.routed_pairs += pairs as u64;
-        self.stats.unique_expert_loads += union.len() as u64;
+        let dec_routes: Vec<Route> = gate_dec
+            .chunks_exact(m.n_experts)
+            .map(|row| top_k_route(row, m.top_k))
+            .collect();
+        if b > 0 {
+            // Dedup accounting keeps its decode-batch semantics: however
+            // many sessions route to an expert, it is materialized once.
+            let pairs: usize = dec_routes.iter().map(|r| r.len()).sum();
+            let union: std::collections::HashSet<usize> = dec_routes
+                .iter()
+                .flat_map(|r| r.iter().map(|&(e, _)| e))
+                .collect();
+            self.stats.routed_pairs += pairs as u64;
+            self.stats.unique_expert_loads += union.len() as u64;
+        }
+        routes.extend(dec_routes);
 
-        // Precision planning sees the batch-aggregated gate mass (for a
-        // batch of one this is the token's own gate vector, bitwise).
-        let agg = importance::batch_gate_mass(&gate_rows, b, m.n_experts);
-        let plan = self.strategy.plan(&LayerCtx {
-            layer,
-            n_layers: m.n_layers,
-            n_experts: m.n_experts,
-            top_k: m.top_k,
-            phase: Phase::Decode,
-            routes: &routes,
-            gate_probs: &agg,
-            token_scores: None,
-        });
+        // Precision planning: with decode tokens present the plan sees
+        // the gate mass aggregated across both phases (bitwise the
+        // batch-aggregated mass when there is no chunk); a pure chunk
+        // plans with prefill heavy-hitter importance over its tokens.
+        let plan = if b > 0 {
+            let agg = importance::mixed_gate_mass(&chunk_gate, &gate_dec, m.n_experts);
+            self.strategy.plan(&LayerCtx {
+                layer,
+                n_layers: m.n_layers,
+                n_experts: m.n_experts,
+                top_k: m.top_k,
+                phase: Phase::Decode,
+                routes: &routes,
+                gate_probs: &agg,
+                token_scores: None,
+            })
+        } else {
+            self.strategy.plan(&LayerCtx {
+                layer,
+                n_layers: m.n_layers,
+                n_experts: m.n_experts,
+                top_k: m.top_k,
+                phase: Phase::Prefill,
+                routes: &routes,
+                gate_probs: &chunk_gate,
+                token_scores: Some(&chunk_scores),
+            })
+        };
 
-        self.execute_experts(layer, &routes, &plan, &moe_in, &h_resid, h, b, t_attn)
+        // One shared expert-union execution over chunk + decode rows.
+        let rows = chunk + b;
+        let mut moe_in = chunk_moe;
+        moe_in.extend_from_slice(&moe_dec);
+        let mut h_resid = chunk_resid;
+        h_resid.extend_from_slice(&resid_dec);
+        let mut h_all = vec![0f32; rows * d];
+        let t_layer = self
+            .execute_experts(layer, &routes, &plan, &moe_in, &h_resid, &mut h_all, rows, t_attn)?;
+        if let Some((_, h_chunk)) = prefill.as_mut() {
+            h_chunk.copy_from_slice(&h_all[..chunk * d]);
+        }
+        h_dec.copy_from_slice(&h_all[chunk * d..]);
+        Ok(t_layer)
     }
 
     /// Resolve weights, schedule, and numerically execute all routed
@@ -768,10 +1119,12 @@ impl Engine {
             let key = ExpertKey::new(layer, e);
             let (exec_prec, ready_at, on_cpu) =
                 self.resolve_weights(key, wanted, plan.cpu_fallback[e], t_attn);
-            if self.strategy.uses_cache() && !self.cache.is_pinned(key) {
-                // pin for the duration of this layer (permanently-pinned
-                // warm residents are left untouched)
-                self.cache.set_pinned(key, true);
+            if self.strategy.uses_cache() && !self.cache.is_pinned_class(key, PinClass::Layer) {
+                // layer-scoped pin for the duration of this fused layer;
+                // the class is disjoint from warm-residency pins, so
+                // releasing it below can never drop a warm pin the other
+                // phase of a mixed tick still holds on the same expert
+                self.cache.set_pinned(key, PinClass::Layer, true);
                 pinned.push(key);
             }
             execs.push(ExpertExec { key, exec_prec, ready_at, on_cpu, token_idx, weights });
@@ -816,7 +1169,7 @@ impl Engine {
             }
         }
         for key in pinned {
-            self.cache.set_pinned(key, false);
+            self.cache.set_pinned(key, PinClass::Layer, false);
         }
 
         // h = h_resid + renormalized mixture (paper 4/0 drops sub-critical

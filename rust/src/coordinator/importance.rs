@@ -90,6 +90,45 @@ pub fn batch_gate_mass(gate_probs: &[f32], batch: usize, n_experts: usize) -> Ve
     mass
 }
 
+/// Gate mass aggregated **across phases** for a fused mixed step: the
+/// mean of the prefill chunk's gate rows and the decode batch's gate
+/// rows together (both row-major `[*, n_experts]`), one value per
+/// expert.  This extends [`batch_gate_mass`] to the chunked-prefill
+/// tick, where precision must be chosen once for the union of experts
+/// routed by chunk tokens *and* decode tokens: experts carrying the
+/// most gate mass across every token in the step rank as most
+/// important.  With no prefill rows this is bitwise identical to
+/// `batch_gate_mass(decode_rows, ..)` (same accumulation order, and
+/// `0.0 + x == x`), which keeps a pure-decode tick indistinguishable
+/// from the classic batched decode path.
+pub fn mixed_gate_mass(
+    prefill_rows: &[f32],
+    decode_rows: &[f32],
+    n_experts: usize,
+) -> Vec<f32> {
+    assert!(n_experts > 0, "mixed gate mass without experts");
+    assert_eq!(prefill_rows.len() % n_experts, 0, "prefill gate shape");
+    assert_eq!(decode_rows.len() % n_experts, 0, "decode gate shape");
+    let total = (prefill_rows.len() + decode_rows.len()) / n_experts;
+    assert!(total > 0, "empty mixed gate batch");
+    let mut mass = vec![0f32; n_experts];
+    for row in prefill_rows.chunks_exact(n_experts) {
+        for (m, &g) in mass.iter_mut().zip(row) {
+            *m += g;
+        }
+    }
+    for row in decode_rows.chunks_exact(n_experts) {
+        for (m, &g) in mass.iter_mut().zip(row) {
+            *m += g;
+        }
+    }
+    let inv = 1.0 / total as f32;
+    for m in &mut mass {
+        *m *= inv;
+    }
+    mass
+}
+
 /// Rank expert indices by importance, descending (stable by index).
 pub fn rank_desc(importance: &[f64]) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..importance.len()).collect();
@@ -160,6 +199,35 @@ mod tests {
         // bitwise identity: a decode batch of one must plan exactly like
         // the single-session path
         assert_eq!(agg, row.to_vec());
+    }
+
+    #[test]
+    fn mixed_gate_mass_without_prefill_is_batch_gate_mass() {
+        #[rustfmt::skip]
+        let rows = [
+            0.7f32, 0.2, 0.1,
+            0.1,    0.8, 0.1,
+        ];
+        // bitwise identity: a pure-decode mixed tick must plan exactly
+        // like the classic batched decode path
+        assert_eq!(mixed_gate_mass(&[], &rows, 3), batch_gate_mass(&rows, 2, 3));
+    }
+
+    #[test]
+    fn mixed_gate_mass_spans_both_phases() {
+        // one prefill chunk row + one decode row: the mean weighs both
+        let prefill = [1.0f32, 0.0, 0.0];
+        let decode = [0.0f32, 0.5, 0.5];
+        let agg = mixed_gate_mass(&prefill, &decode, 3);
+        assert!((agg[0] - 0.5).abs() < 1e-7);
+        assert!((agg[1] - 0.25).abs() < 1e-7);
+        assert!((agg[2] - 0.25).abs() < 1e-7);
+        // still a distribution over experts
+        assert!((agg.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        // two chunk rows vs one decode row: prefill mass dominates 2:1
+        let prefill2 = [1.0f32, 0.0, 0.0, 1.0, 0.0, 0.0];
+        let agg2 = mixed_gate_mass(&prefill2, &decode, 3);
+        assert!((agg2[0] - 2.0 / 3.0).abs() < 1e-6);
     }
 
     #[test]

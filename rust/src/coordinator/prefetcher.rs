@@ -62,6 +62,23 @@ pub fn aggregate_decode_probes(probe_probs: &[f32], batch: usize, n_experts: usi
     super::importance::batch_gate_mass(probe_probs, batch, n_experts)
 }
 
+/// Eq.-6 probe rows for a prefill **chunk**: the `[start, end)` token
+/// rows of a row-major `[seq, n_experts]` probe matrix, flattened
+/// contiguously.  Chunked prefill issues its look-ahead from chunk
+/// boundaries, so the Eq.-7 frequency prediction must run over exactly
+/// the chunk's tokens — earlier positions already steered the prefetch
+/// chain when their own chunk executed.  For a chunk covering the whole
+/// prompt (`start == 0`) this is the full monolithic probe.
+pub fn chunk_probe_rows(
+    probe: &[f32],
+    start: usize,
+    end: usize,
+    n_experts: usize,
+) -> Vec<f32> {
+    debug_assert!(start <= end && end * n_experts <= probe.len(), "chunk probe bounds");
+    probe[start * n_experts..end * n_experts].to_vec()
+}
+
 /// Eq. 7: prefill-phase prediction — per-expert activation frequency
 /// `c_e = sum_i 1[e in top-k of token i]`, then top-t by frequency.
 ///
@@ -122,6 +139,22 @@ mod tests {
         ];
         let p = predict_prefill(&probs, 1, 2, 1, 2);
         assert_eq!(p, vec![0]);
+    }
+
+    #[test]
+    fn chunk_probe_rows_select_the_chunk_window() {
+        #[rustfmt::skip]
+        let probe = [
+            0.9f32, 0.1,
+            0.2,    0.8,
+            0.5,    0.5,
+        ];
+        assert_eq!(chunk_probe_rows(&probe, 1, 3, 2), vec![0.2, 0.8, 0.5, 0.5]);
+        // a chunk covering the whole prompt is the monolithic probe
+        assert_eq!(chunk_probe_rows(&probe, 0, 3, 2), probe.to_vec());
+        // chunk-local prediction sees only its own rows
+        let rows = chunk_probe_rows(&probe, 1, 2, 2);
+        assert_eq!(predict_prefill(&rows, 1, 2, 1, 1), vec![1]);
     }
 
     #[test]

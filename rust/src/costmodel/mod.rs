@@ -94,6 +94,41 @@ impl CostModel {
         self.roofline(flops, bytes) * self.layer_scale
     }
 
+    /// One layer's attention for a fused **mixed** step: a prefill chunk
+    /// of `chunk` tokens whose causal window ends at `prefix_end`
+    /// (`prefix_end - chunk` earlier positions are read back from the
+    /// KV cache) plus one decode token per entry of `positions`, each at
+    /// its own KV position.  The batched roofline charges the attention
+    /// weight read and the kernel overhead **once** for the whole fused
+    /// step — that is the continuous-batching win — while flops and KV
+    /// reads sum over chunk tokens and decode tokens.
+    ///
+    /// Degenerate cases reduce exactly (same float operations) to the
+    /// phase-pure ops: `attn_mixed(t, t, &[]) == attn_prefill(t)` and
+    /// `attn_mixed(0, 0, pos) == attn_decode_batch(pos)`, which is what
+    /// makes `--chunk-tokens 0` and pure-decode ticks step-for-step
+    /// identical to the monolithic paths.
+    pub fn attn_mixed(&self, chunk: usize, prefix_end: usize, positions: &[usize]) -> f64 {
+        debug_assert!(prefix_end >= chunk, "chunk window beyond its prefix");
+        let d = self.paper.d_model as f64;
+        let mut flops = 0.0;
+        let mut kv_bytes = 0.0;
+        if chunk > 0 {
+            let c = chunk as f64;
+            // qkvo projections for the chunk + score/context matmuls of
+            // chunk queries against the full causal prefix.
+            flops += 8.0 * d * d * c + 4.0 * d * c * prefix_end as f64;
+            // earlier positions' K/V are read back from the cache
+            kv_bytes += 2.0 * (prefix_end - chunk) as f64 * d * 2.0;
+        }
+        for &pos in positions {
+            flops += 8.0 * d * d + 4.0 * d * pos as f64;
+            kv_bytes += 2.0 * pos as f64 * d * 2.0;
+        }
+        let bytes = 4.0 * d * d * 2.0 + kv_bytes;
+        self.roofline(flops, bytes) * self.layer_scale
+    }
+
     /// One expert's FFN over `tokens` routed tokens at a precision, on GPU.
     pub fn expert_gpu(&self, tokens: usize, p: Precision) -> f64 {
         if p == Precision::Skip || tokens == 0 {
@@ -234,6 +269,51 @@ mod tests {
         let four = c.expert_gpu(4, Precision::Int4);
         assert!(four < 4.0 * one);
         assert!(four >= one);
+    }
+
+    #[test]
+    fn mixed_attention_reduces_exactly_to_pure_phases() {
+        let c = cm();
+        // pure prefill chunk covering its whole window == monolithic op
+        for t in [1usize, 8, 64, 300] {
+            assert_eq!(c.attn_mixed(t, t, &[]), c.attn_prefill(t));
+        }
+        // pure decode == the batched decode op (and the serial op at b=1)
+        for pos in [1usize, 17, 300] {
+            assert_eq!(c.attn_mixed(0, 0, &[pos]), c.attn_decode(pos));
+        }
+        let batch = [10usize, 20, 30, 40];
+        assert_eq!(c.attn_mixed(0, 0, &batch), c.attn_decode_batch(&batch));
+    }
+
+    #[test]
+    fn mixed_attention_fuses_cheaper_than_separate_steps() {
+        let c = cm();
+        let batch = [10usize, 20, 30];
+        // one fused chunk+decode layer beats a chunk layer plus a decode
+        // layer (single weight read, single kernel overhead) ...
+        let fused = c.attn_mixed(8, 24, &batch);
+        let separate = c.attn_mixed(8, 24, &[]) + c.attn_decode_batch(&batch);
+        assert!(fused < separate, "fused {fused} not below separate {separate}");
+        // ... but fusion is not free: it costs more than either alone
+        assert!(fused > c.attn_mixed(8, 24, &[]));
+        assert!(fused > c.attn_decode_batch(&batch));
+    }
+
+    #[test]
+    fn chunk_attention_pays_for_its_prefix_window() {
+        let c = cm();
+        // the same chunk deeper into the prompt attends to more history:
+        // strictly more flops and KV read-back
+        let early = c.attn_mixed(8, 8, &[]);
+        let late = c.attn_mixed(8, 128, &[]);
+        assert!(late > early);
+        // chunks tile a prompt: the four chunk layers cost more than the
+        // one monolithic layer (per-chunk weight reads + KV read-back) —
+        // chunking buys interleaving, not raw prefill speed
+        let whole = c.attn_prefill(32);
+        let tiled: f64 = (1..=4).map(|i| c.attn_mixed(8, 8 * i, &[])).sum();
+        assert!(tiled > whole);
     }
 
     #[test]

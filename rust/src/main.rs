@@ -227,6 +227,10 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
         // Cross-session batched decode: default to batching as wide as
         // the admission limit; 1 restores serial interleaved decode.
         max_decode_batch: args.get_usize("max-decode-batch", max_sessions.max(1))?,
+        // Chunked prefill: 0 (default) keeps monolithic prefill — the
+        // pre-chunking fleet path, step for step; a positive budget
+        // fuses that many prompt tokens per tick with the decode batch.
+        chunk_tokens: args.get_usize("chunk-tokens", 0)?,
     };
 
     let assets = Arc::new(ModelAssets::load(&artifacts, &model)?);
@@ -235,11 +239,17 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
     let sys = SystemConfig::edge_preset(&model, vram)?;
     println!(
         "fleet-serving {model} as {} @ {vram} GB VRAM: {} arrivals ({process:?}), \
-         <= {} sessions, decode batch <= {}, {} scheduling, SLO ttft {:.2}s / tpot {:.3}s",
+         <= {} sessions, decode batch <= {}, {}, {} scheduling, \
+         SLO ttft {:.2}s / tpot {:.3}s",
         strategy.name(),
         requests,
         serving.max_sessions,
         serving.max_decode_batch.max(1),
+        if serving.chunk_tokens == 0 {
+            "monolithic prefill".to_string()
+        } else {
+            format!("chunked prefill <= {} tok/tick", serving.chunk_tokens)
+        },
         policy.name(),
         serving.ttft_slo_s,
         serving.tpot_slo_s,
@@ -280,6 +290,18 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
         outcome.dedup.mean_batch(),
         outcome.dedup.expert_reuse_ratio(),
         outcome.dedup.saved_fetches(),
+    );
+    println!(
+        "chunked prefill: {} chunks ({} prompt tokens, mean chunk {:.2}), \
+         {} mixed prefill+decode ticks; stall p99 {} (worst inter-token gap), \
+         TTFT breakdown queue {} + prefill {}",
+        outcome.phase.prefill_chunks,
+        outcome.phase.prefill_chunk_tokens,
+        outcome.phase.mean_chunk(),
+        outcome.phase.mixed_steps,
+        fmt_secs(outcome.metrics.stall.percentile(99.0)),
+        fmt_secs(outcome.metrics.queue_delay.mean()),
+        fmt_secs(outcome.metrics.prefill_time.mean()),
     );
     let span = outcome.metrics.makespan();
     println!(
@@ -383,6 +405,8 @@ fn usage() -> String {
      \x20 serve-fleet --model <name> [--vram GB] [--requests N] [--rate R/S]\n\
      \x20             [--arrival poisson|bursty|ramp] [--sessions N] [--sched fifo|rr|slo]\n\
      \x20             [--max-decode-batch N (1 = serial decode; default: --sessions)]\n\
+     \x20             [--chunk-tokens N (0 = monolithic prefill, the default; N > 0\n\
+     \x20              fuses N prompt tokens per tick with the decode batch)]\n\
      \x20             [--ttft-slo S] [--tpot-slo S] [--strategy S] [--seed N]\n\
      \x20 timeline    --model <name> [--vram GB] [--strategy S]\n\
      \x20 experiment  <fig1|fig2|fig3|fig4|fig5|fig6|fig10|fig11|table1|table2|table3|all>\n\

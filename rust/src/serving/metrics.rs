@@ -1,6 +1,8 @@
 //! Fleet-level SLO metrics: per-session TTFT/TPOT distributions (queue
-//! delay included), goodput, SLO attainment, and cross-session
-//! decode-batch dedup telemetry over one serving run.
+//! delay included), goodput, SLO attainment, cross-session decode-batch
+//! dedup telemetry, and per-phase chunked-prefill telemetry (chunk
+//! counts, mixed-tick counts, prefill-interference stall) over one
+//! serving run.
 
 use crate::coordinator::engine::{EngineStats, RequestOutput};
 use crate::metrics::Series;
@@ -30,6 +32,13 @@ pub struct CompletedRequest {
     pub tokens: usize,
     pub ttft_ok: bool,
     pub tpot_ok: bool,
+    /// Longest gap between two consecutive emitted tokens (0 for a
+    /// single-token request).  This is the **prefill-interference
+    /// delay** a decoding session experiences: under monolithic prefill
+    /// a long prompt admitted mid-stream stalls every decoder for its
+    /// whole prefill, so the victim's worst gap spans that prefill;
+    /// chunked prefill bounds the gap by one chunk's fused service time.
+    pub max_stall: f64,
 }
 
 /// Cross-session decode-batch dedup telemetry for one fleet run: how
@@ -84,6 +93,43 @@ impl DedupStats {
     }
 }
 
+/// Per-phase chunked-prefill telemetry for one fleet run: how the
+/// token-budget scheduler actually split its ticks between prefill
+/// chunks, decode batches, and fused mixed steps.  All zero on the
+/// monolithic (`chunk_tokens = 0`) path, which is itself the regression
+/// signal that the legacy path never engages the chunking machinery.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseStats {
+    /// Prefill chunks executed (one per tick that carried prefill work).
+    pub prefill_chunks: u64,
+    /// Prompt tokens those chunks advanced; sums to the prompt length
+    /// of every chunk-prefilled session (token conservation).
+    pub prefill_chunk_tokens: u64,
+    /// Ticks that fused a prefill chunk with a decode batch in one
+    /// per-layer pass.
+    pub mixed_steps: u64,
+}
+
+impl PhaseStats {
+    /// Engine-counter delta over one run (`after - before`).
+    pub fn from_delta(before: &EngineStats, after: &EngineStats) -> PhaseStats {
+        PhaseStats {
+            prefill_chunks: after.prefill_chunks - before.prefill_chunks,
+            prefill_chunk_tokens: after.prefill_chunk_tokens - before.prefill_chunk_tokens,
+            mixed_steps: after.mixed_steps - before.mixed_steps,
+        }
+    }
+
+    /// Mean prompt tokens per chunk (0 when nothing chunked).
+    pub fn mean_chunk(&self) -> f64 {
+        if self.prefill_chunks == 0 {
+            0.0
+        } else {
+            self.prefill_chunk_tokens as f64 / self.prefill_chunks as f64
+        }
+    }
+}
+
 /// Aggregates over one fleet run.
 #[derive(Debug, Clone, Default)]
 pub struct FleetMetrics {
@@ -91,6 +137,14 @@ pub struct FleetMetrics {
     pub ttft: Series,
     pub tpot: Series,
     pub queue_delay: Series,
+    /// Service-side TTFT (prefill start to first token): together with
+    /// `queue_delay` this is the TTFT breakdown — `ttft = queue_delay +
+    /// prefill_time` per request.
+    pub prefill_time: Series,
+    /// Per-request worst inter-token gap (`CompletedRequest::max_stall`)
+    /// — the prefill-interference delay distribution the HOL-blocking
+    /// regression test bounds.
+    pub stall: Series,
     /// Arrival-to-last-token latency.
     pub e2e: Series,
     pub completed: usize,
@@ -117,6 +171,11 @@ impl FleetMetrics {
         let finished_at = out.start + out.token_times.last().copied().unwrap_or(out.ttft);
         let ttft_ok = ttft <= slo.ttft_s;
         let tpot_ok = tpot <= slo.tpot_s;
+        let max_stall = out
+            .token_times
+            .windows(2)
+            .map(|w| w[1] - w[0])
+            .fold(0.0f64, f64::max);
 
         if self.completed == 0 || arrival < self.first_arrival {
             self.first_arrival = arrival;
@@ -125,6 +184,8 @@ impl FleetMetrics {
         self.ttft.push(ttft);
         self.tpot.push(tpot);
         self.queue_delay.push(queue_delay);
+        self.prefill_time.push(out.ttft);
+        self.stall.push(max_stall);
         self.e2e.push(finished_at - arrival);
         self.completed += 1;
         self.ttft_ok += ttft_ok as usize;
@@ -142,6 +203,7 @@ impl FleetMetrics {
             tokens: out.tokens.len(),
             ttft_ok,
             tpot_ok,
+            max_stall,
         }
     }
 
@@ -262,6 +324,46 @@ mod tests {
         assert_eq!(m.throughput_tps(), 0.0);
         assert_eq!(m.slo_attainment(), 0.0);
         assert_eq!(m.summary_row("x").len(), FleetMetrics::TABLE_HEADER.len());
+    }
+
+    #[test]
+    fn record_tracks_stall_and_ttft_breakdown() {
+        let mut m = FleetMetrics::default();
+        let slo = SloTargets { ttft_s: 10.0, tpot_s: 10.0 };
+        // token gaps: 0.4, then a 1.6 stall (a monolithic prefill ran in
+        // between), then 0.2
+        let r = m.record(0, 1.0, &out(1.5, 0.8, vec![0.8, 1.2, 2.8, 3.0]), slo);
+        assert!((r.max_stall - 1.6).abs() < 1e-12);
+        assert!((m.stall.max() - 1.6).abs() < 1e-12);
+        // breakdown: ttft == queue_delay + prefill_time per request
+        assert!((r.ttft - (r.queue_delay + 0.8)).abs() < 1e-12);
+        assert!((m.prefill_time.mean() - 0.8).abs() < 1e-12);
+        // single-token request: no inter-token gap at all
+        let r1 = m.record(1, 0.0, &out(0.0, 0.3, vec![0.3]), slo);
+        assert_eq!(r1.max_stall, 0.0);
+    }
+
+    #[test]
+    fn phase_stats_deltas_and_mean_chunk() {
+        let zero = PhaseStats::default();
+        assert_eq!(zero.mean_chunk(), 0.0);
+
+        let before = EngineStats {
+            prefill_chunks: 2,
+            prefill_chunk_tokens: 10,
+            ..Default::default()
+        };
+        let after = EngineStats {
+            prefill_chunks: 6,
+            prefill_chunk_tokens: 26,
+            mixed_steps: 3,
+            ..Default::default()
+        };
+        let p = PhaseStats::from_delta(&before, &after);
+        assert_eq!(p.prefill_chunks, 4);
+        assert_eq!(p.prefill_chunk_tokens, 16);
+        assert_eq!(p.mixed_steps, 3);
+        assert!((p.mean_chunk() - 4.0).abs() < 1e-12);
     }
 
     #[test]

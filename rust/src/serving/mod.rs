@@ -22,25 +22,52 @@
 //! path, step-for-step).  [`metrics::DedupStats`] reports the resulting
 //! expert-reuse / dedup savings per run.
 //!
+//! # Chunked prefill (token-budget continuous batching)
+//!
+//! With [`crate::config::ServingConfig::chunk_tokens`] `> 0` the loop
+//! switches to **chunked prefill with mixed prefill/decode ticks**:
+//! admission only allocates a session slot (no engine work), and every
+//! virtual tick the policy plans a token budget
+//! ([`policy::SchedPolicy::mixed_tick`]) of up to `chunk_tokens` prompt
+//! tokens for *one* prefilling session plus up to `max_decode_batch`
+//! decode tokens, executed by [`Engine::mixed_step`] as a single fused
+//! per-layer pass (shared expert unions, cross-phase aggregated gate
+//! mass, one batched roofline).  A long prompt therefore stalls
+//! concurrent decoders for at most one chunk's service time instead of
+//! its whole prefill — the head-of-line-blocking fix the regression
+//! suite in `tests/integration_chunked_prefill.rs` pins down
+//! (strictly lower p99 TPOT and bounded per-request `max_stall`).
+//!
+//! **Equivalence guarantees:** `chunk_tokens = 0` dispatches to the
+//! untouched monolithic loop, reproducing the pre-chunking fleet path
+//! *tick for tick*; chunked prefill reproduces
+//! [`Engine::prefill_session`]'s numerics for any chunk size under
+//! precision-invariant strategies (DyMoE's dynamic quantization plans
+//! each chunk's importance over that chunk's tokens — chunk-local by
+//! design); and a tick with no prefill chunk is exactly the classic
+//! batched decode step.  [`metrics::PhaseStats`] reports chunk counts,
+//! mean chunk size, and mixed-tick counts per run.
+//!
 //! Everything runs on the engine's virtual timeline, so a fleet run is
 //! deterministic under a fixed seed and directly comparable across
 //! scheduling policies ([`policy::PolicyKind`]).  [`metrics`] aggregates
-//! per-session TTFT/TPOT (arrival-relative), queue delay, goodput, and
-//! SLO attainment.  The `serve-fleet` CLI subcommand and
-//! `benches/bench_serving.rs` drive this module.
+//! per-session TTFT/TPOT (arrival-relative), queue delay with the
+//! TTFT breakdown (queue vs prefill service), per-request worst
+//! inter-token stall, goodput, and SLO attainment.  The `serve-fleet`
+//! CLI subcommand and `benches/bench_serving.rs` drive this module.
 
 pub mod arrival;
 pub mod metrics;
 pub mod policy;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::config::ServingConfig;
 use crate::coordinator::engine::{Engine, EngineSession};
 use crate::workload::Request;
 
 use self::arrival::TimedRequest;
-use self::metrics::{CompletedRequest, DedupStats, FleetMetrics, SloTargets};
+use self::metrics::{CompletedRequest, DedupStats, FleetMetrics, PhaseStats, SloTargets};
 use self::policy::{Action, ActiveInfo, PolicyKind, QueuedInfo, SchedView};
 
 /// Configuration of one fleet run.
@@ -73,11 +100,13 @@ pub struct FleetOutcome {
     /// High-water mark of KV-cache bytes held by in-flight sessions
     /// (memory pressure of concurrency).
     pub peak_kv_bytes: u64,
-    /// Total scheduler steps taken (prefills + decode steps; a decode
-    /// batch counts once however many sessions it advances).
+    /// Total scheduler steps taken (prefills + decode steps; a fused
+    /// mixed tick counts once however many sessions it advances).
     pub steps: usize,
     /// Cross-session decode-batch dedup telemetry for this run.
     pub dedup: DedupStats,
+    /// Chunked-prefill telemetry (all zero on the monolithic path).
+    pub phase: PhaseStats,
 }
 
 struct Queued {
@@ -98,11 +127,32 @@ struct Active {
 ///
 /// The loop is a virtual-time co-simulation: each iteration admits every
 /// request that has arrived by the engine clock, asks the policy for the
-/// next step (admit-and-prefill, or decode one token), and executes it
-/// on the engine — which advances the clock.  When the system goes idle
-/// it fast-forwards to the next arrival.  With one session in flight
-/// this reduces exactly to the classic back-to-back `serve` path.
+/// next step, and executes it on the engine — which advances the clock.
+/// When the system goes idle it fast-forwards to the next arrival.  With
+/// one session in flight this reduces exactly to the classic
+/// back-to-back `serve` path.
+///
+/// `chunk_tokens == 0` (the default) dispatches to the monolithic loop
+/// — admission runs the whole prefill as one step — and is tick-for-tick
+/// identical to the pre-chunking scheduler; a positive budget runs
+/// token-budget continuous batching over [`Engine::mixed_step`].
 pub fn run_fleet(
+    engine: &mut Engine,
+    trace: Vec<TimedRequest>,
+    cfg: &FleetConfig,
+) -> Result<FleetOutcome> {
+    if cfg.serving.chunk_tokens == 0 {
+        run_fleet_monolithic(engine, trace, cfg)
+    } else {
+        run_fleet_chunked(engine, trace, cfg)
+    }
+}
+
+/// The pre-chunking fleet loop: admission runs the session's whole
+/// prefill as one scheduling step (`Action::Admit`), decode steps batch
+/// across sessions.  Kept verbatim so `--chunk-tokens 0` reproduces the
+/// legacy path step for step.
+fn run_fleet_monolithic(
     engine: &mut Engine,
     trace: Vec<TimedRequest>,
     cfg: &FleetConfig,
@@ -136,6 +186,7 @@ pub fn run_fleet(
         peak_kv_bytes: 0,
         steps: 0,
         dedup: DedupStats::default(),
+        phase: PhaseStats::default(),
     };
 
     loop {
@@ -167,6 +218,7 @@ pub fn run_fleet(
                 emitted: a.sess.emitted(),
                 target: a.sess.target_tokens(),
                 last_token_at: a.last_token_at,
+                prefill_remaining: a.sess.prefill_remaining(),
             })
             .collect();
         let free_slots = max_sessions.saturating_sub(active.len());
@@ -280,5 +332,228 @@ pub fn run_fleet(
         }
     }
     out.dedup = DedupStats::from_delta(&stats_before, &engine.stats);
+    out.phase = PhaseStats::from_delta(&stats_before, &engine.stats);
+    Ok(out)
+}
+
+/// The token-budget continuous loop (`chunk_tokens > 0`): admission
+/// only allocates a session slot, and every tick the policy plans a
+/// fused mixed step — up to `chunk_tokens` prompt tokens of one
+/// prefilling session plus up to `max_decode_batch` decode tokens —
+/// executed by [`Engine::mixed_step`] as one per-layer pass.
+fn run_fleet_chunked(
+    engine: &mut Engine,
+    trace: Vec<TimedRequest>,
+    cfg: &FleetConfig,
+) -> Result<FleetOutcome> {
+    let slo = cfg.slo();
+    let max_sessions = cfg.serving.max_sessions.max(1);
+    let chunk_tokens = cfg.serving.chunk_tokens;
+    let mut pending: std::collections::VecDeque<TimedRequest> = {
+        let mut t = trace;
+        t.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
+        t.into()
+    };
+    let mut queued: Vec<Queued> = Vec::new();
+    let mut active: Vec<Active> = Vec::new();
+    let enqueue = |r: TimedRequest| Queued {
+        id: r.id,
+        arrival: r.arrival,
+        deadline: r.arrival + slo.ttft_s,
+        request: r.request,
+    };
+    // The engine cannot fuse more tokens per tick than one expert call
+    // can carry: the chunk is granted first, decode fills the rest.
+    let max_seq = engine.model().max_seq;
+    let max_decode_batch = cfg.serving.max_decode_batch.clamp(1, max_seq);
+    let stats_before = engine.stats;
+    let mut policy = cfg.policy.build();
+    let mut out = FleetOutcome {
+        metrics: FleetMetrics::default(),
+        per_request: Vec::new(),
+        peak_concurrency: 0,
+        peak_kv_bytes: 0,
+        steps: 0,
+        dedup: DedupStats::default(),
+        phase: PhaseStats::default(),
+    };
+
+    loop {
+        let now = engine.clock();
+        while pending.front().is_some_and(|r| r.arrival <= now) {
+            queued.push(enqueue(pending.pop_front().unwrap()));
+        }
+        if queued.is_empty() && active.is_empty() {
+            match pending.pop_front() {
+                Some(r) => {
+                    queued.push(enqueue(r));
+                    continue;
+                }
+                None => break,
+            }
+        }
+
+        let view_of = |queued: &[Queued], active: &[Active]| {
+            let queued_info: Vec<QueuedInfo> = queued
+                .iter()
+                .map(|q| QueuedInfo { id: q.id, arrival: q.arrival, deadline: q.deadline })
+                .collect();
+            let active_info: Vec<ActiveInfo> = active
+                .iter()
+                .map(|a| ActiveInfo {
+                    id: a.id,
+                    arrival: a.arrival,
+                    emitted: a.sess.emitted(),
+                    target: a.sess.target_tokens(),
+                    last_token_at: a.last_token_at,
+                    prefill_remaining: a.sess.prefill_remaining(),
+                })
+                .collect();
+            (queued_info, active_info)
+        };
+
+        // Admission allocates slots only (prefill happens chunk by
+        // chunk), so free slots fill every tick in policy order.
+        while active.len() < max_sessions && !queued.is_empty() {
+            let (queued_info, active_info) = view_of(&queued, &active);
+            let free_slots = max_sessions - active.len();
+            let view = SchedView { now, queued: &queued_info, active: &active_info, free_slots };
+            let Some(id) = policy.admit_pick(&view) else { break };
+            let Some(pos) = queued.iter().position(|q| q.id == id) else {
+                bail!("policy admitted unknown session {id}");
+            };
+            let q = queued.swap_remove(pos);
+            let sess = engine
+                .begin_session(&q.request.prompt, q.request.max_new, None, q.arrival)
+                .with_context(|| format!("admitting session {id}"))?;
+            active.push(Active { id: q.id, arrival: q.arrival, sess, last_token_at: q.arrival });
+            out.peak_concurrency = out.peak_concurrency.max(active.len());
+            let kv_in_flight: u64 = active.iter().map(|a| a.sess.kv_bytes()).sum();
+            out.peak_kv_bytes = out.peak_kv_bytes.max(kv_in_flight);
+        }
+        if active.is_empty() {
+            // queue non-empty but zero slots cannot happen (max_sessions
+            // >= 1 and the admit loop always places someone); guard.
+            bail!("chunked scheduler wedged with {} queued sessions", queued.len());
+        }
+
+        // Token-budget tick plan: one prefill chunk + a decode batch.
+        let (queued_info, active_info) = view_of(&queued, &active);
+        let free_slots = max_sessions - active.len();
+        let view = SchedView { now, queued: &queued_info, active: &active_info, free_slots };
+        // Hand the policy the decode budget that will actually fit next
+        // to the worst-case chunk grant, so a stateful policy (round-
+        // robin's rotation cursor) never advances past sessions a later
+        // truncation would drop from the batch.
+        let chunk_cap = active_info
+            .iter()
+            .map(|a| a.prefill_remaining.min(chunk_tokens))
+            .max()
+            .unwrap_or(0);
+        let decode_budget = max_decode_batch.min(max_seq - chunk_cap);
+        let mut plan = policy.mixed_tick(&view, decode_budget);
+        if plan.is_empty() {
+            // Work-conserving fallback so a policy bug can never wedge
+            // the loop: chunk the oldest prefilling session, else decode
+            // the first ready one.
+            let pre = active_info.iter().find(|a| a.prefill_remaining > 0).map(|a| a.id);
+            let dec: Vec<usize> = active_info
+                .iter()
+                .filter(|a| a.decode_ready())
+                .take(1)
+                .map(|a| a.id)
+                .collect();
+            ensure!(
+                pre.is_some() || !dec.is_empty(),
+                "chunked scheduler idle with {} active sessions",
+                active.len()
+            );
+            plan = policy::TickPlan { prefill: pre, decode: dec };
+        }
+
+        // Validate the plan and split the borrow: the prefill session
+        // and every decode session come out of `active` by value.
+        let prefill_pos = match plan.prefill {
+            Some(id) => {
+                let Some(pos) = active.iter().position(|a| a.id == id) else {
+                    bail!("policy chunked unknown session {id}");
+                };
+                ensure!(
+                    active[pos].sess.prefill_remaining() > 0,
+                    "policy chunked a prefilled session {id}"
+                );
+                Some(pos)
+            }
+            None => None,
+        };
+        let mut prefill_active = prefill_pos.map(|pos| active.swap_remove(pos));
+        ensure!(
+            plan.decode.len() <= decode_budget,
+            "decode batch {} exceeds the per-tick budget {decode_budget}",
+            plan.decode.len()
+        );
+        // The chunk is granted first; decode fills what the expert token
+        // bucket has left.  With the budget handed to the policy above
+        // this truncation is a no-op (granted <= chunk_cap), kept as a
+        // belt-and-braces bound for misbehaving policies.
+        let granted = prefill_active
+            .as_ref()
+            .map(|a| chunk_tokens.min(a.sess.prefill_remaining()))
+            .unwrap_or(0);
+        plan.decode.truncate(max_seq - granted);
+        let mut batch: Vec<Active> = Vec::with_capacity(plan.decode.len());
+        for bid in &plan.decode {
+            let Some(pos) = active.iter().position(|a| a.id == *bid) else {
+                bail!("policy batched unknown or duplicate session {bid}");
+            };
+            ensure!(
+                active[pos].sess.prefilled() && !active[pos].sess.done(),
+                "policy batched session {bid} that is not ready to decode"
+            );
+            batch.push(active.swap_remove(pos));
+        }
+
+        let report = {
+            let pre_ref = prefill_active.as_mut().map(|a| (&mut a.sess, chunk_tokens));
+            let mut refs: Vec<&mut EngineSession> =
+                batch.iter_mut().map(|a| &mut a.sess).collect();
+            engine
+                .mixed_step(pre_ref, &mut refs)
+                .with_context(|| {
+                    format!(
+                        "mixed tick (chunk session {:?}, decode {:?})",
+                        plan.prefill, plan.decode
+                    )
+                })?
+        };
+        out.steps += 1;
+
+        if let Some(mut a) = prefill_active {
+            if report.prefill_done {
+                a.last_token_at =
+                    a.sess.out.start + a.sess.out.token_times.last().copied().unwrap_or(0.0);
+                if a.sess.done() {
+                    let rec = out.metrics.record(a.id, a.arrival, &a.sess.out, slo);
+                    out.per_request.push(rec);
+                } else {
+                    active.push(a);
+                }
+            } else {
+                active.push(a);
+            }
+        }
+        for (mut a, done) in batch.into_iter().zip(report.dones) {
+            a.last_token_at =
+                a.sess.out.start + a.sess.out.token_times.last().copied().unwrap_or(0.0);
+            if done {
+                let rec = out.metrics.record(a.id, a.arrival, &a.sess.out, slo);
+                out.per_request.push(rec);
+            } else {
+                active.push(a);
+            }
+        }
+    }
+    out.dedup = DedupStats::from_delta(&stats_before, &engine.stats);
+    out.phase = PhaseStats::from_delta(&stats_before, &engine.stats);
     Ok(out)
 }

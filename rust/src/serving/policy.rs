@@ -3,6 +3,14 @@
 //! step (admit-and-prefill one queued request, or decode one token of an
 //! active session).
 //!
+//! With chunked prefill enabled (`--chunk-tokens > 0`) the fleet loop
+//! instead asks the policy for a **token-budget tick plan**
+//! ([`SchedPolicy::mixed_tick`]): at most one prefilling session gets
+//! this tick's chunk budget and up to `--max-decode-batch` ready
+//! sessions decode fused with it.  The policies decide the prefill /
+//! decode mix with the same orderings they use for serial steps (fifo
+//! arrival order, rr rotation, slo least-recently-served).
+//!
 //! All three policies are work-conserving; they differ in *ordering*:
 //!
 //! * [`PolicyKind::Fifo`] — strict arrival order, run-to-completion: the
@@ -29,7 +37,7 @@ pub struct QueuedInfo {
     pub deadline: f64,
 }
 
-/// An admitted, still-decoding session.
+/// An admitted, still-running session (prefilling or decoding).
 #[derive(Debug, Clone, Copy)]
 pub struct ActiveInfo {
     pub id: usize,
@@ -40,6 +48,37 @@ pub struct ActiveInfo {
     pub target: usize,
     /// Absolute virtual time of the last emitted token.
     pub last_token_at: f64,
+    /// Prompt tokens still to prefill; 0 once the first token exists.
+    /// Only ever positive under chunked prefill, where admitted
+    /// sessions prefill incrementally across ticks.
+    pub prefill_remaining: usize,
+}
+
+impl ActiveInfo {
+    /// Ready to decode: prefilled and not yet at its token target.
+    pub fn decode_ready(&self) -> bool {
+        self.prefill_remaining == 0 && self.emitted < self.target
+    }
+}
+
+/// A policy's plan for one token-budget tick of the chunked continuous
+/// scheduler: at most one prefilling session receives the tick's chunk
+/// budget, and up to the decode-batch limit of ready sessions decode
+/// fused with it in the same per-layer engine pass.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TickPlan {
+    /// Active session to grant this tick's prefill chunk (must have
+    /// `prefill_remaining > 0`).
+    pub prefill: Option<usize>,
+    /// Ready active sessions to decode this tick (distinct, each with
+    /// `prefill_remaining == 0` and tokens left to emit).
+    pub decode: Vec<usize>,
+}
+
+impl TickPlan {
+    pub fn is_empty(&self) -> bool {
+        self.prefill.is_none() && self.decode.is_empty()
+    }
 }
 
 /// Scheduler snapshot handed to a policy.
@@ -94,6 +133,35 @@ pub trait SchedPolicy {
         }
         ids
     }
+
+    /// Pick the queued request to admit next (chunked-prefill loop:
+    /// admission allocates a session slot without doing prefill work, so
+    /// free slots are filled every tick).  Default: oldest arrival
+    /// first; the SLO-aware policy overrides with earliest deadline.
+    fn admit_pick(&mut self, view: &SchedView) -> Option<usize> {
+        if view.free_slots == 0 {
+            return None;
+        }
+        oldest_queued(view.queued)
+    }
+
+    /// Plan one token-budget tick of the chunked continuous scheduler:
+    /// at most one prefilling session to receive this tick's chunk
+    /// budget plus up to `max_decode` ready sessions to decode fused
+    /// with it.  Default: the oldest-arrival prefilling session, and
+    /// decode filled least-recently-served first (ties by id) — the
+    /// SLO-aware decode order.  Policies with their own decode ordering
+    /// (fifo arrival order, round-robin rotation) override it.
+    fn mixed_tick(&mut self, view: &SchedView, max_decode: usize) -> TickPlan {
+        let prefill = oldest_prefilling(view.active);
+        let mut ready: Vec<&ActiveInfo> =
+            view.active.iter().filter(|a| a.decode_ready()).collect();
+        ready.sort_by(|a, b| {
+            a.last_token_at.total_cmp(&b.last_token_at).then(a.id.cmp(&b.id))
+        });
+        let decode = ready.iter().take(max_decode).map(|a| a.id).collect();
+        TickPlan { prefill, decode }
+    }
 }
 
 /// Policy selector (config / CLI surface).
@@ -141,6 +209,17 @@ fn oldest_queued(queued: &[QueuedInfo]) -> Option<usize> {
         .map(|q| q.id)
 }
 
+/// The prefilling session every policy grants the chunk budget to:
+/// oldest arrival first, ties by id (shared by all `mixed_tick`s so the
+/// prefill ordering cannot silently fork between policies).
+fn oldest_prefilling(active: &[ActiveInfo]) -> Option<usize> {
+    active
+        .iter()
+        .filter(|a| a.prefill_remaining > 0)
+        .min_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)))
+        .map(|a| a.id)
+}
+
 /// Strict arrival order, one session at a time.
 struct Fifo;
 
@@ -162,6 +241,19 @@ impl SchedPolicy for Fifo {
             Some(id) => Action::Admit(id),
             None => Action::Idle,
         }
+    }
+
+    /// Chunked ticks keep fifo's arrival ordering at every decision
+    /// point: the oldest prefilling session gets the chunk budget and
+    /// the oldest ready sessions fill the decode batch (only the decode
+    /// sort key differs from the default tick plan).
+    fn mixed_tick(&mut self, view: &SchedView, max_decode: usize) -> TickPlan {
+        let prefill = oldest_prefilling(view.active);
+        let mut ready: Vec<&ActiveInfo> =
+            view.active.iter().filter(|a| a.decode_ready()).collect();
+        ready.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
+        let decode = ready.iter().take(max_decode).map(|a| a.id).collect();
+        TickPlan { prefill, decode }
     }
 }
 
@@ -213,6 +305,37 @@ impl SchedPolicy for RoundRobin {
         }
         picked
     }
+
+    /// Chunked ticks rotate the decode batch over the *ready* sessions
+    /// (id order, wrapping past the cursor) while the oldest prefilling
+    /// session gets the chunk budget; the cursor advances past the
+    /// batch so the next tick continues the rotation.
+    fn mixed_tick(&mut self, view: &SchedView, max_decode: usize) -> TickPlan {
+        let prefill = oldest_prefilling(view.active);
+        let mut ids: Vec<usize> = view
+            .active
+            .iter()
+            .filter(|a| a.decode_ready())
+            .map(|a| a.id)
+            .collect();
+        ids.sort_unstable();
+        let decode: Vec<usize> = if ids.is_empty() {
+            Vec::new()
+        } else {
+            let start = ids
+                .iter()
+                .position(|&id| Some(id) > self.cursor)
+                .unwrap_or(0);
+            (0..ids.len())
+                .map(|off| ids[(start + off) % ids.len()])
+                .take(max_decode)
+                .collect()
+        };
+        if let Some(&last) = decode.last() {
+            self.cursor = Some(last);
+        }
+        TickPlan { prefill, decode }
+    }
 }
 
 /// EDF admission on the TTFT deadline, least-recently-served decode.
@@ -242,6 +365,18 @@ impl SchedPolicy for SloAware {
             None => Action::Idle,
         }
     }
+
+    /// EDF admission also under chunked scheduling: the queued request
+    /// whose TTFT deadline expires soonest claims the free slot.
+    fn admit_pick(&mut self, view: &SchedView) -> Option<usize> {
+        if view.free_slots == 0 {
+            return None;
+        }
+        view.queued
+            .iter()
+            .min_by(|a, b| a.deadline.total_cmp(&b.deadline).then(a.id.cmp(&b.id)))
+            .map(|q| q.id)
+    }
 }
 
 #[cfg(test)]
@@ -253,7 +388,26 @@ mod tests {
     }
 
     fn a(id: usize, arrival: f64, last_token_at: f64) -> ActiveInfo {
-        ActiveInfo { id, arrival, emitted: 1, target: 8, last_token_at }
+        ActiveInfo {
+            id,
+            arrival,
+            emitted: 1,
+            target: 8,
+            last_token_at,
+            prefill_remaining: 0,
+        }
+    }
+
+    /// A session still mid-prefill (chunked mode).
+    fn pre(id: usize, arrival: f64, remaining: usize) -> ActiveInfo {
+        ActiveInfo {
+            id,
+            arrival,
+            emitted: 0,
+            target: 8,
+            last_token_at: arrival,
+            prefill_remaining: remaining,
+        }
     }
 
     #[test]
@@ -283,8 +437,7 @@ mod tests {
             free_slots: free,
         };
         // with a free slot and a queued request, prefill wins
-        static QUEUE: [QueuedInfo; 1] =
-            [QueuedInfo { id: 9, arrival: 1.9, deadline: 6.9 }];
+        static QUEUE: [QueuedInfo; 1] = [QueuedInfo { id: 9, arrival: 1.9, deadline: 6.9 }];
         assert_eq!(p.next_action(&view(&QUEUE, 1)), Action::Admit(9));
         // decode rotation cycles 1 -> 2 -> 5 -> 1 ...
         assert_eq!(p.next_action(&view(&[], 0)), Action::Decode(1));
@@ -329,6 +482,69 @@ mod tests {
         // ...and the cursor advanced past the whole batch: next pick
         // wraps to 1
         assert_eq!(p.next_action(&view), Action::Decode(1));
+    }
+
+    #[test]
+    fn default_mixed_tick_prefills_oldest_and_decodes_least_recently_served() {
+        let mut p = PolicyKind::SloAware.build();
+        let active = [
+            pre(1, 0.3, 5),          // prefilling, younger
+            pre(2, 0.1, 9),          // prefilling, oldest -> gets the chunk
+            a(3, 0.0, 2.5),
+            a(4, 0.05, 1.0),         // least recently served -> leads decode
+            a(5, 0.06, 1.5),
+        ];
+        let view = SchedView { now: 4.0, queued: &[], active: &active, free_slots: 0 };
+        let plan = p.mixed_tick(&view, 2);
+        assert_eq!(plan.prefill, Some(2));
+        assert_eq!(plan.decode, vec![4, 5]);
+        // finished sessions never decode
+        let mut done = a(6, 0.0, 0.1);
+        done.emitted = done.target;
+        let active = [done, a(7, 0.1, 0.2)];
+        let view = SchedView { now: 4.0, queued: &[], active: &active, free_slots: 0 };
+        let plan = p.mixed_tick(&view, 4);
+        assert_eq!(plan.prefill, None);
+        assert_eq!(plan.decode, vec![7]);
+    }
+
+    #[test]
+    fn fifo_mixed_tick_decodes_in_arrival_order() {
+        let mut p = PolicyKind::Fifo.build();
+        let active = [pre(9, 0.5, 3), a(1, 0.2, 9.0), a(2, 0.1, 0.5), a(3, 0.3, 1.0)];
+        let view = SchedView { now: 4.0, queued: &[], active: &active, free_slots: 0 };
+        let plan = p.mixed_tick(&view, 2);
+        assert_eq!(plan.prefill, Some(9));
+        // arrival order, not least-recently-served
+        assert_eq!(plan.decode, vec![2, 1]);
+    }
+
+    #[test]
+    fn round_robin_mixed_tick_rotates_ready_sessions() {
+        let mut p = PolicyKind::RoundRobin.build();
+        let active = [pre(9, 0.0, 4), a(1, 0.1, 1.0), a(2, 0.2, 1.1), a(5, 0.3, 0.9)];
+        let view = SchedView { now: 2.0, queued: &[], active: &active, free_slots: 0 };
+        // first tick rotates from the top of the ready id order ...
+        let plan = p.mixed_tick(&view, 2);
+        assert_eq!(plan.prefill, Some(9));
+        assert_eq!(plan.decode, vec![1, 2]);
+        // ... and the cursor advanced past the batch: next tick wraps
+        let plan = p.mixed_tick(&view, 2);
+        assert_eq!(plan.decode, vec![5, 1]);
+    }
+
+    #[test]
+    fn admit_pick_orders_by_arrival_or_deadline() {
+        let queued = [q(7, 1.0, 3.0), q(8, 0.5, 4.5)];
+        let view = SchedView { now: 2.0, queued: &queued, active: &[], free_slots: 1 };
+        // fifo / rr: oldest arrival
+        assert_eq!(PolicyKind::Fifo.build().admit_pick(&view), Some(8));
+        assert_eq!(PolicyKind::RoundRobin.build().admit_pick(&view), Some(8));
+        // slo: tightest deadline
+        assert_eq!(PolicyKind::SloAware.build().admit_pick(&view), Some(7));
+        // no slots -> nothing admitted
+        let full = SchedView { now: 2.0, queued: &queued, active: &[], free_slots: 0 };
+        assert_eq!(PolicyKind::SloAware.build().admit_pick(&full), None);
     }
 
     #[test]

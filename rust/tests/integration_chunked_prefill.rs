@@ -1,0 +1,376 @@
+//! Integration: chunked prefill and mixed prefill/decode continuous
+//! batching.
+//!
+//! Three pillars:
+//!
+//! 1. **Equivalence** — under a precision-invariant strategy (uniform
+//!    Bf16: no importance decision can change an execution precision),
+//!    chunked prefill with *any* chunk size reproduces the monolithic
+//!    `prefill_session` hidden states, first token, and TTFT-relevant
+//!    KV-cache contents, and the full generation after it is
+//!    token-identical; a `chunk_tokens = 0` fleet run is the legacy
+//!    monolithic scheduler, tick for tick (zero chunking telemetry,
+//!    byte-identical outcomes against the default config).
+//! 2. **Head-of-line blocking** — a fleet mixing one long-prompt session
+//!    into short-prompt decoders shows strictly lower p99 TPOT and a
+//!    strictly smaller worst inter-token stall with chunking on vs off:
+//!    the tentpole's actual win.
+//! 3. **Token accounting** — the token-budget scheduler conserves prompt
+//!    tokens (chunk sizes sum to prompt lengths) and respects its
+//!    per-tick budget, measured on the real engine counters.
+//!
+//! Engine-level tests need the real `tiny` artifacts and skip politely
+//! when they are missing (run `make artifacts`), matching the other
+//! integration suites.
+
+use std::sync::Arc;
+
+use dymoe::baselines::Uniform;
+use dymoe::config::{ServingConfig, SystemConfig, GB};
+use dymoe::coordinator::engine::{Engine, EngineOptions};
+use dymoe::model::assets::ModelAssets;
+use dymoe::quant::Precision;
+use dymoe::serving::arrival::TimedRequest;
+use dymoe::serving::policy::PolicyKind;
+use dymoe::serving::{run_fleet, FleetConfig};
+use dymoe::workload::Request;
+
+fn assets() -> Option<Arc<ModelAssets>> {
+    match ModelAssets::load("artifacts", "tiny") {
+        Ok(a) => Some(Arc::new(a)),
+        Err(_) => {
+            eprintln!("artifacts/tiny missing; run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn big_vram_sys() -> SystemConfig {
+    let mut sys = SystemConfig::edge_preset("tiny", 24).unwrap();
+    sys.hardware.vram_bytes = 1024 * GB;
+    sys
+}
+
+fn bf16_engine(a: &Arc<ModelAssets>) -> Engine {
+    Engine::with_options(
+        a,
+        big_vram_sys(),
+        Box::new(Uniform::new(Precision::Bf16)),
+        EngineOptions { collect_logits: true, collect_hidden: true, ..Default::default() },
+    )
+    .unwrap()
+}
+
+fn max_abs_err(x: &[f32], y: &[f32]) -> f32 {
+    x.iter().zip(y).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max)
+}
+
+// ---------------------------------------------------------------------
+// Engine-level equivalence (artifacts-gated)
+// ---------------------------------------------------------------------
+
+/// For every chunk size, resumable chunked prefill must reproduce the
+/// monolithic `prefill_session`: per-layer hidden states over the
+/// prompt's positions, KV-cache contents (what TTFT-relevant state the
+/// decode phase reads), the first token, and — after decoding both to
+/// completion — the whole token stream and its logits.  Uniform Bf16
+/// with ample VRAM pins the numerics: no precision decision can differ.
+#[test]
+fn chunked_prefill_matches_monolithic_for_all_chunk_sizes() {
+    let Some(a) = assets() else { return };
+    let prompt: Vec<i32> = vec![1, 5, 9, 13, 17, 30, 41];
+    let new_tokens = 5;
+
+    let mut mono = bf16_engine(&a);
+    let mut s_mono = mono.begin_session(&prompt, new_tokens, None, 0.0).unwrap();
+    mono.prefill_session(&mut s_mono).unwrap();
+    let kv_mono = s_mono.kv().clone();
+    while !s_mono.done() {
+        mono.decode_session(&mut s_mono).unwrap();
+    }
+    let o_mono = s_mono.into_output();
+
+    let m = a.manifest.model.clone();
+    let d = m.d_model;
+    let seq = prompt.len();
+    for chunk_size in [1usize, 2, 3, seq - 1, seq, seq + 100] {
+        let mut eng = bf16_engine(&a);
+        let mut s = eng.begin_session(&prompt, new_tokens, None, 0.0).unwrap();
+        let mut chunks = 0usize;
+        loop {
+            let before = s.prefill_cursor();
+            let done = eng.prefill_chunk(&mut s, chunk_size).unwrap();
+            chunks += 1;
+            // the cursor strictly advances by at most the budget
+            assert!(s.prefilled() || s.prefill_cursor() > before);
+            assert!(s.prefill_cursor() - before <= chunk_size);
+            if done {
+                break;
+            }
+        }
+        let expected_chunks = (seq + chunk_size - 1) / chunk_size;
+        assert_eq!(chunks, expected_chunks, "chunk count (size {chunk_size})");
+        assert_eq!(eng.stats.prefill_chunks as usize, chunks);
+        assert_eq!(eng.stats.prefill_chunk_tokens as usize, seq, "token conservation");
+
+        // first token + TTFT-relevant KV contents
+        assert_eq!(o_mono.tokens[0], s.out.tokens[0], "first token (chunk {chunk_size})");
+        let kv = s.kv();
+        let re = kv.row_elems();
+        for layer in 0..m.n_layers {
+            let err_k = max_abs_err(&kv.k[layer][..seq * re], &kv_mono.k[layer][..seq * re]);
+            let err_v = max_abs_err(&kv.v[layer][..seq * re], &kv_mono.v[layer][..seq * re]);
+            assert!(
+                err_k < 1e-5 && err_v < 1e-5,
+                "KV diverged at layer {layer} (chunk {chunk_size}): k {err_k} v {err_v}"
+            );
+        }
+        // per-layer prefill hidden states over the prompt's positions
+        assert_eq!(s.out.prefill_hidden.len(), o_mono.prefill_hidden.len());
+        for (l, (hc, hm)) in
+            s.out.prefill_hidden.iter().zip(&o_mono.prefill_hidden).enumerate()
+        {
+            let err = max_abs_err(&hc[..seq * d], &hm[..seq * d]);
+            assert!(err < 1e-5, "hidden diverged at layer {l} (chunk {chunk_size}): {err}");
+        }
+
+        // the rest of the generation is token- and logit-identical
+        while !s.done() {
+            eng.decode_session(&mut s).unwrap();
+        }
+        let o = s.into_output();
+        assert_eq!(o_mono.tokens, o.tokens, "tokens diverged (chunk {chunk_size})");
+        for (x, y) in o_mono.logits_per_step.iter().zip(&o.logits_per_step) {
+            assert!(max_abs_err(x, y) < 1e-5, "logits diverged (chunk {chunk_size})");
+        }
+    }
+}
+
+/// A chunk budget covering the whole prompt completes in one call and
+/// also matches the classic `run()` end to end.
+#[test]
+fn whole_prompt_chunk_is_one_step_and_matches_run() {
+    let Some(a) = assets() else { return };
+    let prompt = [1i32, 4, 8, 12, 16];
+
+    let mut classic = bf16_engine(&a);
+    let o = classic.run(&prompt, 4).unwrap();
+
+    let mut eng = bf16_engine(&a);
+    let mut s = eng.begin_session(&prompt, 4, None, 0.0).unwrap();
+    assert!(eng.prefill_chunk(&mut s, usize::MAX).unwrap());
+    assert_eq!(eng.stats.prefill_chunks, 1);
+    while !s.done() {
+        eng.decode_session(&mut s).unwrap();
+    }
+    assert_eq!(o.tokens, s.into_output().tokens);
+}
+
+// ---------------------------------------------------------------------
+// Fleet-level equivalence (artifacts-gated)
+// ---------------------------------------------------------------------
+
+fn fleet_cfg(policy: PolicyKind, max_sessions: usize, batch: usize, chunk: usize) -> FleetConfig {
+    FleetConfig {
+        serving: ServingConfig {
+            max_sessions,
+            ttft_slo_s: 1e6,
+            tpot_slo_s: 1e6,
+            max_decode_batch: batch,
+            chunk_tokens: chunk,
+        },
+        policy,
+    }
+}
+
+fn timed(id: usize, arrival: f64, prompt: Vec<i32>, max_new: usize) -> TimedRequest {
+    TimedRequest { id, arrival, request: Request { prompt, max_new } }
+}
+
+/// A mixed short/long trace: `n_short` two-token prompts plus one
+/// long-prompt session (the whole `max_seq` bucket), all arriving at
+/// t = 0 — the head-of-line scenario.
+fn hol_trace(a: &Arc<ModelAssets>, n_short: usize) -> Vec<TimedRequest> {
+    let m = &a.manifest.model;
+    let short_new = (m.max_cache - m.max_seq).clamp(1, 8);
+    let long_new = (m.max_cache - m.max_seq).clamp(1, 2);
+    let mut trace: Vec<TimedRequest> = (0..n_short)
+        .map(|i| timed(i, 0.0, vec![1, 10 + (3 * i as i32) % 40], short_new))
+        .collect();
+    let long_prompt: Vec<i32> = (0..m.max_seq).map(|i| 1 + (i as i32 * 7) % 60).collect();
+    trace.push(timed(n_short, 0.0, long_prompt, long_new));
+    trace
+}
+
+/// `chunk_tokens = 0` dispatches to the untouched monolithic scheduler:
+/// the run is byte-identical to the default config (whose default *is*
+/// 0) per completed request, and none of the chunking machinery engages
+/// (zero chunks, zero mixed ticks — the telemetry regression signal).
+/// Together with `fleet_batch_one_matches_interleaved_reference_loop`
+/// in `integration_serving.rs`, which pins that same monolithic loop
+/// against an inline reference, this enforces the tick-for-tick
+/// equivalence of the `--chunk-tokens 0` path.
+#[test]
+fn chunk_zero_fleet_is_the_monolithic_path_tick_for_tick() {
+    let Some(a) = assets() else { return };
+    for policy in [PolicyKind::SloAware, PolicyKind::RoundRobin] {
+        let mut e1 = bf16_engine(&a);
+        let explicit = run_fleet(
+            &mut e1,
+            hol_trace(&a, 3),
+            &fleet_cfg(policy, 4, 2, 0),
+        )
+        .unwrap();
+        let mut e2 = bf16_engine(&a);
+        let defaulted = run_fleet(
+            &mut e2,
+            hol_trace(&a, 3),
+            &FleetConfig {
+                serving: ServingConfig {
+                    max_sessions: 4,
+                    ttft_slo_s: 1e6,
+                    tpot_slo_s: 1e6,
+                    max_decode_batch: 2,
+                    ..Default::default()
+                },
+                policy,
+            },
+        )
+        .unwrap();
+
+        // no chunking machinery on the legacy path
+        assert_eq!(explicit.phase.prefill_chunks, 0);
+        assert_eq!(explicit.phase.prefill_chunk_tokens, 0);
+        assert_eq!(explicit.phase.mixed_steps, 0);
+
+        assert_eq!(explicit.per_request.len(), defaulted.per_request.len());
+        for (x, y) in explicit.per_request.iter().zip(&defaulted.per_request) {
+            assert_eq!(x.id, y.id, "{}: completion order diverged", policy.name());
+            // exact equality: identical engine ops on identical timelines
+            assert_eq!(x.ttft, y.ttft, "{}: TTFT diverged (id {})", policy.name(), x.id);
+            assert_eq!(x.tpot, y.tpot, "{}: TPOT diverged (id {})", policy.name(), x.id);
+            assert_eq!(
+                x.finished_at, y.finished_at,
+                "{}: completion time diverged (id {})",
+                policy.name(),
+                x.id
+            );
+            assert_eq!(x.tokens, y.tokens);
+        }
+        assert_eq!(explicit.steps, defaulted.steps);
+    }
+}
+
+/// The head-of-line-blocking regression the tentpole exists to fix: a
+/// long prompt admitted among short-prompt decoders.  With monolithic
+/// prefill every decoder stalls for the whole long prefill (one huge
+/// inter-token gap); with chunking on, prefill proceeds `chunk_tokens`
+/// at a time fused with the decoders' tokens, so the worst stall is
+/// bounded by a chunk's fused service time and the fleet's p99 TPOT
+/// drops strictly.
+#[test]
+fn hol_blocking_chunked_prefill_lowers_decode_tail() {
+    let Some(a) = assets() else { return };
+    {
+        // the scenario needs a long prompt worth tiling and shorts with
+        // several decode tokens to stall; the tiny model provides both
+        let m = &a.manifest.model;
+        if m.max_seq < 8 || m.max_cache - m.max_seq < 4 {
+            eprintln!("tiny model too small for the HOL scenario; skipping");
+            return;
+        }
+    }
+    let n_short = 4;
+    let sessions = n_short + 1;
+
+    let mut mono_engine = bf16_engine(&a);
+    let mono = run_fleet(
+        &mut mono_engine,
+        hol_trace(&a, n_short),
+        &fleet_cfg(PolicyKind::SloAware, sessions, n_short, 0),
+    )
+    .unwrap();
+    let mut chunked_engine = bf16_engine(&a);
+    let chunked = run_fleet(
+        &mut chunked_engine,
+        hol_trace(&a, n_short),
+        &fleet_cfg(PolicyKind::SloAware, sessions, n_short, 4),
+    )
+    .unwrap();
+
+    // same work completed either way
+    assert_eq!(mono.metrics.completed, sessions);
+    assert_eq!(chunked.metrics.completed, sessions);
+    let count_by_id = |o: &dymoe::serving::FleetOutcome| {
+        let mut v: Vec<(usize, usize)> =
+            o.per_request.iter().map(|r| (r.id, r.tokens)).collect();
+        v.sort_unstable();
+        v
+    };
+    assert_eq!(count_by_id(&mono), count_by_id(&chunked));
+
+    // chunking actually engaged: the long prompt was tiled (more chunks
+    // than sessions means at least one prompt took several), some ticks
+    // fused prefill with decode
+    assert!(chunked.phase.prefill_chunks > sessions as u64, "long prompt not tiled");
+    assert!(chunked.phase.mixed_steps > 0, "no fused prefill+decode ticks");
+    assert!(chunked.phase.mean_chunk() <= 4.0 + 1e-12);
+
+    // the win, part 1: the worst prefill-interference stall a decoding
+    // session suffers is strictly smaller with chunking on
+    let worst_short_stall = |o: &dymoe::serving::FleetOutcome| {
+        o.per_request
+            .iter()
+            .filter(|r| r.id < n_short)
+            .map(|r| r.max_stall)
+            .fold(0.0f64, f64::max)
+    };
+    let mono_stall = worst_short_stall(&mono);
+    let chunked_stall = worst_short_stall(&chunked);
+    assert!(
+        chunked_stall < mono_stall,
+        "chunking did not bound the interference stall: {chunked_stall} vs {mono_stall}"
+    );
+
+    // the win, part 2: strictly lower fleet p99 TPOT
+    let mono_p99 = mono.metrics.tpot.percentile(99.0);
+    let chunked_p99 = chunked.metrics.tpot.percentile(99.0);
+    assert!(
+        chunked_p99 < mono_p99,
+        "chunking did not improve p99 TPOT: {chunked_p99} vs {mono_p99}"
+    );
+}
+
+/// Engine-counter token accounting over a chunked fleet run: chunk
+/// sizes conserve prompt tokens exactly, the mean chunk respects the
+/// budget, and mixed ticks never outnumber chunks.
+#[test]
+fn chunked_fleet_conserves_prompt_tokens() {
+    let Some(a) = assets() else { return };
+    for policy in PolicyKind::ALL {
+        let chunk_tokens = 3;
+        let trace = hol_trace(&a, 3);
+        let prompt_tokens: u64 =
+            trace.iter().map(|t| t.request.prompt.len() as u64).sum();
+        let mut engine = bf16_engine(&a);
+        let outcome = run_fleet(
+            &mut engine,
+            trace,
+            &fleet_cfg(policy, 4, 2, chunk_tokens),
+        )
+        .unwrap();
+        assert_eq!(outcome.metrics.completed, 4, "{} lost requests", policy.name());
+        assert_eq!(
+            outcome.phase.prefill_chunk_tokens, prompt_tokens,
+            "{}: chunk tokens != prompt tokens",
+            policy.name()
+        );
+        assert!(outcome.phase.mean_chunk() <= chunk_tokens as f64 + 1e-12);
+        assert!(outcome.phase.mixed_steps <= outcome.phase.prefill_chunks);
+        // TTFT breakdown holds per request under chunking too
+        for r in &outcome.per_request {
+            assert!(r.ttft >= r.queue_delay - 1e-12);
+            assert!(r.finished_at >= r.arrival);
+        }
+    }
+}

@@ -164,6 +164,7 @@ fn fleet_cfg_batched(
             ttft_slo_s: 1e6,
             tpot_slo_s: 1e6,
             max_decode_batch,
+            chunk_tokens: 0,
         },
         policy,
     }

@@ -168,7 +168,13 @@ fn prop_cache_invariants_under_random_workload() {
                     }
                 }
                 _ => {
-                    cache.unpin_all();
+                    // pins never change membership, whichever class drops
+                    use dymoe::coordinator::cache::PinClass;
+                    cache.unpin_all(if rng.below(2) == 0 {
+                        PinClass::Warm
+                    } else {
+                        PinClass::Layer
+                    });
                 }
             }
             assert!(cache.used_bytes() <= capacity, "capacity violated");
@@ -363,6 +369,7 @@ fn prop_scheduler_no_starvation_and_goodput_bounded() {
                     emitted: s.token_times.len(),
                     target: s.target,
                     last_token_at: s.last_token_at,
+                    prefill_remaining: 0,
                 })
                 .collect();
             let free_slots = max_sessions.saturating_sub(active.len());
@@ -479,6 +486,214 @@ fn prop_scheduler_no_starvation_and_goodput_bounded() {
         };
         metrics.record(s.id, s.arrival, &out, slo);
     }
+}
+
+/// Token-budget (chunked-prefill) scheduler invariants, engine-free:
+/// drive every policy's `mixed_tick` over random arrival / prompt-length
+/// mixes through a model of the chunked `run_fleet` loop.  Per tick the
+/// plan must respect both budgets (at most `chunk_tokens` prefill tokens
+/// for one session, at most `max_decode` decode tokens), never decode a
+/// session that is not ready, and strictly advance the granted session's
+/// cursor (no prefill starvation); across the run every session's chunk
+/// sizes must sum to exactly its prompt length (token conservation) and
+/// every session must finish within a bounded number of ticks.
+#[test]
+fn prop_token_budget_scheduler_conserves_tokens_and_advances() {
+    use dymoe::serving::policy::{ActiveInfo, PolicyKind, QueuedInfo, SchedView, TickPlan};
+
+    struct Sim {
+        id: usize,
+        arrival: f64,
+        prompt_len: usize,
+        cursor: usize,
+        chunk_sum: usize,
+        emitted: usize,
+        target: usize,
+        last_token_at: f64,
+    }
+
+    check("token-budget-scheduler", 60, |rng| {
+        let n = rng.range(1, 16);
+        let policy_kind = PolicyKind::ALL[rng.below(PolicyKind::ALL.len())];
+        let max_sessions = rng.range(1, 5);
+        let max_decode = rng.range(1, 5);
+        let chunk_tokens = rng.range(1, 6);
+
+        let mut t = 0.0;
+        let trace: Vec<(usize, f64, usize, usize)> = (0..n)
+            .map(|id| {
+                t += rng.exponential(0.5 + rng.f64() * 4.0);
+                (id, t, rng.range(1, 24), rng.range(1, 6)) // prompt len, decode target
+            })
+            .collect();
+        let total_prompt: usize = trace.iter().map(|&(_, _, p, _)| p).sum();
+        let total_decode: usize = trace.iter().map(|&(_, _, _, d)| d).sum();
+
+        let mut policy = policy_kind.build();
+        let mut next_pending = 0usize;
+        let mut queued: Vec<(usize, f64, usize, usize)> = Vec::new();
+        let mut active: Vec<Sim> = Vec::new();
+        let mut completed = 0usize;
+        let mut clock = 0.0f64;
+        let mut ticks = 0usize;
+        let tick_budget = 4 * (total_prompt + total_decode + n) + 64;
+
+        loop {
+            while next_pending < n && trace[next_pending].1 <= clock {
+                queued.push(trace[next_pending]);
+                next_pending += 1;
+            }
+            if queued.is_empty() && active.is_empty() {
+                if next_pending < n {
+                    let r = trace[next_pending];
+                    clock = clock.max(r.1);
+                    queued.push(r);
+                    next_pending += 1;
+                    continue;
+                }
+                break;
+            }
+            ticks += 1;
+            assert!(
+                ticks <= tick_budget,
+                "{} starved: {completed} of {n} done after {ticks} ticks",
+                policy_kind.name()
+            );
+
+            let mk_view = |queued: &[(usize, f64, usize, usize)],
+                           active: &[Sim],
+                           free: usize,
+                           now: f64| {
+                let q: Vec<QueuedInfo> = queued
+                    .iter()
+                    .map(|&(id, arrival, _, _)| QueuedInfo {
+                        id,
+                        arrival,
+                        deadline: arrival + 1.0,
+                    })
+                    .collect();
+                let a: Vec<ActiveInfo> = active
+                    .iter()
+                    .map(|s| ActiveInfo {
+                        id: s.id,
+                        arrival: s.arrival,
+                        emitted: s.emitted,
+                        target: s.target,
+                        last_token_at: s.last_token_at,
+                        prefill_remaining: if s.emitted > 0 {
+                            0
+                        } else {
+                            s.prompt_len - s.cursor
+                        },
+                    })
+                    .collect();
+                (q, a, free, now)
+            };
+
+            // admission fills free slots (no engine work in chunked mode)
+            while active.len() < max_sessions && !queued.is_empty() {
+                let free = max_sessions - active.len();
+                let (q, a, free, now) = mk_view(&queued, &active, free, clock);
+                let view = SchedView { now, queued: &q, active: &a, free_slots: free };
+                let Some(id) = policy.admit_pick(&view) else { break };
+                let pos = queued
+                    .iter()
+                    .position(|r| r.0 == id)
+                    .unwrap_or_else(|| panic!("admitted unknown session {id}"));
+                let (id, arrival, prompt_len, target) = queued.swap_remove(pos);
+                active.push(Sim {
+                    id,
+                    arrival,
+                    prompt_len,
+                    cursor: 0,
+                    chunk_sum: 0,
+                    emitted: 0,
+                    target,
+                    last_token_at: arrival,
+                });
+            }
+            assert!(!active.is_empty(), "admission wedged");
+
+            let (q, a, free, now) =
+                mk_view(&queued, &active, max_sessions - active.len(), clock);
+            let view = SchedView { now, queued: &q, active: &a, free_slots: free };
+            let mut plan = policy.mixed_tick(&view, max_decode);
+            if plan.is_empty() {
+                // the run_fleet work-conserving fallback
+                let pre = a.iter().find(|x| x.prefill_remaining > 0).map(|x| x.id);
+                let dec: Vec<usize> =
+                    a.iter().filter(|x| x.decode_ready()).take(1).map(|x| x.id).collect();
+                assert!(
+                    pre.is_some() || !dec.is_empty(),
+                    "{} idle with runnable sessions",
+                    policy_kind.name()
+                );
+                plan = TickPlan { prefill: pre, decode: dec };
+            }
+
+            // ---- budget + legality invariants ------------------------
+            assert!(
+                plan.decode.len() <= max_decode,
+                "{}: decode batch {} over budget {max_decode}",
+                policy_kind.name(),
+                plan.decode.len()
+            );
+            let mut seen = std::collections::HashSet::new();
+            for id in &plan.decode {
+                assert!(seen.insert(*id), "duplicate {id} in decode plan");
+                let s = active.iter().find(|s| s.id == *id).expect("decode of inactive");
+                assert!(s.emitted > 0, "decoded un-prefilled session {id}");
+                assert!(s.emitted < s.target, "decoded finished session {id}");
+            }
+
+            let mut advanced = 0usize;
+            if let Some(id) = plan.prefill {
+                let s = active
+                    .iter_mut()
+                    .find(|s| s.id == id)
+                    .expect("chunked an inactive session");
+                assert_eq!(s.emitted, 0, "chunked a prefilled session {id}");
+                let before = s.cursor;
+                let granted = chunk_tokens.min(s.prompt_len - s.cursor);
+                // the cursor strictly advances and never over-runs
+                assert!(granted >= 1 && granted <= chunk_tokens);
+                s.cursor += granted;
+                s.chunk_sum += granted;
+                assert!(s.cursor > before && s.cursor <= s.prompt_len);
+                advanced += granted;
+                if s.cursor == s.prompt_len {
+                    // token conservation: chunk sizes tile the prompt
+                    assert_eq!(
+                        s.chunk_sum, s.prompt_len,
+                        "chunks of session {id} do not sum to its prompt"
+                    );
+                    s.emitted = 1; // first token
+                }
+            }
+            // synthetic fused tick, sublinear in its token budget
+            clock += 0.01 + 0.002 * (advanced + plan.decode.len()) as f64;
+            let mut finished: Vec<usize> = Vec::new();
+            for s in active.iter_mut() {
+                if plan.prefill == Some(s.id) && s.emitted == 1 && s.target == 1 {
+                    finished.push(s.id);
+                    continue;
+                }
+                if plan.decode.contains(&s.id) {
+                    s.emitted += 1;
+                    s.last_token_at = clock;
+                    if s.emitted >= s.target {
+                        finished.push(s.id);
+                    }
+                }
+            }
+            for fid in finished {
+                let pos = active.iter().position(|s| s.id == fid).unwrap();
+                active.swap_remove(pos);
+                completed += 1;
+            }
+        }
+        assert_eq!(completed, n, "{} lost sessions", policy_kind.name());
+    });
 }
 
 #[test]
