@@ -7,30 +7,45 @@
 //! is the classic serving-paper "rate vs p99" curve, produced on the
 //! co-simulated virtual timeline (deterministic under the fixed seed).
 //!
+//! A **replica-scaling sweep** closes the file: 1/2/4-replica clusters
+//! (fresh engines sharing one compiled executor) under every dispatch
+//! policy on the *same* seeded trace, reporting goodput, p99 TTFT, and
+//! the load-imbalance statistic — the cluster tentpole's scaling curve.
+//!
 //! `--json` runs a small fixed smoke configuration instead and writes
 //! `BENCH_serving.json` (p50/p99 TTFT/TPOT, expert dedup ratio per
-//! decode-batch setting, plus a chunked-vs-monolithic long-prompt
+//! decode-batch setting, a chunked-vs-monolithic long-prompt
 //! head-of-line sweep: p99 TPOT, worst inter-token stall, chunk and
-//! mixed-tick counts per `chunk_tokens` setting) so CI can track the
-//! perf trajectory in a machine-readable form.
+//! mixed-tick counts per `chunk_tokens` setting, plus the
+//! `replica_scaling_sweep`) so CI can track the perf trajectory in a
+//! machine-readable form.
 //!
 //! Skips politely if `make artifacts` has not been run.
 
 use std::collections::BTreeMap;
+use std::rc::Rc;
 use std::sync::Arc;
 use std::time::Instant;
 
 use dymoe::config::{PolicyConfig, ServingConfig, SystemConfig};
-use dymoe::coordinator::engine::Engine;
+use dymoe::coordinator::engine::{Engine, EngineOptions};
 use dymoe::coordinator::strategy::DyMoEStrategy;
 use dymoe::model::assets::ModelAssets;
+use dymoe::model::executor::Executor;
 use dymoe::serving::arrival::{ArrivalGen, ArrivalProcess, TimedRequest};
-use dymoe::serving::policy::PolicyKind;
-use dymoe::serving::{run_fleet, FleetConfig, FleetOutcome};
+use dymoe::serving::policy::{DispatchKind, PolicyKind};
+use dymoe::serving::{run_cluster, run_fleet, ClusterOutcome, FleetConfig, FleetOutcome};
 use dymoe::util::json::Json;
 use dymoe::workload::{Request, TraceGen};
 
 const OUT_PATH: &str = "BENCH_serving.json";
+
+/// Replica-scaling sweep operating point, shared by the text-mode sweep
+/// and the `--json` smoke mode so the two never silently diverge: a
+/// dense arrival rate (the single replica must saturate for the scaling
+/// win to show) over 1/2/4-replica clusters.
+const SCALING_RATE: f64 = 0.8;
+const SCALING_REPLICAS: [usize; 3] = [1, 2, 4];
 
 /// One deterministic fleet run (fresh engine, fixed seeds).
 fn run_point(
@@ -61,8 +76,49 @@ fn run_point(
             ..Default::default()
         },
         policy,
+        ..Default::default()
     };
     run_fleet(&mut engine, trace, &cfg)
+}
+
+/// One deterministic **cluster** run: `replicas` fresh engines sharing
+/// one compiled executor, the same seeded trace for every point, one
+/// dispatch policy.  The replica-scaling sweep drives this.
+fn run_cluster_point(
+    assets: &Arc<ModelAssets>,
+    rate: f64,
+    replicas: usize,
+    dispatch: DispatchKind,
+    requests: usize,
+) -> anyhow::Result<ClusterOutcome> {
+    let m = assets.manifest.model.clone();
+    let exec = Rc::new(Executor::new(assets.clone())?);
+    let mut engines = Vec::with_capacity(replicas);
+    for _ in 0..replicas {
+        let sys = SystemConfig::edge_preset("mixtral-mini", 16)?;
+        let strat = Box::new(DyMoEStrategy::new(PolicyConfig::default()));
+        engines.push(Engine::with_executor(
+            assets,
+            sys,
+            strat,
+            EngineOptions::default(),
+            exec.clone(),
+        )?);
+    }
+    let mut content =
+        TraceGen::new(11, m.max_seq.min(80), (m.max_cache - m.max_seq).min(12));
+    let trace = ArrivalGen::generate(
+        0x5EED,
+        ArrivalProcess::Poisson { rate },
+        &mut content,
+        requests,
+    )?;
+    let cfg = FleetConfig {
+        serving: ServingConfig { max_sessions: 8, max_decode_batch: 8, ..Default::default() },
+        policy: PolicyKind::SloAware,
+        dispatch,
+    };
+    run_cluster(&mut engines, trace, &cfg)
 }
 
 /// The head-of-line scenario: short-prompt decoders plus one long
@@ -105,6 +161,7 @@ fn run_hol_point(
             ..Default::default()
         },
         policy: PolicyKind::SloAware,
+        ..Default::default()
     };
     run_fleet(&mut engine, trace, &cfg)
 }
@@ -166,15 +223,47 @@ fn smoke_json(assets: &Arc<ModelAssets>) -> anyhow::Result<Json> {
         p.insert("mixed_ticks".to_string(), num(o.phase.mixed_steps as f64));
         hol_points.push(Json::Obj(p));
     }
+    // Replica-scaling sweep: the same seeded trace over 1/2/4-replica
+    // clusters x every dispatch policy — the scaling win (higher
+    // goodput, lower p99 TTFT at 4 replicas) is the acceptance signal.
+    let mut scaling_points = Vec::new();
+    for &replicas in &SCALING_REPLICAS {
+        for dispatch in DispatchKind::ALL {
+            let o = run_cluster_point(assets, SCALING_RATE, replicas, dispatch, requests)?;
+            let mut p = BTreeMap::new();
+            p.insert("replicas".to_string(), num(replicas as f64));
+            p.insert("dispatch".to_string(), Json::Str(dispatch.name().to_string()));
+            p.insert("completed".to_string(), num(o.fleet.metrics.completed as f64));
+            p.insert("ttft_p50_s".to_string(), num(o.fleet.metrics.ttft.percentile(50.0)));
+            p.insert("ttft_p99_s".to_string(), num(o.fleet.metrics.ttft.percentile(99.0)));
+            p.insert("tpot_p99_s".to_string(), num(o.fleet.metrics.tpot.percentile(99.0)));
+            p.insert("goodput_rps".to_string(), num(o.fleet.metrics.goodput_rps()));
+            p.insert(
+                "throughput_tps".to_string(),
+                num(o.fleet.metrics.throughput_tps()),
+            );
+            p.insert(
+                "slo_attainment".to_string(),
+                num(o.fleet.metrics.slo_attainment()),
+            );
+            p.insert("load_imbalance".to_string(), num(o.load_imbalance));
+            p.insert("util_gpu".to_string(), num(o.fleet.utilization.gpu));
+            p.insert("util_pcie".to_string(), num(o.fleet.utilization.pcie));
+            p.insert("util_nvme".to_string(), num(o.fleet.utilization.nvme));
+            scaling_points.push(Json::Obj(p));
+        }
+    }
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("serving".to_string()));
     root.insert("model".to_string(), Json::Str("mixtral-mini".to_string()));
     root.insert("policy".to_string(), Json::Str("slo".to_string()));
     root.insert("requests_per_point".to_string(), num(requests as f64));
     root.insert("rate_rps".to_string(), num(rate));
+    root.insert("scaling_rate_rps".to_string(), num(SCALING_RATE));
     root.insert("skipped".to_string(), Json::Bool(false));
     root.insert("points".to_string(), Json::Arr(points));
     root.insert("hol_long_prompt_sweep".to_string(), Json::Arr(hol_points));
+    root.insert("replica_scaling_sweep".to_string(), Json::Arr(scaling_points));
     Ok(Json::Obj(root))
 }
 
@@ -269,6 +358,31 @@ fn main() -> anyhow::Result<()> {
             o.phase.prefill_chunks,
             o.phase.mixed_steps,
         );
+    }
+    println!();
+    println!(
+        "### replica-scaling sweep (slo policy, Poisson {SCALING_RATE} r/s, \
+         {requests} requests, same trace per point)"
+    );
+    println!(
+        "{:<9} {:<9} {:>12} {:>12} {:>12} {:>10} {:>8} {:>10}",
+        "replicas", "dispatch", "TTFT p99", "goodput r/s", "tok/s", "imbalance", "gpu %", "wall (s)"
+    );
+    for &replicas in &SCALING_REPLICAS {
+        for dispatch in DispatchKind::ALL {
+            let wall = Instant::now();
+            let o = run_cluster_point(&assets, SCALING_RATE, replicas, dispatch, requests)?;
+            println!(
+                "{replicas:<9} {:<9} {:>12.4} {:>12.3} {:>12.1} {:>10.2} {:>7.0}% {:>10.2}",
+                dispatch.name(),
+                o.fleet.metrics.ttft.percentile(99.0),
+                o.fleet.metrics.goodput_rps(),
+                o.fleet.metrics.throughput_tps(),
+                o.load_imbalance,
+                o.fleet.utilization.gpu * 100.0,
+                wall.elapsed().as_secs_f64(),
+            );
+        }
     }
     Ok(())
 }

@@ -107,6 +107,50 @@ impl Default for HardwareConfig {
     }
 }
 
+impl HardwareConfig {
+    /// Parse a per-replica hardware spec (the `serve-fleet --replica-hw`
+    /// flag): `VRAM_GB[:PCIE_GBPS[:GPU_TFLOPS]]` over the default edge
+    /// testbed, e.g. `24` (just a VRAM cap), `12:8` (smaller card on a
+    /// narrower link), `8:4:10` (a genuinely LITTLE device).  Repeating
+    /// the flag with different specs models a heterogeneous big.LITTLE
+    /// edge cluster in one run.
+    pub fn parse_spec(spec: &str) -> Result<HardwareConfig> {
+        let mut hw = HardwareConfig::default();
+        let mut parts = spec.split(':');
+        let vram: u64 = parts
+            .next()
+            .unwrap_or("")
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--replica-hw {spec:?}: VRAM_GB must be an integer"))?;
+        if vram == 0 {
+            bail!("--replica-hw {spec:?}: VRAM_GB must be > 0");
+        }
+        hw.vram_bytes = vram * GB;
+        if let Some(p) = parts.next() {
+            let gbps: f64 = p
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--replica-hw {spec:?}: PCIE_GBPS must be a number"))?;
+            if !gbps.is_finite() || gbps <= 0.0 {
+                bail!("--replica-hw {spec:?}: PCIE_GBPS must be > 0");
+            }
+            hw.pcie_gbps = gbps * 1e9;
+        }
+        if let Some(p) = parts.next() {
+            let tflops: f64 = p
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--replica-hw {spec:?}: GPU_TFLOPS must be a number"))?;
+            if !tflops.is_finite() || tflops <= 0.0 {
+                bail!("--replica-hw {spec:?}: GPU_TFLOPS must be > 0");
+            }
+            hw.gpu_tflops = tflops * 1e12;
+        }
+        if parts.next().is_some() {
+            bail!("--replica-hw {spec:?}: expected VRAM_GB[:PCIE_GBPS[:GPU_TFLOPS]]");
+        }
+        Ok(hw)
+    }
+}
+
 pub const GB: u64 = 1_000_000_000;
 
 /// Where sub-critical experts land under DyMoE's dynamic quantization.
@@ -217,6 +261,16 @@ pub struct ServingConfig {
     /// per-layer engine pass, bounding how long a long prompt can stall
     /// concurrent decoders (head-of-line blocking).
     pub chunk_tokens: usize,
+    /// DyMoE replicas in the edge cluster, each with its own engine,
+    /// expert cache, and virtual timeline; a dispatch policy
+    /// ([`crate::serving::policy::DispatchKind`] on the fleet config)
+    /// routes each arriving request to one of them.  1 (the default) is
+    /// the classic single-device fleet, tick for tick.  The per-replica
+    /// limits above (`max_sessions`, `max_decode_batch`, `chunk_tokens`)
+    /// apply to *each* replica.  The engine slice handed to
+    /// `run_cluster` is authoritative for cluster size; a value above 1
+    /// that disagrees with it is rejected there (1 means "unset").
+    pub replicas: usize,
 }
 
 impl Default for ServingConfig {
@@ -229,6 +283,7 @@ impl Default for ServingConfig {
             tpot_slo_s: 0.5,
             max_decode_batch: 1,
             chunk_tokens: 0,
+            replicas: 1,
         }
     }
 }
@@ -307,6 +362,32 @@ mod tests {
         assert!((p.lambda() - 1.0).abs() < 1e-9);
         p.retention = 0.5;
         assert!((p.lambda() - 0.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn replica_hw_spec_parses_overrides() {
+        let hw = HardwareConfig::parse_spec("24").unwrap();
+        assert_eq!(hw.vram_bytes, 24 * GB);
+        assert_eq!(hw.pcie_gbps, HardwareConfig::default().pcie_gbps);
+
+        let hw = HardwareConfig::parse_spec("12:8").unwrap();
+        assert_eq!(hw.vram_bytes, 12 * GB);
+        assert!((hw.pcie_gbps - 8e9).abs() < 1.0);
+        assert_eq!(hw.gpu_tflops, HardwareConfig::default().gpu_tflops);
+
+        let hw = HardwareConfig::parse_spec("8:4:10").unwrap();
+        assert_eq!(hw.vram_bytes, 8 * GB);
+        assert!((hw.pcie_gbps - 4e9).abs() < 1.0);
+        assert!((hw.gpu_tflops - 10e12).abs() < 1.0);
+
+        for bad in ["", "0", "x", "8:0", "8:-1", "8:4:0", "8:4:10:7", "8:nan"] {
+            assert!(HardwareConfig::parse_spec(bad).is_err(), "{bad:?} accepted");
+        }
+    }
+
+    #[test]
+    fn serving_default_is_single_replica() {
+        assert_eq!(ServingConfig::default().replicas, 1);
     }
 
     #[test]

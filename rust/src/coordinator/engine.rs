@@ -374,6 +374,16 @@ impl Engine {
         self.timeline.gpu.free_at
     }
 
+    /// Snapshot of the cumulative busy seconds on every device channel.
+    /// Like [`Engine::stats`], these counters grow over the engine's
+    /// whole lifetime and are **not** cleared by
+    /// [`Engine::reset_stats`]; per-run consumers (the serving replica
+    /// layer) must snapshot at run start and report the delta, or an
+    /// engine reused across runs double-counts earlier runs' busy time.
+    pub fn busy_totals(&self) -> crate::memory::BusyTotals {
+        self.timeline.busy_totals()
+    }
+
     /// Serve one request, sampling greedily.
     pub fn run(&mut self, prompt: &[i32], max_new: usize) -> Result<RequestOutput> {
         self.run_forced(prompt, max_new, None)
@@ -1301,7 +1311,16 @@ impl Engine {
         self.prefetched_for.values().map(|v| v.len() as u64).sum()
     }
 
-    /// Reset cumulative statistics (keeps cache contents / clock).
+    /// Reset the cumulative run counters: [`Engine::stats`],
+    /// [`Engine::prefetch_stats`], the in-flight look-ahead bookkeeping,
+    /// and the cache's *hit/miss counters* (`cache.stats`).  Cache
+    /// **contents**, the virtual clock, and the timeline's busy totals
+    /// are kept — a reset engine keeps serving from a warm state.  Note
+    /// the serving layer never calls this: `run_fleet` / `run_cluster`
+    /// snapshot `stats` and `busy_totals()` at run start and report
+    /// deltas, so reusing an engine across runs (with or without a
+    /// reset in between) can never double-count
+    /// (`tests/integration_cluster.rs` pins this).
     pub fn reset_stats(&mut self) {
         self.stats = EngineStats::default();
         self.prefetch_stats = PrefetchStats::default();

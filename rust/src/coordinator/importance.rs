@@ -65,6 +65,29 @@ pub fn decode_importance(gate_probs: &[f32]) -> Vec<f64> {
     gate_probs.iter().map(|&g| g as f64).collect()
 }
 
+/// Shared accumulation core of [`batch_gate_mass`] and
+/// [`mixed_gate_mass`]: fold row-major `[rows, n_experts]` gate rows
+/// into `mass`, sequentially in row order.  Sequential row order is
+/// load-bearing — both public wrappers inherit the exact float
+/// accumulation order of their original inline loops, so the bitwise
+/// identities they promise (`batch == 1` is the identity; no prefill
+/// rows degenerates `mixed` to `batch`) survive the deduplication.
+fn accumulate_gate_rows(mass: &mut [f32], rows: &[f32]) {
+    for row in rows.chunks_exact(mass.len()) {
+        for (m, &g) in mass.iter_mut().zip(row) {
+            *m += g;
+        }
+    }
+}
+
+/// Scale accumulated mass by `1 / rows` (the mean over gate rows).
+fn normalize_gate_mass(mass: &mut [f32], rows: usize) {
+    let inv = 1.0 / rows as f32;
+    for m in mass {
+        *m *= inv;
+    }
+}
+
 /// Batch-aggregated gate mass for a cross-session decode step: the mean
 /// of `batch` row-major `[batch, n_experts]` gate rows, one value per
 /// expert.  The result is itself a probability distribution (rows sum to
@@ -78,15 +101,8 @@ pub fn batch_gate_mass(gate_probs: &[f32], batch: usize, n_experts: usize) -> Ve
     assert_eq!(gate_probs.len(), batch * n_experts, "gate batch shape");
     assert!(batch > 0, "empty gate batch");
     let mut mass = vec![0f32; n_experts];
-    for row in 0..batch {
-        for (e, m) in mass.iter_mut().enumerate() {
-            *m += gate_probs[row * n_experts + e];
-        }
-    }
-    let inv = 1.0 / batch as f32;
-    for m in &mut mass {
-        *m *= inv;
-    }
+    accumulate_gate_rows(&mut mass, gate_probs);
+    normalize_gate_mass(&mut mass, batch);
     mass
 }
 
@@ -112,20 +128,9 @@ pub fn mixed_gate_mass(
     let total = (prefill_rows.len() + decode_rows.len()) / n_experts;
     assert!(total > 0, "empty mixed gate batch");
     let mut mass = vec![0f32; n_experts];
-    for row in prefill_rows.chunks_exact(n_experts) {
-        for (m, &g) in mass.iter_mut().zip(row) {
-            *m += g;
-        }
-    }
-    for row in decode_rows.chunks_exact(n_experts) {
-        for (m, &g) in mass.iter_mut().zip(row) {
-            *m += g;
-        }
-    }
-    let inv = 1.0 / total as f32;
-    for m in &mut mass {
-        *m *= inv;
-    }
+    accumulate_gate_rows(&mut mass, prefill_rows);
+    accumulate_gate_rows(&mut mass, decode_rows);
+    normalize_gate_mass(&mut mass, total);
     mass
 }
 

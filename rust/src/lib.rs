@@ -38,6 +38,8 @@ pub mod prelude {
     pub use crate::model::assets::ModelAssets;
     pub use crate::quant::Precision;
     pub use crate::serving::arrival::{ArrivalGen, ArrivalProcess, TimedRequest};
-    pub use crate::serving::policy::PolicyKind;
-    pub use crate::serving::{run_fleet, FleetConfig, FleetOutcome};
+    pub use crate::serving::policy::{DispatchKind, PolicyKind};
+    pub use crate::serving::{
+        run_cluster, run_fleet, ClusterOutcome, FleetConfig, FleetOutcome, ReplicaBreakdown,
+    };
 }

@@ -5,7 +5,8 @@
 //! dymoe serve       --model mixtral-mini --vram 16 --requests 10 [--strategy dymoe-40]
 //! dymoe serve-fleet --model mixtral-mini --vram 16 --requests 24 --rate 0.25 \
 //!                   [--arrival poisson|bursty|ramp] [--sessions 8] [--sched fifo|rr|slo] \
-//!                   [--max-decode-batch 8]
+//!                   [--max-decode-batch 8] [--replicas 4] [--dispatch rr|jsq|affinity] \
+//!                   [--replica-hw 24 --replica-hw 12:8]
 //! dymoe experiment  <fig1|...|table3|all> [--items N] [--requests N] [--models a,b]
 //! dymoe timeline    --model mixtral-mini --vram 16
 //! ```
@@ -13,7 +14,8 @@
 //! (Arg parsing is hand-rolled: clap is not vendored in this offline
 //! build — see Cargo.toml.)
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
+use std::rc::Rc;
 use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -21,44 +23,52 @@ use anyhow::{anyhow, bail, Context, Result};
 use dymoe::baselines::{
     AccelerateStatic, Fiddler, LoadOnDemand, MixtralOffloading, MoeInfinity, Uniform,
 };
-use dymoe::config::{LowMode, PolicyConfig, SystemConfig};
+use dymoe::config::{HardwareConfig, LowMode, PolicyConfig, SystemConfig};
 use dymoe::coordinator::engine::{Engine, EngineOptions};
 use dymoe::coordinator::strategy::{DyMoEStrategy, Strategy};
 use dymoe::config::ServingConfig;
 use dymoe::experiments::{self, ExpOptions};
 use dymoe::model::assets::ModelAssets;
+use dymoe::model::executor::Executor;
 use dymoe::quant::Precision;
 use dymoe::serving::arrival::{ArrivalGen, ArrivalProcess};
-use dymoe::serving::policy::PolicyKind;
-use dymoe::serving::{run_fleet, FleetConfig};
+use dymoe::serving::policy::{DispatchKind, PolicyKind};
+use dymoe::serving::{run_cluster, FleetConfig};
+use dymoe::util::json::Json;
 use dymoe::util::table::{fmt_secs, Table};
 use dymoe::workload::TraceGen;
 
 struct Args {
     positional: Vec<String>,
     flags: HashMap<String, String>,
+    /// Every flag occurrence in order (repeatable flags like
+    /// `--replica-hw`; `flags` keeps last-one-wins for the rest).
+    repeated: Vec<(String, String)>,
 }
 
 fn parse_args(argv: &[String]) -> Args {
     let mut positional = Vec::new();
     let mut flags = HashMap::new();
+    let mut repeated = Vec::new();
     let mut i = 0;
     while i < argv.len() {
         let a = &argv[i];
         if let Some(name) = a.strip_prefix("--") {
-            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
-                flags.insert(name.to_string(), argv[i + 1].clone());
+            let value = if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
                 i += 2;
+                argv[i - 1].clone()
             } else {
-                flags.insert(name.to_string(), "true".to_string());
                 i += 1;
-            }
+                "true".to_string()
+            };
+            flags.insert(name.to_string(), value.clone());
+            repeated.push((name.to_string(), value));
         } else {
             positional.push(a.clone());
             i += 1;
         }
     }
-    Args { positional, flags }
+    Args { positional, flags, repeated }
 }
 
 impl Args {
@@ -71,6 +81,15 @@ impl Args {
             .get(name)
             .map(|v| v.parse().map_err(|_| anyhow!("--{name} wants a number")))
             .unwrap_or(Ok(default))
+    }
+
+    /// Every occurrence of a repeatable flag, in command-line order.
+    fn get_all(&self, name: &str) -> Vec<String> {
+        self.repeated
+            .iter()
+            .filter(|(n, _)| n == name)
+            .map(|(_, v)| v.clone())
+            .collect()
     }
 }
 
@@ -195,7 +214,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `serve-fleet`: open-loop multi-session serving with fleet SLO metrics.
+/// `serve-fleet`: open-loop multi-session serving across a cluster of
+/// DyMoE replicas with fleet SLO metrics (`--replicas 1`, the default,
+/// is the classic single-device fleet, tick for tick).
 fn cmd_serve_fleet(args: &Args) -> Result<()> {
     let artifacts = args.get("artifacts", "artifacts");
     let model = args.get("model", "mixtral-mini");
@@ -213,6 +234,8 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
         .map_err(|_| anyhow!("--rate wants a float (requests / virtual second)"))?;
     let process = ArrivalProcess::from_cli(&args.get("arrival", "poisson"), rate)?;
     let policy = PolicyKind::parse(&args.get("sched", "slo"))?;
+    let dispatch = DispatchKind::parse(&args.get("dispatch", "rr"))?;
+    let replicas = args.get_usize("replicas", 1)?.max(1);
     let max_sessions = args.get_usize("sessions", 8)?;
     let serving = ServingConfig {
         max_sessions,
@@ -231,18 +254,28 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
         // pre-chunking fleet path, step for step; a positive budget
         // fuses that many prompt tokens per tick with the decode batch.
         chunk_tokens: args.get_usize("chunk-tokens", 0)?,
+        replicas,
     };
+    // Heterogeneous replicas: each `--replica-hw VRAM[:PCIE[:TFLOPS]]`
+    // occurrence defines one hardware class; specs cycle over the
+    // replica count (two specs x four replicas = a big.LITTLE pair of
+    // pairs).  Without the flag every replica runs the `--vram` preset.
+    let hw_specs = args.get_all("replica-hw");
+    if hw_specs.len() > replicas {
+        bail!(
+            "{} --replica-hw specs for {replicas} replica(s); raise --replicas or drop specs",
+            hw_specs.len()
+        );
+    }
 
     let assets = Arc::new(ModelAssets::load(&artifacts, &model)?);
     let m = assets.manifest.model.clone();
-    let strategy = make_strategy(&strat_name, &m, retention)?;
     let sys = SystemConfig::edge_preset(&model, vram)?;
     println!(
-        "fleet-serving {model} as {} @ {vram} GB VRAM: {} arrivals ({process:?}), \
-         <= {} sessions, decode batch <= {}, {}, {} scheduling, \
-         SLO ttft {:.2}s / tpot {:.3}s",
-        strategy.name(),
-        requests,
+        "fleet-serving {model} as {strat_name} on {replicas} replica(s) ({} dispatch): \
+         {requests} arrivals ({process:?}), per replica <= {} sessions, decode batch <= {}, \
+         {}, {} scheduling, SLO ttft {:.2}s / tpot {:.3}s",
+        dispatch.name(),
         serving.max_sessions,
         serving.max_decode_batch.max(1),
         if serving.chunk_tokens == 0 {
@@ -254,12 +287,38 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
         serving.ttft_slo_s,
         serving.tpot_slo_s,
     );
-    let mut engine = Engine::new(&assets, sys, strategy)?;
+
+    // All replicas share the compiled executor (weights + artifacts are
+    // immutable); each owns its engine, cache, and virtual timeline.
+    let exec = Rc::new(Executor::new(assets.clone())?);
+    let mut engines = Vec::with_capacity(replicas);
+    let mut hw_labels = Vec::with_capacity(replicas);
+    for i in 0..replicas {
+        let mut sys_i = sys.clone();
+        let label = if hw_specs.is_empty() {
+            format!("{vram}GB")
+        } else {
+            let spec = &hw_specs[i % hw_specs.len()];
+            sys_i.hardware = HardwareConfig::parse_spec(spec)?;
+            spec.clone()
+        };
+        let strategy = make_strategy(&strat_name, &m, retention)?;
+        engines.push(Engine::with_executor(
+            &assets,
+            sys_i,
+            strategy,
+            EngineOptions::default(),
+            exec.clone(),
+        )?);
+        hw_labels.push(label);
+    }
+
     let mut content = TraceGen::new(seed, m.max_seq.min(80), (m.max_cache - m.max_seq).min(16));
     // Independent seeded streams for timing vs content (see serving::arrival).
     let trace = ArrivalGen::generate(seed ^ 0x5EED_CAFE, process, &mut content, requests)?;
-    let cfg = FleetConfig { serving, policy };
-    let outcome = run_fleet(&mut engine, trace, &cfg)?;
+    let cfg = FleetConfig { serving, policy, dispatch };
+    let cluster = run_cluster(&mut engines, trace, &cfg)?;
+    let outcome = &cluster.fleet;
 
     for r in &outcome.per_request {
         println!(
@@ -276,11 +335,14 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
     println!();
     println!("{}", outcome.metrics.render(policy.name()));
     println!(
-        "fleet: {} completed, peak concurrency {}, {} scheduler steps, makespan {}",
+        "fleet: {} completed on {} replica(s), peak concurrency {}, {} scheduler steps, \
+         makespan {}, load imbalance {:.2} (max/mean tokens per replica)",
         outcome.metrics.completed,
+        replicas,
         outcome.peak_concurrency,
         outcome.steps,
         fmt_secs(outcome.metrics.makespan()),
+        cluster.load_imbalance,
     );
     println!(
         "batched decode: {} steps ({} tokens, mean batch {:.2}); expert reuse {:.2}x \
@@ -303,36 +365,117 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
         fmt_secs(outcome.metrics.queue_delay.mean()),
         fmt_secs(outcome.metrics.prefill_time.mean()),
     );
-    let span = outcome.metrics.makespan();
     println!(
-        "resources: gpu {:.0}% / pcie {:.0}% / cpu {:.0}% busy over the run; \
-         peak session KV {:.1} MB",
-        engine.timeline.gpu.utilization(span) * 100.0,
-        engine.timeline.pcie.utilization(span) * 100.0,
-        engine.timeline.cpu.utilization(span) * 100.0,
+        "resources: gpu {:.0}% / pcie {:.0}% / cpu {:.0}% / nvme {:.0}% busy over \
+         {replicas} replica(s) x makespan; peak session KV {:.1} MB",
+        outcome.utilization.gpu * 100.0,
+        outcome.utilization.pcie * 100.0,
+        outcome.utilization.cpu * 100.0,
+        outcome.utilization.nvme * 100.0,
         outcome.peak_kv_bytes as f64 / 1e6,
     );
-    println!(
-        "cache: {} hits / {} misses (hit rate {:.2}), {} promotions, {} reuses, {} evictions",
-        engine.cache.stats.hits,
-        engine.cache.stats.misses,
-        engine.cache.stats.hit_rate(),
-        engine.cache.stats.promotions,
-        engine.cache.stats.conservative_reuses,
-        engine.cache.stats.evictions
-    );
-    println!(
-        "prefetch: {} issued, {} useful ({:.2} accuracy); transferred {:.2} GB; \
-         {} expert execs ({} skipped, {} on CPU)",
-        engine.prefetch_stats.issued,
-        engine.prefetch_stats.useful,
-        engine.prefetch_stats.accuracy(),
-        engine.stats.transferred_bytes as f64 / 1e9,
-        engine.stats.expert_execs,
-        engine.stats.skipped_experts,
-        engine.stats.cpu_execs,
-    );
+    for (i, b) in cluster.replicas.iter().enumerate() {
+        println!(
+            "replica {i} [{}]: {} dispatched, {} completed, goodput {:.3} r/s, \
+             TTFT p99 {}, gpu {:.0}% / pcie {:.0}% / nvme {:.0}% busy",
+            hw_labels[i],
+            b.dispatched,
+            b.outcome.metrics.completed,
+            b.outcome.metrics.goodput_rps(),
+            fmt_secs(b.outcome.metrics.ttft.percentile(99.0)),
+            b.outcome.utilization.gpu * 100.0,
+            b.outcome.utilization.pcie * 100.0,
+            b.outcome.utilization.nvme * 100.0,
+        );
+    }
+    for (i, engine) in engines.iter().enumerate() {
+        println!(
+            "replica {i} cache: {} hits / {} misses (hit rate {:.2}), {} promotions, \
+             {} reuses, {} evictions; prefetch {} issued, {} useful ({:.2} accuracy); \
+             transferred {:.2} GB; {} expert execs ({} skipped, {} on CPU)",
+            engine.cache.stats.hits,
+            engine.cache.stats.misses,
+            engine.cache.stats.hit_rate(),
+            engine.cache.stats.promotions,
+            engine.cache.stats.conservative_reuses,
+            engine.cache.stats.evictions,
+            engine.prefetch_stats.issued,
+            engine.prefetch_stats.useful,
+            engine.prefetch_stats.accuracy(),
+            engine.stats.transferred_bytes as f64 / 1e9,
+            engine.stats.expert_execs,
+            engine.stats.skipped_experts,
+            engine.stats.cpu_execs,
+        );
+    }
+
+    if args.flags.contains_key("json") {
+        let path = match args.get("json", "").as_str() {
+            "" | "true" => "FLEET_serving.json".to_string(),
+            p => p.to_string(),
+        };
+        let j = fleet_json(&cluster, &hw_labels, policy, dispatch);
+        std::fs::write(&path, j.to_string())?;
+        println!("wrote {path}");
+    }
     Ok(())
+}
+
+/// Machine-readable `serve-fleet --json` summary: cluster-level SLO
+/// metrics plus per-replica breakdowns with per-channel utilization.
+fn fleet_json(
+    cluster: &dymoe::serving::ClusterOutcome,
+    hw_labels: &[String],
+    policy: PolicyKind,
+    dispatch: DispatchKind,
+) -> Json {
+    let num = Json::Num;
+    let metrics_obj = |o: &dymoe::serving::FleetOutcome| {
+        let mut p = BTreeMap::new();
+        p.insert("completed".to_string(), num(o.metrics.completed as f64));
+        p.insert("ttft_p50_s".to_string(), num(o.metrics.ttft.percentile(50.0)));
+        p.insert("ttft_p99_s".to_string(), num(o.metrics.ttft.percentile(99.0)));
+        p.insert("tpot_p50_s".to_string(), num(o.metrics.tpot.percentile(50.0)));
+        p.insert("tpot_p99_s".to_string(), num(o.metrics.tpot.percentile(99.0)));
+        p.insert("queue_delay_mean_s".to_string(), num(o.metrics.queue_delay.mean()));
+        p.insert("goodput_rps".to_string(), num(o.metrics.goodput_rps()));
+        p.insert("throughput_tps".to_string(), num(o.metrics.throughput_tps()));
+        p.insert("slo_attainment".to_string(), num(o.metrics.slo_attainment()));
+        p.insert("makespan_s".to_string(), num(o.metrics.makespan()));
+        p.insert("steps".to_string(), num(o.steps as f64));
+        p.insert("expert_dedup_ratio".to_string(), num(o.dedup.expert_reuse_ratio()));
+        p.insert("util_gpu".to_string(), num(o.utilization.gpu));
+        p.insert("util_cpu".to_string(), num(o.utilization.cpu));
+        p.insert("util_pcie".to_string(), num(o.utilization.pcie));
+        p.insert("util_nvme".to_string(), num(o.utilization.nvme));
+        Json::Obj(p)
+    };
+    let mut root = BTreeMap::new();
+    root.insert("sched".to_string(), Json::Str(policy.name().to_string()));
+    root.insert("dispatch".to_string(), Json::Str(dispatch.name().to_string()));
+    root.insert("replicas".to_string(), num(cluster.replicas.len() as f64));
+    root.insert("load_imbalance".to_string(), num(cluster.load_imbalance));
+    root.insert("cluster".to_string(), metrics_obj(&cluster.fleet));
+    let per_replica: Vec<Json> = cluster
+        .replicas
+        .iter()
+        .enumerate()
+        .map(|(i, b)| {
+            let mut p = match metrics_obj(&b.outcome) {
+                Json::Obj(p) => p,
+                _ => unreachable!(),
+            };
+            p.insert("replica".to_string(), num(i as f64));
+            p.insert("dispatched".to_string(), num(b.dispatched as f64));
+            p.insert(
+                "hw".to_string(),
+                Json::Str(hw_labels.get(i).cloned().unwrap_or_default()),
+            );
+            Json::Obj(p)
+        })
+        .collect();
+    root.insert("per_replica".to_string(), Json::Arr(per_replica));
+    Json::Obj(root)
 }
 
 fn cmd_timeline(args: &Args) -> Result<()> {
@@ -407,6 +550,11 @@ fn usage() -> String {
      \x20             [--max-decode-batch N (1 = serial decode; default: --sessions)]\n\
      \x20             [--chunk-tokens N (0 = monolithic prefill, the default; N > 0\n\
      \x20              fuses N prompt tokens per tick with the decode batch)]\n\
+     \x20             [--replicas N (edge-cluster size; 1 = classic single device)]\n\
+     \x20             [--dispatch rr|jsq|affinity (cluster request routing)]\n\
+     \x20             [--replica-hw VRAM_GB[:PCIE_GBPS[:GPU_TFLOPS]] (repeatable;\n\
+     \x20              specs cycle over replicas for a big.LITTLE cluster)]\n\
+     \x20             [--json [PATH] (write cluster + per-replica summary JSON)]\n\
      \x20             [--ttft-slo S] [--tpot-slo S] [--strategy S] [--seed N]\n\
      \x20 timeline    --model <name> [--vram GB] [--strategy S]\n\
      \x20 experiment  <fig1|fig2|fig3|fig4|fig5|fig6|fig10|fig11|table1|table2|table3|all>\n\

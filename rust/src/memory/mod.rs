@@ -11,5 +11,5 @@
 pub mod timeline;
 pub mod vram;
 
-pub use timeline::{Event, EventKind, Timeline};
+pub use timeline::{BusyTotals, Event, EventKind, Timeline};
 pub use vram::VramBudget;

@@ -83,6 +83,42 @@ impl Channel {
     }
 }
 
+/// Busy-seconds snapshot of the four pipeline channels.  Serving code
+/// snapshots this at run boundaries and works with **deltas**
+/// ([`BusyTotals::minus`]): `Channel::busy_total` is cumulative over the
+/// engine's whole lifetime, so computing a run's utilization from the
+/// raw totals double-counts earlier runs when an engine is reused.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BusyTotals {
+    pub gpu: f64,
+    pub cpu: f64,
+    pub pcie: f64,
+    pub nvme: f64,
+}
+
+impl BusyTotals {
+    /// Component-wise `self - earlier`: the busy seconds accrued between
+    /// two snapshots.
+    pub fn minus(&self, earlier: &BusyTotals) -> BusyTotals {
+        BusyTotals {
+            gpu: self.gpu - earlier.gpu,
+            cpu: self.cpu - earlier.cpu,
+            pcie: self.pcie - earlier.pcie,
+            nvme: self.nvme - earlier.nvme,
+        }
+    }
+
+    /// Component-wise sum (cluster-level busy time across replicas).
+    pub fn plus(&self, other: &BusyTotals) -> BusyTotals {
+        BusyTotals {
+            gpu: self.gpu + other.gpu,
+            cpu: self.cpu + other.cpu,
+            pcie: self.pcie + other.pcie,
+            nvme: self.nvme + other.nvme,
+        }
+    }
+}
+
 /// The four resources of the edge pipeline plus an event log.
 #[derive(Debug, Clone, Default)]
 pub struct Timeline {
@@ -144,6 +180,17 @@ impl Timeline {
 
     pub fn marker(&mut self, t: f64, label: &str) {
         self.log(EventKind::Marker, label, t, t);
+    }
+
+    /// Snapshot every channel's cumulative busy seconds (see
+    /// [`BusyTotals`] for the delta discipline).
+    pub fn busy_totals(&self) -> BusyTotals {
+        BusyTotals {
+            gpu: self.gpu.busy_total,
+            cpu: self.cpu.busy_total,
+            pcie: self.pcie.busy_total,
+            nvme: self.nvme.busy_total,
+        }
     }
 
     /// Render the recorded events as an ASCII timeline (Fig. 1).
@@ -228,6 +275,26 @@ mod tests {
         assert_eq!(c.utilization(1.0), 1.0); // clamped
         assert_eq!(c.utilization(0.0), 0.0);
         assert_eq!(Channel::default().utilization(10.0), 0.0);
+    }
+
+    #[test]
+    fn busy_totals_snapshot_and_delta() {
+        let mut tl = Timeline::new(false);
+        tl.gpu_compute(0.0, 0.0, 1.0, "a");
+        tl.pcie_transfer(0.0, 2.0, "w");
+        let first = tl.busy_totals();
+        assert_eq!(first.gpu, 1.0);
+        assert_eq!(first.pcie, 2.0);
+        assert_eq!(first.cpu, 0.0);
+        tl.gpu_compute(5.0, 5.0, 0.5, "b");
+        tl.nvme_stage(5.0, 0.25, "s");
+        let delta = tl.busy_totals().minus(&first);
+        assert_eq!(delta.gpu, 0.5);
+        assert_eq!(delta.pcie, 0.0);
+        assert_eq!(delta.nvme, 0.25);
+        let sum = delta.plus(&first);
+        assert_eq!(sum.gpu, 1.5);
+        assert_eq!(sum.pcie, 2.0);
     }
 
     #[test]

@@ -1,0 +1,205 @@
+//! Multi-replica edge cluster serving: a dispatcher in front of
+//! `Vec<Replica>`, advanced by min-clock next-event stepping (as in
+//! event-driven co-simulation).
+//!
+//! The event loop maintains one invariant: **no replica ticks past an
+//! undelivered arrival.**  Each iteration either (a) routes the oldest
+//! pending request to a replica via the [`DispatchPolicy`] — whenever
+//! its arrival time is at or before the minimum clock among busy
+//! replicas (the cluster's virtual "now"), or the whole cluster is idle
+//! (the fast-forward case) — or (b) ticks the busy replica with the
+//! smallest virtual clock (ties by index).  When a replica is picked to
+//! tick, every arrival up to its clock has therefore already been
+//! dispatched, which is exactly the admission discipline of the
+//! pre-refactor single-engine loop; with one replica the trace of
+//! enqueue/tick operations is identical, making `--replicas 1
+//! --dispatch rr` tick-for-tick equivalent to [`super::run_fleet`]
+//! (pinned in `tests/integration_cluster.rs`).
+//!
+//! Replicas may be heterogeneous (different [`HardwareConfig`]s — a
+//! big.LITTLE edge cluster): each owns its engine, expert cache, and
+//! virtual timeline, so a slow replica simply surfaces as a high clock
+//! the stepper visits less often.
+//!
+//! [`HardwareConfig`]: crate::config::HardwareConfig
+
+use std::collections::VecDeque;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::engine::Engine;
+use crate::memory::BusyTotals;
+
+use super::arrival::TimedRequest;
+use super::metrics::{load_imbalance, FleetMetrics, ResourceUtil};
+use super::replica::Replica;
+use super::{FleetConfig, FleetOutcome};
+
+/// One replica's share of a cluster run.
+#[derive(Debug, Clone)]
+pub struct ReplicaBreakdown {
+    /// The replica's own fleet outcome (per-replica metrics, dedup and
+    /// phase telemetry, utilization over *its* makespan).
+    pub outcome: FleetOutcome,
+    /// Requests the dispatcher routed here.
+    pub dispatched: usize,
+    /// Busy-seconds delta this run accrued on the replica's channels.
+    pub busy: BusyTotals,
+}
+
+/// Result of one cluster run: the merged fleet view plus per-replica
+/// breakdowns and the dispatch balance statistic.
+#[derive(Debug, Clone)]
+pub struct ClusterOutcome {
+    /// Cluster-merged outcome: union of per-request records (completion
+    /// order), summed counters, utilization over `replicas x makespan`.
+    pub fleet: FleetOutcome,
+    /// Per-replica breakdowns, indexed by replica id.
+    pub replicas: Vec<ReplicaBreakdown>,
+    /// `max / mean` of per-replica emitted-token loads (1.0 = perfectly
+    /// balanced, `replicas` = one replica served everything).
+    pub load_imbalance: f64,
+}
+
+/// Serve an open-loop trace on a cluster of replicas to completion.
+///
+/// Each engine becomes one [`Replica`] (they may carry different
+/// [`crate::config::HardwareConfig`]s); `cfg.dispatch` routes every
+/// arriving request to a replica, and replicas advance in virtual-time
+/// order.  With a single engine this reduces exactly to
+/// [`super::run_fleet`].
+pub fn run_cluster(
+    engines: &mut [Engine],
+    trace: Vec<TimedRequest>,
+    cfg: &FleetConfig,
+) -> Result<ClusterOutcome> {
+    ensure!(!engines.is_empty(), "cluster needs at least one replica engine");
+    let n = engines.len();
+    // The engine slice is authoritative for cluster size; an explicitly
+    // configured replica count that disagrees with it is a caller bug
+    // (the default of 1 means "unset" so single-replica configs can be
+    // reused across any cluster).
+    ensure!(
+        cfg.serving.replicas <= 1 || cfg.serving.replicas == n,
+        "config says {} replicas but {n} engines were provided",
+        cfg.serving.replicas
+    );
+    let total_requests = trace.len();
+    let mut pending: VecDeque<TimedRequest> = {
+        let mut t = trace;
+        t.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
+        t.into()
+    };
+    let mut replicas: Vec<Replica> =
+        engines.iter_mut().map(|e| Replica::new(e, cfg)).collect();
+    let mut dispatch = cfg.dispatch.build();
+    let mut dispatched = vec![0usize; n];
+
+    loop {
+        // The cluster's virtual "now": the smallest clock among replicas
+        // that still have work (ties by index).
+        let next_tick: Option<usize> = {
+            let mut best: Option<(f64, usize)> = None;
+            for (i, r) in replicas.iter().enumerate() {
+                if !r.has_work() {
+                    continue;
+                }
+                let c = r.clock();
+                let better = match best {
+                    None => true,
+                    Some((bc, _)) => c < bc,
+                };
+                if better {
+                    best = Some((c, i));
+                }
+            }
+            best.map(|(_, i)| i)
+        };
+
+        let deliver = match (next_tick, pending.front()) {
+            (None, None) => break,
+            // Whole cluster idle: fast-forward by dispatching the next
+            // future arrival (its service start waits for its arrival
+            // time inside the engine, exactly as the single-engine loop
+            // fast-forwarded).
+            (None, Some(_)) => true,
+            // An arrival at or before the cluster's virtual now must be
+            // routed before anyone ticks past it.
+            (Some(i), Some(r)) => r.arrival <= replicas[i].clock(),
+            (Some(_), None) => false,
+        };
+
+        if deliver {
+            let req = pending.pop_front().unwrap();
+            let views: Vec<_> =
+                replicas.iter().enumerate().map(|(i, r)| r.dispatch_view(i)).collect();
+            let idx = dispatch.route(&req, &views);
+            ensure!(
+                idx < n,
+                "dispatch policy {} routed request {} to replica {idx} of {n}",
+                dispatch.name(),
+                req.id
+            );
+            dispatched[idx] += 1;
+            replicas[idx].enqueue(req);
+        } else {
+            let i = next_tick.expect("no tick target with no arrival to deliver");
+            replicas[i]
+                .tick()
+                .with_context(|| format!("replica {i} tick"))?;
+        }
+    }
+
+    // Fold the per-replica runs into the cluster view.
+    let runs: Vec<_> = replicas.into_iter().map(|r| r.finish()).collect();
+    let mut metrics = FleetMetrics::default();
+    let mut fleet = FleetOutcome::default();
+    let mut busy_total = BusyTotals::default();
+    let mut breakdowns = Vec::with_capacity(n);
+    for (run, count) in runs.into_iter().zip(&dispatched) {
+        metrics.merge(&run.outcome.metrics);
+        fleet.per_request.extend(run.outcome.per_request.iter().cloned());
+        // Cluster-wide concurrency / KV peaks are summed per-replica
+        // high-water marks: an upper bound on simultaneous load (the
+        // marks need not coincide in virtual time), exact for one
+        // replica.
+        fleet.peak_concurrency += run.outcome.peak_concurrency;
+        fleet.peak_kv_bytes += run.outcome.peak_kv_bytes;
+        fleet.steps += run.outcome.steps;
+        fleet.dedup.merge(&run.outcome.dedup);
+        fleet.phase.merge(&run.outcome.phase);
+        busy_total = busy_total.plus(&run.busy);
+        breakdowns.push(ReplicaBreakdown {
+            outcome: run.outcome,
+            dispatched: *count,
+            busy: run.busy,
+        });
+    }
+    // Completion order across the cluster: a stable merge by completion
+    // time (per-replica records are already completion-ordered).  A
+    // single replica's list is returned untouched — not even a stable
+    // sort — so the one-replica cluster is bit-identical to `run_fleet`
+    // (same-tick completions can differ by a float ulp in
+    // `finished_at`, which a sort could otherwise reorder).
+    if n > 1 {
+        fleet
+            .per_request
+            .sort_by(|a, b| a.finished_at.total_cmp(&b.finished_at));
+    }
+    ensure!(
+        metrics.completed == total_requests,
+        "cluster lost requests: {} of {total_requests} completed",
+        metrics.completed
+    );
+    fleet.utilization = ResourceUtil::from_busy(&busy_total, metrics.makespan(), n);
+    fleet.metrics = metrics;
+    let loads: Vec<f64> = breakdowns
+        .iter()
+        .map(|b| b.outcome.metrics.tokens_total as f64)
+        .collect();
+    Ok(ClusterOutcome {
+        fleet,
+        replicas: breakdowns,
+        load_imbalance: load_imbalance(&loads),
+    })
+}

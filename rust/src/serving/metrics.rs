@@ -1,10 +1,13 @@
 //! Fleet-level SLO metrics: per-session TTFT/TPOT distributions (queue
 //! delay included), goodput, SLO attainment, cross-session decode-batch
-//! dedup telemetry, and per-phase chunked-prefill telemetry (chunk
-//! counts, mixed-tick counts, prefill-interference stall) over one
-//! serving run.
+//! dedup telemetry, per-phase chunked-prefill telemetry (chunk counts,
+//! mixed-tick counts, prefill-interference stall), and per-channel
+//! resource utilization over one serving run — plus the `merge`
+//! operations the cluster layer uses to fold per-replica runs into one
+//! cluster-level view.
 
 use crate::coordinator::engine::{EngineStats, RequestOutput};
+use crate::memory::BusyTotals;
 use crate::metrics::Series;
 use crate::util::table::{fmt_secs, Table};
 
@@ -91,6 +94,14 @@ impl DedupStats {
     pub fn saved_fetches(&self) -> u64 {
         self.routed_pairs - self.unique_expert_loads
     }
+
+    /// Fold another run's counters in (cluster merge across replicas).
+    pub fn merge(&mut self, other: &DedupStats) {
+        self.decode_batches += other.decode_batches;
+        self.decode_batch_tokens += other.decode_batch_tokens;
+        self.routed_pairs += other.routed_pairs;
+        self.unique_expert_loads += other.unique_expert_loads;
+    }
 }
 
 /// Per-phase chunked-prefill telemetry for one fleet run: how the
@@ -128,6 +139,60 @@ impl PhaseStats {
             self.prefill_chunk_tokens as f64 / self.prefill_chunks as f64
         }
     }
+
+    /// Fold another run's counters in (cluster merge across replicas).
+    pub fn merge(&mut self, other: &PhaseStats) {
+        self.prefill_chunks += other.prefill_chunks;
+        self.prefill_chunk_tokens += other.prefill_chunk_tokens;
+        self.mixed_steps += other.mixed_steps;
+    }
+}
+
+/// Busy fractions of the device channels over one run (or one cluster
+/// run, where the denominator is `replicas x makespan` — the fraction of
+/// the cluster's aggregate channel-seconds actually used).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ResourceUtil {
+    pub gpu: f64,
+    pub cpu: f64,
+    pub pcie: f64,
+    pub nvme: f64,
+}
+
+impl ResourceUtil {
+    /// Busy fractions from a busy-seconds **delta** over `span` seconds
+    /// across `devices` parallel replicas (clamped to 1; all zero for an
+    /// empty span).  Taking a delta rather than `Channel::utilization`'s
+    /// cumulative total is what keeps an engine reusable across runs
+    /// without double-counting earlier runs' busy time.
+    pub fn from_busy(busy: &BusyTotals, span: f64, devices: usize) -> ResourceUtil {
+        if span <= 0.0 || devices == 0 {
+            return ResourceUtil::default();
+        }
+        let denom = span * devices as f64;
+        let frac = |b: f64| (b / denom).clamp(0.0, 1.0);
+        ResourceUtil {
+            gpu: frac(busy.gpu),
+            cpu: frac(busy.cpu),
+            pcie: frac(busy.pcie),
+            nvme: frac(busy.nvme),
+        }
+    }
+}
+
+/// `max / mean` of per-replica loads: 1.0 when perfectly balanced, up to
+/// `replicas` when one replica carries everything.  Defined as 1.0 for an
+/// all-idle cluster (nothing to imbalance).
+pub fn load_imbalance(loads: &[f64]) -> f64 {
+    if loads.is_empty() {
+        return 1.0;
+    }
+    let mean = loads.iter().sum::<f64>() / loads.len() as f64;
+    if mean <= 0.0 {
+        return 1.0;
+    }
+    let max = loads.iter().copied().fold(0.0f64, f64::max);
+    max / mean
 }
 
 /// Aggregates over one fleet run.
@@ -205,6 +270,37 @@ impl FleetMetrics {
             tpot_ok,
             max_stall,
         }
+    }
+
+    /// Fold another run's aggregates in (cluster merge across replicas).
+    /// Percentiles recompute over the union of samples; the makespan
+    /// spans the earliest arrival to the latest completion across both.
+    pub fn merge(&mut self, other: &FleetMetrics) {
+        if other.completed > 0 {
+            if self.completed == 0 {
+                self.first_arrival = other.first_arrival;
+            } else {
+                self.first_arrival = self.first_arrival.min(other.first_arrival);
+            }
+            self.last_completion = self.last_completion.max(other.last_completion);
+        }
+        for (dst, src) in [
+            (&mut self.ttft, &other.ttft),
+            (&mut self.tpot, &other.tpot),
+            (&mut self.queue_delay, &other.queue_delay),
+            (&mut self.prefill_time, &other.prefill_time),
+            (&mut self.stall, &other.stall),
+            (&mut self.e2e, &other.e2e),
+        ] {
+            for &v in src.samples() {
+                dst.push(v);
+            }
+        }
+        self.completed += other.completed;
+        self.ttft_ok += other.ttft_ok;
+        self.tpot_ok += other.tpot_ok;
+        self.slo_ok += other.slo_ok;
+        self.tokens_total += other.tokens_total;
     }
 
     /// Wall span of the run (first arrival to last completion).
@@ -364,6 +460,85 @@ mod tests {
         assert_eq!(p.prefill_chunk_tokens, 16);
         assert_eq!(p.mixed_steps, 3);
         assert!((p.mean_chunk() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_unions_samples_and_spans() {
+        let slo = SloTargets { ttft_s: 2.0, tpot_s: 0.5 };
+        let mut a = FleetMetrics::default();
+        a.record(0, 1.0, &out(1.5, 0.8, vec![0.8, 1.2, 1.6]), slo);
+        let mut b = FleetMetrics::default();
+        b.record(1, 0.5, &out(4.0, 0.9, vec![0.9]), slo);
+
+        // reference: the same two records folded into one collector
+        let mut both = FleetMetrics::default();
+        both.record(0, 1.0, &out(1.5, 0.8, vec![0.8, 1.2, 1.6]), slo);
+        both.record(1, 0.5, &out(4.0, 0.9, vec![0.9]), slo);
+
+        let mut merged = FleetMetrics::default();
+        merged.merge(&a);
+        merged.merge(&b);
+        assert_eq!(merged.completed, both.completed);
+        assert_eq!(merged.slo_ok, both.slo_ok);
+        assert_eq!(merged.tokens_total, both.tokens_total);
+        assert_eq!(merged.first_arrival, both.first_arrival);
+        assert_eq!(merged.last_completion, both.last_completion);
+        assert_eq!(merged.makespan(), both.makespan());
+        assert_eq!(merged.ttft.percentile(99.0), both.ttft.percentile(99.0));
+        assert_eq!(merged.tpot.mean(), both.tpot.mean());
+        // merging an empty collector is the identity
+        let before = merged.completed;
+        merged.merge(&FleetMetrics::default());
+        assert_eq!(merged.completed, before);
+        assert_eq!(merged.first_arrival, both.first_arrival);
+    }
+
+    #[test]
+    fn phase_and_dedup_merge_are_sums() {
+        let mut d = DedupStats {
+            decode_batches: 1,
+            decode_batch_tokens: 2,
+            routed_pairs: 4,
+            unique_expert_loads: 3,
+        };
+        let d0 = d;
+        d.merge(&d0);
+        assert_eq!(d.decode_batches, 2);
+        assert_eq!(d.routed_pairs, 8);
+        let mut p = PhaseStats { prefill_chunks: 2, prefill_chunk_tokens: 6, mixed_steps: 1 };
+        let p0 = p;
+        p.merge(&p0);
+        assert_eq!(p.prefill_chunks, 4);
+        assert_eq!(p.prefill_chunk_tokens, 12);
+        assert_eq!(p.mixed_steps, 2);
+    }
+
+    #[test]
+    fn resource_util_is_a_clamped_delta_fraction() {
+        let busy = BusyTotals { gpu: 2.0, cpu: 0.0, pcie: 8.0, nvme: 1.0 };
+        let u = ResourceUtil::from_busy(&busy, 4.0, 1);
+        assert!((u.gpu - 0.5).abs() < 1e-12);
+        assert_eq!(u.cpu, 0.0);
+        assert_eq!(u.pcie, 1.0, "busy beyond the span clamps to 1");
+        assert!((u.nvme - 0.25).abs() < 1e-12);
+        // cluster denominator: the same busy time over two devices
+        let u2 = ResourceUtil::from_busy(&busy, 4.0, 2);
+        assert!((u2.gpu - 0.25).abs() < 1e-12);
+        // degenerate spans are all-zero, never NaN
+        let z = ResourceUtil::from_busy(&busy, 0.0, 1);
+        assert_eq!(z.gpu, 0.0);
+        let z = ResourceUtil::from_busy(&busy, 1.0, 0);
+        assert_eq!(z.pcie, 0.0);
+    }
+
+    #[test]
+    fn load_imbalance_is_max_over_mean() {
+        assert_eq!(load_imbalance(&[]), 1.0);
+        assert_eq!(load_imbalance(&[0.0, 0.0]), 1.0);
+        assert_eq!(load_imbalance(&[4.0, 4.0, 4.0, 4.0]), 1.0);
+        // one replica carries everything: imbalance = replica count
+        assert_eq!(load_imbalance(&[8.0, 0.0, 0.0, 0.0]), 4.0);
+        assert!((load_imbalance(&[3.0, 1.0]) - 1.5).abs() < 1e-12);
     }
 
     #[test]

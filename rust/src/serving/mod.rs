@@ -1,5 +1,7 @@
 //! Multi-session serving: open-loop arrival traffic, an admission queue
-//! with a continuous session scheduler, and fleet-level SLO metrics.
+//! with a continuous session scheduler, fleet-level SLO metrics — and,
+//! on top, multi-replica edge **cluster** serving with a dispatcher in
+//! front.
 //!
 //! The seed engine served requests back-to-back (batch size 1); this
 //! layer turns it into a *server*.  Requests arrive on an open-loop
@@ -38,48 +40,83 @@
 //! suite in `tests/integration_chunked_prefill.rs` pins down
 //! (strictly lower p99 TPOT and bounded per-request `max_stall`).
 //!
-//! **Equivalence guarantees:** `chunk_tokens = 0` dispatches to the
-//! untouched monolithic loop, reproducing the pre-chunking fleet path
-//! *tick for tick*; chunked prefill reproduces
-//! [`Engine::prefill_session`]'s numerics for any chunk size under
-//! precision-invariant strategies (DyMoE's dynamic quantization plans
-//! each chunk's importance over that chunk's tokens — chunk-local by
-//! design); and a tick with no prefill chunk is exactly the classic
-//! batched decode step.  [`metrics::PhaseStats`] reports chunk counts,
-//! mean chunk size, and mixed-tick counts per run.
+//! # Replicas and the cluster (multi-device serving)
 //!
-//! Everything runs on the engine's virtual timeline, so a fleet run is
-//! deterministic under a fixed seed and directly comparable across
-//! scheduling policies ([`policy::PolicyKind`]).  [`metrics`] aggregates
-//! per-session TTFT/TPOT (arrival-relative), queue delay with the
-//! TTFT breakdown (queue vs prefill service), per-request worst
-//! inter-token stall, goodput, and SLO attainment.  The `serve-fleet`
-//! CLI subcommand and `benches/bench_serving.rs` drive this module.
+//! Everything between admission and completion lives in a
+//! [`replica::Replica`]: the engine, the queued/active session sets,
+//! the scheduling-policy state, and the per-run telemetry snapshots,
+//! behind a `tick` API covering both the monolithic and chunked paths.
+//! [`run_fleet`] drives one replica (the classic single-engine entry
+//! point, unchanged signature); [`run_cluster`] drives `Vec<Replica>`
+//! behind a [`policy::DispatchPolicy`] (`rr` round-robin, `jsq`
+//! join-shortest-queue by outstanding tokens, `affinity` hashing the
+//! prompt's predicted hot experts onto warm caches), advancing replicas
+//! in virtual-time order (min-clock next-event stepping) and merging
+//! per-replica [`metrics::FleetMetrics`] / [`metrics::DedupStats`] /
+//! [`metrics::PhaseStats`] into a cluster-level outcome with
+//! per-replica breakdowns and a load-imbalance statistic.  Replicas may
+//! run heterogeneous [`crate::config::HardwareConfig`]s (a big.LITTLE
+//! edge cluster).
+//!
+//! **Equivalence guarantees:** `chunk_tokens = 0` runs the monolithic
+//! tick, reproducing the pre-chunking fleet path *tick for tick*; a
+//! cluster of one replica with round-robin dispatch reproduces
+//! [`run_fleet`] tick for tick (same steps, same metrics) on both the
+//! monolithic and chunked paths; chunked prefill reproduces
+//! [`Engine::prefill_session`]'s numerics for any chunk size under
+//! precision-invariant strategies; and a tick with no prefill chunk is
+//! exactly the classic batched decode step.  [`metrics::PhaseStats`]
+//! reports chunk counts, mean chunk size, and mixed-tick counts per
+//! run.
+//!
+//! Everything runs on the engines' virtual timelines, so fleet and
+//! cluster runs are deterministic under a fixed seed and directly
+//! comparable across scheduling policies ([`policy::PolicyKind`]) and
+//! dispatch policies ([`policy::DispatchKind`]).  [`metrics`]
+//! aggregates per-session TTFT/TPOT (arrival-relative), queue delay
+//! with the TTFT breakdown, per-request worst inter-token stall,
+//! goodput, SLO attainment, and per-channel resource utilization
+//! ([`metrics::ResourceUtil`]).  The `serve-fleet` CLI subcommand and
+//! `benches/bench_serving.rs` drive this module.
 
 pub mod arrival;
+pub mod cluster;
 pub mod metrics;
 pub mod policy;
+pub mod replica;
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::Result;
 
 use crate::config::ServingConfig;
-use crate::coordinator::engine::{Engine, EngineSession};
-use crate::workload::Request;
+use crate::coordinator::engine::Engine;
 
 use self::arrival::TimedRequest;
-use self::metrics::{CompletedRequest, DedupStats, FleetMetrics, PhaseStats, SloTargets};
-use self::policy::{Action, ActiveInfo, PolicyKind, QueuedInfo, SchedView};
+use self::metrics::{
+    CompletedRequest, DedupStats, FleetMetrics, PhaseStats, ResourceUtil, SloTargets,
+};
+use self::policy::{DispatchKind, PolicyKind};
 
-/// Configuration of one fleet run.
+pub use self::cluster::{run_cluster, ClusterOutcome, ReplicaBreakdown};
+pub use self::replica::{Replica, ReplicaRun};
+
+/// Configuration of one fleet (or cluster) run.
 #[derive(Debug, Clone)]
 pub struct FleetConfig {
     pub serving: ServingConfig,
+    /// Per-replica continuous-scheduling policy.
     pub policy: PolicyKind,
+    /// Cluster-level request routing (ignored by single-replica
+    /// [`run_fleet`]; `rr` with one replica is the equivalence baseline).
+    pub dispatch: DispatchKind,
 }
 
 impl Default for FleetConfig {
     fn default() -> Self {
-        FleetConfig { serving: ServingConfig::default(), policy: PolicyKind::SloAware }
+        FleetConfig {
+            serving: ServingConfig::default(),
+            policy: PolicyKind::SloAware,
+            dispatch: DispatchKind::RoundRobin,
+        }
     }
 }
 
@@ -89,16 +126,20 @@ impl FleetConfig {
     }
 }
 
-/// Result of one fleet run.
-#[derive(Debug, Clone)]
+/// Result of one fleet run (one replica's view; [`ClusterOutcome`]
+/// carries the merged cluster view plus one of these per replica).
+#[derive(Debug, Clone, Default)]
 pub struct FleetOutcome {
     pub metrics: FleetMetrics,
     /// Completed requests in completion order.
     pub per_request: Vec<CompletedRequest>,
-    /// High-water mark of concurrently in-flight sessions.
+    /// High-water mark of concurrently in-flight sessions (cluster
+    /// view: sum of per-replica marks, an upper bound on simultaneous
+    /// cluster concurrency).
     pub peak_concurrency: usize,
     /// High-water mark of KV-cache bytes held by in-flight sessions
-    /// (memory pressure of concurrency).
+    /// (memory pressure of concurrency; summed across replicas in the
+    /// cluster view).
     pub peak_kv_bytes: u64,
     /// Total scheduler steps taken (prefills + decode steps; a fused
     /// mixed tick counts once however many sessions it advances).
@@ -107,453 +148,56 @@ pub struct FleetOutcome {
     pub dedup: DedupStats,
     /// Chunked-prefill telemetry (all zero on the monolithic path).
     pub phase: PhaseStats,
-}
-
-struct Queued {
-    id: usize,
-    arrival: f64,
-    deadline: f64,
-    request: Request,
-}
-
-struct Active {
-    id: usize,
-    arrival: f64,
-    sess: EngineSession,
-    last_token_at: f64,
+    /// Per-channel busy fractions over the run's makespan (GPU / CPU /
+    /// PCIe / NVMe), computed from busy-time deltas so engine reuse
+    /// across runs never double-counts.
+    pub utilization: ResourceUtil,
 }
 
 /// Serve an open-loop trace on `engine` to completion.
 ///
-/// The loop is a virtual-time co-simulation: each iteration admits every
-/// request that has arrived by the engine clock, asks the policy for the
-/// next step, and executes it on the engine — which advances the clock.
-/// When the system goes idle it fast-forwards to the next arrival.  With
-/// one session in flight this reduces exactly to the classic
-/// back-to-back `serve` path.
+/// The loop is a virtual-time co-simulation: each iteration delivers
+/// every request that has arrived by the engine clock into the
+/// replica's admission queue and advances the replica one scheduling
+/// step ([`Replica::tick`]) — which advances the clock.  When the
+/// system goes idle it fast-forwards to the next arrival.  With one
+/// session in flight this reduces exactly to the classic back-to-back
+/// `serve` path.
 ///
-/// `chunk_tokens == 0` (the default) dispatches to the monolithic loop
-/// — admission runs the whole prefill as one step — and is tick-for-tick
+/// `chunk_tokens == 0` (the default) runs the monolithic tick —
+/// admission runs the whole prefill as one step — and is tick-for-tick
 /// identical to the pre-chunking scheduler; a positive budget runs
-/// token-budget continuous batching over [`Engine::mixed_step`].
+/// token-budget continuous batching over [`Engine::mixed_step`].  This
+/// is the single-replica degeneration of [`run_cluster`], kept as the
+/// direct entry point (same signature as before the cluster refactor).
 pub fn run_fleet(
     engine: &mut Engine,
     trace: Vec<TimedRequest>,
     cfg: &FleetConfig,
 ) -> Result<FleetOutcome> {
-    if cfg.serving.chunk_tokens == 0 {
-        run_fleet_monolithic(engine, trace, cfg)
-    } else {
-        run_fleet_chunked(engine, trace, cfg)
-    }
-}
-
-/// The pre-chunking fleet loop: admission runs the session's whole
-/// prefill as one scheduling step (`Action::Admit`), decode steps batch
-/// across sessions.  Kept verbatim so `--chunk-tokens 0` reproduces the
-/// legacy path step for step.
-fn run_fleet_monolithic(
-    engine: &mut Engine,
-    trace: Vec<TimedRequest>,
-    cfg: &FleetConfig,
-) -> Result<FleetOutcome> {
-    let slo = cfg.slo();
-    let max_sessions = cfg.serving.max_sessions.max(1);
     let mut pending: std::collections::VecDeque<TimedRequest> = {
         let mut t = trace;
         t.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
         t.into()
     };
-    let mut queued: Vec<Queued> = Vec::new();
-    let mut active: Vec<Active> = Vec::new();
-    let enqueue = |r: TimedRequest| Queued {
-        id: r.id,
-        arrival: r.arrival,
-        deadline: r.arrival + slo.ttft_s,
-        request: r.request,
-    };
-    // Clamp the batch width to the model's largest expert token bucket:
-    // the engine cannot fuse more decode tokens than one expert call can
-    // carry, and `--sessions` above that limit should still serve (the
-    // surplus sessions just decode in the next tick's batch).
-    let max_decode_batch = cfg.serving.max_decode_batch.clamp(1, engine.model().max_seq);
-    let stats_before = engine.stats;
-    let mut policy = cfg.policy.build();
-    let mut out = FleetOutcome {
-        metrics: FleetMetrics::default(),
-        per_request: Vec::new(),
-        peak_concurrency: 0,
-        peak_kv_bytes: 0,
-        steps: 0,
-        dedup: DedupStats::default(),
-        phase: PhaseStats::default(),
-    };
-
+    let mut replica = Replica::new(engine, cfg);
     loop {
-        let now = engine.clock();
+        let now = replica.clock();
         // Open-loop admission: everything that has arrived joins the queue.
         while pending.front().is_some_and(|r| r.arrival <= now) {
-            queued.push(enqueue(pending.pop_front().unwrap()));
+            replica.enqueue(pending.pop_front().unwrap());
         }
-        if queued.is_empty() && active.is_empty() {
+        if !replica.has_work() {
             // Idle: fast-forward to the next arrival (or finish).
             match pending.pop_front() {
                 Some(r) => {
-                    queued.push(enqueue(r));
+                    replica.enqueue(r);
                     continue;
                 }
                 None => break,
             }
         }
-
-        let queued_info: Vec<QueuedInfo> = queued
-            .iter()
-            .map(|q| QueuedInfo { id: q.id, arrival: q.arrival, deadline: q.deadline })
-            .collect();
-        let active_info: Vec<ActiveInfo> = active
-            .iter()
-            .map(|a| ActiveInfo {
-                id: a.id,
-                arrival: a.arrival,
-                emitted: a.sess.emitted(),
-                target: a.sess.target_tokens(),
-                last_token_at: a.last_token_at,
-                prefill_remaining: a.sess.prefill_remaining(),
-            })
-            .collect();
-        let free_slots = max_sessions.saturating_sub(active.len());
-        let view = SchedView {
-            now,
-            queued: &queued_info,
-            active: &active_info,
-            free_slots,
-        };
-        let mut action = policy.next_action(&view);
-        if action == Action::Idle {
-            // Work-conserving fallback so a policy bug can never wedge
-            // the loop: admit if possible, else decode something.
-            action = if free_slots > 0 && !queued.is_empty() {
-                Action::Admit(queued[0].id)
-            } else if let Some(a) = active.first() {
-                Action::Decode(a.id)
-            } else {
-                // queue non-empty but no slots and nothing active cannot
-                // happen (max_sessions >= 1); guard anyway
-                bail!("scheduler idle with {} queued sessions", queued.len());
-            };
-        }
-
-        match action {
-            Action::Admit(id) => {
-                let Some(pos) = queued.iter().position(|q| q.id == id) else {
-                    bail!("policy admitted unknown session {id}");
-                };
-                if active.len() >= max_sessions {
-                    bail!("policy admitted session {id} with no free slot");
-                }
-                let q = queued.swap_remove(pos);
-                let mut sess = engine
-                    .begin_session(&q.request.prompt, q.request.max_new, None, q.arrival)
-                    .with_context(|| format!("admitting session {id}"))?;
-                engine
-                    .prefill_session(&mut sess)
-                    .with_context(|| format!("prefill session {id}"))?;
-                out.steps += 1;
-                out.peak_concurrency = out.peak_concurrency.max(active.len() + 1);
-                let kv_in_flight: u64 =
-                    active.iter().map(|a| a.sess.kv_bytes()).sum::<u64>() + sess.kv_bytes();
-                out.peak_kv_bytes = out.peak_kv_bytes.max(kv_in_flight);
-                let last_token_at = sess.out.start + sess.out.ttft;
-                if sess.done() {
-                    let done = out.metrics.record(q.id, q.arrival, &sess.out, slo);
-                    out.per_request.push(done);
-                } else {
-                    active.push(Active { id: q.id, arrival: q.arrival, sess, last_token_at });
-                }
-            }
-            Action::Decode(id) => {
-                // Batch formation: the policy extends its pick into a
-                // decode batch of ready sessions (knob: max_decode_batch;
-                // 1 keeps the serial interleaved path, step for step).
-                let batch_ids = if max_decode_batch > 1 && active.len() > 1 {
-                    policy.decode_batch(&view, id, max_decode_batch)
-                } else {
-                    vec![id]
-                };
-                if batch_ids.len() <= 1 {
-                    let lone = batch_ids.first().copied().unwrap_or(id);
-                    let Some(pos) = active.iter().position(|a| a.id == lone) else {
-                        bail!("policy decoded unknown session {lone}");
-                    };
-                    let a = &mut active[pos];
-                    let done = engine
-                        .decode_session(&mut a.sess)
-                        .with_context(|| format!("decode session {lone}"))?;
-                    out.steps += 1;
-                    a.last_token_at = a.sess.out.start
-                        + a.sess.out.token_times.last().copied().unwrap_or(0.0);
-                    if done {
-                        let a = active.swap_remove(pos);
-                        let rec = out.metrics.record(a.id, a.arrival, &a.sess.out, slo);
-                        out.per_request.push(rec);
-                    }
-                } else {
-                    if !batch_ids.contains(&id) {
-                        bail!("policy dropped its own pick {id} from the decode batch");
-                    }
-                    let mut batch: Vec<Active> = Vec::with_capacity(batch_ids.len());
-                    for bid in &batch_ids {
-                        let Some(pos) = active.iter().position(|a| a.id == *bid) else {
-                            bail!("policy batched unknown or duplicate session {bid}");
-                        };
-                        batch.push(active.swap_remove(pos));
-                    }
-                    let dones = {
-                        let mut refs: Vec<&mut EngineSession> =
-                            batch.iter_mut().map(|a| &mut a.sess).collect();
-                        engine
-                            .decode_batch(&mut refs)
-                            .with_context(|| format!("decode batch {batch_ids:?}"))?
-                    };
-                    out.steps += 1;
-                    for (mut a, done) in batch.into_iter().zip(dones) {
-                        a.last_token_at = a.sess.out.start
-                            + a.sess.out.token_times.last().copied().unwrap_or(0.0);
-                        if done {
-                            let rec = out.metrics.record(a.id, a.arrival, &a.sess.out, slo);
-                            out.per_request.push(rec);
-                        } else {
-                            active.push(a);
-                        }
-                    }
-                }
-            }
-            Action::Idle => unreachable!("idle resolved above"),
-        }
+        replica.tick()?;
     }
-    out.dedup = DedupStats::from_delta(&stats_before, &engine.stats);
-    out.phase = PhaseStats::from_delta(&stats_before, &engine.stats);
-    Ok(out)
-}
-
-/// The token-budget continuous loop (`chunk_tokens > 0`): admission
-/// only allocates a session slot, and every tick the policy plans a
-/// fused mixed step — up to `chunk_tokens` prompt tokens of one
-/// prefilling session plus up to `max_decode_batch` decode tokens —
-/// executed by [`Engine::mixed_step`] as one per-layer pass.
-fn run_fleet_chunked(
-    engine: &mut Engine,
-    trace: Vec<TimedRequest>,
-    cfg: &FleetConfig,
-) -> Result<FleetOutcome> {
-    let slo = cfg.slo();
-    let max_sessions = cfg.serving.max_sessions.max(1);
-    let chunk_tokens = cfg.serving.chunk_tokens;
-    let mut pending: std::collections::VecDeque<TimedRequest> = {
-        let mut t = trace;
-        t.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
-        t.into()
-    };
-    let mut queued: Vec<Queued> = Vec::new();
-    let mut active: Vec<Active> = Vec::new();
-    let enqueue = |r: TimedRequest| Queued {
-        id: r.id,
-        arrival: r.arrival,
-        deadline: r.arrival + slo.ttft_s,
-        request: r.request,
-    };
-    // The engine cannot fuse more tokens per tick than one expert call
-    // can carry: the chunk is granted first, decode fills the rest.
-    let max_seq = engine.model().max_seq;
-    let max_decode_batch = cfg.serving.max_decode_batch.clamp(1, max_seq);
-    let stats_before = engine.stats;
-    let mut policy = cfg.policy.build();
-    let mut out = FleetOutcome {
-        metrics: FleetMetrics::default(),
-        per_request: Vec::new(),
-        peak_concurrency: 0,
-        peak_kv_bytes: 0,
-        steps: 0,
-        dedup: DedupStats::default(),
-        phase: PhaseStats::default(),
-    };
-
-    loop {
-        let now = engine.clock();
-        while pending.front().is_some_and(|r| r.arrival <= now) {
-            queued.push(enqueue(pending.pop_front().unwrap()));
-        }
-        if queued.is_empty() && active.is_empty() {
-            match pending.pop_front() {
-                Some(r) => {
-                    queued.push(enqueue(r));
-                    continue;
-                }
-                None => break,
-            }
-        }
-
-        let view_of = |queued: &[Queued], active: &[Active]| {
-            let queued_info: Vec<QueuedInfo> = queued
-                .iter()
-                .map(|q| QueuedInfo { id: q.id, arrival: q.arrival, deadline: q.deadline })
-                .collect();
-            let active_info: Vec<ActiveInfo> = active
-                .iter()
-                .map(|a| ActiveInfo {
-                    id: a.id,
-                    arrival: a.arrival,
-                    emitted: a.sess.emitted(),
-                    target: a.sess.target_tokens(),
-                    last_token_at: a.last_token_at,
-                    prefill_remaining: a.sess.prefill_remaining(),
-                })
-                .collect();
-            (queued_info, active_info)
-        };
-
-        // Admission allocates slots only (prefill happens chunk by
-        // chunk), so free slots fill every tick in policy order.
-        while active.len() < max_sessions && !queued.is_empty() {
-            let (queued_info, active_info) = view_of(&queued, &active);
-            let free_slots = max_sessions - active.len();
-            let view = SchedView { now, queued: &queued_info, active: &active_info, free_slots };
-            let Some(id) = policy.admit_pick(&view) else { break };
-            let Some(pos) = queued.iter().position(|q| q.id == id) else {
-                bail!("policy admitted unknown session {id}");
-            };
-            let q = queued.swap_remove(pos);
-            let sess = engine
-                .begin_session(&q.request.prompt, q.request.max_new, None, q.arrival)
-                .with_context(|| format!("admitting session {id}"))?;
-            active.push(Active { id: q.id, arrival: q.arrival, sess, last_token_at: q.arrival });
-            out.peak_concurrency = out.peak_concurrency.max(active.len());
-            let kv_in_flight: u64 = active.iter().map(|a| a.sess.kv_bytes()).sum();
-            out.peak_kv_bytes = out.peak_kv_bytes.max(kv_in_flight);
-        }
-        if active.is_empty() {
-            // queue non-empty but zero slots cannot happen (max_sessions
-            // >= 1 and the admit loop always places someone); guard.
-            bail!("chunked scheduler wedged with {} queued sessions", queued.len());
-        }
-
-        // Token-budget tick plan: one prefill chunk + a decode batch.
-        let (queued_info, active_info) = view_of(&queued, &active);
-        let free_slots = max_sessions - active.len();
-        let view = SchedView { now, queued: &queued_info, active: &active_info, free_slots };
-        // Hand the policy the decode budget that will actually fit next
-        // to the worst-case chunk grant, so a stateful policy (round-
-        // robin's rotation cursor) never advances past sessions a later
-        // truncation would drop from the batch.
-        let chunk_cap = active_info
-            .iter()
-            .map(|a| a.prefill_remaining.min(chunk_tokens))
-            .max()
-            .unwrap_or(0);
-        let decode_budget = max_decode_batch.min(max_seq - chunk_cap);
-        let mut plan = policy.mixed_tick(&view, decode_budget);
-        if plan.is_empty() {
-            // Work-conserving fallback so a policy bug can never wedge
-            // the loop: chunk the oldest prefilling session, else decode
-            // the first ready one.
-            let pre = active_info.iter().find(|a| a.prefill_remaining > 0).map(|a| a.id);
-            let dec: Vec<usize> = active_info
-                .iter()
-                .filter(|a| a.decode_ready())
-                .take(1)
-                .map(|a| a.id)
-                .collect();
-            ensure!(
-                pre.is_some() || !dec.is_empty(),
-                "chunked scheduler idle with {} active sessions",
-                active.len()
-            );
-            plan = policy::TickPlan { prefill: pre, decode: dec };
-        }
-
-        // Validate the plan and split the borrow: the prefill session
-        // and every decode session come out of `active` by value.
-        let prefill_pos = match plan.prefill {
-            Some(id) => {
-                let Some(pos) = active.iter().position(|a| a.id == id) else {
-                    bail!("policy chunked unknown session {id}");
-                };
-                ensure!(
-                    active[pos].sess.prefill_remaining() > 0,
-                    "policy chunked a prefilled session {id}"
-                );
-                Some(pos)
-            }
-            None => None,
-        };
-        let mut prefill_active = prefill_pos.map(|pos| active.swap_remove(pos));
-        ensure!(
-            plan.decode.len() <= decode_budget,
-            "decode batch {} exceeds the per-tick budget {decode_budget}",
-            plan.decode.len()
-        );
-        // The chunk is granted first; decode fills what the expert token
-        // bucket has left.  With the budget handed to the policy above
-        // this truncation is a no-op (granted <= chunk_cap), kept as a
-        // belt-and-braces bound for misbehaving policies.
-        let granted = prefill_active
-            .as_ref()
-            .map(|a| chunk_tokens.min(a.sess.prefill_remaining()))
-            .unwrap_or(0);
-        plan.decode.truncate(max_seq - granted);
-        let mut batch: Vec<Active> = Vec::with_capacity(plan.decode.len());
-        for bid in &plan.decode {
-            let Some(pos) = active.iter().position(|a| a.id == *bid) else {
-                bail!("policy batched unknown or duplicate session {bid}");
-            };
-            ensure!(
-                active[pos].sess.prefilled() && !active[pos].sess.done(),
-                "policy batched session {bid} that is not ready to decode"
-            );
-            batch.push(active.swap_remove(pos));
-        }
-
-        let report = {
-            let pre_ref = prefill_active.as_mut().map(|a| (&mut a.sess, chunk_tokens));
-            let mut refs: Vec<&mut EngineSession> =
-                batch.iter_mut().map(|a| &mut a.sess).collect();
-            engine
-                .mixed_step(pre_ref, &mut refs)
-                .with_context(|| {
-                    format!(
-                        "mixed tick (chunk session {:?}, decode {:?})",
-                        plan.prefill, plan.decode
-                    )
-                })?
-        };
-        out.steps += 1;
-
-        if let Some(mut a) = prefill_active {
-            if report.prefill_done {
-                a.last_token_at =
-                    a.sess.out.start + a.sess.out.token_times.last().copied().unwrap_or(0.0);
-                if a.sess.done() {
-                    let rec = out.metrics.record(a.id, a.arrival, &a.sess.out, slo);
-                    out.per_request.push(rec);
-                } else {
-                    active.push(a);
-                }
-            } else {
-                active.push(a);
-            }
-        }
-        for (mut a, done) in batch.into_iter().zip(report.dones) {
-            a.last_token_at =
-                a.sess.out.start + a.sess.out.token_times.last().copied().unwrap_or(0.0);
-            if done {
-                let rec = out.metrics.record(a.id, a.arrival, &a.sess.out, slo);
-                out.per_request.push(rec);
-            } else {
-                active.push(a);
-            }
-        }
-    }
-    out.dedup = DedupStats::from_delta(&stats_before, &engine.stats);
-    out.phase = PhaseStats::from_delta(&stats_before, &engine.stats);
-    Ok(out)
+    Ok(replica.finish().outcome)
 }

@@ -1,7 +1,14 @@
-//! Pluggable continuous-scheduling policies: given a snapshot of the
-//! admission queue and the in-flight sessions, pick the engine's next
-//! step (admit-and-prefill one queued request, or decode one token of an
-//! active session).
+//! Pluggable serving policies at both levels of the stack:
+//!
+//! * **Continuous-scheduling policies** ([`SchedPolicy`], selected by
+//!   [`PolicyKind`]) run *inside one replica*: given a snapshot of the
+//!   admission queue and the in-flight sessions, pick the engine's next
+//!   step (admit-and-prefill one queued request, or decode one token of
+//!   an active session).
+//! * **Dispatch policies** ([`DispatchPolicy`], selected by
+//!   [`DispatchKind`]) run *in front of the cluster*: route each
+//!   arriving request to one of the replicas
+//!   ([`crate::serving::run_cluster`]).
 //!
 //! With chunked prefill enabled (`--chunk-tokens > 0`) the fleet loop
 //! instead asks the policy for a **token-budget tick plan**
@@ -27,6 +34,8 @@
 //!   token (least-recently-served), spreading TPOT jitter under load.
 
 use anyhow::{bail, Result};
+
+use super::arrival::TimedRequest;
 
 /// A queued (arrived, not yet admitted) request.
 #[derive(Debug, Clone, Copy)]
@@ -379,6 +388,163 @@ impl SchedPolicy for SloAware {
     }
 }
 
+// ---------------------------------------------------------------------
+// Cluster-level dispatch policies
+// ---------------------------------------------------------------------
+
+/// Dispatcher-visible snapshot of one replica (what a cluster front-end
+/// can observe without touching the replica's engine).
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaDispatchView {
+    /// Replica index in the cluster (`0..replicas`).
+    pub index: usize,
+    /// The replica's virtual clock (its engine's compute horizon).
+    pub clock: f64,
+    /// Requests waiting in the replica's admission queue.
+    pub queued_requests: usize,
+    /// Prompt + generation tokens still owed by queued requests.
+    pub queued_tokens: usize,
+    /// Admitted, unfinished sessions.
+    pub active_sessions: usize,
+    /// Prompt + generation tokens still owed by active sessions.
+    pub active_tokens: usize,
+}
+
+impl ReplicaDispatchView {
+    /// Total tokens of outstanding work visible to the dispatcher (the
+    /// join-shortest-queue load signal).
+    pub fn backlog_tokens(&self) -> usize {
+        self.queued_tokens + self.active_tokens
+    }
+}
+
+/// A cluster dispatch policy: route each arriving request to a replica.
+/// May keep state (e.g. a rotation cursor); must return an index
+/// `< replicas.len()` for a non-empty view slice.
+pub trait DispatchPolicy {
+    fn name(&self) -> &'static str;
+    fn route(&mut self, req: &TimedRequest, replicas: &[ReplicaDispatchView]) -> usize;
+}
+
+/// Dispatch policy selector (config / CLI surface).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchKind {
+    /// Cycle through replicas in arrival order (oblivious baseline).
+    RoundRobin,
+    /// Route to the replica with the fewest outstanding tokens (queued
+    /// prompt + generation tokens plus in-flight remaining work).
+    JoinShortestQueue,
+    /// Hash the prompt's predicted hot experts to a replica, so prompts
+    /// that route to similar experts land on the same warm expert cache.
+    ExpertAffinity,
+}
+
+impl DispatchKind {
+    pub fn parse(name: &str) -> Result<DispatchKind> {
+        Ok(match name {
+            "rr" | "round-robin" => DispatchKind::RoundRobin,
+            "jsq" | "shortest-queue" => DispatchKind::JoinShortestQueue,
+            "affinity" | "expert-affinity" => DispatchKind::ExpertAffinity,
+            _ => bail!("unknown dispatch policy {name:?}; try rr, jsq, affinity"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DispatchKind::RoundRobin => "rr",
+            DispatchKind::JoinShortestQueue => "jsq",
+            DispatchKind::ExpertAffinity => "affinity",
+        }
+    }
+
+    pub fn build(self) -> Box<dyn DispatchPolicy> {
+        match self {
+            DispatchKind::RoundRobin => Box::new(DispatchRoundRobin { next: 0 }),
+            DispatchKind::JoinShortestQueue => Box::new(JoinShortestQueue),
+            DispatchKind::ExpertAffinity => Box::new(ExpertAffinity),
+        }
+    }
+
+    pub const ALL: [DispatchKind; 3] = [
+        DispatchKind::RoundRobin,
+        DispatchKind::JoinShortestQueue,
+        DispatchKind::ExpertAffinity,
+    ];
+}
+
+struct DispatchRoundRobin {
+    next: usize,
+}
+
+impl DispatchPolicy for DispatchRoundRobin {
+    fn name(&self) -> &'static str {
+        "rr"
+    }
+
+    fn route(&mut self, _req: &TimedRequest, replicas: &[ReplicaDispatchView]) -> usize {
+        let pick = self.next % replicas.len().max(1);
+        self.next = pick + 1;
+        pick
+    }
+}
+
+/// Join-shortest-queue by outstanding tokens (ties by replica index, so
+/// routing is deterministic).
+struct JoinShortestQueue;
+
+impl DispatchPolicy for JoinShortestQueue {
+    fn name(&self) -> &'static str {
+        "jsq"
+    }
+
+    fn route(&mut self, _req: &TimedRequest, replicas: &[ReplicaDispatchView]) -> usize {
+        replicas
+            .iter()
+            .min_by(|a, b| {
+                a.backlog_tokens()
+                    .cmp(&b.backlog_tokens())
+                    .then(a.index.cmp(&b.index))
+            })
+            .map(|r| r.index)
+            .unwrap_or(0)
+    }
+}
+
+/// Expert-affinity dispatch: a cheap dispatcher-side prediction of the
+/// prompt's hot experts.  Routing in this corpus is token-driven, so the
+/// **multiset of prompt tokens** is a proxy for the expert set the
+/// prompt will route to; an order-invariant hash of it sends prompts
+/// with similar content to the same replica, whose mixed-precision
+/// expert cache is already warm with exactly those experts.
+struct ExpertAffinity;
+
+/// SplitMix64 finalizer (deterministic, dependency-free avalanche).
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Order-invariant hash of the prompt's token multiset (summing the
+/// per-token hashes commutes, so permuted prompts colocate).
+pub fn prompt_affinity_hash(prompt: &[i32]) -> u64 {
+    prompt
+        .iter()
+        .fold(0u64, |acc, &t| acc.wrapping_add(splitmix64(t as u64)))
+}
+
+impl DispatchPolicy for ExpertAffinity {
+    fn name(&self) -> &'static str {
+        "affinity"
+    }
+
+    fn route(&mut self, req: &TimedRequest, replicas: &[ReplicaDispatchView]) -> usize {
+        let n = replicas.len().max(1);
+        (prompt_affinity_hash(&req.request.prompt) % n as u64) as usize
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -553,5 +719,79 @@ mod tests {
             assert_eq!(PolicyKind::parse(kind.name()).unwrap(), kind);
         }
         assert!(PolicyKind::parse("lifo").is_err());
+    }
+
+    // -- dispatch policies ------------------------------------------------
+
+    fn rv(index: usize, queued_tokens: usize, active_tokens: usize) -> ReplicaDispatchView {
+        ReplicaDispatchView {
+            index,
+            clock: 0.0,
+            queued_requests: queued_tokens.min(1),
+            queued_tokens,
+            active_sessions: active_tokens.min(1),
+            active_tokens,
+        }
+    }
+
+    fn treq(id: usize, prompt: Vec<i32>) -> TimedRequest {
+        TimedRequest {
+            id,
+            arrival: 0.0,
+            request: crate::workload::Request { prompt, max_new: 4 },
+        }
+    }
+
+    #[test]
+    fn dispatch_round_robin_cycles() {
+        let mut p = DispatchKind::RoundRobin.build();
+        let views = [rv(0, 0, 0), rv(1, 0, 0), rv(2, 0, 0)];
+        let r = treq(0, vec![1, 2]);
+        let picks: Vec<usize> = (0..6).map(|_| p.route(&r, &views)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn dispatch_jsq_picks_least_loaded_with_index_ties() {
+        let mut p = DispatchKind::JoinShortestQueue.build();
+        let r = treq(0, vec![1, 2]);
+        // backlog = queued + active tokens
+        let views = [rv(0, 5, 5), rv(1, 2, 3), rv(2, 0, 4)];
+        assert_eq!(p.route(&r, &views), 2);
+        // ties break toward the lower index
+        let tied = [rv(0, 3, 0), rv(1, 0, 3), rv(2, 9, 9)];
+        assert_eq!(p.route(&r, &tied), 0);
+    }
+
+    #[test]
+    fn dispatch_affinity_is_deterministic_order_invariant_and_in_range() {
+        let mut p = DispatchKind::ExpertAffinity.build();
+        let views: Vec<ReplicaDispatchView> = (0..4).map(|i| rv(i, 0, 0)).collect();
+        let a = p.route(&treq(0, vec![3, 7, 11]), &views);
+        let b = p.route(&treq(9, vec![3, 7, 11]), &views);
+        assert_eq!(a, b, "same prompt must colocate regardless of id");
+        // permuted prompts land on the same replica (order-invariant hash)
+        let c = p.route(&treq(1, vec![11, 3, 7]), &views);
+        assert_eq!(a, c);
+        assert!(a < 4);
+        // the hash actually spreads: over many distinct prompts every
+        // replica receives something
+        let mut hit = [false; 4];
+        for t in 0..64i32 {
+            hit[p.route(&treq(t as usize, vec![1, t, t * 3 % 50]), &views)] = true;
+        }
+        assert!(hit.iter().all(|&h| h), "affinity hash never spread: {hit:?}");
+    }
+
+    #[test]
+    fn dispatch_parse_round_trips() {
+        for kind in DispatchKind::ALL {
+            assert_eq!(DispatchKind::parse(kind.name()).unwrap(), kind);
+        }
+        assert!(DispatchKind::parse("random").is_err());
+        assert_eq!(
+            DispatchKind::parse("shortest-queue").unwrap(),
+            DispatchKind::JoinShortestQueue
+        );
     }
 }

@@ -1,0 +1,485 @@
+//! One serving replica: an [`Engine`] plus everything the fleet loop
+//! used to own inline — the admission queue, the in-flight session set,
+//! the scheduling-policy state, and the per-run telemetry — behind a
+//! `tick`-style API the cluster layer can advance in virtual-time order.
+//!
+//! The two tick bodies are the pre-refactor fleet loops extracted
+//! verbatim: [`Replica::tick`] dispatches to the monolithic step
+//! (`chunk_tokens == 0`: admission runs the whole prefill as one
+//! scheduling step, decode steps batch across sessions) or the
+//! token-budget chunked step (admission only allocates a slot; each tick
+//! fuses one prefill chunk with a decode batch through
+//! [`Engine::mixed_step`]).  Driving one replica to completion — deliver
+//! every arrival at its time, tick while there is work, fast-forward
+//! when idle — therefore reproduces the pre-refactor single-engine
+//! `run_fleet` tick for tick; `tests/integration_cluster.rs` pins that
+//! equivalence for both paths.
+//!
+//! Telemetry discipline: engine counters ([`EngineStats`]) and channel
+//! busy time ([`crate::memory::BusyTotals`]) are cumulative over the
+//! engine's lifetime, so the replica snapshots both at construction and
+//! reports **deltas** at [`Replica::finish`] — reusing an engine across
+//! runs can never double-count an earlier run's work.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::engine::{Engine, EngineSession, EngineStats};
+use crate::memory::BusyTotals;
+use crate::workload::Request;
+
+use super::arrival::TimedRequest;
+use super::metrics::{DedupStats, PhaseStats, ResourceUtil, SloTargets};
+use super::policy::{
+    Action, ActiveInfo, QueuedInfo, ReplicaDispatchView, SchedPolicy, SchedView, TickPlan,
+};
+use super::{FleetConfig, FleetOutcome};
+
+/// A request that has been dispatched to this replica but not admitted.
+struct Queued {
+    id: usize,
+    arrival: f64,
+    deadline: f64,
+    request: Request,
+}
+
+/// An admitted, still-running session.
+struct Active {
+    id: usize,
+    arrival: f64,
+    sess: EngineSession,
+    last_token_at: f64,
+}
+
+/// One replica's completed run: its fleet outcome plus the busy-seconds
+/// delta its engine accrued (the cluster merges busy time across
+/// replicas to report cluster-level utilization).
+#[derive(Debug, Clone)]
+pub struct ReplicaRun {
+    pub outcome: FleetOutcome,
+    pub busy: BusyTotals,
+}
+
+/// One serving replica (engine + queues + policy + telemetry).
+pub struct Replica<'e> {
+    engine: &'e mut Engine,
+    policy: Box<dyn SchedPolicy>,
+    slo: SloTargets,
+    max_sessions: usize,
+    /// Decode-batch width, clamped to the model's expert token bucket.
+    max_decode_batch: usize,
+    chunk_tokens: usize,
+    max_seq: usize,
+    queued: Vec<Queued>,
+    active: Vec<Active>,
+    stats_before: EngineStats,
+    busy_before: BusyTotals,
+    out: FleetOutcome,
+}
+
+fn infos(queued: &[Queued], active: &[Active]) -> (Vec<QueuedInfo>, Vec<ActiveInfo>) {
+    let queued_info: Vec<QueuedInfo> = queued
+        .iter()
+        .map(|q| QueuedInfo { id: q.id, arrival: q.arrival, deadline: q.deadline })
+        .collect();
+    let active_info: Vec<ActiveInfo> = active
+        .iter()
+        .map(|a| ActiveInfo {
+            id: a.id,
+            arrival: a.arrival,
+            emitted: a.sess.emitted(),
+            target: a.sess.target_tokens(),
+            last_token_at: a.last_token_at,
+            prefill_remaining: a.sess.prefill_remaining(),
+        })
+        .collect();
+    (queued_info, active_info)
+}
+
+impl<'e> Replica<'e> {
+    /// Wrap an engine for one fleet run, snapshotting its cumulative
+    /// counters so [`Replica::finish`] reports this run's deltas only.
+    pub fn new(engine: &'e mut Engine, cfg: &FleetConfig) -> Replica<'e> {
+        let max_seq = engine.model().max_seq;
+        Replica {
+            slo: cfg.slo(),
+            max_sessions: cfg.serving.max_sessions.max(1),
+            // Clamp the batch width to the model's largest expert token
+            // bucket: the engine cannot fuse more decode tokens than one
+            // expert call can carry, and `--sessions` above that limit
+            // should still serve (the surplus sessions just decode in
+            // the next tick's batch).
+            max_decode_batch: cfg.serving.max_decode_batch.clamp(1, max_seq),
+            chunk_tokens: cfg.serving.chunk_tokens,
+            max_seq,
+            queued: Vec::new(),
+            active: Vec::new(),
+            stats_before: engine.stats,
+            busy_before: engine.busy_totals(),
+            out: FleetOutcome::default(),
+            policy: cfg.policy.build(),
+            engine,
+        }
+    }
+
+    /// The replica's virtual clock (its engine's compute horizon).
+    pub fn clock(&self) -> f64 {
+        self.engine.clock()
+    }
+
+    /// Anything queued or in flight?
+    pub fn has_work(&self) -> bool {
+        !self.queued.is_empty() || !self.active.is_empty()
+    }
+
+    /// Deliver one dispatched request into the admission queue.
+    pub fn enqueue(&mut self, r: TimedRequest) {
+        self.queued.push(Queued {
+            id: r.id,
+            arrival: r.arrival,
+            deadline: r.arrival + self.slo.ttft_s,
+            request: r.request,
+        });
+    }
+
+    /// Dispatcher-visible load snapshot.
+    pub fn dispatch_view(&self, index: usize) -> ReplicaDispatchView {
+        let queued_tokens = self
+            .queued
+            .iter()
+            .map(|q| q.request.prompt.len() + q.request.max_new)
+            .sum();
+        let active_tokens = self
+            .active
+            .iter()
+            .map(|a| {
+                a.sess.prefill_remaining()
+                    + a.sess.target_tokens().saturating_sub(a.sess.emitted())
+            })
+            .sum();
+        ReplicaDispatchView {
+            index,
+            clock: self.clock(),
+            queued_requests: self.queued.len(),
+            queued_tokens,
+            active_sessions: self.active.len(),
+            active_tokens,
+        }
+    }
+
+    /// Advance this replica by one scheduling step.  Every arrival with
+    /// `arrival <= clock()` must already be enqueued (the cluster's
+    /// min-clock stepping guarantees it), and the replica must have
+    /// work.
+    pub fn tick(&mut self) -> Result<()> {
+        ensure!(self.has_work(), "ticked an idle replica");
+        if self.chunk_tokens == 0 {
+            self.tick_monolithic()
+        } else {
+            self.tick_chunked()
+        }
+    }
+
+    /// Consume the replica, yielding this run's outcome (engine-counter
+    /// and busy-time deltas, utilization over the run's makespan).
+    pub fn finish(self) -> ReplicaRun {
+        let mut out = self.out;
+        out.dedup = DedupStats::from_delta(&self.stats_before, &self.engine.stats);
+        out.phase = PhaseStats::from_delta(&self.stats_before, &self.engine.stats);
+        let busy = self.engine.busy_totals().minus(&self.busy_before);
+        out.utilization = ResourceUtil::from_busy(&busy, out.metrics.makespan(), 1);
+        ReplicaRun { outcome: out, busy }
+    }
+
+    /// Record a finished session into the run outcome.
+    fn record_done(&mut self, id: usize, arrival: f64, sess: &EngineSession) {
+        let rec = self.out.metrics.record(id, arrival, &sess.out, self.slo);
+        self.out.per_request.push(rec);
+    }
+
+    /// One step of the pre-chunking fleet loop: admission runs the
+    /// session's whole prefill as one scheduling step (`Action::Admit`),
+    /// decode steps batch across sessions.  Kept verbatim from the
+    /// pre-refactor `run_fleet_monolithic` body so `--chunk-tokens 0`
+    /// reproduces the legacy path step for step.
+    fn tick_monolithic(&mut self) -> Result<()> {
+        let now = self.engine.clock();
+        let (queued_info, active_info) = infos(&self.queued, &self.active);
+        let free_slots = self.max_sessions.saturating_sub(self.active.len());
+        let view = SchedView {
+            now,
+            queued: &queued_info,
+            active: &active_info,
+            free_slots,
+        };
+        let mut action = self.policy.next_action(&view);
+        if action == Action::Idle {
+            // Work-conserving fallback so a policy bug can never wedge
+            // the loop: admit if possible, else decode something.
+            action = if free_slots > 0 && !self.queued.is_empty() {
+                Action::Admit(self.queued[0].id)
+            } else if let Some(a) = self.active.first() {
+                Action::Decode(a.id)
+            } else {
+                // queue non-empty but no slots and nothing active cannot
+                // happen (max_sessions >= 1); guard anyway
+                bail!("scheduler idle with {} queued sessions", self.queued.len());
+            };
+        }
+
+        match action {
+            Action::Admit(id) => {
+                let Some(pos) = self.queued.iter().position(|q| q.id == id) else {
+                    bail!("policy admitted unknown session {id}");
+                };
+                if self.active.len() >= self.max_sessions {
+                    bail!("policy admitted session {id} with no free slot");
+                }
+                let q = self.queued.swap_remove(pos);
+                let mut sess = self
+                    .engine
+                    .begin_session(&q.request.prompt, q.request.max_new, None, q.arrival)
+                    .with_context(|| format!("admitting session {id}"))?;
+                self.engine
+                    .prefill_session(&mut sess)
+                    .with_context(|| format!("prefill session {id}"))?;
+                self.out.steps += 1;
+                self.out.peak_concurrency =
+                    self.out.peak_concurrency.max(self.active.len() + 1);
+                let kv_in_flight: u64 =
+                    self.active.iter().map(|a| a.sess.kv_bytes()).sum::<u64>()
+                        + sess.kv_bytes();
+                self.out.peak_kv_bytes = self.out.peak_kv_bytes.max(kv_in_flight);
+                let last_token_at = sess.out.start + sess.out.ttft;
+                if sess.done() {
+                    self.record_done(q.id, q.arrival, &sess);
+                } else {
+                    self.active.push(Active {
+                        id: q.id,
+                        arrival: q.arrival,
+                        sess,
+                        last_token_at,
+                    });
+                }
+            }
+            Action::Decode(id) => {
+                // Batch formation: the policy extends its pick into a
+                // decode batch of ready sessions (knob: max_decode_batch;
+                // 1 keeps the serial interleaved path, step for step).
+                let batch_ids = if self.max_decode_batch > 1 && self.active.len() > 1 {
+                    self.policy.decode_batch(&view, id, self.max_decode_batch)
+                } else {
+                    vec![id]
+                };
+                if batch_ids.len() <= 1 {
+                    let lone = batch_ids.first().copied().unwrap_or(id);
+                    let Some(pos) = self.active.iter().position(|a| a.id == lone) else {
+                        bail!("policy decoded unknown session {lone}");
+                    };
+                    let a = &mut self.active[pos];
+                    let done = self
+                        .engine
+                        .decode_session(&mut a.sess)
+                        .with_context(|| format!("decode session {lone}"))?;
+                    self.out.steps += 1;
+                    a.last_token_at = a.sess.out.start
+                        + a.sess.out.token_times.last().copied().unwrap_or(0.0);
+                    if done {
+                        let a = self.active.swap_remove(pos);
+                        self.record_done(a.id, a.arrival, &a.sess);
+                    }
+                } else {
+                    if !batch_ids.contains(&id) {
+                        bail!("policy dropped its own pick {id} from the decode batch");
+                    }
+                    let mut batch: Vec<Active> = Vec::with_capacity(batch_ids.len());
+                    for bid in &batch_ids {
+                        let Some(pos) = self.active.iter().position(|a| a.id == *bid)
+                        else {
+                            bail!("policy batched unknown or duplicate session {bid}");
+                        };
+                        batch.push(self.active.swap_remove(pos));
+                    }
+                    let dones = {
+                        let mut refs: Vec<&mut EngineSession> =
+                            batch.iter_mut().map(|a| &mut a.sess).collect();
+                        self.engine
+                            .decode_batch(&mut refs)
+                            .with_context(|| format!("decode batch {batch_ids:?}"))?
+                    };
+                    self.out.steps += 1;
+                    for (mut a, done) in batch.into_iter().zip(dones) {
+                        a.last_token_at = a.sess.out.start
+                            + a.sess.out.token_times.last().copied().unwrap_or(0.0);
+                        if done {
+                            self.record_done(a.id, a.arrival, &a.sess);
+                        } else {
+                            self.active.push(a);
+                        }
+                    }
+                }
+            }
+            Action::Idle => unreachable!("idle resolved above"),
+        }
+        Ok(())
+    }
+
+    /// One step of the token-budget continuous loop (`chunk_tokens >
+    /// 0`): admission only allocates session slots, then the policy
+    /// plans a fused mixed step — up to `chunk_tokens` prompt tokens of
+    /// one prefilling session plus up to `max_decode_batch` decode
+    /// tokens — executed by [`Engine::mixed_step`] as one per-layer
+    /// pass.  Kept verbatim from the pre-refactor `run_fleet_chunked`
+    /// body.
+    fn tick_chunked(&mut self) -> Result<()> {
+        let now = self.engine.clock();
+        let chunk_tokens = self.chunk_tokens;
+        let max_seq = self.max_seq;
+        let max_decode_batch = self.max_decode_batch;
+
+        // Admission allocates slots only (prefill happens chunk by
+        // chunk), so free slots fill every tick in policy order.
+        while self.active.len() < self.max_sessions && !self.queued.is_empty() {
+            let (queued_info, active_info) = infos(&self.queued, &self.active);
+            let free_slots = self.max_sessions - self.active.len();
+            let view =
+                SchedView { now, queued: &queued_info, active: &active_info, free_slots };
+            let Some(id) = self.policy.admit_pick(&view) else { break };
+            let Some(pos) = self.queued.iter().position(|q| q.id == id) else {
+                bail!("policy admitted unknown session {id}");
+            };
+            let q = self.queued.swap_remove(pos);
+            let sess = self
+                .engine
+                .begin_session(&q.request.prompt, q.request.max_new, None, q.arrival)
+                .with_context(|| format!("admitting session {id}"))?;
+            self.active.push(Active {
+                id: q.id,
+                arrival: q.arrival,
+                sess,
+                last_token_at: q.arrival,
+            });
+            self.out.peak_concurrency = self.out.peak_concurrency.max(self.active.len());
+            let kv_in_flight: u64 = self.active.iter().map(|a| a.sess.kv_bytes()).sum();
+            self.out.peak_kv_bytes = self.out.peak_kv_bytes.max(kv_in_flight);
+        }
+        if self.active.is_empty() {
+            // queue non-empty but zero slots cannot happen (max_sessions
+            // >= 1 and the admit loop always places someone); guard.
+            bail!("chunked scheduler wedged with {} queued sessions", self.queued.len());
+        }
+
+        // Token-budget tick plan: one prefill chunk + a decode batch.
+        let (queued_info, active_info) = infos(&self.queued, &self.active);
+        let free_slots = self.max_sessions - self.active.len();
+        let view =
+            SchedView { now, queued: &queued_info, active: &active_info, free_slots };
+        // Hand the policy the decode budget that will actually fit next
+        // to the worst-case chunk grant, so a stateful policy (round-
+        // robin's rotation cursor) never advances past sessions a later
+        // truncation would drop from the batch.
+        let chunk_cap = active_info
+            .iter()
+            .map(|a| a.prefill_remaining.min(chunk_tokens))
+            .max()
+            .unwrap_or(0);
+        let decode_budget = max_decode_batch.min(max_seq - chunk_cap);
+        let mut plan = self.policy.mixed_tick(&view, decode_budget);
+        if plan.is_empty() {
+            // Work-conserving fallback so a policy bug can never wedge
+            // the loop: chunk the oldest prefilling session, else decode
+            // the first ready one.
+            let pre = active_info.iter().find(|a| a.prefill_remaining > 0).map(|a| a.id);
+            let dec: Vec<usize> = active_info
+                .iter()
+                .filter(|a| a.decode_ready())
+                .take(1)
+                .map(|a| a.id)
+                .collect();
+            ensure!(
+                pre.is_some() || !dec.is_empty(),
+                "chunked scheduler idle with {} active sessions",
+                self.active.len()
+            );
+            plan = TickPlan { prefill: pre, decode: dec };
+        }
+
+        // Validate the plan and split the borrow: the prefill session
+        // and every decode session come out of `active` by value.
+        let prefill_pos = match plan.prefill {
+            Some(id) => {
+                let Some(pos) = self.active.iter().position(|a| a.id == id) else {
+                    bail!("policy chunked unknown session {id}");
+                };
+                ensure!(
+                    self.active[pos].sess.prefill_remaining() > 0,
+                    "policy chunked a prefilled session {id}"
+                );
+                Some(pos)
+            }
+            None => None,
+        };
+        let mut prefill_active = prefill_pos.map(|pos| self.active.swap_remove(pos));
+        ensure!(
+            plan.decode.len() <= decode_budget,
+            "decode batch {} exceeds the per-tick budget {decode_budget}",
+            plan.decode.len()
+        );
+        // The chunk is granted first; decode fills what the expert token
+        // bucket has left.  With the budget handed to the policy above
+        // this truncation is a no-op (granted <= chunk_cap), kept as a
+        // belt-and-braces bound for misbehaving policies.
+        let granted = prefill_active
+            .as_ref()
+            .map(|a| chunk_tokens.min(a.sess.prefill_remaining()))
+            .unwrap_or(0);
+        plan.decode.truncate(max_seq - granted);
+        let mut batch: Vec<Active> = Vec::with_capacity(plan.decode.len());
+        for bid in &plan.decode {
+            let Some(pos) = self.active.iter().position(|a| a.id == *bid) else {
+                bail!("policy batched unknown or duplicate session {bid}");
+            };
+            ensure!(
+                self.active[pos].sess.prefilled() && !self.active[pos].sess.done(),
+                "policy batched session {bid} that is not ready to decode"
+            );
+            batch.push(self.active.swap_remove(pos));
+        }
+
+        let report = {
+            let pre_ref = prefill_active.as_mut().map(|a| (&mut a.sess, chunk_tokens));
+            let mut refs: Vec<&mut EngineSession> =
+                batch.iter_mut().map(|a| &mut a.sess).collect();
+            self.engine.mixed_step(pre_ref, &mut refs).with_context(|| {
+                format!(
+                    "mixed tick (chunk session {:?}, decode {:?})",
+                    plan.prefill, plan.decode
+                )
+            })?
+        };
+        self.out.steps += 1;
+
+        if let Some(mut a) = prefill_active {
+            if report.prefill_done {
+                a.last_token_at =
+                    a.sess.out.start + a.sess.out.token_times.last().copied().unwrap_or(0.0);
+                if a.sess.done() {
+                    self.record_done(a.id, a.arrival, &a.sess);
+                } else {
+                    self.active.push(a);
+                }
+            } else {
+                self.active.push(a);
+            }
+        }
+        for (mut a, done) in batch.into_iter().zip(report.dones) {
+            a.last_token_at =
+                a.sess.out.start + a.sess.out.token_times.last().copied().unwrap_or(0.0);
+            if done {
+                self.record_done(a.id, a.arrival, &a.sess);
+            } else {
+                self.active.push(a);
+            }
+        }
+        Ok(())
+    }
+}

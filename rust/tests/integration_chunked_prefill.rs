@@ -178,8 +178,10 @@ fn fleet_cfg(policy: PolicyKind, max_sessions: usize, batch: usize, chunk: usize
             tpot_slo_s: 1e6,
             max_decode_batch: batch,
             chunk_tokens: chunk,
+            ..Default::default()
         },
         policy,
+        ..Default::default()
     }
 }
 
@@ -234,6 +236,7 @@ fn chunk_zero_fleet_is_the_monolithic_path_tick_for_tick() {
                     ..Default::default()
                 },
                 policy,
+                ..Default::default()
             },
         )
         .unwrap();

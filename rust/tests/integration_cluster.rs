@@ -1,0 +1,427 @@
+//! Integration: multi-replica cluster serving.
+//!
+//! Three pillars:
+//!
+//! 1. **Single-replica equivalence** — `run_cluster` over one engine
+//!    with round-robin dispatch reproduces `run_fleet` *tick for tick*
+//!    (identical per-request TTFT/TPOT/completion times, step counts,
+//!    dedup and phase counters) on both the monolithic
+//!    (`chunk_tokens = 0`) and chunked paths.  Together with the
+//!    pre-existing reference-loop and chunk-0 equivalence suites this
+//!    pins the whole refactor chain: cluster-of-one == `run_fleet` ==
+//!    the pre-refactor single-engine scheduler.
+//! 2. **Dispatcher properties** — request conservation (every trace id
+//!    completes exactly once across replicas) and no-starvation (every
+//!    dispatched request completes; nothing queues forever) under every
+//!    `DispatchPolicy` x scheduling policy x prefill mode, plus
+//!    per-replica admission limits.
+//! 3. **Telemetry discipline** — engine reuse across runs reports
+//!    per-run deltas (dedup/phase counters and channel utilization), so
+//!    cumulative engine counters can never double-count; and replica
+//!    scaling actually buys tail latency and goodput on a saturating
+//!    trace.
+//!
+//! Engine-level tests need the real `tiny` artifacts and skip politely
+//! when they are missing (run `make artifacts`), matching the other
+//! integration suites.  The dispatch-policy model test at the bottom is
+//! engine-free and runs everywhere.
+
+use std::sync::Arc;
+
+use dymoe::baselines::Uniform;
+use dymoe::config::{ServingConfig, SystemConfig, GB};
+use dymoe::coordinator::engine::{Engine, EngineOptions};
+use dymoe::model::assets::ModelAssets;
+use dymoe::quant::Precision;
+use dymoe::serving::arrival::{ArrivalGen, ArrivalProcess, TimedRequest};
+use dymoe::serving::policy::{DispatchKind, PolicyKind, ReplicaDispatchView};
+use dymoe::serving::{run_cluster, run_fleet, ClusterOutcome, FleetConfig};
+use dymoe::util::prop;
+use dymoe::workload::{Request, TraceGen};
+
+fn assets() -> Option<Arc<ModelAssets>> {
+    match ModelAssets::load("artifacts", "tiny") {
+        Ok(a) => Some(Arc::new(a)),
+        Err(_) => {
+            eprintln!("artifacts/tiny missing; run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn big_vram_sys() -> SystemConfig {
+    let mut sys = SystemConfig::edge_preset("tiny", 24).unwrap();
+    sys.hardware.vram_bytes = 1024 * GB;
+    sys
+}
+
+fn bf16_engine(a: &Arc<ModelAssets>) -> Engine {
+    Engine::with_options(
+        a,
+        big_vram_sys(),
+        Box::new(Uniform::new(Precision::Bf16)),
+        EngineOptions::default(),
+    )
+    .unwrap()
+}
+
+fn cfg(
+    policy: PolicyKind,
+    dispatch: DispatchKind,
+    max_sessions: usize,
+    batch: usize,
+    chunk: usize,
+) -> FleetConfig {
+    FleetConfig {
+        serving: ServingConfig {
+            max_sessions,
+            ttft_slo_s: 1e6,
+            tpot_slo_s: 1e6,
+            max_decode_batch: batch,
+            chunk_tokens: chunk,
+            ..Default::default()
+        },
+        policy,
+        dispatch,
+    }
+}
+
+fn tiny_trace(a: &Arc<ModelAssets>, n: usize, rate: f64) -> Vec<TimedRequest> {
+    let m = &a.manifest.model;
+    let mut content = TraceGen::new(7, m.max_seq.min(16), (m.max_cache - m.max_seq).min(6));
+    ArrivalGen::generate(21, ArrivalProcess::Poisson { rate }, &mut content, n).unwrap()
+}
+
+// ---------------------------------------------------------------------
+// Single-replica tick-for-tick equivalence (artifacts-gated)
+// ---------------------------------------------------------------------
+
+/// `--replicas 1 --dispatch rr` is the pre-refactor single-engine path:
+/// the cluster event loop around one replica must reproduce `run_fleet`
+/// *exactly* — same per-request times (f64-equal: identical engine ops
+/// on identical virtual timelines), same step counts, same dedup/phase
+/// counters, same utilization — for both the monolithic (chunk 0) and
+/// chunked (chunk 3) schedulers.
+#[test]
+fn cluster_of_one_matches_run_fleet_tick_for_tick() {
+    let Some(a) = assets() else { return };
+    for policy in [PolicyKind::SloAware, PolicyKind::RoundRobin] {
+        for chunk in [0usize, 3] {
+            let c = cfg(policy, DispatchKind::RoundRobin, 3, 2, chunk);
+            let trace = || tiny_trace(&a, 8, 50.0);
+
+            let mut fleet_engine = bf16_engine(&a);
+            let fleet = run_fleet(&mut fleet_engine, trace(), &c).unwrap();
+
+            let mut engines = vec![bf16_engine(&a)];
+            let cluster = run_cluster(&mut engines, trace(), &c).unwrap();
+
+            let label = format!("{} chunk {chunk}", policy.name());
+            assert_eq!(cluster.replicas.len(), 1);
+            assert_eq!(cluster.load_imbalance, 1.0, "{label}: one replica is balanced");
+            let merged = &cluster.fleet;
+            assert_eq!(merged.steps, fleet.steps, "{label}: step counts diverged");
+            assert_eq!(merged.peak_concurrency, fleet.peak_concurrency, "{label}");
+            assert_eq!(merged.peak_kv_bytes, fleet.peak_kv_bytes, "{label}");
+            assert_eq!(merged.dedup.decode_batches, fleet.dedup.decode_batches, "{label}");
+            assert_eq!(merged.dedup.routed_pairs, fleet.dedup.routed_pairs, "{label}");
+            assert_eq!(
+                merged.dedup.unique_expert_loads, fleet.dedup.unique_expert_loads,
+                "{label}"
+            );
+            assert_eq!(merged.phase.prefill_chunks, fleet.phase.prefill_chunks, "{label}");
+            assert_eq!(
+                merged.phase.prefill_chunk_tokens, fleet.phase.prefill_chunk_tokens,
+                "{label}"
+            );
+            assert_eq!(merged.phase.mixed_steps, fleet.phase.mixed_steps, "{label}");
+            assert_eq!(merged.utilization.gpu, fleet.utilization.gpu, "{label}");
+            assert_eq!(merged.utilization.pcie, fleet.utilization.pcie, "{label}");
+
+            assert_eq!(merged.per_request.len(), fleet.per_request.len(), "{label}");
+            for (x, y) in merged.per_request.iter().zip(&fleet.per_request) {
+                assert_eq!(x.id, y.id, "{label}: completion order diverged");
+                // exact equality: identical engine ops, identical clocks
+                assert_eq!(x.ttft, y.ttft, "{label}: TTFT diverged (id {})", x.id);
+                assert_eq!(x.tpot, y.tpot, "{label}: TPOT diverged (id {})", x.id);
+                assert_eq!(
+                    x.finished_at, y.finished_at,
+                    "{label}: completion time diverged (id {})",
+                    x.id
+                );
+                assert_eq!(x.queue_delay, y.queue_delay, "{label}");
+                assert_eq!(x.tokens, y.tokens, "{label}");
+            }
+            // the per-replica breakdown of a one-replica cluster *is*
+            // the fleet outcome
+            let b = &cluster.replicas[0];
+            assert_eq!(b.dispatched, 8, "{label}");
+            assert_eq!(b.outcome.metrics.completed, fleet.metrics.completed, "{label}");
+            assert_eq!(b.outcome.steps, fleet.steps, "{label}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dispatcher conservation / no-starvation (artifacts-gated)
+// ---------------------------------------------------------------------
+
+/// Every trace id completes exactly once across the cluster, every
+/// dispatched request completes on the replica it was routed to (no
+/// starvation under any dispatch x scheduling x prefill-mode combo),
+/// and per-replica admission limits hold.
+#[test]
+fn cluster_conserves_requests_under_every_policy_combo() {
+    let Some(a) = assets() else { return };
+    let n = 9;
+    for replicas in [2usize, 3] {
+        for dispatch in DispatchKind::ALL {
+            for policy in [PolicyKind::SloAware, PolicyKind::Fifo] {
+                for chunk in [0usize, 3] {
+                    let c = cfg(policy, dispatch, 2, 2, chunk);
+                    let mut engines: Vec<Engine> =
+                        (0..replicas).map(|_| bf16_engine(&a)).collect();
+                    let cluster =
+                        run_cluster(&mut engines, tiny_trace(&a, n, 10.0), &c).unwrap();
+                    let label = format!(
+                        "{} x {} x chunk {chunk} on {replicas} replicas",
+                        dispatch.name(),
+                        policy.name()
+                    );
+
+                    // conservation: every id exactly once, cluster-wide
+                    let mut ids: Vec<usize> =
+                        cluster.fleet.per_request.iter().map(|r| r.id).collect();
+                    ids.sort_unstable();
+                    assert_eq!(ids, (0..n).collect::<Vec<_>>(), "{label}: ids lost/duped");
+                    assert_eq!(cluster.fleet.metrics.completed, n, "{label}");
+
+                    // no starvation: each replica completes exactly what
+                    // it was dispatched, and dispatch covers the trace
+                    let mut dispatched_total = 0;
+                    for (i, b) in cluster.replicas.iter().enumerate() {
+                        assert_eq!(
+                            b.outcome.metrics.completed, b.dispatched,
+                            "{label}: replica {i} starved a request"
+                        );
+                        assert!(
+                            b.outcome.peak_concurrency <= 2,
+                            "{label}: replica {i} admission limit violated"
+                        );
+                        dispatched_total += b.dispatched;
+                    }
+                    assert_eq!(dispatched_total, n, "{label}: dispatch lost requests");
+
+                    // the balance statistic is well-formed
+                    assert!(cluster.load_imbalance >= 1.0 - 1e-12, "{label}");
+                    assert!(
+                        cluster.load_imbalance <= replicas as f64 + 1e-12,
+                        "{label}: imbalance {} above replica count",
+                        cluster.load_imbalance
+                    );
+
+                    // round-robin dispatch is maximally spread by count
+                    if dispatch == DispatchKind::RoundRobin {
+                        for b in &cluster.replicas {
+                            assert!(
+                                b.dispatched == n / replicas || b.dispatched == n / replicas + 1,
+                                "{label}: rr dispatched {} of {n}",
+                                b.dispatched
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Determinism: the same seeded trace on the same cluster config gives
+/// byte-identical outcomes (virtual-time co-simulation has no hidden
+/// state across runs with fresh engines).
+#[test]
+fn cluster_runs_are_deterministic() {
+    let Some(a) = assets() else { return };
+    let run = || -> ClusterOutcome {
+        let c = cfg(PolicyKind::SloAware, DispatchKind::JoinShortestQueue, 2, 2, 0);
+        let mut engines: Vec<Engine> = (0..2).map(|_| bf16_engine(&a)).collect();
+        run_cluster(&mut engines, tiny_trace(&a, 8, 20.0), &c).unwrap()
+    };
+    let x = run();
+    let y = run();
+    assert_eq!(x.fleet.per_request.len(), y.fleet.per_request.len());
+    for (a_, b_) in x.fleet.per_request.iter().zip(&y.fleet.per_request) {
+        assert_eq!(a_.id, b_.id);
+        assert_eq!(a_.ttft, b_.ttft);
+        assert_eq!(a_.finished_at, b_.finished_at);
+    }
+    assert_eq!(x.load_imbalance, y.load_imbalance);
+    assert_eq!(x.fleet.steps, y.fleet.steps);
+}
+
+// ---------------------------------------------------------------------
+// Replica scaling (artifacts-gated)
+// ---------------------------------------------------------------------
+
+/// The cluster's reason to exist: on a trace dense enough to saturate
+/// one replica, four replicas complete the same work with strictly
+/// lower p99 TTFT and strictly higher goodput.
+#[test]
+fn replica_scaling_cuts_tail_latency_and_raises_goodput() {
+    let Some(a) = assets() else { return };
+    let n = 10;
+    let mk = || tiny_trace(&a, n, 50.0); // heavy overload for one device
+    // Non-binding SLOs: goodput degenerates to completed / makespan, so
+    // "strictly higher goodput" is exactly "strictly shorter makespan"
+    // — the parallelism win itself, not an SLO-threshold artifact.
+    let c1 = FleetConfig {
+        serving: ServingConfig {
+            max_sessions: 4,
+            ttft_slo_s: 1e6,
+            tpot_slo_s: 1e6,
+            max_decode_batch: 4,
+            ..Default::default()
+        },
+        policy: PolicyKind::SloAware,
+        dispatch: DispatchKind::RoundRobin,
+    };
+    let mut one = vec![bf16_engine(&a)];
+    let single = run_cluster(&mut one, mk(), &c1).unwrap();
+    let mut four: Vec<Engine> = (0..4).map(|_| bf16_engine(&a)).collect();
+    let quad = run_cluster(&mut four, mk(), &c1).unwrap();
+
+    assert_eq!(single.fleet.metrics.completed, n);
+    assert_eq!(quad.fleet.metrics.completed, n);
+    let p99_1 = single.fleet.metrics.ttft.percentile(99.0);
+    let p99_4 = quad.fleet.metrics.ttft.percentile(99.0);
+    assert!(
+        p99_4 < p99_1,
+        "4 replicas did not cut p99 TTFT: {p99_4} vs {p99_1}"
+    );
+    let gp_1 = single.fleet.metrics.goodput_rps();
+    let gp_4 = quad.fleet.metrics.goodput_rps();
+    assert!(
+        gp_4 > gp_1,
+        "4 replicas did not raise goodput: {gp_4} vs {gp_1}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Telemetry delta discipline on engine reuse (artifacts-gated)
+// ---------------------------------------------------------------------
+
+/// Reusing one engine across fleet runs must report **per-run** dedup /
+/// phase / busy-time numbers: the run outcomes have to sum to the
+/// engine's cumulative counters (no run double-counts an earlier run's
+/// work), before *and* after a `reset_stats` between runs.
+#[test]
+fn engine_reuse_across_runs_reports_per_run_deltas() {
+    let Some(a) = assets() else { return };
+    let c = cfg(PolicyKind::SloAware, DispatchKind::RoundRobin, 3, 3, 2);
+    let mut engine = bf16_engine(&a);
+
+    let run1 = run_fleet(&mut engine, tiny_trace(&a, 6, 20.0), &c).unwrap();
+    let busy_mid = engine.busy_totals();
+    let run2 = run_fleet(&mut engine, tiny_trace(&a, 6, 20.0), &c).unwrap();
+    let busy_end = engine.busy_totals();
+
+    // dedup / phase counters: the two runs partition the cumulative
+    // engine counters exactly (a cumulative leak would make run2
+    // include run1's work and break the sum)
+    assert!(run2.dedup.decode_batches > 0 && run2.phase.prefill_chunks > 0);
+    assert_eq!(
+        run1.dedup.decode_batches + run2.dedup.decode_batches,
+        engine.stats.decode_batches
+    );
+    assert_eq!(
+        run1.dedup.routed_pairs + run2.dedup.routed_pairs,
+        engine.stats.routed_pairs
+    );
+    assert_eq!(
+        run1.phase.prefill_chunk_tokens + run2.phase.prefill_chunk_tokens,
+        engine.stats.prefill_chunk_tokens
+    );
+    assert_eq!(
+        run1.phase.mixed_steps + run2.phase.mixed_steps,
+        engine.stats.mixed_steps
+    );
+
+    // utilization: run2's busy fraction reflects run2's busy *delta*
+    // only (the cumulative totals would roughly double it)
+    let span2 = run2.metrics.makespan();
+    assert!(span2 > 0.0);
+    let gpu_delta = busy_end.gpu - busy_mid.gpu;
+    assert!(
+        (run2.utilization.gpu - (gpu_delta / span2).min(1.0)).abs() < 1e-9,
+        "run2 gpu utilization {} is not the run's own delta fraction {}",
+        run2.utilization.gpu,
+        gpu_delta / span2
+    );
+
+    // a reset between runs keeps the discipline: counters restart from
+    // zero and the next run's deltas match them exactly
+    engine.reset_stats();
+    assert_eq!(engine.stats.decode_batches, 0);
+    let run3 = run_fleet(&mut engine, tiny_trace(&a, 4, 20.0), &c).unwrap();
+    assert_eq!(run3.dedup.decode_batches, engine.stats.decode_batches);
+    assert_eq!(run3.phase.prefill_chunks, engine.stats.prefill_chunks);
+    assert_eq!(run3.metrics.completed, 4);
+}
+
+// ---------------------------------------------------------------------
+// Engine-free dispatch model properties (run everywhere)
+// ---------------------------------------------------------------------
+
+/// Dispatch policies over random replica views: picks are always in
+/// range, jsq never routes to a strictly more loaded replica than its
+/// pick, rr visits every replica within one cycle, and affinity is a
+/// pure function of the prompt.
+#[test]
+fn prop_dispatch_policies_route_sanely() {
+    prop::check("dispatch-routing", 200, |rng| {
+        let n = rng.range(1, 9);
+        let views: Vec<ReplicaDispatchView> = (0..n)
+            .map(|index| ReplicaDispatchView {
+                index,
+                clock: rng.f64() * 100.0,
+                queued_requests: rng.below(5),
+                queued_tokens: rng.below(200),
+                active_sessions: rng.below(4),
+                active_tokens: rng.below(100),
+            })
+            .collect();
+        let prompt: Vec<i32> = (0..rng.range(1, 12)).map(|_| rng.below(60) as i32).collect();
+        let req = TimedRequest {
+            id: rng.below(1000),
+            arrival: rng.f64(),
+            request: Request { prompt: prompt.clone(), max_new: rng.range(1, 8) },
+        };
+
+        for kind in DispatchKind::ALL {
+            let mut p = kind.build();
+            let pick = p.route(&req, &views);
+            assert!(pick < n, "{} routed out of range: {pick} of {n}", kind.name());
+            if kind == DispatchKind::JoinShortestQueue {
+                let picked = views[pick].queued_tokens + views[pick].active_tokens;
+                for v in &views {
+                    assert!(
+                        picked <= v.queued_tokens + v.active_tokens,
+                        "jsq skipped a less-loaded replica"
+                    );
+                }
+            }
+            if kind == DispatchKind::ExpertAffinity {
+                // pure in the prompt: rerouting the same request agrees
+                assert_eq!(pick, kind.build().route(&req, &views));
+            }
+        }
+
+        // rr covers every replica in one cycle regardless of load
+        let mut rr = DispatchKind::RoundRobin.build();
+        let mut seen = vec![false; n];
+        for _ in 0..n {
+            seen[rr.route(&req, &views)] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "rr starved a replica in one cycle");
+    });
+}

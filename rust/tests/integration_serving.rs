@@ -165,8 +165,10 @@ fn fleet_cfg_batched(
             tpot_slo_s: 1e6,
             max_decode_batch,
             chunk_tokens: 0,
+            ..Default::default()
         },
         policy,
+        ..Default::default()
     }
 }
 
