@@ -7,18 +7,21 @@
 //! is the classic serving-paper "rate vs p99" curve, produced on the
 //! co-simulated virtual timeline (deterministic under the fixed seed).
 //!
-//! A **replica-scaling sweep** closes the file: 1/2/4-replica clusters
-//! (fresh engines sharing one compiled executor) under every dispatch
-//! policy on the *same* seeded trace, reporting goodput, p99 TTFT, and
-//! the load-imbalance statistic — the cluster tentpole's scaling curve.
+//! A **replica-scaling sweep** (1/2/4-replica clusters — fresh engines
+//! sharing one compiled executor — under every dispatch policy on the
+//! *same* seeded trace, reporting goodput, p99 TTFT, and the
+//! load-imbalance statistic) and a **churn sweep** (stable vs drain vs
+//! fail of replica 0 at 2/4 replicas, the event timed mid-serve,
+//! reporting the requeue count, lost-work tokens, and the tail-latency
+//! hit) close the file.
 //!
 //! `--json` runs a small fixed smoke configuration instead and writes
 //! `BENCH_serving.json` (p50/p99 TTFT/TPOT, expert dedup ratio per
 //! decode-batch setting, a chunked-vs-monolithic long-prompt
 //! head-of-line sweep: p99 TPOT, worst inter-token stall, chunk and
 //! mixed-tick counts per `chunk_tokens` setting, plus the
-//! `replica_scaling_sweep`) so CI can track the perf trajectory in a
-//! machine-readable form.
+//! `replica_scaling_sweep` and `churn_sweep`) so CI can track the perf
+//! trajectory in a machine-readable form.
 //!
 //! Skips politely if `make artifacts` has not been run.
 
@@ -27,7 +30,7 @@ use std::rc::Rc;
 use std::sync::Arc;
 use std::time::Instant;
 
-use dymoe::config::{PolicyConfig, ServingConfig, SystemConfig};
+use dymoe::config::{ChurnEvent, ChurnKind, PolicyConfig, ServingConfig, SystemConfig};
 use dymoe::coordinator::engine::{Engine, EngineOptions};
 use dymoe::coordinator::strategy::DyMoEStrategy;
 use dymoe::model::assets::ModelAssets;
@@ -83,13 +86,15 @@ fn run_point(
 
 /// One deterministic **cluster** run: `replicas` fresh engines sharing
 /// one compiled executor, the same seeded trace for every point, one
-/// dispatch policy.  The replica-scaling sweep drives this.
+/// dispatch policy, an optional churn schedule.  The replica-scaling
+/// and churn sweeps drive this.
 fn run_cluster_point(
     assets: &Arc<ModelAssets>,
     rate: f64,
     replicas: usize,
     dispatch: DispatchKind,
     requests: usize,
+    churn: Vec<ChurnEvent>,
 ) -> anyhow::Result<ClusterOutcome> {
     let m = assets.manifest.model.clone();
     let exec = Rc::new(Executor::new(assets.clone())?);
@@ -114,11 +119,32 @@ fn run_cluster_point(
         requests,
     )?;
     let cfg = FleetConfig {
-        serving: ServingConfig { max_sessions: 8, max_decode_batch: 8, ..Default::default() },
+        serving: ServingConfig {
+            max_sessions: 8,
+            max_decode_batch: 8,
+            churn,
+            ..Default::default()
+        },
         policy: PolicyKind::SloAware,
         dispatch,
     };
     run_cluster(&mut engines, trace, &cfg)
+}
+
+/// The churn sweep's scenarios: a stable cluster, a graceful drain of
+/// replica 0, and a hard failure of replica 0, each at the same
+/// mid-trace instant (a fraction of the stable run's makespan, so the
+/// event genuinely lands inside the serving window).
+const CHURN_REPLICAS: [usize; 2] = [2, 4];
+const CHURN_AT_FRACTION: f64 = 0.25;
+
+fn churn_for(scenario: &str, at: f64) -> Vec<ChurnEvent> {
+    match scenario {
+        "stable" => Vec::new(),
+        "drain" => vec![ChurnEvent { at, replica: 0, kind: ChurnKind::Drain }],
+        "fail" => vec![ChurnEvent { at, replica: 0, kind: ChurnKind::Fail }],
+        _ => unreachable!("unknown churn scenario {scenario}"),
+    }
 }
 
 /// The head-of-line scenario: short-prompt decoders plus one long
@@ -229,7 +255,14 @@ fn smoke_json(assets: &Arc<ModelAssets>) -> anyhow::Result<Json> {
     let mut scaling_points = Vec::new();
     for &replicas in &SCALING_REPLICAS {
         for dispatch in DispatchKind::ALL {
-            let o = run_cluster_point(assets, SCALING_RATE, replicas, dispatch, requests)?;
+            let o = run_cluster_point(
+                assets,
+                SCALING_RATE,
+                replicas,
+                dispatch,
+                requests,
+                Vec::new(),
+            )?;
             let mut p = BTreeMap::new();
             p.insert("replicas".to_string(), num(replicas as f64));
             p.insert("dispatch".to_string(), Json::Str(dispatch.name().to_string()));
@@ -253,6 +286,56 @@ fn smoke_json(assets: &Arc<ModelAssets>) -> anyhow::Result<Json> {
             scaling_points.push(Json::Obj(p));
         }
     }
+    // Churn sweep: fail vs drain vs stable at 2 and 4 replicas (jsq
+    // dispatch, same seeded trace), the event timed at a fraction of
+    // the stable run's makespan so it lands mid-serve.  The SLO cost of
+    // churn — requeued sessions, lost work, tail-latency hit — is the
+    // signal CI tracks.
+    let mut churn_points = Vec::new();
+    for &replicas in &CHURN_REPLICAS {
+        let stable = run_cluster_point(
+            assets,
+            SCALING_RATE,
+            replicas,
+            DispatchKind::JoinShortestQueue,
+            requests,
+            Vec::new(),
+        )?;
+        let at = stable.fleet.metrics.makespan() * CHURN_AT_FRACTION;
+        for scenario in ["stable", "drain", "fail"] {
+            let o = if scenario == "stable" {
+                stable.clone()
+            } else {
+                run_cluster_point(
+                    assets,
+                    SCALING_RATE,
+                    replicas,
+                    DispatchKind::JoinShortestQueue,
+                    requests,
+                    churn_for(scenario, at),
+                )?
+            };
+            let mut p = BTreeMap::new();
+            p.insert("scenario".to_string(), Json::Str(scenario.to_string()));
+            p.insert("replicas".to_string(), num(replicas as f64));
+            p.insert("event_at_s".to_string(), num(if scenario == "stable" { 0.0 } else { at }));
+            p.insert("completed".to_string(), num(o.fleet.metrics.completed as f64));
+            p.insert("ttft_p50_s".to_string(), num(o.fleet.metrics.ttft.percentile(50.0)));
+            p.insert("ttft_p99_s".to_string(), num(o.fleet.metrics.ttft.percentile(99.0)));
+            p.insert("tpot_p99_s".to_string(), num(o.fleet.metrics.tpot.percentile(99.0)));
+            p.insert("goodput_rps".to_string(), num(o.fleet.metrics.goodput_rps()));
+            p.insert("makespan_s".to_string(), num(o.fleet.metrics.makespan()));
+            p.insert("queue_delay_mean_s".to_string(), num(o.fleet.metrics.queue_delay.mean()));
+            p.insert("requeued".to_string(), num(o.churn.requeued as f64));
+            p.insert(
+                "lost_work_tokens".to_string(),
+                num(o.churn.lost_work_tokens as f64),
+            );
+            p.insert("max_retries".to_string(), num(o.churn.max_retries as f64));
+            p.insert("load_imbalance".to_string(), num(o.load_imbalance));
+            churn_points.push(Json::Obj(p));
+        }
+    }
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("serving".to_string()));
     root.insert("model".to_string(), Json::Str("mixtral-mini".to_string()));
@@ -264,6 +347,7 @@ fn smoke_json(assets: &Arc<ModelAssets>) -> anyhow::Result<Json> {
     root.insert("points".to_string(), Json::Arr(points));
     root.insert("hol_long_prompt_sweep".to_string(), Json::Arr(hol_points));
     root.insert("replica_scaling_sweep".to_string(), Json::Arr(scaling_points));
+    root.insert("churn_sweep".to_string(), Json::Arr(churn_points));
     Ok(Json::Obj(root))
 }
 
@@ -371,7 +455,14 @@ fn main() -> anyhow::Result<()> {
     for &replicas in &SCALING_REPLICAS {
         for dispatch in DispatchKind::ALL {
             let wall = Instant::now();
-            let o = run_cluster_point(&assets, SCALING_RATE, replicas, dispatch, requests)?;
+            let o = run_cluster_point(
+                &assets,
+                SCALING_RATE,
+                replicas,
+                dispatch,
+                requests,
+                Vec::new(),
+            )?;
             println!(
                 "{replicas:<9} {:<9} {:>12.4} {:>12.3} {:>12.1} {:>10.2} {:>7.0}% {:>10.2}",
                 dispatch.name(),
@@ -380,6 +471,57 @@ fn main() -> anyhow::Result<()> {
                 o.fleet.metrics.throughput_tps(),
                 o.load_imbalance,
                 o.fleet.utilization.gpu * 100.0,
+                wall.elapsed().as_secs_f64(),
+            );
+        }
+    }
+    println!();
+    println!(
+        "### churn sweep (slo policy, jsq dispatch, Poisson {SCALING_RATE} r/s; replica 0 \
+         drained or failed at {CHURN_AT_FRACTION} of the stable makespan)"
+    );
+    println!(
+        "{:<9} {:<9} {:>12} {:>12} {:>12} {:>9} {:>10} {:>10}",
+        "replicas",
+        "scenario",
+        "TTFT p99",
+        "goodput r/s",
+        "queue mean",
+        "requeued",
+        "lost tok",
+        "wall (s)"
+    );
+    for &replicas in &CHURN_REPLICAS {
+        let stable = run_cluster_point(
+            &assets,
+            SCALING_RATE,
+            replicas,
+            DispatchKind::JoinShortestQueue,
+            requests,
+            Vec::new(),
+        )?;
+        let at = stable.fleet.metrics.makespan() * CHURN_AT_FRACTION;
+        for scenario in ["stable", "drain", "fail"] {
+            let wall = Instant::now();
+            let o = if scenario == "stable" {
+                stable.clone()
+            } else {
+                run_cluster_point(
+                    &assets,
+                    SCALING_RATE,
+                    replicas,
+                    DispatchKind::JoinShortestQueue,
+                    requests,
+                    churn_for(scenario, at),
+                )?
+            };
+            println!(
+                "{replicas:<9} {scenario:<9} {:>12.4} {:>12.3} {:>12.4} {:>9} {:>10} {:>10.2}",
+                o.fleet.metrics.ttft.percentile(99.0),
+                o.fleet.metrics.goodput_rps(),
+                o.fleet.metrics.queue_delay.mean(),
+                o.churn.requeued,
+                o.churn.lost_work_tokens,
                 wall.elapsed().as_secs_f64(),
             );
         }

@@ -153,6 +153,63 @@ impl HardwareConfig {
 
 pub const GB: u64 = 1_000_000_000;
 
+/// What happens to a replica at a churn event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnKind {
+    /// The replica dies: its queued *and* active (mid-prefill /
+    /// mid-decode) sessions are evacuated and re-dispatched to the
+    /// surviving replicas, restarting from scratch but keeping their
+    /// original arrival times (the SLO cost of the failure is real).
+    Fail,
+    /// The replica is cordoned: it stops receiving dispatches and runs
+    /// down everything already dispatched to it (admission queue and
+    /// in-flight sessions), then sits idle — a graceful recall.
+    Drain,
+}
+
+impl ChurnKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ChurnKind::Fail => "fail",
+            ChurnKind::Drain => "drain",
+        }
+    }
+}
+
+/// One scheduled churn event in a cluster run: at virtual time `at`,
+/// replica `replica` fails or drains.  Events fire in virtual-time
+/// order between scheduler ticks (`crate::serving::run_cluster`); the
+/// `serve-fleet` CLI builds these from repeatable `--fail T@R` /
+/// `--drain T@R` flags.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChurnEvent {
+    /// Virtual time (seconds) at which the event fires.
+    pub at: f64,
+    /// Target replica index (`0..replicas`).
+    pub replica: usize,
+    pub kind: ChurnKind,
+}
+
+impl ChurnEvent {
+    /// Parse the CLI spec `T@R` (virtual seconds `@` replica index),
+    /// e.g. `--fail 12.5@1` or `--drain 0@0`.
+    pub fn parse_spec(kind: ChurnKind, spec: &str) -> Result<ChurnEvent> {
+        let Some((t, r)) = spec.split_once('@') else {
+            bail!("--{} {spec:?}: expected T@R (virtual seconds @ replica index)", kind.name());
+        };
+        let at: f64 = t
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--{} {spec:?}: T must be a number", kind.name()))?;
+        if !at.is_finite() || at < 0.0 {
+            bail!("--{} {spec:?}: T must be finite and >= 0", kind.name());
+        }
+        let replica: usize = r
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--{} {spec:?}: R must be a replica index", kind.name()))?;
+        Ok(ChurnEvent { at, replica, kind })
+    }
+}
+
 /// Where sub-critical experts land under DyMoE's dynamic quantization.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LowMode {
@@ -271,6 +328,13 @@ pub struct ServingConfig {
     /// `run_cluster` is authoritative for cluster size; a value above 1
     /// that disagrees with it is rejected there (1 means "unset").
     pub replicas: usize,
+    /// Scheduled replica failure / drain events
+    /// ([`crate::serving::run_cluster`] fires them in virtual-time
+    /// order between ticks; the single-replica
+    /// [`crate::serving::run_fleet`] entry point has no dispatcher to
+    /// re-route evacuees and rejects a non-empty schedule).  Empty (the
+    /// default) is the churn-free cluster, tick for tick.
+    pub churn: Vec<ChurnEvent>,
 }
 
 impl Default for ServingConfig {
@@ -284,6 +348,7 @@ impl Default for ServingConfig {
             max_decode_batch: 1,
             chunk_tokens: 0,
             replicas: 1,
+            churn: Vec::new(),
         }
     }
 }
@@ -387,7 +452,25 @@ mod tests {
 
     #[test]
     fn serving_default_is_single_replica() {
-        assert_eq!(ServingConfig::default().replicas, 1);
+        let s = ServingConfig::default();
+        assert_eq!(s.replicas, 1);
+        assert!(s.churn.is_empty(), "default serving config must be churn-free");
+    }
+
+    #[test]
+    fn churn_spec_parses_time_at_replica() {
+        let e = ChurnEvent::parse_spec(ChurnKind::Fail, "12.5@1").unwrap();
+        assert_eq!(e, ChurnEvent { at: 12.5, replica: 1, kind: ChurnKind::Fail });
+        let e = ChurnEvent::parse_spec(ChurnKind::Drain, "0@0").unwrap();
+        assert_eq!(e.kind, ChurnKind::Drain);
+        assert_eq!(e.at, 0.0);
+        assert_eq!(e.replica, 0);
+        for bad in ["", "3", "@", "x@1", "3@x", "-1@0", "nan@0", "inf@2", "3@-1"] {
+            assert!(
+                ChurnEvent::parse_spec(ChurnKind::Fail, bad).is_err(),
+                "{bad:?} accepted"
+            );
+        }
     }
 
     #[test]

@@ -286,8 +286,15 @@ impl MixedPrecisionCache {
         }
         // Feasibility first: `None` must leave the cache unchanged (the
         // caller streams transiently).  Reclaimable = the replaced copy +
-        // every unpinned entry.
-        let replaced = self.map.get(&key).map(|e| e.bytes).unwrap_or(0);
+        // every unpinned entry.  A rule-2 promotion replacement swaps
+        // the *bytes* of an entry, not its identity: the pin mask an
+        // in-flight phase holds on the expert and its SLRU protected
+        // status carry over to the replacement (dropping them would let
+        // a fused layer evict an expert the other phase still pins).
+        let (replaced, carried_pins, was_protected) = match self.map.get(&key) {
+            Some(e) => (e.bytes, e.pins, e.segment == 1),
+            None => (0, 0, false),
+        };
         let reclaimable: u64 = self
             .map
             .iter()
@@ -310,11 +317,18 @@ impl MixedPrecisionCache {
         }
         self.budget.alloc(bytes).expect("fits by construction");
         self.stats.inserted_bytes += bytes;
-        // Fresh inserts land in the probation segment (0).
+        // Fresh inserts land in the probation segment (0) with no pins;
+        // a promotion replacement inherits the replaced entry's pins.
         self.map.insert(
             key,
-            Entry { prec, bytes, ready_at, last_use: tick, pins: 0, segment: 0 },
+            Entry { prec, bytes, ready_at, last_use: tick, pins: carried_pins, segment: 0 },
         );
+        // Re-promote a replaced protected entry (accounts the *new*
+        // byte size against the protected budget, demoting others if
+        // the segment overflows — exactly the hit-path promotion).
+        if was_protected {
+            self.promote(key);
+        }
         Some(evicted)
     }
 
@@ -456,6 +470,54 @@ mod tests {
         assert!(!c.is_pinned(k(0, 0)));
         let ev = c.insert(k(1, 1), Precision::Int4, 40, 0.0).unwrap();
         assert!(!ev.is_empty());
+    }
+
+    /// Rule-2 promotion replacement must carry the replaced entry's pin
+    /// mask and SLRU protected status: an in-flight phase (warm pin) or
+    /// fused layer (layer pin) holds pins on the *expert*, and swapping
+    /// its bytes for a higher-precision copy must not silently release
+    /// them — the replacement regression twin of
+    /// `pin_classes_are_independent_across_mixed_ticks`.
+    #[test]
+    fn promotion_replacement_carries_pins_and_protection() {
+        let mut c = MixedPrecisionCache::new(100);
+        c.set_scan_resistant(true);
+        c.insert(k(0, 0), Precision::Int2, 10, 0.0).unwrap();
+        // re-reference -> protected segment
+        let _ = c.lookup(k(0, 0), Precision::Int2);
+        assert_eq!(c.protected_bytes, 10);
+        // both pin classes held across the replacement, as in a mixed
+        // tick (warm pin from prefill, layer pin from the fused layer)
+        c.set_pinned(k(0, 0), PinClass::Warm, true);
+        c.set_pinned(k(0, 0), PinClass::Layer, true);
+        // rule-2 promotion: higher-precision request misses and replaces
+        assert_eq!(c.lookup(k(0, 0), Precision::Int4), Lookup::Miss { promotes: true });
+        c.insert(k(0, 0), Precision::Int4, 40, 2.0).unwrap();
+        assert_eq!(c.contains(k(0, 0)), Some(Precision::Int4));
+        assert!(
+            c.is_pinned_class(k(0, 0), PinClass::Warm),
+            "promotion replacement dropped the warm pin"
+        );
+        assert!(
+            c.is_pinned_class(k(0, 0), PinClass::Layer),
+            "promotion replacement dropped the layer pin"
+        );
+        // protected status carried, re-accounted at the new byte size
+        assert_eq!(c.protected_bytes, 40);
+        // releasing one class leaves the other's protection intact ...
+        c.set_pinned(k(0, 0), PinClass::Layer, false);
+        assert!(c.is_pinned(k(0, 0)));
+        // ... and once fully unpinned, the entry still rides the
+        // protected segment: a one-shot probation scan (90 bytes into
+        // the 60 left, forcing evictions) churns probation only
+        c.set_pinned(k(0, 0), PinClass::Warm, false);
+        for e in 1..10 {
+            c.insert(k(1, e), Precision::Int4, 10, 0.0).unwrap();
+        }
+        assert!(
+            c.contains(k(0, 0)).is_some(),
+            "promotion replacement dropped SLRU protected status"
+        );
     }
 
     #[test]

@@ -230,6 +230,14 @@ impl EngineSession {
         self.prompt.len()
     }
 
+    /// The session's prompt tokens.  The serving layer uses this to
+    /// rebuild the original request when a replica fails mid-session
+    /// and its work must be re-dispatched elsewhere
+    /// ([`crate::serving::Replica::evacuate`]).
+    pub fn prompt(&self) -> &[i32] {
+        &self.prompt
+    }
+
     /// Tokens emitted so far.
     pub fn emitted(&self) -> usize {
         self.emitted

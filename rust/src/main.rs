@@ -6,7 +6,7 @@
 //! dymoe serve-fleet --model mixtral-mini --vram 16 --requests 24 --rate 0.25 \
 //!                   [--arrival poisson|bursty|ramp] [--sessions 8] [--sched fifo|rr|slo] \
 //!                   [--max-decode-batch 8] [--replicas 4] [--dispatch rr|jsq|affinity] \
-//!                   [--replica-hw 24 --replica-hw 12:8]
+//!                   [--replica-hw 24 --replica-hw 12:8] [--fail 30@0] [--drain 45@1]
 //! dymoe experiment  <fig1|...|table3|all> [--items N] [--requests N] [--models a,b]
 //! dymoe timeline    --model mixtral-mini --vram 16
 //! ```
@@ -23,7 +23,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use dymoe::baselines::{
     AccelerateStatic, Fiddler, LoadOnDemand, MixtralOffloading, MoeInfinity, Uniform,
 };
-use dymoe::config::{HardwareConfig, LowMode, PolicyConfig, SystemConfig};
+use dymoe::config::{ChurnEvent, ChurnKind, HardwareConfig, LowMode, PolicyConfig, SystemConfig};
 use dymoe::coordinator::engine::{Engine, EngineOptions};
 use dymoe::coordinator::strategy::{DyMoEStrategy, Strategy};
 use dymoe::config::ServingConfig;
@@ -237,6 +237,25 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
     let dispatch = DispatchKind::parse(&args.get("dispatch", "rr"))?;
     let replicas = args.get_usize("replicas", 1)?.max(1);
     let max_sessions = args.get_usize("sessions", 8)?;
+    // Churn schedule: repeatable `--fail T@R` / `--drain T@R` events,
+    // fired by the cluster in virtual-time order between ticks.
+    let mut churn = Vec::new();
+    for spec in args.get_all("fail") {
+        churn.push(ChurnEvent::parse_spec(ChurnKind::Fail, &spec)?);
+    }
+    for spec in args.get_all("drain") {
+        churn.push(ChurnEvent::parse_spec(ChurnKind::Drain, &spec)?);
+    }
+    for e in &churn {
+        if e.replica >= replicas {
+            bail!(
+                "--{} {}@{} targets a replica outside the cluster (have --replicas {replicas})",
+                e.kind.name(),
+                e.at,
+                e.replica
+            );
+        }
+    }
     let serving = ServingConfig {
         max_sessions,
         ttft_slo_s: args
@@ -255,6 +274,7 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
         // fuses that many prompt tokens per tick with the decode batch.
         chunk_tokens: args.get_usize("chunk-tokens", 0)?,
         replicas,
+        churn,
     };
     // Heterogeneous replicas: each `--replica-hw VRAM[:PCIE[:TFLOPS]]`
     // occurrence defines one hardware class; specs cycle over the
@@ -287,6 +307,14 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
         serving.ttft_slo_s,
         serving.tpot_slo_s,
     );
+    if !serving.churn.is_empty() {
+        let sched: Vec<String> = serving
+            .churn
+            .iter()
+            .map(|e| format!("{} {}@{}", e.kind.name(), e.at, e.replica))
+            .collect();
+        println!("churn schedule: {}", sched.join(", "));
+    }
 
     // All replicas share the compiled executor (weights + artifacts are
     // immutable); each owns its engine, cache, and virtual timeline.
@@ -322,7 +350,7 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
 
     for r in &outcome.per_request {
         println!(
-            "req {:>3}: arrived {:>8} queued {:>8}  TTFT={:>8}  TPOT={:>8}  tokens={:>3}  {}",
+            "req {:>3}: arrived {:>8} queued {:>8}  TTFT={:>8}  TPOT={:>8}  tokens={:>3}  {}{}",
             r.id,
             fmt_secs(r.arrival),
             fmt_secs(r.queue_delay),
@@ -330,6 +358,11 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
             fmt_secs(r.tpot),
             r.tokens,
             if r.ttft_ok && r.tpot_ok { "ok" } else { "SLO-miss" },
+            if r.retries > 0 {
+                format!("  (re-dispatched x{})", r.retries)
+            } else {
+                String::new()
+            },
         );
     }
     println!();
@@ -344,6 +377,17 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
         fmt_secs(outcome.metrics.makespan()),
         cluster.load_imbalance,
     );
+    if cluster.churn.any() {
+        println!(
+            "churn: {} failed / {} drained replica(s); {} session(s) re-dispatched, \
+             {} tokens of work lost, worst request re-dispatched x{}",
+            cluster.churn.failed,
+            cluster.churn.drained,
+            cluster.churn.requeued,
+            cluster.churn.lost_work_tokens,
+            cluster.churn.max_retries,
+        );
+    }
     println!(
         "batched decode: {} steps ({} tokens, mean batch {:.2}); expert reuse {:.2}x \
          ({} shared fetches saved vs serial)",
@@ -376,9 +420,10 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
     );
     for (i, b) in cluster.replicas.iter().enumerate() {
         println!(
-            "replica {i} [{}]: {} dispatched, {} completed, goodput {:.3} r/s, \
+            "replica {i} [{}] ({}): {} dispatched, {} completed, goodput {:.3} r/s, \
              TTFT p99 {}, gpu {:.0}% / pcie {:.0}% / nvme {:.0}% busy",
             hw_labels[i],
+            b.state.name(),
             b.dispatched,
             b.outcome.metrics.completed,
             b.outcome.metrics.goodput_rps(),
@@ -455,6 +500,16 @@ fn fleet_json(
     root.insert("dispatch".to_string(), Json::Str(dispatch.name().to_string()));
     root.insert("replicas".to_string(), num(cluster.replicas.len() as f64));
     root.insert("load_imbalance".to_string(), num(cluster.load_imbalance));
+    let mut churn = BTreeMap::new();
+    churn.insert("failed".to_string(), num(cluster.churn.failed as f64));
+    churn.insert("drained".to_string(), num(cluster.churn.drained as f64));
+    churn.insert("requeued".to_string(), num(cluster.churn.requeued as f64));
+    churn.insert(
+        "lost_work_tokens".to_string(),
+        num(cluster.churn.lost_work_tokens as f64),
+    );
+    churn.insert("max_retries".to_string(), num(cluster.churn.max_retries as f64));
+    root.insert("churn".to_string(), Json::Obj(churn));
     root.insert("cluster".to_string(), metrics_obj(&cluster.fleet));
     let per_replica: Vec<Json> = cluster
         .replicas
@@ -471,6 +526,7 @@ fn fleet_json(
                 "hw".to_string(),
                 Json::Str(hw_labels.get(i).cloned().unwrap_or_default()),
             );
+            p.insert("state".to_string(), Json::Str(b.state.name().to_string()));
             Json::Obj(p)
         })
         .collect();
@@ -554,6 +610,11 @@ fn usage() -> String {
      \x20             [--dispatch rr|jsq|affinity (cluster request routing)]\n\
      \x20             [--replica-hw VRAM_GB[:PCIE_GBPS[:GPU_TFLOPS]] (repeatable;\n\
      \x20              specs cycle over replicas for a big.LITTLE cluster)]\n\
+     \x20             [--fail T@R (repeatable: replica R dies at virtual time T;\n\
+     \x20              its queued + in-flight sessions re-dispatch to live replicas,\n\
+     \x20              restarting with their original arrival times)]\n\
+     \x20             [--drain T@R (repeatable: replica R stops receiving dispatches\n\
+     \x20              at T and runs down what it already holds)]\n\
      \x20             [--json [PATH] (write cluster + per-replica summary JSON)]\n\
      \x20             [--ttft-slo S] [--tpot-slo S] [--strategy S] [--seed N]\n\
      \x20 timeline    --model <name> [--vram GB] [--strategy S]\n\

@@ -3,18 +3,45 @@
 //! event-driven co-simulation).
 //!
 //! The event loop maintains one invariant: **no replica ticks past an
-//! undelivered arrival.**  Each iteration either (a) routes the oldest
+//! undelivered arrival or an unfired churn event.**  Each iteration
+//! either (a) fires the next scheduled [`ChurnEvent`] — whenever its
+//! virtual time is at or before both the minimum clock among busy
+//! replicas and the next pending arrival — or (b) routes the oldest
 //! pending request to a replica via the [`DispatchPolicy`] — whenever
 //! its arrival time is at or before the minimum clock among busy
 //! replicas (the cluster's virtual "now"), or the whole cluster is idle
-//! (the fast-forward case) — or (b) ticks the busy replica with the
+//! (the fast-forward case) — or (c) ticks the busy replica with the
 //! smallest virtual clock (ties by index).  When a replica is picked to
 //! tick, every arrival up to its clock has therefore already been
 //! dispatched, which is exactly the admission discipline of the
-//! pre-refactor single-engine loop; with one replica the trace of
-//! enqueue/tick operations is identical, making `--replicas 1
+//! pre-refactor single-engine loop; with one replica and no churn the
+//! trace of enqueue/tick operations is identical, making `--replicas 1
 //! --dispatch rr` tick-for-tick equivalent to [`super::run_fleet`]
-//! (pinned in `tests/integration_cluster.rs`).
+//! (pinned in `tests/integration_cluster.rs`; the churn-free
+//! equivalence of the churn-capable loop is pinned in
+//! `tests/integration_churn.rs`).
+//!
+//! # Replica failure and drain
+//!
+//! Replicas are commodity edge devices that die or get recalled
+//! mid-trace.  A [`ChurnEvent`] schedules that: on **drain** the
+//! replica stops receiving dispatches and runs down everything already
+//! dispatched to it; on **fail** the replica's queued *and* active
+//! (mid-prefill / mid-decode) sessions are extracted via
+//! [`Replica::evacuate`] and merged back into the pending queue, where
+//! the [`DispatchPolicy`] — offered only the still-live replicas —
+//! re-routes them.  Restarted sessions keep their **original** arrival
+//! times, so the SLO impact of churn (queue delay, TTFT) is reported
+//! honestly — and service is gated at the failure time, so a restart
+//! can never begin "before" the failure on a receiving replica whose
+//! virtual clock lags the event; the work the dead replica had already
+//! done on them is discarded and counted as
+//! [`ChurnStats::lost_work_tokens`].  Request
+//! conservation (every trace id completes exactly once) holds across
+//! any churn schedule that leaves a live replica to serve it; a
+//! schedule that fails or drains *every* replica while requests are
+//! still outstanding is rejected with an error at the moment a request
+//! has nowhere to go.
 //!
 //! Replicas may be heterogeneous (different [`HardwareConfig`]s — a
 //! big.LITTLE edge cluster): each owns its engine, expert cache, and
@@ -22,17 +49,19 @@
 //! the stepper visits less often.
 //!
 //! [`HardwareConfig`]: crate::config::HardwareConfig
+//! [`ChurnEvent`]: crate::config::ChurnEvent
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 use anyhow::{ensure, Context, Result};
 
+use crate::config::{ChurnEvent, ChurnKind};
 use crate::coordinator::engine::Engine;
 use crate::memory::BusyTotals;
 
 use super::arrival::TimedRequest;
-use super::metrics::{load_imbalance, FleetMetrics, ResourceUtil};
-use super::replica::Replica;
+use super::metrics::{load_imbalance, ChurnStats, FleetMetrics, ResourceUtil};
+use super::replica::{Replica, ReplicaState};
 use super::{FleetConfig, FleetOutcome};
 
 /// One replica's share of a cluster run.
@@ -41,14 +70,19 @@ pub struct ReplicaBreakdown {
     /// The replica's own fleet outcome (per-replica metrics, dedup and
     /// phase telemetry, utilization over *its* makespan).
     pub outcome: FleetOutcome,
-    /// Requests the dispatcher routed here.
+    /// Requests the dispatcher routed here, re-dispatches after a
+    /// failure included (so across the cluster the counts sum to
+    /// `trace.len() + churn.requeued`).
     pub dispatched: usize,
     /// Busy-seconds delta this run accrued on the replica's channels.
     pub busy: BusyTotals,
+    /// Lifecycle state the replica ended the run in (Live unless a
+    /// churn event touched it).
+    pub state: ReplicaState,
 }
 
 /// Result of one cluster run: the merged fleet view plus per-replica
-/// breakdowns and the dispatch balance statistic.
+/// breakdowns, the dispatch balance statistic, and churn telemetry.
 #[derive(Debug, Clone)]
 pub struct ClusterOutcome {
     /// Cluster-merged outcome: union of per-request records (completion
@@ -59,14 +93,18 @@ pub struct ClusterOutcome {
     /// `max / mean` of per-replica emitted-token loads (1.0 = perfectly
     /// balanced, `replicas` = one replica served everything).
     pub load_imbalance: f64,
+    /// What the run's churn schedule cost (all zero on a churn-free
+    /// run).
+    pub churn: ChurnStats,
 }
 
 /// Serve an open-loop trace on a cluster of replicas to completion.
 ///
 /// Each engine becomes one [`Replica`] (they may carry different
 /// [`crate::config::HardwareConfig`]s); `cfg.dispatch` routes every
-/// arriving request to a replica, and replicas advance in virtual-time
-/// order.  With a single engine this reduces exactly to
+/// arriving request to a live replica, replicas advance in virtual-time
+/// order, and `cfg.serving.churn` events fire between ticks.  With a
+/// single engine and no churn this reduces exactly to
 /// [`super::run_fleet`].
 pub fn run_cluster(
     engines: &mut [Engine],
@@ -84,6 +122,28 @@ pub fn run_cluster(
         "config says {} replicas but {n} engines were provided",
         cfg.serving.replicas
     );
+    // Churn schedule: validated up front, fired in virtual-time order
+    // (ties by schedule order — `sort_by` is stable).
+    let mut events: VecDeque<ChurnEvent> = {
+        let mut e = cfg.serving.churn.clone();
+        for ev in &e {
+            ensure!(
+                ev.replica < n,
+                "churn event {} {}@{} targets a replica outside the cluster of {n}",
+                ev.kind.name(),
+                ev.at,
+                ev.replica
+            );
+            ensure!(
+                ev.at.is_finite() && ev.at >= 0.0,
+                "churn event {} at {} must have a finite non-negative time",
+                ev.kind.name(),
+                ev.at
+            );
+        }
+        e.sort_by(|a, b| a.at.total_cmp(&b.at));
+        e.into()
+    };
     let total_requests = trace.len();
     let mut pending: VecDeque<TimedRequest> = {
         let mut t = trace;
@@ -94,10 +154,21 @@ pub fn run_cluster(
         engines.iter_mut().map(|e| Replica::new(e, cfg)).collect();
     let mut dispatch = cfg.dispatch.build();
     let mut dispatched = vec![0usize; n];
+    let mut churn = ChurnStats::default();
+    // Per-request re-dispatch counts (patched into the completed
+    // records at the end).
+    let mut retries: HashMap<usize, usize> = HashMap::new();
+    // Service gates for requeued requests: a restart cannot begin
+    // before the failure that caused it, even on a receiving replica
+    // whose virtual clock lags the event (metrics stay keyed to the
+    // original arrival).  Later failures overwrite with their (later)
+    // event times.
+    let mut not_before: HashMap<usize, f64> = HashMap::new();
 
     loop {
         // The cluster's virtual "now": the smallest clock among replicas
-        // that still have work (ties by index).
+        // that still have work (ties by index).  Dead replicas hold no
+        // work (evacuated) and draining replicas keep ticking theirs.
         let next_tick: Option<usize> = {
             let mut best: Option<(f64, usize)> = None;
             for (i, r) in replicas.iter().enumerate() {
@@ -115,6 +186,65 @@ pub fn run_cluster(
             }
             best.map(|(_, i)| i)
         };
+        let tick_clock = next_tick.map(|i| replicas[i].clock());
+
+        // Churn events fire in virtual-time order between ticks: before
+        // any replica ticks past them and before any later arrival is
+        // routed (an event tied with an arrival fires first, so a
+        // failure at exactly an arrival's time excludes that replica
+        // from its dispatch).  On an idle cluster events fire
+        // immediately up to the next arrival.
+        let fire_event = match events.front() {
+            None => false,
+            Some(e) => {
+                let before_tick = match tick_clock {
+                    None => true,
+                    Some(c) => e.at <= c,
+                };
+                let before_arrival = match pending.front() {
+                    None => true,
+                    Some(r) => e.at <= r.arrival,
+                };
+                before_tick && before_arrival
+            }
+        };
+        if fire_event {
+            let e = events.pop_front().unwrap();
+            match e.kind {
+                ChurnKind::Drain => {
+                    if replicas[e.replica].begin_drain() {
+                        churn.drained += 1;
+                    }
+                }
+                ChurnKind::Fail => {
+                    if replicas[e.replica].state() != ReplicaState::Dead {
+                        let evac = replicas[e.replica].evacuate();
+                        churn.failed += 1;
+                        churn.requeued += evac.requests.len();
+                        churn.lost_work_tokens += evac.lost_tokens;
+                        for r in &evac.requests {
+                            *retries.entry(r.id).or_default() += 1;
+                            not_before.insert(r.id, e.at);
+                        }
+                        if !evac.requests.is_empty() {
+                            // Merge the evacuees back into the pending
+                            // queue in arrival order: their arrivals are
+                            // in the past, so they re-dispatch ahead of
+                            // later traffic, exactly as a re-queued
+                            // request should.
+                            let mut all: Vec<TimedRequest> =
+                                std::mem::take(&mut pending).into_iter().collect();
+                            all.extend(evac.requests);
+                            all.sort_by(|a, b| {
+                                a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id))
+                            });
+                            pending = all.into();
+                        }
+                    }
+                }
+            }
+            continue;
+        }
 
         let deliver = match (next_tick, pending.front()) {
             (None, None) => break,
@@ -131,17 +261,35 @@ pub fn run_cluster(
 
         if deliver {
             let req = pending.pop_front().unwrap();
-            let views: Vec<_> =
-                replicas.iter().enumerate().map(|(i, r)| r.dispatch_view(i)).collect();
-            let idx = dispatch.route(&req, &views);
+            // Offer the dispatcher only the live replicas; the policy
+            // returns a *position* into this slice, mapped back to the
+            // replica id through the view's `index`.
+            let views: Vec<_> = replicas
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| r.accepts_dispatch())
+                .map(|(i, r)| r.dispatch_view(i))
+                .collect();
             ensure!(
-                idx < n,
-                "dispatch policy {} routed request {} to replica {idx} of {n}",
-                dispatch.name(),
+                !views.is_empty(),
+                "request {} has no live replica to dispatch to: the churn schedule \
+                 failed/drained the whole cluster with work outstanding",
                 req.id
             );
+            let pos = dispatch.route(&req, &views);
+            ensure!(
+                pos < views.len(),
+                "dispatch policy {} routed request {} to position {pos} of {}",
+                dispatch.name(),
+                req.id,
+                views.len()
+            );
+            let idx = views[pos].index;
             dispatched[idx] += 1;
-            replicas[idx].enqueue(req);
+            match not_before.get(&req.id).copied() {
+                Some(gate) => replicas[idx].enqueue_not_before(req, gate),
+                None => replicas[idx].enqueue(req),
+            }
         } else {
             let i = next_tick.expect("no tick target with no arrival to deliver");
             replicas[i]
@@ -149,6 +297,7 @@ pub fn run_cluster(
                 .with_context(|| format!("replica {i} tick"))?;
         }
     }
+    churn.max_retries = retries.values().copied().max().unwrap_or(0);
 
     // Fold the per-replica runs into the cluster view.
     let runs: Vec<_> = replicas.into_iter().map(|r| r.finish()).collect();
@@ -173,6 +322,7 @@ pub fn run_cluster(
             outcome: run.outcome,
             dispatched: *count,
             busy: run.busy,
+            state: run.state,
         });
     }
     // Completion order across the cluster: a stable merge by completion
@@ -185,6 +335,18 @@ pub fn run_cluster(
         fleet
             .per_request
             .sort_by(|a, b| a.finished_at.total_cmp(&b.finished_at));
+    }
+    // Attribute re-dispatches to the requests that suffered them (both
+    // in the merged view and the per-replica breakdowns).
+    if !retries.is_empty() {
+        for r in &mut fleet.per_request {
+            r.retries = retries.get(&r.id).copied().unwrap_or(0);
+        }
+        for b in &mut breakdowns {
+            for r in &mut b.outcome.per_request {
+                r.retries = retries.get(&r.id).copied().unwrap_or(0);
+            }
+        }
     }
     ensure!(
         metrics.completed == total_requests,
@@ -201,5 +363,6 @@ pub fn run_cluster(
         fleet,
         replicas: breakdowns,
         load_imbalance: load_imbalance(&loads),
+        churn,
     })
 }

@@ -42,6 +42,13 @@ pub struct CompletedRequest {
     /// whole prefill, so the victim's worst gap spans that prefill;
     /// chunked prefill bounds the gap by one chunk's fused service time.
     pub max_stall: f64,
+    /// Times this request was re-dispatched after a replica failure (0
+    /// on a churn-free run).  Each retry restarted the request from
+    /// scratch on a surviving replica while keeping the original
+    /// arrival time, so the churn cost is already inside `ttft` /
+    /// `queue_delay` — this field just attributes it.  Filled in by the
+    /// cluster layer; the single-replica path always reports 0.
+    pub retries: usize,
 }
 
 /// Cross-session decode-batch dedup telemetry for one fleet run: how
@@ -61,12 +68,22 @@ pub struct DedupStats {
 
 impl DedupStats {
     /// Engine-counter delta over one run (`after - before`).
+    /// Saturating, matching the [`PrefetchStats::in_flight`]
+    /// convention: if the counters are ever inconsistent (e.g. an
+    /// engine `reset_stats` between the snapshots) the delta reads 0
+    /// instead of wrapping to ~`u64::MAX`.
+    ///
+    /// [`PrefetchStats::in_flight`]: crate::coordinator::prefetcher::PrefetchStats::in_flight
     pub fn from_delta(before: &EngineStats, after: &EngineStats) -> DedupStats {
         DedupStats {
-            decode_batches: after.decode_batches - before.decode_batches,
-            decode_batch_tokens: after.decode_batch_tokens - before.decode_batch_tokens,
-            routed_pairs: after.routed_pairs - before.routed_pairs,
-            unique_expert_loads: after.unique_expert_loads - before.unique_expert_loads,
+            decode_batches: after.decode_batches.saturating_sub(before.decode_batches),
+            decode_batch_tokens: after
+                .decode_batch_tokens
+                .saturating_sub(before.decode_batch_tokens),
+            routed_pairs: after.routed_pairs.saturating_sub(before.routed_pairs),
+            unique_expert_loads: after
+                .unique_expert_loads
+                .saturating_sub(before.unique_expert_loads),
         }
     }
 
@@ -91,8 +108,10 @@ impl DedupStats {
     }
 
     /// Expert fetch/exec operations avoided versus fully serial decode.
+    /// Saturating: an inconsistent snapshot reads as 0 saved, never as
+    /// a wrapped ~`u64::MAX`.
     pub fn saved_fetches(&self) -> u64 {
-        self.routed_pairs - self.unique_expert_loads
+        self.routed_pairs.saturating_sub(self.unique_expert_loads)
     }
 
     /// Fold another run's counters in (cluster merge across replicas).
@@ -123,11 +142,15 @@ pub struct PhaseStats {
 
 impl PhaseStats {
     /// Engine-counter delta over one run (`after - before`).
+    /// Saturating, like [`DedupStats::from_delta`]: inconsistent
+    /// snapshots (an engine reset in between) read 0, never wrap.
     pub fn from_delta(before: &EngineStats, after: &EngineStats) -> PhaseStats {
         PhaseStats {
-            prefill_chunks: after.prefill_chunks - before.prefill_chunks,
-            prefill_chunk_tokens: after.prefill_chunk_tokens - before.prefill_chunk_tokens,
-            mixed_steps: after.mixed_steps - before.mixed_steps,
+            prefill_chunks: after.prefill_chunks.saturating_sub(before.prefill_chunks),
+            prefill_chunk_tokens: after
+                .prefill_chunk_tokens
+                .saturating_sub(before.prefill_chunk_tokens),
+            mixed_steps: after.mixed_steps.saturating_sub(before.mixed_steps),
         }
     }
 
@@ -145,6 +168,37 @@ impl PhaseStats {
         self.prefill_chunks += other.prefill_chunks;
         self.prefill_chunk_tokens += other.prefill_chunk_tokens;
         self.mixed_steps += other.mixed_steps;
+    }
+}
+
+/// Replica-churn telemetry for one cluster run: what the scheduled
+/// failure / drain events ([`crate::config::ChurnEvent`]) actually cost.
+/// All zero on a churn-free run — which is itself the regression signal
+/// that the churn machinery never engages on the plain serving path.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ChurnStats {
+    /// Replicas killed by `Fail` events (each counted once).
+    pub failed: usize,
+    /// Replicas cordoned by `Drain` events (each counted once).
+    pub drained: usize,
+    /// Sessions evacuated from failed replicas and re-dispatched
+    /// (queued and in-flight alike; one session evacuated by two
+    /// successive failures counts twice).
+    pub requeued: usize,
+    /// Tokens of processing discarded by failures: prompt tokens
+    /// already prefilled plus output tokens already emitted by
+    /// evacuated in-flight sessions, each of which restarts from
+    /// scratch on a surviving replica.
+    pub lost_work_tokens: u64,
+    /// Worst per-request re-dispatch count
+    /// ([`CompletedRequest::retries`] maximum).
+    pub max_retries: usize,
+}
+
+impl ChurnStats {
+    /// Any churn at all this run?
+    pub fn any(&self) -> bool {
+        self.failed > 0 || self.drained > 0
     }
 }
 
@@ -269,6 +323,7 @@ impl FleetMetrics {
             ttft_ok,
             tpot_ok,
             max_stall,
+            retries: 0,
         }
     }
 
@@ -511,6 +566,54 @@ mod tests {
         assert_eq!(p.prefill_chunks, 4);
         assert_eq!(p.prefill_chunk_tokens, 12);
         assert_eq!(p.mixed_steps, 2);
+    }
+
+    /// Counter deltas must saturate, not wrap: an engine `reset_stats`
+    /// between the before/after snapshots makes `after < before`, and a
+    /// wrapping subtraction would report ~u64::MAX fetches saved.
+    #[test]
+    fn deltas_saturate_on_inconsistent_snapshots() {
+        let before = EngineStats {
+            decode_batches: 6,
+            decode_batch_tokens: 18,
+            routed_pairs: 36,
+            unique_expert_loads: 12,
+            prefill_chunks: 4,
+            prefill_chunk_tokens: 9,
+            mixed_steps: 2,
+            ..Default::default()
+        };
+        // engine reset between snapshots: every counter went backwards
+        let after = EngineStats::default();
+        let d = DedupStats::from_delta(&before, &after);
+        assert_eq!(d.decode_batches, 0);
+        assert_eq!(d.decode_batch_tokens, 0);
+        assert_eq!(d.routed_pairs, 0);
+        assert_eq!(d.unique_expert_loads, 0);
+        assert_eq!(d.saved_fetches(), 0);
+        assert_eq!(d.mean_batch(), 0.0);
+        let p = PhaseStats::from_delta(&before, &after);
+        assert_eq!(p.prefill_chunks, 0);
+        assert_eq!(p.prefill_chunk_tokens, 0);
+        assert_eq!(p.mixed_steps, 0);
+        // saved_fetches on an internally inconsistent counter pair
+        // reads 0, matching the PrefetchStats::in_flight convention
+        let broken = DedupStats {
+            routed_pairs: 3,
+            unique_expert_loads: 5,
+            ..Default::default()
+        };
+        assert_eq!(broken.saved_fetches(), 0);
+    }
+
+    #[test]
+    fn churn_stats_default_is_quiet() {
+        let z = ChurnStats::default();
+        assert!(!z.any());
+        let f = ChurnStats { failed: 1, ..Default::default() };
+        assert!(f.any());
+        let d = ChurnStats { drained: 2, ..Default::default() };
+        assert!(d.any());
     }
 
     #[test]

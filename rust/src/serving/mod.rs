@@ -58,6 +58,24 @@
 //! run heterogeneous [`crate::config::HardwareConfig`]s (a big.LITTLE
 //! edge cluster).
 //!
+//! # Replica failure and drain (churn)
+//!
+//! Edge replicas die and get recalled mid-trace.  A cluster run may
+//! carry a schedule of [`crate::config::ChurnEvent`]s (CLI: repeatable
+//! `--fail T@R` / `--drain T@R`), fired by [`run_cluster`] in
+//! virtual-time order between ticks.  **Drain** cordons a replica — no
+//! new dispatches, its admitted work runs down; **fail** kills it — its
+//! queued and in-flight sessions are evacuated
+//! ([`replica::Replica::evacuate`]) and re-routed by the dispatch
+//! policy (offered only the live replicas), restarting from scratch
+//! with their *original* arrival times so the SLO cost of churn lands
+//! in TTFT and queue delay.  [`metrics::ChurnStats`] reports what the
+//! schedule cost (requeued sessions, discarded work tokens, worst
+//! per-request retry count); request conservation holds for any
+//! schedule that leaves a live replica, and a churn-free run is
+//! tick-for-tick the plain cluster (pinned in
+//! `tests/integration_churn.rs`).
+//!
 //! **Equivalence guarantees:** `chunk_tokens = 0` runs the monolithic
 //! tick, reproducing the pre-chunking fleet path *tick for tick*; a
 //! cluster of one replica with round-robin dispatch reproduces
@@ -97,7 +115,7 @@ use self::metrics::{
 use self::policy::{DispatchKind, PolicyKind};
 
 pub use self::cluster::{run_cluster, ClusterOutcome, ReplicaBreakdown};
-pub use self::replica::{Replica, ReplicaRun};
+pub use self::replica::{Evacuation, Replica, ReplicaRun, ReplicaState};
 
 /// Configuration of one fleet (or cluster) run.
 #[derive(Debug, Clone)]
@@ -175,6 +193,13 @@ pub fn run_fleet(
     trace: Vec<TimedRequest>,
     cfg: &FleetConfig,
 ) -> Result<FleetOutcome> {
+    // Churn needs a dispatcher to re-route evacuated sessions; silently
+    // serving a churn schedule churn-free would corrupt an experiment.
+    anyhow::ensure!(
+        cfg.serving.churn.is_empty(),
+        "run_fleet cannot serve a churn schedule ({} event(s)); use run_cluster",
+        cfg.serving.churn.len()
+    );
     let mut pending: std::collections::VecDeque<TimedRequest> = {
         let mut t = trace;
         t.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));

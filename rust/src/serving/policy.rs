@@ -418,9 +418,15 @@ impl ReplicaDispatchView {
     }
 }
 
-/// A cluster dispatch policy: route each arriving request to a replica.
-/// May keep state (e.g. a rotation cursor); must return an index
-/// `< replicas.len()` for a non-empty view slice.
+/// A cluster dispatch policy: route each arriving request to one of the
+/// **offered** replicas.  May keep state (e.g. a rotation cursor); must
+/// return a *position* into the `replicas` slice (`< replicas.len()`
+/// for a non-empty slice).  Under churn the cluster offers only live
+/// replicas — dead and draining ones are excluded from the slice — so
+/// positions are not replica ids; the caller maps the pick back through
+/// [`ReplicaDispatchView::index`].  With every replica live (the
+/// churn-free cluster) position and index coincide, so routing is
+/// bit-identical to the pre-churn dispatcher.
 pub trait DispatchPolicy {
     fn name(&self) -> &'static str;
     fn route(&mut self, req: &TimedRequest, replicas: &[ReplicaDispatchView]) -> usize;
@@ -498,14 +504,18 @@ impl DispatchPolicy for JoinShortestQueue {
     }
 
     fn route(&mut self, _req: &TimedRequest, replicas: &[ReplicaDispatchView]) -> usize {
+        // Returns the slice *position* of the least-loaded offered
+        // replica (not its cluster index — the slice may exclude
+        // churned replicas).
         replicas
             .iter()
-            .min_by(|a, b| {
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
                 a.backlog_tokens()
                     .cmp(&b.backlog_tokens())
                     .then(a.index.cmp(&b.index))
             })
-            .map(|r| r.index)
+            .map(|(pos, _)| pos)
             .unwrap_or(0)
     }
 }
@@ -540,6 +550,9 @@ impl DispatchPolicy for ExpertAffinity {
     }
 
     fn route(&mut self, req: &TimedRequest, replicas: &[ReplicaDispatchView]) -> usize {
+        // Hash modulo the *offered* replica count: when churn shrinks
+        // the live set, prompts re-map over the survivors (a smaller
+        // consistent target set, not a routing failure).
         let n = replicas.len().max(1);
         (prompt_affinity_hash(&req.request.prompt) % n as u64) as usize
     }

@@ -34,11 +34,53 @@ use super::policy::{
 };
 use super::{FleetConfig, FleetOutcome};
 
+/// A replica's position in its lifecycle.  The cluster's churn events
+/// ([`crate::config::ChurnEvent`]) move a replica Live -> Draining
+/// (graceful recall: no new dispatches, admitted work runs down) or
+/// Live/Draining -> Dead (failure: everything in flight is evacuated
+/// via [`Replica::evacuate`] and re-dispatched elsewhere).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaState {
+    Live,
+    Draining,
+    Dead,
+}
+
+impl ReplicaState {
+    pub fn name(self) -> &'static str {
+        match self {
+            ReplicaState::Live => "live",
+            ReplicaState::Draining => "draining",
+            ReplicaState::Dead => "dead",
+        }
+    }
+}
+
+/// What a failed replica gives back: the sessions it can no longer
+/// serve (rebuilt as dispatchable requests with their **original**
+/// arrival times, so the re-run's queue delay and TTFT honestly include
+/// the failure) plus the work it discards.
+#[derive(Debug, Clone)]
+pub struct Evacuation {
+    /// Queued and in-flight sessions as fresh requests, oldest arrival
+    /// first (the order the dispatcher will re-route them in).
+    pub requests: Vec<TimedRequest>,
+    /// Tokens of processing discarded by the failure: prompt tokens
+    /// already prefilled plus output tokens already emitted by the
+    /// evacuated in-flight sessions (each restarts from scratch).
+    pub lost_tokens: u64,
+}
+
 /// A request that has been dispatched to this replica but not admitted.
 struct Queued {
     id: usize,
     arrival: f64,
     deadline: f64,
+    /// Earliest virtual time service may start: the arrival itself for
+    /// a fresh dispatch, the failure time for a session restarted after
+    /// its replica died — the restart cannot begin before the failure,
+    /// even on a receiving replica whose clock lags behind it.
+    earliest: f64,
     request: Request,
 }
 
@@ -57,6 +99,9 @@ struct Active {
 pub struct ReplicaRun {
     pub outcome: FleetOutcome,
     pub busy: BusyTotals,
+    /// Lifecycle state the replica ended the run in (Live unless a
+    /// churn event touched it).
+    pub state: ReplicaState,
 }
 
 /// One serving replica (engine + queues + policy + telemetry).
@@ -71,6 +116,7 @@ pub struct Replica<'e> {
     max_seq: usize,
     queued: Vec<Queued>,
     active: Vec<Active>,
+    state: ReplicaState,
     stats_before: EngineStats,
     busy_before: BusyTotals,
     out: FleetOutcome,
@@ -99,6 +145,20 @@ impl<'e> Replica<'e> {
     /// Wrap an engine for one fleet run, snapshotting its cumulative
     /// counters so [`Replica::finish`] reports this run's deltas only.
     pub fn new(engine: &'e mut Engine, cfg: &FleetConfig) -> Replica<'e> {
+        let policy = cfg.policy.build();
+        Replica::with_policy(engine, cfg, policy)
+    }
+
+    /// Like [`Replica::new`] but with an explicit scheduling-policy
+    /// instance — the entry point for custom [`SchedPolicy`]
+    /// implementations outside [`super::policy::PolicyKind`] (tests use
+    /// it to exercise the work-conserving fallbacks a policy bug would
+    /// otherwise hit in production).
+    pub fn with_policy(
+        engine: &'e mut Engine,
+        cfg: &FleetConfig,
+        policy: Box<dyn SchedPolicy>,
+    ) -> Replica<'e> {
         let max_seq = engine.model().max_seq;
         Replica {
             slo: cfg.slo(),
@@ -113,10 +173,11 @@ impl<'e> Replica<'e> {
             max_seq,
             queued: Vec::new(),
             active: Vec::new(),
+            state: ReplicaState::Live,
             stats_before: engine.stats,
             busy_before: engine.busy_totals(),
             out: FleetOutcome::default(),
-            policy: cfg.policy.build(),
+            policy,
             engine,
         }
     }
@@ -131,12 +192,88 @@ impl<'e> Replica<'e> {
         !self.queued.is_empty() || !self.active.is_empty()
     }
 
+    /// Lifecycle state (Live unless a churn event touched the replica).
+    pub fn state(&self) -> ReplicaState {
+        self.state
+    }
+
+    /// May the dispatcher route new requests here?  Only Live replicas
+    /// accept dispatches; Draining replicas run down what they already
+    /// hold and Dead replicas hold nothing.
+    pub fn accepts_dispatch(&self) -> bool {
+        self.state == ReplicaState::Live
+    }
+
+    /// Cordon the replica (churn `Drain`): it stops receiving
+    /// dispatches and runs down everything already dispatched to it.
+    /// Returns whether the state actually changed (a drain of an
+    /// already-draining or dead replica is a no-op).
+    pub fn begin_drain(&mut self) -> bool {
+        if self.state == ReplicaState::Live {
+            self.state = ReplicaState::Draining;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Kill the replica (churn `Fail`): mark it Dead and hand back
+    /// every queued and in-flight session as re-dispatchable requests
+    /// carrying their **original** arrival times, plus the token count
+    /// of the work discarded.  After this the replica has no work and
+    /// never ticks again; its telemetry (including the busy time spent
+    /// on the lost work) still reports through [`Replica::finish`].
+    pub fn evacuate(&mut self) -> Evacuation {
+        self.state = ReplicaState::Dead;
+        let mut requests: Vec<TimedRequest> =
+            Vec::with_capacity(self.queued.len() + self.active.len());
+        for q in self.queued.drain(..) {
+            requests.push(TimedRequest { id: q.id, arrival: q.arrival, request: q.request });
+        }
+        let mut lost_tokens = 0u64;
+        for a in self.active.drain(..) {
+            // Work discarded: prompt tokens whose layer sweep already
+            // ran (the whole prompt once prefilled, the chunk cursor
+            // mid-prefill) plus every emitted output token.
+            let prefilled = if a.sess.prefilled() {
+                a.sess.prompt_len()
+            } else {
+                a.sess.prefill_cursor()
+            };
+            lost_tokens += (prefilled + a.sess.emitted()) as u64;
+            requests.push(TimedRequest {
+                id: a.id,
+                arrival: a.arrival,
+                request: Request {
+                    prompt: a.sess.prompt().to_vec(),
+                    max_new: a.sess.target_tokens(),
+                },
+            });
+        }
+        // Oldest arrival first: the order the dispatcher re-routes in
+        // (matching the pending queue's arrival ordering).
+        requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
+        Evacuation { requests, lost_tokens }
+    }
+
     /// Deliver one dispatched request into the admission queue.
     pub fn enqueue(&mut self, r: TimedRequest) {
+        let at = r.arrival;
+        self.enqueue_not_before(r, at);
+    }
+
+    /// Deliver a request whose service may not start before
+    /// `not_before` (a session restarted after a replica failure: its
+    /// metrics stay keyed to the original arrival, but the restart
+    /// cannot begin before the failure — even on a receiving replica
+    /// whose virtual clock lags the event).  `enqueue` is the
+    /// `not_before == arrival` case.
+    pub fn enqueue_not_before(&mut self, r: TimedRequest, not_before: f64) {
         self.queued.push(Queued {
             id: r.id,
             arrival: r.arrival,
             deadline: r.arrival + self.slo.ttft_s,
+            earliest: r.arrival.max(not_before),
             request: r.request,
         });
     }
@@ -187,7 +324,7 @@ impl<'e> Replica<'e> {
         out.phase = PhaseStats::from_delta(&self.stats_before, &self.engine.stats);
         let busy = self.engine.busy_totals().minus(&self.busy_before);
         out.utilization = ResourceUtil::from_busy(&busy, out.metrics.makespan(), 1);
-        ReplicaRun { outcome: out, busy }
+        ReplicaRun { outcome: out, busy, state: self.state }
     }
 
     /// Record a finished session into the run outcome.
@@ -235,9 +372,11 @@ impl<'e> Replica<'e> {
                     bail!("policy admitted session {id} with no free slot");
                 }
                 let q = self.queued.swap_remove(pos);
+                // Service is gated at `earliest` (== arrival except for
+                // failure restarts); metrics stay keyed to the arrival.
                 let mut sess = self
                     .engine
-                    .begin_session(&q.request.prompt, q.request.max_new, None, q.arrival)
+                    .begin_session(&q.request.prompt, q.request.max_new, None, q.earliest)
                     .with_context(|| format!("admitting session {id}"))?;
                 self.engine
                     .prefill_session(&mut sess)
@@ -348,9 +487,11 @@ impl<'e> Replica<'e> {
                 bail!("policy admitted unknown session {id}");
             };
             let q = self.queued.swap_remove(pos);
+            // Service gated at `earliest` (== arrival except for
+            // failure restarts); metrics stay keyed to the arrival.
             let sess = self
                 .engine
-                .begin_session(&q.request.prompt, q.request.max_new, None, q.arrival)
+                .begin_session(&q.request.prompt, q.request.max_new, None, q.earliest)
                 .with_context(|| format!("admitting session {id}"))?;
             self.active.push(Active {
                 id: q.id,
@@ -389,10 +530,15 @@ impl<'e> Replica<'e> {
             // the loop: chunk the oldest prefilling session, else decode
             // the first ready one.
             let pre = active_info.iter().find(|a| a.prefill_remaining > 0).map(|a| a.id);
+            // Clamp the fallback to the tick's decode budget: with
+            // `chunk_tokens >= max_seq` a full-length prompt grants the
+            // whole expert token bucket to the chunk (`decode_budget ==
+            // 0`), and an unclamped fallback decode would trip the
+            // budget ensure below and abort a legitimate run.
             let dec: Vec<usize> = active_info
                 .iter()
                 .filter(|a| a.decode_ready())
-                .take(1)
+                .take(decode_budget.min(1))
                 .map(|a| a.id)
                 .collect();
             ensure!(

@@ -1,0 +1,522 @@
+//! Integration: replica failure & drain with session re-dispatch.
+//!
+//! Four pillars:
+//!
+//! 1. **Churn-free neutrality** — the churn-capable event loop with no
+//!    events is the plain cluster (the `--replicas 1` tick-for-tick
+//!    equivalence to `run_fleet` is pinned in
+//!    `integration_cluster.rs`, which runs with an empty churn
+//!    schedule); here we additionally pin that a churn event scheduled
+//!    *after* all work completes is outcome-neutral — identical
+//!    per-request times and step counts to the no-churn run.
+//! 2. **Conservation under churn** — with a mid-trace failure, every
+//!    trace id still completes exactly once across the cluster, for
+//!    every dispatch x scheduling x prefill-mode combination, and the
+//!    dispatch counts balance (`sum(dispatched) == requests +
+//!    requeued`).
+//! 3. **Semantics** — drain stops dispatches and runs down admitted
+//!    work; fail evacuates queued *and* in-flight sessions, restarts
+//!    them on survivors with their original arrival times (the SLO
+//!    cost is visible in TTFT), and counts the discarded tokens; a
+//!    schedule that churns every replica while work is outstanding is
+//!    an error, not silent loss.
+//! 4. **Budget-fallback regression** — with `chunk_tokens = max_seq`
+//!    the per-tick decode budget legitimately reaches zero while a
+//!    full-bucket prompt holds the chunk grant; the replica's
+//!    work-conserving fallback (exercised via a deliberately idle
+//!    custom policy) must clamp its decode pick to that budget instead
+//!    of tripping the budget ensure and aborting the run.
+//!
+//! Engine-level tests need the real `tiny` artifacts and skip politely
+//! when they are missing (run `make artifacts`), matching the other
+//! integration suites.
+
+use std::sync::Arc;
+
+use dymoe::baselines::Uniform;
+use dymoe::config::{ChurnEvent, ChurnKind, ServingConfig, SystemConfig, GB};
+use dymoe::coordinator::engine::{Engine, EngineOptions};
+use dymoe::model::assets::ModelAssets;
+use dymoe::quant::Precision;
+use dymoe::serving::arrival::{ArrivalGen, ArrivalProcess, TimedRequest};
+use dymoe::serving::policy::{
+    Action, DispatchKind, PolicyKind, SchedPolicy, SchedView, TickPlan,
+};
+use dymoe::serving::{
+    run_cluster, run_fleet, ClusterOutcome, FleetConfig, Replica, ReplicaState,
+};
+use dymoe::workload::{Request, TraceGen};
+
+fn assets() -> Option<Arc<ModelAssets>> {
+    match ModelAssets::load("artifacts", "tiny") {
+        Ok(a) => Some(Arc::new(a)),
+        Err(_) => {
+            eprintln!("artifacts/tiny missing; run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn big_vram_sys() -> SystemConfig {
+    let mut sys = SystemConfig::edge_preset("tiny", 24).unwrap();
+    sys.hardware.vram_bytes = 1024 * GB;
+    sys
+}
+
+fn bf16_engine(a: &Arc<ModelAssets>) -> Engine {
+    Engine::with_options(
+        a,
+        big_vram_sys(),
+        Box::new(Uniform::new(Precision::Bf16)),
+        EngineOptions::default(),
+    )
+    .unwrap()
+}
+
+fn cfg(
+    policy: PolicyKind,
+    dispatch: DispatchKind,
+    max_sessions: usize,
+    batch: usize,
+    chunk: usize,
+    churn: Vec<ChurnEvent>,
+) -> FleetConfig {
+    FleetConfig {
+        serving: ServingConfig {
+            max_sessions,
+            ttft_slo_s: 1e6,
+            tpot_slo_s: 1e6,
+            max_decode_batch: batch,
+            chunk_tokens: chunk,
+            churn,
+            ..Default::default()
+        },
+        policy,
+        dispatch,
+    }
+}
+
+fn tiny_trace(a: &Arc<ModelAssets>, n: usize, rate: f64) -> Vec<TimedRequest> {
+    let m = &a.manifest.model;
+    let mut content = TraceGen::new(7, m.max_seq.min(16), (m.max_cache - m.max_seq).min(6));
+    ArrivalGen::generate(21, ArrivalProcess::Poisson { rate }, &mut content, n).unwrap()
+}
+
+fn fail(at: f64, replica: usize) -> ChurnEvent {
+    ChurnEvent { at, replica, kind: ChurnKind::Fail }
+}
+
+fn drain(at: f64, replica: usize) -> ChurnEvent {
+    ChurnEvent { at, replica, kind: ChurnKind::Drain }
+}
+
+fn run(
+    a: &Arc<ModelAssets>,
+    replicas: usize,
+    trace: Vec<TimedRequest>,
+    c: &FleetConfig,
+) -> ClusterOutcome {
+    let mut engines: Vec<Engine> = (0..replicas).map(|_| bf16_engine(a)).collect();
+    run_cluster(&mut engines, trace, c).unwrap()
+}
+
+// ---------------------------------------------------------------------
+// Churn-free neutrality (artifacts-gated)
+// ---------------------------------------------------------------------
+
+/// A churn event scheduled far beyond the run's makespan fires only
+/// after every request completed: the serving outcome must be
+/// *identical* to the no-churn run (same per-request times, same step
+/// counts), with only the lifecycle state and churn counters differing.
+/// Together with `integration_cluster.rs` (which pins the empty-churn
+/// loop against `run_fleet` tick for tick), this pins that the churn
+/// machinery never perturbs the serving path until an event actually
+/// bites.
+#[test]
+fn late_churn_event_is_outcome_neutral() {
+    let Some(a) = assets() else { return };
+    let base = cfg(PolicyKind::SloAware, DispatchKind::JoinShortestQueue, 2, 2, 0, vec![]);
+    let plain = run(&a, 2, tiny_trace(&a, 8, 20.0), &base);
+
+    for event in [fail(1e9, 0), drain(1e9, 1)] {
+        let churned = cfg(
+            PolicyKind::SloAware,
+            DispatchKind::JoinShortestQueue,
+            2,
+            2,
+            0,
+            vec![event],
+        );
+        let c = run(&a, 2, tiny_trace(&a, 8, 20.0), &churned);
+        assert_eq!(c.fleet.steps, plain.fleet.steps, "{:?}", event.kind);
+        assert_eq!(c.fleet.per_request.len(), plain.fleet.per_request.len());
+        for (x, y) in c.fleet.per_request.iter().zip(&plain.fleet.per_request) {
+            assert_eq!(x.id, y.id, "late event reordered completions");
+            assert_eq!(x.ttft, y.ttft, "late event changed TTFT (id {})", x.id);
+            assert_eq!(x.finished_at, y.finished_at, "late event changed timing");
+            assert_eq!(x.retries, 0, "late event requeued a completed request");
+        }
+        assert_eq!(c.churn.requeued, 0);
+        assert_eq!(c.churn.lost_work_tokens, 0);
+        match event.kind {
+            ChurnKind::Fail => {
+                assert_eq!(c.churn.failed, 1);
+                assert_eq!(c.replicas[0].state, ReplicaState::Dead);
+            }
+            ChurnKind::Drain => {
+                assert_eq!(c.churn.drained, 1);
+                assert_eq!(c.replicas[1].state, ReplicaState::Draining);
+            }
+        }
+    }
+    // the no-churn run itself reports quiet churn telemetry
+    assert!(!plain.churn.any());
+    assert!(plain.replicas.iter().all(|b| b.state == ReplicaState::Live));
+}
+
+// ---------------------------------------------------------------------
+// Conservation under mid-trace failure (artifacts-gated)
+// ---------------------------------------------------------------------
+
+/// A mid-trace failure of replica 0 must conserve requests under every
+/// dispatch x scheduling x prefill-mode combination: every trace id
+/// completes exactly once cluster-wide, the dispatch counts balance
+/// (`sum == requests + requeued`), the per-request retry attribution
+/// sums to the requeue count, and the failed replica ends Dead.
+#[test]
+fn failure_conserves_requests_under_every_policy_combo() {
+    let Some(a) = assets() else { return };
+    let n = 9;
+    // Learn a mid-run instant from a churn-free baseline, then fail
+    // replica 0 there in every combination.
+    let baseline = run(
+        &a,
+        2,
+        tiny_trace(&a, n, 10.0),
+        &cfg(PolicyKind::SloAware, DispatchKind::RoundRobin, 2, 2, 0, vec![]),
+    );
+    let fail_at = baseline.fleet.metrics.makespan() * 0.3;
+    assert!(fail_at > 0.0);
+
+    for dispatch in DispatchKind::ALL {
+        for policy in [PolicyKind::SloAware, PolicyKind::Fifo] {
+            for chunk in [0usize, 3] {
+                let c = cfg(policy, dispatch, 2, 2, chunk, vec![fail(fail_at, 0)]);
+                let cluster = run(&a, 2, tiny_trace(&a, n, 10.0), &c);
+                let label = format!(
+                    "{} x {} x chunk {chunk}, fail {fail_at:.3}@0",
+                    dispatch.name(),
+                    policy.name()
+                );
+
+                // conservation: every id exactly once, cluster-wide
+                let mut ids: Vec<usize> =
+                    cluster.fleet.per_request.iter().map(|r| r.id).collect();
+                ids.sort_unstable();
+                assert_eq!(ids, (0..n).collect::<Vec<_>>(), "{label}: ids lost/duped");
+                assert_eq!(cluster.fleet.metrics.completed, n, "{label}");
+
+                // dispatch balance: originals + re-dispatches
+                let total: usize = cluster.replicas.iter().map(|b| b.dispatched).sum();
+                assert_eq!(total, n + cluster.churn.requeued, "{label}: dispatch imbalance");
+
+                // retry attribution sums to the requeue count
+                let retry_sum: usize =
+                    cluster.fleet.per_request.iter().map(|r| r.retries).sum();
+                assert_eq!(retry_sum, cluster.churn.requeued, "{label}: retry attribution");
+                if cluster.churn.requeued > 0 {
+                    assert!(cluster.churn.max_retries >= 1, "{label}");
+                }
+
+                assert_eq!(cluster.churn.failed, 1, "{label}");
+                assert_eq!(cluster.replicas[0].state, ReplicaState::Dead, "{label}");
+                assert_eq!(cluster.replicas[1].state, ReplicaState::Live, "{label}");
+                // the survivor completed everything it was handed
+                assert_eq!(
+                    cluster.replicas[1].outcome.metrics.completed,
+                    cluster.replicas[1].dispatched,
+                    "{label}: survivor starved a request"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Drain and fail semantics (artifacts-gated)
+// ---------------------------------------------------------------------
+
+/// Drain at t=0 means the replica never receives a dispatch; a mid-run
+/// drain means it completes exactly what it was handed before the
+/// cordon and nothing after.  Either way every request completes and
+/// nothing is requeued or lost.
+#[test]
+fn drain_stops_dispatches_and_runs_down_admitted_work() {
+    let Some(a) = assets() else { return };
+    let n = 6;
+
+    // drain replica 1 before any arrival: everything serves on replica 0
+    let c = cfg(PolicyKind::SloAware, DispatchKind::RoundRobin, 3, 2, 0, vec![drain(0.0, 1)]);
+    let cluster = run(&a, 2, tiny_trace(&a, n, 20.0), &c);
+    assert_eq!(cluster.fleet.metrics.completed, n);
+    assert_eq!(cluster.replicas[1].dispatched, 0, "drained replica was dispatched to");
+    assert_eq!(cluster.replicas[0].dispatched, n);
+    assert_eq!(cluster.replicas[1].state, ReplicaState::Draining);
+    assert_eq!(cluster.churn.drained, 1);
+    assert_eq!(cluster.churn.requeued, 0);
+    assert_eq!(cluster.churn.lost_work_tokens, 0);
+
+    // mid-trace drain (timed at the median arrival, so dispatches
+    // genuinely remain): replica 1 keeps (and finishes) what it already
+    // holds, receives nothing new
+    let drain_at = {
+        let mut arr: Vec<f64> = tiny_trace(&a, n, 20.0).iter().map(|r| r.arrival).collect();
+        arr.sort_by(|a, b| a.total_cmp(b));
+        arr[n / 2]
+    };
+    let c = cfg(
+        PolicyKind::SloAware,
+        DispatchKind::RoundRobin,
+        3,
+        2,
+        0,
+        vec![drain(drain_at, 1)],
+    );
+    let cluster = run(&a, 2, tiny_trace(&a, n, 20.0), &c);
+    assert_eq!(cluster.fleet.metrics.completed, n);
+    assert_eq!(
+        cluster.replicas[1].outcome.metrics.completed, cluster.replicas[1].dispatched,
+        "drained replica must run down everything dispatched to it"
+    );
+    // rr would have split n evenly; the cordon keeps the post-drain
+    // arrivals (at least half the trace) off replica 1
+    assert!(
+        cluster.replicas[1].dispatched < n / 2,
+        "mid-trace drain shifted no load off the drained replica: {} of {n}",
+        cluster.replicas[1].dispatched
+    );
+    assert_eq!(cluster.churn.requeued, 0, "drain must not requeue");
+}
+
+/// Fail at t=0: the replica dies before any arrival, so everything
+/// routes to the survivor with nothing requeued and no work lost —
+/// under every dispatch policy (the dispatcher sees only live
+/// replicas).
+#[test]
+fn failure_before_arrivals_diverts_everything_to_survivors() {
+    let Some(a) = assets() else { return };
+    let n = 6;
+    for dispatch in DispatchKind::ALL {
+        let c = cfg(PolicyKind::SloAware, dispatch, 3, 2, 0, vec![fail(0.0, 0)]);
+        let cluster = run(&a, 2, tiny_trace(&a, n, 20.0), &c);
+        let label = dispatch.name();
+        assert_eq!(cluster.fleet.metrics.completed, n, "{label}");
+        assert_eq!(cluster.replicas[0].dispatched, 0, "{label}: dead replica dispatched to");
+        assert_eq!(cluster.replicas[1].dispatched, n, "{label}");
+        assert_eq!(cluster.replicas[0].state, ReplicaState::Dead, "{label}");
+        assert_eq!(cluster.churn.requeued, 0, "{label}");
+        assert_eq!(cluster.churn.lost_work_tokens, 0, "{label}");
+    }
+}
+
+/// A mid-run failure evacuates in-flight work: the restarted sessions
+/// keep their **original** arrival times, so their measured TTFT spans
+/// the failure (first token strictly after the event), and the tokens
+/// the dead replica had already produced are counted as lost work.
+#[test]
+fn failure_restarts_keep_original_arrivals_and_count_lost_work() {
+    let Some(a) = assets() else { return };
+    let m = a.manifest.model.clone();
+    let max_new = (m.max_cache - m.max_seq).clamp(2, 6);
+    // four same-instant arrivals, rr dispatch: two per replica, so at
+    // ~40% of the baseline makespan replica 0 is mid-service with more
+    // queued behind
+    let mk_trace = || -> Vec<TimedRequest> {
+        (0..4)
+            .map(|i| TimedRequest {
+                id: i,
+                arrival: 0.0,
+                request: Request {
+                    prompt: vec![1, 5 + (3 * i as i32) % 40, 7],
+                    max_new,
+                },
+            })
+            .collect()
+    };
+    let base_cfg = cfg(PolicyKind::Fifo, DispatchKind::RoundRobin, 1, 1, 0, vec![]);
+    let baseline = run(&a, 2, mk_trace(), &base_cfg);
+    let fail_at = baseline.fleet.metrics.makespan() * 0.4;
+    assert!(fail_at > 0.0);
+
+    let c = cfg(PolicyKind::Fifo, DispatchKind::RoundRobin, 1, 1, 0, vec![fail(fail_at, 0)]);
+    let cluster = run(&a, 2, mk_trace(), &c);
+    assert_eq!(cluster.fleet.metrics.completed, 4);
+    assert!(
+        cluster.churn.requeued >= 1,
+        "replica 0 held work at {fail_at}, nothing was evacuated"
+    );
+    // fifo with max_sessions 1 means the in-flight session had emitted
+    // tokens (or at least prefilled) by 40% of the makespan
+    assert!(
+        cluster.churn.lost_work_tokens > 0,
+        "mid-service failure discarded no work"
+    );
+    for r in &cluster.fleet.per_request {
+        if r.retries > 0 {
+            // restarted from scratch after the failure with the
+            // original arrival (0.0): the first token lands after the
+            // event, so the measured TTFT honestly spans the churn
+            assert!(
+                r.arrival + r.ttft > fail_at,
+                "requeued request {} reports TTFT {} from before the failure at {fail_at}",
+                r.id,
+                r.ttft
+            );
+            assert!(r.finished_at > fail_at);
+        }
+    }
+    // the dead replica completed nothing it still held; the survivor
+    // absorbed the evacuees
+    assert_eq!(
+        cluster.replicas[1].outcome.metrics.completed,
+        cluster.replicas[1].dispatched
+    );
+}
+
+/// Churning every replica while requests are outstanding cannot be
+/// served: the run must fail loudly (conservation by error, never by
+/// silent loss) — for all-fail, all-drain (queued arrivals have no
+/// target), and fail-after-drain schedules.
+#[test]
+fn churning_every_replica_with_work_outstanding_is_an_error() {
+    let Some(a) = assets() else { return };
+    for events in [
+        vec![fail(0.0, 0), fail(0.0, 1)],
+        vec![drain(0.0, 0), drain(0.0, 1)],
+        vec![drain(0.0, 0), fail(0.0, 1)],
+    ] {
+        let c = cfg(PolicyKind::SloAware, DispatchKind::RoundRobin, 2, 2, 0, events.clone());
+        let mut engines: Vec<Engine> = (0..2).map(|_| bf16_engine(&a)).collect();
+        let result = run_cluster(&mut engines, tiny_trace(&a, 4, 20.0), &c);
+        assert!(result.is_err(), "whole-cluster churn {events:?} served silently");
+    }
+    // out-of-range targets are rejected up front
+    let c = cfg(PolicyKind::SloAware, DispatchKind::RoundRobin, 2, 2, 0, vec![fail(1.0, 7)]);
+    let mut engines: Vec<Engine> = (0..2).map(|_| bf16_engine(&a)).collect();
+    assert!(run_cluster(&mut engines, tiny_trace(&a, 4, 20.0), &c).is_err());
+    // the dispatcher-less single-replica entry point rejects churn
+    // loudly instead of silently serving the schedule churn-free
+    let c = cfg(PolicyKind::SloAware, DispatchKind::RoundRobin, 2, 2, 0, vec![fail(1.0, 0)]);
+    let mut engine = bf16_engine(&a);
+    assert!(run_fleet(&mut engine, tiny_trace(&a, 4, 20.0), &c).is_err());
+}
+
+/// Chunked prefill keeps conserving under failure: the same mid-trace
+/// failure with `chunk_tokens > 0` evacuates sessions that are
+/// *mid-prefill* (cursor > 0, nothing emitted) and restarts them
+/// cleanly.
+#[test]
+fn failure_mid_chunked_prefill_restarts_cleanly() {
+    let Some(a) = assets() else { return };
+    let m = a.manifest.model.clone();
+    let long = m.max_seq;
+    let max_new = (m.max_cache - m.max_seq).clamp(1, 2);
+    // one long prompt per replica, chunked finely so prefill spans many
+    // ticks; fail replica 0 early in its prefill
+    let mk_trace = || -> Vec<TimedRequest> {
+        (0..2)
+            .map(|i| TimedRequest {
+                id: i,
+                arrival: 0.0,
+                request: Request {
+                    prompt: (0..long).map(|t| 1 + ((t + i) as i32 * 7) % 60).collect(),
+                    max_new,
+                },
+            })
+            .collect()
+    };
+    let base_cfg = cfg(PolicyKind::SloAware, DispatchKind::RoundRobin, 2, 2, 1, vec![]);
+    let baseline = run(&a, 2, mk_trace(), &base_cfg);
+    let fail_at = baseline.fleet.metrics.makespan() * 0.2;
+    let c = cfg(PolicyKind::SloAware, DispatchKind::RoundRobin, 2, 2, 1, vec![fail(fail_at, 0)]);
+    let cluster = run(&a, 2, mk_trace(), &c);
+    assert_eq!(cluster.fleet.metrics.completed, 2);
+    assert!(cluster.churn.requeued >= 1, "mid-prefill session not evacuated");
+    assert!(
+        cluster.churn.lost_work_tokens > 0,
+        "chunk-prefilled tokens not counted as lost"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Zero-decode-budget fallback regression (artifacts-gated)
+// ---------------------------------------------------------------------
+
+/// A policy that always returns an empty plan (the "policy bug" the
+/// work-conserving fallback exists for).
+struct EmptyPlanPolicy;
+
+impl SchedPolicy for EmptyPlanPolicy {
+    fn name(&self) -> &'static str {
+        "empty"
+    }
+
+    fn next_action(&mut self, _view: &SchedView) -> Action {
+        Action::Idle
+    }
+
+    fn mixed_tick(&mut self, _view: &SchedView, _max_decode: usize) -> TickPlan {
+        TickPlan { prefill: None, decode: Vec::new() }
+    }
+}
+
+/// Regression: with `chunk_tokens = max_seq` a full-bucket prompt's
+/// chunk grant drives the per-tick decode budget to zero; the
+/// work-conserving fallback must clamp its decode pick to that budget
+/// (prefill-only tick) instead of planning one decode session and
+/// tripping the `decode batch ... exceeds the per-tick budget` ensure,
+/// which aborted a legitimate run.
+#[test]
+fn chunk_budget_zero_fallback_is_clamped_to_prefill_only() {
+    let Some(a) = assets() else { return };
+    let m = a.manifest.model.clone();
+    let c = cfg(
+        PolicyKind::SloAware, // ignored: the policy is injected below
+        DispatchKind::RoundRobin,
+        4,
+        4,
+        m.max_seq, // chunk budget == the whole expert token bucket
+        vec![],
+    );
+    let mut engine = bf16_engine(&a);
+    let mut replica = Replica::with_policy(&mut engine, &c, Box::new(EmptyPlanPolicy));
+    let short_new = (m.max_cache.saturating_sub(2)).clamp(1, 3);
+    let long_new = (m.max_cache - m.max_seq).clamp(1, 2);
+    // a short prompt that becomes decode-ready after one chunk ...
+    replica.enqueue(TimedRequest {
+        id: 0,
+        arrival: 0.0,
+        request: Request { prompt: vec![1, 5], max_new: short_new },
+    });
+    // ... alongside a full-bucket prompt whose chunk grant leaves a
+    // zero decode budget while it prefills
+    replica.enqueue(TimedRequest {
+        id: 1,
+        arrival: 0.0,
+        request: Request {
+            prompt: (0..m.max_seq).map(|t| 1 + (t as i32 * 7) % 60).collect(),
+            max_new: long_new,
+        },
+    });
+    let mut guard = 0;
+    while replica.has_work() {
+        replica
+            .tick()
+            .expect("fallback must clamp decode to the zero budget, not abort the run");
+        guard += 1;
+        assert!(guard < 500, "chunked fallback loop did not converge");
+    }
+    let done = replica.finish();
+    assert_eq!(done.outcome.metrics.completed, 2);
+    assert_eq!(done.state, ReplicaState::Live);
+}

@@ -716,3 +716,120 @@ fn prop_prefетch_predictions_are_valid_experts() {
         assert!(picks.iter().all(|&e| e < m));
     });
 }
+
+/// `FleetMetrics::merge` must be merge-order invariant and equivalent
+/// to a single collector over the same request records: the cluster
+/// folds per-replica collectors in replica order, and none of the
+/// summary statistics may depend on that order (or on how the records
+/// were partitioned across replicas).  Counters, spans, and order
+/// statistics are exact; means are floating-point sums, so they agree
+/// to rounding only.
+#[test]
+fn prop_fleet_metrics_merge_is_order_invariant() {
+    use dymoe::coordinator::engine::RequestOutput;
+    use dymoe::serving::metrics::{FleetMetrics, SloTargets};
+
+    check("fleet-metrics-merge", 80, |rng| {
+        let slo = SloTargets {
+            ttft_s: rng.f64() * 4.0 + 0.1,
+            tpot_s: rng.f64() + 0.01,
+        };
+        let n = rng.range(1, 24);
+        let mut records: Vec<(usize, f64, RequestOutput)> = Vec::with_capacity(n);
+        for id in 0..n {
+            let arrival = rng.f64() * 10.0;
+            let start = arrival + rng.f64() * 2.0;
+            let ttft = rng.f64() * 1.5 + 1e-3;
+            let tokens = rng.range(1, 6);
+            let mut token_times = vec![ttft];
+            for _ in 1..tokens {
+                token_times.push(token_times.last().unwrap() + rng.f64() * 0.5 + 1e-4);
+            }
+            let out = RequestOutput {
+                tokens: vec![0; tokens],
+                ttft,
+                token_times,
+                logits_per_step: Vec::new(),
+                prefill_hidden: Vec::new(),
+                start,
+            };
+            records.push((id, arrival, out));
+        }
+
+        // reference: every record folded into one collector
+        let mut reference = FleetMetrics::default();
+        for (id, arrival, out) in &records {
+            reference.record(*id, *arrival, out, slo);
+        }
+
+        // partition the records round-robin across k per-replica
+        // collectors (some possibly empty), then merge forward and in
+        // reverse — both must equal the single collector
+        let k = rng.range(1, 5);
+        let mut parts: Vec<FleetMetrics> = (0..k).map(|_| FleetMetrics::default()).collect();
+        for (i, (id, arrival, out)) in records.iter().enumerate() {
+            parts[i % k].record(*id, *arrival, out, slo);
+        }
+        let mut fwd = FleetMetrics::default();
+        for p in &parts {
+            fwd.merge(p);
+        }
+        let mut rev = FleetMetrics::default();
+        for p in parts.iter().rev() {
+            rev.merge(p);
+        }
+
+        for (label, m) in [("forward", &fwd), ("reverse", &rev)] {
+            assert_eq!(m.completed, reference.completed, "{label}: completed");
+            assert_eq!(m.ttft_ok, reference.ttft_ok, "{label}: ttft_ok");
+            assert_eq!(m.tpot_ok, reference.tpot_ok, "{label}: tpot_ok");
+            assert_eq!(m.slo_ok, reference.slo_ok, "{label}: slo_ok");
+            assert_eq!(m.tokens_total, reference.tokens_total, "{label}: tokens");
+            assert_eq!(m.first_arrival, reference.first_arrival, "{label}: first arrival");
+            assert_eq!(m.last_completion, reference.last_completion, "{label}: last completion");
+            assert_eq!(m.makespan(), reference.makespan(), "{label}: makespan");
+            // order statistics select elements of the sample multiset,
+            // which merging only permutes — exact equality
+            for p in [0.0, 25.0, 50.0, 95.0, 99.0, 100.0] {
+                assert_eq!(
+                    m.ttft.percentile(p),
+                    reference.ttft.percentile(p),
+                    "{label}: ttft p{p}"
+                );
+                assert_eq!(
+                    m.tpot.percentile(p),
+                    reference.tpot.percentile(p),
+                    "{label}: tpot p{p}"
+                );
+                assert_eq!(m.e2e.percentile(p), reference.e2e.percentile(p), "{label}: e2e p{p}");
+                assert_eq!(
+                    m.stall.percentile(p),
+                    reference.stall.percentile(p),
+                    "{label}: stall p{p}"
+                );
+                assert_eq!(
+                    m.queue_delay.percentile(p),
+                    reference.queue_delay.percentile(p),
+                    "{label}: queue p{p}"
+                );
+            }
+            // means are fp sums over permuted sample orders: rounding-
+            // level agreement
+            assert!((m.ttft.mean() - reference.ttft.mean()).abs() < 1e-9, "{label}: ttft mean");
+            assert!(
+                (m.queue_delay.mean() - reference.queue_delay.mean()).abs() < 1e-9,
+                "{label}: queue mean"
+            );
+            // derived rates follow from the invariants above
+            assert!(
+                (m.goodput_rps() - reference.goodput_rps()).abs() < 1e-9,
+                "{label}: goodput"
+            );
+            assert_eq!(m.slo_attainment(), reference.slo_attainment(), "{label}: attainment");
+        }
+        // merging an empty collector is the identity on every counter
+        let before = (fwd.completed, fwd.first_arrival, fwd.last_completion);
+        fwd.merge(&FleetMetrics::default());
+        assert_eq!(before, (fwd.completed, fwd.first_arrival, fwd.last_completion));
+    });
+}
