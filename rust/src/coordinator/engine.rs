@@ -53,7 +53,7 @@ use anyhow::{ensure, Context, Result};
 
 use crate::config::SystemConfig;
 use crate::costmodel::CostModel;
-use crate::memory::Timeline;
+use crate::memory::{Timeline, TracePhase};
 use crate::model::assets::{ExpertKey, ModelAssets};
 use crate::model::executor::Executor;
 use crate::model::kv::KvCache;
@@ -197,6 +197,9 @@ pub struct Engine {
 /// PCIe/NVMe channels, GPU) is shared across sessions.
 pub struct EngineSession {
     id: u64,
+    /// Serving-layer trace tag (the fleet request id); `None` until the
+    /// serving layer stamps one ([`EngineSession::set_trace_tag`]).
+    tag: Option<u64>,
     prompt: Vec<i32>,
     forced: Option<Vec<i32>>,
     /// Total tokens to emit (first token included), >= 1.
@@ -224,6 +227,18 @@ impl EngineSession {
     /// Engine-assigned session id (unique per engine).
     pub fn id(&self) -> u64 {
         self.id
+    }
+
+    /// The id trace events are stamped with: the serving-layer request
+    /// id when one was set, the engine session id otherwise.
+    pub fn trace_tag(&self) -> u64 {
+        self.tag.unwrap_or(self.id)
+    }
+
+    /// Stamp the serving-layer request id this session serves, so trace
+    /// events correlate with the fleet's per-request records.
+    pub fn set_trace_tag(&mut self, tag: u64) {
+        self.tag = Some(tag);
     }
 
     pub fn prompt_len(&self) -> usize {
@@ -490,6 +505,7 @@ impl Engine {
         self.next_session_id += 1;
         Ok(EngineSession {
             id,
+            tag: None,
             prompt: prompt.to_vec(),
             forced: forced.map(|f| f.to_vec()),
             n_new: n_new.max(1),
@@ -532,6 +548,7 @@ impl Engine {
         );
         let m = self.model().clone();
         self.enter_phase(s.id, Phase::Prefill);
+        self.timeline.ctx_step(&[s.trace_tag()], TracePhase::Prefill);
         self.stats.requests += 1;
 
         let start = self.timeline.gpu.free_at.max(s.arrival);
@@ -550,6 +567,7 @@ impl Engine {
             }
         }
         // First-token logits from the last valid position.
+        self.timeline.ctx_layer(None); // the head is not layer work
         let d = m.d_model;
         let h_last = &h[(seq_len - 1) * d..seq_len * d];
         let logits = self.exec.finalize_one(h_last)?;
@@ -706,6 +724,20 @@ impl Engine {
                 self.enter_phase(lead, Phase::Decode);
             }
         }
+        if self.timeline.record {
+            let mut tags: Vec<u64> = decode.iter().map(|s| s.trace_tag()).collect();
+            if let Some((s, _)) = pre.as_ref() {
+                tags.push(s.trace_tag());
+            }
+            let phase = if chunk > 0 && b > 0 {
+                TracePhase::Mixed
+            } else if chunk > 0 {
+                TracePhase::Prefill
+            } else {
+                TracePhase::Decode
+            };
+            self.timeline.ctx_step(&tags, phase);
+        }
         if b > 0 {
             self.stats.decode_batches += 1;
             self.stats.decode_batch_tokens += b as u64;
@@ -771,6 +803,7 @@ impl Engine {
             s.cursor = end;
             completes = end == s.prompt.len();
         }
+        self.timeline.ctx_layer(None); // the head is not layer work
         let fin_tokens = b + completes as usize;
         let t_tok = if fin_tokens > 0 {
             self.timeline.gpu_compute(
@@ -844,6 +877,7 @@ impl Engine {
         deps: f64,
     ) -> Result<f64> {
         let m = self.model().clone();
+        self.timeline.ctx_layer(Some(layer as u32));
         // Fused attention + Eq.-6 probe when the policy prefetches: one
         // PJRT execution, and the prefetch is issued *before* this layer's
         // expert compute so transfers overlap it (paper §4.4.1).
@@ -923,6 +957,7 @@ impl Engine {
         deps: f64,
     ) -> Result<f64> {
         let m = self.model().clone();
+        self.timeline.ctx_layer(Some(layer as u32));
         let b = decode.len();
         let d = m.d_model;
         let want_probe = self.strategy.wants_probe() && layer + 1 < m.n_layers;
@@ -1135,6 +1170,9 @@ impl Engine {
                 continue;
             }
             let key = ExpertKey::new(layer, e);
+            // Stamp the expert before resolving: a demand transfer the
+            // miss issues carries the expert that needed it.
+            self.timeline.ctx_experts(&[e as u32]);
             let (exec_prec, ready_at, on_cpu) =
                 self.resolve_weights(key, wanted, plan.cpu_fallback[e], t_attn);
             if self.strategy.uses_cache() && !self.cache.is_pinned_class(key, PinClass::Layer) {
@@ -1160,6 +1198,7 @@ impl Engine {
                 .map(|&t| &moe_in[t * d..(t + 1) * d])
                 .collect();
             let outs = self.exec.expert_ffn(ex.key, ex.exec_prec, &rows)?;
+            self.timeline.ctx_experts(&[ex.key.expert as u32]);
             let t_end = if ex.on_cpu {
                 self.stats.cpu_execs += 1;
                 self.timeline.cpu_compute(
@@ -1189,6 +1228,7 @@ impl Engine {
         for key in pinned {
             self.cache.set_pinned(key, PinClass::Layer, false);
         }
+        self.timeline.ctx_experts(&[]);
 
         // h = h_resid + renormalized mixture (paper 4/0 drops sub-critical
         // experts; renormalizing over the executed subset keeps the
@@ -1274,6 +1314,10 @@ impl Engine {
     /// Let the strategy prefetch experts for `next_layer`.
     fn issue_prefetch(&mut self, next_layer: usize, probe: &[f32], phase: Phase, seq_len: usize) {
         let m = self.model().clone();
+        // Prefetch transfers are *for* the next layer; stamp them so,
+        // and restore the in-flight layer's stamp before returning
+        // (callers always pass `next_layer == current layer + 1`).
+        self.timeline.ctx_layer(Some(next_layer as u32));
         let picks = self.strategy.prefetch(&PrefetchCtx {
             next_layer,
             n_layers: m.n_layers,
@@ -1298,6 +1342,7 @@ impl Engine {
             if queue_head > now + dur {
                 break; // picks are priority-ordered; later ones are worse
             }
+            self.timeline.ctx_experts(&[e as u32]);
             let arrival = self.transfer(key, prec, now, true);
             if self.strategy.inserts_on_miss() {
                 let bytes = self.cost.expert_weight_bytes(prec) as u64;
@@ -1309,6 +1354,7 @@ impl Engine {
         if !landed.is_empty() {
             self.prefetched_for.entry(next_layer).or_default().extend(landed);
         }
+        self.timeline.ctx_layer(Some((next_layer - 1) as u32));
     }
 
     /// Prefetches issued but not yet resolved into useful/wasted

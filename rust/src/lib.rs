@@ -27,6 +27,7 @@ pub mod model;
 pub mod quant;
 pub mod runtime;
 pub mod serving;
+pub mod trace;
 pub mod util;
 pub mod workload;
 

@@ -23,10 +23,11 @@ use anyhow::{anyhow, bail, Context, Result};
 use dymoe::baselines::{
     AccelerateStatic, Fiddler, LoadOnDemand, MixtralOffloading, MoeInfinity, Uniform,
 };
-use dymoe::config::{ChurnEvent, ChurnKind, HardwareConfig, LowMode, PolicyConfig, SystemConfig};
+use dymoe::config::{
+    ChurnEvent, ChurnKind, HardwareConfig, LowMode, PolicyConfig, ServingConfig, SystemConfig,
+};
 use dymoe::coordinator::engine::{Engine, EngineOptions};
 use dymoe::coordinator::strategy::{DyMoEStrategy, Strategy};
-use dymoe::config::ServingConfig;
 use dymoe::experiments::{self, ExpOptions};
 use dymoe::model::assets::ModelAssets;
 use dymoe::model::executor::Executor;
@@ -287,6 +288,14 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
             hw_specs.len()
         );
     }
+    // Trace export: timeline recording turns on (for every replica
+    // engine) only when a trace is requested, so the absent-flag fast
+    // path keeps the zero-overhead `record: false` behaviour.
+    let trace_out = match args.get("trace-out", "").as_str() {
+        "" => None,
+        "true" => bail!("--trace-out wants a file path"),
+        p => Some(p.to_string()),
+    };
 
     let assets = Arc::new(ModelAssets::load(&artifacts, &model)?);
     let m = assets.manifest.model.clone();
@@ -335,7 +344,7 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
             &assets,
             sys_i,
             strategy,
-            EngineOptions::default(),
+            EngineOptions { record_timeline: trace_out.is_some(), ..Default::default() },
             exec.clone(),
         )?);
         hw_labels.push(label);
@@ -463,6 +472,40 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
         std::fs::write(&path, j.to_string())?;
         println!("wrote {path}");
     }
+    if let Some(path) = &trace_out {
+        let doc = dymoe::trace::chrome::chrome_trace(&cluster);
+        std::fs::write(path, doc.to_string())?;
+        // Lint what we just wrote: a malformed trace should fail the
+        // run loudly, not a Perfetto import three tools later.
+        let rep = dymoe::trace::chrome::lint(&doc)?;
+        println!(
+            "wrote {path}: {} replica process(es), {} slices, {} counter samples, \
+             {} instants, {} session events — open in https://ui.perfetto.dev \
+             or chrome://tracing",
+            rep.processes, rep.slices, rep.counters, rep.instants, rep.session_events
+        );
+    }
+    Ok(())
+}
+
+/// Validate a Chrome-trace file (as produced by `serve-fleet
+/// --trace-out`): JSON structure, per-track timestamp monotonicity,
+/// non-negative durations, balanced session spans.  CI runs this over
+/// the smoke run's artifact.
+fn cmd_trace_lint(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: dymoe trace-lint <trace.json>"))?;
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let doc = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
+    let rep =
+        dymoe::trace::chrome::lint(&doc).with_context(|| format!("linting {path}"))?;
+    println!(
+        "{path}: ok — {} replica process(es), {} slices, {} counter samples, \
+         {} instants, {} session events",
+        rep.processes, rep.slices, rep.counters, rep.instants, rep.session_events
+    );
     Ok(())
 }
 
@@ -616,7 +659,12 @@ fn usage() -> String {
      \x20             [--drain T@R (repeatable: replica R stops receiving dispatches\n\
      \x20              at T and runs down what it already holds)]\n\
      \x20             [--json [PATH] (write cluster + per-replica summary JSON)]\n\
+     \x20             [--trace-out PATH (write a Perfetto/chrome://tracing-loadable\n\
+     \x20              Chrome trace: one process per replica, per-channel threads\n\
+     \x20              incl. a distinct pcie-prefetch lane, session lifecycle flows,\n\
+     \x20              churn instants, and per-tick counter tracks)]\n\
      \x20             [--ttft-slo S] [--tpot-slo S] [--strategy S] [--seed N]\n\
+     \x20 trace-lint  <trace.json> (validate a --trace-out artifact)\n\
      \x20 timeline    --model <name> [--vram GB] [--strategy S]\n\
      \x20 experiment  <fig1|fig2|fig3|fig4|fig5|fig6|fig10|fig11|table1|table2|table3|all>\n\
      \x20             [--items N] [--requests N] [--models a,b] [--out DIR]\n"
@@ -630,6 +678,7 @@ fn main() -> Result<()> {
         Some("info") => cmd_info(&args),
         Some("serve") => cmd_serve(&args),
         Some("serve-fleet") => cmd_serve_fleet(&args),
+        Some("trace-lint") => cmd_trace_lint(&args),
         Some("timeline") => cmd_timeline(&args),
         Some("experiment") => cmd_experiment(&args),
         _ => {

@@ -11,5 +11,5 @@
 pub mod timeline;
 pub mod vram;
 
-pub use timeline::{BusyTotals, Event, EventKind, Timeline};
+pub use timeline::{BusyTotals, EventKind, Timeline, TraceEvent, TraceMeta, TracePhase};
 pub use vram::VramBudget;

@@ -1,12 +1,29 @@
-//! Virtual timeline: FIFO resource channels + event log.
+//! Virtual timeline: FIFO resource channels + structured trace-event log.
+//!
+//! When `record` is on, every scheduled interval is logged as a
+//! [`TraceEvent`] carrying the serving context active at log time
+//! ([`TraceMeta`]: session ids, phase, layer, expert set), which the
+//! [`crate::trace`] module turns into a Perfetto-loadable Chrome trace.
+//! Like [`Channel::busy_total`], the event log is cumulative over the
+//! engine's lifetime and is never cleared; per-run consumers (the
+//! serving replica layer) snapshot `events.len()` at run start and
+//! capture the suffix, so engine reuse never leaks earlier runs' events.
 
 /// What an event occupied.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EventKind {
     GpuCompute,
     CpuCompute,
+    /// Demand host->device transfer (a session is waiting on it).
     PcieTransfer,
+    /// Background look-ahead prefetch transfer.  A distinct kind from
+    /// [`EventKind::PcieTransfer`] so the overlap wins of prefetching
+    /// (paper contribution 3) are visible in renderings of the log.
+    PciePrefetch,
     NvmeStage,
+    /// One serving-layer scheduler tick, spanning the engine work that
+    /// tick issued (logged by [`crate::serving::Replica::tick`]).
+    Tick,
     Marker,
 }
 
@@ -16,19 +33,72 @@ impl EventKind {
             EventKind::GpuCompute => "gpu",
             EventKind::CpuCompute => "cpu",
             EventKind::PcieTransfer => "pcie",
+            EventKind::PciePrefetch => "pfch",
             EventKind::NvmeStage => "nvme",
+            EventKind::Tick => "tick",
             EventKind::Marker => "mark",
+        }
+    }
+
+    /// Every kind, in the row order [`Timeline::render_ascii`] uses.
+    pub const ALL: [EventKind; 7] = [
+        EventKind::GpuCompute,
+        EventKind::CpuCompute,
+        EventKind::PcieTransfer,
+        EventKind::PciePrefetch,
+        EventKind::NvmeStage,
+        EventKind::Tick,
+        EventKind::Marker,
+    ];
+}
+
+/// Which serving phase a scheduling step ran under.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TracePhase {
+    /// A prefill chunk (or a monolithic whole-prompt prefill).
+    Prefill,
+    /// A pure decode batch.
+    Decode,
+    /// A fused tick carrying a prefill chunk and a decode batch.
+    Mixed,
+}
+
+impl TracePhase {
+    pub fn tag(self) -> &'static str {
+        match self {
+            TracePhase::Prefill => "prefill-chunk",
+            TracePhase::Decode => "decode-batch",
+            TracePhase::Mixed => "mixed-tick",
         }
     }
 }
 
-/// One scheduled interval on a resource (for Fig.-1-style timelines).
+/// Structured serving context stamped onto every logged event: which
+/// sessions the current scheduling step serves, under which phase, and
+/// (for engine-internal events) which layer / expert set.  The replica
+/// id is *not* here — a timeline belongs to one engine, and the cluster
+/// layer keys each captured stream by its replica.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceMeta {
+    /// Serving-layer session tags of the step (request ids once the
+    /// fleet stamps them, engine session ids otherwise).
+    pub sessions: Vec<u64>,
+    pub phase: Option<TracePhase>,
+    pub layer: Option<u32>,
+    /// Experts the event materializes or executes (empty when not
+    /// expert work).
+    pub experts: Vec<u32>,
+}
+
+/// One scheduled interval on a resource, with the serving context that
+/// scheduled it (Fig.-1-style timelines; Chrome-trace export).
 #[derive(Debug, Clone)]
-pub struct Event {
+pub struct TraceEvent {
     pub kind: EventKind,
     pub label: String,
     pub start: f64,
     pub end: f64,
+    pub meta: TraceMeta,
 }
 
 /// A serially-occupied resource: work issued at `t` starts at
@@ -126,10 +196,13 @@ pub struct Timeline {
     pub cpu: Channel,
     pub pcie: Channel,
     pub nvme: Channel,
-    pub events: Vec<Event>,
+    pub events: Vec<TraceEvent>,
     /// Record events (off by default: latency experiments schedule many
     /// thousands of intervals).
     pub record: bool,
+    /// Serving context stamped onto every logged event; maintained by
+    /// the `ctx_*` methods (all no-ops when `record` is off).
+    ctx: TraceMeta,
 }
 
 impl Timeline {
@@ -139,8 +212,47 @@ impl Timeline {
 
     fn log(&mut self, kind: EventKind, label: &str, start: f64, end: f64) {
         if self.record {
-            self.events.push(Event { kind, label: label.to_string(), start, end });
+            self.events.push(TraceEvent {
+                kind,
+                label: label.to_string(),
+                start,
+                end,
+                meta: self.ctx.clone(),
+            });
         }
+    }
+
+    /// Enter a scheduling step's context: which sessions it serves and
+    /// under which phase.  Clears the layer / expert stamps.
+    pub fn ctx_step(&mut self, sessions: &[u64], phase: TracePhase) {
+        if !self.record {
+            return;
+        }
+        self.ctx.sessions.clear();
+        self.ctx.sessions.extend_from_slice(sessions);
+        self.ctx.phase = Some(phase);
+        self.ctx.layer = None;
+        self.ctx.experts.clear();
+    }
+
+    /// Stamp the layer subsequent events belong to (`None` for
+    /// layer-independent work such as the finalize head).  Clears the
+    /// expert stamp.
+    pub fn ctx_layer(&mut self, layer: Option<u32>) {
+        if !self.record {
+            return;
+        }
+        self.ctx.layer = layer;
+        self.ctx.experts.clear();
+    }
+
+    /// Stamp the expert set subsequent events materialize or execute.
+    pub fn ctx_experts(&mut self, experts: &[u32]) {
+        if !self.record {
+            return;
+        }
+        self.ctx.experts.clear();
+        self.ctx.experts.extend_from_slice(experts);
     }
 
     /// GPU compute that additionally depends on inputs ready at `deps`.
@@ -164,10 +276,12 @@ impl Timeline {
     }
 
     /// Low-priority host->device prefetch transfer; never delays demand
-    /// transfers.  Returns arrival time.
+    /// transfers.  Returns arrival time.  Logged as its own
+    /// [`EventKind::PciePrefetch`] so demand and prefetch traffic land
+    /// on distinct tracks.
     pub fn pcie_prefetch(&mut self, issue: f64, dur: f64, label: &str) -> f64 {
         let (start, end) = self.pcie.schedule_background(issue, dur);
-        self.log(EventKind::PcieTransfer, label, start, end);
+        self.log(EventKind::PciePrefetch, label, start, end);
         end
     }
 
@@ -182,6 +296,20 @@ impl Timeline {
         self.log(EventKind::Marker, label, t, t);
     }
 
+    /// Log one serving-layer scheduler tick spanning `[start, end]`,
+    /// labelled and stamped with the step context the engine just ran
+    /// under (the layer / expert stamps are cleared first — a tick is
+    /// not layer work).
+    pub fn tick_span(&mut self, start: f64, end: f64) {
+        if !self.record {
+            return;
+        }
+        self.ctx.layer = None;
+        self.ctx.experts.clear();
+        let label = self.ctx.phase.map(TracePhase::tag).unwrap_or("tick");
+        self.log(EventKind::Tick, label, start, end);
+    }
+
     /// Snapshot every channel's cumulative busy seconds (see
     /// [`BusyTotals`] for the delta discipline).
     pub fn busy_totals(&self) -> BusyTotals {
@@ -193,11 +321,15 @@ impl Timeline {
         }
     }
 
-    /// Render the recorded events as an ASCII timeline (Fig. 1).
+    /// Render the recorded events as an ASCII timeline (Fig. 1).  The
+    /// four channel rows always print; prefetch / tick / marker rows
+    /// print only when they have events.  Every event paints at least
+    /// one cell, so zero-width instants (markers) survive rasterization.
     pub fn render_ascii(&self, width: usize) -> String {
         if self.events.is_empty() {
             return "<no events recorded>".to_string();
         }
+        let width = width.max(1);
         let t_max = self
             .events
             .iter()
@@ -205,25 +337,33 @@ impl Timeline {
             .fold(0.0_f64, f64::max)
             .max(1e-9);
         let mut out = String::new();
-        for kind in [
-            EventKind::GpuCompute,
-            EventKind::CpuCompute,
-            EventKind::PcieTransfer,
-            EventKind::NvmeStage,
-        ] {
+        for kind in EventKind::ALL {
             let mut row = vec![b'.'; width];
+            let mut any = false;
             for e in self.events.iter().filter(|e| e.kind == kind) {
-                let a = ((e.start / t_max) * width as f64) as usize;
-                let b = (((e.end / t_max) * width as f64).ceil() as usize).min(width);
-                for c in row.iter_mut().take(b).skip(a.min(width)) {
+                any = true;
+                let a = (((e.start / t_max) * width as f64) as usize).min(width - 1);
+                // `a <= width - 1` guarantees `a + 1 <= width`, so the
+                // clamp is well-formed and the event paints >= 1 cell.
+                let b = (((e.end / t_max) * width as f64).ceil() as usize).clamp(a + 1, width);
+                for c in row.iter_mut().take(b).skip(a) {
                     *c = b'#';
                 }
             }
-            out.push_str(&format!(
-                "{:<5} |{}|\n",
-                kind.tag(),
-                String::from_utf8(row).unwrap()
-            ));
+            let always = matches!(
+                kind,
+                EventKind::GpuCompute
+                    | EventKind::CpuCompute
+                    | EventKind::PcieTransfer
+                    | EventKind::NvmeStage
+            );
+            if any || always {
+                out.push_str(&format!(
+                    "{:<5} |{}|\n",
+                    kind.tag(),
+                    String::from_utf8(row).unwrap()
+                ));
+            }
         }
         out.push_str(&format!("scale: 0 .. {:.4} s\n", t_max));
         out
@@ -318,6 +458,46 @@ mod tests {
     }
 
     #[test]
+    fn prefetch_logs_its_own_kind() {
+        let mut tl = Timeline::new(true);
+        tl.pcie_transfer(0.0, 1.0, "demand");
+        tl.pcie_prefetch(0.0, 1.0, "bg");
+        assert_eq!(tl.events[0].kind, EventKind::PcieTransfer);
+        assert_eq!(tl.events[1].kind, EventKind::PciePrefetch);
+        // Both classes still share the one physical channel's busy total.
+        assert_eq!(tl.busy_totals().pcie, 2.0);
+    }
+
+    #[test]
+    fn ctx_stamps_events_and_is_inert_when_not_recording() {
+        let mut tl = Timeline::new(true);
+        tl.ctx_step(&[7, 9], TracePhase::Mixed);
+        tl.ctx_layer(Some(3));
+        tl.ctx_experts(&[1, 4]);
+        tl.gpu_compute(0.0, 0.0, 1.0, "ffn");
+        let m = &tl.events[0].meta;
+        assert_eq!(m.sessions, vec![7, 9]);
+        assert_eq!(m.phase, Some(TracePhase::Mixed));
+        assert_eq!(m.layer, Some(3));
+        assert_eq!(m.experts, vec![1, 4]);
+        // A new step clears the layer / expert stamps.
+        tl.ctx_step(&[7], TracePhase::Decode);
+        tl.tick_span(0.0, 1.0);
+        let t = tl.events.last().unwrap();
+        assert_eq!(t.kind, EventKind::Tick);
+        assert_eq!(t.label, "decode-batch");
+        assert_eq!(t.meta.layer, None);
+        assert!(t.meta.experts.is_empty());
+
+        let mut off = Timeline::new(false);
+        off.ctx_step(&[1], TracePhase::Prefill);
+        off.gpu_compute(0.0, 0.0, 1.0, "a");
+        off.tick_span(0.0, 1.0);
+        assert!(off.events.is_empty());
+        assert_eq!(off.ctx, TraceMeta::default()); // fast path: untouched
+    }
+
+    #[test]
     fn ascii_render_has_rows() {
         let mut tl = Timeline::new(true);
         tl.pcie_transfer(0.0, 1.0, "w");
@@ -326,5 +506,26 @@ mod tests {
         assert!(art.contains("gpu"));
         assert!(art.contains("pcie"));
         assert!(art.contains('#'));
+        // Rows for kinds with no events do not print.
+        assert!(!art.contains("mark"));
+        assert!(!art.contains("pfch"));
+    }
+
+    #[test]
+    fn ascii_render_keeps_markers_and_zero_width_events() {
+        let mut tl = Timeline::new(true);
+        tl.gpu_compute(0.0, 0.0, 10.0, "work");
+        tl.marker(5.0, "fail");
+        tl.marker(10.0, "end"); // at the right edge: must still paint
+        let art = tl.render_ascii(40);
+        let mark_row = art
+            .lines()
+            .find(|l| l.starts_with("mark"))
+            .expect("marker row rendered");
+        assert_eq!(mark_row.matches('#').count(), 2);
+        // Prefetch events render on their own row, distinct from demand.
+        tl.pcie_prefetch(0.0, 1.0, "bg");
+        let art = tl.render_ascii(40);
+        assert!(art.contains("pfch"));
     }
 }

@@ -58,6 +58,7 @@ use anyhow::{ensure, Context, Result};
 use crate::config::{ChurnEvent, ChurnKind};
 use crate::coordinator::engine::Engine;
 use crate::memory::BusyTotals;
+use crate::trace::TraceCapture;
 
 use super::arrival::TimedRequest;
 use super::metrics::{load_imbalance, ChurnStats, FleetMetrics, ResourceUtil};
@@ -79,6 +80,11 @@ pub struct ReplicaBreakdown {
     /// Lifecycle state the replica ended the run in (Live unless a
     /// churn event touched it).
     pub state: ReplicaState,
+    /// This run's trace streams (engine events + per-tick counter
+    /// samples); empty unless the engine's timeline is recording.
+    /// [`crate::trace::chrome::chrome_trace`] renders these as one
+    /// Perfetto process per replica.
+    pub trace: TraceCapture,
 }
 
 /// Result of one cluster run: the merged fleet view plus per-replica
@@ -214,10 +220,12 @@ pub fn run_cluster(
                 ChurnKind::Drain => {
                     if replicas[e.replica].begin_drain() {
                         churn.drained += 1;
+                        replicas[e.replica].mark(e.at, "drain");
                     }
                 }
                 ChurnKind::Fail => {
                     if replicas[e.replica].state() != ReplicaState::Dead {
+                        replicas[e.replica].mark(e.at, "fail");
                         let evac = replicas[e.replica].evacuate();
                         churn.failed += 1;
                         churn.requeued += evac.requests.len();
@@ -323,6 +331,7 @@ pub fn run_cluster(
             dispatched: *count,
             busy: run.busy,
             state: run.state,
+            trace: run.trace,
         });
     }
     // Completion order across the cluster: a stable merge by completion

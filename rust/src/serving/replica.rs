@@ -25,6 +25,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::engine::{Engine, EngineSession, EngineStats};
 use crate::memory::BusyTotals;
+use crate::trace::{TickSample, TraceCapture};
 use crate::workload::Request;
 
 use super::arrival::TimedRequest;
@@ -102,6 +103,9 @@ pub struct ReplicaRun {
     /// Lifecycle state the replica ended the run in (Live unless a
     /// churn event touched it).
     pub state: ReplicaState,
+    /// This run's trace streams (engine events + per-tick counter
+    /// samples); empty unless the engine's timeline is recording.
+    pub trace: TraceCapture,
 }
 
 /// One serving replica (engine + queues + policy + telemetry).
@@ -119,6 +123,14 @@ pub struct Replica<'e> {
     state: ReplicaState,
     stats_before: EngineStats,
     busy_before: BusyTotals,
+    /// Trace scoping: `engine.timeline.events` is cumulative over the
+    /// engine's lifetime (like `BusyTotals`), so the replica snapshots
+    /// the log length at construction and [`Replica::finish`] captures
+    /// only this run's suffix — engine reuse across runs never leaks
+    /// earlier runs' events into a later trace.
+    events_before: usize,
+    /// One counter sample per tick (empty when not recording).
+    samples: Vec<TickSample>,
     out: FleetOutcome,
 }
 
@@ -176,6 +188,8 @@ impl<'e> Replica<'e> {
             state: ReplicaState::Live,
             stats_before: engine.stats,
             busy_before: engine.busy_totals(),
+            events_before: engine.timeline.events.len(),
+            samples: Vec::new(),
             out: FleetOutcome::default(),
             policy,
             engine,
@@ -309,11 +323,34 @@ impl<'e> Replica<'e> {
     /// work.
     pub fn tick(&mut self) -> Result<()> {
         ensure!(self.has_work(), "ticked an idle replica");
+        let recording = self.engine.timeline.record;
+        let t0 = if recording { self.engine.clock() } else { 0.0 };
         if self.chunk_tokens == 0 {
-            self.tick_monolithic()
+            self.tick_monolithic()?;
         } else {
-            self.tick_chunked()
+            self.tick_chunked()?;
         }
+        if recording {
+            // Tick span under the step context the engine just ran,
+            // plus one counter sample at the post-tick clock.
+            let t1 = self.engine.clock();
+            self.engine.timeline.tick_span(t0, t1);
+            self.samples.push(TickSample {
+                t: t1,
+                queue_depth: self.queued.len(),
+                active_sessions: self.active.len(),
+                kv_bytes: self.active.iter().map(|a| a.sess.kv_bytes()).sum(),
+                cache_bytes: self.engine.cache.used_bytes(),
+            });
+        }
+        Ok(())
+    }
+
+    /// Stamp an instant marker on the replica's timeline (the cluster
+    /// layer marks churn events with this so a trace shows *when* a
+    /// replica failed or began draining).  No-op unless recording.
+    pub fn mark(&mut self, t: f64, label: &str) {
+        self.engine.timeline.marker(t, label);
     }
 
     /// Consume the replica, yielding this run's outcome (engine-counter
@@ -324,7 +361,16 @@ impl<'e> Replica<'e> {
         out.phase = PhaseStats::from_delta(&self.stats_before, &self.engine.stats);
         let busy = self.engine.busy_totals().minus(&self.busy_before);
         out.utilization = ResourceUtil::from_busy(&busy, out.metrics.makespan(), 1);
-        ReplicaRun { outcome: out, busy, state: self.state }
+        // This run's event suffix only (see `events_before`).
+        let events = self
+            .engine
+            .timeline
+            .events
+            .get(self.events_before..)
+            .unwrap_or(&[])
+            .to_vec();
+        let trace = TraceCapture { events, samples: self.samples };
+        ReplicaRun { outcome: out, busy, state: self.state, trace }
     }
 
     /// Record a finished session into the run outcome.
@@ -378,6 +424,7 @@ impl<'e> Replica<'e> {
                     .engine
                     .begin_session(&q.request.prompt, q.request.max_new, None, q.earliest)
                     .with_context(|| format!("admitting session {id}"))?;
+                sess.set_trace_tag(q.id as u64);
                 self.engine
                     .prefill_session(&mut sess)
                     .with_context(|| format!("prefill session {id}"))?;
@@ -489,10 +536,11 @@ impl<'e> Replica<'e> {
             let q = self.queued.swap_remove(pos);
             // Service gated at `earliest` (== arrival except for
             // failure restarts); metrics stay keyed to the arrival.
-            let sess = self
+            let mut sess = self
                 .engine
                 .begin_session(&q.request.prompt, q.request.max_new, None, q.earliest)
                 .with_context(|| format!("admitting session {id}"))?;
+            sess.set_trace_tag(q.id as u64);
             self.active.push(Active {
                 id: q.id,
                 arrival: q.arrival,

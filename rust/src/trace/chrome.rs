@@ -1,0 +1,268 @@
+//! Chrome Trace Event JSON writer (and structural linter) for cluster
+//! runs.  The emitted document loads in Perfetto (https://ui.perfetto.dev)
+//! and `chrome://tracing`:
+//!
+//! - one **process** (`pid`) per replica, named with its final
+//!   lifecycle state;
+//! - one **thread** (`tid`) per engine channel — GPU, CPU, demand PCIe,
+//!   prefetch PCIe, NVMe — plus scheduler-tick, marker, and session
+//!   rows;
+//! - every channel interval as a `ph:"X"` duration slice (µs
+//!   timestamps) with structured args (sessions, phase, layer,
+//!   experts);
+//! - churn and marker instants as `ph:"i"`;
+//! - session lifecycle as nestable async events (`ph:"b"/"n"/"e"`:
+//!   arrival -> admitted -> first-token -> done), keyed by request id;
+//! - per-tick counters (`ph:"C"`): queue depth, active sessions, KV
+//!   bytes, expert-cache bytes.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{bail, Result};
+
+use crate::memory::{EventKind, TraceEvent};
+use crate::serving::ClusterOutcome;
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Seconds (virtual time) to Chrome-trace microseconds.
+const US: f64 = 1e6;
+
+/// Stable thread id per event kind within a replica process.
+fn tid(kind: EventKind) -> f64 {
+    match kind {
+        EventKind::GpuCompute => 1.0,
+        EventKind::CpuCompute => 2.0,
+        EventKind::PcieTransfer => 3.0,
+        EventKind::PciePrefetch => 4.0,
+        EventKind::NvmeStage => 5.0,
+        EventKind::Tick => 6.0,
+        EventKind::Marker => 7.0,
+    }
+}
+
+/// Thread id of the session-lifecycle row.
+const SESSION_TID: f64 = 8.0;
+
+fn thread_name(kind: EventKind) -> &'static str {
+    match kind {
+        EventKind::GpuCompute => "gpu",
+        EventKind::CpuCompute => "cpu",
+        EventKind::PcieTransfer => "pcie demand",
+        EventKind::PciePrefetch => "pcie prefetch",
+        EventKind::NvmeStage => "nvme",
+        EventKind::Tick => "scheduler ticks",
+        EventKind::Marker => "markers",
+    }
+}
+
+/// `ph:"M"` metadata event naming a process or thread.
+fn meta_event(what: &str, pid: f64, tid: Option<f64>, name: &str) -> Json {
+    let mut pairs = vec![
+        ("ph", s("M")),
+        ("name", s(what)),
+        ("pid", num(pid)),
+        ("args", obj(vec![("name", s(name))])),
+    ];
+    if let Some(t) = tid {
+        pairs.push(("tid", num(t)));
+    }
+    obj(pairs)
+}
+
+/// Structured args for a duration slice, from the event's trace meta.
+fn span_args(e: &TraceEvent) -> Json {
+    let mut pairs: Vec<(&str, Json)> = Vec::new();
+    if !e.meta.sessions.is_empty() {
+        pairs.push(("sessions", arr(e.meta.sessions.iter().map(|&v| num(v as f64)))));
+    }
+    if let Some(p) = e.meta.phase {
+        pairs.push(("phase", s(p.tag())));
+    }
+    if let Some(l) = e.meta.layer {
+        pairs.push(("layer", num(l as f64)));
+    }
+    if !e.meta.experts.is_empty() {
+        pairs.push(("experts", arr(e.meta.experts.iter().map(|&v| num(v as f64)))));
+    }
+    obj(pairs)
+}
+
+/// Render a cluster run as a Chrome Trace Event JSON document.
+///
+/// Metadata events lead; every timed event follows in global timestamp
+/// order (Perfetto does not require it, but sorted output makes the
+/// per-track monotonicity the linter checks a structural property of
+/// the file rather than a viewer-side repair).
+pub fn chrome_trace(cluster: &ClusterOutcome) -> Json {
+    let mut head: Vec<Json> = Vec::new();
+    let mut timed: Vec<(f64, Json)> = Vec::new();
+    for (i, b) in cluster.replicas.iter().enumerate() {
+        let pid = (i + 1) as f64;
+        head.push(meta_event(
+            "process_name",
+            pid,
+            None,
+            &format!("replica {i} [{}]", b.state.name()),
+        ));
+        for kind in EventKind::ALL {
+            head.push(meta_event("thread_name", pid, Some(tid(kind)), thread_name(kind)));
+        }
+        head.push(meta_event("thread_name", pid, Some(SESSION_TID), "sessions"));
+
+        for e in &b.trace.events {
+            let ts = e.start * US;
+            let j = if e.kind == EventKind::Marker {
+                obj(vec![
+                    ("ph", s("i")),
+                    ("name", s(&e.label)),
+                    ("cat", s(e.kind.tag())),
+                    ("pid", num(pid)),
+                    ("tid", num(tid(e.kind))),
+                    ("ts", num(ts)),
+                    ("s", s("p")),
+                ])
+            } else {
+                obj(vec![
+                    ("ph", s("X")),
+                    ("name", s(&e.label)),
+                    ("cat", s(e.kind.tag())),
+                    ("pid", num(pid)),
+                    ("tid", num(tid(e.kind))),
+                    ("ts", num(ts)),
+                    ("dur", num((e.end - e.start) * US)),
+                    ("args", span_args(e)),
+                ])
+            };
+            timed.push((ts, j));
+        }
+
+        for sample in &b.trace.samples {
+            let ts = sample.t * US;
+            for (name, v) in [
+                ("queue depth", sample.queue_depth as f64),
+                ("active sessions", sample.active_sessions as f64),
+                ("kv bytes", sample.kv_bytes as f64),
+                ("expert cache bytes", sample.cache_bytes as f64),
+            ] {
+                timed.push((
+                    ts,
+                    obj(vec![
+                        ("ph", s("C")),
+                        ("name", s(name)),
+                        ("pid", num(pid)),
+                        ("ts", num(ts)),
+                        ("args", obj(vec![("value", num(v))])),
+                    ]),
+                ));
+            }
+        }
+
+        // Session lifecycle as nestable async events, from the replica's
+        // completed-request records (a re-dispatched session appears on
+        // the replica that completed it, with its original arrival).
+        for r in &b.outcome.per_request {
+            let span_name = format!("req {}", r.id);
+            let lifecycle = |ph: &str, at: f64, name: &str| {
+                obj(vec![
+                    ("ph", s(ph)),
+                    ("cat", s("session")),
+                    ("name", s(name)),
+                    ("id", num(r.id as f64)),
+                    ("pid", num(pid)),
+                    ("tid", num(SESSION_TID)),
+                    ("ts", num(at * US)),
+                ])
+            };
+            let admitted = r.arrival + r.queue_delay;
+            let first_token = r.arrival + r.ttft;
+            timed.push((r.arrival * US, lifecycle("b", r.arrival, &span_name)));
+            timed.push((admitted * US, lifecycle("n", admitted, "admitted")));
+            timed.push((first_token * US, lifecycle("n", first_token, "first-token")));
+            timed.push((r.finished_at * US, lifecycle("e", r.finished_at, &span_name)));
+        }
+    }
+    // Stable sort keeps same-timestamp insertion order (b before e).
+    timed.sort_by(|a, b| a.0.total_cmp(&b.0));
+    head.extend(timed.into_iter().map(|(_, j)| j));
+    obj(vec![("traceEvents", Json::Arr(head)), ("displayTimeUnit", s("ms"))])
+}
+
+/// Counts from a [`lint`] pass over a trace document.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LintReport {
+    pub processes: usize,
+    pub slices: usize,
+    pub counters: usize,
+    pub instants: usize,
+    pub session_events: usize,
+}
+
+/// Structural validation of a Chrome Trace Event JSON document as this
+/// writer emits it: `traceEvents` present and non-empty, only known
+/// phase types, timestamps non-negative and monotone non-decreasing per
+/// `(pid, tid)` track, `ph:"X"` slices with non-negative durations,
+/// counters carrying a numeric value, and balanced session begin/end
+/// pairs.  Used by the `trace-lint` CLI command and the CI smoke step.
+pub fn lint(doc: &Json) -> Result<LintReport> {
+    let events = doc.get("traceEvents")?.as_arr()?;
+    if events.is_empty() {
+        bail!("empty traceEvents");
+    }
+    let mut rep = LintReport::default();
+    let mut pids: BTreeSet<i64> = BTreeSet::new();
+    let mut last_ts: BTreeMap<(i64, i64), f64> = BTreeMap::new();
+    let mut open_sessions: BTreeMap<(i64, i64), i64> = BTreeMap::new();
+    for ev in events {
+        let ph = ev.get("ph")?.as_str()?;
+        let pid = ev.get("pid")?.as_f64()? as i64;
+        pids.insert(pid);
+        if ph == "M" {
+            continue;
+        }
+        let ts = ev.get("ts")?.as_f64()?;
+        if ts.is_nan() || ts < 0.0 {
+            bail!("negative or NaN ts {ts}");
+        }
+        match ph {
+            "X" => {
+                let dur = ev.get("dur")?.as_f64()?;
+                if dur.is_nan() || dur < 0.0 {
+                    bail!("negative or NaN dur {dur}");
+                }
+                let tid = ev.get("tid")?.as_f64()? as i64;
+                let prev = last_ts.entry((pid, tid)).or_insert(f64::NEG_INFINITY);
+                if ts < *prev {
+                    bail!("track (pid {pid}, tid {tid}) timestamps went backwards");
+                }
+                *prev = ts;
+                rep.slices += 1;
+            }
+            "C" => {
+                ev.get("args")?.get("value")?.as_f64()?;
+                rep.counters += 1;
+            }
+            "i" => rep.instants += 1,
+            "b" | "n" | "e" => {
+                let id = ev.get("id")?.as_f64()? as i64;
+                let depth = open_sessions.entry((pid, id)).or_insert(0);
+                match ph {
+                    "b" => *depth += 1,
+                    "e" => {
+                        *depth -= 1;
+                        if *depth < 0 {
+                            bail!("session {id} on pid {pid} ended before it began");
+                        }
+                    }
+                    _ => {}
+                }
+                rep.session_events += 1;
+            }
+            other => bail!("unknown event phase {other:?}"),
+        }
+    }
+    if let Some(((pid, id), _)) = open_sessions.iter().find(|(_, &d)| d != 0) {
+        bail!("session {id} on pid {pid} never ended");
+    }
+    rep.processes = pids.len();
+    Ok(rep)
+}

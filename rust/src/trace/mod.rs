@@ -1,0 +1,44 @@
+//! Cluster-scale trace export: turns the per-engine
+//! [`crate::memory::Timeline`] event log into a Perfetto-loadable
+//! Chrome Trace Event JSON file (`serve-fleet --trace-out PATH`).
+//!
+//! The serving replica captures two per-run streams when its engine's
+//! timeline is recording: the structured [`crate::memory::TraceEvent`]
+//! suffix this run appended (snapshot-delta scoped exactly like
+//! [`crate::memory::BusyTotals`], so engine reuse across runs never
+//! leaks earlier runs' events) and one [`TickSample`] of serving
+//! counters per scheduler tick.  The cluster layer carries both through
+//! [`crate::serving::ReplicaBreakdown::trace`]; [`chrome::chrome_trace`]
+//! renders the whole cluster as one trace — replica -> `pid`, channel
+//! -> `tid`, duration slices, churn instants, session lifecycle flows,
+//! and counter tracks.
+
+pub mod chrome;
+
+use crate::memory::TraceEvent;
+
+/// One per-tick sample of a serving replica's counters (the source of
+/// the Chrome-trace `ph:"C"` counter tracks).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TickSample {
+    /// Virtual time of the sample (the replica clock after the tick).
+    pub t: f64,
+    /// Requests dispatched to the replica but not yet admitted.
+    pub queue_depth: usize,
+    /// Admitted, still-running sessions.
+    pub active_sessions: usize,
+    /// KV-cache bytes held by the active sessions (VRAM).
+    pub kv_bytes: u64,
+    /// Expert-cache bytes resident in VRAM.
+    pub cache_bytes: u64,
+}
+
+/// One replica's run-scoped trace streams.  Empty when the engine's
+/// timeline is not recording (the `--trace-out`-absent fast path).
+#[derive(Debug, Clone, Default)]
+pub struct TraceCapture {
+    /// The engine events this run appended, in log order.
+    pub events: Vec<TraceEvent>,
+    /// One counter sample per scheduler tick, in tick order.
+    pub samples: Vec<TickSample>,
+}

@@ -1,0 +1,332 @@
+//! Integration: cluster-scale Chrome-trace export.
+//!
+//! Three pillars:
+//!
+//! 1. **Structural validity** — `chrome_trace` over a real churny
+//!    chunked cluster run emits JSON that parses, roundtrips, and
+//!    passes the structural linter: one process per replica, monotone
+//!    non-negative per-track timestamps, balanced session begin/end
+//!    pairs, churn markers as instants, four counter samples per tick.
+//! 2. **Conservation** — the trace is the *same data* the telemetry
+//!    reports: summed slice durations per channel equal the replica's
+//!    `BusyTotals` delta, GPU slices nest inside the run's completion
+//!    span, and tick spans / counter samples count the scheduler steps
+//!    exactly.
+//! 3. **Run-boundary hygiene** — reusing one engine across cluster
+//!    runs captures each run's event *suffix* only (the
+//!    `events_before` snapshot-delta discipline), so a later trace
+//!    never replays an earlier run's work.
+//!
+//! Engine-level tests need the real `tiny` artifacts and skip politely
+//! when they are missing (run `make artifacts`).  The hand-built
+//! writer/linter test at the bottom is engine-free and runs everywhere
+//! — it is what the CI smoke step relies on when artifacts are absent.
+
+use std::sync::Arc;
+
+use dymoe::baselines::Uniform;
+use dymoe::config::{ChurnEvent, ChurnKind, ServingConfig, SystemConfig, GB};
+use dymoe::coordinator::engine::{Engine, EngineOptions};
+use dymoe::memory::{BusyTotals, EventKind, Timeline, TracePhase};
+use dymoe::model::assets::ModelAssets;
+use dymoe::quant::Precision;
+use dymoe::serving::arrival::{ArrivalGen, ArrivalProcess, TimedRequest};
+use dymoe::serving::metrics::{ChurnStats, CompletedRequest};
+use dymoe::serving::policy::{DispatchKind, PolicyKind};
+use dymoe::serving::{
+    run_cluster, ClusterOutcome, FleetConfig, FleetOutcome, ReplicaBreakdown, ReplicaState,
+};
+use dymoe::trace::chrome::{chrome_trace, lint};
+use dymoe::trace::{TickSample, TraceCapture};
+use dymoe::util::json::Json;
+use dymoe::workload::TraceGen;
+
+fn assets() -> Option<Arc<ModelAssets>> {
+    match ModelAssets::load("artifacts", "tiny") {
+        Ok(a) => Some(Arc::new(a)),
+        Err(_) => {
+            eprintln!("artifacts/tiny missing; run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn big_vram_sys() -> SystemConfig {
+    let mut sys = SystemConfig::edge_preset("tiny", 24).unwrap();
+    sys.hardware.vram_bytes = 1024 * GB;
+    sys
+}
+
+/// A recording engine (the `--trace-out` configuration).
+fn recording_engine(a: &Arc<ModelAssets>, sys: SystemConfig) -> Engine {
+    Engine::with_options(
+        a,
+        sys,
+        Box::new(Uniform::new(Precision::Bf16)),
+        EngineOptions { record_timeline: true, ..Default::default() },
+    )
+    .unwrap()
+}
+
+fn cfg(chunk: usize, churn: Vec<ChurnEvent>) -> FleetConfig {
+    FleetConfig {
+        serving: ServingConfig {
+            max_sessions: 3,
+            ttft_slo_s: 1e6,
+            tpot_slo_s: 1e6,
+            max_decode_batch: 2,
+            chunk_tokens: chunk,
+            churn,
+            ..Default::default()
+        },
+        policy: PolicyKind::SloAware,
+        dispatch: DispatchKind::RoundRobin,
+    }
+}
+
+fn tiny_trace(a: &Arc<ModelAssets>, n: usize, rate: f64) -> Vec<TimedRequest> {
+    let m = &a.manifest.model;
+    let mut content = TraceGen::new(7, m.max_seq.min(16), (m.max_cache - m.max_seq).min(6));
+    ArrivalGen::generate(21, ArrivalProcess::Poisson { rate }, &mut content, n).unwrap()
+}
+
+fn cat_is(e: &Json, cat: &str) -> bool {
+    matches!(e.opt("cat"), Some(Json::Str(c)) if c == cat)
+}
+
+// ---------------------------------------------------------------------
+// Structural validity on a real churny chunked run (artifacts-gated)
+// ---------------------------------------------------------------------
+
+/// The full `--trace-out` pipeline on a chunked two-replica run with a
+/// failure: the emitted document parses and roundtrips, lints clean,
+/// maps each replica to its own process, records the churn marker as an
+/// instant, balances every session's lifecycle events, and counts ticks
+/// / counter samples exactly one per scheduler step.
+#[test]
+fn trace_export_parses_lints_and_maps_replicas() {
+    let Some(a) = assets() else { return };
+    let churn = vec![ChurnEvent { at: 0.001, replica: 1, kind: ChurnKind::Fail }];
+    let c = cfg(3, churn);
+    let mut engines: Vec<Engine> =
+        (0..2).map(|_| recording_engine(&a, big_vram_sys())).collect();
+    let cluster = run_cluster(&mut engines, tiny_trace(&a, 8, 50.0), &c).unwrap();
+
+    let doc = chrome_trace(&cluster);
+    let reparsed = Json::parse(&doc.to_string()).expect("trace JSON parses");
+    assert_eq!(reparsed, doc, "writer output must roundtrip through the parser");
+
+    let rep = lint(&reparsed).expect("trace lints clean");
+    assert_eq!(rep.processes, 2, "one Perfetto process per replica");
+    assert!(rep.slices > 0);
+    assert!(rep.instants >= 1, "the churn failure must surface as an instant");
+    assert_eq!(rep.session_events, 4 * cluster.fleet.per_request.len());
+    let samples: usize = cluster.replicas.iter().map(|b| b.trace.samples.len()).sum();
+    assert_eq!(rep.counters, 4 * samples, "four counter tracks per tick sample");
+
+    for (i, b) in cluster.replicas.iter().enumerate() {
+        assert_eq!(
+            b.trace.samples.len(),
+            b.outcome.steps,
+            "replica {i}: one counter sample per scheduler step"
+        );
+        let ticks: Vec<_> =
+            b.trace.events.iter().filter(|e| e.kind == EventKind::Tick).collect();
+        assert_eq!(ticks.len(), b.outcome.steps, "replica {i}: one tick span per step");
+        for t in ticks {
+            assert!(
+                matches!(t.label.as_str(), "prefill-chunk" | "decode-batch" | "mixed-tick"),
+                "replica {i}: tick span labelled {:?}",
+                t.label
+            );
+            assert!(!t.meta.sessions.is_empty(), "replica {i}: tick without sessions");
+        }
+    }
+    // The failed replica still owns its process: no work, but the
+    // failure marker lives on *its* timeline.
+    assert!(cluster.replicas[1]
+        .trace
+        .events
+        .iter()
+        .any(|e| e.kind == EventKind::Marker && e.label == "fail"));
+}
+
+// ---------------------------------------------------------------------
+// Conservation against BusyTotals (artifacts-gated)
+// ---------------------------------------------------------------------
+
+/// The trace reports the same busy time the telemetry does: per
+/// channel, summed slice durations equal the replica's `BusyTotals`
+/// delta (demand + prefetch transfers together account for the one
+/// physical PCIe channel), and every GPU slice ends inside the run's
+/// completion span.  Tight VRAM forces real demand transfers so the
+/// demand lane is exercised, not vacuously zero.
+#[test]
+fn trace_slices_conserve_busy_totals() {
+    let Some(a) = assets() else { return };
+    let mut sys = big_vram_sys();
+    sys.hardware.vram_bytes = sys.paper.non_expert_bytes + GB;
+    let mut engines = vec![Engine::with_options(
+        &a,
+        sys,
+        Box::new(Uniform::new(Precision::Int4)),
+        EngineOptions { record_timeline: true, ..Default::default() },
+    )
+    .unwrap()];
+    let cluster =
+        run_cluster(&mut engines, tiny_trace(&a, 6, 20.0), &cfg(0, Vec::new())).unwrap();
+    let b = &cluster.replicas[0];
+
+    let sum = |kind: EventKind| -> f64 {
+        b.trace
+            .events
+            .iter()
+            .filter(|e| e.kind == kind)
+            .map(|e| e.end - e.start)
+            .sum()
+    };
+    // `end - start` re-derives each duration in f64, so allow ulp-level
+    // accumulation error relative to the channel's total.
+    let close = |got: f64, want: f64| (got - want).abs() <= 1e-6 * want.max(1.0);
+
+    assert!(b.busy.gpu > 0.0);
+    let gpu = sum(EventKind::GpuCompute);
+    assert!(close(gpu, b.busy.gpu), "gpu slices {gpu} != busy delta {}", b.busy.gpu);
+    let demand = sum(EventKind::PcieTransfer);
+    let prefetch = sum(EventKind::PciePrefetch);
+    assert!(demand > 0.0, "tight VRAM must issue demand transfers");
+    assert!(
+        close(demand + prefetch, b.busy.pcie),
+        "pcie slices {demand} + {prefetch} != busy delta {}",
+        b.busy.pcie
+    );
+    let nvme = sum(EventKind::NvmeStage);
+    assert!(close(nvme, b.busy.nvme), "nvme slices {nvme} != busy delta {}", b.busy.nvme);
+    let cpu = sum(EventKind::CpuCompute);
+    assert!(close(cpu, b.busy.cpu), "cpu slices {cpu} != busy delta {}", b.busy.cpu);
+
+    let last_done = cluster
+        .fleet
+        .per_request
+        .iter()
+        .map(|r| r.finished_at)
+        .fold(0.0_f64, f64::max);
+    for e in b.trace.events.iter().filter(|e| e.kind == EventKind::GpuCompute) {
+        assert!(
+            e.end <= last_done + 1e-9,
+            "gpu slice ending {} outruns the last completion {last_done}",
+            e.end
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Run-boundary hygiene on engine reuse (artifacts-gated)
+// ---------------------------------------------------------------------
+
+/// The timeline event log is cumulative over an engine's lifetime (like
+/// `BusyTotals`), so each run's capture must be exactly the suffix that
+/// run appended: run 1 owns the whole log, run 2 owns `n2 - n1` events
+/// starting at the snapshot point, and nothing from run 1 leaks in.
+#[test]
+fn engine_reuse_scopes_trace_events_per_run() {
+    let Some(a) = assets() else { return };
+    let c = cfg(2, Vec::new());
+    let mut engine = recording_engine(&a, big_vram_sys());
+
+    let run1 =
+        run_cluster(std::slice::from_mut(&mut engine), tiny_trace(&a, 4, 20.0), &c).unwrap();
+    let n1 = engine.timeline.events.len();
+    assert!(n1 > 0);
+    assert_eq!(run1.replicas[0].trace.events.len(), n1, "run 1 owns the whole log");
+
+    let run2 =
+        run_cluster(std::slice::from_mut(&mut engine), tiny_trace(&a, 4, 20.0), &c).unwrap();
+    let n2 = engine.timeline.events.len();
+    let cap2 = &run2.replicas[0].trace.events;
+    assert_eq!(cap2.len(), n2 - n1, "run 2 captures exactly its own suffix");
+    assert!(!cap2.is_empty());
+    let first = &engine.timeline.events[n1];
+    assert_eq!(cap2[0].kind, first.kind);
+    assert_eq!(cap2[0].start, first.start);
+    assert_eq!(cap2[0].label, first.label);
+}
+
+// ---------------------------------------------------------------------
+// Writer / linter on a hand-built cluster (runs everywhere)
+// ---------------------------------------------------------------------
+
+/// Engine-free pin of the writer's track mapping: a hand-built one-
+/// replica outcome produces exactly the expected lint counts, demand
+/// and prefetch transfers land on distinct threads, and the step
+/// context (phase / layer) rides on the slice args.
+#[test]
+fn chrome_writer_lints_without_artifacts() {
+    let mut tl = Timeline::new(true);
+    tl.ctx_step(&[3], TracePhase::Decode);
+    tl.ctx_layer(Some(1));
+    tl.ctx_experts(&[2]);
+    tl.gpu_compute(0.0, 0.0, 0.5, "ffn");
+    tl.pcie_transfer(0.0, 0.1, "demand");
+    tl.pcie_prefetch(0.1, 0.2, "bg");
+    tl.marker(0.7, "fail");
+    tl.tick_span(0.0, 0.5);
+    let trace = TraceCapture {
+        events: tl.events.clone(),
+        samples: vec![TickSample {
+            t: 0.5,
+            queue_depth: 1,
+            active_sessions: 1,
+            kv_bytes: 64,
+            cache_bytes: 128,
+        }],
+    };
+    let mut outcome = FleetOutcome::default();
+    outcome.per_request.push(CompletedRequest {
+        id: 3,
+        arrival: 0.0,
+        queue_delay: 0.1,
+        ttft: 0.3,
+        tpot: 0.1,
+        finished_at: 1.0,
+        tokens: 3,
+        ttft_ok: true,
+        tpot_ok: true,
+        max_stall: 0.1,
+        retries: 0,
+    });
+    let cluster = ClusterOutcome {
+        fleet: FleetOutcome::default(),
+        replicas: vec![ReplicaBreakdown {
+            outcome,
+            dispatched: 1,
+            busy: BusyTotals::default(),
+            state: ReplicaState::Live,
+            trace,
+        }],
+        load_imbalance: 1.0,
+        churn: ChurnStats::default(),
+    };
+
+    let doc = chrome_trace(&cluster);
+    let rep = lint(&doc).expect("hand-built trace lints clean");
+    assert_eq!(rep.processes, 1);
+    assert_eq!(rep.slices, 4, "gpu + demand pcie + prefetch pcie + tick");
+    assert_eq!(rep.counters, 4);
+    assert_eq!(rep.instants, 1);
+    assert_eq!(rep.session_events, 4, "b + admitted + first-token + e");
+
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    let tid_of = |cat: &str| -> f64 {
+        let e = events.iter().find(|e| cat_is(e, cat)).expect(cat);
+        e.get("tid").unwrap().as_f64().unwrap()
+    };
+    assert_ne!(tid_of("pcie"), tid_of("pfch"), "demand and prefetch share a track");
+
+    let gpu = events.iter().find(|e| cat_is(e, "gpu")).unwrap();
+    let args = gpu.get("args").unwrap();
+    assert_eq!(args.get("phase").unwrap().as_str().unwrap(), "decode-batch");
+    assert_eq!(args.get("layer").unwrap().as_f64().unwrap(), 1.0);
+    assert_eq!(args.get("sessions").unwrap().as_usize_vec().unwrap(), vec![3]);
+    assert_eq!(args.get("experts").unwrap().as_usize_vec().unwrap(), vec![2]);
+}
