@@ -10,18 +10,22 @@
 //! A **replica-scaling sweep** (1/2/4-replica clusters — fresh engines
 //! sharing one compiled executor — under every dispatch policy on the
 //! *same* seeded trace, reporting goodput, p99 TTFT, and the
-//! load-imbalance statistic) and a **churn sweep** (stable vs drain vs
+//! load-imbalance statistic), a **churn sweep** (stable vs drain vs
 //! fail of replica 0 at 2/4 replicas, the event timed mid-serve,
 //! reporting the requeue count, lost-work tokens, and the tail-latency
-//! hit) close the file.
+//! hit), and an **event-driven sweep** (8/16/32-replica clusters run
+//! through the retired min-clock lockstep loop, the event-driven
+//! scheduler, and the event-driven scheduler on 4 worker threads —
+//! reporting wall-clock per mode plus the [`ClusterOutcome::digest`]
+//! outcome hash, which must match across all three) close the file.
 //!
 //! `--json` runs a small fixed smoke configuration instead and writes
 //! `BENCH_serving.json` (p50/p99 TTFT/TPOT, expert dedup ratio per
 //! decode-batch setting, a chunked-vs-monolithic long-prompt
 //! head-of-line sweep: p99 TPOT, worst inter-token stall, chunk and
 //! mixed-tick counts per `chunk_tokens` setting, plus the
-//! `replica_scaling_sweep` and `churn_sweep`) so CI can track the perf
-//! trajectory in a machine-readable form.
+//! `replica_scaling_sweep`, `churn_sweep`, and `event_driven_sweep`) so
+//! CI can track the perf trajectory in a machine-readable form.
 //!
 //! Skips politely if `make artifacts` has not been run.
 
@@ -37,7 +41,9 @@ use dymoe::model::assets::ModelAssets;
 use dymoe::model::executor::Executor;
 use dymoe::serving::arrival::{ArrivalGen, ArrivalProcess, TimedRequest};
 use dymoe::serving::policy::{DispatchKind, PolicyKind};
-use dymoe::serving::{run_cluster, run_fleet, ClusterOutcome, FleetConfig, FleetOutcome};
+use dymoe::serving::{
+    run_cluster, run_cluster_minclock, run_fleet, ClusterOutcome, FleetConfig, FleetOutcome,
+};
 use dymoe::util::json::Json;
 use dymoe::workload::{Request, TraceGen};
 
@@ -145,6 +151,69 @@ fn churn_for(scenario: &str, at: f64) -> Vec<ChurnEvent> {
         "fail" => vec![ChurnEvent { at, replica: 0, kind: ChurnKind::Fail }],
         _ => unreachable!("unknown churn scenario {scenario}"),
     }
+}
+
+/// The event-driven sweep's cluster sizes: big enough that the retired
+/// min-clock loop's per-iteration full scan (and its ticking of one
+/// replica at a time while the rest idle-wait) costs real wall-clock,
+/// so the event queue's "idle replicas cost nothing" win shows.
+const EVENT_REPLICAS: [usize; 3] = [8, 16, 32];
+const EVENT_MODES: [&str; 3] = ["minclock", "event", "parallel"];
+
+/// One cluster run for the event-driven sweep.  Every mode builds its
+/// engines identically — one compiled executor **per replica** (the
+/// parallel mode requires distinct executors; keeping the serial modes
+/// on the same construction keeps wall-clocks comparable) — and serves
+/// the same seeded trace under jsq dispatch.  `mode` picks the
+/// scheduler: `"minclock"` (the retired lockstep reference loop),
+/// `"event"` (the event-driven scheduler, serial), `"parallel"` (the
+/// event-driven scheduler on 4 worker threads).  Returns the outcome
+/// plus the run's wall-clock seconds.
+fn run_event_point(
+    assets: &Arc<ModelAssets>,
+    replicas: usize,
+    requests: usize,
+    mode: &str,
+) -> anyhow::Result<(ClusterOutcome, f64)> {
+    let m = assets.manifest.model.clone();
+    let mut engines = Vec::with_capacity(replicas);
+    for _ in 0..replicas {
+        let sys = SystemConfig::edge_preset("mixtral-mini", 16)?;
+        let strat = Box::new(DyMoEStrategy::new(PolicyConfig::default()));
+        let exec = Rc::new(Executor::new(assets.clone())?);
+        engines.push(Engine::with_executor(
+            assets,
+            sys,
+            strat,
+            EngineOptions::default(),
+            exec,
+        )?);
+    }
+    let mut content =
+        TraceGen::new(11, m.max_seq.min(80), (m.max_cache - m.max_seq).min(12));
+    let trace = ArrivalGen::generate(
+        0x5EED,
+        ArrivalProcess::Poisson { rate: SCALING_RATE },
+        &mut content,
+        requests,
+    )?;
+    let cfg = FleetConfig {
+        serving: ServingConfig {
+            max_sessions: 8,
+            max_decode_batch: 8,
+            parallel: if mode == "parallel" { 4 } else { 1 },
+            ..Default::default()
+        },
+        policy: PolicyKind::SloAware,
+        dispatch: DispatchKind::JoinShortestQueue,
+    };
+    let wall = Instant::now();
+    let o = if mode == "minclock" {
+        run_cluster_minclock(&mut engines, trace, &cfg)?
+    } else {
+        run_cluster(&mut engines, trace, &cfg)?
+    };
+    Ok((o, wall.elapsed().as_secs_f64()))
 }
 
 /// The head-of-line scenario: short-prompt decoders plus one long
@@ -336,6 +405,37 @@ fn smoke_json(assets: &Arc<ModelAssets>) -> anyhow::Result<Json> {
             churn_points.push(Json::Obj(p));
         }
     }
+    // Event-driven sweep: each cluster size runs the retired min-clock
+    // loop once (the reference digest), then the event-driven scheduler
+    // serial and on 4 workers.  CI tracks the wall-clock win; the
+    // `matches_minclock` booleans are the bit-identity signal (the
+    // equivalence tests enforce it — here it is recorded alongside the
+    // timing so a regression shows up in the same artifact).
+    let mut event_points = Vec::new();
+    for &replicas in &EVENT_REPLICAS {
+        let (base, base_wall) = run_event_point(assets, replicas, requests, "minclock")?;
+        let base_digest = base.digest();
+        for mode in EVENT_MODES {
+            let (o, wall) = if mode == "minclock" {
+                (base.clone(), base_wall)
+            } else {
+                run_event_point(assets, replicas, requests, mode)?
+            };
+            let mut p = BTreeMap::new();
+            p.insert("replicas".to_string(), num(replicas as f64));
+            p.insert("mode".to_string(), Json::Str(mode.to_string()));
+            p.insert("wall_ms".to_string(), num(wall * 1e3));
+            p.insert("digest".to_string(), Json::Str(format!("{:016x}", o.digest())));
+            p.insert(
+                "matches_minclock".to_string(),
+                Json::Bool(o.digest() == base_digest),
+            );
+            p.insert("completed".to_string(), num(o.fleet.metrics.completed as f64));
+            p.insert("ttft_p99_s".to_string(), num(o.fleet.metrics.ttft.percentile(99.0)));
+            p.insert("goodput_rps".to_string(), num(o.fleet.metrics.goodput_rps()));
+            event_points.push(Json::Obj(p));
+        }
+    }
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("serving".to_string()));
     root.insert("model".to_string(), Json::Str("mixtral-mini".to_string()));
@@ -348,6 +448,7 @@ fn smoke_json(assets: &Arc<ModelAssets>) -> anyhow::Result<Json> {
     root.insert("hol_long_prompt_sweep".to_string(), Json::Arr(hol_points));
     root.insert("replica_scaling_sweep".to_string(), Json::Arr(scaling_points));
     root.insert("churn_sweep".to_string(), Json::Arr(churn_points));
+    root.insert("event_driven_sweep".to_string(), Json::Arr(event_points));
     Ok(Json::Obj(root))
 }
 
@@ -523,6 +624,32 @@ fn main() -> anyhow::Result<()> {
                 o.churn.requeued,
                 o.churn.lost_work_tokens,
                 wall.elapsed().as_secs_f64(),
+            );
+        }
+    }
+    println!();
+    println!(
+        "### event-driven sweep (slo policy, jsq dispatch, Poisson {SCALING_RATE} r/s, \
+         {requests} requests; minclock = retired lockstep loop, event = next-event \
+         scheduler, parallel = event on 4 workers; digests must match per row group)"
+    );
+    println!(
+        "{:<9} {:<9} {:>10} {:>18} {:>8} {:>12}",
+        "replicas", "mode", "wall (ms)", "digest", "match", "goodput r/s"
+    );
+    for &replicas in &EVENT_REPLICAS {
+        let mut base_digest = 0u64;
+        for mode in EVENT_MODES {
+            let (o, wall) = run_event_point(&assets, replicas, requests, mode)?;
+            let digest = o.digest();
+            if mode == "minclock" {
+                base_digest = digest;
+            }
+            println!(
+                "{replicas:<9} {mode:<9} {:>10.1} {digest:>18x} {:>8} {:>12.3}",
+                wall * 1e3,
+                if digest == base_digest { "yes" } else { "NO" },
+                o.fleet.metrics.goodput_rps(),
             );
         }
     }

@@ -335,6 +335,15 @@ pub struct ServingConfig {
     /// re-route evacuees and rejects a non-empty schedule).  Empty (the
     /// default) is the churn-free cluster, tick for tick.
     pub churn: Vec<ChurnEvent>,
+    /// Worker threads for the cluster's inter-boundary advance phases
+    /// (CLI `serve-fleet --parallel N`).  1 (the default) advances
+    /// replicas serially; above 1, [`crate::serving::run_cluster`]
+    /// distributes independent replica work over up to this many
+    /// [`std::thread::scope`] workers — outcomes are bit-identical to
+    /// serial (the determinism suite pins it), only wall-clock changes.
+    /// Requires per-replica executors (engines must not share one);
+    /// ignored by the single-replica `run_fleet`.
+    pub parallel: usize,
 }
 
 impl Default for ServingConfig {
@@ -349,6 +358,7 @@ impl Default for ServingConfig {
             chunk_tokens: 0,
             replicas: 1,
             churn: Vec::new(),
+            parallel: 1,
         }
     }
 }

@@ -392,6 +392,14 @@ impl Engine {
         &self.assets.manifest.model
     }
 
+    /// Do two engines share one [`Executor`]?  Sharing is the cheap
+    /// default for serial sweeps (compiled artifacts and weight
+    /// literals reused), but executor state is single-thread confined,
+    /// so the parallel cluster scheduler rejects shared executors.
+    pub fn shares_executor(&self, other: &Engine) -> bool {
+        std::rc::Rc::ptr_eq(&self.exec, &other.exec)
+    }
+
     /// Current virtual time (the device's compute-availability horizon).
     pub fn clock(&self) -> f64 {
         self.timeline.gpu.free_at

@@ -6,7 +6,8 @@
 //! dymoe serve-fleet --model mixtral-mini --vram 16 --requests 24 --rate 0.25 \
 //!                   [--arrival poisson|bursty|ramp] [--sessions 8] [--sched fifo|rr|slo] \
 //!                   [--max-decode-batch 8] [--replicas 4] [--dispatch rr|jsq|affinity] \
-//!                   [--replica-hw 24 --replica-hw 12:8] [--fail 30@0] [--drain 45@1]
+//!                   [--replica-hw 24 --replica-hw 12:8] [--fail 30@0] [--drain 45@1] \
+//!                   [--parallel 4]
 //! dymoe experiment  <fig1|...|table3|all> [--items N] [--requests N] [--models a,b]
 //! dymoe timeline    --model mixtral-mini --vram 16
 //! ```
@@ -238,6 +239,10 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
     let dispatch = DispatchKind::parse(&args.get("dispatch", "rr"))?;
     let replicas = args.get_usize("replicas", 1)?.max(1);
     let max_sessions = args.get_usize("sessions", 8)?;
+    // Worker threads for inter-boundary replica ticking; outcomes are
+    // bit-identical to serial (--parallel 1), so this is purely a
+    // wall-clock knob.
+    let parallel = args.get_usize("parallel", 1)?.max(1);
     // Churn schedule: repeatable `--fail T@R` / `--drain T@R` events,
     // fired by the cluster in virtual-time order between ticks.
     let mut churn = Vec::new();
@@ -276,6 +281,7 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
         chunk_tokens: args.get_usize("chunk-tokens", 0)?,
         replicas,
         churn,
+        parallel,
     };
     // Heterogeneous replicas: each `--replica-hw VRAM[:PCIE[:TFLOPS]]`
     // occurrence defines one hardware class; specs cycle over the
@@ -324,10 +330,15 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
             .collect();
         println!("churn schedule: {}", sched.join(", "));
     }
+    if parallel > 1 {
+        println!("parallel ticking on {parallel} worker thread(s) (bit-identical to serial)");
+    }
 
-    // All replicas share the compiled executor (weights + artifacts are
-    // immutable); each owns its engine, cache, and virtual timeline.
-    let exec = Rc::new(Executor::new(assets.clone())?);
+    // Serial runs share one compiled executor across replicas (weights
+    // + artifacts are immutable, so this only saves compilation);
+    // parallel runs need one executor per replica because the executor
+    // holds thread-confined scratch state — run_cluster enforces this.
+    let shared_exec = if parallel > 1 { None } else { Some(Rc::new(Executor::new(assets.clone())?)) };
     let mut engines = Vec::with_capacity(replicas);
     let mut hw_labels = Vec::with_capacity(replicas);
     for i in 0..replicas {
@@ -340,12 +351,16 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
             spec.clone()
         };
         let strategy = make_strategy(&strat_name, &m, retention)?;
+        let exec_i = match &shared_exec {
+            Some(e) => e.clone(),
+            None => Rc::new(Executor::new(assets.clone())?),
+        };
         engines.push(Engine::with_executor(
             &assets,
             sys_i,
             strategy,
             EngineOptions { record_timeline: trace_out.is_some(), ..Default::default() },
-            exec.clone(),
+            exec_i,
         )?);
         hw_labels.push(label);
     }
@@ -658,6 +673,8 @@ fn usage() -> String {
      \x20              restarting with their original arrival times)]\n\
      \x20             [--drain T@R (repeatable: replica R stops receiving dispatches\n\
      \x20              at T and runs down what it already holds)]\n\
+     \x20             [--parallel N (tick independent replicas on N worker threads;\n\
+     \x20              bit-identical outcome to serial, wall-clock only)]\n\
      \x20             [--json [PATH] (write cluster + per-replica summary JSON)]\n\
      \x20             [--trace-out PATH (write a Perfetto/chrome://tracing-loadable\n\
      \x20              Chrome trace: one process per replica, per-channel threads\n\

@@ -92,7 +92,7 @@ pub struct TraceMeta {
 
 /// One scheduled interval on a resource, with the serving context that
 /// scheduled it (Fig.-1-style timelines; Chrome-trace export).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TraceEvent {
     pub kind: EventKind,
     pub label: String,

@@ -1,25 +1,51 @@
 //! Multi-replica edge cluster serving: a dispatcher in front of
-//! `Vec<Replica>`, advanced by min-clock next-event stepping (as in
-//! event-driven co-simulation).
+//! `Vec<Replica>`, advanced by a **next-event scheduler** over a
+//! binary-heap [`EventQueue`] of arrivals, churn events, and
+//! per-replica tick-completions.
 //!
-//! The event loop maintains one invariant: **no replica ticks past an
-//! undelivered arrival or an unfired churn event.**  Each iteration
-//! either (a) fires the next scheduled [`ChurnEvent`] — whenever its
-//! virtual time is at or before both the minimum clock among busy
-//! replicas and the next pending arrival — or (b) routes the oldest
-//! pending request to a replica via the [`DispatchPolicy`] — whenever
-//! its arrival time is at or before the minimum clock among busy
-//! replicas (the cluster's virtual "now"), or the whole cluster is idle
-//! (the fast-forward case) — or (c) ticks the busy replica with the
-//! smallest virtual clock (ties by index).  When a replica is picked to
-//! tick, every arrival up to its clock has therefore already been
-//! dispatched, which is exactly the admission discipline of the
-//! pre-refactor single-engine loop; with one replica and no churn the
-//! trace of enqueue/tick operations is identical, making `--replicas 1
-//! --dispatch rr` tick-for-tick equivalent to [`super::run_fleet`]
-//! (pinned in `tests/integration_cluster.rs`; the churn-free
-//! equivalence of the churn-capable loop is pinned in
-//! `tests/integration_churn.rs`).
+//! The scheduler maintains one invariant: **no replica ticks past an
+//! undelivered arrival or an unfired churn event.**  Every piece of
+//! cluster work is an event keyed `(virtual time, kind, seq)` — see
+//! [`super::events`] for the exact order — and the loop simply pops:
+//!
+//! * a **churn** event fires a scheduled [`ChurnEvent`] (same-instant
+//!   ties: before any arrival, so a failure at exactly an arrival's
+//!   time excludes that replica from its dispatch);
+//! * an **arrival** routes one request to a live replica via the
+//!   [`DispatchPolicy`] (before any replica at that clock ticks past
+//!   it); a replica woken from idle gets a tick-completion entry at its
+//!   current clock — which may lag the arrival; the engine
+//!   fast-forwards service internally, exactly as the single-engine
+//!   loop did;
+//! * a **tick-completion** advances replicas.  Between two boundary
+//!   events (the next churn or arrival) replicas do not interact —
+//!   dispatch and evacuation happen only at boundaries — so the
+//!   scheduler claims *every* tick entry due before the boundary at
+//!   once and advances each owner until its clock reaches the boundary
+//!   or it runs dry ([`Replica::advance_until`]).  Per-replica tick
+//!   sequences are identical to stepping one event at a time, which is
+//!   how the retired min-clock loop behaved.
+//!
+//! Idle replicas hold no tick entry and cost nothing — the min-clock
+//! loop's O(replicas) scan per tick is gone, which is what makes
+//! 16–64-replica sweeps tractable.  The retired loop is kept verbatim
+//! as [`run_cluster_minclock`]; `tests/integration_cluster.rs` and
+//! `tests/integration_churn.rs` pin the two bit-identical across
+//! dispatch × sched × chunk × churn, the same way PR 4 pinned
+//! `run_fleet`.
+//!
+//! # Parallel replica execution
+//!
+//! Because inter-boundary replica work is independent, the advance
+//! phase can run on [`std::thread::scope`] workers:
+//! [`crate::config::ServingConfig::parallel`] (CLI `--parallel N`)
+//! distributes the due replicas over up to `N` threads.  The partition
+//! affects wall-clock only — each replica's tick sequence, and
+//! therefore every outcome bit, is the same as serial; the determinism
+//! suite pins `--parallel 4` bit-identical to serial.  Engines must
+//! not share an [`Executor`] when `parallel > 1` (its staged-buffer
+//! and compiled-program caches are single-thread confined); the run
+//! rejects shared executors loudly.
 //!
 //! # Replica failure and drain
 //!
@@ -28,28 +54,41 @@
 //! replica stops receiving dispatches and runs down everything already
 //! dispatched to it; on **fail** the replica's queued *and* active
 //! (mid-prefill / mid-decode) sessions are extracted via
-//! [`Replica::evacuate`] and merged back into the pending queue, where
-//! the [`DispatchPolicy`] — offered only the still-live replicas —
-//! re-routes them.  Restarted sessions keep their **original** arrival
+//! [`Replica::evacuate`] and pushed back into the event queue as
+//! arrival events at their **original** arrival times (in the past, so
+//! they re-dispatch ahead of later traffic), where the
+//! [`DispatchPolicy`] — offered only the still-live replicas —
+//! re-routes them.  Restarted sessions keep their original arrival
 //! times, so the SLO impact of churn (queue delay, TTFT) is reported
 //! honestly — and service is gated at the failure time, so a restart
 //! can never begin "before" the failure on a receiving replica whose
 //! virtual clock lags the event; the work the dead replica had already
 //! done on them is discarded and counted as
-//! [`ChurnStats::lost_work_tokens`].  Request
-//! conservation (every trace id completes exactly once) holds across
-//! any churn schedule that leaves a live replica to serve it; a
-//! schedule that fails or drains *every* replica while requests are
-//! still outstanding is rejected with an error at the moment a request
-//! has nowhere to go.
+//! [`ChurnStats::lost_work_tokens`].  Request conservation (every
+//! trace id completes exactly once) holds across any churn schedule
+//! that leaves a live replica to serve it; a schedule that fails or
+//! drains *every* replica while requests are still outstanding is
+//! rejected with an error at the moment a request has nowhere to go.
+//!
+//! A failed replica also stops accruing **capacity**: cluster
+//! utilization divides busy time by the sum of per-replica live
+//! intervals (birth → failure, or the whole span for replicas that
+//! never failed — draining replicas keep serving admitted work and
+//! count in full), and the load-imbalance statistic weighs each
+//! replica's token load by its live time, so a cluster whose survivors
+//! are balanced after an early failure reads as balanced.  On a
+//! churn-free (or failure-free) run both reduce bit-exactly to the
+//! classic `replicas × makespan` forms.
 //!
 //! Replicas may be heterogeneous (different [`HardwareConfig`]s — a
 //! big.LITTLE edge cluster): each owns its engine, expert cache, and
 //! virtual timeline, so a slow replica simply surfaces as a high clock
-//! the stepper visits less often.
+//! the event queue visits less often.
 //!
 //! [`HardwareConfig`]: crate::config::HardwareConfig
 //! [`ChurnEvent`]: crate::config::ChurnEvent
+//! [`Executor`]: crate::model::executor::Executor
+//! [`DispatchPolicy`]: super::policy::DispatchPolicy
 
 use std::collections::{HashMap, VecDeque};
 
@@ -61,7 +100,11 @@ use crate::memory::BusyTotals;
 use crate::trace::TraceCapture;
 
 use super::arrival::TimedRequest;
-use super::metrics::{load_imbalance, ChurnStats, FleetMetrics, ResourceUtil};
+use super::events::{Event, EventPayload, EventQueue};
+use super::metrics::{
+    load_imbalance, load_imbalance_weighted, ChurnStats, FleetMetrics, ResourceUtil,
+};
+use super::policy::DispatchPolicy;
 use super::replica::{Replica, ReplicaState};
 use super::{FleetConfig, FleetOutcome};
 
@@ -92,31 +135,95 @@ pub struct ReplicaBreakdown {
 #[derive(Debug, Clone)]
 pub struct ClusterOutcome {
     /// Cluster-merged outcome: union of per-request records (completion
-    /// order), summed counters, utilization over `replicas x makespan`.
+    /// order), summed counters, utilization over the replicas' summed
+    /// live capacity (`replicas x makespan` when none failed).
     pub fleet: FleetOutcome,
     /// Per-replica breakdowns, indexed by replica id.
     pub replicas: Vec<ReplicaBreakdown>,
     /// `max / mean` of per-replica emitted-token loads (1.0 = perfectly
-    /// balanced, `replicas` = one replica served everything).
+    /// balanced, `replicas` = one replica served everything).  When a
+    /// replica failed mid-run, loads are weighted by live time — tokens
+    /// per live second — so balanced survivors read as balanced; see
+    /// [`load_imbalance_weighted`].
     pub load_imbalance: f64,
     /// What the run's churn schedule cost (all zero on a churn-free
     /// run).
     pub churn: ChurnStats,
 }
 
-/// Serve an open-loop trace on a cluster of replicas to completion.
-///
-/// Each engine becomes one [`Replica`] (they may carry different
-/// [`crate::config::HardwareConfig`]s); `cfg.dispatch` routes every
-/// arriving request to a live replica, replicas advance in virtual-time
-/// order, and `cfg.serving.churn` events fire between ticks.  With a
-/// single engine and no churn this reduces exactly to
-/// [`super::run_fleet`].
-pub fn run_cluster(
-    engines: &mut [Engine],
+impl ClusterOutcome {
+    /// Order-sensitive FNV-1a digest over the outcome's observable
+    /// payload: every per-request record field, the merged counters,
+    /// utilization, imbalance, churn stats, and per-replica breakdown
+    /// shape.  Digest equality across two runs is the bit-identity
+    /// check the parallel-determinism suite and `bench_serving`'s
+    /// `event_driven_sweep` record.
+    pub fn digest(&self) -> u64 {
+        fn mix(h: &mut u64, bytes: &[u8]) {
+            for &b in bytes {
+                *h ^= b as u64;
+                *h = h.wrapping_mul(0x0000_0100_0000_01B3);
+            }
+        }
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for r in &self.fleet.per_request {
+            mix(&mut h, &(r.id as u64).to_le_bytes());
+            for v in [r.arrival, r.queue_delay, r.ttft, r.tpot, r.finished_at, r.max_stall] {
+                mix(&mut h, &v.to_bits().to_le_bytes());
+            }
+            mix(&mut h, &(r.tokens as u64).to_le_bytes());
+            mix(&mut h, &(r.retries as u64).to_le_bytes());
+            mix(&mut h, &[u8::from(r.ttft_ok), u8::from(r.tpot_ok)]);
+        }
+        for c in [
+            self.fleet.metrics.completed,
+            self.fleet.metrics.tokens_total,
+            self.fleet.steps,
+            self.fleet.peak_concurrency,
+            self.churn.failed,
+            self.churn.drained,
+            self.churn.requeued,
+            self.churn.max_retries,
+        ] {
+            mix(&mut h, &(c as u64).to_le_bytes());
+        }
+        mix(&mut h, &self.fleet.peak_kv_bytes.to_le_bytes());
+        mix(&mut h, &self.churn.lost_work_tokens.to_le_bytes());
+        for v in [
+            self.load_imbalance,
+            self.fleet.utilization.gpu,
+            self.fleet.utilization.cpu,
+            self.fleet.utilization.pcie,
+            self.fleet.utilization.nvme,
+            self.fleet.metrics.first_arrival,
+            self.fleet.metrics.last_completion,
+        ] {
+            mix(&mut h, &v.to_bits().to_le_bytes());
+        }
+        for b in &self.replicas {
+            mix(&mut h, &(b.dispatched as u64).to_le_bytes());
+            let state = match b.state {
+                ReplicaState::Live => 0u8,
+                ReplicaState::Draining => 1,
+                ReplicaState::Dead => 2,
+            };
+            mix(&mut h, &[state]);
+            mix(&mut h, &(b.outcome.per_request.len() as u64).to_le_bytes());
+            mix(&mut h, &(b.trace.events.len() as u64).to_le_bytes());
+            mix(&mut h, &(b.trace.samples.len() as u64).to_le_bytes());
+        }
+        h
+    }
+}
+
+/// Validate a cluster run's inputs and return the churn schedule sorted
+/// by virtual time (ties by schedule order — `sort_by` is stable) and
+/// the trace sorted by `(arrival, id)`.
+fn prepare(
+    engines: &[Engine],
     trace: Vec<TimedRequest>,
     cfg: &FleetConfig,
-) -> Result<ClusterOutcome> {
+) -> Result<(Vec<ChurnEvent>, Vec<TimedRequest>)> {
     ensure!(!engines.is_empty(), "cluster needs at least one replica engine");
     let n = engines.len();
     // The engine slice is authoritative for cluster size; an explicitly
@@ -128,48 +235,443 @@ pub fn run_cluster(
         "config says {} replicas but {n} engines were provided",
         cfg.serving.replicas
     );
-    // Churn schedule: validated up front, fired in virtual-time order
-    // (ties by schedule order — `sort_by` is stable).
-    let mut events: VecDeque<ChurnEvent> = {
-        let mut e = cfg.serving.churn.clone();
-        for ev in &e {
-            ensure!(
-                ev.replica < n,
-                "churn event {} {}@{} targets a replica outside the cluster of {n}",
-                ev.kind.name(),
-                ev.at,
-                ev.replica
-            );
-            ensure!(
-                ev.at.is_finite() && ev.at >= 0.0,
-                "churn event {} at {} must have a finite non-negative time",
-                ev.kind.name(),
-                ev.at
-            );
+    let mut events = cfg.serving.churn.clone();
+    for ev in &events {
+        ensure!(
+            ev.replica < n,
+            "churn event {} {}@{} targets a replica outside the cluster of {n}",
+            ev.kind.name(),
+            ev.at,
+            ev.replica
+        );
+        ensure!(
+            ev.at.is_finite() && ev.at >= 0.0,
+            "churn event {} at {} must have a finite non-negative time",
+            ev.kind.name(),
+            ev.at
+        );
+    }
+    events.sort_by(|a, b| a.at.total_cmp(&b.at));
+    let mut sorted = trace;
+    sorted.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
+    Ok((events, sorted))
+}
+
+/// Mutable cluster-run state shared by the event-driven scheduler and
+/// the retired min-clock reference loop, so the two can only differ in
+/// *when* they invoke the same churn / dispatch / fold actions — the
+/// equivalence the pinning tests then verify is purely about event
+/// order.
+struct ClusterSim<'e> {
+    replicas: Vec<Replica<'e>>,
+    dispatch: Box<dyn DispatchPolicy>,
+    dispatched: Vec<usize>,
+    churn: ChurnStats,
+    /// Per-request re-dispatch counts (patched into the completed
+    /// records at the end).
+    retries: HashMap<usize, usize>,
+    /// Service gates for requeued requests: a restart cannot begin
+    /// before the failure that caused it, even on a receiving replica
+    /// whose virtual clock lags the event (metrics stay keyed to the
+    /// original arrival).  Later failures overwrite with their (later)
+    /// event times.
+    not_before: HashMap<usize, f64>,
+    /// Failure instants, indexed by replica — the end of each failed
+    /// replica's live interval for capacity accounting.
+    died_at: Vec<Option<f64>>,
+}
+
+impl<'e> ClusterSim<'e> {
+    fn new(engines: &'e mut [Engine], cfg: &FleetConfig) -> ClusterSim<'e> {
+        let n = engines.len();
+        ClusterSim {
+            replicas: engines.iter_mut().map(|e| Replica::new(e, cfg)).collect(),
+            dispatch: cfg.dispatch.build(),
+            dispatched: vec![0usize; n],
+            churn: ChurnStats::default(),
+            retries: HashMap::new(),
+            not_before: HashMap::new(),
+            died_at: vec![None; n],
         }
-        e.sort_by(|a, b| a.at.total_cmp(&b.at));
-        e.into()
-    };
+    }
+
+    /// Fire one scheduled churn event.  A failure returns the evacuated
+    /// requests (original arrival times, oldest first) for the caller
+    /// to merge back into its pending structure.
+    fn fire_churn(&mut self, e: ChurnEvent) -> Vec<TimedRequest> {
+        match e.kind {
+            ChurnKind::Drain => {
+                if self.replicas[e.replica].begin_drain() {
+                    self.churn.drained += 1;
+                    self.replicas[e.replica].mark(e.at, "drain");
+                }
+                Vec::new()
+            }
+            ChurnKind::Fail => {
+                if self.replicas[e.replica].state() == ReplicaState::Dead {
+                    return Vec::new();
+                }
+                self.replicas[e.replica].mark(e.at, "fail");
+                let evac = self.replicas[e.replica].evacuate();
+                self.died_at[e.replica] = Some(e.at);
+                self.churn.failed += 1;
+                self.churn.requeued += evac.requests.len();
+                self.churn.lost_work_tokens += evac.lost_tokens;
+                for r in &evac.requests {
+                    *self.retries.entry(r.id).or_default() += 1;
+                    self.not_before.insert(r.id, e.at);
+                }
+                evac.requests
+            }
+        }
+    }
+
+    /// Route one arrival through the dispatch policy (offered only the
+    /// live replicas) and deliver it.  Returns the chosen replica index
+    /// and whether it was idle before delivery (an idle replica needs a
+    /// fresh tick-completion entry to wake it).
+    fn dispatch(&mut self, req: TimedRequest) -> Result<(usize, bool)> {
+        // The policy returns a *position* into the liveness-filtered
+        // view slice, mapped back to the replica id through `index`.
+        let views: Vec<_> = self
+            .replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.accepts_dispatch())
+            .map(|(i, r)| r.dispatch_view(i))
+            .collect();
+        ensure!(
+            !views.is_empty(),
+            "request {} has no live replica to dispatch to: the churn schedule \
+             failed/drained the whole cluster with work outstanding",
+            req.id
+        );
+        let pos = self.dispatch.route(&req, &views);
+        ensure!(
+            pos < views.len(),
+            "dispatch policy {} routed request {} to position {pos} of {}",
+            self.dispatch.name(),
+            req.id,
+            views.len()
+        );
+        let idx = views[pos].index;
+        self.dispatched[idx] += 1;
+        let was_idle = !self.replicas[idx].has_work();
+        match self.not_before.get(&req.id).copied() {
+            Some(gate) => self.replicas[idx].enqueue_not_before(req, gate),
+            None => self.replicas[idx].enqueue(req),
+        }
+        Ok((idx, was_idle))
+    }
+
+    /// Is a popped tick-completion entry still current?  Stale entries
+    /// (lazy deletion) belong to replicas that were evacuated or have
+    /// already ticked past the cached clock.
+    fn tick_entry_valid(&self, replica: usize, at: f64) -> bool {
+        let r = &self.replicas[replica];
+        r.has_work() && r.clock() == at
+    }
+
+    /// Fold the per-replica runs into the cluster view.
+    fn finalize(self, total_requests: usize) -> Result<ClusterOutcome> {
+        let ClusterSim { replicas, dispatched, mut churn, retries, died_at, .. } = self;
+        let n = replicas.len();
+        churn.max_retries = retries.values().copied().max().unwrap_or(0);
+        let runs: Vec<_> = replicas.into_iter().map(|r| r.finish()).collect();
+        let mut metrics = FleetMetrics::default();
+        let mut fleet = FleetOutcome::default();
+        let mut busy_total = BusyTotals::default();
+        let mut breakdowns = Vec::with_capacity(n);
+        for (run, count) in runs.into_iter().zip(&dispatched) {
+            metrics.merge(&run.outcome.metrics);
+            fleet.per_request.extend(run.outcome.per_request.iter().cloned());
+            // Cluster-wide concurrency / KV peaks are summed per-replica
+            // high-water marks: an upper bound on simultaneous load (the
+            // marks need not coincide in virtual time), exact for one
+            // replica.
+            fleet.peak_concurrency += run.outcome.peak_concurrency;
+            fleet.peak_kv_bytes += run.outcome.peak_kv_bytes;
+            fleet.steps += run.outcome.steps;
+            fleet.dedup.merge(&run.outcome.dedup);
+            fleet.phase.merge(&run.outcome.phase);
+            busy_total = busy_total.plus(&run.busy);
+            breakdowns.push(ReplicaBreakdown {
+                outcome: run.outcome,
+                dispatched: *count,
+                busy: run.busy,
+                state: run.state,
+                trace: run.trace,
+            });
+        }
+        // Completion order across the cluster: a stable merge by completion
+        // time (per-replica records are already completion-ordered).  A
+        // single replica's list is returned untouched — not even a stable
+        // sort — so the one-replica cluster is bit-identical to `run_fleet`
+        // (same-tick completions can differ by a float ulp in
+        // `finished_at`, which a sort could otherwise reorder).
+        if n > 1 {
+            fleet
+                .per_request
+                .sort_by(|a, b| a.finished_at.total_cmp(&b.finished_at));
+        }
+        // Attribute re-dispatches to the requests that suffered them (both
+        // in the merged view and the per-replica breakdowns).
+        if !retries.is_empty() {
+            for r in &mut fleet.per_request {
+                r.retries = retries.get(&r.id).copied().unwrap_or(0);
+            }
+            for b in &mut breakdowns {
+                for r in &mut b.outcome.per_request {
+                    r.retries = retries.get(&r.id).copied().unwrap_or(0);
+                }
+            }
+        }
+        ensure!(
+            metrics.completed == total_requests,
+            "cluster lost requests: {} of {total_requests} completed",
+            metrics.completed
+        );
+        // Capacity accounting: a failed replica stops existing at its
+        // failure instant, so it contributes capacity (and is weighed in
+        // the balance statistic) only over `[span start, failure)`.
+        // Draining replicas keep serving admitted work and count in full.
+        // Without failures both forms reduce bit-exactly to the classic
+        // `replicas × makespan` denominator and raw `max/mean` loads.
+        let span = metrics.makespan();
+        let start = metrics.first_arrival;
+        let live: Vec<f64> = died_at
+            .iter()
+            .map(|d| (d.unwrap_or(metrics.last_completion) - start).clamp(0.0, span))
+            .collect();
+        let any_failure = died_at.iter().any(|d| d.is_some());
+        fleet.utilization = if any_failure {
+            ResourceUtil::from_capacity(&busy_total, live.iter().sum())
+        } else {
+            ResourceUtil::from_busy(&busy_total, span, n)
+        };
+        fleet.metrics = metrics;
+        let loads: Vec<f64> = breakdowns
+            .iter()
+            .map(|b| b.outcome.metrics.tokens_total as f64)
+            .collect();
+        let imbalance = if any_failure {
+            load_imbalance_weighted(&loads, &live)
+        } else {
+            load_imbalance(&loads)
+        };
+        Ok(ClusterOutcome {
+            fleet,
+            replicas: breakdowns,
+            load_imbalance: imbalance,
+            churn,
+        })
+    }
+}
+
+/// Moves one replica's `&mut` across a scoped-thread boundary.
+///
+/// `Replica` is `!Send` because its engine's object graph uses `Rc` /
+/// `RefCell` (the executor's staged-buffer cache, the runtime's
+/// compiled-program cache, the metrics `Series` percentile cache).  The
+/// parallel advance phase is still sound because the graphs are
+/// **disjoint and single-thread confined**: [`run_cluster`] rejects
+/// engines sharing an executor when `parallel > 1`, every other piece
+/// of replica state is owned, the only cross-replica sharing left is
+/// the immutable `Arc<ModelAssets>` (atomically refcounted plain data,
+/// no interior mutability), and each wrapper moves to exactly one
+/// worker for the duration of one phase — the spawning thread touches
+/// no replica until `std::thread::scope` has joined every worker.
+struct SendMut<'a, 'e>(&'a mut Replica<'e>);
+
+// SAFETY: see the type docs — per-replica object graphs are disjoint
+// (distinct executors enforced at entry), exactly one thread accesses
+// a given replica during an advance phase, and the scope joins before
+// the spawner resumes.
+unsafe impl Send for SendMut<'_, '_> {}
+
+/// Advance every replica in `due` until its clock reaches `horizon` or
+/// it runs out of work.  Between two boundary events replicas do not
+/// interact — dispatch and evacuation happen only at boundaries — so
+/// the per-replica tick sequences are independent and the advance
+/// order (serial, or parallel over up to `parallel` workers) cannot
+/// affect any outcome bit.  `due` must be sorted ascending.
+fn advance(
+    replicas: &mut [Replica<'_>],
+    due: &[usize],
+    horizon: f64,
+    parallel: usize,
+) -> Result<()> {
+    if parallel <= 1 || due.len() <= 1 {
+        for &i in due {
+            replicas[i]
+                .advance_until(horizon)
+                .with_context(|| format!("replica {i} tick"))?;
+        }
+        return Ok(());
+    }
+    let workers = parallel.min(due.len());
+    // Round-robin the due replicas over the workers; the partition only
+    // affects wall-clock, never outcomes.
+    let mut parts: Vec<Vec<(usize, SendMut<'_, '_>)>> =
+        (0..workers).map(|_| Vec::new()).collect();
+    for (k, (i, r)) in replicas
+        .iter_mut()
+        .enumerate()
+        .filter(|(i, _)| due.binary_search(i).is_ok())
+        .enumerate()
+    {
+        parts[k % workers].push((i, SendMut(r)));
+    }
+    let mut results: Vec<(usize, Result<()>)> = std::thread::scope(|s| {
+        let handles: Vec<_> = parts
+            .into_iter()
+            .map(|part| {
+                s.spawn(move || {
+                    part.into_iter()
+                        .map(|(i, slot)| {
+                            let res = slot.0.advance_until(horizon);
+                            (i, res)
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| match h.join() {
+                Ok(v) => v,
+                Err(p) => std::panic::resume_unwind(p),
+            })
+            .collect()
+    });
+    // Deterministic error reporting: lowest replica index first, as the
+    // serial order would have surfaced it.
+    results.sort_by_key(|(i, _)| *i);
+    for (i, res) in results {
+        res.with_context(|| format!("replica {i} tick"))?;
+    }
+    Ok(())
+}
+
+/// Serve an open-loop trace on a cluster of replicas to completion.
+///
+/// Each engine becomes one [`Replica`] (they may carry different
+/// [`crate::config::HardwareConfig`]s); `cfg.dispatch` routes every
+/// arriving request to a live replica, replicas advance in virtual-time
+/// order driven by the event queue, and `cfg.serving.churn` events fire
+/// at their scheduled instants.  With a single engine and no churn this
+/// reduces exactly to [`super::run_fleet`].
+///
+/// `cfg.serving.parallel > 1` runs the inter-boundary advance phases on
+/// scoped worker threads — bit-identical outcomes, engines must not
+/// share an executor.
+pub fn run_cluster(
+    engines: &mut [Engine],
+    trace: Vec<TimedRequest>,
+    cfg: &FleetConfig,
+) -> Result<ClusterOutcome> {
+    let parallel = cfg.serving.parallel.max(1);
     let total_requests = trace.len();
-    let mut pending: VecDeque<TimedRequest> = {
-        let mut t = trace;
-        t.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
-        t.into()
-    };
-    let mut replicas: Vec<Replica> =
-        engines.iter_mut().map(|e| Replica::new(e, cfg)).collect();
-    let mut dispatch = cfg.dispatch.build();
-    let mut dispatched = vec![0usize; n];
-    let mut churn = ChurnStats::default();
-    // Per-request re-dispatch counts (patched into the completed
-    // records at the end).
-    let mut retries: HashMap<usize, usize> = HashMap::new();
-    // Service gates for requeued requests: a restart cannot begin
-    // before the failure that caused it, even on a receiving replica
-    // whose virtual clock lags the event (metrics stay keyed to the
-    // original arrival).  Later failures overwrite with their (later)
-    // event times.
-    let mut not_before: HashMap<usize, f64> = HashMap::new();
+    let (churn_events, arrivals) = prepare(engines, trace, cfg)?;
+    if parallel > 1 {
+        // Executor state (staged-buffer / compiled-program caches) is
+        // single-thread confined; replicas advancing concurrently must
+        // each own their executor.
+        for i in 0..engines.len() {
+            for j in (i + 1)..engines.len() {
+                ensure!(
+                    !engines[i].shares_executor(&engines[j]),
+                    "parallel cluster execution ({parallel} workers) needs per-replica \
+                     executors, but engines {i} and {j} share one; construct each engine \
+                     with its own Executor (serve-fleet --parallel does this) or run serial"
+                );
+            }
+        }
+    }
+    let mut q = EventQueue::new();
+    for (pos, e) in churn_events.into_iter().enumerate() {
+        q.push(Event::churn(pos as u64, e));
+    }
+    for r in arrivals {
+        q.push(Event::arrival(r));
+    }
+    let mut sim = ClusterSim::new(engines, cfg);
+    while let Some(ev) = q.pop() {
+        match ev.payload {
+            EventPayload::Churn(e) => {
+                // Evacuees re-enter as arrival events at their original
+                // (past) arrival times: the heap pops them ahead of
+                // later traffic, exactly as a re-queued request should.
+                for r in sim.fire_churn(e) {
+                    q.push(Event::arrival(r));
+                }
+            }
+            EventPayload::Arrival(req) => {
+                let (idx, was_idle) = sim.dispatch(req)?;
+                if was_idle {
+                    // Wake the replica: one tick entry at its current
+                    // clock (which may lag the arrival — the engine
+                    // fast-forwards service internally).  Busy replicas
+                    // already hold their entry; enqueue moves no clock.
+                    q.push(Event::tick(sim.replicas[idx].clock(), idx));
+                }
+            }
+            EventPayload::Tick { replica } => {
+                // Claim every tick-completion due before the next
+                // boundary (churn / arrival) event: heap order pops
+                // them consecutively, and a tick at exactly the
+                // boundary instant sorts *after* the boundary, so the
+                // claimed set is exactly the replicas that must advance
+                // to the boundary.
+                let mut due: Vec<usize> = Vec::new();
+                if sim.tick_entry_valid(replica, ev.at) {
+                    due.push(replica);
+                }
+                while q.peek_is_tick() {
+                    let t = q.pop().expect("peeked tick entry");
+                    let EventPayload::Tick { replica: j } = t.payload else {
+                        unreachable!("peek_is_tick returned a non-tick event");
+                    };
+                    if sim.tick_entry_valid(j, t.at) && !due.contains(&j) {
+                        due.push(j);
+                    }
+                }
+                let horizon = q.peek_at().unwrap_or(f64::INFINITY);
+                due.sort_unstable();
+                advance(&mut sim.replicas, &due, horizon, parallel)?;
+                for &i in &due {
+                    if sim.replicas[i].has_work() {
+                        q.push(Event::tick(sim.replicas[i].clock(), i));
+                    }
+                }
+            }
+        }
+    }
+    sim.finalize(total_requests)
+}
+
+/// The retired min-clock lockstep loop, kept verbatim as the reference
+/// implementation [`run_cluster`] is pinned against (the same way PR 4
+/// kept `run_fleet` as the single-replica reference) and as the
+/// wall-clock baseline of `bench_serving`'s `event_driven_sweep`.
+///
+/// Each iteration rescans every replica for the minimum busy clock
+/// (ties by index), fires any churn event due at or before both that
+/// clock and the next pending arrival, else delivers the next arrival
+/// due at or before that clock, else ticks the min-clock replica once.
+/// O(replicas) per tick even when most replicas are idle — the cost
+/// the event-driven scheduler removes.  Outcomes are bit-identical to
+/// [`run_cluster`]; prefer that entry point everywhere else.
+pub fn run_cluster_minclock(
+    engines: &mut [Engine],
+    trace: Vec<TimedRequest>,
+    cfg: &FleetConfig,
+) -> Result<ClusterOutcome> {
+    let total_requests = trace.len();
+    let (churn_events, arrivals) = prepare(engines, trace, cfg)?;
+    let mut events: VecDeque<ChurnEvent> = churn_events.into();
+    let mut pending: VecDeque<TimedRequest> = arrivals.into();
+    let mut sim = ClusterSim::new(engines, cfg);
 
     loop {
         // The cluster's virtual "now": the smallest clock among replicas
@@ -177,7 +679,7 @@ pub fn run_cluster(
         // work (evacuated) and draining replicas keep ticking theirs.
         let next_tick: Option<usize> = {
             let mut best: Option<(f64, usize)> = None;
-            for (i, r) in replicas.iter().enumerate() {
+            for (i, r) in sim.replicas.iter().enumerate() {
                 if !r.has_work() {
                     continue;
                 }
@@ -192,7 +694,7 @@ pub fn run_cluster(
             }
             best.map(|(_, i)| i)
         };
-        let tick_clock = next_tick.map(|i| replicas[i].clock());
+        let tick_clock = next_tick.map(|i| sim.replicas[i].clock());
 
         // Churn events fire in virtual-time order between ticks: before
         // any replica ticks past them and before any later arrival is
@@ -216,40 +718,17 @@ pub fn run_cluster(
         };
         if fire_event {
             let e = events.pop_front().unwrap();
-            match e.kind {
-                ChurnKind::Drain => {
-                    if replicas[e.replica].begin_drain() {
-                        churn.drained += 1;
-                        replicas[e.replica].mark(e.at, "drain");
-                    }
-                }
-                ChurnKind::Fail => {
-                    if replicas[e.replica].state() != ReplicaState::Dead {
-                        replicas[e.replica].mark(e.at, "fail");
-                        let evac = replicas[e.replica].evacuate();
-                        churn.failed += 1;
-                        churn.requeued += evac.requests.len();
-                        churn.lost_work_tokens += evac.lost_tokens;
-                        for r in &evac.requests {
-                            *retries.entry(r.id).or_default() += 1;
-                            not_before.insert(r.id, e.at);
-                        }
-                        if !evac.requests.is_empty() {
-                            // Merge the evacuees back into the pending
-                            // queue in arrival order: their arrivals are
-                            // in the past, so they re-dispatch ahead of
-                            // later traffic, exactly as a re-queued
-                            // request should.
-                            let mut all: Vec<TimedRequest> =
-                                std::mem::take(&mut pending).into_iter().collect();
-                            all.extend(evac.requests);
-                            all.sort_by(|a, b| {
-                                a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id))
-                            });
-                            pending = all.into();
-                        }
-                    }
-                }
+            let evac = sim.fire_churn(e);
+            if !evac.is_empty() {
+                // Merge the evacuees back into the pending queue in
+                // arrival order: their arrivals are in the past, so
+                // they re-dispatch ahead of later traffic, exactly as
+                // a re-queued request should.
+                let mut all: Vec<TimedRequest> =
+                    std::mem::take(&mut pending).into_iter().collect();
+                all.extend(evac);
+                all.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
+                pending = all.into();
             }
             continue;
         }
@@ -263,115 +742,19 @@ pub fn run_cluster(
             (None, Some(_)) => true,
             // An arrival at or before the cluster's virtual now must be
             // routed before anyone ticks past it.
-            (Some(i), Some(r)) => r.arrival <= replicas[i].clock(),
+            (Some(i), Some(r)) => r.arrival <= sim.replicas[i].clock(),
             (Some(_), None) => false,
         };
 
         if deliver {
             let req = pending.pop_front().unwrap();
-            // Offer the dispatcher only the live replicas; the policy
-            // returns a *position* into this slice, mapped back to the
-            // replica id through the view's `index`.
-            let views: Vec<_> = replicas
-                .iter()
-                .enumerate()
-                .filter(|(_, r)| r.accepts_dispatch())
-                .map(|(i, r)| r.dispatch_view(i))
-                .collect();
-            ensure!(
-                !views.is_empty(),
-                "request {} has no live replica to dispatch to: the churn schedule \
-                 failed/drained the whole cluster with work outstanding",
-                req.id
-            );
-            let pos = dispatch.route(&req, &views);
-            ensure!(
-                pos < views.len(),
-                "dispatch policy {} routed request {} to position {pos} of {}",
-                dispatch.name(),
-                req.id,
-                views.len()
-            );
-            let idx = views[pos].index;
-            dispatched[idx] += 1;
-            match not_before.get(&req.id).copied() {
-                Some(gate) => replicas[idx].enqueue_not_before(req, gate),
-                None => replicas[idx].enqueue(req),
-            }
+            sim.dispatch(req)?;
         } else {
             let i = next_tick.expect("no tick target with no arrival to deliver");
-            replicas[i]
+            sim.replicas[i]
                 .tick()
                 .with_context(|| format!("replica {i} tick"))?;
         }
     }
-    churn.max_retries = retries.values().copied().max().unwrap_or(0);
-
-    // Fold the per-replica runs into the cluster view.
-    let runs: Vec<_> = replicas.into_iter().map(|r| r.finish()).collect();
-    let mut metrics = FleetMetrics::default();
-    let mut fleet = FleetOutcome::default();
-    let mut busy_total = BusyTotals::default();
-    let mut breakdowns = Vec::with_capacity(n);
-    for (run, count) in runs.into_iter().zip(&dispatched) {
-        metrics.merge(&run.outcome.metrics);
-        fleet.per_request.extend(run.outcome.per_request.iter().cloned());
-        // Cluster-wide concurrency / KV peaks are summed per-replica
-        // high-water marks: an upper bound on simultaneous load (the
-        // marks need not coincide in virtual time), exact for one
-        // replica.
-        fleet.peak_concurrency += run.outcome.peak_concurrency;
-        fleet.peak_kv_bytes += run.outcome.peak_kv_bytes;
-        fleet.steps += run.outcome.steps;
-        fleet.dedup.merge(&run.outcome.dedup);
-        fleet.phase.merge(&run.outcome.phase);
-        busy_total = busy_total.plus(&run.busy);
-        breakdowns.push(ReplicaBreakdown {
-            outcome: run.outcome,
-            dispatched: *count,
-            busy: run.busy,
-            state: run.state,
-            trace: run.trace,
-        });
-    }
-    // Completion order across the cluster: a stable merge by completion
-    // time (per-replica records are already completion-ordered).  A
-    // single replica's list is returned untouched — not even a stable
-    // sort — so the one-replica cluster is bit-identical to `run_fleet`
-    // (same-tick completions can differ by a float ulp in
-    // `finished_at`, which a sort could otherwise reorder).
-    if n > 1 {
-        fleet
-            .per_request
-            .sort_by(|a, b| a.finished_at.total_cmp(&b.finished_at));
-    }
-    // Attribute re-dispatches to the requests that suffered them (both
-    // in the merged view and the per-replica breakdowns).
-    if !retries.is_empty() {
-        for r in &mut fleet.per_request {
-            r.retries = retries.get(&r.id).copied().unwrap_or(0);
-        }
-        for b in &mut breakdowns {
-            for r in &mut b.outcome.per_request {
-                r.retries = retries.get(&r.id).copied().unwrap_or(0);
-            }
-        }
-    }
-    ensure!(
-        metrics.completed == total_requests,
-        "cluster lost requests: {} of {total_requests} completed",
-        metrics.completed
-    );
-    fleet.utilization = ResourceUtil::from_busy(&busy_total, metrics.makespan(), n);
-    fleet.metrics = metrics;
-    let loads: Vec<f64> = breakdowns
-        .iter()
-        .map(|b| b.outcome.metrics.tokens_total as f64)
-        .collect();
-    Ok(ClusterOutcome {
-        fleet,
-        replicas: breakdowns,
-        load_imbalance: load_imbalance(&loads),
-        churn,
-    })
+    sim.finalize(total_requests)
 }

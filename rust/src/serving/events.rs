@@ -1,0 +1,268 @@
+//! The cluster scheduler's event queue: a binary min-heap over the
+//! three event kinds that drive a cluster run — scheduled churn,
+//! request arrivals, and per-replica tick-completions — keyed by
+//! virtual time with a fixed same-instant precedence.
+//!
+//! Ordering contract (pinned by the unit tests below and by the
+//! engine-free property test in `tests/integration_cluster.rs`):
+//!
+//! 1. **Virtual time** first (`f64::total_cmp` on `at`).
+//! 2. At the same instant, **churn before arrival before tick**.  This
+//!    reproduces the retired min-clock loop's `<=` comparisons exactly:
+//!    a failure at an arrival's time excludes the failed replica from
+//!    that arrival's dispatch, and an arrival at a busy replica's clock
+//!    is routed before the replica ticks past it.
+//! 3. Within a kind, by `seq`: churn events carry their **schedule
+//!    order** (the stable sort the config validation performs), arrivals
+//!    their request id (the `(arrival, id)` order the pending queue used
+//!    to be sorted by), ticks their replica index (the min-clock loop
+//!    broke clock ties by lowest index).
+//!
+//! Tick entries are *cached clocks*, not promises: the queue never
+//! removes an entry when a replica is evacuated, so consumers validate
+//! on pop (a tick is stale unless the replica still has work and its
+//! clock still equals the entry's `at`) — classic lazy deletion.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::config::ChurnEvent;
+
+use super::arrival::TimedRequest;
+
+/// What a popped event asks the scheduler to do.
+#[derive(Debug, Clone)]
+pub enum EventPayload {
+    /// Fire a scheduled churn event (fail / drain).
+    Churn(ChurnEvent),
+    /// Route one arriving request through the dispatch policy.
+    Arrival(TimedRequest),
+    /// A replica's next scheduling step is due (`at` is the clock the
+    /// replica held when the entry was pushed).
+    Tick { replica: usize },
+}
+
+/// One scheduled event.
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// Virtual time the event is due at.
+    pub at: f64,
+    /// Same-kind tie-break (schedule order / request id / replica
+    /// index — see the module docs).
+    pub seq: u64,
+    pub payload: EventPayload,
+}
+
+impl Event {
+    pub fn churn(schedule_pos: u64, e: ChurnEvent) -> Event {
+        Event { at: e.at, seq: schedule_pos, payload: EventPayload::Churn(e) }
+    }
+
+    pub fn arrival(r: TimedRequest) -> Event {
+        Event { at: r.arrival, seq: r.id as u64, payload: EventPayload::Arrival(r) }
+    }
+
+    pub fn tick(clock: f64, replica: usize) -> Event {
+        Event { at: clock, seq: replica as u64, payload: EventPayload::Tick { replica } }
+    }
+
+    /// Same-instant precedence class (lower fires first).
+    fn class(&self) -> u8 {
+        match self.payload {
+            EventPayload::Churn(_) => 0,
+            EventPayload::Arrival(_) => 1,
+            EventPayload::Tick { .. } => 2,
+        }
+    }
+
+    /// Total order over events: `(at, class, seq)` ascending.
+    fn cmp_key(&self, other: &Event) -> Ordering {
+        self.at
+            .total_cmp(&other.at)
+            .then(self.class().cmp(&other.class()))
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Heap slot with the comparison inverted: `BinaryHeap` is a max-heap
+/// and we want the earliest event on top.
+struct Slot(Event);
+
+impl PartialEq for Slot {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.cmp_key(&other.0) == Ordering::Equal
+    }
+}
+impl Eq for Slot {}
+impl PartialOrd for Slot {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Slot {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.0.cmp_key(&self.0)
+    }
+}
+
+/// Binary-heap event queue: `pop` yields events in `(at, class, seq)`
+/// order regardless of push order; pushing an event earlier than
+/// everything already popped is allowed (a tick entry for a lagging
+/// replica's clock is "in the past" relative to the arrival that woke
+/// it — the replica's engine fast-forwards service internally).
+#[derive(Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Slot>,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue { heap: BinaryHeap::new() }
+    }
+
+    pub fn push(&mut self, e: Event) {
+        self.heap.push(Slot(e));
+    }
+
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|s| s.0)
+    }
+
+    /// Virtual time of the earliest queued event, if any.
+    pub fn peek_at(&self) -> Option<f64> {
+        self.heap.peek().map(|s| s.0.at)
+    }
+
+    /// Is the earliest queued event a tick-completion?  The scheduler
+    /// uses this to claim every tick due before the next boundary
+    /// (churn / arrival) event in one batch.
+    pub fn peek_is_tick(&self) -> bool {
+        matches!(self.heap.peek(), Some(Slot(e)) if matches!(e.payload, EventPayload::Tick { .. }))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ChurnKind;
+    use crate::workload::Request;
+
+    fn arr(id: usize, at: f64) -> Event {
+        Event::arrival(TimedRequest {
+            id,
+            arrival: at,
+            request: Request { prompt: vec![1], max_new: 1 },
+        })
+    }
+
+    fn churn(pos: u64, at: f64) -> Event {
+        Event::churn(pos, ChurnEvent { at, replica: 0, kind: ChurnKind::Fail })
+    }
+
+    fn drain_order(q: &mut EventQueue) -> Vec<(f64, u8, u64)> {
+        let mut out = Vec::new();
+        while let Some(e) = q.pop() {
+            out.push((e.at, e.class(), e.seq));
+        }
+        out
+    }
+
+    #[test]
+    fn pops_in_virtual_time_order() {
+        let mut q = EventQueue::new();
+        for (id, at) in [(0, 3.0), (1, 1.0), (2, 2.5), (3, 0.25)] {
+            q.push(arr(id, at));
+        }
+        q.push(Event::tick(1.75, 0));
+        q.push(churn(0, 0.5));
+        let times: Vec<f64> = drain_order(&mut q).iter().map(|x| x.0).collect();
+        assert_eq!(times, vec![0.25, 0.5, 1.0, 1.75, 2.5, 3.0]);
+    }
+
+    #[test]
+    fn same_instant_precedence_is_churn_arrival_tick() {
+        let mut q = EventQueue::new();
+        q.push(Event::tick(1.0, 2));
+        q.push(arr(7, 1.0));
+        q.push(churn(0, 1.0));
+        let classes: Vec<u8> = drain_order(&mut q).iter().map(|x| x.1).collect();
+        assert_eq!(classes, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn churn_ties_break_by_schedule_order() {
+        let mut q = EventQueue::new();
+        // Push in reverse schedule order; pop must restore it.
+        q.push(churn(2, 4.0));
+        q.push(churn(0, 4.0));
+        q.push(churn(1, 4.0));
+        let seqs: Vec<u64> = drain_order(&mut q).iter().map(|x| x.2).collect();
+        assert_eq!(seqs, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn arrival_ties_break_by_id_and_tick_ties_by_replica() {
+        let mut q = EventQueue::new();
+        q.push(arr(9, 2.0));
+        q.push(arr(3, 2.0));
+        q.push(Event::tick(2.0, 5));
+        q.push(Event::tick(2.0, 1));
+        let order = drain_order(&mut q);
+        assert_eq!(order, vec![(2.0, 1, 3), (2.0, 1, 9), (2.0, 2, 1), (2.0, 2, 5)]);
+    }
+
+    #[test]
+    fn past_time_pushes_pop_next() {
+        let mut q = EventQueue::new();
+        q.push(arr(0, 5.0));
+        q.push(arr(1, 9.0));
+        assert_eq!(q.pop().unwrap().at, 5.0);
+        // A lagging replica's tick entry lands "in the past" relative
+        // to the arrival that woke it; it must still pop first.
+        q.push(Event::tick(0.5, 0));
+        assert_eq!(q.pop().unwrap().at, 0.5);
+        assert_eq!(q.pop().unwrap().at, 9.0);
+        assert!(q.is_empty());
+    }
+
+    /// Property: for any interleaving of pushes, the pop sequence is
+    /// sorted by `(at, class, seq)`.  Deterministic splitmix64 stream in
+    /// place of a randomness crate (the build is offline/vendored).
+    #[test]
+    fn pop_order_is_sorted_for_random_interleavings() {
+        let mut s: u64 = 0x9E37_79B9_7F4A_7C15;
+        let mut next = move || {
+            s = s.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let mut z = s;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^ (z >> 31)
+        };
+        for round in 0..50 {
+            let mut q = EventQueue::new();
+            let n = 3 + (next() % 40) as usize;
+            for k in 0..n {
+                let at = (next() % 16) as f64 * 0.25;
+                match next() % 3 {
+                    0 => q.push(churn(k as u64, at)),
+                    1 => q.push(arr(k, at)),
+                    _ => q.push(Event::tick(at, (next() % 8) as usize)),
+                }
+            }
+            let order = drain_order(&mut q);
+            let mut sorted = order.clone();
+            sorted.sort_by(|a, b| {
+                a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+            });
+            assert_eq!(order, sorted, "round {round}: pops out of order");
+        }
+    }
+}

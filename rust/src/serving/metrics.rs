@@ -223,8 +223,21 @@ impl ResourceUtil {
         if span <= 0.0 || devices == 0 {
             return ResourceUtil::default();
         }
-        let denom = span * devices as f64;
-        let frac = |b: f64| (b / denom).clamp(0.0, 1.0);
+        ResourceUtil::from_capacity(busy, span * devices as f64)
+    }
+
+    /// Busy fractions over an explicit capacity in channel-seconds —
+    /// the sum of per-replica **live intervals** rather than a uniform
+    /// `span × devices`.  The cluster layer uses this under churn so a
+    /// replica that failed at t≈0 no longer contributes a full
+    /// makespan of phantom capacity to the denominator (which
+    /// understated post-churn utilization); `from_busy` is the uniform
+    /// special case.
+    pub fn from_capacity(busy: &BusyTotals, capacity_secs: f64) -> ResourceUtil {
+        if capacity_secs <= 0.0 {
+            return ResourceUtil::default();
+        }
+        let frac = |b: f64| (b / capacity_secs).clamp(0.0, 1.0);
         ResourceUtil {
             gpu: frac(busy.gpu),
             cpu: frac(busy.cpu),
@@ -247,6 +260,26 @@ pub fn load_imbalance(loads: &[f64]) -> f64 {
     }
     let max = loads.iter().copied().fold(0.0f64, f64::max);
     max / mean
+}
+
+/// Live-time-weighted load imbalance: `max / mean` of per-replica
+/// **service rates** (`loads[i] / live_secs[i]`), considering only
+/// replicas with positive live time.  Plain [`load_imbalance`] averages
+/// over every replica, so a cluster whose survivors are perfectly
+/// balanced after an early failure reads as imbalanced (max/mean of
+/// `[x, x, 0]` is 1.5); weighting by live time makes a replica that
+/// failed at t≈0 drop out and balanced survivors read 1.0.  With equal
+/// live times this reduces to `load_imbalance` (max/mean is invariant
+/// under a common positive scale).
+pub fn load_imbalance_weighted(loads: &[f64], live_secs: &[f64]) -> f64 {
+    debug_assert_eq!(loads.len(), live_secs.len());
+    let rates: Vec<f64> = loads
+        .iter()
+        .zip(live_secs)
+        .filter(|(_, &live)| live > 0.0)
+        .map(|(&load, &live)| load / live)
+        .collect();
+    load_imbalance(&rates)
 }
 
 /// Aggregates over one fleet run.
@@ -642,6 +675,45 @@ mod tests {
         // one replica carries everything: imbalance = replica count
         assert_eq!(load_imbalance(&[8.0, 0.0, 0.0, 0.0]), 4.0);
         assert!((load_imbalance(&[3.0, 1.0]) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_imbalance_excludes_dead_and_scales_by_live_time() {
+        // A replica that failed at t=0 (zero live time) drops out:
+        // balanced survivors read 1.0 where the unweighted statistic
+        // reads max/mean of [x, x, 0] = 1.5.
+        assert_eq!(load_imbalance(&[6.0, 6.0, 0.0]), 1.5);
+        assert_eq!(load_imbalance_weighted(&[6.0, 6.0, 0.0], &[4.0, 4.0, 0.0]), 1.0);
+        // Sole survivor after an early failure is balanced by definition.
+        assert_eq!(load_imbalance_weighted(&[9.0, 0.0], &[3.0, 0.0]), 1.0);
+        // A replica live half the span serving half the tokens has the
+        // same rate as a full-span replica: balanced.
+        assert!(
+            (load_imbalance_weighted(&[4.0, 8.0], &[2.0, 4.0]) - 1.0).abs() < 1e-12
+        );
+        // Equal live times reduce to the unweighted statistic.
+        assert!(
+            (load_imbalance_weighted(&[3.0, 1.0], &[2.0, 2.0]) - 1.5).abs() < 1e-12
+        );
+        // Degenerate: nothing ever live.
+        assert_eq!(load_imbalance_weighted(&[0.0, 0.0], &[0.0, 0.0]), 1.0);
+    }
+
+    #[test]
+    fn capacity_utilization_matches_uniform_special_case() {
+        let busy = BusyTotals { gpu: 2.0, cpu: 0.0, pcie: 8.0, nvme: 1.0 };
+        let uniform = ResourceUtil::from_busy(&busy, 4.0, 2);
+        let explicit = ResourceUtil::from_capacity(&busy, 8.0);
+        assert_eq!(uniform.gpu, explicit.gpu);
+        assert_eq!(uniform.pcie, explicit.pcie);
+        assert_eq!(uniform.nvme, explicit.nvme);
+        // A dead replica contributing no capacity raises the fraction:
+        // same busy time over the survivor's span only.
+        let survivor_only = ResourceUtil::from_capacity(&busy, 4.0);
+        assert!((survivor_only.gpu - 0.5).abs() < 1e-12);
+        // degenerate capacity is all-zero, never NaN
+        assert_eq!(ResourceUtil::from_capacity(&busy, 0.0).gpu, 0.0);
+        assert_eq!(ResourceUtil::from_capacity(&busy, -1.0).nvme, 0.0);
     }
 
     #[test]

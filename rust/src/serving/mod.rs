@@ -50,13 +50,19 @@
 //! point, unchanged signature); [`run_cluster`] drives `Vec<Replica>`
 //! behind a [`policy::DispatchPolicy`] (`rr` round-robin, `jsq`
 //! join-shortest-queue by outstanding tokens, `affinity` hashing the
-//! prompt's predicted hot experts onto warm caches), advancing replicas
-//! in virtual-time order (min-clock next-event stepping) and merging
-//! per-replica [`metrics::FleetMetrics`] / [`metrics::DedupStats`] /
-//! [`metrics::PhaseStats`] into a cluster-level outcome with
-//! per-replica breakdowns and a load-imbalance statistic.  Replicas may
-//! run heterogeneous [`crate::config::HardwareConfig`]s (a big.LITTLE
-//! edge cluster).
+//! prompt's predicted hot experts onto warm caches) with a true
+//! **next-event scheduler**: a binary-heap [`events::EventQueue`] of
+//! arrivals, churn events, and per-replica tick-completions (idle
+//! replicas cost nothing), with independent inter-boundary replica
+//! work optionally advanced on [`std::thread::scope`] workers
+//! ([`crate::config::ServingConfig::parallel`], bit-identical to
+//! serial).  Per-replica [`metrics::FleetMetrics`] /
+//! [`metrics::DedupStats`] / [`metrics::PhaseStats`] merge into a
+//! cluster-level outcome with per-replica breakdowns and a
+//! load-imbalance statistic; the retired min-clock lockstep loop
+//! survives as [`run_cluster_minclock`], the reference the equivalence
+//! suites pin the scheduler against.  Replicas may run heterogeneous
+//! [`crate::config::HardwareConfig`]s (a big.LITTLE edge cluster).
 //!
 //! # Replica failure and drain (churn)
 //!
@@ -99,6 +105,7 @@
 
 pub mod arrival;
 pub mod cluster;
+pub mod events;
 pub mod metrics;
 pub mod policy;
 pub mod replica;
@@ -114,7 +121,9 @@ use self::metrics::{
 };
 use self::policy::{DispatchKind, PolicyKind};
 
-pub use self::cluster::{run_cluster, ClusterOutcome, ReplicaBreakdown};
+pub use self::cluster::{
+    run_cluster, run_cluster_minclock, ClusterOutcome, ReplicaBreakdown,
+};
 pub use self::replica::{Evacuation, Replica, ReplicaRun, ReplicaState};
 
 /// Configuration of one fleet (or cluster) run.

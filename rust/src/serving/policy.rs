@@ -427,6 +427,13 @@ impl ReplicaDispatchView {
 /// [`ReplicaDispatchView::index`].  With every replica live (the
 /// churn-free cluster) position and index coincide, so routing is
 /// bit-identical to the pre-churn dispatcher.
+///
+/// The event-driven cluster calls `route` once per **arrival event**
+/// (in virtual-time order, ties by request id), offering the liveness-
+/// filtered view at that instant; because dispatch happens only at
+/// event boundaries — never while replicas tick between boundaries —
+/// the views a policy sees are identical under serial and parallel
+/// execution, which is what makes `--parallel` bit-identical.
 pub trait DispatchPolicy {
     fn name(&self) -> &'static str;
     fn route(&mut self, req: &TimedRequest, replicas: &[ReplicaDispatchView]) -> usize;

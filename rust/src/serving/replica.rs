@@ -346,6 +346,21 @@ impl<'e> Replica<'e> {
         Ok(())
     }
 
+    /// Advance until the clock reaches `horizon` or the replica runs
+    /// out of work.  The event-driven cluster scheduler calls this
+    /// between two boundary events (the next arrival or churn instant):
+    /// replicas do not interact through dispatch or churn in that
+    /// window, so this exact tick sequence is what min-clock stepping
+    /// would have performed one event at a time — and it is independent
+    /// per replica, which is what lets the cluster advance replicas on
+    /// parallel workers without changing a single outcome bit.
+    pub fn advance_until(&mut self, horizon: f64) -> Result<()> {
+        while self.has_work() && self.clock() < horizon {
+            self.tick()?;
+        }
+        Ok(())
+    }
+
     /// Stamp an instant marker on the replica's timeline (the cluster
     /// layer marks churn events with this so a trace shows *when* a
     /// replica failed or began draining).  No-op unless recording.
@@ -399,7 +414,16 @@ impl<'e> Replica<'e> {
             // Work-conserving fallback so a policy bug can never wedge
             // the loop: admit if possible, else decode something.
             action = if free_slots > 0 && !self.queued.is_empty() {
-                Action::Admit(self.queued[0].id)
+                // Oldest arrival (ties by id), like the chunked
+                // fallback: admission removes with `swap_remove`, so
+                // after any prior admission index 0 holds whatever
+                // request was swapped into the hole, not the oldest.
+                let oldest = self
+                    .queued
+                    .iter()
+                    .min_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)))
+                    .expect("non-empty queue");
+                Action::Admit(oldest.id)
             } else if let Some(a) = self.active.first() {
                 Action::Decode(a.id)
             } else {

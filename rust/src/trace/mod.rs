@@ -19,7 +19,7 @@ use crate::memory::TraceEvent;
 
 /// One per-tick sample of a serving replica's counters (the source of
 /// the Chrome-trace `ph:"C"` counter tracks).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct TickSample {
     /// Virtual time of the sample (the replica clock after the tick).
     pub t: f64,
@@ -35,7 +35,7 @@ pub struct TickSample {
 
 /// One replica's run-scoped trace streams.  Empty when the engine's
 /// timeline is not recording (the `--trace-out`-absent fast path).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct TraceCapture {
     /// The engine events this run appended, in log order.
     pub events: Vec<TraceEvent>,

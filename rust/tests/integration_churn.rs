@@ -26,6 +26,15 @@
 //!    work-conserving fallback (exercised via a deliberately idle
 //!    custom policy) must clamp its decode pick to that budget instead
 //!    of tripping the budget ensure and aborting the run.
+//! 5. **Scheduler equivalence under churn** — the event-driven
+//!    `run_cluster` and its `--parallel` worker path are pinned
+//!    bit-identical to the retired min-clock loop on churn schedules
+//!    (the churn-free halves of both pins live in
+//!    `integration_cluster.rs`).
+//! 6. **Capacity accounting** — a failed replica stops accruing
+//!    capacity at its failure instant: cluster utilization and the
+//!    load-imbalance statistic exclude the dead time instead of
+//!    charging full-makespan capacity to a corpse.
 //!
 //! Engine-level tests need the real `tiny` artifacts and skip politely
 //! when they are missing (run `make artifacts`), matching the other
@@ -43,7 +52,8 @@ use dymoe::serving::policy::{
     Action, DispatchKind, PolicyKind, SchedPolicy, SchedView, TickPlan,
 };
 use dymoe::serving::{
-    run_cluster, run_fleet, ClusterOutcome, FleetConfig, Replica, ReplicaState,
+    run_cluster, run_cluster_minclock, run_fleet, ClusterOutcome, FleetConfig, Replica,
+    ReplicaState,
 };
 use dymoe::workload::{Request, TraceGen};
 
@@ -446,6 +456,163 @@ fn failure_mid_chunked_prefill_restarts_cleanly() {
         cluster.churn.lost_work_tokens > 0,
         "chunk-prefilled tokens not counted as lost"
     );
+}
+
+// ---------------------------------------------------------------------
+// Event-driven scheduler equivalence under churn (artifacts-gated)
+// ---------------------------------------------------------------------
+
+/// The next-event scheduler must reproduce the retired min-clock loop
+/// bit for bit on churn schedules too: mid-run fail, mid-run drain, a
+/// fail timed before any arrival, and a combined drain + later fail —
+/// each on both prefill modes.  Evacuation re-dispatch, service gating
+/// at the failure time, retry attribution, and the churn counters all
+/// ride on event order, so digest equality here pins the whole churn
+/// path, not just the happy path.
+#[test]
+fn event_scheduler_matches_minclock_loop_under_churn() {
+    let Some(a) = assets() else { return };
+    let n = 9;
+    let baseline = run(
+        &a,
+        3,
+        tiny_trace(&a, n, 10.0),
+        &cfg(PolicyKind::SloAware, DispatchKind::JoinShortestQueue, 2, 2, 0, vec![]),
+    );
+    let mid = baseline.fleet.metrics.makespan() * 0.3;
+    assert!(mid > 0.0);
+    let schedules: Vec<Vec<ChurnEvent>> = vec![
+        vec![fail(mid, 0)],
+        vec![drain(mid, 1)],
+        vec![fail(0.0, 0)],
+        vec![drain(mid, 1), fail(mid * 1.5, 0)],
+    ];
+    for schedule in &schedules {
+        for chunk in [0usize, 3] {
+            let c = cfg(
+                PolicyKind::SloAware,
+                DispatchKind::JoinShortestQueue,
+                2,
+                2,
+                chunk,
+                schedule.clone(),
+            );
+            let mut ref_engines: Vec<Engine> = (0..3).map(|_| bf16_engine(&a)).collect();
+            let reference =
+                run_cluster_minclock(&mut ref_engines, tiny_trace(&a, n, 10.0), &c).unwrap();
+            let mut engines: Vec<Engine> = (0..3).map(|_| bf16_engine(&a)).collect();
+            let event = run_cluster(&mut engines, tiny_trace(&a, n, 10.0), &c).unwrap();
+            let label = format!("{schedule:?} chunk {chunk}");
+
+            assert_eq!(event.churn.requeued, reference.churn.requeued, "{label}");
+            assert_eq!(
+                event.churn.lost_work_tokens, reference.churn.lost_work_tokens,
+                "{label}"
+            );
+            assert_eq!(event.fleet.steps, reference.fleet.steps, "{label}");
+            for (x, y) in event.fleet.per_request.iter().zip(&reference.fleet.per_request) {
+                assert_eq!(x.id, y.id, "{label}: completion order diverged");
+                assert_eq!(x.ttft, y.ttft, "{label}: TTFT diverged (id {})", x.id);
+                assert_eq!(x.finished_at, y.finished_at, "{label} (id {})", x.id);
+                assert_eq!(x.retries, y.retries, "{label}: retry attribution (id {})", x.id);
+            }
+            assert_eq!(event.load_imbalance, reference.load_imbalance, "{label}");
+            assert_eq!(
+                event.fleet.utilization.gpu, reference.fleet.utilization.gpu,
+                "{label}"
+            );
+            assert_eq!(event.digest(), reference.digest(), "{label}: outcome digest diverged");
+        }
+    }
+}
+
+/// `--parallel 4` under a mid-run failure: evacuation, re-dispatch, and
+/// the advance phases around the churn boundary must all come out bit
+/// -identical to the serial event-driven run.
+#[test]
+fn parallel_cluster_matches_serial_under_churn() {
+    let Some(a) = assets() else { return };
+    let n = 9;
+    let baseline = run(
+        &a,
+        3,
+        tiny_trace(&a, n, 10.0),
+        &cfg(PolicyKind::SloAware, DispatchKind::JoinShortestQueue, 2, 2, 0, vec![]),
+    );
+    let mid = baseline.fleet.metrics.makespan() * 0.3;
+    for chunk in [0usize, 3] {
+        let base = cfg(
+            PolicyKind::SloAware,
+            DispatchKind::JoinShortestQueue,
+            2,
+            2,
+            chunk,
+            vec![fail(mid, 0)],
+        );
+        let mut serial_engines: Vec<Engine> = (0..3).map(|_| bf16_engine(&a)).collect();
+        let serial = run_cluster(&mut serial_engines, tiny_trace(&a, n, 10.0), &base).unwrap();
+
+        let mut par_cfg = base.clone();
+        par_cfg.serving.parallel = 4;
+        let mut par_engines: Vec<Engine> = (0..3).map(|_| bf16_engine(&a)).collect();
+        let parallel =
+            run_cluster(&mut par_engines, tiny_trace(&a, n, 10.0), &par_cfg).unwrap();
+
+        assert_eq!(
+            parallel.digest(),
+            serial.digest(),
+            "chunk {chunk}: parallel diverged under churn"
+        );
+        assert_eq!(parallel.churn.requeued, serial.churn.requeued, "chunk {chunk}");
+        assert_eq!(parallel.fleet.steps, serial.fleet.steps, "chunk {chunk}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Capacity accounting for failed replicas (artifacts-gated)
+// ---------------------------------------------------------------------
+
+/// Regression: cluster utilization used to divide busy time by
+/// `replicas x makespan`, charging a replica that died at t = 0 a full
+/// makespan of phantom capacity (halving every busy fraction on a
+/// 2-replica cluster), and the load-imbalance statistic averaged the
+/// corpse's zero load (reading 2.0 for a perfectly-served trace).  A
+/// fail-before-arrivals 2-replica run must report *exactly* the
+/// utilization of the equivalent single-replica run, and an imbalance
+/// of 1.0.
+#[test]
+fn dead_replica_stops_accruing_capacity_and_weight() {
+    let Some(a) = assets() else { return };
+    let n = 6;
+    let pair = run(
+        &a,
+        2,
+        tiny_trace(&a, n, 20.0),
+        &cfg(PolicyKind::SloAware, DispatchKind::RoundRobin, 3, 2, 0, vec![fail(0.0, 0)]),
+    );
+    let solo = run(
+        &a,
+        1,
+        tiny_trace(&a, n, 20.0),
+        &cfg(PolicyKind::SloAware, DispatchKind::RoundRobin, 3, 2, 0, vec![]),
+    );
+    assert_eq!(pair.fleet.metrics.completed, n);
+    assert_eq!(pair.replicas[0].dispatched, 0);
+    // The survivor served the whole trace exactly as the single-replica
+    // cluster did, and the dead replica contributes zero live capacity,
+    // so the busy fractions must agree bit for bit (before the fix the
+    // pair read exactly half).
+    assert!(solo.fleet.utilization.gpu > 0.0);
+    assert_eq!(pair.fleet.utilization.gpu, solo.fleet.utilization.gpu);
+    assert_eq!(pair.fleet.utilization.cpu, solo.fleet.utilization.cpu);
+    assert_eq!(pair.fleet.utilization.pcie, solo.fleet.utilization.pcie);
+    assert_eq!(pair.fleet.utilization.nvme, solo.fleet.utilization.nvme);
+    // Live-time-weighted balance: one live replica serving everything is
+    // perfectly balanced (the unweighted max/mean over [0, all] read 2.0).
+    assert_eq!(pair.load_imbalance, 1.0);
+    // The per-replica breakdown still shows the corpse's zero load, so
+    // nothing is hidden — only the cluster statistics stop charging it.
+    assert_eq!(pair.replicas[0].outcome.metrics.tokens_total, 0);
 }
 
 // ---------------------------------------------------------------------

@@ -20,22 +20,39 @@
 //!    cumulative engine counters can never double-count; and replica
 //!    scaling actually buys tail latency and goodput on a saturating
 //!    trace.
+//! 4. **Event-driven scheduler equivalence** — `run_cluster`'s
+//!    next-event loop is pinned bit-identical (outcome digest plus
+//!    exact per-request fields) to the retired min-clock lockstep loop
+//!    (`run_cluster_minclock`) across dispatch x chunk, and the
+//!    `--parallel N` worker path is pinned bit-identical to serial;
+//!    engines illegally sharing an executor under `parallel > 1` are
+//!    rejected loudly.  The churn-schedule halves of both pins live in
+//!    `integration_churn.rs`.
+//! 5. **Fallback admission order** — the work-conserving Idle fallback
+//!    admits the *oldest* queued arrival (FIFO), not whatever
+//!    `swap_remove` left in slot 0.
 //!
 //! Engine-level tests need the real `tiny` artifacts and skip politely
 //! when they are missing (run `make artifacts`), matching the other
-//! integration suites.  The dispatch-policy model test at the bottom is
-//! engine-free and runs everywhere.
+//! integration suites.  The dispatch-policy and event-queue model tests
+//! at the bottom are engine-free and run everywhere.
 
 use std::sync::Arc;
 
 use dymoe::baselines::Uniform;
-use dymoe::config::{ServingConfig, SystemConfig, GB};
+use dymoe::config::{ChurnEvent, ChurnKind, ServingConfig, SystemConfig, GB};
 use dymoe::coordinator::engine::{Engine, EngineOptions};
 use dymoe::model::assets::ModelAssets;
+use dymoe::model::executor::Executor;
 use dymoe::quant::Precision;
 use dymoe::serving::arrival::{ArrivalGen, ArrivalProcess, TimedRequest};
-use dymoe::serving::policy::{DispatchKind, PolicyKind, ReplicaDispatchView};
-use dymoe::serving::{run_cluster, run_fleet, ClusterOutcome, FleetConfig};
+use dymoe::serving::events::{Event, EventPayload, EventQueue};
+use dymoe::serving::policy::{
+    Action, DispatchKind, PolicyKind, ReplicaDispatchView, SchedPolicy, SchedView, TickPlan,
+};
+use dymoe::serving::{
+    run_cluster, run_cluster_minclock, run_fleet, ClusterOutcome, FleetConfig, Replica,
+};
 use dymoe::util::prop;
 use dymoe::workload::{Request, TraceGen};
 
@@ -369,6 +386,171 @@ fn engine_reuse_across_runs_reports_per_run_deltas() {
 }
 
 // ---------------------------------------------------------------------
+// Event-driven scheduler vs the retired min-clock loop (artifacts-gated)
+// ---------------------------------------------------------------------
+
+/// The next-event scheduler must reproduce the retired min-clock
+/// lockstep loop *bit for bit* on churn-free traces, for every dispatch
+/// policy and both prefill modes: same outcome digest, and (for a
+/// readable failure) the same exact per-request fields, step counts,
+/// and balance statistic.
+#[test]
+fn event_scheduler_matches_minclock_loop_churn_free() {
+    let Some(a) = assets() else { return };
+    for dispatch in DispatchKind::ALL {
+        for chunk in [0usize, 3] {
+            let c = cfg(PolicyKind::SloAware, dispatch, 2, 2, chunk);
+            let mut ref_engines: Vec<Engine> = (0..3).map(|_| bf16_engine(&a)).collect();
+            let reference =
+                run_cluster_minclock(&mut ref_engines, tiny_trace(&a, 9, 10.0), &c).unwrap();
+            let mut engines: Vec<Engine> = (0..3).map(|_| bf16_engine(&a)).collect();
+            let event = run_cluster(&mut engines, tiny_trace(&a, 9, 10.0), &c).unwrap();
+            let label = format!("{} chunk {chunk}", dispatch.name());
+
+            assert_eq!(event.fleet.per_request.len(), reference.fleet.per_request.len());
+            for (x, y) in event.fleet.per_request.iter().zip(&reference.fleet.per_request) {
+                assert_eq!(x.id, y.id, "{label}: completion order diverged");
+                assert_eq!(x.ttft, y.ttft, "{label}: TTFT diverged (id {})", x.id);
+                assert_eq!(x.tpot, y.tpot, "{label}: TPOT diverged (id {})", x.id);
+                assert_eq!(x.finished_at, y.finished_at, "{label} (id {})", x.id);
+                assert_eq!(x.queue_delay, y.queue_delay, "{label} (id {})", x.id);
+                assert_eq!(x.max_stall, y.max_stall, "{label} (id {})", x.id);
+            }
+            assert_eq!(event.fleet.steps, reference.fleet.steps, "{label}");
+            assert_eq!(event.load_imbalance, reference.load_imbalance, "{label}");
+            assert_eq!(
+                event.fleet.utilization.gpu, reference.fleet.utilization.gpu,
+                "{label}"
+            );
+            for (x, y) in event.replicas.iter().zip(&reference.replicas) {
+                assert_eq!(x.dispatched, y.dispatched, "{label}: dispatch routing diverged");
+            }
+            assert_eq!(event.digest(), reference.digest(), "{label}: outcome digest diverged");
+        }
+    }
+}
+
+/// `--parallel 4` distributes the inter-boundary advance phases over
+/// scoped worker threads; every outcome bit must match the serial run
+/// (the partition is a pure wall-clock knob).
+#[test]
+fn parallel_cluster_is_bit_identical_to_serial() {
+    let Some(a) = assets() else { return };
+    for dispatch in [DispatchKind::RoundRobin, DispatchKind::JoinShortestQueue] {
+        for chunk in [0usize, 3] {
+            let base = cfg(PolicyKind::SloAware, dispatch, 2, 2, chunk);
+            let mut serial_engines: Vec<Engine> = (0..4).map(|_| bf16_engine(&a)).collect();
+            let serial =
+                run_cluster(&mut serial_engines, tiny_trace(&a, 10, 20.0), &base).unwrap();
+
+            let mut par_cfg = base.clone();
+            par_cfg.serving.parallel = 4;
+            let mut par_engines: Vec<Engine> = (0..4).map(|_| bf16_engine(&a)).collect();
+            let parallel =
+                run_cluster(&mut par_engines, tiny_trace(&a, 10, 20.0), &par_cfg).unwrap();
+
+            let label = format!("{} chunk {chunk}", dispatch.name());
+            assert_eq!(parallel.digest(), serial.digest(), "{label}: parallel diverged");
+            for (x, y) in parallel.fleet.per_request.iter().zip(&serial.fleet.per_request) {
+                assert_eq!((x.id, x.ttft, x.finished_at), (y.id, y.ttft, y.finished_at), "{label}");
+            }
+            assert_eq!(parallel.fleet.steps, serial.fleet.steps, "{label}");
+        }
+    }
+}
+
+/// Executor state is single-thread confined: a parallel run over
+/// engines that share one executor must be rejected up front, not race.
+#[test]
+fn parallel_run_rejects_engines_sharing_an_executor() {
+    let Some(a) = assets() else { return };
+    let exec = std::rc::Rc::new(Executor::new(a.clone()).unwrap());
+    let mut engines: Vec<Engine> = (0..2)
+        .map(|_| {
+            Engine::with_executor(
+                &a,
+                big_vram_sys(),
+                Box::new(Uniform::new(Precision::Bf16)),
+                EngineOptions::default(),
+                exec.clone(),
+            )
+            .unwrap()
+        })
+        .collect();
+    let mut c = cfg(PolicyKind::SloAware, DispatchKind::RoundRobin, 2, 2, 0);
+    c.serving.parallel = 2;
+    let err = run_cluster(&mut engines, tiny_trace(&a, 4, 20.0), &c).unwrap_err();
+    assert!(
+        err.to_string().contains("per-replica executors"),
+        "wrong rejection: {err:#}"
+    );
+    // the same engines run fine serially
+    c.serving.parallel = 1;
+    let ok = run_cluster(&mut engines, tiny_trace(&a, 4, 20.0), &c).unwrap();
+    assert_eq!(ok.fleet.metrics.completed, 4);
+}
+
+// ---------------------------------------------------------------------
+// Work-conserving fallback admission order (artifacts-gated)
+// ---------------------------------------------------------------------
+
+/// A policy that never plans anything, forcing every admission through
+/// the replica's work-conserving Idle fallback.
+struct AlwaysIdlePolicy;
+
+impl SchedPolicy for AlwaysIdlePolicy {
+    fn name(&self) -> &'static str {
+        "always-idle"
+    }
+
+    fn next_action(&mut self, _view: &SchedView) -> Action {
+        Action::Idle
+    }
+
+    fn mixed_tick(&mut self, _view: &SchedView, _max_decode: usize) -> TickPlan {
+        TickPlan { prefill: None, decode: Vec::new() }
+    }
+}
+
+/// Regression: the monolithic Idle fallback used to admit
+/// `self.queued[0]` — but admission removes entries with `swap_remove`,
+/// which parks the *youngest* request in slot 0, so a three-deep queue
+/// served A, C, B.  The fallback must admit the oldest arrival (ties by
+/// id), i.e. FIFO order.
+#[test]
+fn idle_fallback_admits_oldest_arrival_not_slot_zero() {
+    let Some(a) = assets() else { return };
+    let m = a.manifest.model.clone();
+    let max_new = (m.max_cache - m.max_seq).clamp(1, 2);
+    let c = cfg(PolicyKind::SloAware, DispatchKind::RoundRobin, 1, 1, 0);
+    let mut engine = bf16_engine(&a);
+    let mut replica = Replica::with_policy(&mut engine, &c, Box::new(AlwaysIdlePolicy));
+    // Three same-instant arrivals queued before the first tick; with
+    // max_sessions = 1 they serve strictly one at a time, so completion
+    // order *is* admission order.
+    for id in 0..3usize {
+        replica.enqueue(TimedRequest {
+            id,
+            arrival: 0.0,
+            request: Request { prompt: vec![1, 5 + 3 * id as i32], max_new },
+        });
+    }
+    let mut guard = 0;
+    while replica.has_work() {
+        replica.tick().unwrap();
+        guard += 1;
+        assert!(guard < 500, "idle-fallback loop did not converge");
+    }
+    let done = replica.finish();
+    let order: Vec<usize> = done.outcome.per_request.iter().map(|r| r.id).collect();
+    assert_eq!(
+        order,
+        vec![0, 1, 2],
+        "fallback admission must follow arrival order, not queue-slot order"
+    );
+}
+
+// ---------------------------------------------------------------------
 // Engine-free dispatch model properties (run everywhere)
 // ---------------------------------------------------------------------
 
@@ -423,5 +605,64 @@ fn prop_dispatch_policies_route_sanely() {
             seen[rr.route(&req, &views)] = true;
         }
         assert!(seen.iter().all(|&s| s), "rr starved a replica in one cycle");
+    });
+}
+
+/// The event queue's ordering contract over random interleavings: pops
+/// come out sorted by `(virtual time, kind, seq)` — churn before
+/// arrival before tick at the same instant, churn ties by schedule
+/// order, arrival ties by request id, tick ties by replica index — no
+/// matter the push order, including pushes "in the past" after pops.
+#[test]
+fn prop_event_queue_pops_in_virtual_time_order() {
+    fn key(e: &Event) -> (f64, u8, u64) {
+        let class = match e.payload {
+            EventPayload::Churn(_) => 0u8,
+            EventPayload::Arrival(_) => 1,
+            EventPayload::Tick { .. } => 2,
+        };
+        (e.at, class, e.seq)
+    }
+    prop::check("event-queue-order", 200, |rng| {
+        let mut q = EventQueue::new();
+        let n = rng.range(3, 40);
+        for k in 0..n {
+            // coarse time grid to force plenty of same-instant ties
+            let at = rng.below(10) as f64 * 0.5;
+            match rng.below(3) {
+                0 => q.push(Event::churn(
+                    k as u64,
+                    ChurnEvent { at, replica: rng.below(4), kind: ChurnKind::Fail },
+                )),
+                1 => q.push(Event::arrival(TimedRequest {
+                    id: k,
+                    arrival: at,
+                    request: Request { prompt: vec![1], max_new: 1 },
+                })),
+                _ => q.push(Event::tick(at, rng.below(6))),
+            }
+        }
+        // drain half, then push more (tick entries for lagging replicas
+        // land in the past relative to earlier pops)
+        let mut popped: Vec<(f64, u8, u64)> = Vec::new();
+        for _ in 0..n / 2 {
+            popped.push(key(&q.pop().unwrap()));
+        }
+        let mut sorted_prefix = popped.clone();
+        sorted_prefix.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)));
+        assert_eq!(popped, sorted_prefix, "pop prefix out of order");
+        let extra = rng.range(1, 8);
+        for k in 0..extra {
+            q.push(Event::tick(rng.below(10) as f64 * 0.5, 6 + k));
+        }
+        let mut tail: Vec<(f64, u8, u64)> = Vec::new();
+        while let Some(e) = q.pop() {
+            tail.push(key(&e));
+        }
+        assert_eq!(tail.len(), n - n / 2 + extra, "queue lost or duplicated events");
+        let mut sorted_tail = tail.clone();
+        sorted_tail.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)));
+        assert_eq!(tail, sorted_tail, "pops after past-time pushes out of order");
+        assert!(q.is_empty());
     });
 }

@@ -16,6 +16,9 @@
 //!    runs captures each run's event *suffix* only (the
 //!    `events_before` snapshot-delta discipline), so a later trace
 //!    never replays an earlier run's work.
+//! 4. **Parallel neutrality** — `--parallel` worker execution leaves
+//!    every per-replica trace stream (and the emitted Chrome-trace
+//!    document) byte-identical to the serial run.
 //!
 //! Engine-level tests need the real `tiny` artifacts and skip politely
 //! when they are missing (run `make artifacts`).  The hand-built
@@ -218,6 +221,40 @@ fn trace_slices_conserve_busy_totals() {
             e.end
         );
     }
+}
+
+// ---------------------------------------------------------------------
+// Parallel execution leaves the trace streams untouched (artifacts-gated)
+// ---------------------------------------------------------------------
+
+/// `--parallel` is a pure wall-clock knob: a recording churny chunked
+/// run on 4 worker threads must produce *identical* per-replica trace
+/// streams (every event, every counter sample) and therefore a
+/// byte-identical Chrome-trace document, not just matching metrics.
+#[test]
+fn parallel_run_produces_identical_trace_streams() {
+    let Some(a) = assets() else { return };
+    let churn = vec![ChurnEvent { at: 0.001, replica: 1, kind: ChurnKind::Fail }];
+    let run_with = |parallel: usize| -> ClusterOutcome {
+        let mut c = cfg(3, churn.clone());
+        c.serving.parallel = parallel;
+        let mut engines: Vec<Engine> =
+            (0..3).map(|_| recording_engine(&a, big_vram_sys())).collect();
+        run_cluster(&mut engines, tiny_trace(&a, 8, 50.0), &c).unwrap()
+    };
+    let serial = run_with(1);
+    let parallel = run_with(4);
+    for (i, (x, y)) in parallel.replicas.iter().zip(&serial.replicas).enumerate() {
+        assert_eq!(
+            x.trace, y.trace,
+            "replica {i}: parallel execution perturbed the trace stream"
+        );
+    }
+    assert_eq!(
+        chrome_trace(&parallel).to_string(),
+        chrome_trace(&serial).to_string(),
+        "chrome-trace documents diverged"
+    );
 }
 
 // ---------------------------------------------------------------------
