@@ -13,7 +13,12 @@
 //! load-imbalance statistic), a **churn sweep** (stable vs drain vs
 //! fail of replica 0 at 2/4 replicas, the event timed mid-serve,
 //! reporting the requeue count, lost-work tokens, and the tail-latency
-//! hit), and an **event-driven sweep** (8/16/32-replica clusters run
+//! hit), a **host-pool sweep** (independent caches vs the static /
+//! shared-LRU / pinned `--host-pool` partitionings at one total budget
+//! over 2/4/8 replicas with SSD-resident weights, reporting the pool
+//! hit rate, SSD fills, link-contention stall, and mean TTFT — the
+//! shared tier's edge over the static split is the tentpole signal),
+//! and an **event-driven sweep** (8/16/32-replica clusters run
 //! through the retired min-clock lockstep loop, the event-driven
 //! scheduler, and the event-driven scheduler on 4 worker threads —
 //! reporting wall-clock per mode plus the [`ClusterOutcome::digest`]
@@ -24,8 +29,9 @@
 //! decode-batch setting, a chunked-vs-monolithic long-prompt
 //! head-of-line sweep: p99 TPOT, worst inter-token stall, chunk and
 //! mixed-tick counts per `chunk_tokens` setting, plus the
-//! `replica_scaling_sweep`, `churn_sweep`, and `event_driven_sweep`) so
-//! CI can track the perf trajectory in a machine-readable form.
+//! `replica_scaling_sweep`, `churn_sweep`, `host_pool_sweep`, and
+//! `event_driven_sweep`) so CI can track the perf trajectory in a
+//! machine-readable form.
 //!
 //! Skips politely if `make artifacts` has not been run.
 
@@ -34,7 +40,10 @@ use std::rc::Rc;
 use std::sync::Arc;
 use std::time::Instant;
 
-use dymoe::config::{ChurnEvent, ChurnKind, PolicyConfig, ServingConfig, SystemConfig};
+use dymoe::config::{
+    ChurnEvent, ChurnKind, HostPoolConfig, PolicyConfig, PoolPolicyKind, ServingConfig,
+    SystemConfig, GB,
+};
 use dymoe::coordinator::engine::{Engine, EngineOptions};
 use dymoe::coordinator::strategy::DyMoEStrategy;
 use dymoe::model::assets::ModelAssets;
@@ -133,6 +142,77 @@ fn run_cluster_point(
         },
         policy: PolicyKind::SloAware,
         dispatch,
+    };
+    run_cluster(&mut engines, trace, &cfg)
+}
+
+/// The host-pool sweep: independent caches (`none`) vs the three
+/// `--host-pool` partitioning policies at the same total host budget,
+/// over growing clusters.  SSD-resident weights make the host tier the
+/// only thing between a VRAM miss and an NVMe fill, so the shared
+/// pool's cross-replica reuse (higher hit rate, lower mean TTFT than
+/// the static per-replica split) is the acceptance signal CI tracks.
+const HOST_POOL_REPLICAS: [usize; 3] = [2, 4, 8];
+const HOST_POOL_CAP_GB: f64 = 2.0;
+const HOST_POOL_MODES: [&str; 4] = ["none", "static", "shared", "pinned"];
+
+fn host_pool_for(mode: &str) -> Option<HostPoolConfig> {
+    let policy = match mode {
+        "none" => return None,
+        "static" => PoolPolicyKind::Static,
+        "shared" => PoolPolicyKind::Shared,
+        "pinned" => PoolPolicyKind::Pinned,
+        _ => unreachable!("unknown host-pool mode {mode}"),
+    };
+    Some(HostPoolConfig {
+        capacity_bytes: (HOST_POOL_CAP_GB * GB as f64) as u64,
+        policy,
+    })
+}
+
+/// One cluster run for the host-pool sweep: like [`run_cluster_point`]
+/// (fresh engines on one compiled executor, same seeded trace, rr
+/// dispatch so every replica sees similar traffic) but with
+/// `ssd_resident` weights and an optional host pool between the VRAM
+/// caches and SSD.
+fn run_host_pool_point(
+    assets: &Arc<ModelAssets>,
+    replicas: usize,
+    requests: usize,
+    mode: &str,
+) -> anyhow::Result<ClusterOutcome> {
+    let m = assets.manifest.model.clone();
+    let exec = Rc::new(Executor::new(assets.clone())?);
+    let mut engines = Vec::with_capacity(replicas);
+    for _ in 0..replicas {
+        let mut sys = SystemConfig::edge_preset("mixtral-mini", 16)?;
+        sys.policy.ssd_resident = true;
+        let strat = Box::new(DyMoEStrategy::new(PolicyConfig::default()));
+        engines.push(Engine::with_executor(
+            assets,
+            sys,
+            strat,
+            EngineOptions::default(),
+            exec.clone(),
+        )?);
+    }
+    let mut content =
+        TraceGen::new(11, m.max_seq.min(80), (m.max_cache - m.max_seq).min(12));
+    let trace = ArrivalGen::generate(
+        0x5EED,
+        ArrivalProcess::Poisson { rate: SCALING_RATE },
+        &mut content,
+        requests,
+    )?;
+    let cfg = FleetConfig {
+        serving: ServingConfig {
+            max_sessions: 8,
+            max_decode_batch: 8,
+            host_pool: host_pool_for(mode),
+            ..Default::default()
+        },
+        policy: PolicyKind::SloAware,
+        dispatch: DispatchKind::RoundRobin,
     };
     run_cluster(&mut engines, trace, &cfg)
 }
@@ -405,6 +485,36 @@ fn smoke_json(assets: &Arc<ModelAssets>) -> anyhow::Result<Json> {
             churn_points.push(Json::Obj(p));
         }
     }
+    // Host-pool sweep: independent caches vs static/shared/pinned host
+    // tiers at the same total budget.  The shared pool's hit rate and
+    // mean-TTFT edge over the static split is the tentpole signal.
+    let mut host_pool_points = Vec::new();
+    for &replicas in &HOST_POOL_REPLICAS {
+        for mode in HOST_POOL_MODES {
+            let o = run_host_pool_point(assets, replicas, requests, mode)?;
+            let mut p = BTreeMap::new();
+            p.insert("replicas".to_string(), num(replicas as f64));
+            p.insert("mode".to_string(), Json::Str(mode.to_string()));
+            let cap = if mode == "none" { 0.0 } else { HOST_POOL_CAP_GB };
+            p.insert("cap_gb".to_string(), num(cap));
+            p.insert("completed".to_string(), num(o.fleet.metrics.completed as f64));
+            p.insert("ttft_mean_s".to_string(), num(o.fleet.metrics.ttft.mean()));
+            p.insert("ttft_p99_s".to_string(), num(o.fleet.metrics.ttft.percentile(99.0)));
+            p.insert("goodput_rps".to_string(), num(o.fleet.metrics.goodput_rps()));
+            p.insert("pool_hit_rate".to_string(), num(o.pool.hit_rate()));
+            p.insert("host_hits".to_string(), num(o.pool.host_hits as f64));
+            p.insert("ssd_fills".to_string(), num(o.pool.ssd_fills as f64));
+            p.insert("evictions".to_string(), num(o.pool.evictions as f64));
+            p.insert(
+                "staged_gb".to_string(),
+                num(o.pool.inserted_bytes as f64 / GB as f64),
+            );
+            p.insert("link_stall_s".to_string(), num(o.pool.stall_s));
+            p.insert("util_pcie".to_string(), num(o.fleet.utilization.pcie));
+            p.insert("util_nvme".to_string(), num(o.fleet.utilization.nvme));
+            host_pool_points.push(Json::Obj(p));
+        }
+    }
     // Event-driven sweep: each cluster size runs the retired min-clock
     // loop once (the reference digest), then the event-driven scheduler
     // serial and on 4 workers.  CI tracks the wall-clock win; the
@@ -448,6 +558,7 @@ fn smoke_json(assets: &Arc<ModelAssets>) -> anyhow::Result<Json> {
     root.insert("hol_long_prompt_sweep".to_string(), Json::Arr(hol_points));
     root.insert("replica_scaling_sweep".to_string(), Json::Arr(scaling_points));
     root.insert("churn_sweep".to_string(), Json::Arr(churn_points));
+    root.insert("host_pool_sweep".to_string(), Json::Arr(host_pool_points));
     root.insert("event_driven_sweep".to_string(), Json::Arr(event_points));
     Ok(Json::Obj(root))
 }
@@ -623,6 +734,43 @@ fn main() -> anyhow::Result<()> {
                 o.fleet.metrics.queue_delay.mean(),
                 o.churn.requeued,
                 o.churn.lost_work_tokens,
+                wall.elapsed().as_secs_f64(),
+            );
+        }
+    }
+    println!();
+    println!(
+        "### host-pool sweep (slo policy, rr dispatch, Poisson {SCALING_RATE} r/s, \
+         ssd-resident weights; none = independent caches, else a {HOST_POOL_CAP_GB} GB \
+         host tier split static / shared LRU / pinned)"
+    );
+    println!(
+        "{:<9} {:<8} {:>9} {:>9} {:>9} {:>9} {:>11} {:>12} {:>12} {:>10}",
+        "replicas",
+        "mode",
+        "hit rate",
+        "hits",
+        "fills",
+        "evict",
+        "stall (s)",
+        "TTFT mean",
+        "TTFT p99",
+        "wall (s)"
+    );
+    for &replicas in &HOST_POOL_REPLICAS {
+        for mode in HOST_POOL_MODES {
+            let wall = Instant::now();
+            let o = run_host_pool_point(&assets, replicas, requests, mode)?;
+            println!(
+                "{replicas:<9} {mode:<8} {:>9.3} {:>9} {:>9} {:>9} {:>11.4} {:>12.4} \
+                 {:>12.4} {:>10.2}",
+                o.pool.hit_rate(),
+                o.pool.host_hits,
+                o.pool.ssd_fills,
+                o.pool.evictions,
+                o.pool.stall_s,
+                o.fleet.metrics.ttft.mean(),
+                o.fleet.metrics.ttft.percentile(99.0),
                 wall.elapsed().as_secs_f64(),
             );
         }

@@ -89,6 +89,17 @@ pub struct HardwareConfig {
     pub cpu_gflops: f64,
     /// Fixed kernel-launch / dispatch overhead per GPU op.
     pub kernel_overhead_s: f64,
+    /// Aggregate host-memory bandwidth the shared host expert pool can
+    /// feed across *all* replicas' PCIe lanes (the co-located edge
+    /// deployment runs every replica's host<->device link off one
+    /// memory/root-complex budget).  Only consulted when a cluster run
+    /// attaches a shared pool (`serve-fleet --host-pool`): each
+    /// replica's effective link bandwidth is
+    /// `min(pcie_gbps, host_link_gbps / live_replicas)`, so a couple of
+    /// replicas ride at full lane speed while a wide co-location
+    /// contends.  Default 25.6 GB/s: two full PCIe Gen3 x16 lanes'
+    /// worth.
+    pub host_link_gbps: f64,
 }
 
 impl Default for HardwareConfig {
@@ -103,6 +114,7 @@ impl Default for HardwareConfig {
             hbm_gbps: 936.0e9,
             cpu_gflops: 150.0e9,
             kernel_overhead_s: 8e-6,
+            host_link_gbps: 25.6e9,
         }
     }
 }
@@ -207,6 +219,82 @@ impl ChurnEvent {
             .parse()
             .map_err(|_| anyhow::anyhow!("--{} {spec:?}: R must be a replica index", kind.name()))?;
         Ok(ChurnEvent { at, replica, kind })
+    }
+}
+
+/// How the shared host expert pool partitions its capacity across the
+/// cluster's replicas ([`crate::memory::HostExpertPool`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolPolicyKind {
+    /// Static per-replica split: the capacity is sharded `cap / n`
+    /// per replica, each shard a private LRU.  No cross-replica reuse —
+    /// this is the "independent caches" baseline at equal total budget.
+    Static,
+    /// One shared LRU over the whole capacity: any replica's fill is
+    /// every replica's hit.
+    Shared,
+    /// Per-expert pinning: first-touch entries stay for the run (an
+    /// insert that does not fit is used transiently and dropped); no
+    /// eviction churn, at the price of a frozen working set.
+    Pinned,
+}
+
+impl PoolPolicyKind {
+    pub fn parse(name: &str) -> Result<PoolPolicyKind> {
+        Ok(match name {
+            "static" => PoolPolicyKind::Static,
+            "shared" | "lru" => PoolPolicyKind::Shared,
+            "pinned" | "pin" => PoolPolicyKind::Pinned,
+            _ => bail!("unknown host-pool policy {name:?}; try static, shared, pinned"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PoolPolicyKind::Static => "static",
+            PoolPolicyKind::Shared => "shared",
+            PoolPolicyKind::Pinned => "pinned",
+        }
+    }
+
+    pub const ALL: [PoolPolicyKind; 3] =
+        [PoolPolicyKind::Static, PoolPolicyKind::Shared, PoolPolicyKind::Pinned];
+}
+
+/// Configuration of the cross-replica shared host expert pool (the
+/// host-RAM tier between the per-replica VRAM caches and SSD).  `None`
+/// on [`ServingConfig::host_pool`] models unbounded host RAM — the
+/// pre-pool behaviour, bit for bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HostPoolConfig {
+    /// Host-RAM bytes budgeted for staged expert copies, cluster-wide.
+    pub capacity_bytes: u64,
+    pub policy: PoolPolicyKind,
+}
+
+impl HostPoolConfig {
+    /// Parse the CLI spec `CAP_GB[:POLICY]` (`serve-fleet --host-pool`),
+    /// e.g. `--host-pool 2`, `--host-pool 4:static`,
+    /// `--host-pool 0.5:pinned`.
+    pub fn parse_spec(spec: &str) -> Result<HostPoolConfig> {
+        let mut parts = spec.split(':');
+        let gb: f64 = parts
+            .next()
+            .unwrap_or("")
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--host-pool {spec:?}: CAP_GB must be a number"))?;
+        if !gb.is_finite() || gb <= 0.0 {
+            bail!("--host-pool {spec:?}: CAP_GB must be > 0");
+        }
+        let policy = match parts.next() {
+            Some(p) => PoolPolicyKind::parse(p)
+                .map_err(|e| anyhow::anyhow!("--host-pool {spec:?}: {e}"))?,
+            None => PoolPolicyKind::Shared,
+        };
+        if parts.next().is_some() {
+            bail!("--host-pool {spec:?}: expected CAP_GB[:POLICY]");
+        }
+        Ok(HostPoolConfig { capacity_bytes: (gb * GB as f64) as u64, policy })
     }
 }
 
@@ -344,6 +432,13 @@ pub struct ServingConfig {
     /// Requires per-replica executors (engines must not share one);
     /// ignored by the single-replica `run_fleet`.
     pub parallel: usize,
+    /// Shared host expert pool under the per-replica VRAM caches
+    /// (`serve-fleet --host-pool CAP[:POLICY]`): misses resolve
+    /// VRAM -> host pool -> SSD, with the host<->device link contended
+    /// across live replicas.  `None` (the default) models unbounded
+    /// host RAM — every code path stays bitwise-identical to the
+    /// pre-pool cluster (the digest-neutrality suite pins it).
+    pub host_pool: Option<HostPoolConfig>,
 }
 
 impl Default for ServingConfig {
@@ -359,6 +454,7 @@ impl Default for ServingConfig {
             replicas: 1,
             churn: Vec::new(),
             parallel: 1,
+            host_pool: None,
         }
     }
 }
@@ -465,6 +561,26 @@ mod tests {
         let s = ServingConfig::default();
         assert_eq!(s.replicas, 1);
         assert!(s.churn.is_empty(), "default serving config must be churn-free");
+        assert!(s.host_pool.is_none(), "default serving config must be pool-free");
+    }
+
+    #[test]
+    fn host_pool_spec_parses_cap_and_policy() {
+        let p = HostPoolConfig::parse_spec("2").unwrap();
+        assert_eq!(p.capacity_bytes, 2 * GB);
+        assert_eq!(p.policy, PoolPolicyKind::Shared);
+        let p = HostPoolConfig::parse_spec("4:static").unwrap();
+        assert_eq!(p.capacity_bytes, 4 * GB);
+        assert_eq!(p.policy, PoolPolicyKind::Static);
+        let p = HostPoolConfig::parse_spec("0.5:pinned").unwrap();
+        assert_eq!(p.capacity_bytes, GB / 2);
+        assert_eq!(p.policy, PoolPolicyKind::Pinned);
+        for kind in PoolPolicyKind::ALL {
+            assert_eq!(PoolPolicyKind::parse(kind.name()).unwrap(), kind);
+        }
+        for bad in ["", "0", "-2", "nan", "x", "2:fifo", "2:shared:x"] {
+            assert!(HostPoolConfig::parse_spec(bad).is_err(), "{bad:?} accepted");
+        }
     }
 
     #[test]

@@ -83,7 +83,14 @@ pub struct CacheStats {
     pub misses: u64,
     pub promotions: u64,
     pub conservative_reuses: u64,
+    /// Entries dropped to make room (genuine capacity evictions: the
+    /// expert left the cache).  A rule-2 promotion swap is *not* an
+    /// eviction — the expert stays cached at higher precision — and is
+    /// counted under [`CacheStats::replacements`] instead.
     pub evictions: u64,
+    /// Rule-1/2 in-place replacements (a cached copy's bytes swapped
+    /// for a higher-precision copy of the *same* expert).
+    pub replacements: u64,
     pub inserted_bytes: u64,
 }
 
@@ -305,8 +312,12 @@ impl MixedPrecisionCache {
             return None;
         }
         if replaced > 0 {
-            self.remove_entry(key); // rule 1 / promotion replacement
-            self.stats.evictions += 1;
+            // Rule 1 / promotion replacement: the expert stays cached
+            // (at higher precision), so this is a replacement, not an
+            // eviction — counting it as one inflated eviction totals in
+            // every report.
+            self.remove_entry(key);
+            self.stats.replacements += 1;
         }
         let mut evicted = Vec::new();
         while !self.budget.fits(bytes) {
@@ -525,6 +536,60 @@ mod tests {
         let mut c = MixedPrecisionCache::new(30);
         assert!(c.insert(k(0, 0), Precision::Bf16, 50, 0.0).is_none());
         assert_eq!(c.len(), 0);
+    }
+
+    /// A rule-2 promotion swap keeps the expert cached, so it must count
+    /// as a replacement — never as an eviction (the old accounting
+    /// inflated eviction totals in every report).
+    #[test]
+    fn promotion_replacement_counts_as_replacement_not_eviction() {
+        let mut c = MixedPrecisionCache::new(100);
+        c.insert(k(0, 0), Precision::Int2, 10, 0.0).unwrap();
+        assert_eq!(c.lookup(k(0, 0), Precision::Int4), Lookup::Miss { promotes: true });
+        c.insert(k(0, 0), Precision::Int4, 40, 1.0).unwrap();
+        assert_eq!(c.stats.evictions, 0, "promotion swap miscounted as eviction");
+        assert_eq!(c.stats.replacements, 1);
+        assert_eq!(c.stats.promotions, 1);
+        assert_eq!(c.contains(k(0, 0)), Some(Precision::Int4));
+        // A genuine capacity eviction still counts exactly once, and
+        // does not bleed into the replacement counter.
+        c.insert(k(0, 1), Precision::Int4, 70, 0.0).unwrap();
+        assert_eq!(c.stats.evictions, 1);
+        assert_eq!(c.stats.replacements, 1);
+    }
+
+    /// SLRU ledger conservation: `protected_bytes` equals the sum of
+    /// segment-1 entry bytes after arbitrary interleavings of lookups,
+    /// inserts, and promotion replacements (the replacement path
+    /// re-accounts protected bytes at the *new* size — the ledger is
+    /// easy to drift silently).
+    #[test]
+    fn prop_protected_bytes_matches_segment_sum() {
+        use crate::util::prop;
+        prop::check("slru protected-bytes conservation", 60, |rng| {
+            let cap = rng.range(50, 400) as u64;
+            let mut c = MixedPrecisionCache::new(cap);
+            c.set_scan_resistant(true);
+            let precs = [Precision::Int2, Precision::Int4, Precision::Int8];
+            for _ in 0..rng.range(20, 120) {
+                let key = k(rng.range(0, 3), rng.range(0, 5));
+                let prec = precs[rng.range(0, 2)];
+                if rng.range(0, 2) == 0 {
+                    let _ = c.lookup(key, prec);
+                } else {
+                    let bytes = rng.range(5, 60) as u64;
+                    let _ = c.insert(key, prec, bytes, 0.0);
+                }
+                let truth: u64 = c
+                    .map
+                    .values()
+                    .filter(|e| e.segment == 1)
+                    .map(|e| e.bytes)
+                    .sum();
+                assert_eq!(c.protected_bytes, truth, "protected ledger drifted");
+                assert!(c.used_bytes() <= c.capacity(), "budget exceeded");
+            }
+        });
     }
 }
 

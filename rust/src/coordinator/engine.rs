@@ -53,7 +53,7 @@ use anyhow::{ensure, Context, Result};
 
 use crate::config::SystemConfig;
 use crate::costmodel::CostModel;
-use crate::memory::{Timeline, TracePhase};
+use crate::memory::{HostPoolHandle, PoolAccess, PoolStats, Timeline, TracePhase};
 use crate::model::assets::{ExpertKey, ModelAssets};
 use crate::model::executor::Executor;
 use crate::model::kv::KvCache;
@@ -189,6 +189,11 @@ pub struct Engine {
     /// interleaving) re-run the per-phase setup exactly once.
     phase_ctx: Option<(u64, Phase)>,
     next_session_id: u64,
+    /// Cross-replica shared host expert tier.  Attached by the cluster
+    /// for `--host-pool` runs and detached before the run finishes;
+    /// `None` (the default, and the only state single-engine paths ever
+    /// see) leaves every transfer path exactly as before.
+    pub host_pool: Option<HostPoolHandle>,
 }
 
 /// One in-flight request's engine-side state: its private [`KvCache`],
@@ -385,6 +390,7 @@ impl Engine {
             warm_pinned,
             phase_ctx: None,
             next_session_id: 0,
+            host_pool: None,
         })
     }
 
@@ -1305,6 +1311,37 @@ impl Engine {
         let bytes = self.cost.expert_weight_bytes(p);
         self.stats.transferred_bytes += bytes as u64;
         let label = format!("xfer {key} {}", p.tag());
+        if let Some(pool) = self.host_pool.as_mut() {
+            // Hierarchical resolve: the VRAM cache already missed (that
+            // is why we are here), so probe the shared host tier before
+            // paying the SSD fill.  Pool fills are latency-only (no
+            // NVMe channel queueing): mid-window the shared pool is a
+            // frozen snapshot, so queueing state could not be shared
+            // deterministically under `--parallel` anyway.
+            let host_ready = if self.sys.policy.ssd_resident {
+                match pool.acquire(key, p, issue) {
+                    PoolAccess::Hit { ready_at } => issue.max(ready_at),
+                    PoolAccess::Fill => {
+                        let ready = issue + self.cost.nvme_transfer(bytes);
+                        pool.fill(key, p, bytes as u64, ready, issue);
+                        ready
+                    }
+                }
+            } else {
+                issue
+            };
+            // Every live replica's PCIe lane draws on one host-link
+            // budget; the widened duration past pcie_transfer is the
+            // contention stall.
+            let lanes = pool.lanes();
+            let dur = self.cost.host_pool_transfer(bytes, lanes);
+            pool.note_stall(dur - self.cost.pcie_transfer(bytes));
+            return if background {
+                self.timeline.pcie_prefetch(host_ready, dur, &label)
+            } else {
+                self.timeline.pcie_transfer(host_ready, dur, &label)
+            };
+        }
         let host_ready = if self.sys.policy.ssd_resident {
             self.timeline
                 .nvme_stage(issue, self.cost.nvme_transfer(bytes), &label)
@@ -1316,6 +1353,34 @@ impl Engine {
             self.timeline.pcie_prefetch(host_ready, dur, &label)
         } else {
             self.timeline.pcie_transfer(host_ready, dur, &label)
+        }
+    }
+
+    /// Apply the attached host-pool journal to the shared pool (the
+    /// cluster's event-boundary barrier).  No-op when no pool is
+    /// attached or the window recorded nothing.
+    pub fn flush_host_pool(&mut self) {
+        if let Some(pool) = self.host_pool.as_mut() {
+            pool.flush();
+        }
+    }
+
+    /// Lifetime host-pool traffic observed by this engine (hits, SSD
+    /// fills, contention stall); zeros when no pool is attached.
+    pub fn host_pool_stats(&self) -> PoolStats {
+        self.host_pool.as_ref().map(|p| p.lifetime).unwrap_or_default()
+    }
+
+    /// Detach the host pool: apply any remaining journal and return the
+    /// lifetime stats.  Leaves the engine exactly as an unattached one
+    /// (engine reuse across runs must not leak pool state).
+    pub fn detach_host_pool(&mut self) -> PoolStats {
+        match self.host_pool.take() {
+            Some(mut pool) => {
+                pool.flush();
+                pool.lifetime
+            }
+            None => PoolStats::default(),
         }
     }
 

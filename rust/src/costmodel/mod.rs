@@ -181,6 +181,19 @@ impl CostModel {
     pub fn nvme_transfer(&self, bytes: f64) -> f64 {
         self.hw.nvme_latency_s + bytes / self.hw.nvme_gbps
     }
+
+    /// Host-pool->device transfer duration for `bytes` when `lanes`
+    /// live replicas draw on the shared host-memory link
+    /// ([`HardwareConfig::host_link_gbps`]): each lane's effective
+    /// bandwidth is its own PCIe ceiling capped by an equal share of
+    /// the host budget.  `lanes <= host_link_gbps / pcie_gbps` rides at
+    /// full lane speed (the duration then equals
+    /// [`CostModel::pcie_transfer`]); beyond that the shared link is
+    /// the bottleneck and the surplus shows up as contention stall.
+    pub fn host_pool_transfer(&self, bytes: f64, lanes: usize) -> f64 {
+        let share = self.hw.host_link_gbps / lanes.max(1) as f64;
+        self.hw.pcie_latency_s + bytes / self.hw.pcie_gbps.min(share)
+    }
 }
 
 #[cfg(test)]
@@ -203,6 +216,25 @@ mod tests {
         let tb = c.pcie_transfer(c.expert_weight_bytes(Precision::Bf16));
         assert!(tb > 20e-3 && tb < 35e-3, "tb={tb}");
         assert!(c.nvme_transfer(b) > t);
+    }
+
+    #[test]
+    fn host_pool_transfer_contends_past_the_link_budget() {
+        let c = cm();
+        let b = c.expert_weight_bytes(Precision::Int4);
+        // default host link = 2x pcie: 1 and 2 lanes ride at full lane
+        // speed, the contended duration degenerates to pcie_transfer
+        assert_eq!(c.host_pool_transfer(b, 0), c.pcie_transfer(b));
+        assert_eq!(c.host_pool_transfer(b, 1), c.pcie_transfer(b));
+        assert_eq!(c.host_pool_transfer(b, 2), c.pcie_transfer(b));
+        // beyond the budget each lane's share shrinks monotonically
+        let t4 = c.host_pool_transfer(b, 4);
+        let t8 = c.host_pool_transfer(b, 8);
+        assert!(t4 > c.pcie_transfer(b), "4 lanes must contend");
+        assert!(t8 > t4, "more lanes, more stall");
+        // 8 lanes over a 25.6 GB/s link = 3.2 GB/s per lane
+        let expect = c.hw.pcie_latency_s + b / 3.2e9;
+        assert!((t8 - expect).abs() < 1e-12, "t8={t8} expect={expect}");
     }
 
     #[test]

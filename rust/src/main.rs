@@ -7,7 +7,7 @@
 //!                   [--arrival poisson|bursty|ramp] [--sessions 8] [--sched fifo|rr|slo] \
 //!                   [--max-decode-batch 8] [--replicas 4] [--dispatch rr|jsq|affinity] \
 //!                   [--replica-hw 24 --replica-hw 12:8] [--fail 30@0] [--drain 45@1] \
-//!                   [--parallel 4]
+//!                   [--parallel 4] [--host-pool 2:shared]
 //! dymoe experiment  <fig1|...|table3|all> [--items N] [--requests N] [--models a,b]
 //! dymoe timeline    --model mixtral-mini --vram 16
 //! ```
@@ -25,7 +25,8 @@ use dymoe::baselines::{
     AccelerateStatic, Fiddler, LoadOnDemand, MixtralOffloading, MoeInfinity, Uniform,
 };
 use dymoe::config::{
-    ChurnEvent, ChurnKind, HardwareConfig, LowMode, PolicyConfig, ServingConfig, SystemConfig,
+    ChurnEvent, ChurnKind, HardwareConfig, HostPoolConfig, LowMode, PolicyConfig,
+    ServingConfig, SystemConfig,
 };
 use dymoe::coordinator::engine::{Engine, EngineOptions};
 use dymoe::coordinator::strategy::{DyMoEStrategy, Strategy};
@@ -194,13 +195,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     t.row(report.summary_row(&engine.strategy.name()));
     println!("\n{}", t.render());
     println!(
-        "cache: {} hits / {} misses (hit rate {:.2}), {} promotions, {} reuses, {} evictions",
+        "cache: {} hits / {} misses (hit rate {:.2}), {} promotions, {} reuses, \
+         {} evictions, {} replacements",
         engine.cache.stats.hits,
         engine.cache.stats.misses,
         engine.cache.stats.hit_rate(),
         engine.cache.stats.promotions,
         engine.cache.stats.conservative_reuses,
-        engine.cache.stats.evictions
+        engine.cache.stats.evictions,
+        engine.cache.stats.replacements
     );
     println!(
         "prefetch: {} issued, {} useful ({:.2} accuracy); transferred {:.2} GB; \
@@ -262,6 +265,13 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
             );
         }
     }
+    // Shared host expert tier under the per-replica VRAM caches; absent
+    // (the default) keeps every code path bitwise-identical to before.
+    let host_pool = match args.get("host-pool", "").as_str() {
+        "" => None,
+        "true" => bail!("--host-pool wants CAP_GB[:static|shared|pinned]"),
+        spec => Some(HostPoolConfig::parse_spec(spec)?),
+    };
     let serving = ServingConfig {
         max_sessions,
         ttft_slo_s: args
@@ -282,6 +292,7 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
         replicas,
         churn,
         parallel,
+        host_pool,
     };
     // Heterogeneous replicas: each `--replica-hw VRAM[:PCIE[:TFLOPS]]`
     // occurrence defines one hardware class; specs cycle over the
@@ -329,6 +340,15 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
             .map(|e| format!("{} {}@{}", e.kind.name(), e.at, e.replica))
             .collect();
         println!("churn schedule: {}", sched.join(", "));
+    }
+    if let Some(hp) = &serving.host_pool {
+        println!(
+            "host pool: {:.2} GB host tier ({} partitioning), host link {:.1} GB/s \
+             shared by live replicas",
+            hp.capacity_bytes as f64 / 1e9,
+            hp.policy.name(),
+            sys.hardware.host_link_gbps / 1e9,
+        );
     }
     if parallel > 1 {
         println!("parallel ticking on {parallel} worker thread(s) (bit-identical to serial)");
@@ -442,6 +462,18 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
         outcome.utilization.nvme * 100.0,
         outcome.peak_kv_bytes as f64 / 1e6,
     );
+    if cfg.serving.host_pool.is_some() {
+        println!(
+            "host pool: {} hits / {} SSD fills (hit rate {:.2}), {} evictions, \
+             staged {:.2} GB, host-link contention stall {:.3}s",
+            cluster.pool.host_hits,
+            cluster.pool.ssd_fills,
+            cluster.pool.hit_rate(),
+            cluster.pool.evictions,
+            cluster.pool.inserted_bytes as f64 / 1e9,
+            cluster.pool.stall_s,
+        );
+    }
     for (i, b) in cluster.replicas.iter().enumerate() {
         println!(
             "replica {i} [{}] ({}): {} dispatched, {} completed, goodput {:.3} r/s, \
@@ -460,14 +492,15 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
     for (i, engine) in engines.iter().enumerate() {
         println!(
             "replica {i} cache: {} hits / {} misses (hit rate {:.2}), {} promotions, \
-             {} reuses, {} evictions; prefetch {} issued, {} useful ({:.2} accuracy); \
-             transferred {:.2} GB; {} expert execs ({} skipped, {} on CPU)",
+             {} reuses, {} evictions, {} replacements; prefetch {} issued, {} useful \
+             ({:.2} accuracy); transferred {:.2} GB; {} expert execs ({} skipped, {} on CPU)",
             engine.cache.stats.hits,
             engine.cache.stats.misses,
             engine.cache.stats.hit_rate(),
             engine.cache.stats.promotions,
             engine.cache.stats.conservative_reuses,
             engine.cache.stats.evictions,
+            engine.cache.stats.replacements,
             engine.prefetch_stats.issued,
             engine.prefetch_stats.useful,
             engine.prefetch_stats.accuracy(),
@@ -568,6 +601,17 @@ fn fleet_json(
     );
     churn.insert("max_retries".to_string(), num(cluster.churn.max_retries as f64));
     root.insert("churn".to_string(), Json::Obj(churn));
+    let mut pool = BTreeMap::new();
+    pool.insert("host_hits".to_string(), num(cluster.pool.host_hits as f64));
+    pool.insert("ssd_fills".to_string(), num(cluster.pool.ssd_fills as f64));
+    pool.insert("hit_rate".to_string(), num(cluster.pool.hit_rate()));
+    pool.insert("evictions".to_string(), num(cluster.pool.evictions as f64));
+    pool.insert(
+        "inserted_bytes".to_string(),
+        num(cluster.pool.inserted_bytes as f64),
+    );
+    pool.insert("stall_s".to_string(), num(cluster.pool.stall_s));
+    root.insert("host_pool".to_string(), Json::Obj(pool));
     root.insert("cluster".to_string(), metrics_obj(&cluster.fleet));
     let per_replica: Vec<Json> = cluster
         .replicas
@@ -675,6 +719,10 @@ fn usage() -> String {
      \x20              at T and runs down what it already holds)]\n\
      \x20             [--parallel N (tick independent replicas on N worker threads;\n\
      \x20              bit-identical outcome to serial, wall-clock only)]\n\
+     \x20             [--host-pool CAP_GB[:static|shared|pinned] (shared host-RAM\n\
+     \x20              expert tier between the per-replica VRAM caches and SSD;\n\
+     \x20              live replicas' PCIe lanes contend for one host link;\n\
+     \x20              absent = no pool, bitwise-identical to before)]\n\
      \x20             [--json [PATH] (write cluster + per-replica summary JSON)]\n\
      \x20             [--trace-out PATH (write a Perfetto/chrome://tracing-loadable\n\
      \x20              Chrome trace: one process per replica, per-channel threads\n\

@@ -1,0 +1,612 @@
+//! Cross-replica shared host expert pool: the host-RAM tier between the
+//! per-replica VRAM caches ([`crate::coordinator::cache`]) and SSD.
+//!
+//! The co-located edge deployment keeps ONE staged copy of each expert
+//! in host memory and feeds every replica's PCIe lane from it (HOBBIT's
+//! three-level VRAM/host/SSD caching, EdgeMoE's expert memory
+//! hierarchy).  A VRAM-cache miss therefore resolves in two steps:
+//! probe the host pool (cheap — the bytes are already staged), and only
+//! on a pool miss pay the SSD fill before the PCIe hop.  The
+//! host<->device link itself is shared: live replicas' lanes draw on
+//! one host bandwidth budget ([`crate::costmodel::CostModel::host_pool_transfer`]),
+//! so wide co-locations see contention stalls.
+//!
+//! ## Determinism under `--parallel`
+//!
+//! The cluster advances replicas concurrently between boundary events,
+//! so the pool must never let one replica's mid-window writes influence
+//! another replica's same-window behaviour (the interleaving is
+//! nondeterministic).  The discipline is **journal + barrier flush**:
+//!
+//! * during an advance window an engine only *reads* the shared pool
+//!   (a frozen snapshot) and records its own fills / touches in a
+//!   replica-local journal ([`HostPoolHandle`]), consulting that
+//!   journal as an overlay for its own staged copies;
+//! * at every event boundary the cluster flushes journals into the
+//!   shared pool in ascending replica order — single-threaded, same
+//!   order serial and parallel — so the shared state every replica
+//!   sees next window is identical bit for bit.
+//!
+//! Two replicas that fill the same expert in one window both pay the
+//! SSD fill (honest: neither could see the other's in-flight copy);
+//! the flush keeps one staged copy, folding in the earlier completion
+//! time.  LRU touches merge as `max(last_use)`, which is commutative —
+//! flush order cannot change the outcome.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+use crate::config::{HostPoolConfig, PoolPolicyKind};
+use crate::model::assets::ExpertKey;
+use crate::quant::Precision;
+
+use super::vram::VramBudget;
+
+/// Host-pool traffic breakdown.  Hits / fills / stalls are observed by
+/// each replica's engine ([`HostPoolHandle::lifetime`]); evictions and
+/// inserted bytes are accounted shared-side at flush
+/// ([`HostExpertPool::stats`]).  [`PoolStats::merge`] sums either kind,
+/// so merging the per-replica lifetimes with the shared stats yields
+/// the cluster totals.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PoolStats {
+    /// VRAM misses served from a staged host copy (no SSD traffic).
+    pub host_hits: u64,
+    /// VRAM misses that fell through to an SSD fill.
+    pub ssd_fills: u64,
+    /// Extra seconds of PCIe transfer time attributable to host-link
+    /// contention (the contended duration minus the uncontended one).
+    pub stall_s: f64,
+    /// Staged copies dropped to make room (capacity evictions).
+    pub evictions: u64,
+    /// Bytes staged into the pool (fills and precision replacements).
+    pub inserted_bytes: u64,
+}
+
+impl PoolStats {
+    pub fn merge(&mut self, o: &PoolStats) {
+        self.host_hits += o.host_hits;
+        self.ssd_fills += o.ssd_fills;
+        self.stall_s += o.stall_s;
+        self.evictions += o.evictions;
+        self.inserted_bytes += o.inserted_bytes;
+    }
+
+    /// Fraction of host-tier lookups served without SSD traffic.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.host_hits + self.ssd_fills;
+        if total == 0 {
+            0.0
+        } else {
+            self.host_hits as f64 / total as f64
+        }
+    }
+}
+
+/// One staged expert copy.  Mirrors the VRAM cache's precision rules:
+/// at most one copy per expert per shard, a higher-precision fill
+/// replaces a lower one in place, and a copy at `>=` the requested
+/// precision serves the request (conservative reuse).
+#[derive(Debug, Clone)]
+struct PoolEntry {
+    prec: Precision,
+    bytes: u64,
+    /// Virtual time the SSD fill completes; a replica hitting earlier
+    /// waits until the staging is done.
+    ready_at: f64,
+    /// Virtual time of the last touch (LRU recency; merged as `max`).
+    last_use: f64,
+}
+
+/// The shared host-RAM expert tier, capacity-budgeted via
+/// [`VramBudget`].  Entries are keyed `(shard, expert)`: the Static
+/// policy gives each replica a private shard (the independent-caches
+/// baseline at equal total budget); Shared and Pinned use one shard, so
+/// "one staged copy per expert across the pool" holds structurally.
+#[derive(Debug)]
+pub struct HostExpertPool {
+    policy: PoolPolicyKind,
+    /// One budget per shard: `replicas` under Static, one otherwise.
+    budgets: Vec<VramBudget>,
+    map: BTreeMap<(usize, ExpertKey), PoolEntry>,
+    /// Live replicas drawing on the host link (failures give lanes
+    /// back; drains keep theirs until the run ends).
+    lanes: usize,
+    /// Shared-side accounting (evictions, inserted bytes) — applied at
+    /// flush, deterministically ordered by replica index.
+    pub stats: PoolStats,
+}
+
+impl HostExpertPool {
+    pub fn new(cfg: &HostPoolConfig, replicas: usize) -> HostExpertPool {
+        let n = replicas.max(1);
+        let budgets = match cfg.policy {
+            PoolPolicyKind::Static => {
+                vec![VramBudget::new(cfg.capacity_bytes / n as u64); n]
+            }
+            _ => vec![VramBudget::new(cfg.capacity_bytes)],
+        };
+        HostExpertPool {
+            policy: cfg.policy,
+            budgets,
+            map: BTreeMap::new(),
+            lanes: n,
+            stats: PoolStats::default(),
+        }
+    }
+
+    fn shard_of(&self, replica: usize) -> usize {
+        match self.policy {
+            PoolPolicyKind::Static => replica.min(self.budgets.len() - 1),
+            _ => 0,
+        }
+    }
+
+    pub fn policy(&self) -> PoolPolicyKind {
+        self.policy
+    }
+
+    /// Live replicas currently contending for the host link.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// A replica failed: its lane stops drawing on the link.  (Drained
+    /// replicas keep their lane — they still run down their work.)
+    pub fn fail_lane(&mut self) {
+        self.lanes = self.lanes.saturating_sub(1).max(1);
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.budgets.iter().map(|b| b.capacity()).sum()
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.budgets.iter().map(|b| b.used()).sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Probe `replica`'s view of the pool without mutating anything
+    /// (the read path engines use mid-window; recency is journaled by
+    /// the handle and applied at flush).
+    pub fn probe(
+        &self,
+        replica: usize,
+        key: ExpertKey,
+        wanted: Precision,
+    ) -> Option<(Precision, f64)> {
+        self.map
+            .get(&(self.shard_of(replica), key))
+            .filter(|e| e.prec.satisfies(wanted))
+            .map(|e| (e.prec, e.ready_at))
+    }
+
+    /// Apply one replica's window journal.  Called only from
+    /// [`HostPoolHandle::flush`] at event boundaries, in ascending
+    /// replica order — the single-threaded step that makes the shared
+    /// state deterministic under parallel execution.
+    fn apply(&mut self, replica: usize, journal: Journal) {
+        let shard = self.shard_of(replica);
+        for (key, t) in journal.touches {
+            if let Some(e) = self.map.get_mut(&(shard, key)) {
+                e.last_use = e.last_use.max(t);
+            }
+        }
+        for (key, ins) in journal.inserts {
+            self.insert(shard, key, ins);
+        }
+    }
+
+    fn insert(&mut self, shard: usize, key: ExpertKey, ins: JournalInsert) {
+        let slot = (shard, key);
+        if let Some(e) = self.map.get_mut(&slot) {
+            if e.prec.satisfies(ins.prec) {
+                // Duplicate fill (another replica staged it this window,
+                // or a lower-precision refill): keep the staged copy,
+                // fold in recency and the earlier completion time.
+                e.last_use = e.last_use.max(ins.last_use);
+                if e.prec == ins.prec {
+                    e.ready_at = e.ready_at.min(ins.ready_at);
+                }
+                return;
+            }
+        }
+        let replaced = self.map.get(&slot).map(|e| e.bytes).unwrap_or(0);
+        match self.policy {
+            // First-touch pinning: never evict others to make room.  An
+            // entry may still replace ITS OWN lower-precision copy if
+            // the upgrade fits; otherwise the fill stays transient.
+            PoolPolicyKind::Pinned => {
+                if ins.bytes > self.budgets[shard].free() + replaced {
+                    return;
+                }
+            }
+            // LRU shards: feasible iff the entry fits an empty shard
+            // (everything is evictable); oversized fills are transient.
+            _ => {
+                if ins.bytes > self.budgets[shard].capacity() {
+                    return;
+                }
+            }
+        }
+        if replaced > 0 {
+            let e = self.map.remove(&slot).expect("replaced entry exists");
+            self.budgets[shard].release(e.bytes);
+        }
+        while !self.budgets[shard].fits(ins.bytes) {
+            let victim = self.lru_victim(shard).expect("feasible by construction");
+            let e = self.map.remove(&victim).expect("victim exists");
+            self.budgets[shard].release(e.bytes);
+            self.stats.evictions += 1;
+        }
+        self.budgets[shard].alloc(ins.bytes).expect("fits by construction");
+        self.stats.inserted_bytes += ins.bytes;
+        self.map.insert(
+            slot,
+            PoolEntry {
+                prec: ins.prec,
+                bytes: ins.bytes,
+                ready_at: ins.ready_at,
+                last_use: ins.last_use,
+            },
+        );
+    }
+
+    /// Least-recently-used entry of one shard; virtual-time recency,
+    /// ties by expert key (total, deterministic order).
+    fn lru_victim(&self, shard: usize) -> Option<(usize, ExpertKey)> {
+        self.map
+            .iter()
+            .filter(|((s, _), _)| *s == shard)
+            .min_by(|(ka, ea), (kb, eb)| {
+                ea.last_use.total_cmp(&eb.last_use).then(ka.1.cmp(&kb.1))
+            })
+            .map(|(k, _)| *k)
+    }
+}
+
+/// One staged fill recorded in a replica's window journal.
+#[derive(Debug, Clone, Copy)]
+struct JournalInsert {
+    prec: Precision,
+    bytes: u64,
+    ready_at: f64,
+    last_use: f64,
+}
+
+/// A replica's local overlay over the frozen shared pool: fills and
+/// touches accumulated during an advance window, applied at the next
+/// boundary flush.
+#[derive(Debug, Default)]
+struct Journal {
+    inserts: BTreeMap<ExpertKey, JournalInsert>,
+    touches: Vec<(ExpertKey, f64)>,
+}
+
+/// What [`HostPoolHandle::acquire`] resolved a VRAM miss to.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PoolAccess {
+    /// Staged in the host tier; the bytes are usable at `ready_at`.
+    Hit { ready_at: f64 },
+    /// Not staged: the caller pays the SSD fill and registers it with
+    /// [`HostPoolHandle::fill`].
+    Fill,
+}
+
+/// One replica's handle on the shared pool: the read path engines use
+/// mid-window plus the journal that defers every write to the boundary
+/// flush.  Holding only read locks between flushes is what lets
+/// `--parallel` advance replicas concurrently without changing a bit.
+#[derive(Debug)]
+pub struct HostPoolHandle {
+    shared: Arc<RwLock<HostExpertPool>>,
+    replica: usize,
+    journal: Journal,
+    /// Cumulative per-replica stats over the handle's lifetime
+    /// (hits / fills / stall; shared-side accounting lives on
+    /// [`HostExpertPool::stats`]).
+    pub lifetime: PoolStats,
+}
+
+impl HostPoolHandle {
+    pub fn new(shared: Arc<RwLock<HostExpertPool>>, replica: usize) -> HostPoolHandle {
+        HostPoolHandle {
+            shared,
+            replica,
+            journal: Journal::default(),
+            lifetime: PoolStats::default(),
+        }
+    }
+
+    pub fn replica(&self) -> usize {
+        self.replica
+    }
+
+    /// Resolve a VRAM miss against the host tier at virtual time `now`:
+    /// this replica's own window fills first (journal overlay), then
+    /// the frozen shared snapshot.  A hit journals an LRU touch; a
+    /// [`PoolAccess::Fill`] commits the caller to an SSD fill.
+    pub fn acquire(&mut self, key: ExpertKey, wanted: Precision, now: f64) -> PoolAccess {
+        if let Some(j) = self.journal.inserts.get_mut(&key) {
+            if j.prec.satisfies(wanted) {
+                j.last_use = j.last_use.max(now);
+                self.lifetime.host_hits += 1;
+                return PoolAccess::Hit { ready_at: j.ready_at };
+            }
+        }
+        let hit = self
+            .shared
+            .read()
+            .expect("host pool lock poisoned")
+            .probe(self.replica, key, wanted);
+        if let Some((_, ready_at)) = hit {
+            self.journal.touches.push((key, now));
+            self.lifetime.host_hits += 1;
+            return PoolAccess::Hit { ready_at };
+        }
+        PoolAccess::Fill
+    }
+
+    /// Register the SSD fill an [`PoolAccess::Fill`] committed to: the
+    /// staged copy becomes visible to this replica immediately (journal
+    /// overlay) and to the cluster at the next boundary flush.
+    pub fn fill(&mut self, key: ExpertKey, prec: Precision, bytes: u64, ready_at: f64, now: f64) {
+        self.lifetime.ssd_fills += 1;
+        let e = self
+            .journal
+            .inserts
+            .entry(key)
+            .or_insert(JournalInsert { prec, bytes, ready_at, last_use: now });
+        if !e.prec.satisfies(prec) {
+            // precision upgrade within the window replaces the copy
+            *e = JournalInsert { prec, bytes, ready_at, last_use: now };
+        } else {
+            e.last_use = e.last_use.max(now);
+            if e.prec == prec {
+                e.ready_at = e.ready_at.min(ready_at);
+            }
+        }
+    }
+
+    /// Account host-link contention stall (the contended PCIe duration
+    /// minus the uncontended one).
+    pub fn note_stall(&mut self, stall_s: f64) {
+        self.lifetime.stall_s += stall_s.max(0.0);
+    }
+
+    /// Live replicas currently sharing the host link.
+    pub fn lanes(&self) -> usize {
+        self.shared.read().expect("host pool lock poisoned").lanes()
+    }
+
+    /// Apply this replica's window journal to the shared pool.  The
+    /// cluster calls this at event boundaries in ascending replica
+    /// order (identical serial and parallel); cheap no-op when the
+    /// window recorded nothing.
+    pub fn flush(&mut self) {
+        if self.journal.inserts.is_empty() && self.journal.touches.is_empty() {
+            return;
+        }
+        let journal = std::mem::take(&mut self.journal);
+        self.shared
+            .write()
+            .expect("host pool lock poisoned")
+            .apply(self.replica, journal);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn k(l: usize, e: usize) -> ExpertKey {
+        ExpertKey::new(l, e)
+    }
+
+    fn pool(
+        cap: u64,
+        policy: PoolPolicyKind,
+        replicas: usize,
+    ) -> Arc<RwLock<HostExpertPool>> {
+        Arc::new(RwLock::new(HostExpertPool::new(
+            &HostPoolConfig { capacity_bytes: cap, policy },
+            replicas,
+        )))
+    }
+
+    #[test]
+    fn shared_policy_shares_fills_across_replicas() {
+        let p = pool(100, PoolPolicyKind::Shared, 2);
+        let mut h0 = HostPoolHandle::new(p.clone(), 0);
+        let mut h1 = HostPoolHandle::new(p.clone(), 1);
+        assert_eq!(h0.acquire(k(0, 0), Precision::Int4, 1.0), PoolAccess::Fill);
+        h0.fill(k(0, 0), Precision::Int4, 40, 1.5, 1.0);
+        // same replica, same window: the journal overlay serves it
+        assert_eq!(
+            h0.acquire(k(0, 0), Precision::Int4, 1.6),
+            PoolAccess::Hit { ready_at: 1.5 }
+        );
+        // other replica, same window: the fill is not visible yet
+        assert_eq!(h1.acquire(k(0, 0), Precision::Int4, 1.6), PoolAccess::Fill);
+        h0.flush();
+        // after the boundary flush every replica sees the staged copy
+        assert_eq!(
+            h1.acquire(k(0, 0), Precision::Int4, 2.0),
+            PoolAccess::Hit { ready_at: 1.5 }
+        );
+        // conservative reuse across precisions, like the VRAM cache
+        assert_eq!(
+            h1.acquire(k(0, 0), Precision::Int2, 2.1),
+            PoolAccess::Hit { ready_at: 1.5 }
+        );
+        assert_eq!(h0.lifetime.host_hits, 1);
+        assert_eq!(h0.lifetime.ssd_fills, 1);
+        assert_eq!(h1.lifetime.host_hits, 2);
+        assert_eq!(p.read().unwrap().used_bytes(), 40);
+    }
+
+    #[test]
+    fn static_policy_keeps_shards_private() {
+        let p = pool(100, PoolPolicyKind::Static, 2);
+        let mut h0 = HostPoolHandle::new(p.clone(), 0);
+        let mut h1 = HostPoolHandle::new(p.clone(), 1);
+        h0.fill(k(0, 0), Precision::Int4, 40, 1.0, 0.5);
+        h0.flush();
+        // replica 1's shard never sees replica 0's fill
+        assert_eq!(h1.acquire(k(0, 0), Precision::Int4, 2.0), PoolAccess::Fill);
+        assert_eq!(h0.acquire(k(0, 0), Precision::Int4, 2.0), PoolAccess::Hit { ready_at: 1.0 });
+        // each shard got half the capacity
+        let shard_cap = 100 / 2;
+        h1.fill(k(9, 9), Precision::Int4, shard_cap + 1, 1.0, 0.5);
+        h1.flush();
+        let g = p.read().unwrap();
+        assert_eq!(g.len(), 1, "oversized static fill must stay transient");
+        assert_eq!(g.used_bytes(), 40);
+    }
+
+    #[test]
+    fn pinned_policy_never_evicts() {
+        let p = pool(50, PoolPolicyKind::Pinned, 2);
+        let mut h = HostPoolHandle::new(p.clone(), 0);
+        h.fill(k(0, 0), Precision::Int4, 40, 1.0, 0.5);
+        h.flush();
+        // no room: second fill is transient, the pin survives
+        h.fill(k(0, 1), Precision::Int4, 40, 2.0, 1.5);
+        h.flush();
+        let g = p.read().unwrap();
+        assert_eq!(g.probe(1, k(0, 0), Precision::Int4), Some((Precision::Int4, 1.0)));
+        assert_eq!(g.probe(1, k(0, 1), Precision::Int4), None);
+        assert_eq!(g.stats.evictions, 0, "pinned pool must never evict");
+        assert_eq!(g.used_bytes(), 40);
+    }
+
+    #[test]
+    fn shared_lru_evicts_least_recent() {
+        let p = pool(80, PoolPolicyKind::Shared, 2);
+        let mut h = HostPoolHandle::new(p.clone(), 0);
+        h.fill(k(0, 0), Precision::Int4, 40, 1.0, 1.0);
+        h.fill(k(0, 1), Precision::Int4, 40, 2.0, 2.0);
+        h.flush();
+        // touch 0 so 1 becomes LRU
+        assert!(matches!(h.acquire(k(0, 0), Precision::Int4, 3.0), PoolAccess::Hit { .. }));
+        h.flush();
+        h.fill(k(0, 2), Precision::Int4, 40, 4.0, 4.0);
+        h.flush();
+        let g = p.read().unwrap();
+        assert!(g.probe(0, k(0, 0), Precision::Int4).is_some(), "touched entry evicted");
+        assert!(g.probe(0, k(0, 1), Precision::Int4).is_none(), "LRU entry kept");
+        assert!(g.probe(0, k(0, 2), Precision::Int4).is_some());
+        assert_eq!(g.stats.evictions, 1);
+    }
+
+    #[test]
+    fn precision_upgrade_replaces_in_place() {
+        let p = pool(100, PoolPolicyKind::Shared, 1);
+        let mut h = HostPoolHandle::new(p.clone(), 0);
+        h.fill(k(0, 0), Precision::Int2, 10, 1.0, 1.0);
+        h.flush();
+        // a higher-precision request misses the staged low copy ...
+        assert_eq!(h.acquire(k(0, 0), Precision::Int4, 2.0), PoolAccess::Fill);
+        h.fill(k(0, 0), Precision::Int4, 40, 2.5, 2.0);
+        h.flush();
+        let g = p.read().unwrap();
+        // ... and the upgrade swapped bytes in place: one copy, no eviction
+        assert_eq!(g.len(), 1);
+        assert_eq!(g.used_bytes(), 40);
+        assert_eq!(g.probe(0, k(0, 0), Precision::Int4), Some((Precision::Int4, 2.5)));
+        assert_eq!(g.stats.evictions, 0);
+    }
+
+    #[test]
+    fn duplicate_window_fills_keep_one_copy_and_min_ready() {
+        let p = pool(100, PoolPolicyKind::Shared, 2);
+        let mut h0 = HostPoolHandle::new(p.clone(), 0);
+        let mut h1 = HostPoolHandle::new(p.clone(), 1);
+        // both replicas fill the same expert in one window (neither can
+        // see the other's in-flight copy — both honestly pay the SSD)
+        h0.fill(k(0, 0), Precision::Int4, 40, 3.0, 1.0);
+        h1.fill(k(0, 0), Precision::Int4, 40, 2.0, 1.0);
+        h0.flush();
+        h1.flush();
+        let g = p.read().unwrap();
+        assert_eq!(g.len(), 1, "flush must keep one staged copy");
+        assert_eq!(g.used_bytes(), 40);
+        // the earlier completion wins
+        assert_eq!(g.probe(0, k(0, 0), Precision::Int4), Some((Precision::Int4, 2.0)));
+    }
+
+    #[test]
+    fn failed_lanes_return_bandwidth() {
+        let p = pool(100, PoolPolicyKind::Shared, 4);
+        assert_eq!(p.read().unwrap().lanes(), 4);
+        p.write().unwrap().fail_lane();
+        assert_eq!(p.read().unwrap().lanes(), 3);
+        for _ in 0..10 {
+            p.write().unwrap().fail_lane();
+        }
+        assert_eq!(p.read().unwrap().lanes(), 1, "lanes must floor at 1");
+    }
+
+    /// Byte conservation under arbitrary acquire/fill/flush
+    /// interleavings, for every policy: tier budgets are never
+    /// exceeded, each shard's ledger equals the sum of its staged
+    /// entries, shared policies keep one copy per expert, and the
+    /// pinned pool never evicts.
+    #[test]
+    fn prop_pool_conserves_bytes() {
+        prop::check("host-pool byte conservation", 40, |rng| {
+            let replicas = rng.range(1, 4);
+            let policy = PoolPolicyKind::ALL[rng.range(0, 2)];
+            let cap = rng.range(50, 300) as u64;
+            let p = pool(cap, policy, replicas);
+            let mut handles: Vec<HostPoolHandle> =
+                (0..replicas).map(|r| HostPoolHandle::new(p.clone(), r)).collect();
+            let precs = [Precision::Int2, Precision::Int4, Precision::Int8];
+            let mut t = 0.0;
+            for _ in 0..rng.range(30, 120) {
+                t += rng.f64();
+                let r = rng.range(0, replicas - 1);
+                let key = k(rng.range(0, 2), rng.range(0, 5));
+                let prec = precs[rng.range(0, 2)];
+                if handles[r].acquire(key, prec, t) == PoolAccess::Fill {
+                    let bytes = rng.range(5, 60) as u64;
+                    handles[r].fill(key, prec, bytes, t + 0.1, t);
+                }
+                if rng.f64() < 0.4 {
+                    for h in handles.iter_mut() {
+                        h.flush();
+                    }
+                    let g = p.read().unwrap();
+                    assert!(g.used_bytes() <= g.capacity(), "pool budget exceeded");
+                    for (shard, b) in g.budgets.iter().enumerate() {
+                        let sum: u64 = g
+                            .map
+                            .iter()
+                            .filter(|((s, _), _)| *s == shard)
+                            .map(|(_, e)| e.bytes)
+                            .sum();
+                        assert_eq!(b.used(), sum, "shard {shard} ledger drifted");
+                        assert!(b.used() <= b.capacity(), "shard {shard} over budget");
+                    }
+                    if policy != PoolPolicyKind::Static {
+                        assert!(
+                            g.map.keys().all(|(s, _)| *s == 0),
+                            "shared pool grew a second shard"
+                        );
+                    }
+                    if policy == PoolPolicyKind::Pinned {
+                        assert_eq!(g.stats.evictions, 0, "pinned pool evicted");
+                    }
+                }
+            }
+        });
+    }
+}

@@ -8,8 +8,10 @@
 //! arrival times.  This resource-availability formulation is equivalent
 //! to an event-queue DES for our pipeline topology and much cheaper.
 
+pub mod host_pool;
 pub mod timeline;
 pub mod vram;
+pub use host_pool::{HostExpertPool, HostPoolHandle, PoolAccess, PoolStats};
 
 pub use timeline::{BusyTotals, EventKind, Timeline, TraceEvent, TraceMeta, TracePhase};
 pub use vram::VramBudget;

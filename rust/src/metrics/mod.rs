@@ -12,8 +12,10 @@
 /// large traces.
 ///
 /// Explicit edge behavior:
-/// * **empty** series: `mean`/`percentile` return `0.0`, `min` returns
-///   `+inf`, `max` returns `0.0` (unchanged from the original);
+/// * **empty** series: every statistic — `mean`, `percentile`, `min`,
+///   `max` — returns `0.0`.  The sentinels are deliberately symmetric
+///   and finite: a zero-completion run feeds these straight into JSON
+///   output, and `+inf` is not representable there;
 /// * **single sample**: every percentile returns that sample;
 /// * **NaN** samples are rejected at `push` (debug assert; silently
 ///   dropped in release), so the sorted order is total and `percentile`
@@ -76,7 +78,7 @@ impl Series {
     }
 
     pub fn min(&self) -> f64 {
-        self.sorted_samples().first().copied().unwrap_or(f64::INFINITY)
+        self.sorted_samples().first().copied().unwrap_or(0.0)
     }
 
     pub fn max(&self) -> f64 {
@@ -133,7 +135,10 @@ mod tests {
         let s = Series::default();
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.percentile(99.0), 0.0);
-        assert_eq!(s.min(), f64::INFINITY);
+        // min and max share the same finite sentinel: an asymmetric
+        // `+inf` min leaked non-finite floats into JSON reports on
+        // zero-completion runs.
+        assert_eq!(s.min(), 0.0);
         assert_eq!(s.max(), 0.0);
     }
 

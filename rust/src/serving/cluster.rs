@@ -91,12 +91,13 @@
 //! [`DispatchPolicy`]: super::policy::DispatchPolicy
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, RwLock};
 
 use anyhow::{ensure, Context, Result};
 
 use crate::config::{ChurnEvent, ChurnKind};
 use crate::coordinator::engine::Engine;
-use crate::memory::BusyTotals;
+use crate::memory::{BusyTotals, HostExpertPool, HostPoolHandle, PoolStats};
 use crate::trace::TraceCapture;
 
 use super::arrival::TimedRequest;
@@ -149,6 +150,14 @@ pub struct ClusterOutcome {
     /// What the run's churn schedule cost (all zero on a churn-free
     /// run).
     pub churn: ChurnStats,
+    /// Cluster-merged host-pool traffic (per-replica hits / fills /
+    /// stall plus shared-side evictions and inserted bytes); all zero
+    /// unless `--host-pool` attached a pool.  Deliberately **not**
+    /// hashed by [`ClusterOutcome::digest`]: the off-path neutrality
+    /// pin compares pool-less runs, and with a pool attached the
+    /// timing impact is already visible through every per-request
+    /// record.
+    pub pool: PoolStats,
 }
 
 impl ClusterOutcome {
@@ -279,19 +288,38 @@ struct ClusterSim<'e> {
     /// Failure instants, indexed by replica — the end of each failed
     /// replica's live interval for capacity accounting.
     died_at: Vec<Option<f64>>,
+    /// The shared host expert tier (`--host-pool`); `None` leaves every
+    /// engine exactly on its pool-less code path.
+    pool: Option<Arc<RwLock<HostExpertPool>>>,
 }
 
 impl<'e> ClusterSim<'e> {
     fn new(engines: &'e mut [Engine], cfg: &FleetConfig) -> ClusterSim<'e> {
         let n = engines.len();
+        let pool = cfg
+            .serving
+            .host_pool
+            .map(|pc| Arc::new(RwLock::new(HostExpertPool::new(&pc, n))));
         ClusterSim {
-            replicas: engines.iter_mut().map(|e| Replica::new(e, cfg)).collect(),
+            replicas: engines
+                .iter_mut()
+                .enumerate()
+                .map(|(i, e)| {
+                    // Attach this run's pool handle — and defensively
+                    // clear any stale one a reused engine might carry,
+                    // so pool-less runs stay bitwise-identical.
+                    e.host_pool =
+                        pool.as_ref().map(|p| HostPoolHandle::new(p.clone(), i));
+                    Replica::new(e, cfg)
+                })
+                .collect(),
             dispatch: cfg.dispatch.build(),
             dispatched: vec![0usize; n],
             churn: ChurnStats::default(),
             retries: HashMap::new(),
             not_before: HashMap::new(),
             died_at: vec![None; n],
+            pool,
         }
     }
 
@@ -313,6 +341,14 @@ impl<'e> ClusterSim<'e> {
                 }
                 self.replicas[e.replica].mark(e.at, "fail");
                 let evac = self.replicas[e.replica].evacuate();
+                // The dead replica's staged fills still help survivors:
+                // apply its journal, then return its host-link lane so
+                // the remaining lanes contend less.  (Draining replicas
+                // keep their lane — they still run down their work.)
+                self.replicas[e.replica].flush_host_pool();
+                if let Some(p) = &self.pool {
+                    p.write().expect("host pool lock poisoned").fail_lane();
+                }
                 self.died_at[e.replica] = Some(e.at);
                 self.churn.failed += 1;
                 self.churn.requeued += evac.requests.len();
@@ -374,9 +410,22 @@ impl<'e> ClusterSim<'e> {
 
     /// Fold the per-replica runs into the cluster view.
     fn finalize(self, total_requests: usize) -> Result<ClusterOutcome> {
-        let ClusterSim { replicas, dispatched, mut churn, retries, died_at, .. } = self;
+        let ClusterSim { mut replicas, dispatched, mut churn, retries, died_at, pool, .. } =
+            self;
         let n = replicas.len();
         churn.max_retries = retries.values().copied().max().unwrap_or(0);
+        // Detach the host pool before finishing the replicas: final
+        // journal flush, per-replica lifetime stats merged with the
+        // shared-side accounting, and every engine handed back exactly
+        // as pool-less as it arrived (engine reuse must not leak pool
+        // state into a later run).
+        let mut pool_stats = PoolStats::default();
+        for r in replicas.iter_mut() {
+            pool_stats.merge(&r.detach_host_pool());
+        }
+        if let Some(p) = &pool {
+            pool_stats.merge(&p.read().expect("host pool lock poisoned").stats);
+        }
         let runs: Vec<_> = replicas.into_iter().map(|r| r.finish()).collect();
         let mut metrics = FleetMetrics::default();
         let mut fleet = FleetOutcome::default();
@@ -464,6 +513,7 @@ impl<'e> ClusterSim<'e> {
             replicas: breakdowns,
             load_imbalance: imbalance,
             churn,
+            pool: pool_stats,
         })
     }
 }
@@ -478,15 +528,20 @@ impl<'e> ClusterSim<'e> {
 /// engines sharing an executor when `parallel > 1`, every other piece
 /// of replica state is owned, the only cross-replica sharing left is
 /// the immutable `Arc<ModelAssets>` (atomically refcounted plain data,
-/// no interior mutability), and each wrapper moves to exactly one
-/// worker for the duration of one phase — the spawning thread touches
-/// no replica until `std::thread::scope` has joined every worker.
+/// no interior mutability) and — on `--host-pool` runs — the
+/// `Arc<RwLock<HostExpertPool>>`, which engines only ever *read*-lock
+/// during an advance window (writes are journaled replica-locally and
+/// applied at the boundary flush on the spawning thread, after the
+/// scope has joined), and each wrapper moves to exactly one worker for
+/// the duration of one phase — the spawning thread touches no replica
+/// until `std::thread::scope` has joined every worker.
 struct SendMut<'a, 'e>(&'a mut Replica<'e>);
 
 // SAFETY: see the type docs — per-replica object graphs are disjoint
-// (distinct executors enforced at entry), exactly one thread accesses
-// a given replica during an advance phase, and the scope joins before
-// the spawner resumes.
+// (distinct executors enforced at entry), the shared host pool is
+// behind an RwLock and only read-locked during a window, exactly one
+// thread accesses a given replica during an advance phase, and the
+// scope joins before the spawner resumes.
 unsafe impl Send for SendMut<'_, '_> {}
 
 /// Advance every replica in `due` until its clock reaches `horizon` or
@@ -639,6 +694,14 @@ pub fn run_cluster(
                 let horizon = q.peek_at().unwrap_or(f64::INFINITY);
                 due.sort_unstable();
                 advance(&mut sim.replicas, &due, horizon, parallel)?;
+                // Host-pool barrier: apply the window's journals in
+                // ascending replica order — single-threaded, the same
+                // order serial and parallel, so the shared tier every
+                // replica sees next window is deterministic.  No-op
+                // without `--host-pool`.
+                for &i in &due {
+                    sim.replicas[i].flush_host_pool();
+                }
                 for &i in &due {
                     if sim.replicas[i].has_work() {
                         q.push(Event::tick(sim.replicas[i].clock(), i));
@@ -754,6 +817,13 @@ pub fn run_cluster_minclock(
             sim.replicas[i]
                 .tick()
                 .with_context(|| format!("replica {i} tick"))?;
+            // Host-pool barrier at the finest granularity: every tick is
+            // its own window here.  Note the two loops are pinned
+            // bit-identical only on pool-less configs — with a pool
+            // attached their visibility windows legitimately differ
+            // (the event-driven loop batches a whole inter-boundary
+            // window before flushing).
+            sim.replicas[i].flush_host_pool();
         }
     }
     sim.finalize(total_requests)

@@ -551,17 +551,42 @@ pub fn prompt_affinity_hash(prompt: &[i32]) -> u64 {
         .fold(0u64, |acc, &t| acc.wrapping_add(splitmix64(t as u64)))
 }
 
+/// Rendezvous (highest-random-weight) weight of one prompt on one
+/// replica: a deterministic per-(prompt, replica) score.  The prompt
+/// goes to the offered replica with the highest weight, so removing a
+/// replica from the offered set only re-homes the prompts whose winner
+/// vanished — every other prompt's argmax is untouched.
+fn rendezvous_weight(prompt_hash: u64, replica_id: usize) -> u64 {
+    splitmix64(prompt_hash ^ splitmix64(replica_id as u64 + 1))
+}
+
 impl DispatchPolicy for ExpertAffinity {
     fn name(&self) -> &'static str {
         "affinity"
     }
 
     fn route(&mut self, req: &TimedRequest, replicas: &[ReplicaDispatchView]) -> usize {
-        // Hash modulo the *offered* replica count: when churn shrinks
-        // the live set, prompts re-map over the survivors (a smaller
-        // consistent target set, not a routing failure).
-        let n = replicas.len().max(1);
-        (prompt_affinity_hash(&req.request.prompt) % n as u64) as usize
+        // Rendezvous hashing over *stable* replica ids (`view.index`),
+        // not positions in the liveness-filtered slice.  The previous
+        // `hash % replicas.len()` re-mapped nearly every prompt's home
+        // replica the moment churn shrank the offered set, destroying
+        // exactly the cache affinity this policy exists to provide; the
+        // argmax form is stable under membership changes by
+        // construction.
+        let h = prompt_affinity_hash(&req.request.prompt);
+        let mut best = 0usize;
+        let mut best_w = 0u64;
+        for (pos, v) in replicas.iter().enumerate() {
+            let w = rendezvous_weight(h, v.index);
+            // Strict `>`: ties keep the earliest position, and offered
+            // views arrive in ascending index order, so tie-breaking is
+            // itself membership-stable.
+            if pos == 0 || w > best_w {
+                best = pos;
+                best_w = w;
+            }
+        }
+        best
     }
 }
 
@@ -801,6 +826,30 @@ mod tests {
             hit[p.route(&treq(t as usize, vec![1, t, t * 3 % 50]), &views)] = true;
         }
         assert!(hit.iter().all(|&h| h), "affinity hash never spread: {hit:?}");
+    }
+
+    #[test]
+    fn dispatch_affinity_survives_membership_changes() {
+        // Rendezvous hashing: removing one replica from the offered set
+        // must re-home ONLY the prompts whose winner was removed.
+        let mut p = DispatchKind::ExpertAffinity.build();
+        let full: Vec<ReplicaDispatchView> = (0..4).map(|i| rv(i, 0, 0)).collect();
+        let prompts: Vec<Vec<i32>> =
+            (0..128i32).map(|t| vec![1, t, t * 7 % 61, t * 13 % 97]).collect();
+        let home: Vec<usize> =
+            prompts.iter().map(|pr| full[p.route(&treq(0, pr.clone()), &full)].index).collect();
+        for dead in 0..4usize {
+            let survivors: Vec<ReplicaDispatchView> =
+                full.iter().copied().filter(|v| v.index != dead).collect();
+            for (pr, &h) in prompts.iter().zip(&home) {
+                let now = survivors[p.route(&treq(0, pr.clone()), &survivors)].index;
+                if h != dead {
+                    assert_eq!(now, h, "prompt {pr:?} moved off surviving replica {h}");
+                } else {
+                    assert_ne!(now, dead, "prompt {pr:?} routed to the removed replica");
+                }
+            }
+        }
     }
 
     #[test]

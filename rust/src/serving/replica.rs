@@ -335,12 +335,16 @@ impl<'e> Replica<'e> {
             // plus one counter sample at the post-tick clock.
             let t1 = self.engine.clock();
             self.engine.timeline.tick_span(t0, t1);
+            let pool = self.engine.host_pool_stats();
             self.samples.push(TickSample {
                 t: t1,
                 queue_depth: self.queued.len(),
                 active_sessions: self.active.len(),
                 kv_bytes: self.active.iter().map(|a| a.sess.kv_bytes()).sum(),
                 cache_bytes: self.engine.cache.used_bytes(),
+                host_pool_hits: pool.host_hits,
+                host_pool_fills: pool.ssd_fills,
+                host_pool_stall_s: pool.stall_s,
             });
         }
         Ok(())
@@ -366,6 +370,18 @@ impl<'e> Replica<'e> {
     /// replica failed or began draining).  No-op unless recording.
     pub fn mark(&mut self, t: f64, label: &str) {
         self.engine.timeline.marker(t, label);
+    }
+
+    /// Apply the engine's host-pool journal to the shared pool (the
+    /// cluster's event-boundary barrier).  No-op without `--host-pool`.
+    pub fn flush_host_pool(&mut self) {
+        self.engine.flush_host_pool();
+    }
+
+    /// Detach the engine's host-pool handle (final flush included) and
+    /// return its lifetime stats; zeros without `--host-pool`.
+    pub fn detach_host_pool(&mut self) -> crate::memory::PoolStats {
+        self.engine.detach_host_pool()
     }
 
     /// Consume the replica, yielding this run's outcome (engine-counter

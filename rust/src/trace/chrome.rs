@@ -14,7 +14,8 @@
 //! - session lifecycle as nestable async events (`ph:"b"/"n"/"e"`:
 //!   arrival -> admitted -> first-token -> done), keyed by request id;
 //! - per-tick counters (`ph:"C"`): queue depth, active sessions, KV
-//!   bytes, expert-cache bytes.
+//!   bytes, expert-cache bytes, and the host-pool tracks (hits, SSD
+//!   fills, contention stall; flat zero without `--host-pool`).
 
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -143,6 +144,11 @@ pub fn chrome_trace(cluster: &ClusterOutcome) -> Json {
                 ("active sessions", sample.active_sessions as f64),
                 ("kv bytes", sample.kv_bytes as f64),
                 ("expert cache bytes", sample.cache_bytes as f64),
+                // Host-pool tracks (flat zero without `--host-pool`;
+                // always emitted so traces diff structurally).
+                ("host pool hits", sample.host_pool_hits as f64),
+                ("host pool fills", sample.host_pool_fills as f64),
+                ("host pool stall s", sample.host_pool_stall_s),
             ] {
                 timed.push((
                     ts,

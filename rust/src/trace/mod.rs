@@ -31,6 +31,13 @@ pub struct TickSample {
     pub kv_bytes: u64,
     /// Expert-cache bytes resident in VRAM.
     pub cache_bytes: u64,
+    /// Cumulative host-pool hits observed by this replica (zero with no
+    /// pool attached; `--host-pool` runs only).
+    pub host_pool_hits: u64,
+    /// Cumulative SSD fills this replica paid into the host pool.
+    pub host_pool_fills: u64,
+    /// Cumulative host-link contention stall seconds.
+    pub host_pool_stall_s: f64,
 }
 
 /// One replica's run-scoped trace streams.  Empty when the engine's

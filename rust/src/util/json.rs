@@ -107,7 +107,13 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN / Infinity tokens; `{n}` would
+                    // emit `NaN` or `inf` and make the document
+                    // unparseable.  Null is the closest representable
+                    // value for "no meaningful number here".
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -370,6 +376,23 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("123abc").is_err());
         assert!(Json::parse("{\"a\":1} x").is_err());
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // A bare `write!("{n}")` on these produced `inf` / `NaN`
+        // tokens, which this parser (and every strict JSON parser)
+        // rejects — the document must stay machine-readable even when
+        // a statistic is degenerate.
+        for v in [f64::INFINITY, f64::NEG_INFINITY, f64::NAN] {
+            let doc = obj(vec![("v", num(v))]);
+            assert_eq!(doc.to_string(), r#"{"v":null}"#);
+            let re = Json::parse(&doc.to_string()).unwrap();
+            assert_eq!(*re.get("v").unwrap(), Json::Null);
+        }
+        // Finite values are untouched.
+        assert_eq!(num(2.5).to_string(), "2.5");
+        assert_eq!(num(3.0).to_string(), "3");
     }
 
     #[test]

@@ -42,8 +42,10 @@
 
 use std::sync::Arc;
 
-use dymoe::baselines::Uniform;
-use dymoe::config::{ChurnEvent, ChurnKind, ServingConfig, SystemConfig, GB};
+use dymoe::baselines::{LoadOnDemand, Uniform};
+use dymoe::config::{
+    ChurnEvent, ChurnKind, HostPoolConfig, PoolPolicyKind, ServingConfig, SystemConfig, GB,
+};
 use dymoe::coordinator::engine::{Engine, EngineOptions};
 use dymoe::model::assets::ModelAssets;
 use dymoe::quant::Precision;
@@ -566,6 +568,191 @@ fn parallel_cluster_matches_serial_under_churn() {
         assert_eq!(parallel.churn.requeued, serial.churn.requeued, "chunk {chunk}");
         assert_eq!(parallel.fleet.steps, serial.fleet.steps, "chunk {chunk}");
     }
+}
+
+// ---------------------------------------------------------------------
+// Affinity dispatch stability under failure (artifacts-gated)
+// ---------------------------------------------------------------------
+
+/// Regression, end to end: affinity dispatch used to route
+/// `hash % live_replicas`, so one failure re-homed nearly *every*
+/// prompt and flushed every survivor's warm expert cache.  With
+/// rendezvous hashing over stable replica ids, a mid-run failure may
+/// move only the dead replica's sessions: every request whose
+/// churn-free home was a survivor must complete on that same replica,
+/// untouched (zero retries), while at least one of the dead replica's
+/// sessions demonstrably re-homes.  (The engine-free membership sweep
+/// lives in `policy.rs`; this pins the property through dispatch,
+/// evacuation, and re-dispatch in a real cluster run.)
+#[test]
+fn affinity_failure_remaps_only_the_dead_replicas_sessions() {
+    let Some(a) = assets() else { return };
+    let n = 24;
+    let base_cfg = cfg(PolicyKind::SloAware, DispatchKind::ExpertAffinity, 2, 2, 0, vec![]);
+    let baseline = run(&a, 3, tiny_trace(&a, n, 10.0), &base_cfg);
+    assert_eq!(baseline.fleet.metrics.completed, n);
+    let mut home = vec![usize::MAX; n];
+    for (i, b) in baseline.replicas.iter().enumerate() {
+        for r in &b.outcome.per_request {
+            home[r.id] = i;
+        }
+    }
+    // non-vacuous: the hash spread the trace over all three replicas
+    for t in 0..3usize {
+        assert!(
+            home.iter().any(|&h| h == t),
+            "affinity never homed a prompt on replica {t}; widen the trace"
+        );
+    }
+    let fail_at = baseline.fleet.metrics.makespan() * 0.4;
+    assert!(fail_at > 0.0);
+
+    let c = cfg(
+        PolicyKind::SloAware,
+        DispatchKind::ExpertAffinity,
+        2,
+        2,
+        0,
+        vec![fail(fail_at, 0)],
+    );
+    let churned = run(&a, 3, tiny_trace(&a, n, 10.0), &c);
+    assert_eq!(churned.fleet.metrics.completed, n);
+    let mut moved_off_dead = 0usize;
+    for (i, b) in churned.replicas.iter().enumerate() {
+        for r in &b.outcome.per_request {
+            if home[r.id] == 0 {
+                // the dead replica's sessions either finished before the
+                // failure (still on 0) or re-homed to a survivor
+                if i != 0 {
+                    moved_off_dead += 1;
+                }
+            } else {
+                assert_eq!(
+                    i, home[r.id],
+                    "request {} was homed on surviving replica {} but completed on {i}: \
+                     the failure remapped a survivor's session",
+                    r.id, home[r.id]
+                );
+                assert_eq!(
+                    r.retries, 0,
+                    "request {} on surviving replica {i} was needlessly requeued",
+                    r.id
+                );
+            }
+        }
+    }
+    assert!(
+        moved_off_dead > 0,
+        "no session ever moved off the failed replica; the regression pin is vacuous"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Shared host pool under churn (artifacts-gated)
+// ---------------------------------------------------------------------
+
+/// A mid-run failure with `--host-pool` attached: the evacuated
+/// replica's journal flushes before its lane is returned to the link
+/// budget, the survivor keeps resolving through the shared tier, and
+/// the whole run — per-request bits *and* pool counters — is
+/// deterministic across repeats.
+#[test]
+fn host_pool_survives_replica_failure_and_stays_deterministic() {
+    let Some(a) = assets() else { return };
+    let n = 8;
+    let m = a.manifest.model.clone();
+    let prompt: Vec<i32> = (0..m.max_seq.min(8)).map(|i| 1 + i as i32).collect();
+    let max_new = (m.max_cache - m.max_seq).clamp(1, 2);
+    let mk_trace = || -> Vec<TimedRequest> {
+        (0..n)
+            .map(|id| TimedRequest {
+                id,
+                arrival: id as f64 * 0.2,
+                request: Request { prompt: prompt.clone(), max_new },
+            })
+            .collect()
+    };
+    let pooled = || {
+        let mut c = cfg(PolicyKind::Fifo, DispatchKind::RoundRobin, 1, 1, 0, vec![fail(0.5, 0)]);
+        c.serving.host_pool = Some(HostPoolConfig {
+            capacity_bytes: GB,
+            policy: PoolPolicyKind::Shared,
+        });
+        let mut engines: Vec<Engine> = (0..2)
+            .map(|_| {
+                let mut sys = SystemConfig::edge_preset("tiny", 24).unwrap();
+                sys.policy.ssd_resident = true;
+                Engine::with_options(
+                    &a,
+                    sys,
+                    Box::new(LoadOnDemand::new(Precision::Int4)),
+                    EngineOptions::default(),
+                )
+                .unwrap()
+            })
+            .collect();
+        let out = run_cluster(&mut engines, mk_trace(), &c).unwrap();
+        assert!(
+            engines.iter().all(|e| e.host_pool.is_none()),
+            "run left a pool handle attached to an engine"
+        );
+        out
+    };
+    let x = pooled();
+    let y = pooled();
+    assert_eq!(x.digest(), y.digest(), "pooled churn run is not deterministic");
+    assert_eq!(x.pool, y.pool, "pool counters diverged across identical runs");
+    assert_eq!(x.fleet.metrics.completed, n);
+    assert_eq!(x.churn.failed, 1);
+    assert_eq!(x.replicas[0].state, ReplicaState::Dead);
+    assert!(x.pool.ssd_fills > 0, "pool never exercised");
+    let mut ids: Vec<usize> = x.fleet.per_request.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..n).collect::<Vec<_>>(), "churn + pool lost requests");
+}
+
+// ---------------------------------------------------------------------
+// Zero-completion runs stay finite (artifacts-gated)
+// ---------------------------------------------------------------------
+
+/// Regression: an empty trace used to poison the outcome with
+/// non-finite floats — `Series::min()` on zero samples returned `+inf`
+/// (which JSON cannot represent), and downstream ratios divided by a
+/// zero makespan.  Every statistic of a zero-completion run must come
+/// out finite (the empty-series sentinel is 0.0), the balance statistic
+/// reads perfectly balanced, and the outcome still digests.
+#[test]
+fn zero_completion_run_reports_finite_stats() {
+    let Some(a) = assets() else { return };
+    let c = cfg(PolicyKind::SloAware, DispatchKind::RoundRobin, 2, 2, 0, vec![drain(0.0, 1)]);
+    let mut engines: Vec<Engine> = (0..2).map(|_| bf16_engine(&a)).collect();
+    let out = run_cluster(&mut engines, Vec::new(), &c).unwrap();
+    assert_eq!(out.fleet.metrics.completed, 0);
+    let m = &out.fleet.metrics;
+    for (name, v) in [
+        ("ttft.min", m.ttft.min()),
+        ("ttft.max", m.ttft.max()),
+        ("ttft.mean", m.ttft.mean()),
+        ("ttft.p99", m.ttft.percentile(99.0)),
+        ("tpot.mean", m.tpot.mean()),
+        ("queue_delay.min", m.queue_delay.min()),
+        ("goodput", m.goodput_rps()),
+        ("throughput", m.throughput_tps()),
+        ("slo_attainment", m.slo_attainment()),
+        ("makespan", m.makespan()),
+        ("imbalance", out.load_imbalance),
+    ] {
+        assert!(v.is_finite(), "{name} is not finite on an empty run: {v}");
+    }
+    assert_eq!(m.ttft.min(), 0.0, "empty-series min sentinel");
+    assert_eq!(out.load_imbalance, 1.0, "an all-idle cluster is balanced");
+    assert!(
+        out.fleet.utilization.gpu == 0.0 && out.fleet.utilization.pcie == 0.0,
+        "zero-span utilization must be the zero default"
+    );
+    // the digest is well-defined (no NaN bit patterns fed to the hash)
+    let _ = out.digest();
+    assert_eq!(out.churn.drained, 1);
 }
 
 // ---------------------------------------------------------------------

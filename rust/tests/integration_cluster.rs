@@ -39,9 +39,12 @@
 
 use std::sync::Arc;
 
-use dymoe::baselines::Uniform;
-use dymoe::config::{ChurnEvent, ChurnKind, ServingConfig, SystemConfig, GB};
+use dymoe::baselines::{LoadOnDemand, Uniform};
+use dymoe::config::{
+    ChurnEvent, ChurnKind, HostPoolConfig, PoolPolicyKind, ServingConfig, SystemConfig, GB,
+};
 use dymoe::coordinator::engine::{Engine, EngineOptions};
+use dymoe::memory::PoolStats;
 use dymoe::model::assets::ModelAssets;
 use dymoe::model::executor::Executor;
 use dymoe::quant::Precision;
@@ -548,6 +551,180 @@ fn idle_fallback_admits_oldest_arrival_not_slot_zero() {
         vec![0, 1, 2],
         "fallback admission must follow arrival order, not queue-slot order"
     );
+}
+
+// ---------------------------------------------------------------------
+// Shared host expert pool (artifacts-gated)
+// ---------------------------------------------------------------------
+
+/// Engine whose every routed expert hits the full transfer chain:
+/// `LoadOnDemand` bypasses the VRAM cache entirely and `ssd_resident`
+/// puts SSD under the host tier, so with `--host-pool` attached each
+/// expert use resolves host pool -> SSD.  The `bf16_engine` helper above
+/// is useless here — 1 TB of VRAM warm-loads everything and the pool
+/// never sees a single lookup.
+fn pool_engine(a: &Arc<ModelAssets>) -> Engine {
+    let mut sys = SystemConfig::edge_preset("tiny", 24).unwrap();
+    sys.policy.ssd_resident = true;
+    Engine::with_options(
+        a,
+        sys,
+        Box::new(LoadOnDemand::new(Precision::Int4)),
+        EngineOptions::default(),
+    )
+    .unwrap()
+}
+
+/// Strictly serial per replica (FIFO, one session, batch 1) so the two
+/// pool policies see the *same* routed-expert sequence and only the
+/// host-tier timing differs; `host_pool` set per test.
+fn pool_cfg(pool: Option<HostPoolConfig>) -> FleetConfig {
+    let mut c = cfg(PolicyKind::Fifo, DispatchKind::RoundRobin, 1, 1, 0);
+    c.serving.host_pool = pool;
+    c
+}
+
+/// Identical prompts at a fixed arrival gap: round-robin alternates the
+/// replicas, and every arrival is an event boundary that flushes staged
+/// pool fills, so replica 1's requests can reuse what replica 0 staged.
+fn staggered_trace(a: &Arc<ModelAssets>, n: usize, gap: f64) -> Vec<TimedRequest> {
+    let m = &a.manifest.model;
+    let prompt: Vec<i32> = (0..m.max_seq.min(8)).map(|i| 1 + i as i32).collect();
+    let max_new = (m.max_cache - m.max_seq).clamp(1, 2);
+    (0..n)
+        .map(|id| TimedRequest {
+            id,
+            arrival: id as f64 * gap,
+            request: Request { prompt: prompt.clone(), max_new },
+        })
+        .collect()
+}
+
+/// Without `--host-pool` the outcome carries all-zero pool stats and the
+/// engines never grow a handle — and the pool-less `ssd_resident`
+/// transfer chain (which the pool branch sits in front of) stays pinned
+/// bit-identical across the event loop, the retired min-clock loop, and
+/// the `--parallel` worker path.  The pre-existing digest pins only
+/// cover warm-cache engines that never transfer at all, so this is the
+/// neutrality pin for the code path the pool actually touches.
+#[test]
+fn host_pool_off_path_is_digest_neutral() {
+    let Some(a) = assets() else { return };
+    let c = pool_cfg(None);
+    let mk = || staggered_trace(&a, 6, 0.2);
+
+    let mut serial_engines: Vec<Engine> = (0..2).map(|_| pool_engine(&a)).collect();
+    let serial = run_cluster(&mut serial_engines, mk(), &c).unwrap();
+    assert_eq!(serial.pool, PoolStats::default(), "no pool, yet stats moved");
+    assert!(serial_engines.iter().all(|e| e.host_pool.is_none()));
+
+    let mut minclock_engines: Vec<Engine> = (0..2).map(|_| pool_engine(&a)).collect();
+    let minclock = run_cluster_minclock(&mut minclock_engines, mk(), &c).unwrap();
+    assert_eq!(serial.digest(), minclock.digest(), "min-clock loop diverged");
+
+    let mut par_cfg = c.clone();
+    par_cfg.serving.parallel = 2;
+    let mut par_engines: Vec<Engine> = (0..2).map(|_| pool_engine(&a)).collect();
+    let parallel = run_cluster(&mut par_engines, mk(), &par_cfg).unwrap();
+    assert_eq!(serial.digest(), parallel.digest(), "parallel workers diverged");
+    assert_eq!(parallel.pool, PoolStats::default());
+}
+
+/// The tentpole claim: at equal total host budget, the shared LRU pool
+/// turns the *other* replica's SSD fills into host hits, while the
+/// static per-replica split (the independent-caches baseline) pays the
+/// fill once per replica.  Same routed work in both runs, so: strictly
+/// fewer SSD fills, strictly higher hit rate, and strictly lower mean
+/// TTFT for the shared pool.
+#[test]
+fn host_pool_shared_policy_beats_static_split() {
+    let Some(a) = assets() else { return };
+    let mk = || staggered_trace(&a, 6, 0.2);
+    let run = |policy: PoolPolicyKind| {
+        let c = pool_cfg(Some(HostPoolConfig { capacity_bytes: GB, policy }));
+        let mut engines: Vec<Engine> = (0..2).map(|_| pool_engine(&a)).collect();
+        let out = run_cluster(&mut engines, mk(), &c).unwrap();
+        // detach discipline: the run must leave the engines unpooled
+        assert!(engines.iter().all(|e| e.host_pool.is_none()), "{}: handle leaked", policy.name());
+        out
+    };
+    let shared = run(PoolPolicyKind::Shared);
+    let static_ = run(PoolPolicyKind::Static);
+
+    assert_eq!(shared.fleet.metrics.completed, 6);
+    assert_eq!(static_.fleet.metrics.completed, 6);
+    // identical routed-expert sequences => identical pool lookup counts
+    assert_eq!(
+        shared.pool.host_hits + shared.pool.ssd_fills,
+        static_.pool.host_hits + static_.pool.ssd_fills,
+        "policies saw different lookup totals; the comparison is void"
+    );
+    assert!(shared.pool.ssd_fills > 0, "pool never exercised");
+    assert!(
+        shared.pool.ssd_fills < static_.pool.ssd_fills,
+        "shared pool did not absorb cross-replica fills: {} vs {}",
+        shared.pool.ssd_fills,
+        static_.pool.ssd_fills
+    );
+    assert!(
+        shared.pool.hit_rate() > static_.pool.hit_rate(),
+        "shared hit rate {:.3} not above static {:.3}",
+        shared.pool.hit_rate(),
+        static_.pool.hit_rate()
+    );
+    let ttft_shared = shared.fleet.metrics.ttft.mean();
+    let ttft_static = static_.fleet.metrics.ttft.mean();
+    assert!(
+        ttft_shared < ttft_static,
+        "shared pool did not cut mean TTFT: {ttft_shared} vs {ttft_static}"
+    );
+}
+
+/// With a pool attached, `--parallel` must still be a pure wall-clock
+/// knob: replicas journal pool writes privately mid-window and the
+/// barrier applies them in replica order on the spawning thread, so
+/// every outcome bit — digest *and* the pool counters the digest
+/// deliberately excludes — matches the serial run.
+#[test]
+fn host_pool_parallel_run_is_bit_identical_to_serial() {
+    let Some(a) = assets() else { return };
+    let mk = || staggered_trace(&a, 8, 0.15);
+    let base = pool_cfg(Some(HostPoolConfig {
+        capacity_bytes: GB,
+        policy: PoolPolicyKind::Shared,
+    }));
+    let mut serial_engines: Vec<Engine> = (0..2).map(|_| pool_engine(&a)).collect();
+    let serial = run_cluster(&mut serial_engines, mk(), &base).unwrap();
+
+    let mut par_cfg = base.clone();
+    par_cfg.serving.parallel = 2;
+    let mut par_engines: Vec<Engine> = (0..2).map(|_| pool_engine(&a)).collect();
+    let parallel = run_cluster(&mut par_engines, mk(), &par_cfg).unwrap();
+
+    assert_eq!(parallel.digest(), serial.digest(), "pooled parallel run diverged");
+    assert_eq!(parallel.pool, serial.pool, "pool counters diverged under --parallel");
+    assert!(serial.pool.host_hits > 0, "pin is vacuous: pool never hit");
+    for (x, y) in parallel.fleet.per_request.iter().zip(&serial.fleet.per_request) {
+        assert_eq!((x.id, x.ttft, x.finished_at), (y.id, y.ttft, y.finished_at));
+    }
+}
+
+/// The pinned policy freezes first-staged copies: it must complete the
+/// trace with zero evictions while still serving host hits, and its
+/// staged bytes never exceed the configured budget.
+#[test]
+fn host_pool_pinned_policy_never_evicts_under_load() {
+    let Some(a) = assets() else { return };
+    let c = pool_cfg(Some(HostPoolConfig {
+        capacity_bytes: GB,
+        policy: PoolPolicyKind::Pinned,
+    }));
+    let mut engines: Vec<Engine> = (0..2).map(|_| pool_engine(&a)).collect();
+    let out = run_cluster(&mut engines, staggered_trace(&a, 6, 0.2), &c).unwrap();
+    assert_eq!(out.fleet.metrics.completed, 6);
+    assert_eq!(out.pool.evictions, 0, "pinned policy evicted");
+    assert!(out.pool.host_hits > 0, "pinned pool never served a hit");
+    assert!(out.pool.inserted_bytes <= GB, "pinned pool overran its budget");
 }
 
 // ---------------------------------------------------------------------

@@ -125,7 +125,7 @@ fn trace_export_parses_lints_and_maps_replicas() {
     assert!(rep.instants >= 1, "the churn failure must surface as an instant");
     assert_eq!(rep.session_events, 4 * cluster.fleet.per_request.len());
     let samples: usize = cluster.replicas.iter().map(|b| b.trace.samples.len()).sum();
-    assert_eq!(rep.counters, 4 * samples, "four counter tracks per tick sample");
+    assert_eq!(rep.counters, 7 * samples, "seven counter tracks per tick sample");
 
     for (i, b) in cluster.replicas.iter().enumerate() {
         assert_eq!(
@@ -316,6 +316,7 @@ fn chrome_writer_lints_without_artifacts() {
             active_sessions: 1,
             kv_bytes: 64,
             cache_bytes: 128,
+            ..Default::default()
         }],
     };
     let mut outcome = FleetOutcome::default();
@@ -343,13 +344,14 @@ fn chrome_writer_lints_without_artifacts() {
         }],
         load_imbalance: 1.0,
         churn: ChurnStats::default(),
+        pool: Default::default(),
     };
 
     let doc = chrome_trace(&cluster);
     let rep = lint(&doc).expect("hand-built trace lints clean");
     assert_eq!(rep.processes, 1);
     assert_eq!(rep.slices, 4, "gpu + demand pcie + prefetch pcie + tick");
-    assert_eq!(rep.counters, 4);
+    assert_eq!(rep.counters, 7);
     assert_eq!(rep.instants, 1);
     assert_eq!(rep.session_events, 4, "b + admitted + first-token + e");
 
