@@ -18,6 +18,12 @@
 //! over 2/4/8 replicas with SSD-resident weights, reporting the pool
 //! hit rate, SSD fills, link-contention stall, and mean TTFT — the
 //! shared tier's edge over the static split is the tentpole signal),
+//! a **predictive-dispatch sweep** (gate-probe routing with look-ahead
+//! pool pre-staging vs the hash-affinity baseline over 2/4/8 replicas
+//! with the host tier off or shared, reporting pool hit rate, SSD
+//! fills, pre-stage counts and accuracy, and mean/p99 TTFT —
+//! predictive's hit-rate and mean-TTFT edge at 4+ replicas with the
+//! shared pool on is the acceptance signal),
 //! and an **event-driven sweep** (8/16/32-replica clusters run
 //! through the retired min-clock lockstep loop, the event-driven
 //! scheduler, and the event-driven scheduler on 4 worker threads —
@@ -29,9 +35,9 @@
 //! decode-batch setting, a chunked-vs-monolithic long-prompt
 //! head-of-line sweep: p99 TPOT, worst inter-token stall, chunk and
 //! mixed-tick counts per `chunk_tokens` setting, plus the
-//! `replica_scaling_sweep`, `churn_sweep`, `host_pool_sweep`, and
-//! `event_driven_sweep`) so CI can track the perf trajectory in a
-//! machine-readable form.
+//! `replica_scaling_sweep`, `churn_sweep`, `host_pool_sweep`,
+//! `predictive_dispatch_sweep`, and `event_driven_sweep`) so CI can
+//! track the perf trajectory in a machine-readable form.
 //!
 //! Skips politely if `make artifacts` has not been run.
 
@@ -213,6 +219,66 @@ fn run_host_pool_point(
         },
         policy: PolicyKind::SloAware,
         dispatch: DispatchKind::RoundRobin,
+    };
+    run_cluster(&mut engines, trace, &cfg)
+}
+
+/// The predictive-dispatch sweep: gate-probe routing with look-ahead
+/// pool pre-staging against the hash-affinity baseline, with the host
+/// tier off or shared, over growing clusters.  Predictive's edge —
+/// more pool hits and a lower mean TTFT because the probed experts
+/// start staging into the shared tier at dispatch time, before the
+/// request is even admitted — at 4+ replicas with the shared pool on
+/// is the acceptance signal CI tracks.
+const PREDICTIVE_REPLICAS: [usize; 3] = [2, 4, 8];
+const PREDICTIVE_DISPATCHES: [DispatchKind; 2] =
+    [DispatchKind::ExpertAffinity, DispatchKind::Predictive];
+const PREDICTIVE_POOL_MODES: [&str; 2] = ["none", "shared"];
+
+/// One cluster run for the predictive-dispatch sweep: the host-pool
+/// sweep's construction (fresh engines on one compiled executor,
+/// SSD-resident weights, same seeded trace) under the given dispatch
+/// policy, with the host tier either absent or a shared LRU at the
+/// host-pool sweep's budget.
+fn run_predictive_point(
+    assets: &Arc<ModelAssets>,
+    replicas: usize,
+    requests: usize,
+    dispatch: DispatchKind,
+    pool_mode: &str,
+) -> anyhow::Result<ClusterOutcome> {
+    let m = assets.manifest.model.clone();
+    let exec = Rc::new(Executor::new(assets.clone())?);
+    let mut engines = Vec::with_capacity(replicas);
+    for _ in 0..replicas {
+        let mut sys = SystemConfig::edge_preset("mixtral-mini", 16)?;
+        sys.policy.ssd_resident = true;
+        let strat = Box::new(DyMoEStrategy::new(PolicyConfig::default()));
+        engines.push(Engine::with_executor(
+            assets,
+            sys,
+            strat,
+            EngineOptions::default(),
+            exec.clone(),
+        )?);
+    }
+    let mut content =
+        TraceGen::new(11, m.max_seq.min(80), (m.max_cache - m.max_seq).min(12));
+    let trace = ArrivalGen::generate(
+        0x5EED,
+        ArrivalProcess::Poisson { rate: SCALING_RATE },
+        &mut content,
+        requests,
+    )?;
+    let cfg = FleetConfig {
+        serving: ServingConfig {
+            max_sessions: 8,
+            max_decode_batch: 8,
+            host_pool: host_pool_for(pool_mode),
+            ..Default::default()
+        },
+        policy: PolicyKind::SloAware,
+        dispatch,
     };
     run_cluster(&mut engines, trace, &cfg)
 }
@@ -515,6 +581,35 @@ fn smoke_json(assets: &Arc<ModelAssets>) -> anyhow::Result<Json> {
             host_pool_points.push(Json::Obj(p));
         }
     }
+    // Predictive-dispatch sweep: gate-probe routing + look-ahead
+    // pre-staging vs hash affinity, with the host tier off and shared.
+    // Predictive's pool-hit-rate and mean-TTFT edge over affinity at
+    // 4+ replicas with the shared pool on is the tentpole signal.
+    let mut predictive_points = Vec::new();
+    for &replicas in &PREDICTIVE_REPLICAS {
+        for dispatch in PREDICTIVE_DISPATCHES {
+            for mode in PREDICTIVE_POOL_MODES {
+                let o = run_predictive_point(assets, replicas, requests, dispatch, mode)?;
+                let mut p = BTreeMap::new();
+                p.insert("replicas".to_string(), num(replicas as f64));
+                p.insert("dispatch".to_string(), Json::Str(dispatch.name().to_string()));
+                p.insert("pool".to_string(), Json::Str(mode.to_string()));
+                p.insert("completed".to_string(), num(o.fleet.metrics.completed as f64));
+                p.insert("ttft_mean_s".to_string(), num(o.fleet.metrics.ttft.mean()));
+                p.insert("ttft_p99_s".to_string(), num(o.fleet.metrics.ttft.percentile(99.0)));
+                p.insert("goodput_rps".to_string(), num(o.fleet.metrics.goodput_rps()));
+                p.insert("pool_hit_rate".to_string(), num(o.pool.hit_rate()));
+                p.insert("host_hits".to_string(), num(o.pool.host_hits as f64));
+                p.insert("ssd_fills".to_string(), num(o.pool.ssd_fills as f64));
+                p.insert("upgrades".to_string(), num(o.pool.replacements as f64));
+                p.insert("prestaged".to_string(), num(o.pool.prestaged as f64));
+                p.insert("prestage_used".to_string(), num(o.pool.prestage_used as f64));
+                p.insert("prestage_evicted".to_string(), num(o.pool.prestage_evicted as f64));
+                p.insert("prestage_accuracy".to_string(), num(o.pool.prestage_accuracy()));
+                predictive_points.push(Json::Obj(p));
+            }
+        }
+    }
     // Event-driven sweep: each cluster size runs the retired min-clock
     // loop once (the reference digest), then the event-driven scheduler
     // serial and on 4 workers.  CI tracks the wall-clock win; the
@@ -559,6 +654,7 @@ fn smoke_json(assets: &Arc<ModelAssets>) -> anyhow::Result<Json> {
     root.insert("replica_scaling_sweep".to_string(), Json::Arr(scaling_points));
     root.insert("churn_sweep".to_string(), Json::Arr(churn_points));
     root.insert("host_pool_sweep".to_string(), Json::Arr(host_pool_points));
+    root.insert("predictive_dispatch_sweep".to_string(), Json::Arr(predictive_points));
     root.insert("event_driven_sweep".to_string(), Json::Arr(event_points));
     Ok(Json::Obj(root))
 }
@@ -773,6 +869,47 @@ fn main() -> anyhow::Result<()> {
                 o.fleet.metrics.ttft.percentile(99.0),
                 wall.elapsed().as_secs_f64(),
             );
+        }
+    }
+    println!();
+    println!(
+        "### predictive-dispatch sweep (slo policy, Poisson {SCALING_RATE} r/s, \
+         ssd-resident weights; gate-probe routing + look-ahead pre-staging vs \
+         hash affinity, host pool off vs shared {HOST_POOL_CAP_GB} GB)"
+    );
+    println!(
+        "{:<9} {:<11} {:<7} {:>9} {:>7} {:>7} {:>8} {:>7} {:>12} {:>12} {:>10}",
+        "replicas",
+        "dispatch",
+        "pool",
+        "hit rate",
+        "hits",
+        "fills",
+        "staged",
+        "used",
+        "TTFT mean",
+        "TTFT p99",
+        "wall (s)"
+    );
+    for &replicas in &PREDICTIVE_REPLICAS {
+        for dispatch in PREDICTIVE_DISPATCHES {
+            for mode in PREDICTIVE_POOL_MODES {
+                let wall = Instant::now();
+                let o = run_predictive_point(&assets, replicas, requests, dispatch, mode)?;
+                println!(
+                    "{replicas:<9} {:<11} {mode:<7} {:>9.3} {:>7} {:>7} {:>8} {:>7} \
+                     {:>12.4} {:>12.4} {:>10.2}",
+                    dispatch.name(),
+                    o.pool.hit_rate(),
+                    o.pool.host_hits,
+                    o.pool.ssd_fills,
+                    o.pool.prestaged,
+                    o.pool.prestage_used,
+                    o.fleet.metrics.ttft.mean(),
+                    o.fleet.metrics.ttft.percentile(99.0),
+                    wall.elapsed().as_secs_f64(),
+                );
+            }
         }
     }
     println!();

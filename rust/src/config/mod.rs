@@ -95,11 +95,19 @@ pub struct HardwareConfig {
     /// memory/root-complex budget).  Only consulted when a cluster run
     /// attaches a shared pool (`serve-fleet --host-pool`): each
     /// replica's effective link bandwidth is
-    /// `min(pcie_gbps, host_link_gbps / live_replicas)`, so a couple of
-    /// replicas ride at full lane speed while a wide co-location
-    /// contends.  Default 25.6 GB/s: two full PCIe Gen3 x16 lanes'
-    /// worth.
+    /// `min(pcie_gbps, host_link_gbps * weight / sum(live weights))`
+    /// (equal weights reduce to `host_link_gbps / live_replicas`), so a
+    /// couple of replicas ride at full lane speed while a wide
+    /// co-location contends.  Default 25.6 GB/s: two full PCIe Gen3 x16
+    /// lanes' worth.
     pub host_link_gbps: f64,
+    /// This replica's relative claim on the shared `host_link_gbps`
+    /// budget (the optional `HOST_GBPS` field of `--replica-hw`): live
+    /// lanes split the budget proportionally to their weights, so a
+    /// replica on a wider root-complex attachment keeps more of the
+    /// link under contention.  Default 1.0 — an even split,
+    /// bitwise-identical to the unweighted lane model.
+    pub host_lane_weight: f64,
 }
 
 impl Default for HardwareConfig {
@@ -115,17 +123,20 @@ impl Default for HardwareConfig {
             cpu_gflops: 150.0e9,
             kernel_overhead_s: 8e-6,
             host_link_gbps: 25.6e9,
+            host_lane_weight: 1.0,
         }
     }
 }
 
 impl HardwareConfig {
     /// Parse a per-replica hardware spec (the `serve-fleet --replica-hw`
-    /// flag): `VRAM_GB[:PCIE_GBPS[:GPU_TFLOPS]]` over the default edge
-    /// testbed, e.g. `24` (just a VRAM cap), `12:8` (smaller card on a
-    /// narrower link), `8:4:10` (a genuinely LITTLE device).  Repeating
-    /// the flag with different specs models a heterogeneous big.LITTLE
-    /// edge cluster in one run.
+    /// flag): `VRAM_GB[:PCIE_GBPS[:GPU_TFLOPS[:HOST_GBPS]]]` over the
+    /// default edge testbed, e.g. `24` (just a VRAM cap), `12:8`
+    /// (smaller card on a narrower link), `8:4:10` (a genuinely LITTLE
+    /// device), `24:12:35:7` (a fat card whose host attachment claims a
+    /// 7-weight share of the shared host link).  Repeating the flag with
+    /// different specs models a heterogeneous big.LITTLE edge cluster in
+    /// one run.
     pub fn parse_spec(spec: &str) -> Result<HardwareConfig> {
         let mut hw = HardwareConfig::default();
         let mut parts = spec.split(':');
@@ -156,8 +167,17 @@ impl HardwareConfig {
             }
             hw.gpu_tflops = tflops * 1e12;
         }
+        if let Some(p) = parts.next() {
+            let w: f64 = p
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--replica-hw {spec:?}: HOST_GBPS must be a number"))?;
+            if !w.is_finite() || w <= 0.0 {
+                bail!("--replica-hw {spec:?}: HOST_GBPS must be > 0");
+            }
+            hw.host_lane_weight = w;
+        }
         if parts.next().is_some() {
-            bail!("--replica-hw {spec:?}: expected VRAM_GB[:PCIE_GBPS[:GPU_TFLOPS]]");
+            bail!("--replica-hw {spec:?}: expected VRAM_GB[:PCIE_GBPS[:GPU_TFLOPS[:HOST_GBPS]]]");
         }
         Ok(hw)
     }
@@ -439,6 +459,14 @@ pub struct ServingConfig {
     /// host RAM — every code path stays bitwise-identical to the
     /// pre-pool cluster (the digest-neutrality suite pins it).
     pub host_pool: Option<HostPoolConfig>,
+    /// How many predicted experts the **predictive dispatch policy**
+    /// routes and pre-stages on (`serve-fleet --probe-depth`, only
+    /// consulted under `--dispatch predictive`): the dispatcher runs
+    /// the layer-0 gate on the prompt prefix and keeps the top
+    /// `probe_depth` experts by routed frequency.  0 (the default) is
+    /// auto — the model's top_k, mirroring
+    /// [`PolicyConfig::prefetch_depth`].
+    pub probe_depth: usize,
 }
 
 impl Default for ServingConfig {
@@ -455,6 +483,7 @@ impl Default for ServingConfig {
             churn: Vec::new(),
             parallel: 1,
             host_pool: None,
+            probe_depth: 0,
         }
     }
 }
@@ -550,8 +579,16 @@ mod tests {
         assert_eq!(hw.vram_bytes, 8 * GB);
         assert!((hw.pcie_gbps - 4e9).abs() < 1.0);
         assert!((hw.gpu_tflops - 10e12).abs() < 1.0);
+        assert_eq!(hw.host_lane_weight, 1.0, "unspecified lane weight must stay even");
 
-        for bad in ["", "0", "x", "8:0", "8:-1", "8:4:0", "8:4:10:7", "8:nan"] {
+        let hw = HardwareConfig::parse_spec("8:4:10:7").unwrap();
+        assert_eq!(hw.vram_bytes, 8 * GB);
+        assert!((hw.host_lane_weight - 7.0).abs() < 1e-12);
+
+        for bad in [
+            "", "0", "x", "8:0", "8:-1", "8:4:0", "8:nan", "8:4:10:0", "8:4:10:-2",
+            "8:4:10:nan", "8:4:10:7:9",
+        ] {
             assert!(HardwareConfig::parse_spec(bad).is_err(), "{bad:?} accepted");
         }
     }
@@ -562,6 +599,7 @@ mod tests {
         assert_eq!(s.replicas, 1);
         assert!(s.churn.is_empty(), "default serving config must be churn-free");
         assert!(s.host_pool.is_none(), "default serving config must be pool-free");
+        assert_eq!(s.probe_depth, 0, "default probe depth must be auto (top_k)");
     }
 
     #[test]

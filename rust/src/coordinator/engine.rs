@@ -1326,15 +1326,26 @@ impl Engine {
                         pool.fill(key, p, bytes as u64, ready, issue);
                         ready
                     }
+                    // The pool holds this expert at a lower precision
+                    // than requested: upgrade in place, paying SSD
+                    // bandwidth only for the byte delta over what the
+                    // resident copy already covers.
+                    PoolAccess::Upgrade { ready_at, have_bytes } => {
+                        let delta = (bytes - have_bytes as f64).max(0.0);
+                        let ready = issue.max(ready_at) + self.cost.nvme_transfer(delta);
+                        pool.fill_upgrade(key, p, bytes as u64, ready, issue);
+                        ready
+                    }
                 }
             } else {
                 issue
             };
             // Every live replica's PCIe lane draws on one host-link
-            // budget; the widened duration past pcie_transfer is the
-            // contention stall.
-            let lanes = pool.lanes();
-            let dur = self.cost.host_pool_transfer(bytes, lanes);
+            // budget, split by the replicas' configured link weights
+            // (an even split at the default weight of 1.0); the widened
+            // duration past pcie_transfer is the contention stall.
+            let (own, total) = pool.lane_share();
+            let dur = self.cost.host_pool_transfer_share(bytes, own, total);
             pool.note_stall(dur - self.cost.pcie_transfer(bytes));
             return if background {
                 self.timeline.pcie_prefetch(host_ready, dur, &label)

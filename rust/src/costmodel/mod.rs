@@ -194,6 +194,19 @@ impl CostModel {
         let share = self.hw.host_link_gbps / lanes.max(1) as f64;
         self.hw.pcie_latency_s + bytes / self.hw.pcie_gbps.min(share)
     }
+
+    /// Weighted variant of [`CostModel::host_pool_transfer`] for
+    /// heterogeneous host attachments (`--replica-hw` `HOST_GBPS`
+    /// field): this lane claims `own / total` of the shared host
+    /// budget, where `total` sums the live lanes' weights
+    /// ([`HardwareConfig::host_lane_weight`]).  With unit weights
+    /// (`own = 1`, `total = live lanes`) the share — and the duration —
+    /// is bitwise-identical to the unweighted form, which the lane
+    /// asymmetry tests pin.
+    pub fn host_pool_transfer_share(&self, bytes: f64, own: f64, total: f64) -> f64 {
+        let share = self.hw.host_link_gbps * own / total.max(own).max(f64::MIN_POSITIVE);
+        self.hw.pcie_latency_s + bytes / self.hw.pcie_gbps.min(share)
+    }
 }
 
 #[cfg(test)]
@@ -235,6 +248,31 @@ mod tests {
         // 8 lanes over a 25.6 GB/s link = 3.2 GB/s per lane
         let expect = c.hw.pcie_latency_s + b / 3.2e9;
         assert!((t8 - expect).abs() < 1e-12, "t8={t8} expect={expect}");
+    }
+
+    #[test]
+    fn weighted_host_pool_share_matches_even_split_at_unit_weights() {
+        let c = cm();
+        let b = c.expert_weight_bytes(Precision::Int4);
+        // unit weights are the unweighted model, bit for bit
+        for lanes in 1..=8usize {
+            assert_eq!(
+                c.host_pool_transfer_share(b, 1.0, lanes as f64),
+                c.host_pool_transfer(b, lanes),
+                "unit-weight share must be bitwise-identical at {lanes} lanes"
+            );
+        }
+        // a heavier lane keeps more of the link: 7 of (7+1) on 25.6 GB/s
+        // = 22.4 GB/s, above the 12.8 GB/s PCIe ceiling -> full lane speed
+        let fat = c.host_pool_transfer_share(b, 7.0, 8.0);
+        assert_eq!(fat, c.pcie_transfer(b));
+        // ... while the light lane gets 1/8 = 3.2 GB/s
+        let thin = c.host_pool_transfer_share(b, 1.0, 8.0);
+        let expect = c.hw.pcie_latency_s + b / 3.2e9;
+        assert!((thin - expect).abs() < 1e-12, "thin={thin} expect={expect}");
+        assert!(thin > fat);
+        // degenerate totals never divide by zero
+        assert!(c.host_pool_transfer_share(b, 1.0, 0.0).is_finite());
     }
 
     #[test]

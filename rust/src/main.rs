@@ -5,8 +5,9 @@
 //! dymoe serve       --model mixtral-mini --vram 16 --requests 10 [--strategy dymoe-40]
 //! dymoe serve-fleet --model mixtral-mini --vram 16 --requests 24 --rate 0.25 \
 //!                   [--arrival poisson|bursty|ramp] [--sessions 8] [--sched fifo|rr|slo] \
-//!                   [--max-decode-batch 8] [--replicas 4] [--dispatch rr|jsq|affinity] \
-//!                   [--replica-hw 24 --replica-hw 12:8] [--fail 30@0] [--drain 45@1] \
+//!                   [--max-decode-batch 8] [--replicas 4] \
+//!                   [--dispatch rr|jsq|affinity|predictive] [--probe-depth 4] \
+//!                   [--replica-hw 24 --replica-hw 12:8:10:5] [--fail 30@0] [--drain 45@1] \
 //!                   [--parallel 4] [--host-pool 2:shared]
 //! dymoe experiment  <fig1|...|table3|all> [--items N] [--requests N] [--models a,b]
 //! dymoe timeline    --model mixtral-mini --vram 16
@@ -293,11 +294,15 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
         churn,
         parallel,
         host_pool,
+        // Gate-probe width for --dispatch predictive; 0 (the default)
+        // tracks the model's top_k.  Ignored by every other policy.
+        probe_depth: args.get_usize("probe-depth", 0)?,
     };
-    // Heterogeneous replicas: each `--replica-hw VRAM[:PCIE[:TFLOPS]]`
-    // occurrence defines one hardware class; specs cycle over the
-    // replica count (two specs x four replicas = a big.LITTLE pair of
-    // pairs).  Without the flag every replica runs the `--vram` preset.
+    // Heterogeneous replicas: each `--replica-hw
+    // VRAM[:PCIE[:TFLOPS[:HOSTGBPS]]]` occurrence defines one hardware
+    // class; specs cycle over the replica count (two specs x four
+    // replicas = a big.LITTLE pair of pairs).  Without the flag every
+    // replica runs the `--vram` preset.
     let hw_specs = args.get_all("replica-hw");
     if hw_specs.len() > replicas {
         bail!(
@@ -464,15 +469,25 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
     );
     if cfg.serving.host_pool.is_some() {
         println!(
-            "host pool: {} hits / {} SSD fills (hit rate {:.2}), {} evictions, \
-             staged {:.2} GB, host-link contention stall {:.3}s",
+            "host pool: {} hits / {} SSD fills / {} upgrades (hit rate {:.2}), \
+             {} evictions, staged {:.2} GB, host-link contention stall {:.3}s",
             cluster.pool.host_hits,
             cluster.pool.ssd_fills,
+            cluster.pool.replacements,
             cluster.pool.hit_rate(),
             cluster.pool.evictions,
             cluster.pool.inserted_bytes as f64 / 1e9,
             cluster.pool.stall_s,
         );
+        if cluster.pool.prestaged > 0 {
+            println!(
+                "pre-staging: {} staged, {} used, {} evicted unused (accuracy {:.2})",
+                cluster.pool.prestaged,
+                cluster.pool.prestage_used,
+                cluster.pool.prestage_evicted,
+                cluster.pool.prestage_accuracy(),
+            );
+        }
     }
     for (i, b) in cluster.replicas.iter().enumerate() {
         println!(
@@ -611,6 +626,14 @@ fn fleet_json(
         num(cluster.pool.inserted_bytes as f64),
     );
     pool.insert("stall_s".to_string(), num(cluster.pool.stall_s));
+    pool.insert("replacements".to_string(), num(cluster.pool.replacements as f64));
+    pool.insert("prestaged".to_string(), num(cluster.pool.prestaged as f64));
+    pool.insert("prestage_used".to_string(), num(cluster.pool.prestage_used as f64));
+    pool.insert(
+        "prestage_evicted".to_string(),
+        num(cluster.pool.prestage_evicted as f64),
+    );
+    pool.insert("prestage_accuracy".to_string(), num(cluster.pool.prestage_accuracy()));
     root.insert("host_pool".to_string(), Json::Obj(pool));
     root.insert("cluster".to_string(), metrics_obj(&cluster.fleet));
     let per_replica: Vec<Json> = cluster
@@ -709,9 +732,16 @@ fn usage() -> String {
      \x20             [--chunk-tokens N (0 = monolithic prefill, the default; N > 0\n\
      \x20              fuses N prompt tokens per tick with the decode batch)]\n\
      \x20             [--replicas N (edge-cluster size; 1 = classic single device)]\n\
-     \x20             [--dispatch rr|jsq|affinity (cluster request routing)]\n\
-     \x20             [--replica-hw VRAM_GB[:PCIE_GBPS[:GPU_TFLOPS]] (repeatable;\n\
-     \x20              specs cycle over replicas for a big.LITTLE cluster)]\n\
+     \x20             [--dispatch rr|jsq|affinity|predictive (cluster request routing;\n\
+     \x20              predictive probes the layer-0 gate per arrival, routes to the\n\
+     \x20              replica with the most predicted-expert bytes resident, and\n\
+     \x20              pre-stages the misses into the shared host pool)]\n\
+     \x20             [--probe-depth N (predictive only: experts predicted per probe;\n\
+     \x20              0 = model top_k, the default)]\n\
+     \x20             [--replica-hw VRAM_GB[:PCIE_GBPS[:GPU_TFLOPS[:HOST_GBPS]]]\n\
+     \x20              (repeatable; specs cycle over replicas for a big.LITTLE\n\
+     \x20              cluster; HOST_GBPS weights the replica's share of the shared\n\
+     \x20              host-pool link)]\n\
      \x20             [--fail T@R (repeatable: replica R dies at virtual time T;\n\
      \x20              its queued + in-flight sessions re-dispatch to live replicas,\n\
      \x20              restarting with their original arrival times)]\n\

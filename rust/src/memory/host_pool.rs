@@ -54,6 +54,10 @@ pub struct PoolStats {
     pub host_hits: u64,
     /// VRAM misses that fell through to an SSD fill.
     pub ssd_fills: u64,
+    /// VRAM misses served by upgrading a lower-precision staged copy in
+    /// place (precision-aware staging): SSD traffic for the byte
+    /// *delta* only, never a full refill.
+    pub replacements: u64,
     /// Extra seconds of PCIe transfer time attributable to host-link
     /// contention (the contended duration minus the uncontended one).
     pub stall_s: f64,
@@ -61,24 +65,55 @@ pub struct PoolStats {
     pub evictions: u64,
     /// Bytes staged into the pool (fills and precision replacements).
     pub inserted_bytes: u64,
+    /// Copies staged speculatively by the predictive dispatcher's
+    /// look-ahead (`--dispatch predictive`), before any replica
+    /// demanded them.  Not SSD *demand* traffic: accounted apart from
+    /// `ssd_fills` so mispredictions cannot inflate the demand story.
+    pub prestaged: u64,
+    /// Pre-staged copies a replica later actually used (demand touch,
+    /// duplicate demand fill, or in-place upgrade).
+    pub prestage_used: u64,
+    /// Pre-staged copies evicted or replaced without ever serving a
+    /// demand access (the misprediction count).
+    pub prestage_evicted: u64,
 }
 
 impl PoolStats {
     pub fn merge(&mut self, o: &PoolStats) {
         self.host_hits += o.host_hits;
         self.ssd_fills += o.ssd_fills;
+        self.replacements += o.replacements;
         self.stall_s += o.stall_s;
         self.evictions += o.evictions;
         self.inserted_bytes += o.inserted_bytes;
+        self.prestaged += o.prestaged;
+        self.prestage_used += o.prestage_used;
+        self.prestage_evicted += o.prestage_evicted;
     }
 
-    /// Fraction of host-tier lookups served without SSD traffic.
+    /// Fraction of host-tier lookups served without a *full* SSD fill
+    /// (in-place upgrades pay only the byte delta, so they count
+    /// against the denominator but not as hits).
     pub fn hit_rate(&self) -> f64 {
-        let total = self.host_hits + self.ssd_fills;
+        let total = self.host_hits + self.ssd_fills + self.replacements;
         if total == 0 {
             0.0
         } else {
             self.host_hits as f64 / total as f64
+        }
+    }
+
+    /// Fraction of pre-staged copies that served a demand access — the
+    /// dispatcher-side analogue of
+    /// [`crate::coordinator::prefetcher::PrefetchStats::accuracy`].
+    /// Copies still staged and untouched at the end of a run are
+    /// unresolved: counted in neither `prestage_used` nor
+    /// `prestage_evicted`.
+    pub fn prestage_accuracy(&self) -> f64 {
+        if self.prestaged == 0 {
+            0.0
+        } else {
+            self.prestage_used as f64 / self.prestaged as f64
         }
     }
 }
@@ -96,6 +131,11 @@ struct PoolEntry {
     ready_at: f64,
     /// Virtual time of the last touch (LRU recency; merged as `max`).
     last_use: f64,
+    /// Staged speculatively by the predictive dispatcher and not yet
+    /// resolved: the first demand access clears the flag as
+    /// `prestage_used`; eviction or replacement while still set counts
+    /// `prestage_evicted`.
+    prestaged: bool,
 }
 
 /// The shared host-RAM expert tier, capacity-budgeted via
@@ -109,9 +149,13 @@ pub struct HostExpertPool {
     /// One budget per shard: `replicas` under Static, one otherwise.
     budgets: Vec<VramBudget>,
     map: BTreeMap<(usize, ExpertKey), PoolEntry>,
-    /// Live replicas drawing on the host link (failures give lanes
-    /// back; drains keep theirs until the run ends).
-    lanes: usize,
+    /// Per-replica relative claims on the shared host link
+    /// ([`crate::config::HardwareConfig::host_lane_weight`]; unit
+    /// weights = an even split).
+    lane_weights: Vec<f64>,
+    /// Which replicas' lanes still draw on the link (failures give
+    /// lanes back; drains keep theirs until the run ends).
+    lane_live: Vec<bool>,
     /// Shared-side accounting (evictions, inserted bytes) — applied at
     /// flush, deterministically ordered by replica index.
     pub stats: PoolStats,
@@ -130,9 +174,23 @@ impl HostExpertPool {
             policy: cfg.policy,
             budgets,
             map: BTreeMap::new(),
-            lanes: n,
+            lane_weights: vec![1.0; n],
+            lane_live: vec![true; n],
             stats: PoolStats::default(),
         }
+    }
+
+    /// Install per-replica host-link weights (`--replica-hw`'s
+    /// `HOST_GBPS` field); the cluster sets these once before the run.
+    /// Non-finite or non-positive weights are clamped to the unit
+    /// weight rather than poisoning every share computation.
+    pub fn set_lane_weights(&mut self, weights: &[f64]) {
+        self.lane_weights = (0..self.lane_weights.len())
+            .map(|i| match weights.get(i) {
+                Some(&w) if w.is_finite() && w > 0.0 => w,
+                _ => 1.0,
+            })
+            .collect();
     }
 
     fn shard_of(&self, replica: usize) -> usize {
@@ -148,13 +206,42 @@ impl HostExpertPool {
 
     /// Live replicas currently contending for the host link.
     pub fn lanes(&self) -> usize {
-        self.lanes
+        self.lane_live.iter().filter(|&&l| l).count().max(1)
     }
 
-    /// A replica failed: its lane stops drawing on the link.  (Drained
-    /// replicas keep their lane — they still run down their work.)
-    pub fn fail_lane(&mut self) {
-        self.lanes = self.lanes.saturating_sub(1).max(1);
+    /// `replica`'s `(own weight, total live weight)` share of the host
+    /// link.  With unit weights this is `(1, live lanes)` — the even
+    /// split, bit for bit
+    /// ([`crate::costmodel::CostModel::host_pool_transfer_share`]).
+    /// When every lane is dead (the run is tearing down) the lone
+    /// caller keeps the whole link, matching the old `lanes >= 1`
+    /// floor.
+    pub fn lane_share(&self, replica: usize) -> (f64, f64) {
+        let own = match self.lane_weights.get(replica) {
+            Some(&w) => w,
+            None => 1.0,
+        };
+        let total: f64 = self
+            .lane_weights
+            .iter()
+            .zip(&self.lane_live)
+            .filter(|(_, &live)| live)
+            .map(|(&w, _)| w)
+            .sum();
+        if total > 0.0 {
+            (own, total)
+        } else {
+            (own, own)
+        }
+    }
+
+    /// Replica `replica` failed: its lane stops drawing on the link.
+    /// (Drained replicas keep their lane — they still run down their
+    /// work.)
+    pub fn fail_lane(&mut self, replica: usize) {
+        if let Some(l) = self.lane_live.get_mut(replica) {
+            *l = false;
+        }
     }
 
     pub fn capacity(&self) -> u64 {
@@ -188,6 +275,30 @@ impl HostExpertPool {
             .map(|e| (e.prec, e.ready_at))
     }
 
+    /// Unfiltered probe of `replica`'s view: whatever copy is staged,
+    /// at any precision.  The upgrade path uses this to find a
+    /// lower-precision base whose bytes it can keep.
+    pub fn probe_entry(&self, replica: usize, key: ExpertKey) -> Option<(Precision, u64, f64)> {
+        self.map
+            .get(&(self.shard_of(replica), key))
+            .map(|e| (e.prec, e.bytes, e.ready_at))
+    }
+
+    /// Add `replica`'s visible staged bytes into a per-expert summary
+    /// (`out[expert] += bytes`, summed over layers).  Feeds the
+    /// predictive dispatcher's byte-weighted overlap score; experts
+    /// beyond `out.len()` are ignored.
+    pub fn add_resident_expert_bytes(&self, replica: usize, out: &mut [u64]) {
+        let shard = self.shard_of(replica);
+        for ((s, key), e) in self.map.iter() {
+            if *s == shard {
+                if let Some(slot) = out.get_mut(key.expert as usize) {
+                    *slot += e.bytes;
+                }
+            }
+        }
+    }
+
     /// Apply one replica's window journal.  Called only from
     /// [`HostPoolHandle::flush`] at event boundaries, in ascending
     /// replica order — the single-threaded step that makes the shared
@@ -197,14 +308,20 @@ impl HostExpertPool {
         for (key, t) in journal.touches {
             if let Some(e) = self.map.get_mut(&(shard, key)) {
                 e.last_use = e.last_use.max(t);
+                if e.prestaged {
+                    // a journaled touch is a demand hit on the staged
+                    // copy: the pre-stage prediction paid off
+                    e.prestaged = false;
+                    self.stats.prestage_used += 1;
+                }
             }
         }
         for (key, ins) in journal.inserts {
-            self.insert(shard, key, ins);
+            self.insert(shard, key, ins, false);
         }
     }
 
-    fn insert(&mut self, shard: usize, key: ExpertKey, ins: JournalInsert) {
+    fn insert(&mut self, shard: usize, key: ExpertKey, ins: JournalInsert, prestage: bool) {
         let slot = (shard, key);
         if let Some(e) = self.map.get_mut(&slot) {
             if e.prec.satisfies(ins.prec) {
@@ -214,6 +331,11 @@ impl HostExpertPool {
                 e.last_use = e.last_use.max(ins.last_use);
                 if e.prec == ins.prec {
                     e.ready_at = e.ready_at.min(ins.ready_at);
+                }
+                if e.prestaged && !prestage {
+                    // a demand fill landed on a pre-staged copy
+                    e.prestaged = false;
+                    self.stats.prestage_used += 1;
                 }
                 return;
             }
@@ -239,12 +361,19 @@ impl HostExpertPool {
         if replaced > 0 {
             let e = self.map.remove(&slot).expect("replaced entry exists");
             self.budgets[shard].release(e.bytes);
+            if e.prestaged && !prestage {
+                // a demand upgrade consumed the speculative base copy
+                self.stats.prestage_used += 1;
+            }
         }
         while !self.budgets[shard].fits(ins.bytes) {
             let victim = self.lru_victim(shard).expect("feasible by construction");
             let e = self.map.remove(&victim).expect("victim exists");
             self.budgets[shard].release(e.bytes);
             self.stats.evictions += 1;
+            if e.prestaged {
+                self.stats.prestage_evicted += 1;
+            }
         }
         self.budgets[shard].alloc(ins.bytes).expect("fits by construction");
         self.stats.inserted_bytes += ins.bytes;
@@ -255,8 +384,45 @@ impl HostExpertPool {
                 bytes: ins.bytes,
                 ready_at: ins.ready_at,
                 last_use: ins.last_use,
+                prestaged: prestage,
             },
         );
+    }
+
+    /// Speculatively stage one predicted expert for `replica`'s shard
+    /// (the predictive dispatcher's look-ahead, fired at an arrival
+    /// event — a single-threaded boundary where every journal is
+    /// already flushed, so a direct shared write is deterministic
+    /// serial or `--parallel`).  A copy already staged at sufficient
+    /// fidelity only gets a recency touch (no traffic, no counters);
+    /// otherwise the copy is inserted flagged, counted under
+    /// `prestaged` rather than `ssd_fills`.  Returns whether bytes
+    /// were actually staged.
+    pub fn prestage(
+        &mut self,
+        replica: usize,
+        key: ExpertKey,
+        prec: Precision,
+        bytes: u64,
+        ready_at: f64,
+        now: f64,
+    ) -> bool {
+        let shard = self.shard_of(replica);
+        if let Some(e) = self.map.get_mut(&(shard, key)) {
+            if e.prec.satisfies(prec) {
+                e.last_use = e.last_use.max(now);
+                return false;
+            }
+        }
+        self.stats.prestaged += 1;
+        self.insert(shard, key, JournalInsert { prec, bytes, ready_at, last_use: now }, true);
+        // a capacity-infeasible insert stays transient (e.g. Pinned
+        // with no room): still a prediction that produced no staged
+        // copy, so resolve it as evicted immediately
+        if !self.map.get(&(shard, key)).map_or(false, |e| e.prestaged) {
+            self.stats.prestage_evicted += 1;
+        }
+        true
     }
 
     /// Least-recently-used entry of one shard; virtual-time recency,
@@ -295,8 +461,14 @@ struct Journal {
 pub enum PoolAccess {
     /// Staged in the host tier; the bytes are usable at `ready_at`.
     Hit { ready_at: f64 },
-    /// Not staged: the caller pays the SSD fill and registers it with
-    /// [`HostPoolHandle::fill`].
+    /// Staged, but at a precision below the request: the caller
+    /// upgrades the copy in place — SSD traffic for the byte *delta*
+    /// over `have_bytes` only, gated on the base copy's `ready_at` —
+    /// and registers it with [`HostPoolHandle::fill_upgrade`]
+    /// (precision-aware staging).
+    Upgrade { ready_at: f64, have_bytes: u64 },
+    /// Not staged: the caller pays the full SSD fill and registers it
+    /// with [`HostPoolHandle::fill`].
     Fill,
 }
 
@@ -332,7 +504,9 @@ impl HostPoolHandle {
     /// Resolve a VRAM miss against the host tier at virtual time `now`:
     /// this replica's own window fills first (journal overlay), then
     /// the frozen shared snapshot.  A hit journals an LRU touch; a
-    /// [`PoolAccess::Fill`] commits the caller to an SSD fill.
+    /// [`PoolAccess::Upgrade`] hands the caller a lower-precision base
+    /// copy to upgrade in place; a [`PoolAccess::Fill`] commits the
+    /// caller to a full SSD fill.
     pub fn acquire(&mut self, key: ExpertKey, wanted: Precision, now: f64) -> PoolAccess {
         if let Some(j) = self.journal.inserts.get_mut(&key) {
             if j.prec.satisfies(wanted) {
@@ -341,15 +515,29 @@ impl HostPoolHandle {
                 return PoolAccess::Hit { ready_at: j.ready_at };
             }
         }
-        let hit = self
-            .shared
-            .read()
-            .expect("host pool lock poisoned")
-            .probe(self.replica, key, wanted);
+        let (hit, staged) = {
+            let g = self.shared.read().expect("host pool lock poisoned");
+            (
+                g.probe(self.replica, key, wanted),
+                g.probe_entry(self.replica, key),
+            )
+        };
         if let Some((_, ready_at)) = hit {
             self.journal.touches.push((key, now));
             self.lifetime.host_hits += 1;
             return PoolAccess::Hit { ready_at };
+        }
+        // Precision-aware staging: a lower-precision copy (own window
+        // first, else the frozen shared snapshot) is a base the caller
+        // can upgrade for the byte delta instead of a full refill.
+        let base = self
+            .journal
+            .inserts
+            .get(&key)
+            .map(|j| (j.bytes, j.ready_at))
+            .or_else(|| staged.map(|(_, bytes, ready_at)| (bytes, ready_at)));
+        if let Some((have_bytes, ready_at)) = base {
+            return PoolAccess::Upgrade { ready_at, have_bytes };
         }
         PoolAccess::Fill
     }
@@ -359,6 +547,34 @@ impl HostPoolHandle {
     /// overlay) and to the cluster at the next boundary flush.
     pub fn fill(&mut self, key: ExpertKey, prec: Precision, bytes: u64, ready_at: f64, now: f64) {
         self.lifetime.ssd_fills += 1;
+        self.journal_insert(key, prec, bytes, ready_at, now);
+    }
+
+    /// Register the in-place upgrade a [`PoolAccess::Upgrade`]
+    /// committed to.  Same journal discipline as [`HostPoolHandle::fill`]
+    /// — the flush-side replace logic swaps the staged copy in place —
+    /// but counted under `replacements`, not `ssd_fills`: the SSD only
+    /// carried the byte delta.
+    pub fn fill_upgrade(
+        &mut self,
+        key: ExpertKey,
+        prec: Precision,
+        bytes: u64,
+        ready_at: f64,
+        now: f64,
+    ) {
+        self.lifetime.replacements += 1;
+        self.journal_insert(key, prec, bytes, ready_at, now);
+    }
+
+    fn journal_insert(
+        &mut self,
+        key: ExpertKey,
+        prec: Precision,
+        bytes: u64,
+        ready_at: f64,
+        now: f64,
+    ) {
         let e = self
             .journal
             .inserts
@@ -384,6 +600,30 @@ impl HostPoolHandle {
     /// Live replicas currently sharing the host link.
     pub fn lanes(&self) -> usize {
         self.shared.read().expect("host pool lock poisoned").lanes()
+    }
+
+    /// This replica's `(own weight, total live weight)` claim on the
+    /// shared host link ([`HostExpertPool::lane_share`]).
+    pub fn lane_share(&self) -> (f64, f64) {
+        self.shared
+            .read()
+            .expect("host pool lock poisoned")
+            .lane_share(self.replica)
+    }
+
+    /// Add this replica's visible staged bytes — frozen shared snapshot
+    /// plus its own window journal — into a per-expert summary (the
+    /// predictive dispatcher's pool-side residency input).
+    pub fn add_resident_expert_bytes(&self, out: &mut [u64]) {
+        self.shared
+            .read()
+            .expect("host pool lock poisoned")
+            .add_resident_expert_bytes(self.replica, out);
+        for (key, ins) in self.journal.inserts.iter() {
+            if let Some(slot) = out.get_mut(key.expert as usize) {
+                *slot += ins.bytes;
+            }
+        }
     }
 
     /// Apply this replica's window journal to the shared pool.  The
@@ -513,9 +753,13 @@ mod tests {
         let mut h = HostPoolHandle::new(p.clone(), 0);
         h.fill(k(0, 0), Precision::Int2, 10, 1.0, 1.0);
         h.flush();
-        // a higher-precision request misses the staged low copy ...
-        assert_eq!(h.acquire(k(0, 0), Precision::Int4, 2.0), PoolAccess::Fill);
-        h.fill(k(0, 0), Precision::Int4, 40, 2.5, 2.0);
+        // a higher-precision request finds the staged low copy as an
+        // upgrade base: bytes kept, only the delta rides the SSD
+        assert_eq!(
+            h.acquire(k(0, 0), Precision::Int4, 2.0),
+            PoolAccess::Upgrade { ready_at: 1.0, have_bytes: 10 }
+        );
+        h.fill_upgrade(k(0, 0), Precision::Int4, 40, 2.5, 2.0);
         h.flush();
         let g = p.read().unwrap();
         // ... and the upgrade swapped bytes in place: one copy, no eviction
@@ -523,6 +767,28 @@ mod tests {
         assert_eq!(g.used_bytes(), 40);
         assert_eq!(g.probe(0, k(0, 0), Precision::Int4), Some((Precision::Int4, 2.5)));
         assert_eq!(g.stats.evictions, 0);
+        // counted as a replacement, not demand SSD traffic
+        assert_eq!(h.lifetime.replacements, 1);
+        assert_eq!(h.lifetime.ssd_fills, 1, "only the original low fill hit the SSD");
+    }
+
+    #[test]
+    fn window_local_upgrade_uses_the_journal_base() {
+        let p = pool(100, PoolPolicyKind::Shared, 1);
+        let mut h = HostPoolHandle::new(p.clone(), 0);
+        // fill and upgrade within ONE window: the journal overlay is
+        // the base, no flush in between
+        h.fill(k(0, 0), Precision::Int2, 10, 1.0, 1.0);
+        assert_eq!(
+            h.acquire(k(0, 0), Precision::Int4, 1.5),
+            PoolAccess::Upgrade { ready_at: 1.0, have_bytes: 10 }
+        );
+        h.fill_upgrade(k(0, 0), Precision::Int4, 40, 2.0, 1.5);
+        assert_eq!(h.acquire(k(0, 0), Precision::Int4, 2.1), PoolAccess::Hit { ready_at: 2.0 });
+        h.flush();
+        let g = p.read().unwrap();
+        assert_eq!(g.len(), 1);
+        assert_eq!(g.used_bytes(), 40);
     }
 
     #[test]
@@ -547,12 +813,92 @@ mod tests {
     fn failed_lanes_return_bandwidth() {
         let p = pool(100, PoolPolicyKind::Shared, 4);
         assert_eq!(p.read().unwrap().lanes(), 4);
-        p.write().unwrap().fail_lane();
+        assert_eq!(p.read().unwrap().lane_share(0), (1.0, 4.0));
+        p.write().unwrap().fail_lane(1);
         assert_eq!(p.read().unwrap().lanes(), 3);
-        for _ in 0..10 {
-            p.write().unwrap().fail_lane();
+        assert_eq!(p.read().unwrap().lane_share(0), (1.0, 3.0));
+        // failing the same lane again changes nothing
+        p.write().unwrap().fail_lane(1);
+        assert_eq!(p.read().unwrap().lanes(), 3);
+        for r in 0..4 {
+            p.write().unwrap().fail_lane(r);
         }
         assert_eq!(p.read().unwrap().lanes(), 1, "lanes must floor at 1");
+        // an all-dead link still hands the lone caller a whole share
+        assert_eq!(p.read().unwrap().lane_share(0), (1.0, 1.0));
+        // out-of-range indices are ignored, not a panic
+        p.write().unwrap().fail_lane(99);
+    }
+
+    #[test]
+    fn weighted_lanes_split_the_link_by_weight() {
+        let p = pool(100, PoolPolicyKind::Shared, 3);
+        p.write().unwrap().set_lane_weights(&[7.0, 1.0, 1.0]);
+        assert_eq!(p.read().unwrap().lane_share(0), (7.0, 9.0));
+        assert_eq!(p.read().unwrap().lane_share(1), (1.0, 9.0));
+        // a failed fat lane returns its whole weighted share
+        p.write().unwrap().fail_lane(0);
+        assert_eq!(p.read().unwrap().lane_share(1), (1.0, 2.0));
+        assert_eq!(p.read().unwrap().lanes(), 2);
+        // degenerate weights clamp to the unit weight
+        let q = pool(100, PoolPolicyKind::Shared, 2);
+        q.write().unwrap().set_lane_weights(&[f64::NAN, -3.0]);
+        assert_eq!(q.read().unwrap().lane_share(0), (1.0, 2.0));
+        // a short weight vector pads with unit weights
+        let s = pool(100, PoolPolicyKind::Shared, 2);
+        s.write().unwrap().set_lane_weights(&[4.0]);
+        assert_eq!(s.read().unwrap().lane_share(0), (4.0, 5.0));
+        assert_eq!(s.read().unwrap().lane_share(1), (1.0, 5.0));
+    }
+
+    #[test]
+    fn prestage_counters_resolve_used_and_evicted() {
+        let p = pool(80, PoolPolicyKind::Shared, 2);
+        let mut h = HostPoolHandle::new(p.clone(), 0);
+        {
+            let mut g = p.write().unwrap();
+            assert!(g.prestage(0, k(0, 0), Precision::Int4, 40, 1.5, 1.0));
+            assert!(g.prestage(0, k(0, 1), Precision::Int4, 40, 1.5, 1.1));
+            assert_eq!(g.stats.prestaged, 2);
+            assert_eq!(g.stats.ssd_fills, 0, "pre-staging is not demand traffic");
+        }
+        // a demand access lands on the first staged copy -> used
+        assert_eq!(h.acquire(k(0, 0), Precision::Int4, 2.0), PoolAccess::Hit { ready_at: 1.5 });
+        h.flush();
+        {
+            let g = p.read().unwrap();
+            assert_eq!(g.stats.prestage_used, 1);
+            assert_eq!(g.stats.prestage_evicted, 0);
+            assert!((g.stats.prestage_accuracy() - 0.5).abs() < 1e-12);
+        }
+        // capacity pressure evicts the untouched one (0,1 is LRU after
+        // the touch above) -> evicted
+        h.fill(k(1, 0), Precision::Int4, 40, 3.0, 3.0);
+        h.flush();
+        let g = p.read().unwrap();
+        assert_eq!(g.stats.prestage_evicted, 1);
+        assert_eq!(g.stats.prestage_used, 1);
+        // re-staging an already-staged copy is a recency touch, not a
+        // new pre-stage
+        drop(g);
+        let mut g = p.write().unwrap();
+        assert!(!g.prestage(0, k(0, 0), Precision::Int4, 40, 4.0, 4.0));
+        assert_eq!(g.stats.prestaged, 2);
+    }
+
+    #[test]
+    fn infeasible_prestage_resolves_as_evicted() {
+        // pinned pool with the budget already pinned: the pre-stage
+        // cannot land, and must not leave an unresolved counter behind
+        let p = pool(50, PoolPolicyKind::Pinned, 1);
+        let mut h = HostPoolHandle::new(p.clone(), 0);
+        h.fill(k(0, 0), Precision::Int4, 40, 1.0, 0.5);
+        h.flush();
+        let mut g = p.write().unwrap();
+        assert!(g.prestage(0, k(0, 1), Precision::Int4, 40, 2.0, 1.5));
+        assert_eq!(g.stats.prestaged, 1);
+        assert_eq!(g.stats.prestage_evicted, 1);
+        assert_eq!(g.stats.evictions, 0, "pinned pool must never evict");
     }
 
     /// Byte conservation under arbitrary acquire/fill/flush
@@ -576,9 +922,22 @@ mod tests {
                 let r = rng.range(0, replicas - 1);
                 let key = k(rng.range(0, 2), rng.range(0, 5));
                 let prec = precs[rng.range(0, 2)];
-                if handles[r].acquire(key, prec, t) == PoolAccess::Fill {
+                match handles[r].acquire(key, prec, t) {
+                    PoolAccess::Fill => {
+                        let bytes = rng.range(5, 60) as u64;
+                        handles[r].fill(key, prec, bytes, t + 0.1, t);
+                    }
+                    PoolAccess::Upgrade { have_bytes, .. } => {
+                        // the upgraded copy is never smaller than its base
+                        let bytes = have_bytes + rng.range(1, 30) as u64;
+                        handles[r].fill_upgrade(key, prec, bytes, t + 0.1, t);
+                    }
+                    PoolAccess::Hit { .. } => {}
+                }
+                if rng.f64() < 0.15 {
+                    // speculative pre-stage riding the same invariants
                     let bytes = rng.range(5, 60) as u64;
-                    handles[r].fill(key, prec, bytes, t + 0.1, t);
+                    p.write().unwrap().prestage(r, key, prec, bytes, t + 0.1, t);
                 }
                 if rng.f64() < 0.4 {
                     for h in handles.iter_mut() {

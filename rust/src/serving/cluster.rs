@@ -91,13 +91,19 @@
 //! [`DispatchPolicy`]: super::policy::DispatchPolicy
 
 use std::collections::{HashMap, VecDeque};
+use std::rc::Rc;
 use std::sync::{Arc, RwLock};
 
 use anyhow::{ensure, Context, Result};
 
 use crate::config::{ChurnEvent, ChurnKind};
 use crate::coordinator::engine::Engine;
+use crate::coordinator::prefetcher::predict_prefill;
+use crate::costmodel::CostModel;
 use crate::memory::{BusyTotals, HostExpertPool, HostPoolHandle, PoolStats};
+use crate::model::assets::ExpertKey;
+use crate::model::executor::Executor;
+use crate::quant::Precision;
 use crate::trace::TraceCapture;
 
 use super::arrival::TimedRequest;
@@ -105,7 +111,7 @@ use super::events::{Event, EventPayload, EventQueue};
 use super::metrics::{
     load_imbalance, load_imbalance_weighted, ChurnStats, FleetMetrics, ResourceUtil,
 };
-use super::policy::DispatchPolicy;
+use super::policy::{DispatchKind, DispatchPolicy};
 use super::replica::{Replica, ReplicaState};
 use super::{FleetConfig, FleetOutcome};
 
@@ -266,6 +272,77 @@ fn prepare(
     Ok((events, sorted))
 }
 
+/// Dispatcher-side gate-probe context for `--dispatch predictive`: a
+/// clone of one replica's compiled [`Executor`] plus the model / policy
+/// facts needed to turn a prompt into the session's predicted expert
+/// set before admission.  Mirrors the paper's orchestrator running the
+/// cheap layer-0 gate matmul on the dispatch node: the probe executes
+/// real numerics on the shared compiled program but charges no virtual
+/// time (its cost is negligible next to a prefill and it overlaps
+/// queueing).  Probes run only on the scheduling thread at arrival
+/// boundaries — scoped workers are always joined there — so holding an
+/// `Rc<Executor>` clone never crosses a thread.
+struct GateProbe {
+    exec: Rc<Executor>,
+    cost: CostModel,
+    max_seq: usize,
+    n_layers: usize,
+    n_experts: usize,
+    top_k: usize,
+    /// Experts to predict per probe (resolved from
+    /// `ServingConfig::probe_depth`; 0 meant "model top_k").
+    depth: usize,
+    /// Precision pre-staged experts are fetched at — the policy's high
+    /// tier, matching what a demand fill would bring in.
+    prec: Precision,
+    /// Pre-staging only makes sense when experts actually stream from
+    /// SSD; VRAM-resident configs probe for routing only.
+    ssd_resident: bool,
+    /// Memoized predictions by request id: a re-dispatch after a
+    /// failure reuses the original answer (same prompt, same gate)
+    /// instead of re-running the probe.
+    predicted: HashMap<usize, Vec<usize>>,
+}
+
+impl GateProbe {
+    fn new(engine: &Engine, probe_depth: usize) -> GateProbe {
+        let m = engine.model();
+        let depth = if probe_depth == 0 { m.top_k } else { probe_depth }.min(m.n_experts);
+        GateProbe {
+            exec: engine.exec.clone(),
+            cost: engine.cost.clone(),
+            max_seq: m.max_seq,
+            n_layers: m.n_layers,
+            n_experts: m.n_experts,
+            top_k: m.top_k,
+            depth,
+            prec: engine.sys.policy.high,
+            ssd_resident: engine.sys.policy.ssd_resident,
+            predicted: HashMap::new(),
+        }
+    }
+
+    /// Run (or recall) the layer-0 gate on the request's prompt and
+    /// return the predicted expert ids, most-frequently-routed first.
+    fn predict(&mut self, req: &TimedRequest) -> Result<Vec<usize>> {
+        if let Some(p) = self.predicted.get(&req.id) {
+            return Ok(p.clone());
+        }
+        let seq_len = req.request.prompt.len().min(self.max_seq);
+        let set = if seq_len == 0 {
+            Vec::new()
+        } else {
+            let mut padded = req.request.prompt.clone();
+            padded.resize(self.max_seq, 0);
+            let h = self.exec.embed_seq(&padded)?;
+            let po = self.exec.attn_prefill(0, &h, seq_len)?;
+            predict_prefill(&po.gate_probs, seq_len, self.n_experts, self.top_k, self.depth)
+        };
+        self.predicted.insert(req.id, set.clone());
+        Ok(set)
+    }
+}
+
 /// Mutable cluster-run state shared by the event-driven scheduler and
 /// the retired min-clock reference loop, so the two can only differ in
 /// *when* they invoke the same churn / dispatch / fold actions — the
@@ -291,6 +368,9 @@ struct ClusterSim<'e> {
     /// The shared host expert tier (`--host-pool`); `None` leaves every
     /// engine exactly on its pool-less code path.
     pool: Option<Arc<RwLock<HostExpertPool>>>,
+    /// Gate-probe context; `Some` only under `--dispatch predictive`,
+    /// so every other policy keeps its bit-identical dispatch path.
+    probe: Option<GateProbe>,
 }
 
 impl<'e> ClusterSim<'e> {
@@ -300,6 +380,21 @@ impl<'e> ClusterSim<'e> {
             .serving
             .host_pool
             .map(|pc| Arc::new(RwLock::new(HostExpertPool::new(&pc, n))));
+        // Per-replica host-link weights (`--replica-hw ...:HOST_GBPS`):
+        // fed to the shared pool so its contended-link split follows
+        // the cluster's actual link asymmetry.  All-default weights
+        // leave the split bitwise-identical to the even lane model.
+        if let Some(p) = &pool {
+            let weights: Vec<f64> =
+                engines.iter().map(|e| e.sys.hardware.host_lane_weight).collect();
+            p.write().expect("host pool lock poisoned").set_lane_weights(&weights);
+        }
+        // The predictive dispatcher probes the layer-0 gate on replica
+        // 0's executor (every replica compiles the same model, so any
+        // one works); the Rc clone happens before the replicas take
+        // their mutable engine borrows.
+        let probe = (cfg.dispatch == DispatchKind::Predictive)
+            .then(|| GateProbe::new(&engines[0], cfg.serving.probe_depth));
         ClusterSim {
             replicas: engines
                 .iter_mut()
@@ -320,6 +415,7 @@ impl<'e> ClusterSim<'e> {
             not_before: HashMap::new(),
             died_at: vec![None; n],
             pool,
+            probe,
         }
     }
 
@@ -347,7 +443,7 @@ impl<'e> ClusterSim<'e> {
                 // keep their lane — they still run down their work.)
                 self.replicas[e.replica].flush_host_pool();
                 if let Some(p) = &self.pool {
-                    p.write().expect("host pool lock poisoned").fail_lane();
+                    p.write().expect("host pool lock poisoned").fail_lane(e.replica);
                 }
                 self.died_at[e.replica] = Some(e.at);
                 self.churn.failed += 1;
@@ -382,7 +478,21 @@ impl<'e> ClusterSim<'e> {
              failed/drained the whole cluster with work outstanding",
             req.id
         );
-        let pos = self.dispatch.route(&req, &views);
+        // Predictive dispatch: probe the layer-0 gate for the session's
+        // expected expert set and route on byte-weighted overlap with
+        // each replica's resident summary; every other policy routes
+        // exactly as before.
+        let predicted = match self.probe.as_mut() {
+            Some(p) => Some(
+                p.predict(&req)
+                    .with_context(|| format!("gate probe for request {}", req.id))?,
+            ),
+            None => None,
+        };
+        let pos = match &predicted {
+            Some(p) => self.dispatch.route_predicted(&req, &views, p),
+            None => self.dispatch.route(&req, &views),
+        };
         ensure!(
             pos < views.len(),
             "dispatch policy {} routed request {} to position {pos} of {}",
@@ -391,6 +501,35 @@ impl<'e> ClusterSim<'e> {
             views.len()
         );
         let idx = views[pos].index;
+        // Look-ahead pre-staging: pull the predicted experts for every
+        // layer into the shared pool ahead of the session's demand
+        // misses, credited to the chosen replica's recency shard.
+        // Arrivals are single-threaded boundary events with all window
+        // journals flushed, so this direct write is deterministic under
+        // `--parallel`; each transfer is modelled as one background
+        // NVMe fetch finishing at `ready_at` and is charged to the
+        // `prestaged` counters, never to demand `ssd_fills`.
+        if let (Some(predicted), Some(probe), Some(pool)) =
+            (&predicted, &self.probe, &self.pool)
+        {
+            if probe.ssd_resident && !predicted.is_empty() {
+                let bytes = probe.cost.expert_weight_bytes(probe.prec) as u64;
+                let ready = req.arrival + probe.cost.nvme_transfer(bytes as f64);
+                let mut g = pool.write().expect("host pool lock poisoned");
+                for layer in 0..probe.n_layers {
+                    for &e in predicted {
+                        g.prestage(
+                            idx,
+                            ExpertKey::new(layer, e),
+                            probe.prec,
+                            bytes,
+                            ready,
+                            req.arrival,
+                        );
+                    }
+                }
+            }
+        }
         self.dispatched[idx] += 1;
         let was_idle = !self.replicas[idx].has_work();
         match self.not_before.get(&req.id).copied() {

@@ -394,7 +394,7 @@ impl SchedPolicy for SloAware {
 
 /// Dispatcher-visible snapshot of one replica (what a cluster front-end
 /// can observe without touching the replica's engine).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ReplicaDispatchView {
     /// Replica index in the cluster (`0..replicas`).
     pub index: usize,
@@ -408,6 +408,12 @@ pub struct ReplicaDispatchView {
     pub active_sessions: usize,
     /// Prompt + generation tokens still owed by active sessions.
     pub active_tokens: usize,
+    /// Bytes of expert weights resident in the replica's tiers, per
+    /// expert id (summed over layers: VRAM cache plus the replica's
+    /// view of the shared host pool).  The predictive dispatcher's
+    /// byte-weighted overlap signal.  Empty — and uncomputed, so the
+    /// snapshot stays O(1) — for every non-predictive policy.
+    pub resident_expert_bytes: Vec<u64>,
 }
 
 impl ReplicaDispatchView {
@@ -437,6 +443,21 @@ impl ReplicaDispatchView {
 pub trait DispatchPolicy {
     fn name(&self) -> &'static str;
     fn route(&mut self, req: &TimedRequest, replicas: &[ReplicaDispatchView]) -> usize;
+
+    /// Route with a gate-probe prediction of the request's expert set
+    /// (expert ids, most-frequent first).  The cluster calls this —
+    /// instead of [`DispatchPolicy::route`] — when a dispatcher-side
+    /// probe ran; policies that don't exploit predictions just ignore
+    /// them, so the default forwards to `route`.
+    fn route_predicted(
+        &mut self,
+        req: &TimedRequest,
+        replicas: &[ReplicaDispatchView],
+        predicted: &[usize],
+    ) -> usize {
+        let _ = predicted;
+        self.route(req, replicas)
+    }
 }
 
 /// Dispatch policy selector (config / CLI surface).
@@ -450,6 +471,12 @@ pub enum DispatchKind {
     /// Hash the prompt's predicted hot experts to a replica, so prompts
     /// that route to similar experts land on the same warm expert cache.
     ExpertAffinity,
+    /// Probe the layer-0 gate on the prompt prefix at dispatch time and
+    /// route to the replica whose resident experts (VRAM cache + host
+    /// pool view) overlap the *actual* predicted expert set by the most
+    /// bytes; ties go to the shorter backlog, degrading to jsq-like
+    /// routing when nothing is resident.
+    Predictive,
 }
 
 impl DispatchKind {
@@ -458,7 +485,8 @@ impl DispatchKind {
             "rr" | "round-robin" => DispatchKind::RoundRobin,
             "jsq" | "shortest-queue" => DispatchKind::JoinShortestQueue,
             "affinity" | "expert-affinity" => DispatchKind::ExpertAffinity,
-            _ => bail!("unknown dispatch policy {name:?}; try rr, jsq, affinity"),
+            "predictive" | "probe" => DispatchKind::Predictive,
+            _ => bail!("unknown dispatch policy {name:?}; try rr, jsq, affinity, predictive"),
         })
     }
 
@@ -467,6 +495,7 @@ impl DispatchKind {
             DispatchKind::RoundRobin => "rr",
             DispatchKind::JoinShortestQueue => "jsq",
             DispatchKind::ExpertAffinity => "affinity",
+            DispatchKind::Predictive => "predictive",
         }
     }
 
@@ -475,13 +504,15 @@ impl DispatchKind {
             DispatchKind::RoundRobin => Box::new(DispatchRoundRobin { next: 0 }),
             DispatchKind::JoinShortestQueue => Box::new(JoinShortestQueue),
             DispatchKind::ExpertAffinity => Box::new(ExpertAffinity),
+            DispatchKind::Predictive => Box::new(PredictiveDispatch),
         }
     }
 
-    pub const ALL: [DispatchKind; 3] = [
+    pub const ALL: [DispatchKind; 4] = [
         DispatchKind::RoundRobin,
         DispatchKind::JoinShortestQueue,
         DispatchKind::ExpertAffinity,
+        DispatchKind::Predictive,
     ];
 }
 
@@ -584,6 +615,61 @@ impl DispatchPolicy for ExpertAffinity {
             if pos == 0 || w > best_w {
                 best = pos;
                 best_w = w;
+            }
+        }
+        best
+    }
+}
+
+/// Predictive gate-probe dispatch (DyMoE's thesis applied to routing:
+/// runtime knowledge of the routed expert set beats static placement).
+/// The cluster probes the layer-0 gate on the prompt prefix and hands
+/// the predicted expert set to [`DispatchPolicy::route_predicted`];
+/// this policy scores every offered replica by **byte-weighted
+/// overlap** — the staged bytes it already holds for the predicted
+/// experts, VRAM cache plus its host-pool view
+/// ([`ReplicaDispatchView::resident_expert_bytes`]) — and routes to
+/// the argmax.  Ties (including the cold-start case where nothing is
+/// resident anywhere, or an engine-free caller using plain `route`)
+/// break toward the smaller backlog then the earlier offered position,
+/// so the policy degrades to deterministic jsq-like load balancing
+/// instead of hotspotting.
+struct PredictiveDispatch;
+
+impl DispatchPolicy for PredictiveDispatch {
+    fn name(&self) -> &'static str {
+        "predictive"
+    }
+
+    fn route(&mut self, req: &TimedRequest, replicas: &[ReplicaDispatchView]) -> usize {
+        // No probe available (e.g. a dispatcher running without an
+        // engine): an empty prediction scores every replica 0, which is
+        // exactly the jsq-like fallback.
+        self.route_predicted(req, replicas, &[])
+    }
+
+    fn route_predicted(
+        &mut self,
+        _req: &TimedRequest,
+        replicas: &[ReplicaDispatchView],
+        predicted: &[usize],
+    ) -> usize {
+        let mut best = 0usize;
+        let mut best_score = 0u64;
+        let mut best_backlog = usize::MAX;
+        for (pos, v) in replicas.iter().enumerate() {
+            let score: u64 = predicted
+                .iter()
+                .map(|&e| v.resident_expert_bytes.get(e).copied().unwrap_or(0))
+                .sum();
+            let backlog = v.backlog_tokens();
+            // Offered views arrive in ascending index order, so the
+            // strict comparisons keep tie-breaking membership-stable.
+            if pos == 0 || score > best_score || (score == best_score && backlog < best_backlog)
+            {
+                best = pos;
+                best_score = score;
+                best_backlog = backlog;
             }
         }
         best
@@ -776,7 +862,15 @@ mod tests {
             queued_tokens,
             active_sessions: active_tokens.min(1),
             active_tokens,
+            resident_expert_bytes: Vec::new(),
         }
+    }
+
+    /// A view with a residency summary (predictive dispatch input).
+    fn rv_res(index: usize, backlog: usize, resident: Vec<u64>) -> ReplicaDispatchView {
+        let mut v = rv(index, backlog, 0);
+        v.resident_expert_bytes = resident;
+        v
     }
 
     fn treq(id: usize, prompt: Vec<i32>) -> TimedRequest {
@@ -840,7 +934,7 @@ mod tests {
             prompts.iter().map(|pr| full[p.route(&treq(0, pr.clone()), &full)].index).collect();
         for dead in 0..4usize {
             let survivors: Vec<ReplicaDispatchView> =
-                full.iter().copied().filter(|v| v.index != dead).collect();
+                full.iter().cloned().filter(|v| v.index != dead).collect();
             for (pr, &h) in prompts.iter().zip(&home) {
                 let now = survivors[p.route(&treq(0, pr.clone()), &survivors)].index;
                 if h != dead {
@@ -862,5 +956,59 @@ mod tests {
             DispatchKind::parse("shortest-queue").unwrap(),
             DispatchKind::JoinShortestQueue
         );
+        assert_eq!(DispatchKind::parse("probe").unwrap(), DispatchKind::Predictive);
+    }
+
+    #[test]
+    fn dispatch_predictive_routes_to_byte_weighted_overlap_argmax() {
+        let mut p = DispatchKind::Predictive.build();
+        let r = treq(0, vec![1, 2]);
+        // replica 1 holds the most bytes of the predicted set {0, 2}
+        let views = vec![
+            rv_res(0, 0, vec![10, 500, 0]),
+            rv_res(1, 9, vec![40, 0, 60]),
+            rv_res(2, 0, vec![0, 0, 30]),
+        ];
+        assert_eq!(p.route_predicted(&r, &views, &[0, 2]), 1, "argmax must win over backlog");
+        // prediction outside the summary bounds contributes nothing
+        assert_eq!(p.route_predicted(&r, &views, &[7]), 0, "oob expert must tie to min backlog");
+        // overlap ties break toward the smaller backlog
+        let tied = vec![rv_res(0, 8, vec![50]), rv_res(1, 3, vec![50]), rv_res(2, 5, vec![50])];
+        assert_eq!(p.route_predicted(&r, &tied, &[0]), 1);
+    }
+
+    #[test]
+    fn dispatch_predictive_degrades_to_jsq_like_without_summaries() {
+        let mut p = DispatchKind::Predictive.build();
+        let mut jsq = DispatchKind::JoinShortestQueue.build();
+        let r = treq(0, vec![1, 2]);
+        // empty residency summaries (the non-predictive snapshot) and an
+        // empty prediction: every pick must match join-shortest-queue
+        let cases = [
+            vec![rv(0, 5, 5), rv(1, 2, 3), rv(2, 0, 4)],
+            vec![rv(0, 3, 0), rv(1, 0, 3), rv(2, 9, 9)],
+            vec![rv(3, 0, 0)],
+        ];
+        for views in &cases {
+            assert_eq!(p.route(&r, views), jsq.route(&r, views));
+            assert_eq!(p.route_predicted(&r, views, &[]), jsq.route(&r, views));
+        }
+    }
+
+    #[test]
+    fn dispatch_predictive_is_deterministic_and_in_range_over_filtered_views() {
+        let mut p = DispatchKind::Predictive.build();
+        let r = treq(0, vec![1, 2]);
+        // liveness-filtered slice: non-contiguous indices, positions
+        // must still be in range and stable across repeated calls
+        let views = vec![rv_res(1, 4, vec![0, 9]), rv_res(3, 2, vec![0, 9])];
+        let first = p.route_predicted(&r, &views, &[1]);
+        for _ in 0..8 {
+            let pick = p.route_predicted(&r, &views, &[1]);
+            assert_eq!(pick, first);
+            assert!(pick < views.len());
+        }
+        // equal overlap: the smaller backlog (position 1, index 3) wins
+        assert_eq!(views[first].index, 3);
     }
 }

@@ -31,7 +31,8 @@ use crate::workload::Request;
 use super::arrival::TimedRequest;
 use super::metrics::{DedupStats, PhaseStats, ResourceUtil, SloTargets};
 use super::policy::{
-    Action, ActiveInfo, QueuedInfo, ReplicaDispatchView, SchedPolicy, SchedView, TickPlan,
+    Action, ActiveInfo, DispatchKind, QueuedInfo, ReplicaDispatchView, SchedPolicy, SchedView,
+    TickPlan,
 };
 use super::{FleetConfig, FleetOutcome};
 
@@ -131,6 +132,11 @@ pub struct Replica<'e> {
     events_before: usize,
     /// One counter sample per tick (empty when not recording).
     samples: Vec<TickSample>,
+    /// Whether the cluster dispatches predictively: only then does
+    /// [`Replica::dispatch_view`] pay for the per-expert residency
+    /// summary (every other policy gets the O(1) snapshot, so the new
+    /// field cannot perturb their outcomes).
+    predictive: bool,
     out: FleetOutcome,
 }
 
@@ -190,6 +196,7 @@ impl<'e> Replica<'e> {
             busy_before: engine.busy_totals(),
             events_before: engine.timeline.events.len(),
             samples: Vec::new(),
+            predictive: cfg.dispatch == DispatchKind::Predictive,
             out: FleetOutcome::default(),
             policy,
             engine,
@@ -314,7 +321,33 @@ impl<'e> Replica<'e> {
             queued_tokens,
             active_sessions: self.active.len(),
             active_tokens,
+            resident_expert_bytes: if self.predictive {
+                self.resident_expert_bytes()
+            } else {
+                Vec::new()
+            },
         }
+    }
+
+    /// Per-expert staged bytes across this replica's memory tiers
+    /// (VRAM cache + its view of the shared host pool), summed over
+    /// layers — the predictive dispatcher's overlap signal.  Cache key
+    /// iteration order is nondeterministic (HashMap), but per-expert
+    /// byte sums commute, so the summary is deterministic.
+    fn resident_expert_bytes(&self) -> Vec<u64> {
+        let n_experts = self.engine.model().n_experts;
+        let mut out = vec![0u64; n_experts];
+        for key in self.engine.cache.keys() {
+            if let Some(prec) = self.engine.cache.contains(key) {
+                if let Some(slot) = out.get_mut(key.expert as usize) {
+                    *slot += self.engine.cost.expert_weight_bytes(prec) as u64;
+                }
+            }
+        }
+        if let Some(pool) = self.engine.host_pool.as_ref() {
+            pool.add_resident_expert_bytes(&mut out);
+        }
+        out
     }
 
     /// Advance this replica by one scheduling step.  Every arrival with

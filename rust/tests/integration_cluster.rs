@@ -747,6 +747,7 @@ fn prop_dispatch_policies_route_sanely() {
                 queued_tokens: rng.below(200),
                 active_sessions: rng.below(4),
                 active_tokens: rng.below(100),
+                resident_expert_bytes: Vec::new(),
             })
             .collect();
         let prompt: Vec<i32> = (0..rng.range(1, 12)).map(|_| rng.below(60) as i32).collect();

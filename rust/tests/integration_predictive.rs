@@ -1,0 +1,381 @@
+//! Integration: predictive gate-probe dispatch and look-ahead pool
+//! pre-staging.
+//!
+//! Four pillars:
+//!
+//! 1. **Probe-vs-oracle agreement** — the dispatcher's probe recipe
+//!    (pad prompt → `embed_seq` → layer-0 `attn_prefill` →
+//!    `predict_prefill`) run at full depth predicts a **superset** of
+//!    the experts the engine actually executed at layer 0 for the same
+//!    prompt, on deterministic workloads.  The oracle comes from the
+//!    recorded timeline (executed-expert stamps), not from the
+//!    prediction code, so the agreement is not circular.
+//! 2. **Engine-free dispatch model properties** — `predictive` routing
+//!    over random views is deterministic, in range, an argmax of the
+//!    byte-weighted overlap with backlog tie-breaking, and degrades to
+//!    jsq-like load balancing when no summary (or no prediction) is
+//!    available.  Runs everywhere, no artifacts needed.
+//! 3. **Off-path neutrality** — `rr` / `jsq` / `affinity` dispatch
+//!    never builds a probe: their outcomes are digest-identical with
+//!    the probe-depth knob at any value, across the event loop, the
+//!    retired min-clock loop, and `--parallel` workers, with and
+//!    without a host pool attached.
+//! 4. **Pre-staging discipline** — a predictive run over a shared pool
+//!    actually pre-stages (counters move, used + evicted never exceed
+//!    staged, accuracy is a valid ratio), and `--parallel` remains
+//!    bit-identical to serial with pre-staging on: pre-stage writes
+//!    happen only at single-threaded arrival boundaries.
+//!
+//! Engine-level tests need the real `tiny` artifacts and skip politely
+//! when they are missing (run `make artifacts`), matching the other
+//! integration suites.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use dymoe::baselines::{LoadOnDemand, Uniform};
+use dymoe::config::{HostPoolConfig, PoolPolicyKind, ServingConfig, SystemConfig, GB};
+use dymoe::coordinator::engine::{Engine, EngineOptions};
+use dymoe::coordinator::prefetcher::predict_prefill;
+use dymoe::memory::EventKind;
+use dymoe::model::assets::ModelAssets;
+use dymoe::quant::Precision;
+use dymoe::serving::arrival::TimedRequest;
+use dymoe::serving::policy::{DispatchKind, PolicyKind, ReplicaDispatchView};
+use dymoe::serving::{run_cluster, run_cluster_minclock, FleetConfig};
+use dymoe::util::prop;
+use dymoe::workload::Request;
+
+fn assets() -> Option<Arc<ModelAssets>> {
+    match ModelAssets::load("artifacts", "tiny") {
+        Ok(a) => Some(Arc::new(a)),
+        Err(_) => {
+            eprintln!("artifacts/tiny missing; run `make artifacts`");
+            None
+        }
+    }
+}
+
+/// Engine whose every routed expert walks the full transfer chain
+/// (no VRAM warm fill, SSD under the host tier), so host-pool and
+/// pre-staging traffic is actually exercised.
+fn pool_engine(a: &Arc<ModelAssets>) -> Engine {
+    let mut sys = SystemConfig::edge_preset("tiny", 24).unwrap();
+    sys.policy.ssd_resident = true;
+    Engine::with_options(
+        a,
+        sys,
+        Box::new(LoadOnDemand::new(Precision::Int4)),
+        EngineOptions::default(),
+    )
+    .unwrap()
+}
+
+/// Strictly serial per replica so routed-expert sequences depend only
+/// on dispatch; `host_pool`, `dispatch`, and `probe_depth` set per test.
+fn fleet_cfg(
+    dispatch: DispatchKind,
+    pool: Option<HostPoolConfig>,
+    probe_depth: usize,
+) -> FleetConfig {
+    FleetConfig {
+        serving: ServingConfig {
+            max_sessions: 1,
+            ttft_slo_s: 1e6,
+            tpot_slo_s: 1e6,
+            max_decode_batch: 1,
+            host_pool: pool,
+            probe_depth,
+            ..Default::default()
+        },
+        policy: PolicyKind::Fifo,
+        dispatch,
+    }
+}
+
+/// Identical prompts at a fixed arrival gap: every arrival is an event
+/// boundary (journals flushed), and repeated prompts make the predicted
+/// expert set — and therefore pre-stage reuse — deterministic.
+fn staggered_trace(a: &Arc<ModelAssets>, n: usize, gap: f64) -> Vec<TimedRequest> {
+    let m = &a.manifest.model;
+    let prompt: Vec<i32> = (0..m.max_seq.min(8)).map(|i| 1 + i as i32).collect();
+    let max_new = (m.max_cache - m.max_seq).clamp(1, 2);
+    (0..n)
+        .map(|id| TimedRequest {
+            id,
+            arrival: id as f64 * gap,
+            request: Request { prompt: prompt.clone(), max_new },
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Probe-vs-oracle agreement (artifacts-gated)
+// ---------------------------------------------------------------------
+
+/// The probe recipe the predictive dispatcher runs — pad the prompt,
+/// embed, layer-0 attention prefill, `predict_prefill` — must, at full
+/// depth, predict every expert the engine then *actually executes* at
+/// layer 0 for the same prompt (the executed set can only shrink below
+/// the routed set, never grow past it).  The oracle is read back from
+/// the engine's recorded timeline: compute events stamped layer 0 with
+/// a non-empty expert set.
+#[test]
+fn probe_predicts_a_superset_of_layer0_executed_experts() {
+    let Some(a) = assets() else { return };
+    let mut sys = SystemConfig::edge_preset("tiny", 24).unwrap();
+    sys.hardware.vram_bytes = 1024 * GB;
+    let mut engine = Engine::with_options(
+        &a,
+        sys,
+        Box::new(Uniform::new(Precision::Bf16)),
+        EngineOptions { record_timeline: true, ..Default::default() },
+    )
+    .unwrap();
+    let m = engine.model().clone();
+
+    for seed in 0..4usize {
+        // Deterministic, seed-varied prompts so different gate routes
+        // are exercised.
+        let prompt: Vec<i32> = (0..m.max_seq.min(12))
+            .map(|i| 1 + ((seed * 31 + i * 7) % 50) as i32)
+            .collect();
+        let before = engine.timeline.events.len();
+        engine.run(&prompt, 1).unwrap();
+        let executed: BTreeSet<usize> = engine.timeline.events[before..]
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::GpuCompute | EventKind::CpuCompute))
+            .filter(|e| e.meta.layer == Some(0) && !e.meta.experts.is_empty())
+            .flat_map(|e| e.meta.experts.iter().map(|&x| x as usize))
+            .collect();
+        assert!(!executed.is_empty(), "seed {seed}: oracle saw no layer-0 expert work");
+
+        let seq_len = prompt.len().min(m.max_seq);
+        let mut padded = prompt.clone();
+        padded.resize(m.max_seq, 0);
+        let h = engine.exec.embed_seq(&padded).unwrap();
+        let po = engine.exec.attn_prefill(0, &h, seq_len).unwrap();
+        let full: BTreeSet<usize> =
+            predict_prefill(&po.gate_probs, seq_len, m.n_experts, m.top_k, m.n_experts)
+                .into_iter()
+                .collect();
+        for e in &executed {
+            assert!(
+                full.contains(e),
+                "seed {seed}: layer-0 executed expert {e} missing from the full-depth \
+                 probe prediction {full:?}"
+            );
+        }
+
+        // A truncated probe keeps the ranking discipline: at most
+        // `depth` experts, all of them drawn from the full-depth set.
+        let topk = predict_prefill(&po.gate_probs, seq_len, m.n_experts, m.top_k, m.top_k);
+        assert!(topk.len() <= m.top_k, "seed {seed}: depth {} overran", m.top_k);
+        assert!(
+            topk.iter().all(|e| full.contains(e)),
+            "seed {seed}: truncated probe predicted outside the full set"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Engine-free dispatch model properties (run everywhere)
+// ---------------------------------------------------------------------
+
+/// Predictive routing over random views and predictions: always in
+/// range, deterministic (a fresh policy instance agrees), an argmax of
+/// the byte-weighted overlap score with smaller-backlog tie-breaking,
+/// and — with no prediction at all — a jsq-like backlog argmin.
+#[test]
+fn prop_predictive_dispatch_is_a_deterministic_overlap_argmax() {
+    const N_EXPERTS: usize = 8;
+    prop::check("predictive-dispatch", 200, |rng| {
+        let n = rng.range(1, 9);
+        let views: Vec<ReplicaDispatchView> = (0..n)
+            .map(|index| ReplicaDispatchView {
+                index,
+                clock: rng.f64() * 100.0,
+                queued_requests: rng.below(5),
+                queued_tokens: rng.below(200),
+                active_sessions: rng.below(4),
+                active_tokens: rng.below(100),
+                // Some replicas carry no summary at all (empty vec):
+                // the policy must treat them as zero-overlap, not
+                // panic or misindex.
+                resident_expert_bytes: if rng.below(4) == 0 {
+                    Vec::new()
+                } else {
+                    (0..N_EXPERTS).map(|_| rng.below(1000) as u64 * 100).collect()
+                },
+            })
+            .collect();
+        let predicted: Vec<usize> =
+            (0..rng.below(6)).map(|_| rng.below(N_EXPERTS)).collect();
+        let req = TimedRequest {
+            id: rng.below(1000),
+            arrival: rng.f64(),
+            request: Request { prompt: vec![1, 2, 3], max_new: 2 },
+        };
+        let score = |v: &ReplicaDispatchView| -> u64 {
+            predicted
+                .iter()
+                .map(|&e| v.resident_expert_bytes.get(e).copied().unwrap_or(0))
+                .sum()
+        };
+
+        let mut p = DispatchKind::Predictive.build();
+        let pick = p.route_predicted(&req, &views, &predicted);
+        assert!(pick < n, "predictive routed out of range: {pick} of {n}");
+        assert_eq!(
+            pick,
+            DispatchKind::Predictive.build().route_predicted(&req, &views, &predicted),
+            "predictive routing is not deterministic"
+        );
+
+        // argmax of the overlap score, ties to the smaller backlog
+        let best = score(&views[pick]);
+        for v in &views {
+            assert!(score(v) <= best, "predictive skipped a higher-overlap replica");
+            if score(v) == best {
+                assert!(
+                    views[pick].backlog_tokens() <= v.backlog_tokens(),
+                    "predictive broke an overlap tie toward a longer backlog"
+                );
+            }
+        }
+
+        // No prediction (plain `route`): every score is zero, so the
+        // pick must be a backlog argmin — jsq-like degradation.
+        let fallback = DispatchKind::Predictive.build().route(&req, &views);
+        assert!(fallback < n);
+        for v in &views {
+            assert!(
+                views[fallback].backlog_tokens() <= v.backlog_tokens(),
+                "prediction-free predictive dispatch is not jsq-like"
+            );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Off-path digest neutrality (artifacts-gated)
+// ---------------------------------------------------------------------
+
+/// The probe machinery must be invisible to every other dispatch
+/// policy: `rr` / `jsq` / `affinity` outcomes are digest-identical
+/// whatever `--probe-depth` says, across the event loop, the retired
+/// min-clock loop, and `--parallel` workers — on the pool-less path
+/// and (event loop only; the two loops legitimately differ in flush
+/// windows with a pool attached) with a shared host pool.
+#[test]
+fn non_predictive_dispatch_ignores_the_probe_machinery() {
+    let Some(a) = assets() else { return };
+    let mk = || staggered_trace(&a, 6, 0.2);
+    let non_predictive = [
+        DispatchKind::RoundRobin,
+        DispatchKind::JoinShortestQueue,
+        DispatchKind::ExpertAffinity,
+    ];
+    for dispatch in non_predictive {
+        let label = dispatch.name();
+
+        // pool-less: knob inert, all three loops bit-identical
+        let base = fleet_cfg(dispatch, None, 0);
+        let mut engines: Vec<Engine> = (0..2).map(|_| pool_engine(&a)).collect();
+        let reference = run_cluster(&mut engines, mk(), &base).unwrap();
+
+        let knob = fleet_cfg(dispatch, None, 7);
+        let mut engines: Vec<Engine> = (0..2).map(|_| pool_engine(&a)).collect();
+        let knobbed = run_cluster(&mut engines, mk(), &knob).unwrap();
+        assert_eq!(
+            reference.digest(),
+            knobbed.digest(),
+            "{label}: --probe-depth changed a non-predictive outcome"
+        );
+
+        let mut engines: Vec<Engine> = (0..2).map(|_| pool_engine(&a)).collect();
+        let minclock = run_cluster_minclock(&mut engines, mk(), &base).unwrap();
+        assert_eq!(reference.digest(), minclock.digest(), "{label}: min-clock diverged");
+
+        let mut par = base.clone();
+        par.serving.parallel = 2;
+        let mut engines: Vec<Engine> = (0..2).map(|_| pool_engine(&a)).collect();
+        let parallel = run_cluster(&mut engines, mk(), &par).unwrap();
+        assert_eq!(reference.digest(), parallel.digest(), "{label}: parallel diverged");
+
+        // pooled: the probe-depth knob stays inert (non-predictive
+        // runs never pre-stage, so the pool sees identical traffic)
+        let pool = || Some(HostPoolConfig { capacity_bytes: GB, policy: PoolPolicyKind::Shared });
+        let mut engines: Vec<Engine> = (0..2).map(|_| pool_engine(&a)).collect();
+        let pooled = run_cluster(&mut engines, mk(), &fleet_cfg(dispatch, pool(), 0)).unwrap();
+        let mut engines: Vec<Engine> = (0..2).map(|_| pool_engine(&a)).collect();
+        let pooled_knob =
+            run_cluster(&mut engines, mk(), &fleet_cfg(dispatch, pool(), 7)).unwrap();
+        assert_eq!(
+            pooled.digest(),
+            pooled_knob.digest(),
+            "{label}: --probe-depth changed a pooled non-predictive outcome"
+        );
+        assert_eq!(pooled.pool.prestaged, 0, "{label}: non-predictive run pre-staged");
+        assert_eq!(pooled.pool, pooled_knob.pool, "{label}: pool counters diverged");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pre-staging discipline (artifacts-gated)
+// ---------------------------------------------------------------------
+
+/// A predictive run over a shared pool must actually pre-stage, resolve
+/// its flags coherently (used + evicted never exceed staged; accuracy
+/// is a ratio), convert pre-staged copies into demand hits, and stay
+/// bit-identical — digest *and* pool counters — under `--parallel`,
+/// because pre-stage writes land only at single-threaded arrival
+/// boundaries with every window journal flushed.
+#[test]
+fn predictive_prestaging_accounts_and_stays_parallel_deterministic() {
+    let Some(a) = assets() else { return };
+    let mk = || staggered_trace(&a, 8, 0.15);
+    let base = fleet_cfg(
+        DispatchKind::Predictive,
+        Some(HostPoolConfig { capacity_bytes: GB, policy: PoolPolicyKind::Shared }),
+        0,
+    );
+    let mut serial_engines: Vec<Engine> = (0..2).map(|_| pool_engine(&a)).collect();
+    let serial = run_cluster(&mut serial_engines, mk(), &base).unwrap();
+
+    assert_eq!(serial.fleet.metrics.completed, 8);
+    assert!(serial.pool.prestaged > 0, "predictive pool run never pre-staged");
+    assert!(
+        serial.pool.prestage_used + serial.pool.prestage_evicted <= serial.pool.prestaged,
+        "pre-stage flags over-resolved: {} used + {} evicted of {} staged",
+        serial.pool.prestage_used,
+        serial.pool.prestage_evicted,
+        serial.pool.prestaged
+    );
+    assert!(
+        serial.pool.prestage_used > 0,
+        "identical prompts demand the experts just pre-staged for them, yet none resolved used"
+    );
+    let acc = serial.pool.prestage_accuracy();
+    assert!((0.0..=1.0).contains(&acc), "pre-stage accuracy {acc} out of range");
+    assert!(serial.pool.host_hits > 0, "pre-staged copies never served a hit");
+    // detach discipline still holds with pre-staging in the mix
+    assert!(serial_engines.iter().all(|e| e.host_pool.is_none()), "handle leaked");
+
+    let mut par_cfg = base.clone();
+    par_cfg.serving.parallel = 2;
+    let mut par_engines: Vec<Engine> = (0..2).map(|_| pool_engine(&a)).collect();
+    let parallel = run_cluster(&mut par_engines, mk(), &par_cfg).unwrap();
+    assert_eq!(
+        parallel.digest(),
+        serial.digest(),
+        "predictive + pre-staging diverged under --parallel"
+    );
+    assert_eq!(parallel.pool, serial.pool, "pool counters diverged under --parallel");
+
+    // and the whole thing is run-to-run deterministic
+    let mut again_engines: Vec<Engine> = (0..2).map(|_| pool_engine(&a)).collect();
+    let again = run_cluster(&mut again_engines, mk(), &base).unwrap();
+    assert_eq!(again.digest(), serial.digest(), "predictive run not reproducible");
+    assert_eq!(again.pool, serial.pool);
+}
