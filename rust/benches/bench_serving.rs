@@ -24,11 +24,17 @@
 //! fills, pre-stage counts and accuracy, and mean/p99 TTFT —
 //! predictive's hit-rate and mean-TTFT edge at 4+ replicas with the
 //! shared pool on is the acceptance signal),
-//! and an **event-driven sweep** (8/16/32-replica clusters run
+//! an **event-driven sweep** (8/16/32-replica clusters run
 //! through the retired min-clock lockstep loop, the event-driven
 //! scheduler, and the event-driven scheduler on 4 worker threads —
 //! reporting wall-clock per mode plus the [`ClusterOutcome::digest`]
-//! outcome hash, which must match across all three) close the file.
+//! outcome hash, which must match across all three), and a
+//! **scenario sweep** (one seeded mixed-tenant flash-crowd trace served
+//! under the class-blind fifo baseline vs the class-aware preemptive
+//! slo policy at 2/4 replicas, reporting per-class SLO attainment,
+//! preemption counts, and batch throughput — interactive attainment
+//! strictly higher under slo, with batch degraded but never starved,
+//! is the acceptance signal) close the file.
 //!
 //! `--json` runs a small fixed smoke configuration instead and writes
 //! `BENCH_serving.json` (p50/p99 TTFT/TPOT, expert dedup ratio per
@@ -36,8 +42,9 @@
 //! head-of-line sweep: p99 TPOT, worst inter-token stall, chunk and
 //! mixed-tick counts per `chunk_tokens` setting, plus the
 //! `replica_scaling_sweep`, `churn_sweep`, `host_pool_sweep`,
-//! `predictive_dispatch_sweep`, and `event_driven_sweep`) so CI can
-//! track the perf trajectory in a machine-readable form.
+//! `predictive_dispatch_sweep`, `event_driven_sweep`, and
+//! `scenario_sweep`) so CI can track the perf trajectory in a
+//! machine-readable form.
 //!
 //! Skips politely if `make artifacts` has not been run.
 
@@ -54,10 +61,12 @@ use dymoe::coordinator::engine::{Engine, EngineOptions};
 use dymoe::coordinator::strategy::DyMoEStrategy;
 use dymoe::model::assets::ModelAssets;
 use dymoe::model::executor::Executor;
-use dymoe::serving::arrival::{ArrivalGen, ArrivalProcess, TimedRequest};
+use dymoe::serving::arrival::{ArrivalGen, ArrivalProcess, TenantClass, TimedRequest};
+use dymoe::serving::metrics::SloTargets;
 use dymoe::serving::policy::{DispatchKind, PolicyKind};
 use dymoe::serving::{
     run_cluster, run_cluster_minclock, run_fleet, ClusterOutcome, FleetConfig, FleetOutcome,
+    Scenario,
 };
 use dymoe::util::json::Json;
 use dymoe::workload::{Request, TraceGen};
@@ -377,23 +386,22 @@ fn run_hol_point(
     let short_new = (m.max_cache - m.max_seq).clamp(1, 8);
     let long_new = (m.max_cache - m.max_seq).clamp(1, 2);
     let mut trace: Vec<TimedRequest> = (0..n_short)
-        .map(|i| TimedRequest {
-            id: i,
-            arrival: 0.0,
-            request: Request {
-                prompt: vec![1, 10 + (3 * i as i32) % 40],
-                max_new: short_new,
-            },
+        .map(|i| {
+            TimedRequest::new(
+                i,
+                0.0,
+                Request { prompt: vec![1, 10 + (3 * i as i32) % 40], max_new: short_new },
+            )
         })
         .collect();
-    trace.push(TimedRequest {
-        id: n_short,
-        arrival: 0.0,
-        request: Request {
+    trace.push(TimedRequest::new(
+        n_short,
+        0.0,
+        Request {
             prompt: (0..m.max_seq).map(|i| 1 + (i as i32 * 7) % 60).collect(),
             max_new: long_new,
         },
-    });
+    ));
     let cfg = FleetConfig {
         serving: ServingConfig {
             max_sessions: n_short + 1,
@@ -405,6 +413,63 @@ fn run_hol_point(
         ..Default::default()
     };
     run_fleet(&mut engine, trace, &cfg)
+}
+
+/// The scenario sweep: one seeded mixed-tenant flash-crowd trace (a
+/// 50/50 interactive/batch split on the base rate, the interactive
+/// class spiking 4x at t = 5 s for 10 s) served under the class-blind
+/// fifo baseline and the class-aware preemptive slo policy at 2 and 4
+/// replicas.  Small slots (4 sessions, decode batch 4) make the flash
+/// genuinely contend for admission, which is where priority admission
+/// and batch-decode preemption earn their keep: interactive SLO
+/// attainment strictly higher under slo than under fifo, with batch
+/// throughput degraded by a bounded, reported amount (every batch
+/// request still completes — request conservation is checked by the
+/// cluster loop itself).
+const SCENARIO_REPLICAS: [usize; 2] = [2, 4];
+const SCENARIO_POLICIES: [PolicyKind; 2] = [PolicyKind::Fifo, PolicyKind::SloAware];
+const SCENARIO_SPEC: &str = "mixed-flash:0.5:5:4:10";
+
+fn run_scenario_point(
+    assets: &Arc<ModelAssets>,
+    replicas: usize,
+    requests: usize,
+    policy: PolicyKind,
+) -> anyhow::Result<ClusterOutcome> {
+    let m = assets.manifest.model.clone();
+    let exec = Rc::new(Executor::new(assets.clone())?);
+    let mut engines = Vec::with_capacity(replicas);
+    for _ in 0..replicas {
+        let sys = SystemConfig::edge_preset("mixtral-mini", 16)?;
+        let strat = Box::new(DyMoEStrategy::new(PolicyConfig::default()));
+        engines.push(Engine::with_executor(
+            assets,
+            sys,
+            strat,
+            EngineOptions::default(),
+            exec.clone(),
+        )?);
+    }
+    let serving = ServingConfig {
+        max_sessions: 4,
+        max_decode_batch: 4,
+        ..Default::default()
+    };
+    let scenario = Scenario::from_cli(
+        SCENARIO_SPEC,
+        SCALING_RATE,
+        SloTargets { ttft_s: serving.ttft_slo_s, tpot_s: serving.tpot_slo_s },
+        serving.batch_slo_scale,
+    )?;
+    let mut content =
+        TraceGen::new(11, m.max_seq.min(80), (m.max_cache - m.max_seq).min(12));
+    let trace = scenario.generate(0x5EED, &mut content, requests)?;
+    let cfg = FleetConfig {
+        serving,
+        policy,
+        dispatch: DispatchKind::JoinShortestQueue,
+    };
+    run_cluster(&mut engines, trace, &cfg)
 }
 
 fn num(v: f64) -> Json {
@@ -641,6 +706,42 @@ fn smoke_json(assets: &Arc<ModelAssets>) -> anyhow::Result<Json> {
             event_points.push(Json::Obj(p));
         }
     }
+    // Scenario sweep: the same seeded mixed-tenant flash-crowd trace
+    // under class-blind fifo vs the class-aware preemptive slo policy.
+    // Interactive SLO attainment strictly higher under slo — with batch
+    // merely degraded, never starved — is the acceptance signal CI
+    // tracks.
+    let mut scenario_points = Vec::new();
+    for &replicas in &SCENARIO_REPLICAS {
+        for policy in SCENARIO_POLICIES {
+            let o = run_scenario_point(assets, replicas, 2 * requests, policy)?;
+            let mut p = BTreeMap::new();
+            p.insert("scenario".to_string(), Json::Str(SCENARIO_SPEC.to_string()));
+            p.insert("replicas".to_string(), num(replicas as f64));
+            p.insert("policy".to_string(), Json::Str(policy.name().to_string()));
+            p.insert("completed".to_string(), num(o.fleet.metrics.completed as f64));
+            p.insert(
+                "throughput_tps".to_string(),
+                num(o.fleet.metrics.throughput_tps()),
+            );
+            p.insert(
+                "preemptions".to_string(),
+                num(o.fleet.metrics.preemptions() as f64),
+            );
+            for (class, st) in &o.fleet.metrics.per_class {
+                let k = class.name();
+                p.insert(format!("{k}_completed"), num(st.completed as f64));
+                p.insert(format!("{k}_slo_attainment"), num(st.slo_attainment()));
+                p.insert(format!("{k}_ttft_p99_s"), num(st.ttft.percentile(99.0)));
+                p.insert(
+                    format!("{k}_queue_delay_mean_s"),
+                    num(st.queue_delay.mean()),
+                );
+                p.insert(format!("{k}_tokens"), num(st.tokens_total as f64));
+            }
+            scenario_points.push(Json::Obj(p));
+        }
+    }
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("serving".to_string()));
     root.insert("model".to_string(), Json::Str("mixtral-mini".to_string()));
@@ -656,6 +757,7 @@ fn smoke_json(assets: &Arc<ModelAssets>) -> anyhow::Result<Json> {
     root.insert("host_pool_sweep".to_string(), Json::Arr(host_pool_points));
     root.insert("predictive_dispatch_sweep".to_string(), Json::Arr(predictive_points));
     root.insert("event_driven_sweep".to_string(), Json::Arr(event_points));
+    root.insert("scenario_sweep".to_string(), Json::Arr(scenario_points));
     Ok(Json::Obj(root))
 }
 
@@ -935,6 +1037,45 @@ fn main() -> anyhow::Result<()> {
                 wall * 1e3,
                 if digest == base_digest { "yes" } else { "NO" },
                 o.fleet.metrics.goodput_rps(),
+            );
+        }
+    }
+    println!();
+    println!(
+        "### scenario sweep ({SCENARIO_SPEC}, jsq dispatch, base rate \
+         {SCALING_RATE} r/s, {} requests, 4 slots/replica; class-blind fifo \
+         vs class-aware preemptive slo on the same seeded trace)",
+        2 * requests
+    );
+    println!(
+        "{:<9} {:<6} {:>9} {:>13} {:>9} {:>9} {:>9} {:>9} {:>10}",
+        "replicas",
+        "sched",
+        "int SLO%",
+        "int TTFT p99",
+        "bat SLO%",
+        "bat done",
+        "preempt",
+        "tok/s",
+        "wall (s)"
+    );
+    for &replicas in &SCENARIO_REPLICAS {
+        for policy in SCENARIO_POLICIES {
+            let wall = Instant::now();
+            let o = run_scenario_point(&assets, replicas, 2 * requests, policy)?;
+            let m = &o.fleet.metrics;
+            let int = m.per_class.get(&TenantClass::Interactive);
+            let bat = m.per_class.get(&TenantClass::Batch);
+            println!(
+                "{replicas:<9} {:<6} {:>8.0}% {:>13.4} {:>8.0}% {:>9} {:>9} {:>9.1} {:>10.2}",
+                policy.name(),
+                int.map_or(0.0, |s| s.slo_attainment() * 100.0),
+                int.map_or(0.0, |s| s.ttft.percentile(99.0)),
+                bat.map_or(0.0, |s| s.slo_attainment() * 100.0),
+                bat.map_or(0, |s| s.completed),
+                m.preemptions(),
+                m.throughput_tps(),
+                wall.elapsed().as_secs_f64(),
             );
         }
     }

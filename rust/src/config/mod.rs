@@ -467,6 +467,15 @@ pub struct ServingConfig {
     /// auto — the model's top_k, mirroring
     /// [`PolicyConfig::prefetch_depth`].
     pub probe_depth: usize,
+    /// SLO relaxation factor for **batch-class** tenants on `--scenario`
+    /// runs: batch requests get `ttft_slo_s x scale` / `tpot_slo_s x
+    /// scale` as their per-request targets, while interactive requests
+    /// keep the fleet SLO above.  Must be `>= 1`; only consulted when a
+    /// scenario trace stamps per-request SLOs
+    /// ([`crate::serving::Scenario::from_cli`]) — `--arrival` traces
+    /// carry no per-request SLO and resolve to the fleet targets, bit
+    /// for bit.
+    pub batch_slo_scale: f64,
 }
 
 impl Default for ServingConfig {
@@ -484,6 +493,7 @@ impl Default for ServingConfig {
             parallel: 1,
             host_pool: None,
             probe_depth: 0,
+            batch_slo_scale: 8.0,
         }
     }
 }
@@ -600,6 +610,10 @@ mod tests {
         assert!(s.churn.is_empty(), "default serving config must be churn-free");
         assert!(s.host_pool.is_none(), "default serving config must be pool-free");
         assert_eq!(s.probe_depth, 0, "default probe depth must be auto (top_k)");
+        assert!(
+            (s.batch_slo_scale - 8.0).abs() < 1e-12,
+            "default batch SLO relaxation must be 8x the fleet targets"
+        );
     }
 
     #[test]

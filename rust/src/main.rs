@@ -4,7 +4,8 @@
 //! dymoe info        --model mixtral-mini
 //! dymoe serve       --model mixtral-mini --vram 16 --requests 10 [--strategy dymoe-40]
 //! dymoe serve-fleet --model mixtral-mini --vram 16 --requests 24 --rate 0.25 \
-//!                   [--arrival poisson|bursty|ramp] [--sessions 8] [--sched fifo|rr|slo] \
+//!                   [--arrival poisson|bursty|ramp] [--scenario mixed-flash:0.5] \
+//!                   [--batch-slo-scale 8] [--sessions 8] [--sched fifo|rr|slo] \
 //!                   [--max-decode-batch 8] [--replicas 4] \
 //!                   [--dispatch rr|jsq|affinity|predictive] [--probe-depth 4] \
 //!                   [--replica-hw 24 --replica-hw 12:8:10:5] [--fail 30@0] [--drain 45@1] \
@@ -36,8 +37,9 @@ use dymoe::model::assets::ModelAssets;
 use dymoe::model::executor::Executor;
 use dymoe::quant::Precision;
 use dymoe::serving::arrival::{ArrivalGen, ArrivalProcess};
+use dymoe::serving::metrics::SloTargets;
 use dymoe::serving::policy::{DispatchKind, PolicyKind};
-use dymoe::serving::{run_cluster, FleetConfig};
+use dymoe::serving::{run_cluster, FleetConfig, Scenario};
 use dymoe::util::json::Json;
 use dymoe::util::table::{fmt_secs, Table};
 use dymoe::workload::TraceGen;
@@ -238,6 +240,19 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
         .get("rate", "0.25")
         .parse()
         .map_err(|_| anyhow!("--rate wants a float (requests / virtual second)"))?;
+    // `--scenario` composes per-class arrival processes itself and is
+    // therefore mutually exclusive with a hand-picked `--arrival`.
+    let scenario_spec = match args.get("scenario", "").as_str() {
+        "" => None,
+        "true" => bail!(
+            "--scenario wants NAME[:ARGS] (steady, diurnal, flash-crowd, mixed, \
+             mixed-diurnal, mixed-flash)"
+        ),
+        spec => Some(spec.to_string()),
+    };
+    if scenario_spec.is_some() && args.flags.contains_key("arrival") {
+        bail!("--scenario and --arrival are mutually exclusive (the scenario picks the processes)");
+    }
     let process = ArrivalProcess::from_cli(&args.get("arrival", "poisson"), rate)?;
     let policy = PolicyKind::parse(&args.get("sched", "slo"))?;
     let dispatch = DispatchKind::parse(&args.get("dispatch", "rr"))?;
@@ -297,7 +312,24 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
         // Gate-probe width for --dispatch predictive; 0 (the default)
         // tracks the model's top_k.  Ignored by every other policy.
         probe_depth: args.get_usize("probe-depth", 0)?,
+        // Batch-class SLO relaxation for --scenario runs; --arrival
+        // traces carry no per-request SLO, so this is inert there.
+        batch_slo_scale: args
+            .get("batch-slo-scale", "8.0")
+            .parse()
+            .map_err(|_| anyhow!("--batch-slo-scale wants a factor >= 1"))?,
     };
+    let scenario = scenario_spec
+        .as_deref()
+        .map(|spec| {
+            Scenario::from_cli(
+                spec,
+                rate,
+                SloTargets { ttft_s: serving.ttft_slo_s, tpot_s: serving.tpot_slo_s },
+                serving.batch_slo_scale,
+            )
+        })
+        .transpose()?;
     // Heterogeneous replicas: each `--replica-hw
     // VRAM[:PCIE[:TFLOPS[:HOSTGBPS]]]` occurrence defines one hardware
     // class; specs cycle over the replica count (two specs x four
@@ -322,9 +354,18 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
     let assets = Arc::new(ModelAssets::load(&artifacts, &model)?);
     let m = assets.manifest.model.clone();
     let sys = SystemConfig::edge_preset(&model, vram)?;
+    let traffic = match &scenario {
+        Some(s) => format!(
+            "scenario {} with {} tenant class(es), batch SLO x{}",
+            s.name,
+            s.classes.len(),
+            serving.batch_slo_scale
+        ),
+        None => format!("{process:?}"),
+    };
     println!(
         "fleet-serving {model} as {strat_name} on {replicas} replica(s) ({} dispatch): \
-         {requests} arrivals ({process:?}), per replica <= {} sessions, decode batch <= {}, \
+         {requests} arrivals ({traffic}), per replica <= {} sessions, decode batch <= {}, \
          {}, {} scheduling, SLO ttft {:.2}s / tpot {:.3}s",
         dispatch.name(),
         serving.max_sessions,
@@ -392,15 +433,22 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
 
     let mut content = TraceGen::new(seed, m.max_seq.min(80), (m.max_cache - m.max_seq).min(16));
     // Independent seeded streams for timing vs content (see serving::arrival).
-    let trace = ArrivalGen::generate(seed ^ 0x5EED_CAFE, process, &mut content, requests)?;
+    // A scenario composes per-class streams off the same timing seed, so
+    // single-class scenarios reproduce the --arrival trace bit for bit.
+    let trace = match &scenario {
+        Some(s) => s.generate(seed ^ 0x5EED_CAFE, &mut content, requests)?,
+        None => ArrivalGen::generate(seed ^ 0x5EED_CAFE, process, &mut content, requests)?,
+    };
     let cfg = FleetConfig { serving, policy, dispatch };
     let cluster = run_cluster(&mut engines, trace, &cfg)?;
     let outcome = &cluster.fleet;
 
     for r in &outcome.per_request {
         println!(
-            "req {:>3}: arrived {:>8} queued {:>8}  TTFT={:>8}  TPOT={:>8}  tokens={:>3}  {}{}",
+            "req {:>3} [{:>11}]: arrived {:>8} queued {:>8}  TTFT={:>8}  TPOT={:>8}  \
+             tokens={:>3}  {}{}{}",
             r.id,
+            r.class.name(),
             fmt_secs(r.arrival),
             fmt_secs(r.queue_delay),
             fmt_secs(r.ttft),
@@ -409,6 +457,11 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
             if r.ttft_ok && r.tpot_ok { "ok" } else { "SLO-miss" },
             if r.retries > 0 {
                 format!("  (re-dispatched x{})", r.retries)
+            } else {
+                String::new()
+            },
+            if r.preemptions > 0 {
+                format!("  (preempted x{})", r.preemptions)
             } else {
                 String::new()
             },
@@ -435,6 +488,13 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
             cluster.churn.requeued,
             cluster.churn.lost_work_tokens,
             cluster.churn.max_retries,
+        );
+    }
+    let preempted = outcome.metrics.preemptions();
+    if preempted > 0 {
+        println!(
+            "preemption: {preempted} batch decode slot(s) preempted by urgent admissions \
+             (sessions re-queued with work conserved)"
         );
     }
     println!(
@@ -531,7 +591,13 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
             "" | "true" => "FLEET_serving.json".to_string(),
             p => p.to_string(),
         };
-        let j = fleet_json(&cluster, &hw_labels, policy, dispatch);
+        let j = fleet_json(
+            &cluster,
+            &hw_labels,
+            policy,
+            dispatch,
+            scenario.as_ref().map(|s| s.name.as_str()),
+        );
         std::fs::write(&path, j.to_string())?;
         println!("wrote {path}");
     }
@@ -573,12 +639,14 @@ fn cmd_trace_lint(args: &Args) -> Result<()> {
 }
 
 /// Machine-readable `serve-fleet --json` summary: cluster-level SLO
-/// metrics plus per-replica breakdowns with per-channel utilization.
+/// metrics plus per-tenant-class and per-request breakdowns and
+/// per-replica views with per-channel utilization.
 fn fleet_json(
     cluster: &dymoe::serving::ClusterOutcome,
     hw_labels: &[String],
     policy: PolicyKind,
     dispatch: DispatchKind,
+    scenario: Option<&str>,
 ) -> Json {
     let num = Json::Num;
     let metrics_obj = |o: &dymoe::serving::FleetOutcome| {
@@ -604,6 +672,9 @@ fn fleet_json(
     let mut root = BTreeMap::new();
     root.insert("sched".to_string(), Json::Str(policy.name().to_string()));
     root.insert("dispatch".to_string(), Json::Str(dispatch.name().to_string()));
+    if let Some(name) = scenario {
+        root.insert("scenario".to_string(), Json::Str(name.to_string()));
+    }
     root.insert("replicas".to_string(), num(cluster.replicas.len() as f64));
     root.insert("load_imbalance".to_string(), num(cluster.load_imbalance));
     let mut churn = BTreeMap::new();
@@ -636,6 +707,45 @@ fn fleet_json(
     pool.insert("prestage_accuracy".to_string(), num(cluster.pool.prestage_accuracy()));
     root.insert("host_pool".to_string(), Json::Obj(pool));
     root.insert("cluster".to_string(), metrics_obj(&cluster.fleet));
+    // Per-tenant-class SLO breakdown (interactive vs batch); one entry
+    // per class that completed at least one request.
+    let mut per_class = BTreeMap::new();
+    for (class, cs) in &cluster.fleet.metrics.per_class {
+        let mut c = BTreeMap::new();
+        c.insert("completed".to_string(), num(cs.completed as f64));
+        c.insert("ttft_p50_s".to_string(), num(cs.ttft.percentile(50.0)));
+        c.insert("ttft_p99_s".to_string(), num(cs.ttft.percentile(99.0)));
+        c.insert("tpot_p50_s".to_string(), num(cs.tpot.percentile(50.0)));
+        c.insert("tpot_p99_s".to_string(), num(cs.tpot.percentile(99.0)));
+        c.insert("queue_delay_mean_s".to_string(), num(cs.queue_delay.mean()));
+        c.insert("slo_attainment".to_string(), num(cs.slo_attainment()));
+        c.insert("tokens_total".to_string(), num(cs.tokens_total as f64));
+        c.insert("preemptions".to_string(), num(cs.preemptions as f64));
+        per_class.insert(class.name().to_string(), Json::Obj(c));
+    }
+    root.insert("per_class".to_string(), Json::Obj(per_class));
+    // Per-request records (completion order) with the tenant class, so
+    // downstream tooling can slice SLO behaviour without re-running.
+    let per_request: Vec<Json> = cluster
+        .fleet
+        .per_request
+        .iter()
+        .map(|r| {
+            let mut p = BTreeMap::new();
+            p.insert("id".to_string(), num(r.id as f64));
+            p.insert("class".to_string(), Json::Str(r.class.name().to_string()));
+            p.insert("arrival_s".to_string(), num(r.arrival));
+            p.insert("queue_delay_s".to_string(), num(r.queue_delay));
+            p.insert("ttft_s".to_string(), num(r.ttft));
+            p.insert("tpot_s".to_string(), num(r.tpot));
+            p.insert("tokens".to_string(), num(r.tokens as f64));
+            p.insert("slo_ok".to_string(), Json::Bool(r.ttft_ok && r.tpot_ok));
+            p.insert("retries".to_string(), num(r.retries as f64));
+            p.insert("preemptions".to_string(), num(r.preemptions as f64));
+            Json::Obj(p)
+        })
+        .collect();
+    root.insert("per_request".to_string(), Json::Arr(per_request));
     let per_replica: Vec<Json> = cluster
         .replicas
         .iter()
@@ -727,7 +837,25 @@ fn usage() -> String {
      \x20 info        --model <name> [--artifacts DIR]\n\
      \x20 serve       --model <name> [--vram GB] [--requests N] [--strategy S] [--retention R]\n\
      \x20 serve-fleet --model <name> [--vram GB] [--requests N] [--rate R/S]\n\
-     \x20             [--arrival poisson|bursty|ramp] [--sessions N] [--sched fifo|rr|slo]\n\
+     \x20             [--arrival poisson[:RATE] | bursty[:BASE:BURST:PERIOD:FRAC]\n\
+     \x20              | ramp[:START:END:SECS] (bare names keep the classic one-rate\n\
+     \x20              shorthands derived from --rate: bursty = 0.25x base / 4x burst\n\
+     \x20              over a 30 s period with a 0.2 burst fraction, ramp = 0.2x -> 2x\n\
+     \x20              over 60 s; parameterized specs ignore --rate)]\n\
+     \x20             [--scenario steady | diurnal[:PERIOD[:AMP]]\n\
+     \x20              | flash-crowd[:AT[:MAG[:DUR]]] | mixed[:SHARE]\n\
+     \x20              | mixed-diurnal[:SHARE[:PERIOD[:AMP]]]\n\
+     \x20              | mixed-flash[:SHARE[:AT[:MAG[:DUR]]]]\n\
+     \x20              (multi-tenant load scenario; SHARE = interactive fraction of\n\
+     \x20              requests and of --rate, batch requests carry the fleet SLO\n\
+     \x20              relaxed by --batch-slo-scale and may be preempted by\n\
+     \x20              interactive admissions under class-aware scheduling;\n\
+     \x20              mutually exclusive with --arrival)]\n\
+     \x20             [--batch-slo-scale F (batch-class SLO relaxation on --scenario\n\
+     \x20              runs; >= 1, default 8)]\n\
+     \x20             [--sessions N] [--sched fifo|rr|slo (fifo stays class-blind —\n\
+     \x20              the no-priority baseline; rr/slo admit interactive first and\n\
+     \x20              preempt batch decode slots when an interactive request waits)]\n\
      \x20             [--max-decode-batch N (1 = serial decode; default: --sessions)]\n\
      \x20             [--chunk-tokens N (0 = monolithic prefill, the default; N > 0\n\
      \x20              fuses N prompt tokens per tick with the decode batch)]\n\

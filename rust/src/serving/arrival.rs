@@ -14,15 +14,67 @@
 //!   to `end_rate` over `ramp_secs`, then holds (load-sweep / flash
 //!   crowd onset).
 //!
+//! A process may additionally be modulated by an [`Envelope`] — a
+//! deterministic multiplicative rate curve layered on top (a diurnal
+//! day-scale sinusoid, or a flash-crowd window that multiplies the rate
+//! for a bounded interval).  The scenario library
+//! ([`crate::serving::scenario`]) composes per-tenant-class processes
+//! with envelopes into full mixed-tenant traces.
+//!
 //! Non-homogeneous processes are sampled exactly by Lewis–Shedler
 //! thinning: candidate gaps are drawn from a homogeneous process at the
-//! peak rate and accepted with probability `rate(t) / peak`, which keeps
-//! the draw deterministic under a fixed seed with no numeric integration.
+//! peak (envelope-inflated) rate and accepted with probability
+//! `rate(t) / peak`, which keeps the draw deterministic under a fixed
+//! seed with no numeric integration.
 
 use anyhow::{bail, ensure, Result};
 
+use super::metrics::SloTargets;
 use crate::util::rng::Rng;
 use crate::workload::{Request, TraceGen};
+
+/// Tenant class of a request: which latency contract it is served
+/// under and how the class-aware scheduler ranks it.  Adding a class
+/// means adding a variant here (plus its [`TenantClass::parse`] name) —
+/// every other layer keys off [`TenantClass::priority`] and
+/// [`TenantClass::name`], so this enum is the single extension point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum TenantClass {
+    /// Human-in-the-loop chat: tight TTFT/TPOT targets, may preempt
+    /// batch work under class-aware scheduling.
+    Interactive,
+    /// Bulk offline jobs: relaxed targets, preemptible, must still
+    /// complete (no starvation).
+    Batch,
+}
+
+impl TenantClass {
+    pub const ALL: [TenantClass; 2] = [TenantClass::Interactive, TenantClass::Batch];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TenantClass::Interactive => "interactive",
+            TenantClass::Batch => "batch",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<TenantClass> {
+        Ok(match s {
+            "interactive" | "chat" => TenantClass::Interactive,
+            "batch" | "bulk" => TenantClass::Batch,
+            _ => bail!("unknown tenant class {s:?}; try interactive, batch"),
+        })
+    }
+
+    /// Scheduling priority: lower is more urgent.  Class-aware policies
+    /// admit (and preempt) by this key before any other ordering.
+    pub fn priority(self) -> u8 {
+        match self {
+            TenantClass::Interactive => 0,
+            TenantClass::Batch => 1,
+        }
+    }
+}
 
 /// One request with its open-loop arrival time (virtual seconds).
 #[derive(Debug, Clone)]
@@ -30,7 +82,21 @@ pub struct TimedRequest {
     /// Fleet-wide request id (index in the trace).
     pub id: usize,
     pub arrival: f64,
+    /// Tenant class the request is served under.  Legacy single-class
+    /// paths stamp [`TenantClass::Interactive`].
+    pub class: TenantClass,
+    /// Per-request SLO override; `None` (every legacy path) uses the
+    /// fleet-level targets, keeping those paths digest-neutral.
+    pub slo: Option<SloTargets>,
     pub request: Request,
+}
+
+impl TimedRequest {
+    /// A single-class request on the fleet-default SLO — the legacy
+    /// shape every pre-scenario call site produced.
+    pub fn new(id: usize, arrival: f64, request: Request) -> TimedRequest {
+        TimedRequest { id, arrival, class: TenantClass::Interactive, slo: None, request }
+    }
 }
 
 /// The arrival process shape (rates in requests / virtual second).
@@ -73,7 +139,7 @@ impl ArrivalProcess {
         }
     }
 
-    fn validate(&self) -> Result<()> {
+    pub fn validate(&self) -> Result<()> {
         ensure!(self.peak_rate() > 0.0, "arrival process needs a positive rate");
         match *self {
             ArrivalProcess::Poisson { rate } => {
@@ -102,25 +168,57 @@ impl ArrivalProcess {
         Ok(())
     }
 
-    /// CLI shorthand: a process named `poisson` / `bursty` / `ramp`
-    /// parameterized by one mean rate (bursty splits it 4:1 around the
-    /// mean over a 30 s period; ramp climbs from 0.2x to 2x over 60 s —
-    /// both keep the long-run average near `rate`).
-    pub fn from_cli(kind: &str, rate: f64) -> Result<ArrivalProcess> {
-        ensure!(rate > 0.0, "--rate must be > 0");
-        let p = match kind {
-            "poisson" => ArrivalProcess::Poisson { rate },
-            "bursty" => ArrivalProcess::Bursty {
+    /// CLI arrival spec.  Two grammars per process:
+    ///
+    /// * one-rate shorthands — `poisson`, `bursty`, `ramp` derive their
+    ///   parameters from the mean `--rate` (bursty splits it 4:1 around
+    ///   the mean over a 30 s period; ramp climbs from 0.2x to 2x over
+    ///   60 s — both keep the long-run average near `rate`);
+    /// * fully parameterized specs — `bursty:BASE:BURST:PERIOD:FRAC`
+    ///   (rates in req/s, period in seconds, burst fraction in [0, 1])
+    ///   and `ramp:START:END:SECS`, which ignore `--rate`.
+    pub fn from_cli(spec: &str, rate: f64) -> Result<ArrivalProcess> {
+        let mut parts = spec.split(':');
+        let kind = parts.next().unwrap_or("");
+        let params: Vec<f64> = parts
+            .map(|p| {
+                p.parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("--arrival {spec:?}: {p:?} is not a number"))
+            })
+            .collect::<Result<_>>()?;
+        if params.is_empty() {
+            ensure!(rate > 0.0, "--rate must be > 0");
+        }
+        let p = match (kind, params.as_slice()) {
+            ("poisson", []) => ArrivalProcess::Poisson { rate },
+            ("poisson", [r]) => ArrivalProcess::Poisson { rate: *r },
+            ("bursty", []) => ArrivalProcess::Bursty {
                 base_rate: rate * 0.25,
                 burst_rate: rate * 4.0,
                 period: 30.0,
                 burst_frac: 0.2,
             },
-            "ramp" => ArrivalProcess::Ramp {
+            ("bursty", [base, burst, period, frac]) => ArrivalProcess::Bursty {
+                base_rate: *base,
+                burst_rate: *burst,
+                period: *period,
+                burst_frac: *frac,
+            },
+            ("ramp", []) => ArrivalProcess::Ramp {
                 start_rate: rate * 0.2,
                 end_rate: rate * 2.0,
                 ramp_secs: 60.0,
             },
+            ("ramp", [start, end, secs]) => ArrivalProcess::Ramp {
+                start_rate: *start,
+                end_rate: *end,
+                ramp_secs: *secs,
+            },
+            ("poisson", _) => bail!("--arrival {spec:?}: expected poisson or poisson:RATE"),
+            ("bursty", _) => {
+                bail!("--arrival {spec:?}: expected bursty or bursty:BASE:BURST:PERIOD:FRAC")
+            }
+            ("ramp", _) => bail!("--arrival {spec:?}: expected ramp or ramp:START:END:SECS"),
             _ => bail!("unknown arrival process {kind:?}; try poisson, bursty, ramp"),
         };
         p.validate()?;
@@ -128,35 +226,129 @@ impl ArrivalProcess {
     }
 }
 
+/// Deterministic multiplicative rate modulation layered on an
+/// [`ArrivalProcess`]: the effective rate at `t` is
+/// `process.rate_at(t) * envelope.factor_at(t)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Envelope {
+    /// No modulation (factor 1 everywhere) — bit-identical sampling to
+    /// the unmodulated process.
+    Flat,
+    /// Day-scale sinusoid: factor `1 + amplitude * sin(2π t / period_s)`
+    /// (starts at mean load, rising).  `amplitude` in [0, 1] keeps the
+    /// factor non-negative; the long-run mean factor over whole periods
+    /// is 1, so the process mean rate is preserved.
+    Diurnal { period_s: f64, amplitude: f64 },
+    /// Flash crowd: factor `1 + magnitude` inside
+    /// `[at_s, at_s + duration_s)`, 1 elsewhere.
+    Flash { at_s: f64, magnitude: f64, duration_s: f64 },
+}
+
+impl Envelope {
+    /// Multiplicative rate factor at virtual time `t`.
+    pub fn factor_at(&self, t: f64) -> f64 {
+        match *self {
+            Envelope::Flat => 1.0,
+            Envelope::Diurnal { period_s, amplitude } => {
+                1.0 + amplitude * (2.0 * std::f64::consts::PI * t / period_s).sin()
+            }
+            Envelope::Flash { at_s, magnitude, duration_s } => {
+                if t >= at_s && t < at_s + duration_s {
+                    1.0 + magnitude
+                } else {
+                    1.0
+                }
+            }
+        }
+    }
+
+    /// Upper bound of [`Envelope::factor_at`] (thinning envelope).
+    pub fn peak_factor(&self) -> f64 {
+        match *self {
+            Envelope::Flat => 1.0,
+            Envelope::Diurnal { amplitude, .. } => 1.0 + amplitude,
+            Envelope::Flash { magnitude, .. } => 1.0 + magnitude,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            Envelope::Flat => {}
+            Envelope::Diurnal { period_s, amplitude } => {
+                ensure!(
+                    period_s.is_finite() && period_s > 0.0,
+                    "diurnal period must be > 0"
+                );
+                // amplitude > 1 would make the factor negative for part
+                // of the cycle; == 1 touches zero only instantaneously,
+                // which thinning handles (candidates keep arriving at
+                // the peak rate).
+                ensure!(
+                    (0.0..=1.0).contains(&amplitude),
+                    "diurnal amplitude must be in [0, 1]"
+                );
+            }
+            Envelope::Flash { at_s, magnitude, duration_s } => {
+                ensure!(at_s.is_finite() && at_s >= 0.0, "flash at must be >= 0");
+                ensure!(
+                    magnitude.is_finite() && magnitude >= 0.0,
+                    "flash magnitude must be >= 0"
+                );
+                ensure!(
+                    duration_s.is_finite() && duration_s > 0.0,
+                    "flash duration must be > 0"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Seeded arrival-time generator (thinning sampler).
 pub struct ArrivalGen {
     rng: Rng,
     process: ArrivalProcess,
+    envelope: Envelope,
     t: f64,
 }
 
 impl ArrivalGen {
     pub fn new(seed: u64, process: ArrivalProcess) -> Result<ArrivalGen> {
+        ArrivalGen::with_envelope(seed, process, Envelope::Flat)
+    }
+
+    /// A generator whose process rate is modulated by `envelope`.
+    /// [`Envelope::Flat`] multiplies every rate by exactly 1.0, so it is
+    /// bit-identical to the unmodulated sampler draw for draw.
+    pub fn with_envelope(
+        seed: u64,
+        process: ArrivalProcess,
+        envelope: Envelope,
+    ) -> Result<ArrivalGen> {
         process.validate()?;
-        Ok(ArrivalGen { rng: Rng::new(seed), process, t: 0.0 })
+        envelope.validate()?;
+        Ok(ArrivalGen { rng: Rng::new(seed), process, envelope, t: 0.0 })
     }
 
     /// Next arrival time (strictly increasing).
     pub fn next_arrival(&mut self) -> f64 {
-        let peak = self.process.peak_rate();
+        let peak = self.process.peak_rate() * self.envelope.peak_factor();
         loop {
             self.t += self.rng.exponential(peak);
-            let accept = self.process.rate_at(self.t) / peak;
-            if self.rng.f64() < accept {
+            let rate = self.process.rate_at(self.t) * self.envelope.factor_at(self.t);
+            if self.rng.f64() < rate / peak {
                 return self.t;
             }
         }
     }
 
     /// A full deterministic trace: `n` arrivals paired with `TraceGen`
-    /// content.  Arrival times and request content come from independent
-    /// seeded streams, so changing the process never perturbs the
-    /// prompts (and vice versa).
+    /// content, every request stamped [`TenantClass::Interactive`] on
+    /// the fleet-default SLO (the legacy single-class shape; the
+    /// scenario library builds mixed-class traces on the same streams).
+    /// Arrival times and request content come from independent seeded
+    /// streams, so changing the process never perturbs the prompts (and
+    /// vice versa).
     pub fn generate(
         seed: u64,
         process: ArrivalProcess,
@@ -165,11 +357,7 @@ impl ArrivalGen {
     ) -> Result<Vec<TimedRequest>> {
         let mut gen = ArrivalGen::new(seed, process)?;
         Ok((0..n)
-            .map(|id| TimedRequest {
-                id,
-                arrival: gen.next_arrival(),
-                request: content.next_request(),
-            })
+            .map(|id| TimedRequest::new(id, gen.next_arrival(), content.next_request()))
             .collect())
     }
 }
@@ -257,6 +445,21 @@ mod tests {
     }
 
     #[test]
+    fn legacy_trace_is_single_class_fleet_slo() {
+        let mut tg = TraceGen::new(11, 80, 16);
+        let t = ArrivalGen::generate(1, ArrivalProcess::Poisson { rate: 1.0 }, &mut tg, 8)
+            .unwrap();
+        for r in &t {
+            assert_eq!(r.class, TenantClass::Interactive);
+            assert!(r.slo.is_none(), "legacy trace must use the fleet SLO");
+        }
+        assert_eq!(TenantClass::parse("batch").unwrap(), TenantClass::Batch);
+        assert_eq!(TenantClass::parse("chat").unwrap(), TenantClass::Interactive);
+        assert!(TenantClass::parse("gold").is_err());
+        assert!(TenantClass::Interactive.priority() < TenantClass::Batch.priority());
+    }
+
+    #[test]
     fn degenerate_zero_rate_processes_are_rejected() {
         // would hang the thinning sampler: rate 0 over the whole cycle
         let off_only = ArrivalProcess::Bursty {
@@ -276,5 +479,100 @@ mod tests {
         // rate 0 forever after the ramp completes
         let dies_out = ArrivalProcess::Ramp { start_rate: 1.0, end_rate: 0.0, ramp_secs: 5.0 };
         assert!(ArrivalGen::new(1, dies_out).is_err());
+    }
+
+    #[test]
+    fn from_cli_parameterized_specs() {
+        let p = ArrivalProcess::from_cli("bursty:0.5:4:20:0.25", 9.9).unwrap();
+        assert_eq!(
+            p,
+            ArrivalProcess::Bursty {
+                base_rate: 0.5,
+                burst_rate: 4.0,
+                period: 20.0,
+                burst_frac: 0.25
+            }
+        );
+        let p = ArrivalProcess::from_cli("ramp:0.1:2:45", 9.9).unwrap();
+        assert_eq!(
+            p,
+            ArrivalProcess::Ramp { start_rate: 0.1, end_rate: 2.0, ramp_secs: 45.0 }
+        );
+        let p = ArrivalProcess::from_cli("poisson:3", 9.9).unwrap();
+        assert_eq!(p, ArrivalProcess::Poisson { rate: 3.0 });
+        // shorthands keep deriving from --rate
+        assert_eq!(
+            ArrivalProcess::from_cli("poisson", 2.0).unwrap(),
+            ArrivalProcess::Poisson { rate: 2.0 }
+        );
+        for bad in [
+            "bursty:1:2:30",      // wrong arity
+            "bursty:1:2:30:0.2:9",
+            "ramp:1:2",
+            "ramp:1:2:x",
+            "poisson:0",          // validated
+            "bursty:0:0:30:0.2",  // zero mean rate
+            "ramp:1:0:30",
+            "nope:1",
+        ] {
+            assert!(ArrivalProcess::from_cli(bad, 1.0).is_err(), "{bad:?} accepted");
+        }
+    }
+
+    #[test]
+    fn flat_envelope_is_bit_identical() {
+        let p = ArrivalProcess::Bursty {
+            base_rate: 0.5,
+            burst_rate: 4.0,
+            period: 10.0,
+            burst_frac: 0.3,
+        };
+        let mut plain = ArrivalGen::new(42, p).unwrap();
+        let mut flat = ArrivalGen::with_envelope(42, p, Envelope::Flat).unwrap();
+        for _ in 0..500 {
+            assert_eq!(plain.next_arrival().to_bits(), flat.next_arrival().to_bits());
+        }
+    }
+
+    #[test]
+    fn envelopes_modulate_and_validate() {
+        let diurnal = Envelope::Diurnal { period_s: 100.0, amplitude: 0.8 };
+        assert!((diurnal.factor_at(0.0) - 1.0).abs() < 1e-12);
+        assert!((diurnal.factor_at(25.0) - 1.8).abs() < 1e-12);
+        assert!((diurnal.factor_at(75.0) - 0.2).abs() < 1e-12);
+        assert_eq!(diurnal.peak_factor(), 1.8);
+        let flash = Envelope::Flash { at_s: 10.0, magnitude: 3.0, duration_s: 5.0 };
+        assert_eq!(flash.factor_at(9.9), 1.0);
+        assert_eq!(flash.factor_at(10.0), 4.0);
+        assert_eq!(flash.factor_at(14.9), 4.0);
+        assert_eq!(flash.factor_at(15.0), 1.0);
+        for bad in [
+            Envelope::Diurnal { period_s: 0.0, amplitude: 0.5 },
+            Envelope::Diurnal { period_s: 10.0, amplitude: 1.5 },
+            Envelope::Diurnal { period_s: 10.0, amplitude: -0.1 },
+            Envelope::Flash { at_s: -1.0, magnitude: 1.0, duration_s: 5.0 },
+            Envelope::Flash { at_s: 0.0, magnitude: -1.0, duration_s: 5.0 },
+            Envelope::Flash { at_s: 0.0, magnitude: 1.0, duration_s: 0.0 },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?} accepted");
+        }
+        // a flash envelope concentrates arrivals inside its window
+        let p = ArrivalProcess::Poisson { rate: 0.5 };
+        let mut g = ArrivalGen::with_envelope(
+            3,
+            p,
+            Envelope::Flash { at_s: 20.0, magnitude: 9.0, duration_s: 20.0 },
+        )
+        .unwrap();
+        let a: Vec<f64> = (0..400).map(|_| g.next_arrival()).collect();
+        for w in a.windows(2) {
+            assert!(w[1] > w[0], "non-monotone arrivals under envelope");
+        }
+        let in_window = a.iter().filter(|&&t| (20.0..40.0).contains(&t)).count();
+        let before = a.iter().filter(|&&t| t < 20.0).count();
+        assert!(
+            in_window > before * 3,
+            "flash window not crowded: {in_window} in vs {before} before"
+        );
     }
 }

@@ -188,6 +188,7 @@ impl ClusterOutcome {
             }
             mix(&mut h, &(r.tokens as u64).to_le_bytes());
             mix(&mut h, &(r.retries as u64).to_le_bytes());
+            mix(&mut h, &(r.preemptions as u64).to_le_bytes());
             mix(&mut h, &[u8::from(r.ttft_ok), u8::from(r.tpot_ok)]);
         }
         for c in [

@@ -156,11 +156,7 @@ mod tests {
     use crate::workload::Request;
 
     fn arr(id: usize, at: f64) -> Event {
-        Event::arrival(TimedRequest {
-            id,
-            arrival: at,
-            request: Request { prompt: vec![1], max_new: 1 },
-        })
+        Event::arrival(TimedRequest::new(id, at, Request { prompt: vec![1], max_new: 1 }))
     }
 
     fn churn(pos: u64, at: f64) -> Event {

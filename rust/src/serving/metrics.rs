@@ -6,6 +6,9 @@
 //! operations the cluster layer uses to fold per-replica runs into one
 //! cluster-level view.
 
+use std::collections::BTreeMap;
+
+use super::arrival::TenantClass;
 use crate::coordinator::engine::{EngineStats, RequestOutput};
 use crate::memory::BusyTotals;
 use crate::metrics::Series;
@@ -25,6 +28,9 @@ pub struct SloTargets {
 pub struct CompletedRequest {
     pub id: usize,
     pub arrival: f64,
+    /// Tenant class the request was served under (legacy single-class
+    /// paths report [`TenantClass::Interactive`]).
+    pub class: TenantClass,
     /// Prefill start - arrival.
     pub queue_delay: f64,
     /// First token - arrival (queue delay + service TTFT).
@@ -49,6 +55,12 @@ pub struct CompletedRequest {
     /// `queue_delay` — this field just attributes it.  Filled in by the
     /// cluster layer; the single-replica path always reports 0.
     pub retries: usize,
+    /// Times this in-flight session was preempted by a higher-priority
+    /// class and parked (work conserved: its KV cache and emitted
+    /// tokens survive, unlike a churn re-dispatch).  The wait shows up
+    /// inside `tpot` / `max_stall`; this field attributes it.  Always 0
+    /// on single-class paths.
+    pub preemptions: usize,
 }
 
 /// Cross-session decode-batch dedup telemetry for one fleet run: how
@@ -282,6 +294,53 @@ pub fn load_imbalance_weighted(loads: &[f64], live_secs: &[f64]) -> f64 {
     load_imbalance(&rates)
 }
 
+/// Per-tenant-class latency/SLO aggregates within one fleet run: the
+/// distributions behind per-class SLO attainment (a fleet can hit 99%
+/// overall while its interactive class burns, which is exactly what
+/// class-blind scheduling produces under mixed tenancy).
+#[derive(Debug, Clone, Default)]
+pub struct ClassStats {
+    pub ttft: Series,
+    pub tpot: Series,
+    pub queue_delay: Series,
+    pub completed: usize,
+    pub ttft_ok: usize,
+    pub tpot_ok: usize,
+    pub slo_ok: usize,
+    pub tokens_total: usize,
+    /// Preemption events suffered by this class's completed requests.
+    pub preemptions: usize,
+}
+
+impl ClassStats {
+    /// Fraction of this class's completed requests that met both SLOs.
+    pub fn slo_attainment(&self) -> f64 {
+        if self.completed == 0 {
+            return 0.0;
+        }
+        self.slo_ok as f64 / self.completed as f64
+    }
+
+    /// Fold another run's per-class aggregates in (cluster merge).
+    pub fn merge(&mut self, other: &ClassStats) {
+        for (dst, src) in [
+            (&mut self.ttft, &other.ttft),
+            (&mut self.tpot, &other.tpot),
+            (&mut self.queue_delay, &other.queue_delay),
+        ] {
+            for &v in src.samples() {
+                dst.push(v);
+            }
+        }
+        self.completed += other.completed;
+        self.ttft_ok += other.ttft_ok;
+        self.tpot_ok += other.tpot_ok;
+        self.slo_ok += other.slo_ok;
+        self.tokens_total += other.tokens_total;
+        self.preemptions += other.preemptions;
+    }
+}
+
 /// Aggregates over one fleet run.
 #[derive(Debug, Clone, Default)]
 pub struct FleetMetrics {
@@ -306,16 +365,36 @@ pub struct FleetMetrics {
     pub tokens_total: usize,
     pub first_arrival: f64,
     pub last_completion: f64,
+    /// Per-tenant-class breakdown of the same run (keyed by class; the
+    /// legacy single-class paths put everything under
+    /// [`TenantClass::Interactive`]).
+    pub per_class: BTreeMap<TenantClass, ClassStats>,
 }
 
 impl FleetMetrics {
     /// Fold one finished session in; returns its fleet-view record.
+    /// Single-class convenience over [`FleetMetrics::record_class`]
+    /// (interactive, never preempted) — the legacy call shape.
     pub fn record(
         &mut self,
         id: usize,
         arrival: f64,
         out: &RequestOutput,
         slo: SloTargets,
+    ) -> CompletedRequest {
+        self.record_class(id, arrival, TenantClass::Interactive, out, slo, 0)
+    }
+
+    /// Fold one finished session in under its tenant class; returns its
+    /// fleet-view record.
+    pub fn record_class(
+        &mut self,
+        id: usize,
+        arrival: f64,
+        class: TenantClass,
+        out: &RequestOutput,
+        slo: SloTargets,
+        preemptions: usize,
     ) -> CompletedRequest {
         let queue_delay = out.start - arrival;
         let ttft = queue_delay + out.ttft;
@@ -345,9 +424,21 @@ impl FleetMetrics {
         self.slo_ok += (ttft_ok && tpot_ok) as usize;
         self.tokens_total += out.tokens.len();
 
+        let c = self.per_class.entry(class).or_default();
+        c.ttft.push(ttft);
+        c.tpot.push(tpot);
+        c.queue_delay.push(queue_delay);
+        c.completed += 1;
+        c.ttft_ok += ttft_ok as usize;
+        c.tpot_ok += tpot_ok as usize;
+        c.slo_ok += (ttft_ok && tpot_ok) as usize;
+        c.tokens_total += out.tokens.len();
+        c.preemptions += preemptions;
+
         CompletedRequest {
             id,
             arrival,
+            class,
             queue_delay,
             ttft,
             tpot,
@@ -357,7 +448,13 @@ impl FleetMetrics {
             tpot_ok,
             max_stall,
             retries: 0,
+            preemptions,
         }
+    }
+
+    /// Total preemption events across every class this run.
+    pub fn preemptions(&self) -> usize {
+        self.per_class.values().map(|c| c.preemptions).sum()
     }
 
     /// Fold another run's aggregates in (cluster merge across replicas).
@@ -389,6 +486,9 @@ impl FleetMetrics {
         self.tpot_ok += other.tpot_ok;
         self.slo_ok += other.slo_ok;
         self.tokens_total += other.tokens_total;
+        for (class, stats) in &other.per_class {
+            self.per_class.entry(*class).or_default().merge(stats);
+        }
     }
 
     /// Wall span of the run (first arrival to last completion).
@@ -454,10 +554,36 @@ impl FleetMetrics {
         "SLO att",
     ];
 
-    /// Render a one-run summary table.
+    /// One table row for a tenant class's share of this run (goodput
+    /// and tok/s over the whole run's makespan, so class rows sum to
+    /// roughly the fleet row).
+    pub fn class_row(&self, class: TenantClass, c: &ClassStats) -> Vec<String> {
+        let span = self.makespan();
+        let per_span = |n: usize| if span <= 0.0 { 0.0 } else { n as f64 / span };
+        vec![
+            format!("  {}", class.name()),
+            fmt_secs(c.ttft.percentile(50.0)),
+            fmt_secs(c.ttft.percentile(95.0)),
+            fmt_secs(c.ttft.percentile(99.0)),
+            fmt_secs(c.tpot.percentile(50.0)),
+            fmt_secs(c.tpot.percentile(99.0)),
+            fmt_secs(c.queue_delay.mean()),
+            format!("{:.3}", per_span(c.slo_ok)),
+            format!("{:.1}", per_span(c.tokens_total)),
+            format!("{:.0}%", c.slo_attainment() * 100.0),
+        ]
+    }
+
+    /// Render a one-run summary table (with per-class breakdown rows
+    /// whenever the run actually mixed tenant classes).
     pub fn render(&self, label: &str) -> String {
         let mut t = Table::new("fleet latency summary", &Self::TABLE_HEADER);
         t.row(self.summary_row(label));
+        if self.per_class.len() > 1 {
+            for (class, c) in &self.per_class {
+                t.row(self.class_row(*class, c));
+            }
+        }
         t.render()
     }
 }
@@ -579,6 +705,55 @@ mod tests {
         merged.merge(&FleetMetrics::default());
         assert_eq!(merged.completed, before);
         assert_eq!(merged.first_arrival, both.first_arrival);
+    }
+
+    #[test]
+    fn per_class_breakdown_records_and_merges() {
+        let slo = SloTargets { ttft_s: 2.0, tpot_s: 0.5 };
+        let lax = SloTargets { ttft_s: 100.0, tpot_s: 100.0 };
+        let mut m = FleetMetrics::default();
+        // legacy record() lands under Interactive with 0 preemptions
+        let r = m.record(0, 1.0, &out(1.5, 0.8, vec![0.8, 1.2, 1.6]), slo);
+        assert_eq!(r.class, TenantClass::Interactive);
+        assert_eq!(r.preemptions, 0);
+        // a batch request on its own (laxer) SLO, preempted twice
+        let rb = m.record_class(
+            1,
+            1.2,
+            TenantClass::Batch,
+            &out(4.0, 0.9, vec![0.9]),
+            lax,
+            2,
+        );
+        assert_eq!(rb.class, TenantClass::Batch);
+        assert!(rb.ttft_ok && rb.tpot_ok, "batch judged on its own SLO");
+        assert_eq!(rb.preemptions, 2);
+        assert_eq!(m.per_class.len(), 2);
+        let i = &m.per_class[&TenantClass::Interactive];
+        let b = &m.per_class[&TenantClass::Batch];
+        assert_eq!(i.completed, 1);
+        assert_eq!(b.completed, 1);
+        assert_eq!(b.preemptions, 2);
+        assert_eq!(m.preemptions(), 2);
+        assert_eq!(i.tokens_total + b.tokens_total, m.tokens_total);
+        assert_eq!(i.slo_ok + b.slo_ok, m.slo_ok);
+        assert!((b.slo_attainment() - 1.0).abs() < 1e-12);
+        // class breakdown survives the cluster merge
+        let mut merged = FleetMetrics::default();
+        merged.merge(&m);
+        merged.merge(&m);
+        assert_eq!(merged.per_class[&TenantClass::Batch].completed, 2);
+        assert_eq!(merged.per_class[&TenantClass::Batch].preemptions, 4);
+        assert_eq!(
+            merged.per_class[&TenantClass::Interactive].ttft.percentile(50.0),
+            i.ttft.percentile(50.0)
+        );
+        // and the render gains per-class rows only for mixed runs
+        assert!(m.render("slo").contains("interactive"));
+        assert!(m.render("slo").contains("batch"));
+        let mut single = FleetMetrics::default();
+        single.record(0, 1.0, &out(1.5, 0.8, vec![0.8]), slo);
+        assert!(!single.render("slo").contains("interactive"));
     }
 
     #[test]

@@ -109,6 +109,7 @@ pub mod events;
 pub mod metrics;
 pub mod policy;
 pub mod replica;
+pub mod scenario;
 
 use anyhow::Result;
 
@@ -125,6 +126,7 @@ pub use self::cluster::{
     run_cluster, run_cluster_minclock, ClusterOutcome, ReplicaBreakdown,
 };
 pub use self::replica::{Evacuation, Replica, ReplicaRun, ReplicaState};
+pub use self::scenario::{ClassLoad, Scenario};
 
 /// Configuration of one fleet (or cluster) run.
 #[derive(Debug, Clone)]

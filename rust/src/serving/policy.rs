@@ -23,19 +23,29 @@
 //! * [`PolicyKind::Fifo`] — strict arrival order, run-to-completion: the
 //!   oldest unfinished session monopolizes the device.  This is the
 //!   head-of-line-blocking baseline and degenerates to the classic
-//!   back-to-back `serve` path.
+//!   back-to-back `serve` path.  Fifo is also the **class-blind**
+//!   baseline: it ignores [`TenantClass`] everywhere and never preempts.
 //! * [`PolicyKind::RoundRobin`] — continuous batching with decode
-//!   fairness: free slots admit the oldest queued request first (prefill
-//!   prioritized, which bounds TTFT), decode steps rotate round-robin so
-//!   no session's TPOT starves.
-//! * [`PolicyKind::SloAware`] — TTFT-SLO earliest-deadline-first: free
-//!   slots admit the queued request whose TTFT deadline expires soonest,
-//!   and decode picks the session that has waited longest since its last
-//!   token (least-recently-served), spreading TPOT jitter under load.
+//!   fairness: free slots admit the most urgent class's oldest queued
+//!   request first (prefill prioritized, which bounds TTFT), decode
+//!   steps rotate round-robin so no session's TPOT starves.
+//! * [`PolicyKind::SloAware`] — TTFT-SLO earliest-deadline-first within
+//!   class priority: free slots admit the queued request whose TTFT
+//!   deadline expires soonest (interactive before batch), and decode
+//!   picks the session that has waited longest since its last token
+//!   (least-recently-served), spreading TPOT jitter under load.
+//!
+//! **Tenant classes.** Every queued/active entry carries its
+//! [`TenantClass`]; class-aware policies order by `class.priority()`
+//! first (interactive before batch) and may name a **preemption
+//! victim** ([`SchedPolicy::preempt_victim`]) when the slots are full
+//! and a strictly more urgent request waits.  With a single class every
+//! priority key ties, so all orderings reduce bit-exactly to the
+//! pre-class behavior and no preemption ever fires.
 
 use anyhow::{bail, Result};
 
-use super::arrival::TimedRequest;
+use super::arrival::{TenantClass, TimedRequest};
 
 /// A queued (arrived, not yet admitted) request.
 #[derive(Debug, Clone, Copy)]
@@ -44,6 +54,7 @@ pub struct QueuedInfo {
     pub arrival: f64,
     /// Absolute TTFT deadline: `arrival + ttft_slo`.
     pub deadline: f64,
+    pub class: TenantClass,
 }
 
 /// An admitted, still-running session (prefilling or decoding).
@@ -51,6 +62,7 @@ pub struct QueuedInfo {
 pub struct ActiveInfo {
     pub id: usize,
     pub arrival: f64,
+    pub class: TenantClass,
     /// Tokens emitted so far (>= 1 once prefilled).
     pub emitted: usize,
     /// Total tokens the session will emit.
@@ -121,9 +133,10 @@ pub trait SchedPolicy {
     /// the policy just picked with [`SchedPolicy::next_action`].
     /// Returns distinct active-session ids, `lead` first, at most `max`
     /// of them; every id must be active.  The default fills the batch
-    /// with the remaining active sessions least-recently-served first
-    /// (ties by id), which matches the SLO-aware decode order; policies
-    /// with their own decode ordering (e.g. round-robin) override it.
+    /// with the remaining active sessions most-urgent-class first, then
+    /// least-recently-served (ties by id), which matches the SLO-aware
+    /// decode order; policies with their own decode ordering (e.g.
+    /// round-robin) override it.
     fn decode_batch(&mut self, view: &SchedView, lead: usize, max: usize) -> Vec<usize> {
         let mut ids = vec![lead];
         if max <= 1 {
@@ -131,9 +144,7 @@ pub trait SchedPolicy {
         }
         let mut rest: Vec<&ActiveInfo> =
             view.active.iter().filter(|a| a.id != lead).collect();
-        rest.sort_by(|a, b| {
-            a.last_token_at.total_cmp(&b.last_token_at).then(a.id.cmp(&b.id))
-        });
+        rest.sort_by(|a, b| class_lrs_order(a, b));
         for a in rest {
             if ids.len() >= max {
                 break;
@@ -145,8 +156,10 @@ pub trait SchedPolicy {
 
     /// Pick the queued request to admit next (chunked-prefill loop:
     /// admission allocates a session slot without doing prefill work, so
-    /// free slots are filled every tick).  Default: oldest arrival
-    /// first; the SLO-aware policy overrides with earliest deadline.
+    /// free slots are filled every tick).  Default: most urgent class
+    /// first, oldest arrival within it; the SLO-aware policy overrides
+    /// with earliest deadline (also within class priority) and fifo —
+    /// the class-blind baseline — with strict arrival order.
     fn admit_pick(&mut self, view: &SchedView) -> Option<usize> {
         if view.free_slots == 0 {
             return None;
@@ -157,19 +170,53 @@ pub trait SchedPolicy {
     /// Plan one token-budget tick of the chunked continuous scheduler:
     /// at most one prefilling session to receive this tick's chunk
     /// budget plus up to `max_decode` ready sessions to decode fused
-    /// with it.  Default: the oldest-arrival prefilling session, and
-    /// decode filled least-recently-served first (ties by id) — the
-    /// SLO-aware decode order.  Policies with their own decode ordering
-    /// (fifo arrival order, round-robin rotation) override it.
+    /// with it.  Default: the most-urgent-class oldest-arrival
+    /// prefilling session, and decode filled most-urgent-class
+    /// least-recently-served first (ties by id) — the SLO-aware decode
+    /// order.  Policies with their own decode ordering (fifo arrival
+    /// order, round-robin rotation) override it.
     fn mixed_tick(&mut self, view: &SchedView, max_decode: usize) -> TickPlan {
         let prefill = oldest_prefilling(view.active);
         let mut ready: Vec<&ActiveInfo> =
             view.active.iter().filter(|a| a.decode_ready()).collect();
-        ready.sort_by(|a, b| {
-            a.last_token_at.total_cmp(&b.last_token_at).then(a.id.cmp(&b.id))
-        });
+        ready.sort_by(|a, b| class_lrs_order(a, b));
         let decode = ready.iter().take(max_decode).map(|a| a.id).collect();
         TickPlan { prefill, decode }
+    }
+
+    /// Name an in-flight session to **preempt** so a strictly more
+    /// urgent queued request can take its slot.  The replica parks the
+    /// victim's live session (work conserved — prefix KV and emitted
+    /// tokens survive) and re-admits it through the normal queue, so
+    /// this only fires when it buys the urgent request a slot *now*:
+    /// every slot is taken and at least one queued request outranks an
+    /// in-flight session.
+    ///
+    /// Default: victim is the lowest-priority *prefilled* session —
+    /// preempting mid-prefill would discard the only work done so far —
+    /// with the most tokens still to emit (the cheapest slot to vacate
+    /// per token of displaced progress), ties toward the highest id
+    /// (youngest session).  Returns `None` when nothing queued strictly
+    /// outranks every candidate.  Fifo — the class-blind baseline —
+    /// overrides this to never preempt.  With a single tenant class no
+    /// queued request can outrank an active one, so this is dead code
+    /// on every legacy path.
+    fn preempt_victim(&mut self, view: &SchedView) -> Option<usize> {
+        if view.free_slots > 0 {
+            return None;
+        }
+        let urgent = view.queued.iter().map(|q| q.class.priority()).min()?;
+        view.active
+            .iter()
+            .filter(|a| a.decode_ready() && a.class.priority() > urgent)
+            .max_by(|a, b| {
+                a.class
+                    .priority()
+                    .cmp(&b.class.priority())
+                    .then((a.target - a.emitted).cmp(&(b.target - b.emitted)))
+                    .then(a.id.cmp(&b.id))
+            })
+            .map(|a| a.id)
     }
 }
 
@@ -211,17 +258,62 @@ impl PolicyKind {
         [PolicyKind::Fifo, PolicyKind::RoundRobin, PolicyKind::SloAware];
 }
 
+/// Class-aware queue order: most urgent class first, oldest arrival
+/// within it, ties by id.  Single-class input reduces to strict arrival
+/// order (the pre-class behavior, bit-exactly).
 fn oldest_queued(queued: &[QueuedInfo]) -> Option<usize> {
+    queued
+        .iter()
+        .min_by(|a, b| {
+            a.class
+                .priority()
+                .cmp(&b.class.priority())
+                .then(a.arrival.total_cmp(&b.arrival))
+                .then(a.id.cmp(&b.id))
+        })
+        .map(|q| q.id)
+}
+
+/// Strict arrival order, class-blind (the fifo baseline's queue pick).
+fn fifo_queued(queued: &[QueuedInfo]) -> Option<usize> {
     queued
         .iter()
         .min_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)))
         .map(|q| q.id)
 }
 
-/// The prefilling session every policy grants the chunk budget to:
-/// oldest arrival first, ties by id (shared by all `mixed_tick`s so the
-/// prefill ordering cannot silently fork between policies).
+/// Class-aware decode order: most urgent class first, then
+/// least-recently-served, ties by id (the SLO-aware decode order;
+/// single-class input reduces bit-exactly to plain LRS).
+fn class_lrs_order(a: &ActiveInfo, b: &ActiveInfo) -> std::cmp::Ordering {
+    a.class
+        .priority()
+        .cmp(&b.class.priority())
+        .then(a.last_token_at.total_cmp(&b.last_token_at))
+        .then(a.id.cmp(&b.id))
+}
+
+/// The prefilling session class-aware policies grant the chunk budget
+/// to: most urgent class first, oldest arrival within it, ties by id
+/// (shared by the default and round-robin `mixed_tick`s so their
+/// prefill ordering cannot silently fork; fifo — the class-blind
+/// baseline — keeps strict arrival order via [`fifo_prefilling`]).
 fn oldest_prefilling(active: &[ActiveInfo]) -> Option<usize> {
+    active
+        .iter()
+        .filter(|a| a.prefill_remaining > 0)
+        .min_by(|a, b| {
+            a.class
+                .priority()
+                .cmp(&b.class.priority())
+                .then(a.arrival.total_cmp(&b.arrival))
+                .then(a.id.cmp(&b.id))
+        })
+        .map(|a| a.id)
+}
+
+/// Oldest-arrival prefilling session, class-blind (fifo's chunk pick).
+fn fifo_prefilling(active: &[ActiveInfo]) -> Option<usize> {
     active
         .iter()
         .filter(|a| a.prefill_remaining > 0)
@@ -229,7 +321,10 @@ fn oldest_prefilling(active: &[ActiveInfo]) -> Option<usize> {
         .map(|a| a.id)
 }
 
-/// Strict arrival order, one session at a time.
+/// Strict arrival order, one session at a time.  Also the class-blind
+/// baseline: ignores [`TenantClass`] at every decision point and never
+/// preempts, so mixed-tenant sweeps can measure what class-aware
+/// scheduling buys against it.
 struct Fifo;
 
 impl SchedPolicy for Fifo {
@@ -246,10 +341,19 @@ impl SchedPolicy for Fifo {
         {
             return Action::Decode(a.id);
         }
-        match (view.free_slots > 0).then(|| oldest_queued(view.queued)).flatten() {
+        match (view.free_slots > 0).then(|| fifo_queued(view.queued)).flatten() {
             Some(id) => Action::Admit(id),
             None => Action::Idle,
         }
+    }
+
+    /// Strict arrival order also for slot admission under chunked
+    /// scheduling (the class-aware default would reorder by class).
+    fn admit_pick(&mut self, view: &SchedView) -> Option<usize> {
+        if view.free_slots == 0 {
+            return None;
+        }
+        fifo_queued(view.queued)
     }
 
     /// Chunked ticks keep fifo's arrival ordering at every decision
@@ -257,12 +361,17 @@ impl SchedPolicy for Fifo {
     /// the oldest ready sessions fill the decode batch (only the decode
     /// sort key differs from the default tick plan).
     fn mixed_tick(&mut self, view: &SchedView, max_decode: usize) -> TickPlan {
-        let prefill = oldest_prefilling(view.active);
+        let prefill = fifo_prefilling(view.active);
         let mut ready: Vec<&ActiveInfo> =
             view.active.iter().filter(|a| a.decode_ready()).collect();
         ready.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
         let decode = ready.iter().take(max_decode).map(|a| a.id).collect();
         TickPlan { prefill, decode }
+    }
+
+    /// The class-blind baseline never preempts.
+    fn preempt_victim(&mut self, _view: &SchedView) -> Option<usize> {
+        None
     }
 }
 
@@ -347,8 +456,25 @@ impl SchedPolicy for RoundRobin {
     }
 }
 
-/// EDF admission on the TTFT deadline, least-recently-served decode.
+/// EDF admission on the TTFT deadline (within class priority),
+/// least-recently-served decode (most urgent class first).
 struct SloAware;
+
+/// EDF within class priority: interactive deadlines always outrank
+/// batch deadlines, however lax the interactive SLO (single-class input
+/// reduces bit-exactly to plain EDF).
+fn edf_queued(queued: &[QueuedInfo]) -> Option<usize> {
+    queued
+        .iter()
+        .min_by(|a, b| {
+            a.class
+                .priority()
+                .cmp(&b.class.priority())
+                .then(a.deadline.total_cmp(&b.deadline))
+                .then(a.id.cmp(&b.id))
+        })
+        .map(|q| q.id)
+}
 
 impl SchedPolicy for SloAware {
     fn name(&self) -> &'static str {
@@ -357,34 +483,24 @@ impl SchedPolicy for SloAware {
 
     fn next_action(&mut self, view: &SchedView) -> Action {
         if view.free_slots > 0 {
-            if let Some(q) = view
-                .queued
-                .iter()
-                .min_by(|a, b| a.deadline.total_cmp(&b.deadline).then(a.id.cmp(&b.id)))
-            {
-                return Action::Admit(q.id);
+            if let Some(id) = edf_queued(view.queued) {
+                return Action::Admit(id);
             }
         }
-        match view
-            .active
-            .iter()
-            .min_by(|a, b| a.last_token_at.total_cmp(&b.last_token_at).then(a.id.cmp(&b.id)))
-        {
+        match view.active.iter().min_by(|a, b| class_lrs_order(a, b)) {
             Some(a) => Action::Decode(a.id),
             None => Action::Idle,
         }
     }
 
     /// EDF admission also under chunked scheduling: the queued request
-    /// whose TTFT deadline expires soonest claims the free slot.
+    /// whose TTFT deadline expires soonest (within class priority)
+    /// claims the free slot.
     fn admit_pick(&mut self, view: &SchedView) -> Option<usize> {
         if view.free_slots == 0 {
             return None;
         }
-        view.queued
-            .iter()
-            .min_by(|a, b| a.deadline.total_cmp(&b.deadline).then(a.id.cmp(&b.id)))
-            .map(|q| q.id)
+        edf_queued(view.queued)
     }
 }
 
@@ -681,13 +797,19 @@ mod tests {
     use super::*;
 
     fn q(id: usize, arrival: f64, deadline: f64) -> QueuedInfo {
-        QueuedInfo { id, arrival, deadline }
+        QueuedInfo { id, arrival, deadline, class: TenantClass::Interactive }
+    }
+
+    /// A queued batch-class request.
+    fn qb(id: usize, arrival: f64, deadline: f64) -> QueuedInfo {
+        QueuedInfo { class: TenantClass::Batch, ..q(id, arrival, deadline) }
     }
 
     fn a(id: usize, arrival: f64, last_token_at: f64) -> ActiveInfo {
         ActiveInfo {
             id,
             arrival,
+            class: TenantClass::Interactive,
             emitted: 1,
             target: 8,
             last_token_at,
@@ -695,11 +817,17 @@ mod tests {
         }
     }
 
+    /// An active batch-class session.
+    fn ab(id: usize, arrival: f64, last_token_at: f64) -> ActiveInfo {
+        ActiveInfo { class: TenantClass::Batch, ..a(id, arrival, last_token_at) }
+    }
+
     /// A session still mid-prefill (chunked mode).
     fn pre(id: usize, arrival: f64, remaining: usize) -> ActiveInfo {
         ActiveInfo {
             id,
             arrival,
+            class: TenantClass::Interactive,
             emitted: 0,
             target: 8,
             last_token_at: arrival,
@@ -734,7 +862,12 @@ mod tests {
             free_slots: free,
         };
         // with a free slot and a queued request, prefill wins
-        static QUEUE: [QueuedInfo; 1] = [QueuedInfo { id: 9, arrival: 1.9, deadline: 6.9 }];
+        static QUEUE: [QueuedInfo; 1] = [QueuedInfo {
+            id: 9,
+            arrival: 1.9,
+            deadline: 6.9,
+            class: TenantClass::Interactive,
+        }];
         assert_eq!(p.next_action(&view(&QUEUE, 1)), Action::Admit(9));
         // decode rotation cycles 1 -> 2 -> 5 -> 1 ...
         assert_eq!(p.next_action(&view(&[], 0)), Action::Decode(1));
@@ -845,6 +978,77 @@ mod tests {
     }
 
     #[test]
+    fn class_priority_orders_admission_except_fifo() {
+        // batch arrived first *and* has the tighter deadline;
+        // interactive still outranks it everywhere except the
+        // class-blind fifo baseline
+        let queued = [qb(1, 0.1, 2.1), q(2, 0.9, 9.9)];
+        let view = SchedView { now: 1.0, queued: &queued, active: &[], free_slots: 1 };
+        assert_eq!(PolicyKind::RoundRobin.build().admit_pick(&view), Some(2));
+        assert_eq!(PolicyKind::SloAware.build().admit_pick(&view), Some(2));
+        assert_eq!(PolicyKind::SloAware.build().next_action(&view), Action::Admit(2));
+        assert_eq!(PolicyKind::Fifo.build().admit_pick(&view), Some(1));
+        assert_eq!(PolicyKind::Fifo.build().next_action(&view), Action::Admit(1));
+
+        // slo decode: a more-starved batch session still yields to
+        // interactive
+        let active = [ab(3, 0.0, 0.5), a(4, 0.1, 1.5)];
+        let view = SchedView { now: 2.0, queued: &[], active: &active, free_slots: 0 };
+        assert_eq!(PolicyKind::SloAware.build().next_action(&view), Action::Decode(4));
+
+        // chunked prefill budget: interactive prefill outranks an older
+        // batch prefill (fifo keeps arrival order)
+        let mut bp = pre(5, 0.0, 5);
+        bp.class = TenantClass::Batch;
+        let active = [bp, pre(6, 0.5, 5)];
+        let view = SchedView { now: 1.0, queued: &[], active: &active, free_slots: 0 };
+        assert_eq!(PolicyKind::SloAware.build().mixed_tick(&view, 1).prefill, Some(6));
+        assert_eq!(PolicyKind::Fifo.build().mixed_tick(&view, 1).prefill, Some(5));
+    }
+
+    #[test]
+    fn preempt_victim_picks_lowest_priority_most_remaining() {
+        let mut p = PolicyKind::SloAware.build();
+        let b1 = ab(1, 0.0, 1.0); // 7 tokens remaining
+        let mut b2 = ab(2, 0.1, 1.1);
+        b2.emitted = 5; // 3 remaining
+        let active = [b1, b2, a(3, 0.2, 1.2)];
+        let queued = [q(9, 2.0, 7.0)];
+        let view = SchedView { now: 2.0, queued: &queued, active: &active, free_slots: 0 };
+        assert_eq!(p.preempt_victim(&view), Some(1), "most remaining batch work vacates");
+
+        // equal remaining work: the youngest (highest id) slot vacates
+        let tied = [ab(5, 0.0, 1.0), ab(6, 0.1, 1.1), a(3, 0.2, 1.2)];
+        let view = SchedView { now: 2.0, queued: &queued, active: &tied, free_slots: 0 };
+        assert_eq!(p.preempt_victim(&view), Some(6));
+
+        // a free slot means plain admission, never preemption
+        let view = SchedView { now: 2.0, queued: &queued, active: &active, free_slots: 1 };
+        assert_eq!(p.preempt_victim(&view), None);
+
+        // nothing queued outranks the in-flight batch sessions
+        let bq = [qb(9, 2.0, 7.0)];
+        let view = SchedView { now: 2.0, queued: &bq, active: &active, free_slots: 0 };
+        assert_eq!(p.preempt_victim(&view), None);
+
+        // equal class never preempts (the single-class legacy paths)
+        let inter = [a(1, 0.0, 1.0)];
+        let view = SchedView { now: 2.0, queued: &queued, active: &inter, free_slots: 0 };
+        assert_eq!(p.preempt_victim(&view), None);
+
+        // mid-prefill sessions are never victims
+        let mut bp = pre(4, 0.0, 6);
+        bp.class = TenantClass::Batch;
+        let prefilling = [bp, a(3, 0.2, 1.2)];
+        let view = SchedView { now: 2.0, queued: &queued, active: &prefilling, free_slots: 0 };
+        assert_eq!(p.preempt_victim(&view), None);
+
+        // the class-blind baseline never preempts
+        let view = SchedView { now: 2.0, queued: &queued, active: &active, free_slots: 0 };
+        assert_eq!(PolicyKind::Fifo.build().preempt_victim(&view), None);
+    }
+
+    #[test]
     fn parse_round_trips() {
         for kind in PolicyKind::ALL {
             assert_eq!(PolicyKind::parse(kind.name()).unwrap(), kind);
@@ -874,11 +1078,7 @@ mod tests {
     }
 
     fn treq(id: usize, prompt: Vec<i32>) -> TimedRequest {
-        TimedRequest {
-            id,
-            arrival: 0.0,
-            request: crate::workload::Request { prompt, max_new: 4 },
-        }
+        TimedRequest::new(id, 0.0, crate::workload::Request { prompt, max_new: 4 })
     }
 
     #[test]

@@ -28,7 +28,7 @@ use crate::memory::BusyTotals;
 use crate::trace::{TickSample, TraceCapture};
 use crate::workload::Request;
 
-use super::arrival::TimedRequest;
+use super::arrival::{TenantClass, TimedRequest};
 use super::metrics::{DedupStats, PhaseStats, ResourceUtil, SloTargets};
 use super::policy::{
     Action, ActiveInfo, DispatchKind, QueuedInfo, ReplicaDispatchView, SchedPolicy, SchedView,
@@ -83,6 +83,11 @@ struct Queued {
     /// its replica died — the restart cannot begin before the failure,
     /// even on a receiving replica whose clock lags behind it.
     earliest: f64,
+    class: TenantClass,
+    /// Resolved SLO: the request's own targets if it carried any, else
+    /// the fleet-level targets (bit-identical deadline math on legacy
+    /// single-class paths).
+    slo: SloTargets,
     request: Request,
 }
 
@@ -90,6 +95,26 @@ struct Queued {
 struct Active {
     id: usize,
     arrival: f64,
+    class: TenantClass,
+    slo: SloTargets,
+    /// Times this session has been preempted (parked) so far.
+    preemptions: usize,
+    sess: EngineSession,
+    last_token_at: f64,
+}
+
+/// A preempted in-flight session: its slot was handed to a strictly
+/// more urgent class, but the **live engine session survives** — prefix
+/// KV and emitted tokens intact (work conserved, unlike a churn
+/// re-dispatch which restarts from scratch).  Parked sessions appear in
+/// the policy's queued view and re-enter service through the normal
+/// admission pick; resuming is pure bookkeeping (no engine work).
+struct Parked {
+    id: usize,
+    arrival: f64,
+    class: TenantClass,
+    slo: SloTargets,
+    preemptions: usize,
     sess: EngineSession,
     last_token_at: f64,
 }
@@ -120,6 +145,10 @@ pub struct Replica<'e> {
     chunk_tokens: usize,
     max_seq: usize,
     queued: Vec<Queued>,
+    /// Preempted sessions waiting to resume (never populated on
+    /// single-class runs — preemption requires a strictly more urgent
+    /// queued class).
+    parked: Vec<Parked>,
     active: Vec<Active>,
     state: ReplicaState,
     stats_before: EngineStats,
@@ -140,16 +169,31 @@ pub struct Replica<'e> {
     out: FleetOutcome,
 }
 
-fn infos(queued: &[Queued], active: &[Active]) -> (Vec<QueuedInfo>, Vec<ActiveInfo>) {
-    let queued_info: Vec<QueuedInfo> = queued
+/// Policy view of the replica's sets.  Parked (preempted) sessions
+/// appear in the **queued** view — deadline keyed to their original
+/// arrival — so the policy's normal admission ordering decides when
+/// they re-enter service; empty on every single-class path.
+fn infos(
+    queued: &[Queued],
+    parked: &[Parked],
+    active: &[Active],
+) -> (Vec<QueuedInfo>, Vec<ActiveInfo>) {
+    let mut queued_info: Vec<QueuedInfo> = queued
         .iter()
-        .map(|q| QueuedInfo { id: q.id, arrival: q.arrival, deadline: q.deadline })
+        .map(|q| QueuedInfo { id: q.id, arrival: q.arrival, deadline: q.deadline, class: q.class })
         .collect();
+    queued_info.extend(parked.iter().map(|p| QueuedInfo {
+        id: p.id,
+        arrival: p.arrival,
+        deadline: p.arrival + p.slo.ttft_s,
+        class: p.class,
+    }));
     let active_info: Vec<ActiveInfo> = active
         .iter()
         .map(|a| ActiveInfo {
             id: a.id,
             arrival: a.arrival,
+            class: a.class,
             emitted: a.sess.emitted(),
             target: a.sess.target_tokens(),
             last_token_at: a.last_token_at,
@@ -190,6 +234,7 @@ impl<'e> Replica<'e> {
             chunk_tokens: cfg.serving.chunk_tokens,
             max_seq,
             queued: Vec::new(),
+            parked: Vec::new(),
             active: Vec::new(),
             state: ReplicaState::Live,
             stats_before: engine.stats,
@@ -208,9 +253,9 @@ impl<'e> Replica<'e> {
         self.engine.clock()
     }
 
-    /// Anything queued or in flight?
+    /// Anything queued, parked, or in flight?
     pub fn has_work(&self) -> bool {
-        !self.queued.is_empty() || !self.active.is_empty()
+        !self.queued.is_empty() || !self.parked.is_empty() || !self.active.is_empty()
     }
 
     /// Lifecycle state (Live unless a churn event touched the replica).
@@ -247,11 +292,33 @@ impl<'e> Replica<'e> {
     pub fn evacuate(&mut self) -> Evacuation {
         self.state = ReplicaState::Dead;
         let mut requests: Vec<TimedRequest> =
-            Vec::with_capacity(self.queued.len() + self.active.len());
+            Vec::with_capacity(self.queued.len() + self.parked.len() + self.active.len());
         for q in self.queued.drain(..) {
-            requests.push(TimedRequest { id: q.id, arrival: q.arrival, request: q.request });
+            requests.push(TimedRequest {
+                id: q.id,
+                arrival: q.arrival,
+                class: q.class,
+                slo: Some(q.slo),
+                request: q.request,
+            });
         }
         let mut lost_tokens = 0u64;
+        // Parked sessions restart from scratch like active ones: the
+        // work a park conserved is lost when the replica dies (parked
+        // sessions are always fully prefilled).
+        for p in self.parked.drain(..) {
+            lost_tokens += (p.sess.prompt_len() + p.sess.emitted()) as u64;
+            requests.push(TimedRequest {
+                id: p.id,
+                arrival: p.arrival,
+                class: p.class,
+                slo: Some(p.slo),
+                request: Request {
+                    prompt: p.sess.prompt().to_vec(),
+                    max_new: p.sess.target_tokens(),
+                },
+            });
+        }
         for a in self.active.drain(..) {
             // Work discarded: prompt tokens whose layer sweep already
             // ran (the whole prompt once prefilled, the chunk cursor
@@ -265,6 +332,8 @@ impl<'e> Replica<'e> {
             requests.push(TimedRequest {
                 id: a.id,
                 arrival: a.arrival,
+                class: a.class,
+                slo: Some(a.slo),
                 request: Request {
                     prompt: a.sess.prompt().to_vec(),
                     max_new: a.sess.target_tokens(),
@@ -290,22 +359,35 @@ impl<'e> Replica<'e> {
     /// whose virtual clock lags the event).  `enqueue` is the
     /// `not_before == arrival` case.
     pub fn enqueue_not_before(&mut self, r: TimedRequest, not_before: f64) {
+        // Resolve the SLO once at the door: the request's own targets
+        // if it carries any, else the fleet-level targets (exactly the
+        // legacy deadline arithmetic when `r.slo` is `None`).
+        let slo = r.slo.unwrap_or(self.slo);
         self.queued.push(Queued {
             id: r.id,
             arrival: r.arrival,
-            deadline: r.arrival + self.slo.ttft_s,
+            deadline: r.arrival + slo.ttft_s,
             earliest: r.arrival.max(not_before),
+            class: r.class,
+            slo,
             request: r.request,
         });
     }
 
     /// Dispatcher-visible load snapshot.
     pub fn dispatch_view(&self, index: usize) -> ReplicaDispatchView {
+        // Parked sessions count as queued load: they hold no slot but
+        // still owe their remaining tokens to this replica.
         let queued_tokens = self
             .queued
             .iter()
             .map(|q| q.request.prompt.len() + q.request.max_new)
-            .sum();
+            .sum::<usize>()
+            + self
+                .parked
+                .iter()
+                .map(|p| p.sess.target_tokens().saturating_sub(p.sess.emitted()))
+                .sum::<usize>();
         let active_tokens = self
             .active
             .iter()
@@ -317,7 +399,7 @@ impl<'e> Replica<'e> {
         ReplicaDispatchView {
             index,
             clock: self.clock(),
-            queued_requests: self.queued.len(),
+            queued_requests: self.queued.len() + self.parked.len(),
             queued_tokens,
             active_sessions: self.active.len(),
             active_tokens,
@@ -371,9 +453,10 @@ impl<'e> Replica<'e> {
             let pool = self.engine.host_pool_stats();
             self.samples.push(TickSample {
                 t: t1,
-                queue_depth: self.queued.len(),
+                queue_depth: self.queued.len() + self.parked.len(),
                 active_sessions: self.active.len(),
-                kv_bytes: self.active.iter().map(|a| a.sess.kv_bytes()).sum(),
+                kv_bytes: self.active.iter().map(|a| a.sess.kv_bytes()).sum::<u64>()
+                    + self.parked.iter().map(|p| p.sess.kv_bytes()).sum::<u64>(),
                 cache_bytes: self.engine.cache.used_bytes(),
                 host_pool_hits: pool.host_hits,
                 host_pool_fills: pool.ssd_fills,
@@ -437,10 +520,92 @@ impl<'e> Replica<'e> {
         ReplicaRun { outcome: out, busy, state: self.state, trace }
     }
 
-    /// Record a finished session into the run outcome.
-    fn record_done(&mut self, id: usize, arrival: f64, sess: &EngineSession) {
-        let rec = self.out.metrics.record(id, arrival, &sess.out, self.slo);
+    /// Record a finished session into the run outcome under its own
+    /// class and resolved SLO.
+    fn record_done(
+        &mut self,
+        id: usize,
+        arrival: f64,
+        class: TenantClass,
+        slo: SloTargets,
+        preemptions: usize,
+        sess: &EngineSession,
+    ) {
+        let rec = self.out.metrics.record_class(id, arrival, class, &sess.out, slo, preemptions);
         self.out.per_request.push(rec);
+    }
+
+    /// Preemption check, run once per tick before planning: when every
+    /// slot is taken and a strictly more urgent class waits, ask the
+    /// policy for a victim and park it (live session kept — resuming
+    /// costs no engine work).  The cheap guards in front mean the
+    /// policy is **never consulted** on a single-class run (or with a
+    /// free slot), so stateful policies stay bit-identical on every
+    /// legacy path.
+    fn maybe_preempt(&mut self, now: f64) -> Result<()> {
+        if self.active.len() < self.max_sessions {
+            return Ok(());
+        }
+        let Some(urgent) = self
+            .queued
+            .iter()
+            .map(|q| q.class.priority())
+            .chain(self.parked.iter().map(|p| p.class.priority()))
+            .min()
+        else {
+            return Ok(());
+        };
+        if !self.active.iter().any(|a| a.class.priority() > urgent) {
+            return Ok(());
+        }
+        let (queued_info, active_info) = infos(&self.queued, &self.parked, &self.active);
+        let view = SchedView { now, queued: &queued_info, active: &active_info, free_slots: 0 };
+        let Some(vid) = self.policy.preempt_victim(&view) else {
+            return Ok(());
+        };
+        let Some(pos) = self.active.iter().position(|a| a.id == vid) else {
+            bail!("policy preempted unknown session {vid}");
+        };
+        ensure!(
+            self.active[pos].sess.prefilled() && !self.active[pos].sess.done(),
+            "policy preempted session {vid} that is not mid-decode"
+        );
+        let a = self.active.swap_remove(pos);
+        self.parked.push(Parked {
+            id: a.id,
+            arrival: a.arrival,
+            class: a.class,
+            slo: a.slo,
+            preemptions: a.preemptions + 1,
+            sess: a.sess,
+            last_token_at: a.last_token_at,
+        });
+        Ok(())
+    }
+
+    /// Resume a parked session into the freed slot the policy just
+    /// granted it (pure bookkeeping — its engine session never
+    /// stopped existing).  Returns false if `id` is not parked.
+    fn try_resume(&mut self, id: usize) -> Result<bool> {
+        let Some(pos) = self.parked.iter().position(|p| p.id == id) else {
+            return Ok(false);
+        };
+        ensure!(
+            self.active.len() < self.max_sessions,
+            "policy resumed session {id} with no free slot"
+        );
+        let p = self.parked.swap_remove(pos);
+        self.active.push(Active {
+            id: p.id,
+            arrival: p.arrival,
+            class: p.class,
+            slo: p.slo,
+            preemptions: p.preemptions,
+            sess: p.sess,
+            last_token_at: p.last_token_at,
+        });
+        self.out.peak_concurrency = self.out.peak_concurrency.max(self.active.len());
+        Ok(true)
     }
 
     /// One step of the pre-chunking fleet loop: admission runs the
@@ -450,7 +615,11 @@ impl<'e> Replica<'e> {
     /// reproduces the legacy path step for step.
     fn tick_monolithic(&mut self) -> Result<()> {
         let now = self.engine.clock();
-        let (queued_info, active_info) = infos(&self.queued, &self.active);
+        // Preemption first: parking a victim frees the slot the urgent
+        // request is then admitted into by the normal planning below,
+        // so a preempting tick still runs engine work (the prefill).
+        self.maybe_preempt(now)?;
+        let (queued_info, active_info) = infos(&self.queued, &self.parked, &self.active);
         let free_slots = self.max_sessions.saturating_sub(self.active.len());
         let view = SchedView {
             now,
@@ -462,13 +631,13 @@ impl<'e> Replica<'e> {
         if action == Action::Idle {
             // Work-conserving fallback so a policy bug can never wedge
             // the loop: admit if possible, else decode something.
-            action = if free_slots > 0 && !self.queued.is_empty() {
-                // Oldest arrival (ties by id), like the chunked
-                // fallback: admission removes with `swap_remove`, so
-                // after any prior admission index 0 holds whatever
-                // request was swapped into the hole, not the oldest.
-                let oldest = self
-                    .queued
+            action = if free_slots > 0 && !queued_info.is_empty() {
+                // Oldest arrival (ties by id) over queued and parked,
+                // like the chunked fallback: admission removes with
+                // `swap_remove`, so after any prior admission index 0
+                // holds whatever request was swapped into the hole, not
+                // the oldest.
+                let oldest = queued_info
                     .iter()
                     .min_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)))
                     .expect("non-empty queue");
@@ -484,6 +653,12 @@ impl<'e> Replica<'e> {
 
         match action {
             Action::Admit(id) => {
+                // A parked session re-enters by plain resume: its live
+                // engine session (KV + emitted tokens) was conserved,
+                // so no engine work happens until the next decode tick.
+                if self.try_resume(id)? {
+                    return Ok(());
+                }
                 let Some(pos) = self.queued.iter().position(|q| q.id == id) else {
                     bail!("policy admitted unknown session {id}");
                 };
@@ -506,15 +681,19 @@ impl<'e> Replica<'e> {
                     self.out.peak_concurrency.max(self.active.len() + 1);
                 let kv_in_flight: u64 =
                     self.active.iter().map(|a| a.sess.kv_bytes()).sum::<u64>()
+                        + self.parked.iter().map(|p| p.sess.kv_bytes()).sum::<u64>()
                         + sess.kv_bytes();
                 self.out.peak_kv_bytes = self.out.peak_kv_bytes.max(kv_in_flight);
                 let last_token_at = sess.out.start + sess.out.ttft;
                 if sess.done() {
-                    self.record_done(q.id, q.arrival, &sess);
+                    self.record_done(q.id, q.arrival, q.class, q.slo, 0, &sess);
                 } else {
                     self.active.push(Active {
                         id: q.id,
                         arrival: q.arrival,
+                        class: q.class,
+                        slo: q.slo,
+                        preemptions: 0,
                         sess,
                         last_token_at,
                     });
@@ -544,7 +723,7 @@ impl<'e> Replica<'e> {
                         + a.sess.out.token_times.last().copied().unwrap_or(0.0);
                     if done {
                         let a = self.active.swap_remove(pos);
-                        self.record_done(a.id, a.arrival, &a.sess);
+                        self.record_done(a.id, a.arrival, a.class, a.slo, a.preemptions, &a.sess);
                     }
                 } else {
                     if !batch_ids.contains(&id) {
@@ -570,7 +749,14 @@ impl<'e> Replica<'e> {
                         a.last_token_at = a.sess.out.start
                             + a.sess.out.token_times.last().copied().unwrap_or(0.0);
                         if done {
-                            self.record_done(a.id, a.arrival, &a.sess);
+                            self.record_done(
+                                a.id,
+                                a.arrival,
+                                a.class,
+                                a.slo,
+                                a.preemptions,
+                                &a.sess,
+                            );
                         } else {
                             self.active.push(a);
                         }
@@ -595,14 +781,25 @@ impl<'e> Replica<'e> {
         let max_seq = self.max_seq;
         let max_decode_batch = self.max_decode_batch;
 
+        // Preemption first, so the freed slot is filled by the normal
+        // admission loop below in the same tick.
+        self.maybe_preempt(now)?;
+
         // Admission allocates slots only (prefill happens chunk by
         // chunk), so free slots fill every tick in policy order.
-        while self.active.len() < self.max_sessions && !self.queued.is_empty() {
-            let (queued_info, active_info) = infos(&self.queued, &self.active);
+        // Parked sessions compete through the same pick and resume in
+        // place (no engine work).
+        while self.active.len() < self.max_sessions
+            && !(self.queued.is_empty() && self.parked.is_empty())
+        {
+            let (queued_info, active_info) = infos(&self.queued, &self.parked, &self.active);
             let free_slots = self.max_sessions - self.active.len();
             let view =
                 SchedView { now, queued: &queued_info, active: &active_info, free_slots };
             let Some(id) = self.policy.admit_pick(&view) else { break };
+            if self.try_resume(id)? {
+                continue;
+            }
             let Some(pos) = self.queued.iter().position(|q| q.id == id) else {
                 bail!("policy admitted unknown session {id}");
             };
@@ -617,11 +814,15 @@ impl<'e> Replica<'e> {
             self.active.push(Active {
                 id: q.id,
                 arrival: q.arrival,
+                class: q.class,
+                slo: q.slo,
+                preemptions: 0,
                 sess,
                 last_token_at: q.arrival,
             });
             self.out.peak_concurrency = self.out.peak_concurrency.max(self.active.len());
-            let kv_in_flight: u64 = self.active.iter().map(|a| a.sess.kv_bytes()).sum();
+            let kv_in_flight: u64 = self.active.iter().map(|a| a.sess.kv_bytes()).sum::<u64>()
+                + self.parked.iter().map(|p| p.sess.kv_bytes()).sum::<u64>();
             self.out.peak_kv_bytes = self.out.peak_kv_bytes.max(kv_in_flight);
         }
         if self.active.is_empty() {
@@ -631,7 +832,7 @@ impl<'e> Replica<'e> {
         }
 
         // Token-budget tick plan: one prefill chunk + a decode batch.
-        let (queued_info, active_info) = infos(&self.queued, &self.active);
+        let (queued_info, active_info) = infos(&self.queued, &self.parked, &self.active);
         let free_slots = self.max_sessions - self.active.len();
         let view =
             SchedView { now, queued: &queued_info, active: &active_info, free_slots };
@@ -730,7 +931,7 @@ impl<'e> Replica<'e> {
                 a.last_token_at =
                     a.sess.out.start + a.sess.out.token_times.last().copied().unwrap_or(0.0);
                 if a.sess.done() {
-                    self.record_done(a.id, a.arrival, &a.sess);
+                    self.record_done(a.id, a.arrival, a.class, a.slo, a.preemptions, &a.sess);
                 } else {
                     self.active.push(a);
                 }
@@ -742,7 +943,7 @@ impl<'e> Replica<'e> {
             a.last_token_at =
                 a.sess.out.start + a.sess.out.token_times.last().copied().unwrap_or(0.0);
             if done {
-                self.record_done(a.id, a.arrival, &a.sess);
+                self.record_done(a.id, a.arrival, a.class, a.slo, a.preemptions, &a.sess);
             } else {
                 self.active.push(a);
             }

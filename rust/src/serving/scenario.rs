@@ -1,0 +1,425 @@
+//! Production trace scenarios: named, parameterized compositions of
+//! per-tenant-class arrival processes and modulation envelopes behind
+//! `serve-fleet --scenario NAME[:ARGS]`.
+//!
+//! A [`Scenario`] is a list of [`ClassLoad`]s — one per tenant class in
+//! the mix — each pairing an [`ArrivalProcess`] with an [`Envelope`]
+//! (diurnal day-scale sinusoid, flash-crowd window) and an optional
+//! per-class [`SloTargets`] override.  [`Scenario::generate`] samples
+//! every class from an **independent seeded timing stream** and merges
+//! the arrivals into one trace, so adding or re-weighting one class
+//! never perturbs another class's arrival times.
+//!
+//! # Determinism and digest neutrality
+//!
+//! Class `k`'s timing seed is `seed ^ (k · GOLDEN)`, so class 0 samples
+//! from exactly the seed the legacy single-stream
+//! [`ArrivalGen::generate`] would use; with a single flat-envelope
+//! class the merge is a no-op and the trace is **bit-identical** to the
+//! `--arrival` path (same arrivals, same prompts, same ids) — pinned by
+//! `steady_reduces_to_legacy_generate` here and end-to-end (through
+//! `ClusterOutcome::digest()`) in `tests/integration_scenarios.rs`.
+//! Request content is drawn from the caller's [`TraceGen`] in merged
+//! generation order, id-stamped `0..n` in arrival order.
+//!
+//! # Scenario library
+//!
+//! | name | classes | shape |
+//! |------|---------|-------|
+//! | `steady` | interactive | Poisson at `--rate` (≡ `--arrival poisson`) |
+//! | `diurnal[:PERIOD[:AMP]]` | interactive | Poisson × day-scale sinusoid |
+//! | `flash-crowd[:AT[:MAG[:DUR]]]` | interactive | Poisson × flash window |
+//! | `mixed[:SHARE]` | interactive + batch | two Poisson streams |
+//! | `mixed-diurnal[:SHARE[:PERIOD[:AMP]]]` | interactive + batch | interactive rides the sinusoid, batch stays flat |
+//! | `mixed-flash[:SHARE[:AT[:MAG[:DUR]]]]` | interactive + batch | interactive spikes, batch stays flat |
+//!
+//! `SHARE` is the interactive fraction of requests (and of `--rate`);
+//! batch requests carry a relaxed SLO — the fleet targets scaled by
+//! `--batch-slo-scale` — and are preemptible by interactive prefill
+//! under class-aware scheduling.
+
+use anyhow::{bail, ensure, Result};
+
+use super::arrival::{ArrivalGen, ArrivalProcess, Envelope, TenantClass, TimedRequest};
+use super::metrics::SloTargets;
+use crate::workload::TraceGen;
+
+/// Weyl/golden-ratio increment decorrelating per-class timing seeds
+/// (class 0 keeps the base seed untouched — the digest-neutral case).
+const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// One tenant class's contribution to a scenario trace.
+#[derive(Debug, Clone)]
+pub struct ClassLoad {
+    pub class: TenantClass,
+    pub process: ArrivalProcess,
+    pub envelope: Envelope,
+    /// Per-request SLO stamped on this class's requests; `None` (the
+    /// interactive default) uses the fleet-level targets, which keeps
+    /// single-class scenarios digest-neutral.
+    pub slo: Option<SloTargets>,
+    /// This class's fraction of the trace's requests (> 0; shares are
+    /// normalized over the scenario).
+    pub share: f64,
+}
+
+/// A named multi-tenant load scenario: per-class arrival processes and
+/// envelopes, composed into one deterministic open-loop trace.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub classes: Vec<ClassLoad>,
+}
+
+/// Default diurnal period (virtual seconds; "day-scale" relative to the
+/// second-scale request service times the engine models).
+const DIURNAL_PERIOD_S: f64 = 600.0;
+const DIURNAL_AMPLITUDE: f64 = 0.5;
+/// Default flash-crowd window: a 5x spike (factor 1 + 4) 30 s in,
+/// lasting 15 s.
+const FLASH_AT_S: f64 = 30.0;
+const FLASH_MAGNITUDE: f64 = 4.0;
+const FLASH_DURATION_S: f64 = 15.0;
+const MIXED_SHARE: f64 = 0.5;
+
+impl Scenario {
+    /// Parse a `--scenario NAME[:ARGS]` spec.  `rate` is the total mean
+    /// request rate (split across classes by share); `fleet_slo` is the
+    /// fleet-level target, which batch classes relax by
+    /// `batch_slo_scale`.
+    pub fn from_cli(
+        spec: &str,
+        rate: f64,
+        fleet_slo: SloTargets,
+        batch_slo_scale: f64,
+    ) -> Result<Scenario> {
+        ensure!(rate > 0.0, "--rate must be > 0");
+        ensure!(
+            batch_slo_scale.is_finite() && batch_slo_scale >= 1.0,
+            "--batch-slo-scale must be >= 1 (batch SLOs are relaxations)"
+        );
+        let mut parts = spec.split(':');
+        let name = parts.next().unwrap_or("");
+        let params: Vec<f64> = parts
+            .map(|p| {
+                p.parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("--scenario {spec:?}: {p:?} is not a number"))
+            })
+            .collect::<Result<_>>()?;
+        let arity = |max: usize, usage: &str| -> Result<()> {
+            ensure!(params.len() <= max, "--scenario {spec:?}: expected {usage}");
+            Ok(())
+        };
+        let p = |i: usize, default: f64| params.get(i).copied().unwrap_or(default);
+
+        let interactive = |envelope: Envelope, r: f64, share: f64| ClassLoad {
+            class: TenantClass::Interactive,
+            process: ArrivalProcess::Poisson { rate: r },
+            envelope,
+            slo: None,
+            share,
+        };
+        let batch_slo = SloTargets {
+            ttft_s: fleet_slo.ttft_s * batch_slo_scale,
+            tpot_s: fleet_slo.tpot_s * batch_slo_scale,
+        };
+        let batch = |r: f64, share: f64| ClassLoad {
+            class: TenantClass::Batch,
+            process: ArrivalProcess::Poisson { rate: r },
+            envelope: Envelope::Flat,
+            slo: Some(batch_slo),
+            share,
+        };
+        let share_of = |s: f64| -> Result<f64> {
+            ensure!(
+                s > 0.0 && s < 1.0,
+                "--scenario {spec:?}: interactive share must be in (0, 1)"
+            );
+            Ok(s)
+        };
+
+        let classes = match name {
+            "steady" => {
+                arity(0, "steady (no parameters)")?;
+                vec![interactive(Envelope::Flat, rate, 1.0)]
+            }
+            "diurnal" => {
+                arity(2, "diurnal[:PERIOD[:AMP]]")?;
+                let env = Envelope::Diurnal {
+                    period_s: p(0, DIURNAL_PERIOD_S),
+                    amplitude: p(1, DIURNAL_AMPLITUDE),
+                };
+                vec![interactive(env, rate, 1.0)]
+            }
+            "flash-crowd" => {
+                arity(3, "flash-crowd[:AT[:MAG[:DUR]]]")?;
+                let env = Envelope::Flash {
+                    at_s: p(0, FLASH_AT_S),
+                    magnitude: p(1, FLASH_MAGNITUDE),
+                    duration_s: p(2, FLASH_DURATION_S),
+                };
+                vec![interactive(env, rate, 1.0)]
+            }
+            "mixed" => {
+                arity(1, "mixed[:SHARE]")?;
+                let s = share_of(p(0, MIXED_SHARE))?;
+                vec![
+                    interactive(Envelope::Flat, rate * s, s),
+                    batch(rate * (1.0 - s), 1.0 - s),
+                ]
+            }
+            "mixed-diurnal" => {
+                arity(3, "mixed-diurnal[:SHARE[:PERIOD[:AMP]]]")?;
+                let s = share_of(p(0, MIXED_SHARE))?;
+                let env = Envelope::Diurnal {
+                    period_s: p(1, DIURNAL_PERIOD_S),
+                    amplitude: p(2, DIURNAL_AMPLITUDE),
+                };
+                vec![interactive(env, rate * s, s), batch(rate * (1.0 - s), 1.0 - s)]
+            }
+            "mixed-flash" => {
+                arity(4, "mixed-flash[:SHARE[:AT[:MAG[:DUR]]]]")?;
+                let s = share_of(p(0, MIXED_SHARE))?;
+                let env = Envelope::Flash {
+                    at_s: p(1, FLASH_AT_S),
+                    magnitude: p(2, FLASH_MAGNITUDE),
+                    duration_s: p(3, FLASH_DURATION_S),
+                };
+                vec![interactive(env, rate * s, s), batch(rate * (1.0 - s), 1.0 - s)]
+            }
+            _ => bail!(
+                "unknown scenario {name:?}; try steady, diurnal, flash-crowd, \
+                 mixed, mixed-diurnal, mixed-flash"
+            ),
+        };
+        let scenario = Scenario { name: name.to_string(), classes };
+        scenario.validate()?;
+        Ok(scenario)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.classes.is_empty(), "scenario needs at least one class");
+        for cl in &self.classes {
+            ensure!(cl.share > 0.0, "class {} share must be > 0", cl.class.name());
+            cl.process.validate()?;
+            cl.envelope.validate()?;
+            if let Some(slo) = &cl.slo {
+                ensure!(
+                    slo.ttft_s > 0.0 && slo.tpot_s > 0.0,
+                    "class {} SLO targets must be > 0",
+                    cl.class.name()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Timing seed for class `k`: class 0 keeps `seed` bit-for-bit (the
+    /// legacy stream), later classes decorrelate via the golden-ratio
+    /// increment.
+    fn class_seed(seed: u64, k: usize) -> u64 {
+        seed ^ (k as u64).wrapping_mul(GOLDEN)
+    }
+
+    /// Split `n` requests across classes proportionally to share
+    /// (floor), handing the remainder out one request per class in
+    /// declaration order — fully deterministic.
+    fn apportion(&self, n: usize) -> Vec<usize> {
+        let total: f64 = self.classes.iter().map(|c| c.share).sum();
+        let mut counts: Vec<usize> = self
+            .classes
+            .iter()
+            .map(|c| (c.share / total * n as f64).floor() as usize)
+            .collect();
+        // Floors sum to at most n, so the subtraction cannot underflow.
+        let mut rem = n - counts.iter().sum::<usize>();
+        let mut k = 0;
+        while rem > 0 {
+            counts[k] += 1;
+            rem -= 1;
+            k = (k + 1) % counts.len();
+        }
+        counts
+    }
+
+    /// Generate the scenario's deterministic open-loop trace: `n`
+    /// requests apportioned across classes by share, each class sampled
+    /// from its own timing stream, merged by arrival time (stable —
+    /// ties keep class declaration order) and id-stamped `0..n`.
+    /// Request content comes from `content` in merged generation order,
+    /// so a single-class scenario consumes it exactly like the legacy
+    /// generator.
+    pub fn generate(
+        &self,
+        seed: u64,
+        content: &mut TraceGen,
+        n: usize,
+    ) -> Result<Vec<TimedRequest>> {
+        self.validate()?;
+        let counts = self.apportion(n);
+        let mut all: Vec<TimedRequest> = Vec::with_capacity(n);
+        for (k, (cl, &count)) in self.classes.iter().zip(&counts).enumerate() {
+            let mut gen =
+                ArrivalGen::with_envelope(Self::class_seed(seed, k), cl.process, cl.envelope)?;
+            for _ in 0..count {
+                // Same evaluation order as the legacy generator: timing
+                // draw first, then content — bit-compatibility of the
+                // single-class case depends on this interleave.
+                let arrival = gen.next_arrival();
+                let request = content.next_request();
+                all.push(TimedRequest { id: 0, arrival, class: cl.class, slo: cl.slo, request });
+            }
+        }
+        all.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+        for (id, r) in all.iter_mut().enumerate() {
+            r.id = id;
+        }
+        Ok(all)
+    }
+
+    /// True when every request carries the same class on the fleet SLO
+    /// (the digest-neutral shape).
+    pub fn single_class(&self) -> bool {
+        self.classes.len() == 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FLEET_SLO: SloTargets = SloTargets { ttft_s: 5.0, tpot_s: 0.5 };
+
+    fn scen(spec: &str) -> Scenario {
+        Scenario::from_cli(spec, 2.0, FLEET_SLO, 8.0).unwrap()
+    }
+
+    #[test]
+    fn steady_reduces_to_legacy_generate() {
+        let mut legacy_content = TraceGen::new(11, 80, 16);
+        let legacy = ArrivalGen::generate(
+            42,
+            ArrivalProcess::Poisson { rate: 2.0 },
+            &mut legacy_content,
+            64,
+        )
+        .unwrap();
+        let s = scen("steady");
+        assert!(s.single_class());
+        let mut content = TraceGen::new(11, 80, 16);
+        let trace = s.generate(42, &mut content, 64).unwrap();
+        assert_eq!(trace.len(), legacy.len());
+        for (a, b) in trace.iter().zip(&legacy) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.arrival.to_bits(), b.arrival.to_bits(), "arrival stream diverged");
+            assert_eq!(a.request.prompt, b.request.prompt);
+            assert_eq!(a.request.max_new, b.request.max_new);
+            assert_eq!(a.class, TenantClass::Interactive);
+            assert!(a.slo.is_none());
+        }
+    }
+
+    #[test]
+    fn mixed_shares_split_counts_and_relax_batch_slo() {
+        let s = scen("mixed:0.25");
+        assert!(!s.single_class());
+        let mut content = TraceGen::new(7, 80, 16);
+        let trace = s.generate(9, &mut content, 16).unwrap();
+        assert_eq!(trace.len(), 16);
+        let inter = trace.iter().filter(|r| r.class == TenantClass::Interactive).count();
+        let batch = trace.iter().filter(|r| r.class == TenantClass::Batch).count();
+        assert_eq!((inter, batch), (4, 12));
+        // ids are 0..n in arrival order
+        for (i, w) in trace.windows(2).enumerate() {
+            assert_eq!(w[0].id, i);
+            assert!(w[0].arrival <= w[1].arrival, "trace not sorted by arrival");
+        }
+        assert_eq!(trace.last().unwrap().id, 15);
+        for r in &trace {
+            match r.class {
+                TenantClass::Interactive => assert!(r.slo.is_none()),
+                TenantClass::Batch => {
+                    let slo = r.slo.expect("batch requests carry the relaxed SLO");
+                    assert_eq!(slo.ttft_s, FLEET_SLO.ttft_s * 8.0);
+                    assert_eq!(slo.tpot_s, FLEET_SLO.tpot_s * 8.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn class_timing_streams_are_independent() {
+        // Re-weighting the mix must not perturb the other class's
+        // arrival stream (each class samples its own seeded stream).
+        let mut c1 = TraceGen::new(7, 80, 16);
+        let mut c2 = TraceGen::new(7, 80, 16);
+        let a = scen("mixed:0.5").generate(5, &mut c1, 32).unwrap();
+        let b = scen("mixed-flash:0.5:1e9:4:1").generate(5, &mut c2, 32).unwrap();
+        // the flash fires at t=1e9, far past the trace: batch arrivals
+        // (flat in both) must be bitwise unchanged
+        let batch_a: Vec<u64> = a
+            .iter()
+            .filter(|r| r.class == TenantClass::Batch)
+            .map(|r| r.arrival.to_bits())
+            .collect();
+        let batch_b: Vec<u64> = b
+            .iter()
+            .filter(|r| r.class == TenantClass::Batch)
+            .map(|r| r.arrival.to_bits())
+            .collect();
+        assert_eq!(batch_a, batch_b);
+    }
+
+    #[test]
+    fn scenario_parse_accepts_params_and_rejects_bad_specs() {
+        let s = scen("diurnal:300:0.8");
+        assert_eq!(
+            s.classes[0].envelope,
+            Envelope::Diurnal { period_s: 300.0, amplitude: 0.8 }
+        );
+        let s = scen("flash-crowd:10:9:5");
+        assert_eq!(
+            s.classes[0].envelope,
+            Envelope::Flash { at_s: 10.0, magnitude: 9.0, duration_s: 5.0 }
+        );
+        let s = scen("mixed-diurnal");
+        assert_eq!(s.classes.len(), 2);
+        assert_eq!(s.classes[0].class, TenantClass::Interactive);
+        assert_eq!(s.classes[1].class, TenantClass::Batch);
+        assert_eq!(s.classes[1].envelope, Envelope::Flat);
+        // total rate splits by share
+        let s = scen("mixed:0.25");
+        assert_eq!(s.classes[0].process, ArrivalProcess::Poisson { rate: 2.0 * 0.25 });
+        assert_eq!(s.classes[1].process, ArrivalProcess::Poisson { rate: 2.0 * 0.75 });
+        for bad in [
+            "nope",
+            "steady:1",              // steady takes no params
+            "diurnal:300:0.8:9",     // arity
+            "diurnal:0",             // invalid period
+            "diurnal:300:1.5",       // invalid amplitude
+            "flash-crowd:10:9:5:1",  // arity
+            "mixed:0",               // share out of (0, 1)
+            "mixed:1",
+            "mixed:x",               // not a number
+            "mixed-flash:0.5:10:9:0", // zero duration
+        ] {
+            assert!(
+                Scenario::from_cli(bad, 2.0, FLEET_SLO, 8.0).is_err(),
+                "{bad:?} accepted"
+            );
+        }
+        assert!(Scenario::from_cli("steady", 0.0, FLEET_SLO, 8.0).is_err());
+        assert!(Scenario::from_cli("steady", 2.0, FLEET_SLO, 0.5).is_err());
+    }
+
+    #[test]
+    fn apportion_is_exact_and_deterministic() {
+        let s = scen("mixed:0.3");
+        for n in [0usize, 1, 2, 7, 16, 101] {
+            let counts = s.apportion(n);
+            assert_eq!(counts.iter().sum::<usize>(), n, "n={n}");
+        }
+        // remainder goes to the earliest class
+        assert_eq!(scen("mixed:0.5").apportion(3), vec![2, 1]);
+    }
+}

@@ -12,7 +12,9 @@
 //!   experts);
 //! - churn and marker instants as `ph:"i"`;
 //! - session lifecycle as nestable async events (`ph:"b"/"n"/"e"`:
-//!   arrival -> admitted -> first-token -> done), keyed by request id;
+//!   arrival -> admitted -> first-token -> done), keyed by request id,
+//!   with the tenant class (interactive/batch) and retry/preemption
+//!   counts as args on the begin event for Perfetto-side filtering;
 //! - per-tick counters (`ph:"C"`): queue depth, active sessions, KV
 //!   bytes, expert-cache bytes, and the host-pool tracks (hits, SSD
 //!   fills, contention stall; flat zero without `--host-pool`).
@@ -181,7 +183,27 @@ pub fn chrome_trace(cluster: &ClusterOutcome) -> Json {
             };
             let admitted = r.arrival + r.queue_delay;
             let first_token = r.arrival + r.ttft;
-            timed.push((r.arrival * US, lifecycle("b", r.arrival, &span_name)));
+            // The begin event carries the request's tenant class plus
+            // its re-dispatch / preemption counts, so Perfetto queries
+            // can filter interactive vs batch session flows.
+            let begin = obj(vec![
+                ("ph", s("b")),
+                ("cat", s("session")),
+                ("name", s(&span_name)),
+                ("id", num(r.id as f64)),
+                ("pid", num(pid)),
+                ("tid", num(SESSION_TID)),
+                ("ts", num(r.arrival * US)),
+                (
+                    "args",
+                    obj(vec![
+                        ("class", s(r.class.name())),
+                        ("retries", num(r.retries as f64)),
+                        ("preemptions", num(r.preemptions as f64)),
+                    ]),
+                ),
+            ]);
+            timed.push((r.arrival * US, begin));
             timed.push((admitted * US, lifecycle("n", admitted, "admitted")));
             timed.push((first_token * US, lifecycle("n", first_token, "first-token")));
             timed.push((r.finished_at * US, lifecycle("e", r.finished_at, &span_name)));

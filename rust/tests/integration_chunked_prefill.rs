@@ -186,7 +186,7 @@ fn fleet_cfg(policy: PolicyKind, max_sessions: usize, batch: usize, chunk: usize
 }
 
 fn timed(id: usize, arrival: f64, prompt: Vec<i32>, max_new: usize) -> TimedRequest {
-    TimedRequest { id, arrival, request: Request { prompt, max_new } }
+    TimedRequest::new(id, arrival, Request { prompt, max_new })
 }
 
 /// A mixed short/long trace: `n_short` two-token prompts plus one

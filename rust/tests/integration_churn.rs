@@ -345,13 +345,12 @@ fn failure_restarts_keep_original_arrivals_and_count_lost_work() {
     // queued behind
     let mk_trace = || -> Vec<TimedRequest> {
         (0..4)
-            .map(|i| TimedRequest {
-                id: i,
-                arrival: 0.0,
-                request: Request {
-                    prompt: vec![1, 5 + (3 * i as i32) % 40, 7],
-                    max_new,
-                },
+            .map(|i| {
+                TimedRequest::new(
+                    i,
+                    0.0,
+                    Request { prompt: vec![1, 5 + (3 * i as i32) % 40, 7], max_new },
+                )
             })
             .collect()
     };
@@ -437,13 +436,15 @@ fn failure_mid_chunked_prefill_restarts_cleanly() {
     // ticks; fail replica 0 early in its prefill
     let mk_trace = || -> Vec<TimedRequest> {
         (0..2)
-            .map(|i| TimedRequest {
-                id: i,
-                arrival: 0.0,
-                request: Request {
-                    prompt: (0..long).map(|t| 1 + ((t + i) as i32 * 7) % 60).collect(),
-                    max_new,
-                },
+            .map(|i| {
+                TimedRequest::new(
+                    i,
+                    0.0,
+                    Request {
+                        prompt: (0..long).map(|t| 1 + ((t + i) as i32 * 7) % 60).collect(),
+                        max_new,
+                    },
+                )
             })
             .collect()
     };
@@ -665,10 +666,8 @@ fn host_pool_survives_replica_failure_and_stays_deterministic() {
     let max_new = (m.max_cache - m.max_seq).clamp(1, 2);
     let mk_trace = || -> Vec<TimedRequest> {
         (0..n)
-            .map(|id| TimedRequest {
-                id,
-                arrival: id as f64 * 0.2,
-                request: Request { prompt: prompt.clone(), max_new },
+            .map(|id| {
+                TimedRequest::new(id, id as f64 * 0.2, Request { prompt: prompt.clone(), max_new })
             })
             .collect()
     };
@@ -847,21 +846,21 @@ fn chunk_budget_zero_fallback_is_clamped_to_prefill_only() {
     let short_new = (m.max_cache.saturating_sub(2)).clamp(1, 3);
     let long_new = (m.max_cache - m.max_seq).clamp(1, 2);
     // a short prompt that becomes decode-ready after one chunk ...
-    replica.enqueue(TimedRequest {
-        id: 0,
-        arrival: 0.0,
-        request: Request { prompt: vec![1, 5], max_new: short_new },
-    });
+    replica.enqueue(TimedRequest::new(
+        0,
+        0.0,
+        Request { prompt: vec![1, 5], max_new: short_new },
+    ));
     // ... alongside a full-bucket prompt whose chunk grant leaves a
     // zero decode budget while it prefills
-    replica.enqueue(TimedRequest {
-        id: 1,
-        arrival: 0.0,
-        request: Request {
+    replica.enqueue(TimedRequest::new(
+        1,
+        0.0,
+        Request {
             prompt: (0..m.max_seq).map(|t| 1 + (t as i32 * 7) % 60).collect(),
             max_new: long_new,
         },
-    });
+    ));
     let mut guard = 0;
     while replica.has_work() {
         replica

@@ -532,11 +532,11 @@ fn idle_fallback_admits_oldest_arrival_not_slot_zero() {
     // max_sessions = 1 they serve strictly one at a time, so completion
     // order *is* admission order.
     for id in 0..3usize {
-        replica.enqueue(TimedRequest {
+        replica.enqueue(TimedRequest::new(
             id,
-            arrival: 0.0,
-            request: Request { prompt: vec![1, 5 + 3 * id as i32], max_new },
-        });
+            0.0,
+            Request { prompt: vec![1, 5 + 3 * id as i32], max_new },
+        ));
     }
     let mut guard = 0;
     while replica.has_work() {
@@ -592,10 +592,8 @@ fn staggered_trace(a: &Arc<ModelAssets>, n: usize, gap: f64) -> Vec<TimedRequest
     let prompt: Vec<i32> = (0..m.max_seq.min(8)).map(|i| 1 + i as i32).collect();
     let max_new = (m.max_cache - m.max_seq).clamp(1, 2);
     (0..n)
-        .map(|id| TimedRequest {
-            id,
-            arrival: id as f64 * gap,
-            request: Request { prompt: prompt.clone(), max_new },
+        .map(|id| {
+            TimedRequest::new(id, id as f64 * gap, Request { prompt: prompt.clone(), max_new })
         })
         .collect()
 }
@@ -751,11 +749,11 @@ fn prop_dispatch_policies_route_sanely() {
             })
             .collect();
         let prompt: Vec<i32> = (0..rng.range(1, 12)).map(|_| rng.below(60) as i32).collect();
-        let req = TimedRequest {
-            id: rng.below(1000),
-            arrival: rng.f64(),
-            request: Request { prompt: prompt.clone(), max_new: rng.range(1, 8) },
-        };
+        let req = TimedRequest::new(
+            rng.below(1000),
+            rng.f64(),
+            Request { prompt: prompt.clone(), max_new: rng.range(1, 8) },
+        );
 
         for kind in DispatchKind::ALL {
             let mut p = kind.build();
@@ -812,11 +810,11 @@ fn prop_event_queue_pops_in_virtual_time_order() {
                     k as u64,
                     ChurnEvent { at, replica: rng.below(4), kind: ChurnKind::Fail },
                 )),
-                1 => q.push(Event::arrival(TimedRequest {
-                    id: k,
-                    arrival: at,
-                    request: Request { prompt: vec![1], max_new: 1 },
-                })),
+                1 => q.push(Event::arrival(TimedRequest::new(
+                    k,
+                    at,
+                    Request { prompt: vec![1], max_new: 1 },
+                ))),
                 _ => q.push(Event::tick(at, rng.below(6))),
             }
         }

@@ -101,10 +101,8 @@ fn staggered_trace(a: &Arc<ModelAssets>, n: usize, gap: f64) -> Vec<TimedRequest
     let prompt: Vec<i32> = (0..m.max_seq.min(8)).map(|i| 1 + i as i32).collect();
     let max_new = (m.max_cache - m.max_seq).clamp(1, 2);
     (0..n)
-        .map(|id| TimedRequest {
-            id,
-            arrival: id as f64 * gap,
-            request: Request { prompt: prompt.clone(), max_new },
+        .map(|id| {
+            TimedRequest::new(id, id as f64 * gap, Request { prompt: prompt.clone(), max_new })
         })
         .collect()
 }
@@ -211,11 +209,11 @@ fn prop_predictive_dispatch_is_a_deterministic_overlap_argmax() {
             .collect();
         let predicted: Vec<usize> =
             (0..rng.below(6)).map(|_| rng.below(N_EXPERTS)).collect();
-        let req = TimedRequest {
-            id: rng.below(1000),
-            arrival: rng.f64(),
-            request: Request { prompt: vec![1, 2, 3], max_new: 2 },
-        };
+        let req = TimedRequest::new(
+            rng.below(1000),
+            rng.f64(),
+            Request { prompt: vec![1, 2, 3], max_new: 2 },
+        );
         let score = |v: &ReplicaDispatchView| -> u64 {
             predicted
                 .iter()

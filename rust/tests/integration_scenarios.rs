@@ -1,0 +1,380 @@
+//! Integration: tenant-class scenarios and preemptive scheduling.
+//!
+//! Four pillars:
+//!
+//! 1. **Arrival statistics** — for every `ArrivalProcess` x `Envelope`
+//!    combination the thinning sampler's seeded empirical arrival count
+//!    matches the analytic mean (the numeric integral of
+//!    `rate_at(t) * factor_at(t)` over the realized span) within a
+//!    tolerance far wider than the sampling noise, and timestamps are
+//!    never non-monotone.  Engine-free, runs everywhere.
+//! 2. **Scenario composition** — a mixed scenario emits a sorted,
+//!    densely re-id'd trace with the exact apportioned class split,
+//!    interactive requests inheriting the fleet SLO (stamp `None`) and
+//!    batch requests carrying the relaxed stamped targets.  Engine-free.
+//! 3. **Digest neutrality** — a single-class `--scenario steady` trace
+//!    is bitwise-identical (via [`ClusterOutcome::digest`]) to the
+//!    equivalent `--arrival poisson` run, across the event-driven loop,
+//!    the retired min-clock loop, and the `--parallel` worker path.
+//!    The tenant-class machinery must be invisible until a scenario
+//!    actually mixes classes.
+//! 4. **Preemption semantics** — on a hand-built trace where batch
+//!    decodes hold every slot when an interactive request arrives, the
+//!    class-aware policy preempts a batch decode slot (the class-blind
+//!    fifo baseline never does), cuts the interactive TTFT strictly
+//!    below fifo's, conserves every batch request (no starvation) and
+//!    its emitted tokens (work conservation), and the whole preemptive
+//!    path stays bit-identical across the min-clock and `--parallel`
+//!    loops.
+//!
+//! Engine-level tests need the real `tiny` artifacts and skip politely
+//! when they are missing (run `make artifacts`), matching the other
+//! integration suites.
+
+use std::sync::Arc;
+
+use dymoe::baselines::Uniform;
+use dymoe::config::{ServingConfig, SystemConfig, GB};
+use dymoe::coordinator::engine::{Engine, EngineOptions};
+use dymoe::model::assets::ModelAssets;
+use dymoe::quant::Precision;
+use dymoe::serving::arrival::{
+    ArrivalGen, ArrivalProcess, Envelope, TenantClass, TimedRequest,
+};
+use dymoe::serving::metrics::SloTargets;
+use dymoe::serving::policy::{DispatchKind, PolicyKind};
+use dymoe::serving::{
+    run_cluster, run_cluster_minclock, run_fleet, FleetConfig, FleetOutcome, Scenario,
+};
+use dymoe::workload::{Request, TraceGen};
+
+fn assets() -> Option<Arc<ModelAssets>> {
+    match ModelAssets::load("artifacts", "tiny") {
+        Ok(a) => Some(Arc::new(a)),
+        Err(_) => {
+            eprintln!("artifacts/tiny missing; run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn big_vram_sys() -> SystemConfig {
+    let mut sys = SystemConfig::edge_preset("tiny", 24).unwrap();
+    sys.hardware.vram_bytes = 1024 * GB;
+    sys
+}
+
+fn bf16_engine(a: &Arc<ModelAssets>) -> Engine {
+    Engine::with_options(
+        a,
+        big_vram_sys(),
+        Box::new(Uniform::new(Precision::Bf16)),
+        EngineOptions::default(),
+    )
+    .unwrap()
+}
+
+fn cfg(
+    policy: PolicyKind,
+    dispatch: DispatchKind,
+    max_sessions: usize,
+    batch: usize,
+) -> FleetConfig {
+    FleetConfig {
+        serving: ServingConfig {
+            max_sessions,
+            ttft_slo_s: 1e6,
+            tpot_slo_s: 1e6,
+            max_decode_batch: batch,
+            ..Default::default()
+        },
+        policy,
+        dispatch,
+    }
+}
+
+/// A hand-stamped batch-class request; `slo: None` resolves to the
+/// fleet targets, which is all these tests need (priority, not
+/// deadlines, drives preemption).
+fn batch_req(id: usize, arrival: f64, prompt: Vec<i32>, max_new: usize) -> TimedRequest {
+    TimedRequest {
+        id,
+        arrival,
+        class: TenantClass::Batch,
+        slo: None,
+        request: Request { prompt, max_new },
+    }
+}
+
+// ---------------------------------------------------------------------
+// Arrival statistics (engine-free)
+// ---------------------------------------------------------------------
+
+/// For every process x envelope combination, the thinning sampler's
+/// empirical arrival count over its realized span matches the analytic
+/// mean `∫ rate_at(t) * factor_at(t) dt` — the integral over the span
+/// ending at the n-th arrival is Gamma(n)-distributed with mean n and
+/// relative std `1/sqrt(n)` (~1.8% here), so the 10% gate is over five
+/// sigma wide while still catching any systematic thinning bias.  And
+/// the sampler never emits a non-monotone timestamp.
+#[test]
+fn empirical_arrival_rate_matches_analytic_mean() {
+    let n = 3000usize;
+    let processes = [
+        ArrivalProcess::Poisson { rate: 2.0 },
+        ArrivalProcess::Bursty {
+            base_rate: 1.0,
+            burst_rate: 6.0,
+            period: 40.0,
+            burst_frac: 0.25,
+        },
+        ArrivalProcess::Ramp { start_rate: 0.5, end_rate: 4.0, ramp_secs: 300.0 },
+    ];
+    let envelopes = [
+        Envelope::Flat,
+        Envelope::Diurnal { period_s: 200.0, amplitude: 0.5 },
+        Envelope::Flash { at_s: 100.0, magnitude: 3.0, duration_s: 50.0 },
+    ];
+    for (pi, &process) in processes.iter().enumerate() {
+        for (ei, &envelope) in envelopes.iter().enumerate() {
+            let label = format!("process {pi} x envelope {ei}");
+            let seed = 0xA11C + 7 * pi as u64 + ei as u64;
+            let mut sampler = ArrivalGen::with_envelope(seed, process, envelope).unwrap();
+            let mut prev = 0.0;
+            for _ in 0..n {
+                let t = sampler.next_arrival();
+                assert!(t >= prev, "{label}: non-monotone arrival {t} after {prev}");
+                prev = t;
+            }
+            let span = prev;
+            assert!(span > 0.0, "{label}: sampler never advanced");
+            // midpoint rule; the grid is fine enough that the envelope
+            // and burst discontinuities contribute O(dt) error only
+            let steps = 200_000usize;
+            let dt = span / steps as f64;
+            let mut expected = 0.0;
+            for k in 0..steps {
+                let t = (k as f64 + 0.5) * dt;
+                expected += process.rate_at(t) * envelope.factor_at(t) * dt;
+            }
+            let rel = (expected - n as f64).abs() / n as f64;
+            assert!(
+                rel < 0.10,
+                "{label}: analytic mean {expected:.0} arrivals over {span:.1}s vs {n} \
+                 drawn (rel err {rel:.3}) — thinning is biased"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scenario composition (engine-free)
+// ---------------------------------------------------------------------
+
+/// A mixed scenario's merged trace is sorted by arrival with dense
+/// re-stamped ids, splits the classes exactly as apportioned, and
+/// stamps SLOs per class: interactive `None` (fleet targets), batch the
+/// relaxed `fleet x scale` targets.
+#[test]
+fn mixed_scenario_trace_is_sorted_split_and_slo_stamped() {
+    let fleet_slo = SloTargets { ttft_s: 5.0, tpot_s: 0.5 };
+    let s = Scenario::from_cli("mixed-flash:0.25:50:3:40", 2.0, fleet_slo, 8.0).unwrap();
+    let mut content = TraceGen::new(3, 12, 6);
+    let trace = s.generate(0xBEEF, &mut content, 400).unwrap();
+    assert_eq!(trace.len(), 400);
+    for (i, w) in trace.windows(2).enumerate() {
+        assert!(w[0].arrival <= w[1].arrival, "trace not sorted at index {i}");
+    }
+    for (i, r) in trace.iter().enumerate() {
+        assert_eq!(r.id, i, "ids must be dense in arrival order");
+    }
+    let interactive =
+        trace.iter().filter(|r| r.class == TenantClass::Interactive).count();
+    assert_eq!(interactive, 100, "mixed:0.25 must apportion exactly 25% interactive");
+    for r in &trace {
+        match r.class {
+            TenantClass::Interactive => {
+                assert!(r.slo.is_none(), "interactive must inherit the fleet SLO")
+            }
+            TenantClass::Batch => {
+                let slo = r.slo.expect("batch requests carry a stamped SLO");
+                assert!(
+                    (slo.ttft_s - 40.0).abs() < 1e-9 && (slo.tpot_s - 4.0).abs() < 1e-9,
+                    "batch SLO must be the fleet targets relaxed 8x, got {slo:?}"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Single-class digest neutrality (artifacts-gated)
+// ---------------------------------------------------------------------
+
+/// `--scenario steady` must be the `--arrival poisson` path bit for
+/// bit: same trace, same outcome digest — across the event-driven
+/// cluster loop, the retired min-clock loop, and `--parallel` workers.
+#[test]
+fn steady_scenario_is_digest_neutral_vs_arrival_path() {
+    let Some(a) = assets() else { return };
+    let m = a.manifest.model.clone();
+    let (n, rate) = (9usize, 10.0);
+    let c = cfg(PolicyKind::SloAware, DispatchKind::JoinShortestQueue, 2, 2);
+    let mk_content =
+        || TraceGen::new(7, m.max_seq.min(16), (m.max_cache - m.max_seq).min(6));
+    let arrival_trace = || {
+        let mut content = mk_content();
+        ArrivalGen::generate(21, ArrivalProcess::Poisson { rate }, &mut content, n).unwrap()
+    };
+    let scenario_trace = || {
+        let fleet_slo =
+            SloTargets { ttft_s: c.serving.ttft_slo_s, tpot_s: c.serving.tpot_slo_s };
+        let s = Scenario::from_cli("steady", rate, fleet_slo, c.serving.batch_slo_scale)
+            .unwrap();
+        let mut content = mk_content();
+        s.generate(21, &mut content, n).unwrap()
+    };
+
+    let mut arrival_engines: Vec<Engine> = (0..2).map(|_| bf16_engine(&a)).collect();
+    let via_arrival = run_cluster(&mut arrival_engines, arrival_trace(), &c).unwrap();
+    let mut scenario_engines: Vec<Engine> = (0..2).map(|_| bf16_engine(&a)).collect();
+    let via_scenario = run_cluster(&mut scenario_engines, scenario_trace(), &c).unwrap();
+
+    assert_eq!(via_scenario.fleet.per_request.len(), via_arrival.fleet.per_request.len());
+    for (x, y) in via_scenario
+        .fleet
+        .per_request
+        .iter()
+        .zip(&via_arrival.fleet.per_request)
+    {
+        assert_eq!(x.id, y.id, "completion order diverged");
+        assert_eq!(x.ttft, y.ttft, "TTFT diverged (id {})", x.id);
+        assert_eq!(x.finished_at, y.finished_at, "completion time diverged (id {})", x.id);
+        assert_eq!(x.preemptions, 0, "single-class run must never preempt");
+    }
+    assert_eq!(
+        via_scenario.digest(),
+        via_arrival.digest(),
+        "steady scenario diverged from --arrival poisson"
+    );
+
+    let mut minclock_engines: Vec<Engine> = (0..2).map(|_| bf16_engine(&a)).collect();
+    let minclock =
+        run_cluster_minclock(&mut minclock_engines, scenario_trace(), &c).unwrap();
+    assert_eq!(minclock.digest(), via_arrival.digest(), "min-clock loop diverged");
+
+    let mut par_cfg = c.clone();
+    par_cfg.serving.parallel = 2;
+    let mut par_engines: Vec<Engine> = (0..2).map(|_| bf16_engine(&a)).collect();
+    let parallel = run_cluster(&mut par_engines, scenario_trace(), &par_cfg).unwrap();
+    assert_eq!(parallel.digest(), via_arrival.digest(), "--parallel diverged");
+}
+
+// ---------------------------------------------------------------------
+// Preemption semantics (artifacts-gated)
+// ---------------------------------------------------------------------
+
+/// Two batch requests hold both slots in decode when an interactive
+/// request arrives.  The class-aware policy must preempt a batch decode
+/// slot (fifo, the class-blind baseline, must not), cutting the
+/// interactive TTFT strictly below fifo's, while every batch request
+/// still completes with its full token budget (no starvation, work
+/// conserved).
+#[test]
+fn interactive_preempts_batch_decode_and_cuts_ttft() {
+    let Some(a) = assets() else { return };
+    let m = a.manifest.model.clone();
+    let batch_new = (m.max_cache - m.max_seq).clamp(1, 6);
+    let int_new = (m.max_cache - m.max_seq).clamp(1, 2);
+    let mk = || {
+        vec![
+            batch_req(0, 0.0, vec![1, 7], batch_new),
+            batch_req(1, 0.0, vec![1, 9], batch_new),
+            TimedRequest::new(2, 0.05, Request { prompt: vec![1, 11], max_new: int_new }),
+        ]
+    };
+    let run = |policy: PolicyKind| {
+        let c = cfg(policy, DispatchKind::RoundRobin, 2, 2);
+        let mut engine = bf16_engine(&a);
+        run_fleet(&mut engine, mk(), &c).unwrap()
+    };
+    let slo = run(PolicyKind::SloAware);
+    let fifo = run(PolicyKind::Fifo);
+
+    // conservation: both classes complete fully under both policies
+    for (name, o) in [("slo", &slo), ("fifo", &fifo)] {
+        assert_eq!(o.metrics.completed, 3, "{name}: lost a request");
+        assert_eq!(
+            o.metrics.per_class[&TenantClass::Batch].completed,
+            2,
+            "{name}: batch class starved"
+        );
+    }
+    assert_eq!(fifo.metrics.preemptions(), 0, "fifo must stay class-blind");
+    assert!(
+        slo.metrics.preemptions() >= 1,
+        "class-aware policy never preempted a batch decode slot"
+    );
+    let ttft = |o: &FleetOutcome| o.per_request.iter().find(|r| r.id == 2).unwrap().ttft;
+    assert!(
+        ttft(&slo) < ttft(&fifo),
+        "preemption did not cut interactive TTFT: {} vs fifo {}",
+        ttft(&slo),
+        ttft(&fifo)
+    );
+    // work conservation: preempted sessions resume with their emitted
+    // tokens intact, so batch token totals match the class-blind run
+    assert_eq!(
+        slo.metrics.per_class[&TenantClass::Batch].tokens_total,
+        fifo.metrics.per_class[&TenantClass::Batch].tokens_total,
+        "preemption lost emitted batch tokens"
+    );
+}
+
+/// With preemption firing on both replicas (round-robin lands one batch
+/// and one interactive request on each), the cluster loops must stay
+/// bit-identical: event-driven == min-clock == `--parallel 2`, digest
+/// and per-request fields alike.
+#[test]
+fn preemptive_cluster_loops_stay_bit_identical() {
+    let Some(a) = assets() else { return };
+    let m = a.manifest.model.clone();
+    let batch_new = (m.max_cache - m.max_seq).clamp(1, 6);
+    let int_new = (m.max_cache - m.max_seq).clamp(1, 2);
+    let mk = || {
+        vec![
+            batch_req(0, 0.0, vec![1, 7], batch_new),
+            batch_req(1, 0.0, vec![1, 9], batch_new),
+            TimedRequest::new(2, 0.05, Request { prompt: vec![1, 11], max_new: int_new }),
+            TimedRequest::new(3, 0.06, Request { prompt: vec![1, 13], max_new: int_new }),
+        ]
+    };
+    let c = cfg(PolicyKind::SloAware, DispatchKind::RoundRobin, 1, 1);
+    let mut serial_engines: Vec<Engine> = (0..2).map(|_| bf16_engine(&a)).collect();
+    let serial = run_cluster(&mut serial_engines, mk(), &c).unwrap();
+    assert_eq!(serial.fleet.metrics.completed, 4);
+    assert!(
+        serial.fleet.metrics.preemptions() >= 1,
+        "pin is vacuous: nothing was preempted"
+    );
+
+    let mut minclock_engines: Vec<Engine> = (0..2).map(|_| bf16_engine(&a)).collect();
+    let minclock = run_cluster_minclock(&mut minclock_engines, mk(), &c).unwrap();
+    assert_eq!(
+        minclock.digest(),
+        serial.digest(),
+        "min-clock loop diverged under preemption"
+    );
+
+    let mut par_cfg = c.clone();
+    par_cfg.serving.parallel = 2;
+    let mut par_engines: Vec<Engine> = (0..2).map(|_| bf16_engine(&a)).collect();
+    let parallel = run_cluster(&mut par_engines, mk(), &par_cfg).unwrap();
+    assert_eq!(parallel.digest(), serial.digest(), "--parallel diverged under preemption");
+    for (x, y) in parallel.fleet.per_request.iter().zip(&serial.fleet.per_request) {
+        assert_eq!(
+            (x.id, x.ttft, x.finished_at, x.preemptions),
+            (y.id, y.ttft, y.finished_at, y.preemptions)
+        );
+    }
+}

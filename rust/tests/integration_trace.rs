@@ -33,7 +33,7 @@ use dymoe::coordinator::engine::{Engine, EngineOptions};
 use dymoe::memory::{BusyTotals, EventKind, Timeline, TracePhase};
 use dymoe::model::assets::ModelAssets;
 use dymoe::quant::Precision;
-use dymoe::serving::arrival::{ArrivalGen, ArrivalProcess, TimedRequest};
+use dymoe::serving::arrival::{ArrivalGen, ArrivalProcess, TenantClass, TimedRequest};
 use dymoe::serving::metrics::{ChurnStats, CompletedRequest};
 use dymoe::serving::policy::{DispatchKind, PolicyKind};
 use dymoe::serving::{
@@ -323,6 +323,7 @@ fn chrome_writer_lints_without_artifacts() {
     outcome.per_request.push(CompletedRequest {
         id: 3,
         arrival: 0.0,
+        class: TenantClass::Interactive,
         queue_delay: 0.1,
         ttft: 0.3,
         tpot: 0.1,
@@ -332,6 +333,7 @@ fn chrome_writer_lints_without_artifacts() {
         tpot_ok: true,
         max_stall: 0.1,
         retries: 0,
+        preemptions: 0,
     });
     let cluster = ClusterOutcome {
         fleet: FleetOutcome::default(),

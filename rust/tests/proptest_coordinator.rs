@@ -294,6 +294,7 @@ fn prop_quant_roundtrip_bound_all_stored_precisions() {
 #[test]
 fn prop_scheduler_no_starvation_and_goodput_bounded() {
     use dymoe::coordinator::engine::RequestOutput;
+    use dymoe::serving::arrival::TenantClass;
     use dymoe::serving::metrics::{FleetMetrics, SloTargets};
     use dymoe::serving::policy::{Action, ActiveInfo, PolicyKind, QueuedInfo, SchedView};
 
@@ -359,13 +360,19 @@ fn prop_scheduler_no_starvation_and_goodput_bounded() {
 
             let queued_info: Vec<QueuedInfo> = queued
                 .iter()
-                .map(|&(id, arrival, deadline, _)| QueuedInfo { id, arrival, deadline })
+                .map(|&(id, arrival, deadline, _)| QueuedInfo {
+                    id,
+                    arrival,
+                    deadline,
+                    class: TenantClass::Interactive,
+                })
                 .collect();
             let active_info: Vec<ActiveInfo> = active
                 .iter()
                 .map(|s| ActiveInfo {
                     id: s.id,
                     arrival: s.arrival,
+                    class: TenantClass::Interactive,
                     emitted: s.token_times.len(),
                     target: s.target,
                     last_token_at: s.last_token_at,
@@ -499,6 +506,7 @@ fn prop_scheduler_no_starvation_and_goodput_bounded() {
 /// every session must finish within a bounded number of ticks.
 #[test]
 fn prop_token_budget_scheduler_conserves_tokens_and_advances() {
+    use dymoe::serving::arrival::TenantClass;
     use dymoe::serving::policy::{ActiveInfo, PolicyKind, QueuedInfo, SchedView, TickPlan};
 
     struct Sim {
@@ -570,6 +578,7 @@ fn prop_token_budget_scheduler_conserves_tokens_and_advances() {
                         id,
                         arrival,
                         deadline: arrival + 1.0,
+                        class: TenantClass::Interactive,
                     })
                     .collect();
                 let a: Vec<ActiveInfo> = active
@@ -577,6 +586,7 @@ fn prop_token_budget_scheduler_conserves_tokens_and_advances() {
                     .map(|s| ActiveInfo {
                         id: s.id,
                         arrival: s.arrival,
+                        class: TenantClass::Interactive,
                         emitted: s.emitted,
                         target: s.target,
                         last_token_at: s.last_token_at,
